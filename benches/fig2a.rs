@@ -1,0 +1,20 @@
+//! Bench: regenerate Fig 2(a) — per-algorithm execution times, ARM vs
+//! DSP-under-VPE, on a log scale (rendered as ASCII bars).
+//!
+//! `cargo bench --bench fig2a`
+
+use vpe::bench_harness::{fig2, table1};
+
+fn main() {
+    let t = fig2::fig2a(20).expect("fig2a harness");
+    println!("{}", t.to_markdown());
+
+    // ASCII log-scale bars (1 char per 0.1 decade above 10 ms).
+    println!("log-scale view (each # = 0.1 decade):");
+    let rows = table1::table1(20, false).expect("table1");
+    for r in &rows {
+        let bar = |ms: f64| "#".repeat(((ms.log10() - 1.0).max(0.0) * 10.0) as usize);
+        println!("{:<14} ARM {:>9.1} ms |{}", r.kind.name(), r.normal_ms, bar(r.normal_ms));
+        println!("{:<14} DSP {:>9.1} ms |{}", "", r.vpe_ms, bar(r.vpe_ms));
+    }
+}

@@ -1,0 +1,46 @@
+//! Bench: regenerate Fig 2(b) — matmul execution time vs matrix size,
+//! the ~100 ms DSP setup plateau, the crossover, and the decision-tree
+//! learner.  Also measures the *real* PJRT artifacts across the AOT'd
+//! sizes plus the pure-Rust naive/blocked baselines.
+//!
+//! `cargo bench --bench fig2b`
+
+use vpe::bench_harness::fig2;
+use vpe::util::bench::{bench, black_box, header};
+use vpe::workloads::{matmul, shapes};
+
+fn main() {
+    // -- simulated sweep (the figure itself) ------------------------------
+    let (points, tree) = fig2::fig2b(&fig2::default_sizes(), 5, 0xF162B);
+    println!("{}", fig2::render_fig2b(&points, &tree).to_markdown());
+    println!(
+        "analytic crossover N = {:.0}; learned N = {} (paper: ~75)\n",
+        fig2::analytic_crossover(),
+        tree.root_threshold().map(|t| format!("{t:.0}")).unwrap_or("-".into())
+    );
+
+    // -- real execution across sizes --------------------------------------
+    header("matmul — real execution across sizes");
+    let store = vpe::runtime::ArtifactStore::open_default().ok();
+    for n in shapes::MATMUL_SIZES {
+        let inst = matmul::instance(n, 42);
+        let a = inst.inputs[0].as_i32().unwrap().to_vec();
+        let b = inst.inputs[1].as_i32().unwrap().to_vec();
+        bench(&format!("rust-naive/matmul{n}"), 1, 5, || {
+            black_box(matmul::reference(&a, &b, n));
+        });
+        bench(&format!("rust-blocked/matmul{n}"), 1, 5, || {
+            black_box(matmul::reference_blocked(&a, &b, n, 32));
+        });
+        if let Some(store) = &store {
+            for name in [&inst.artifact_naive, &inst.artifact_dsp] {
+                if let Ok(art) = store.load(name) {
+                    let _ = art.execute(&inst.inputs).expect("warm");
+                    bench(&format!("pjrt/{name}"), 1, 5, || {
+                        black_box(art.execute(&inst.inputs).expect("execute"));
+                    });
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! Bench: regenerate Fig 3 — the video-prototype frame-rate / CPU-load
+//! story, plus an ablation over the profiler's analysis period (the
+//! knob behind the Fig 3c CPU spikes).
+//!
+//! `cargo bench --bench fig3`
+
+use vpe::bench_harness::fig3;
+
+fn main() {
+    let s = fig3::fig3(300, 60, false).expect("fig3 harness");
+    println!("{}", fig3::render(&s).to_markdown());
+    println!(
+        "offload at frame {:?}, {} analysis bursts over {} frames\n",
+        s.offload_frame,
+        s.bursts,
+        s.frames.len()
+    );
+
+    // Compact per-phase time series (what the paper plots in 3c).
+    println!("frame     fps   cpu%  target");
+    for f in s.frames.iter().step_by(15) {
+        println!(
+            "{:>5} {:>7.2} {:>6.0}  {}",
+            f.frame,
+            f.fps,
+            f.cpu_load * 100.0,
+            if f.conv_target.is_host() { "ARM" } else { "DSP" }
+        );
+    }
+
+    // Ablation: burst period vs steady-state fps after offload.
+    println!("\nablation — analysis period vs post-offload fps / CPU spikes:");
+    println!("{:>8} {:>10} {:>10} {:>8}", "period", "fps", "cpu%", "bursts");
+    for period in [2u64, 4, 8, 16, 32] {
+        let s = fig3::fig3_with_period(300, 60, period).expect("fig3 ablation");
+        println!(
+            "{:>8} {:>10.2} {:>10.0} {:>8}",
+            period,
+            s.fps_after,
+            s.cpu_after * 100.0,
+            s.bursts
+        );
+    }
+}

@@ -1,0 +1,66 @@
+//! Bench: the L3 coordinator hot path, piece by piece — the perf-pass
+//! target list (EXPERIMENTS.md §Perf).
+//!
+//! The paper's wrapper adds "a call overhead [that] quickly becomes
+//! negligible"; for that to hold here, the dispatch decision must stay
+//! in the nanosecond range and the full sim-only `Vpe::call` (everything
+//! VPE does around the actual compute) in the low microseconds.
+//!
+//! `cargo bench --bench hotpath`
+
+use vpe::coordinator::{Vpe, VpeConfig};
+use vpe::jit::module::{FunctionId, IrFunction, IrModule};
+use vpe::jit::wrapper::DispatchTable;
+use vpe::platform::memory::SharedRegion;
+use vpe::platform::{Soc, TargetId};
+use vpe::util::bench::{bench, black_box, header};
+use vpe::workloads::WorkloadKind;
+
+fn main() {
+    header("L3 coordinator hot path");
+
+    // Wrapper dispatch (the Fig 1 pointer load).
+    let mut m = IrModule::new("bench");
+    for i in 0..64 {
+        m.add_function(IrFunction::user(&format!("f{i}"), Some(WorkloadKind::Matmul)));
+    }
+    m.finalize();
+    let table = DispatchTable::for_module(&m).expect("table");
+    bench("DispatchTable::dispatch", 10_000, 1_000_000, || {
+        black_box(table.dispatch(FunctionId(17)).expect("dispatch"));
+    });
+    bench("DispatchTable::set_target+reset", 10_000, 500_000, || {
+        table.set_target(FunctionId(17), TargetId::C64xDsp).expect("set");
+        table.reset(FunctionId(17)).expect("reset");
+    });
+
+    // Shared-region parameter staging.
+    let mut region = SharedRegion::dm3730();
+    bench("SharedRegion alloc+free", 10_000, 500_000, || {
+        let a = region.alloc(64).expect("alloc");
+        region.free(a).expect("free");
+    });
+
+    // Cost-model evaluation.
+    let soc = Soc::dm3730();
+    bench("Soc::call_ns", 10_000, 1_000_000, || {
+        black_box(
+            soc.call_ns(WorkloadKind::Matmul, 2_097_152.0, 48, TargetId::C64xDsp)
+                .expect("call_ns"),
+        );
+    });
+
+    // Full sim-only coordinator call (steady state on the DSP).
+    let mut v = Vpe::new(VpeConfig::sim_only()).expect("vpe");
+    let f = v.register_workload(WorkloadKind::Matmul).expect("register");
+    v.run(f, 15).expect("warmup");
+    assert_eq!(v.current_target(f).expect("target"), TargetId::C64xDsp);
+    bench("Vpe::call (sim-only, steady)", 1000, 100_000, || {
+        black_box(v.call(f).expect("call"));
+    });
+
+    // Event-log render (reporting path, not hot, but bounded).
+    bench("EventLog::to_text", 100, 10_000, || {
+        black_box(v.events().to_text());
+    });
+}

@@ -1,0 +1,56 @@
+//! Bench: L1 Pallas tile-size ablation (EXPERIMENTS.md §Perf).
+//!
+//! The same 128x128 int32 matmul AOT'd with three Pallas block shapes
+//! (8, 16, 32), executed through the PJRT CPU substrate.  On real TPU
+//! hardware the tile size trades VMEM footprint against MXU utilization;
+//! on the interpret-mode CPU substrate it trades loop-nest overhead
+//! (grid steps) against working-set locality — the *structural* knob is
+//! identical, which is what this ablation exercises.
+//!
+//! `cargo bench --bench kernel_blocks`
+
+use vpe::util::bench::{bench, black_box, header};
+use vpe::workloads::matmul;
+
+fn main() {
+    let store = match vpe::runtime::ArtifactStore::open_default() {
+        Ok(s) => s,
+        Err(e) => {
+            println!("artifacts unavailable ({e}) — run `make artifacts`");
+            return;
+        }
+    };
+    let inst = matmul::instance(128, 42);
+
+    header("matmul 128x128 int32 — Pallas tile-size ablation (PJRT CPU)");
+    let mut results = Vec::new();
+    for name in ["matmul128__naive", "matmul128__dsp_b8", "matmul128__dsp", "matmul128__dsp_b32"]
+    {
+        match store.load(name) {
+            Ok(a) => {
+                let (out, _) = a.execute(&inst.inputs).expect("warm");
+                assert!(
+                    inst.expected.allclose(&out, 0.0),
+                    "{name}: wrong output — ablation build is broken"
+                );
+                let r = bench(&format!("pjrt/{name}"), 2, 8, || {
+                    black_box(a.execute(&inst.inputs).expect("execute"));
+                });
+                results.push((name, r.mean_ns));
+            }
+            Err(e) => println!("{name}: unavailable ({e})"),
+        }
+    }
+
+    if results.len() == 4 {
+        let best = results[1..]
+            .iter()
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .expect("non-empty");
+        println!(
+            "\nbest DSP-build tile: {} ({:.2} ms) — recorded in EXPERIMENTS.md §Perf",
+            best.0,
+            best.1 / 1e6
+        );
+    }
+}

@@ -1,0 +1,76 @@
+//! Bench: the profiler's cost — §3.1's "up to 20 % overhead" bound.
+//!
+//! Simulated side: end-to-end sim time of a workload loop with the
+//! sampler off vs on (the overhead VPE charges itself).  Real side: the
+//! wall cost of `PerfSampler::record` itself, which sits on the L3 hot
+//! path and must stay in the tens of nanoseconds.
+//!
+//! `cargo bench --bench profiler_overhead`
+
+use vpe::coordinator::{Vpe, VpeConfig};
+use vpe::jit::module::FunctionId;
+use vpe::platform::TargetId;
+use vpe::profiler::counters::CounterSample;
+use vpe::profiler::sampler::{PerfSampler, SamplerConfig};
+use vpe::sim::SimRng;
+use vpe::util::bench::{bench, black_box, header};
+use vpe::workloads::WorkloadKind;
+
+fn sim_total_ms(enabled: bool, overhead_frac: f64) -> f64 {
+    let mut cfg = VpeConfig::sim_only();
+    cfg.sampler.enabled = enabled;
+    cfg.sampler.overhead_frac = overhead_frac;
+    let mut v = Vpe::new(cfg).expect("vpe");
+    // NeverOffload keeps the comparison apples-to-apples on the ARM.
+    let mut v2 = Vpe::with_policy(
+        {
+            let mut c = VpeConfig::sim_only();
+            c.sampler.enabled = enabled;
+            c.sampler.overhead_frac = overhead_frac;
+            c
+        },
+        Box::new(vpe::coordinator::policy::NeverOffloadPolicy),
+    )
+    .expect("vpe");
+    std::mem::swap(&mut v, &mut v2);
+    let f = v.register_workload(WorkloadKind::Conv2d).expect("register");
+    let recs = v.run(f, 40).expect("run");
+    recs.iter().map(|r| r.total_ns() as f64).sum::<f64>() / 1e6
+}
+
+fn main() {
+    println!("simulated profiling overhead (conv2d x40, ARM-pinned):");
+    let off = sim_total_ms(false, 0.05);
+    for frac in [0.02, 0.05, 0.10, 0.20] {
+        let on = sim_total_ms(true, frac);
+        println!(
+            "  overhead_frac {frac:>5.2}: {off:>9.1} ms -> {on:>9.1} ms  (+{:.1}%)",
+            (on / off - 1.0) * 100.0
+        );
+    }
+    let worst = sim_total_ms(true, 0.20) / off - 1.0;
+    assert!(worst < 0.35, "overhead {worst} blew past the paper envelope + bursts");
+
+    header("sampler hot-path (real wall clock)");
+    let mut sampler = PerfSampler::new(SamplerConfig::default()).expect("sampler");
+    let mut rng = SimRng::seeded(1);
+    let sample = CounterSample {
+        cycles: 1_000_000,
+        instructions: 500_000,
+        cache_misses: 1000,
+        branch_misses: 100,
+        page_faults: 0,
+    };
+    bench("PerfSampler::record", 1000, 200_000, || {
+        black_box(sampler.record(FunctionId(0), TargetId::ArmCore, sample, 1_000_000, &mut rng));
+    });
+    bench("CounterSample::synthesize", 1000, 200_000, || {
+        black_box(CounterSample::synthesize(
+            WorkloadKind::Matmul,
+            1e6,
+            1e6,
+            TargetId::ArmCore,
+            1_000_000_000,
+        ));
+    });
+}

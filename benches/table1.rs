@@ -1,0 +1,78 @@
+//! Bench: regenerate Table 1 (paper §5.2) and measure the real substrate.
+//!
+//! Sim side: the calibrated DM3730 reproduces the paper's normal/VPE
+//! columns and speedups.  Real side: wall-clock of the pure-Rust
+//! reference loop (the "C program" on the host) vs the PJRT naive and
+//! Pallas artifacts at artifact shapes.
+//!
+//! `cargo bench --bench table1`
+
+use vpe::bench_harness::table1;
+use vpe::util::bench::{bench, black_box, header};
+use vpe::workloads::{self, WorkloadKind};
+
+fn main() {
+    // -- the paper table (simulated clock) -------------------------------
+    let rows = table1::table1(20, false).expect("table1 harness");
+    println!("{}", table1::render(&rows).to_markdown());
+
+    // -- real substrate walls ---------------------------------------------
+    header("Table 1 workloads — real execution at artifact shapes");
+
+    // Pure-Rust baselines (the developer's naive loop, -O3).
+    for kind in WorkloadKind::ALL {
+        let inst = workloads::instance(kind, 42);
+        bench(&format!("rust-naive/{}", kind.name()), 1, 5, || match kind {
+            WorkloadKind::Complement => {
+                let seq = inst.inputs[0].as_i32().unwrap();
+                black_box(workloads::complement::reference(seq));
+            }
+            WorkloadKind::Conv2d => {
+                let img = inst.inputs[0].as_i32().unwrap();
+                let ker = inst.inputs[1].as_i32().unwrap();
+                black_box(workloads::conv2d::reference(img, 128, 128, ker, 3));
+            }
+            WorkloadKind::Dotprod => {
+                let x = inst.inputs[0].as_i32().unwrap();
+                let y = inst.inputs[1].as_i32().unwrap();
+                black_box(workloads::dotprod::reference(x, y));
+            }
+            WorkloadKind::Matmul => {
+                let a = inst.inputs[0].as_i32().unwrap();
+                let b = inst.inputs[1].as_i32().unwrap();
+                black_box(workloads::matmul::reference(a, b, 128));
+            }
+            WorkloadKind::Pattern => {
+                let s = inst.inputs[0].as_i32().unwrap();
+                let p = inst.inputs[1].as_i32().unwrap();
+                black_box(workloads::pattern::reference(s, p));
+            }
+            WorkloadKind::Fft => {
+                let re = inst.inputs[0].as_f32().unwrap();
+                let im = inst.inputs[1].as_f32().unwrap();
+                black_box(workloads::fft::reference(re, im));
+            }
+        });
+    }
+
+    // PJRT artifacts (both builds), if present.
+    match vpe::runtime::ArtifactStore::open_default() {
+        Ok(store) => {
+            for kind in WorkloadKind::ALL {
+                let inst = workloads::instance(kind, 42);
+                for name in [&inst.artifact_naive, &inst.artifact_dsp] {
+                    match store.load(name) {
+                        Ok(a) => {
+                            let _ = a.execute(&inst.inputs).expect("warm");
+                            bench(&format!("pjrt/{name}"), 1, 5, || {
+                                black_box(a.execute(&inst.inputs).expect("execute"));
+                            });
+                        }
+                        Err(e) => println!("{name}: unavailable ({e})"),
+                    }
+                }
+            }
+        }
+        Err(e) => println!("(artifacts unavailable: {e} — run `make artifacts`)"),
+    }
+}

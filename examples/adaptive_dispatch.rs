@@ -1,0 +1,94 @@
+//! Size-adaptive dispatch — the paper's §5.2 future-work item, working.
+//!
+//! "We could easily learn automatically a correlation between the size
+//! of the matrix passed as a parameter and the performance achieved —
+//! [using] a simple decision tree — and ground future decisions upon
+//! this criteria."
+//!
+//! Phase 1 (explore): run matmuls of many sizes on both targets and
+//! collect (size, winner) observations — the measurements VPE's profiler
+//! produces anyway.
+//! Phase 2 (learn): fit the decision tree; its root split *is* the
+//! Fig 2b crossover.
+//! Phase 3 (exploit): dispatch unseen sizes by prediction — no warm-up,
+//! no blind trial, each call lands on the right target immediately.
+
+use vpe::coordinator::decision_tree::{DecisionTree, Observation};
+use vpe::platform::{Soc, TargetId};
+use vpe::sim::SimRng;
+use vpe::util::cli::Args;
+use vpe::workloads::{matmul_scale, WorkloadKind};
+
+fn measure(soc: &Soc, n: u64, target: TargetId, rng: &mut SimRng) -> f64 {
+    let scale = matmul_scale(n);
+    let base = soc
+        .call_scaled_ns(WorkloadKind::Matmul, &scale, target)
+        .expect("healthy targets") as f64;
+    base * (1.0 + 0.008 * rng.standard_normal())
+}
+
+fn main() -> vpe::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let reps: usize = args.opt("reps", 4)?;
+    args.finish()?;
+
+    let soc = Soc::dm3730();
+    let mut rng = SimRng::seeded(0xADA9);
+
+    // -- Phase 1: explore -------------------------------------------------
+    let train_sizes = [12u64, 20, 32, 48, 64, 80, 96, 120, 160, 240, 320, 480];
+    let mut obs = Vec::new();
+    for &n in &train_sizes {
+        for _ in 0..reps {
+            let arm = measure(&soc, n, TargetId::ArmCore, &mut rng);
+            let dsp = measure(&soc, n, TargetId::C64xDsp, &mut rng);
+            obs.push(Observation {
+                size: n as f64,
+                best: if dsp < arm { TargetId::C64xDsp } else { TargetId::ArmCore },
+            });
+        }
+    }
+    println!("phase 1: {} observations across {} sizes", obs.len(), train_sizes.len());
+
+    // -- Phase 2: learn ---------------------------------------------------
+    let tree = DecisionTree::fit(&obs, 4, 3);
+    println!(
+        "phase 2: decision tree fitted (train accuracy {:.0}%, learned crossover N = {})",
+        tree.accuracy(&obs) * 100.0,
+        tree.root_threshold().map(|t| format!("{t:.0}")).unwrap_or("-".into()),
+    );
+
+    // -- Phase 3: exploit on unseen sizes ----------------------------------
+    let test_sizes = [16u64, 50, 75, 91, 110, 200, 400, 500];
+    println!("\nphase 3: dispatch-by-prediction on unseen sizes");
+    println!("{:>5} {:>12} {:>12} {:>12} {:>10} {:>8}", "N", "ARM ms", "DSP ms", "predicted", "actual", "ok");
+    let mut correct = 0;
+    for &n in &test_sizes {
+        let arm = measure(&soc, n, TargetId::ArmCore, &mut rng) / 1e6;
+        let dsp = measure(&soc, n, TargetId::C64xDsp, &mut rng) / 1e6;
+        let predicted = tree.predict(n as f64);
+        let actual = if dsp < arm { TargetId::C64xDsp } else { TargetId::ArmCore };
+        let ok = predicted == actual;
+        correct += ok as usize;
+        println!(
+            "{n:>5} {arm:>12.1} {dsp:>12.1} {:>12} {:>10} {:>8}",
+            short(predicted),
+            short(actual),
+            if ok { "yes" } else { "NO" }
+        );
+    }
+    println!(
+        "\n{}/{} unseen sizes dispatched correctly — the warm-up phase is gone.",
+        correct,
+        test_sizes.len()
+    );
+    assert!(correct >= test_sizes.len() - 1, "tree generalizes poorly");
+    Ok(())
+}
+
+fn short(t: TargetId) -> &'static str {
+    match t {
+        TargetId::ArmCore => "ARM",
+        TargetId::C64xDsp => "DSP",
+    }
+}

@@ -1,0 +1,42 @@
+//! Run-time failure recovery — the paper's §1 claim that VPE "can
+//! dynamically react to changes in the context of execution, for example
+//! resources that [...] experience an hardware failure".
+//!
+//! Timeline:
+//!   phase 1: matmul runs hot, VPE offloads it to the DSP;
+//!   phase 2: the DSP dies mid-run — the very next call transparently
+//!            fails over to the ARM core (no error reaches the app);
+//!   phase 3: the DSP comes back — VPE re-profiles and re-offloads.
+//!
+//! `cargo run --release --example failure_recovery`
+
+use vpe::coordinator::{Vpe, VpeConfig};
+use vpe::platform::TargetId;
+use vpe::workloads::WorkloadKind;
+
+fn main() -> vpe::Result<()> {
+    let mut vpe = Vpe::new(VpeConfig::sim_only())?;
+    let f = vpe.register_workload(WorkloadKind::Matmul)?;
+
+    println!("phase 1: warm up + offload");
+    vpe.run(f, 15)?;
+    assert_eq!(vpe.current_target(f)?, TargetId::C64xDsp);
+    println!("  matmul is on the DSP after {} calls", 15);
+
+    println!("phase 2: DSP hardware failure injected");
+    vpe.soc_mut().fail_target(TargetId::C64xDsp);
+    let recs = vpe.run(f, 10)?;
+    // Every call still succeeded — on the host.
+    assert!(recs.iter().all(|r| r.target == TargetId::ArmCore));
+    assert_eq!(vpe.current_target(f)?, TargetId::ArmCore);
+    println!("  10/10 calls served locally, zero failures surfaced to the app");
+
+    println!("phase 3: DSP restored");
+    vpe.soc_mut().heal_target(TargetId::C64xDsp);
+    vpe.run(f, 15)?;
+    assert_eq!(vpe.current_target(f)?, TargetId::C64xDsp);
+    println!("  VPE re-profiled and re-offloaded");
+
+    println!("\nevent trace:\n{}", vpe.events().to_text());
+    Ok(())
+}

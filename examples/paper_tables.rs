@@ -1,0 +1,79 @@
+//! Regenerate every table and figure of the paper's evaluation (§5) in
+//! one run, and write them to `results/` as markdown + CSV.
+//!
+//! `cargo run --release --example paper_tables [-- --samples N --walls]`
+
+use vpe::bench_harness::{fig2, fig3, table1};
+use vpe::util::cli::Args;
+
+fn main() -> vpe::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let samples: usize = args.opt("samples", 20)?;
+    let walls = args.flag("walls");
+    args.finish()?;
+
+    std::fs::create_dir_all("results")?;
+    let mut all = String::new();
+
+    // -- Table 1 ----------------------------------------------------------
+    let rows = table1::table1(samples, walls)?;
+    let t = table1::render(&rows);
+    println!("{}", t.to_markdown());
+    std::fs::write("results/table1.csv", t.to_csv())?;
+    all.push_str(&t.to_markdown());
+    if walls {
+        all.push_str("\nReal PJRT wall times (artifact shapes):\n");
+        for r in &rows {
+            if let (Some(nv), Some(dv)) = (r.wall_naive_ms, r.wall_dsp_ms) {
+                all.push_str(&format!(
+                    "- {}: naive {nv:.3} ms, pallas {dv:.3} ms\n",
+                    r.kind.name()
+                ));
+            }
+        }
+    }
+
+    // -- Fig 2a -----------------------------------------------------------
+    let t = fig2::fig2a(samples)?;
+    println!("{}", t.to_markdown());
+    std::fs::write("results/fig2a.csv", t.to_csv())?;
+    all.push_str(&t.to_markdown());
+
+    // -- Fig 2b -----------------------------------------------------------
+    let (points, tree) = fig2::fig2b(&fig2::default_sizes(), 5, 0xF162B);
+    let t = fig2::render_fig2b(&points, &tree);
+    println!("{}", t.to_markdown());
+    std::fs::write("results/fig2b.csv", t.to_csv())?;
+    all.push_str(&t.to_markdown());
+    let cross = fig2::analytic_crossover();
+    let learned = tree.root_threshold().unwrap_or(f64::NAN);
+    let note = format!(
+        "analytic crossover N = {cross:.0}; decision-tree learned N = {learned:.0} (paper: ~75)\n\n"
+    );
+    print!("{note}");
+    all.push_str(&note);
+
+    // -- Fig 3 ------------------------------------------------------------
+    let s = fig3::fig3(300, 60, false)?;
+    let t = fig3::render(&s);
+    println!("{}", t.to_markdown());
+    std::fs::write("results/fig3.csv", t.to_csv())?;
+    all.push_str(&t.to_markdown());
+    // Per-frame series for plotting.
+    let mut series = String::from("frame,frame_ms,fps,cpu_load,target\n");
+    for f in &s.frames {
+        series.push_str(&format!(
+            "{},{:.2},{:.3},{:.3},{}\n",
+            f.frame,
+            f.frame_ms,
+            f.fps,
+            f.cpu_load,
+            if f.conv_target.is_host() { "arm" } else { "dsp" }
+        ));
+    }
+    std::fs::write("results/fig3_series.csv", series)?;
+
+    std::fs::write("results/all.md", &all)?;
+    println!("written: results/table1.csv fig2a.csv fig2b.csv fig3.csv fig3_series.csv all.md");
+    Ok(())
+}

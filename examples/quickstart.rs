@@ -1,0 +1,50 @@
+//! Quickstart: the paper's promise in 30 lines.
+//!
+//! You write a hot function as if it ran on a plain CPU; VPE profiles
+//! it, notices it is hot, moves it to the DSP, and your loop gets faster
+//! — no code changes, no toolchain knowledge.
+//!
+//! Run with `cargo run --release --example quickstart` (after
+//! `make artifacts`; falls back to simulation-only when artifacts are
+//! missing).
+
+use vpe::coordinator::{Vpe, VpeConfig};
+use vpe::platform::TargetId;
+use vpe::workloads::WorkloadKind;
+
+fn main() -> vpe::Result<()> {
+    // Build the coordinator: prefer real PJRT execution, fall back to
+    // simulation-only when `make artifacts` has not been run.
+    let mut vpe = match Vpe::new(VpeConfig::default()) {
+        Ok(v) => v,
+        Err(_) => {
+            eprintln!("(artifacts missing — running simulation-only)");
+            Vpe::new(VpeConfig::sim_only())?
+        }
+    };
+
+    // "The developer just writes the code as if it had to be executed
+    // on a standard CPU" — register the matrix-multiply hot loop.
+    let matmul = vpe.register_workload(WorkloadKind::Matmul)?;
+
+    // Call it in a loop.  VPE does the rest.
+    for i in 0..25 {
+        let rec = vpe.call(matmul)?;
+        if i % 5 == 0 || rec.action.is_some() {
+            println!(
+                "iter {i:>2}: ran on {:<14} sim {:>7.1} ms{}{}",
+                rec.target.name(),
+                rec.exec_ns as f64 / 1e6,
+                rec.wall
+                    .map(|w| format!("  (real PJRT {:.2} ms)", w.as_secs_f64() * 1e3))
+                    .unwrap_or_default(),
+                rec.action.map(|a| format!("  <- {a:?}")).unwrap_or_default(),
+            );
+        }
+    }
+
+    println!("\n{}", vpe.report());
+    assert_eq!(vpe.current_target(matmul)?, TargetId::C64xDsp);
+    println!("matmul now runs on the DSP — transparently.");
+    Ok(())
+}

@@ -1,0 +1,143 @@
+"""AOT driver: lower every (workload, variant) to HLO text + a manifest.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (from python/),
+which is what ``make artifacts`` does.  Python runs ONCE at build time;
+the Rust coordinator only ever touches ``artifacts/``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Artifact shapes: the concrete shapes the Rust runtime executes for real
+# numerics.  Paper-*scale* parameters (64 Mi-char sequences etc.) live in
+# the Rust cost model; AOT artifacts use sizes that compile and run in
+# milliseconds on the CPU PJRT substrate.
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# Matmul sizes AOT'd for the Fig 2b sweep (simulated sweep covers 16..512;
+# these are the sizes executed for real).
+MATMUL_SIZES = [16, 32, 64, 128]
+
+ARTIFACTS = []  # (name, workload, variant, fn, example_args, params)
+
+
+def _register_all():
+    ARTIFACTS.clear()
+    specs = {
+        "complement": [sd((65536,), I32)],
+        "conv2d": [sd((128, 128), I32), sd((3, 3), I32)],
+        "dotprod": [sd((262144,), I32), sd((262144,), I32)],
+        "pattern": [sd((65536,), I32), sd((16,), I32)],
+        "fft": [sd((1024,), F32), sd((1024,), F32)],
+    }
+    for workload, args in specs.items():
+        for variant, fn in model.VARIANTS[workload].items():
+            ARTIFACTS.append((f"{workload}__{variant}", workload, variant, fn, args))
+    for n in MATMUL_SIZES:
+        args = [sd((n, n), I32), sd((n, n), I32)]
+        for variant, fn in model.VARIANTS["matmul"].items():
+            ARTIFACTS.append((f"matmul{n}__{variant}", "matmul", variant, fn, args))
+    # L1 tile-size ablation builds (EXPERIMENTS.md §Perf): same matmul,
+    # different Pallas block shapes, measured against each other by
+    # `cargo bench --bench kernel_blocks`.
+    args128 = [sd((128, 128), I32), sd((128, 128), I32)]
+    ARTIFACTS.append(("matmul128__dsp_b8", "matmul", "dsp_b8", model.dsp_matmul_b8, args128))
+    ARTIFACTS.append(("matmul128__dsp_b32", "matmul", "dsp_b32", model.dsp_matmul_b32, args128))
+
+
+_register_all()
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    # The HLO text printer elides constants wider than a few lanes as
+    # ``constant({...})``; xla_extension 0.5.1's text parser reads those
+    # back as garbage.  Refuse to emit such an artifact — restructure the
+    # kernel to compute the values (iota/cos/...) instead of embedding
+    # them (see kernels/fft.py for the pattern).
+    if "{...}" in text:
+        raise ValueError(
+            f"{fn.__name__}: lowered HLO contains an elided constant "
+            "('constant({...})'); the Rust runtime would mis-execute it"
+        )
+    return text
+
+
+def _dtype_name(dt) -> str:
+    return np.dtype(dt).name
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for name, workload, variant, fn, example_args in ARTIFACTS:
+        if only is not None and name not in only:
+            continue
+        text = lower_one(fn, example_args)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *example_args)
+        entry = {
+            "name": name,
+            "workload": workload,
+            "variant": variant,
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(a.shape), "dtype": _dtype_name(a.dtype)}
+                for a in example_args
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": _dtype_name(o.dtype)}
+                for o in out_shapes
+            ],
+        }
+        manifest["artifacts"].append(entry)
+        print(f"  lowered {name:24s} -> {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""L1 Pallas kernels — the "DSP builds" of the six VPE benchmark loops.
+
+Each module exposes one entry point used by the L2 model:
+
+- :func:`complement.complement` — blocked DNA complement
+- :func:`conv2d.conv2d` — blocked SAME 2-D cross-correlation
+- :func:`dotprod.dotprod` — chunked integer dot product
+- :func:`matmul.matmul` — tiled integer matrix multiply
+- :func:`pattern.pattern_count` — blocked pattern-occurrence count
+- :func:`fft.fft` — unrolled iterative radix-2 FFT (the paper's 0.7x case)
+
+All kernels run with ``interpret=True`` so they lower to plain HLO that the
+Rust PJRT-CPU runtime can execute; correctness is asserted against the
+pure-jnp oracles in :mod:`ref`.
+"""
+
+from . import complement, conv2d, dotprod, fft, matmul, pattern, ref  # noqa: F401

@@ -1,0 +1,42 @@
+"""L1 Pallas kernel: DNA complement (the "DSP build" of the complement loop).
+
+The paper's C64x+ win on this workload comes from software pipelining a
+byte-lookup loop across 8 VLIW units.  The Pallas analog: block the sequence
+into VMEM-sized chunks (grid dimension) and complement each chunk with a
+single vectorized arithmetic op (``3 - x`` — the lookup table for the 2-bit
+DNA code collapses to arithmetic, exactly what a pipelining compiler finds).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO that the Rust runtime
+executes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Chunk size: 8192 int32 lanes = 32 KiB per buffer, comfortably inside a
+# C64x+-style scratchpad (and a TPU VMEM tile).
+CHUNK = 8192
+
+
+def _complement_kernel(x_ref, o_ref):
+    # A<->T, C<->G over the 2-bit code: table [3,2,1,0] == 3 - x.
+    o_ref[...] = 3 - x_ref[...]
+
+
+def complement(seq: jnp.ndarray) -> jnp.ndarray:
+    """Blocked complement of a code-0..3 sequence. len(seq) % CHUNK == 0."""
+    n = seq.shape[0]
+    assert n % CHUNK == 0, f"sequence length {n} must be a multiple of {CHUNK}"
+    grid = n // CHUNK
+    return pl.pallas_call(
+        _complement_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), seq.dtype),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((CHUNK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((CHUNK,), lambda i: (i,)),
+        interpret=True,
+    )(seq)

@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: iterative radix-2 FFT (the "DSP build").
+
+This is the paper's *negative* case: the FFT is float-heavy and the C64x+
+has no hardware floating point, so VPE's blind offload loses (0.7x) and
+the policy must revert.  We still build the kernel for real — a fully
+unrolled iterative Cooley-Tukey DIT over split real/imaginary planes —
+because VPE executes it before discovering the regression.
+
+Structure notes (all three shaped by xla_extension 0.5.1, the Rust
+runtime's XLA, whose HLO *text* round-trip is the interchange format):
+
+- the bit-reversal input permutation is done by the caller as a
+  reshape-to-(2,)*log2(N) + axis-reversal transpose — gather-free (the
+  0.5.1 text parser mis-executes constant-index gathers), and the moral
+  equivalent of DSP bit-reversed addressing;
+- twiddle factors are computed *inside* the kernel from `iota` + cos/sin
+  rather than embedded as constant tables: the HLO text printer elides
+  any constant wider than a few lanes as ``constant({...})``, which the
+  text parser then reads back as garbage;
+- each butterfly stage is expressed as full-width vector ops on a
+  (N/2m, 2, m) view — top' = top + w*bot, bot' = top - w*bot — and the
+  output is written with a single whole-buffer store.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _bit_reverse(x: jnp.ndarray) -> jnp.ndarray:
+    """Bit-reversal permutation, gather-free (see module docs)."""
+    n = x.shape[0]
+    bits = n.bit_length() - 1
+    cube = x.reshape((2,) * bits)
+    return cube.transpose(tuple(reversed(range(bits)))).reshape(-1)
+
+
+def _fft_kernel(re_ref, im_ref, o_ref, *, n: int):
+    re = re_ref[...]
+    im = im_ref[...]
+    m = 1
+    while m < n:
+        # Twiddles for this stage: w_j = exp(-i pi j / m), j < m.
+        # iota-derived (not a constant table) — see module docs.
+        j = lax.broadcasted_iota(jnp.float32, (m,), 0)
+        ang = -(np.pi / m) * j
+        tw_re = jnp.cos(ang)
+        tw_im = jnp.sin(ang)
+        re3 = re.reshape(-1, 2, m)
+        im3 = im.reshape(-1, 2, m)
+        top_re, bot_re = re3[:, 0, :], re3[:, 1, :]
+        top_im, bot_im = im3[:, 0, :], im3[:, 1, :]
+        # w * bot
+        wb_re = bot_re * tw_re - bot_im * tw_im
+        wb_im = bot_re * tw_im + bot_im * tw_re
+        re = jnp.stack([top_re + wb_re, top_re - wb_re], axis=1).reshape(-1)
+        im = jnp.stack([top_im + wb_im, top_im - wb_im], axis=1).reshape(-1)
+        m *= 2
+    # Single whole-buffer store (row-indexed ref writes lower to a
+    # scatter pattern 0.5.1 cannot run).
+    o_ref[...] = jnp.stack([re, im])
+
+
+def fft(re: jnp.ndarray, im: jnp.ndarray) -> jnp.ndarray:
+    """Radix-2 DIT FFT; N must be a power of two. Returns (2, N) [re; im]."""
+    n = re.shape[0]
+    assert n & (n - 1) == 0 and n >= 2, f"N={n} must be a power of two"
+    kern = lambda a, b, o: _fft_kernel(a, b, o, n=n)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((2, n), jnp.float32),
+        interpret=True,
+    )(_bit_reverse(re), _bit_reverse(im))

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: tiled integer matrix multiply (the "DSP build").
+
+The paper's biggest win (31.9x) comes from the TI compiler software-
+pipelining the triple loop.  On the TPU-ish model the same insight is a
+blocked schedule: tiles of A and B staged into VMEM (BlockSpec), a grid
+over (M/bm, N/bn, K/bk), and an accumulation loop over the K grid
+dimension feeding the matrix unit.  ``@pl.when`` zeroes the accumulator
+tile on the first K step — the canonical Pallas matmul pattern.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile size.  Chosen by the EXPERIMENTS.md §Perf ablation
+# (`cargo bench --bench kernel_blocks`): 32x32 tiles run the 128x128
+# artifact 3.7x faster than 16x16 on the interpret-lowered CPU substrate
+# (fewer grid steps = less while-loop overhead in the lowered HLO) while
+# still fitting a C64x+-class scratchpad at int32 (3 * 32*32*4 B = 12 KiB)
+# and mapping onto MXU sub-tiles.  Sizes smaller than the block clamp
+# down automatically (matmul16 uses 16x16).
+DEFAULT_BLOCK = 32
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Tiled matmul; all dims must be multiples of ``block``."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm = bn = bk = min(block, m, n, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"dims ({m},{k},{n}) must be multiples of block {bm}"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        interpret=True,
+    )(a, b)

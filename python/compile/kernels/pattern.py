@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: DNA pattern search (the "DSP build").
+
+Counts the occurrences of a length-P pattern in a code sequence.  The
+C64x+ wins 22.7x on this workload by software-pipelining packed compares;
+the Pallas analog blocks the *window start positions* across the grid and
+turns the P inner compares into P full-width vector compare-and-multiply
+steps over a VMEM-resident chunk (+ halo).
+
+The caller pads the sequence with P-1 sentinel values (-1, outside the
+DNA alphabet) so every program sees a full chunk of windows and no
+boundary branches exist in the hot loop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 4096  # window start positions per grid program
+
+
+def _pattern_kernel(seq_ref, pat_ref, o_ref, *, plen: int, chunk: int):
+    i = pl.program_id(0)
+    base = i * chunk
+    acc = jnp.ones((chunk,), dtype=jnp.int32)
+    for off in range(plen):
+        window = seq_ref[pl.dslice(base + off, chunk)]
+        acc = acc * (window == pat_ref[off]).astype(jnp.int32)
+    o_ref[0] = jnp.sum(acc)
+
+
+def pattern_count(seq: jnp.ndarray, pat: jnp.ndarray) -> jnp.ndarray:
+    """Count matches of ``pat`` at every start position of ``seq``.
+
+    len(seq) % CHUNK == 0.  Start positions in the last P-1 places cannot
+    match (sentinel padding) which agrees with the N-P+1 window semantics
+    of the reference as long as the pattern contains no sentinel.
+    """
+    n = seq.shape[0]
+    plen = pat.shape[0]
+    assert n % CHUNK == 0, f"sequence length {n} must be a multiple of {CHUNK}"
+    grid = n // CHUNK
+    padded = jnp.concatenate(
+        [seq, jnp.full((plen - 1,), -1, dtype=seq.dtype)]
+    )
+    kern = lambda s, p, o: _pattern_kernel(s, p, o, plen=plen, chunk=CHUNK)
+    partials = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((grid,), jnp.int32),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(padded.shape, lambda i: (0,)),
+            pl.BlockSpec(pat.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        interpret=True,
+    )(padded, pat)
+    return jnp.sum(partials).astype(jnp.int32)

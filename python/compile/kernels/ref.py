@@ -1,0 +1,66 @@
+"""Pure-jnp correctness oracles for every workload.
+
+These are the reference implementations the Pallas kernels (and the naive
+jnp variants) are validated against in ``python/tests``.  They intentionally
+use *different* jnp formulations than the kernels (e.g. ``lax.conv`` instead
+of shift-and-add, ``jnp.fft`` instead of unrolled butterflies) so that a bug
+in a kernel cannot be mirrored in its oracle.
+
+All functions are shape-polymorphic pure functions of jnp arrays.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+# DNA alphabet encoding used across the repo: A=0, C=1, G=2, T=3.
+# The complement swaps A<->T and C<->G, i.e. ``code -> 3 - code``.
+DNA_ALPHABET = 4
+
+
+def complement_ref(seq: jnp.ndarray) -> jnp.ndarray:
+    """Complementary nucleotidic sequence: A<->T, C<->G (codes 0..3)."""
+    # Table-lookup formulation (the paper's C code uses a lookup table).
+    table = jnp.array([3, 2, 1, 0], dtype=seq.dtype)
+    return jnp.take(table, seq)
+
+
+def conv2d_ref(img: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
+    """2-D cross-correlation, SAME padding, via lax.conv_general_dilated."""
+    img_f = img.astype(jnp.float32)[None, None, :, :]
+    ker_f = kernel.astype(jnp.float32)[None, None, :, :]
+    out = lax.conv_general_dilated(
+        img_f, ker_f, window_strides=(1, 1), padding="SAME"
+    )
+    return out[0, 0].astype(img.dtype)
+
+
+def dotprod_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Dot product of two vectors (scalar output).
+
+    Accumulates in the input dtype (int32 for the benchmark): generators
+    keep values in [-8, 8) so the exact sum fits comfortably.
+    """
+    return jnp.dot(x, y)
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Square matrix multiplication."""
+    return jnp.matmul(a, b)
+
+
+def pattern_ref(seq: jnp.ndarray, pat: jnp.ndarray) -> jnp.ndarray:
+    """Count occurrences of ``pat`` in ``seq`` (all start positions)."""
+    n, p = seq.shape[0], pat.shape[0]
+    nwin = n - p + 1
+    acc = jnp.ones((nwin,), dtype=jnp.int32)
+    for off in range(p):
+        acc = acc * (seq[off : off + nwin] == pat[off]).astype(jnp.int32)
+    return jnp.sum(acc).astype(jnp.int32)
+
+
+def fft_ref(re: jnp.ndarray, im: jnp.ndarray) -> jnp.ndarray:
+    """FFT oracle via jnp.fft; returns stacked (2, N) [real; imag]."""
+    z = jnp.fft.fft(re.astype(jnp.complex64) + 1j * im.astype(jnp.complex64))
+    return jnp.stack([jnp.real(z), jnp.imag(z)]).astype(jnp.float32)

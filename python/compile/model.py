@@ -1,0 +1,133 @@
+"""L2: the six VPE benchmark computations as jitted JAX functions.
+
+Two build variants exist for every workload, mirroring the paper's setup:
+
+- ``naive_*``  — plain jnp, the "ARM -O3 build" the developer wrote;
+- ``dsp_*``    — calls the L1 Pallas kernel, the "TI-compiler DSP build"
+  produced by VPE's toolchain scripts (paper §4).
+
+Every function returns a 1-tuple so the AOT path can lower with
+``return_tuple=True`` and the Rust side can unwrap with ``to_tuple1()``
+(see /opt/xla-example/README.md).
+
+These functions are *build-time only*: ``aot.py`` lowers them to HLO text
+once, and the Rust coordinator executes the artifacts through PJRT.  Python
+never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import complement as k_complement
+from .kernels import conv2d as k_conv2d
+from .kernels import dotprod as k_dotprod
+from .kernels import fft as k_fft
+from .kernels import matmul as k_matmul
+from .kernels import pattern as k_pattern
+from .kernels import ref
+
+
+# --------------------------------------------------------------------------
+# complement
+# --------------------------------------------------------------------------
+
+def naive_complement(seq):
+    """Lookup-table complement, as the paper's C loop compiles on ARM."""
+    table = jnp.array([3, 2, 1, 0], dtype=seq.dtype)
+    return (jnp.take(table, seq),)
+
+
+def dsp_complement(seq):
+    return (k_complement.complement(seq),)
+
+
+# --------------------------------------------------------------------------
+# conv2d
+# --------------------------------------------------------------------------
+
+def naive_conv2d(img, kernel):
+    """Shift-and-add SAME cross-correlation in plain jnp."""
+    h, w = img.shape
+    kk = kernel.shape[0]
+    pad = kk // 2
+    padded = jnp.pad(img, pad)
+    acc = jnp.zeros((h, w), dtype=img.dtype)
+    for dy in range(kk):
+        for dx in range(kk):
+            acc = acc + kernel[dy, dx] * padded[dy : dy + h, dx : dx + w]
+    return (acc,)
+
+
+def dsp_conv2d(img, kernel):
+    return (k_conv2d.conv2d(img, kernel),)
+
+
+# --------------------------------------------------------------------------
+# dotprod
+# --------------------------------------------------------------------------
+
+def naive_dotprod(x, y):
+    return (jnp.dot(x, y),)
+
+
+def dsp_dotprod(x, y):
+    return (k_dotprod.dotprod(x, y),)
+
+
+# --------------------------------------------------------------------------
+# matmul
+# --------------------------------------------------------------------------
+
+def naive_matmul(a, b):
+    # einsum keeps the naive build on a (slightly) different lowering path
+    # than the matmul_ref oracle.
+    return (jnp.einsum("ik,kj->ij", a, b),)
+
+
+def dsp_matmul(a, b):
+    return (k_matmul.matmul(a, b),)
+
+
+def dsp_matmul_b8(a, b):
+    """L1 ablation build: 8x8 tiles (under-feeds the vector unit)."""
+    return (k_matmul.matmul(a, b, block=8),)
+
+
+def dsp_matmul_b32(a, b):
+    """L1 ablation build: 32x32 tiles (3 x 4 KiB per tile set)."""
+    return (k_matmul.matmul(a, b, block=32),)
+
+
+# --------------------------------------------------------------------------
+# pattern
+# --------------------------------------------------------------------------
+
+def naive_pattern(seq, pat):
+    return (ref.pattern_ref(seq, pat),)
+
+
+def dsp_pattern(seq, pat):
+    return (k_pattern.pattern_count(seq, pat),)
+
+
+# --------------------------------------------------------------------------
+# fft
+# --------------------------------------------------------------------------
+
+def naive_fft(re, im):
+    return (ref.fft_ref(re, im),)
+
+
+def dsp_fft(re, im):
+    return (k_fft.fft(re, im),)
+
+
+VARIANTS = {
+    "complement": {"naive": naive_complement, "dsp": dsp_complement},
+    "conv2d": {"naive": naive_conv2d, "dsp": dsp_conv2d},
+    "dotprod": {"naive": naive_dotprod, "dsp": dsp_dotprod},
+    "matmul": {"naive": naive_matmul, "dsp": dsp_matmul},
+    "pattern": {"naive": naive_pattern, "dsp": dsp_pattern},
+    "fft": {"naive": naive_fft, "dsp": dsp_fft},
+}

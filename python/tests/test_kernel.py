@@ -1,0 +1,272 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal of the repo.
+
+Every L1 Pallas kernel ("DSP build") and every naive jnp variant ("ARM
+build") must agree with the independent pure-jnp oracle in
+``compile.kernels.ref``.  Hypothesis sweeps sizes (within each kernel's
+divisibility constraints) and input values.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.complement import CHUNK as COMP_CHUNK
+from compile.kernels.dotprod import CHUNK as DOT_CHUNK
+from compile.kernels.pattern import CHUNK as PAT_CHUNK
+
+SETTINGS = settings(max_examples=20, deadline=None)
+
+
+def _ints(rng, lo, hi, shape):
+    return jnp.asarray(rng.integers(lo, hi, shape), dtype=jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# complement
+# --------------------------------------------------------------------------
+
+class TestComplement:
+    @SETTINGS
+    @given(seed=st.integers(0, 2**32 - 1), chunks=st.integers(1, 4))
+    def test_dsp_matches_ref(self, seed, chunks):
+        rng = np.random.default_rng(seed)
+        seq = _ints(rng, 0, 4, COMP_CHUNK * chunks)
+        got = model.dsp_complement(seq)[0]
+        assert bool(jnp.all(got == ref.complement_ref(seq)))
+
+    def test_naive_matches_ref(self):
+        rng = np.random.default_rng(7)
+        seq = _ints(rng, 0, 4, COMP_CHUNK)
+        assert bool(
+            jnp.all(model.naive_complement(seq)[0] == ref.complement_ref(seq))
+        )
+
+    def test_involution(self):
+        """complement(complement(x)) == x — a paper-level invariant."""
+        rng = np.random.default_rng(3)
+        seq = _ints(rng, 0, 4, COMP_CHUNK)
+        twice = model.dsp_complement(model.dsp_complement(seq)[0])[0]
+        assert bool(jnp.all(twice == seq))
+
+    def test_rejects_unaligned(self):
+        with pytest.raises(AssertionError):
+            model.dsp_complement(jnp.zeros(COMP_CHUNK + 1, dtype=jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# conv2d
+# --------------------------------------------------------------------------
+
+class TestConv2d:
+    @SETTINGS
+    @given(
+        seed=st.integers(0, 2**32 - 1),
+        h=st.sampled_from([16, 32, 48, 128]),
+        w=st.sampled_from([16, 33, 64, 128]),
+        kk=st.sampled_from([1, 3, 5]),
+    )
+    def test_dsp_matches_ref(self, seed, h, w, kk):
+        rng = np.random.default_rng(seed)
+        img = _ints(rng, -8, 8, (h, w))
+        ker = _ints(rng, -4, 4, (kk, kk))
+        got = model.dsp_conv2d(img, ker)[0]
+        assert bool(jnp.all(got == ref.conv2d_ref(img, ker)))
+
+    @SETTINGS
+    @given(seed=st.integers(0, 2**32 - 1), kk=st.sampled_from([3, 5]))
+    def test_naive_matches_ref(self, seed, kk):
+        rng = np.random.default_rng(seed)
+        img = _ints(rng, -8, 8, (32, 32))
+        ker = _ints(rng, -4, 4, (kk, kk))
+        got = model.naive_conv2d(img, ker)[0]
+        assert bool(jnp.all(got == ref.conv2d_ref(img, ker)))
+
+    def test_identity_kernel(self):
+        rng = np.random.default_rng(1)
+        img = _ints(rng, -8, 8, (32, 32))
+        ker = jnp.zeros((3, 3), dtype=jnp.int32).at[1, 1].set(1)
+        assert bool(jnp.all(model.dsp_conv2d(img, ker)[0] == img))
+
+    def test_linearity(self):
+        """conv(a*img, k) == a*conv(img, k)."""
+        rng = np.random.default_rng(2)
+        img = _ints(rng, -8, 8, (32, 32))
+        ker = _ints(rng, -4, 4, (3, 3))
+        assert bool(
+            jnp.all(
+                model.dsp_conv2d(3 * img, ker)[0]
+                == 3 * model.dsp_conv2d(img, ker)[0]
+            )
+        )
+
+
+# --------------------------------------------------------------------------
+# dotprod
+# --------------------------------------------------------------------------
+
+class TestDotprod:
+    @SETTINGS
+    @given(seed=st.integers(0, 2**32 - 1), chunks=st.integers(1, 4))
+    def test_dsp_matches_ref(self, seed, chunks):
+        rng = np.random.default_rng(seed)
+        x = _ints(rng, -8, 8, DOT_CHUNK * chunks)
+        y = _ints(rng, -8, 8, DOT_CHUNK * chunks)
+        assert int(model.dsp_dotprod(x, y)[0]) == int(ref.dotprod_ref(x, y))
+
+    def test_naive_matches_ref(self):
+        rng = np.random.default_rng(11)
+        x = _ints(rng, -8, 8, DOT_CHUNK)
+        y = _ints(rng, -8, 8, DOT_CHUNK)
+        assert int(model.naive_dotprod(x, y)[0]) == int(ref.dotprod_ref(x, y))
+
+    def test_orthogonal(self):
+        x = jnp.zeros(DOT_CHUNK, dtype=jnp.int32).at[0].set(5)
+        y = jnp.zeros(DOT_CHUNK, dtype=jnp.int32).at[1].set(7)
+        assert int(model.dsp_dotprod(x, y)[0]) == 0
+
+
+# --------------------------------------------------------------------------
+# matmul
+# --------------------------------------------------------------------------
+
+class TestMatmul:
+    @SETTINGS
+    @given(seed=st.integers(0, 2**32 - 1), n=st.sampled_from([16, 32, 64, 128]))
+    def test_dsp_matches_ref(self, seed, n):
+        rng = np.random.default_rng(seed)
+        a = _ints(rng, -8, 8, (n, n))
+        b = _ints(rng, -8, 8, (n, n))
+        got = model.dsp_matmul(a, b)[0]
+        assert bool(jnp.all(got == ref.matmul_ref(a, b)))
+
+    def test_rectangular(self):
+        rng = np.random.default_rng(5)
+        a = _ints(rng, -8, 8, (32, 64))
+        b = _ints(rng, -8, 8, (64, 16))
+        got = model.dsp_matmul(a, b)[0]
+        assert bool(jnp.all(got == ref.matmul_ref(a, b)))
+
+    def test_identity(self):
+        rng = np.random.default_rng(6)
+        a = _ints(rng, -8, 8, (32, 32))
+        eye = jnp.eye(32, dtype=jnp.int32)
+        assert bool(jnp.all(model.dsp_matmul(a, eye)[0] == a))
+
+    def test_naive_matches_ref(self):
+        rng = np.random.default_rng(12)
+        a = _ints(rng, -8, 8, (64, 64))
+        b = _ints(rng, -8, 8, (64, 64))
+        assert bool(jnp.all(model.naive_matmul(a, b)[0] == ref.matmul_ref(a, b)))
+
+    def test_ablation_blocks_match_ref(self):
+        """The L1 tile-size ablation builds stay correct."""
+        rng = np.random.default_rng(13)
+        a = _ints(rng, -8, 8, (64, 64))
+        b = _ints(rng, -8, 8, (64, 64))
+        want = ref.matmul_ref(a, b)
+        for fn in [model.dsp_matmul_b8, model.dsp_matmul_b32]:
+            assert bool(jnp.all(fn(a, b)[0] == want)), fn.__name__
+
+    def test_small_sizes_clamp_the_block(self):
+        # Sizes below DEFAULT_BLOCK clamp the tile (17 -> 17x17 tiles).
+        rng = np.random.default_rng(8)
+        a = _ints(rng, -8, 8, (17, 17))
+        b = _ints(rng, -8, 8, (17, 17))
+        assert bool(jnp.all(model.dsp_matmul(a, b)[0] == ref.matmul_ref(a, b)))
+
+    def test_rejects_unaligned(self):
+        # 40 is not a multiple of the clamped 32-tile.
+        with pytest.raises(AssertionError):
+            model.dsp_matmul(
+                jnp.zeros((40, 40), dtype=jnp.int32),
+                jnp.zeros((40, 40), dtype=jnp.int32),
+            )
+
+
+# --------------------------------------------------------------------------
+# pattern
+# --------------------------------------------------------------------------
+
+class TestPattern:
+    @SETTINGS
+    @given(
+        seed=st.integers(0, 2**32 - 1),
+        chunks=st.integers(1, 3),
+        plen=st.sampled_from([2, 4, 8, 16]),
+    )
+    def test_dsp_matches_ref(self, seed, chunks, plen):
+        rng = np.random.default_rng(seed)
+        seq = _ints(rng, 0, 4, PAT_CHUNK * chunks)
+        pat = _ints(rng, 0, 4, plen)
+        assert int(model.dsp_pattern(seq, pat)[0]) == int(ref.pattern_ref(seq, pat))
+
+    def test_known_count(self):
+        # 'ACGT' repeated: pattern 'ACGT' occurs at every 4th position.
+        n = PAT_CHUNK
+        seq = jnp.tile(jnp.arange(4, dtype=jnp.int32), n // 4)
+        pat = jnp.arange(4, dtype=jnp.int32)
+        # Starts 0,4,...; last full window starts at n-4.
+        assert int(model.dsp_pattern(seq, pat)[0]) == n // 4
+
+    def test_no_match(self):
+        seq = jnp.zeros(PAT_CHUNK, dtype=jnp.int32)
+        pat = jnp.ones(8, dtype=jnp.int32)
+        assert int(model.dsp_pattern(seq, pat)[0]) == 0
+
+    def test_tail_window_not_counted(self):
+        """A prefix of the pattern at the very end must not count."""
+        seq = jnp.zeros(PAT_CHUNK, dtype=jnp.int32).at[-4:].set(1)
+        pat = jnp.ones(8, dtype=jnp.int32)
+        assert int(model.dsp_pattern(seq, pat)[0]) == int(ref.pattern_ref(seq, pat))
+
+
+# --------------------------------------------------------------------------
+# fft
+# --------------------------------------------------------------------------
+
+class TestFft:
+    @SETTINGS
+    @given(
+        seed=st.integers(0, 2**32 - 1),
+        n=st.sampled_from([2, 8, 64, 256, 1024]),
+    )
+    def test_dsp_matches_ref(self, seed, n):
+        rng = np.random.default_rng(seed)
+        re = jnp.asarray(rng.normal(size=n), dtype=jnp.float32)
+        im = jnp.asarray(rng.normal(size=n), dtype=jnp.float32)
+        got = model.dsp_fft(re, im)[0]
+        want = ref.fft_ref(re, im)
+        np.testing.assert_allclose(got, want, atol=1e-3 * np.sqrt(n))
+
+    def test_impulse(self):
+        """FFT of a unit impulse is all-ones."""
+        n = 64
+        re = jnp.zeros(n, dtype=jnp.float32).at[0].set(1.0)
+        im = jnp.zeros(n, dtype=jnp.float32)
+        got = model.dsp_fft(re, im)[0]
+        np.testing.assert_allclose(got[0], np.ones(n), atol=1e-5)
+        np.testing.assert_allclose(got[1], np.zeros(n), atol=1e-5)
+
+    def test_parseval(self):
+        """sum |x|^2 == sum |X|^2 / N."""
+        rng = np.random.default_rng(9)
+        n = 256
+        re = jnp.asarray(rng.normal(size=n), dtype=jnp.float32)
+        im = jnp.asarray(rng.normal(size=n), dtype=jnp.float32)
+        got = model.dsp_fft(re, im)[0]
+        t = float(jnp.sum(re**2 + im**2))
+        f = float(jnp.sum(got[0] ** 2 + got[1] ** 2)) / n
+        np.testing.assert_allclose(t, f, rtol=1e-4)
+
+    def test_rejects_non_pow2(self):
+        with pytest.raises(AssertionError):
+            model.dsp_fft(
+                jnp.zeros(100, dtype=jnp.float32),
+                jnp.zeros(100, dtype=jnp.float32),
+            )

@@ -1,0 +1,178 @@
+//! Fig 2 regeneration.
+//!
+//! (a) Log-scale execution times of all six algorithms, ARM vs DSP —
+//!     the same data as Table 1, rendered as series.
+//! (b) Matmul execution time vs matrix size: the DSP curve is flat
+//!     (~100 ms setup) until compute dominates; the ARM curve crosses it
+//!     around N ≈ 75–100, after which the DSP wins by up to ~32x.
+
+use crate::coordinator::decision_tree::{DecisionTree, Observation};
+use crate::error::Result;
+use crate::metrics::Table;
+use crate::platform::{Soc, TargetId};
+use crate::sim::SimRng;
+use crate::workloads::{matmul_scale, WorkloadKind};
+
+use super::table1::{paper_values, table1};
+
+/// Fig 2a: (algorithm, arm_ms, dsp_ms) series, log-scale-ready.
+pub fn fig2a(samples: usize) -> Result<Table> {
+    let rows = table1(samples, false)?;
+    let mut t = Table::new(
+        "Fig 2(a) — execution time (ms, log scale): ARM vs DSP-under-VPE",
+        &["Algorithm", "ARM ms", "DSP ms", "log10(ARM)", "log10(DSP)", "paper ARM", "paper DSP"],
+    );
+    for r in &rows {
+        let (pn, _, pv, _, _) = paper_values(r.kind);
+        t.push_row(vec![
+            r.kind.name().into(),
+            format!("{:.1}", r.normal_ms),
+            format!("{:.1}", r.vpe_ms),
+            format!("{:.2}", r.normal_ms.log10()),
+            format!("{:.2}", r.vpe_ms.log10()),
+            format!("{pn:.1}"),
+            format!("{pv:.1}"),
+        ]);
+    }
+    Ok(t)
+}
+
+/// One point of the Fig 2b sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig2bPoint {
+    pub n: u64,
+    pub arm_ms: f64,
+    pub dsp_ms: f64,
+}
+
+impl Fig2bPoint {
+    pub fn winner(&self) -> TargetId {
+        if self.dsp_ms < self.arm_ms {
+            TargetId::C64xDsp
+        } else {
+            TargetId::ArmCore
+        }
+    }
+}
+
+/// The default size sweep (paper's figure spans ~10..500).
+pub fn default_sizes() -> Vec<u64> {
+    vec![10, 16, 25, 32, 40, 50, 64, 75, 91, 100, 128, 160, 200, 256, 320, 400, 500]
+}
+
+/// Fig 2b: matmul ARM-vs-DSP times across sizes (sim, with measurement
+/// noise), plus the learned decision-tree crossover.
+pub fn fig2b(sizes: &[u64], noise_samples: usize, seed: u64) -> (Vec<Fig2bPoint>, DecisionTree) {
+    let soc = Soc::dm3730();
+    let mut rng = SimRng::seeded(seed);
+    let mut points = Vec::new();
+    let mut observations = Vec::new();
+    for &n in sizes {
+        let scale = matmul_scale(n);
+        let arm_base = soc
+            .call_scaled_ns(WorkloadKind::Matmul, &scale, TargetId::ArmCore)
+            .expect("arm is healthy") as f64;
+        let dsp_base = soc
+            .call_scaled_ns(WorkloadKind::Matmul, &scale, TargetId::C64xDsp)
+            .expect("dsp is healthy") as f64;
+        let mut arm_ms = 0.0;
+        let mut dsp_ms = 0.0;
+        for _ in 0..noise_samples.max(1) {
+            let a = arm_base * (1.0 + 0.008 * rng.standard_normal());
+            let d = dsp_base * (1.0 + 0.008 * rng.standard_normal());
+            arm_ms += a / 1e6;
+            dsp_ms += d / 1e6;
+            observations.push(Observation {
+                size: n as f64,
+                best: if d < a { TargetId::C64xDsp } else { TargetId::ArmCore },
+            });
+        }
+        arm_ms /= noise_samples.max(1) as f64;
+        dsp_ms /= noise_samples.max(1) as f64;
+        points.push(Fig2bPoint { n, arm_ms, dsp_ms });
+    }
+    // The paper's proposed decision-tree learner (§5.2) fitted on the
+    // observed (size, winner) pairs.
+    let tree = DecisionTree::fit(&observations, 4, 3);
+    (points, tree)
+}
+
+/// Analytic crossover of the model (where the curves intersect).
+pub fn analytic_crossover() -> f64 {
+    let soc = Soc::dm3730();
+    let r = soc.cost.rate(WorkloadKind::Matmul);
+    let setup_ns = soc.transfer.dispatch_ns(48) as f64;
+    // n^3 * (arm - dsp) = setup  =>  n = cbrt(setup / delta)
+    (setup_ns / (r.arm_ns_per_item - r.dsp_ns_per_item)).cbrt()
+}
+
+/// Render the sweep as a table (with the paper's qualitative markers).
+pub fn render_fig2b(points: &[Fig2bPoint], tree: &DecisionTree) -> Table {
+    let mut t = Table::new(
+        "Fig 2(b) — matmul time vs size (ms, log scale)",
+        &["N", "ARM ms", "DSP ms", "winner", "tree prediction"],
+    );
+    for p in points {
+        t.push_row(vec![
+            p.n.to_string(),
+            format!("{:.1}", p.arm_ms),
+            format!("{:.1}", p.dsp_ms),
+            p.winner().name().into(),
+            tree.predict(p.n as f64).name().into(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dsp_curve_is_flat_for_small_sizes() {
+        let (points, _) = fig2b(&[10, 16, 25, 32], 3, 1);
+        // All small sizes: DSP ~ 100 ms setup-dominated, ARM wins.
+        for p in &points {
+            assert!((p.dsp_ms - 100.0).abs() < 10.0, "N={} dsp {}", p.n, p.dsp_ms);
+            assert_eq!(p.winner(), TargetId::ArmCore, "N={}", p.n);
+        }
+    }
+
+    #[test]
+    fn dsp_wins_big_sizes_by_paper_margin() {
+        let (points, _) = fig2b(&[500], 3, 1);
+        let p = points[0];
+        assert_eq!(p.winner(), TargetId::C64xDsp);
+        let speedup = p.arm_ms / p.dsp_ms;
+        assert!((speedup - 31.9).abs() < 3.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn crossover_falls_in_the_paper_band() {
+        // Paper: "it is not worth executing the operations on the DSP"
+        // below ~75x75; our calibrated model crosses at ~92 (see
+        // EXPERIMENTS.md discussion) — assert the band 60..120.
+        let c = analytic_crossover();
+        assert!((60.0..120.0).contains(&c), "crossover {c}");
+    }
+
+    #[test]
+    fn decision_tree_learns_the_crossover() {
+        let (_, tree) = fig2b(&default_sizes(), 5, 2);
+        let learned = tree.root_threshold().expect("tree must split");
+        let analytic = analytic_crossover();
+        assert!(
+            (learned - analytic).abs() < 30.0,
+            "learned {learned} vs analytic {analytic}"
+        );
+        // Predictions agree with the physics far from the boundary.
+        assert_eq!(tree.predict(16.0), TargetId::ArmCore);
+        assert_eq!(tree.predict(400.0), TargetId::C64xDsp);
+    }
+
+    #[test]
+    fn fig2a_table_has_all_algorithms() {
+        let t = fig2a(6).unwrap();
+        assert_eq!(t.rows.len(), 6);
+    }
+}

@@ -1,0 +1,10 @@
+//! Regeneration harness for every table and figure in the paper's
+//! evaluation (§5): Table 1, Fig 2(a), Fig 2(b), Fig 3.
+
+pub mod fig2;
+pub mod fig3;
+pub mod table1;
+
+pub use fig2::{fig2a, fig2b, Fig2bPoint};
+pub use fig3::{fig3, Fig3Summary};
+pub use table1::{table1, Table1Row};

@@ -1,0 +1,163 @@
+//! Configuration files for the coordinator (JSON), so deployments tune
+//! VPE without recompiling — sampler overhead, detector thresholds,
+//! policy windows, noise model.
+//!
+//! Every key is optional; omitted keys keep [`VpeConfig::default`]
+//! values.  See `examples/vpe.config.json` for a full document.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+use super::policy::BlindOffloadConfig;
+use super::vpe::VpeConfig;
+
+fn f64_of(j: &Json, key: &str) -> Result<Option<f64>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| Error::Config(format!("'{key}' must be a number"))),
+    }
+}
+
+fn u64_of(j: &Json, key: &str) -> Result<Option<u64>> {
+    Ok(f64_of(j, key)?.map(|v| v as u64))
+}
+
+fn bool_of(j: &Json, key: &str) -> Result<Option<bool>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(Json::Bool(b)) => Ok(Some(*b)),
+        Some(_) => Err(Error::Config(format!("'{key}' must be a boolean"))),
+    }
+}
+
+/// Apply a parsed config document on top of `base`.
+pub fn apply(base: VpeConfig, doc: &Json) -> Result<VpeConfig> {
+    let mut cfg = base;
+    if let Some(v) = doc.get("artifacts_dir") {
+        cfg.artifacts_dir = match v {
+            Json::Null => None,
+            Json::Str(s) => Some(PathBuf::from(s)),
+            _ => return Err(Error::Config("'artifacts_dir' must be a string or null".into())),
+        };
+    }
+    if let Some(v) = u64_of(doc, "seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = bool_of(doc, "verify_outputs")? {
+        cfg.verify_outputs = v;
+    }
+    if let Some(v) = f64_of(doc, "exec_noise_frac")? {
+        cfg.exec_noise_frac = v;
+    }
+    if let Some(s) = doc.get("sampler") {
+        if let Some(v) = bool_of(s, "enabled")? {
+            cfg.sampler.enabled = v;
+        }
+        if let Some(v) = f64_of(s, "overhead_frac")? {
+            cfg.sampler.overhead_frac = v;
+        }
+        if let Some(v) = u64_of(s, "analysis_period")? {
+            cfg.sampler.analysis_period = v;
+        }
+        if let Some(v) = f64_of(s, "burst_mean_ms")? {
+            cfg.sampler.burst_mean_ns = v * 1e6;
+        }
+        if let Some(v) = f64_of(s, "burst_std_ms")? {
+            cfg.sampler.burst_std_ns = v * 1e6;
+        }
+    }
+    if let Some(d) = doc.get("detector") {
+        if let Some(v) = u64_of(d, "min_samples")? {
+            cfg.detector.min_samples = v;
+        }
+        if let Some(v) = f64_of(d, "share_threshold")? {
+            cfg.detector.share_threshold = v;
+        }
+    }
+    if let Some(p) = doc.get("policy") {
+        let mut b = BlindOffloadConfig::default();
+        if let Some(v) = u64_of(p, "observe_window")? {
+            b.observe_window = v;
+        }
+        if let Some(v) = f64_of(p, "revert_margin")? {
+            b.revert_margin = v;
+        }
+        b.retry_after = match p.get("retry_after") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_f64()
+                    .map(|x| x as u64)
+                    .ok_or_else(|| Error::Config("'retry_after' must be a number".into()))?,
+            ),
+        };
+        cfg.blind = b;
+    }
+    cfg.sampler.validate()?;
+    Ok(cfg)
+}
+
+/// Load a config file on top of the defaults.
+pub fn load(path: &Path) -> Result<VpeConfig> {
+    let doc = json::parse(&std::fs::read_to_string(path)?)?;
+    apply(VpeConfig::default(), &doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document_overrides_everything() {
+        let doc = json::parse(
+            r#"{
+            "artifacts_dir": null,
+            "seed": 7,
+            "verify_outputs": false,
+            "exec_noise_frac": 0.02,
+            "sampler": {"enabled": true, "overhead_frac": 0.10,
+                        "analysis_period": 4, "burst_mean_ms": 50, "burst_std_ms": 10},
+            "detector": {"min_samples": 3, "share_threshold": 0.25},
+            "policy": {"observe_window": 7, "revert_margin": 0.9, "retry_after": 100}
+        }"#,
+        )
+        .unwrap();
+        let cfg = apply(VpeConfig::default(), &doc).unwrap();
+        assert_eq!(cfg.artifacts_dir, None);
+        assert_eq!(cfg.seed, 7);
+        assert!(!cfg.verify_outputs);
+        assert_eq!(cfg.exec_noise_frac, 0.02);
+        assert_eq!(cfg.sampler.overhead_frac, 0.10);
+        assert_eq!(cfg.sampler.analysis_period, 4);
+        assert_eq!(cfg.sampler.burst_mean_ns, 50e6);
+        assert_eq!(cfg.detector.min_samples, 3);
+        assert_eq!(cfg.blind.observe_window, 7);
+        assert_eq!(cfg.blind.retry_after, Some(100));
+    }
+
+    #[test]
+    fn empty_document_keeps_defaults() {
+        let cfg = apply(VpeConfig::default(), &json::parse("{}").unwrap()).unwrap();
+        let d = VpeConfig::default();
+        assert_eq!(cfg.seed, d.seed);
+        assert_eq!(cfg.sampler.analysis_period, d.sampler.analysis_period);
+    }
+
+    #[test]
+    fn paper_overhead_bound_enforced_through_config() {
+        let doc = json::parse(r#"{"sampler": {"overhead_frac": 0.5}}"#).unwrap();
+        assert!(apply(VpeConfig::default(), &doc).is_err());
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let doc = json::parse(r#"{"seed": "not-a-number"}"#).unwrap();
+        assert!(apply(VpeConfig::default(), &doc).is_err());
+        let doc = json::parse(r#"{"verify_outputs": 1}"#).unwrap();
+        assert!(apply(VpeConfig::default(), &doc).is_err());
+    }
+}

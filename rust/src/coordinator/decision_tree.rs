@@ -1,0 +1,209 @@
+//! Size→target decision-tree learner — the paper's proposed extension.
+//!
+//! §5.2: "we could easily, for instance, learn automatically a
+//! correlation between the size of the matrix passed as a parameter and
+//! the performance achieved — this could [be achieved] using a simple
+//! decision tree [19] —, and ground future decisions upon this
+//! criteria."  This module implements that future-work item: a 1-D CART
+//! classifier over the workload-size feature, trained on (size, winner)
+//! observations collected at run time, used by the Fig 2b example to
+//! dispatch matmuls by size without re-measuring.
+
+use crate::platform::TargetId;
+
+/// One labeled observation: workload size and which target won.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Observation {
+    pub size: f64,
+    pub best: TargetId,
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf { best: TargetId, confidence: f64 },
+    Split { threshold: f64, left: Box<Node>, right: Box<Node> },
+}
+
+/// A fitted decision tree.
+#[derive(Debug, Clone)]
+pub struct DecisionTree {
+    root: Node,
+    n_train: usize,
+}
+
+fn majority(samples: &[Observation]) -> (TargetId, f64) {
+    let dsp = samples.iter().filter(|o| o.best == TargetId::C64xDsp).count();
+    let n = samples.len().max(1);
+    if dsp * 2 >= n {
+        (TargetId::C64xDsp, dsp as f64 / n as f64)
+    } else {
+        (TargetId::ArmCore, (n - dsp) as f64 / n as f64)
+    }
+}
+
+fn gini(samples: &[Observation]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let p = samples.iter().filter(|o| o.best == TargetId::C64xDsp).count() as f64
+        / samples.len() as f64;
+    2.0 * p * (1.0 - p)
+}
+
+fn build(samples: &mut [Observation], depth: u32, max_depth: u32, min_leaf: usize) -> Node {
+    let (best, confidence) = majority(samples);
+    if depth >= max_depth || samples.len() < 2 * min_leaf || gini(samples) == 0.0 {
+        return Node::Leaf { best, confidence };
+    }
+    samples.sort_by(|a, b| a.size.total_cmp(&b.size));
+    // Best split by weighted Gini over candidate midpoints.
+    let mut best_split: Option<(f64, usize)> = None;
+    let mut best_score = f64::INFINITY;
+    for i in min_leaf..=(samples.len() - min_leaf) {
+        if i == 0 || i == samples.len() || samples[i - 1].size == samples[i].size {
+            continue;
+        }
+        let (l, r) = samples.split_at(i);
+        let score = (l.len() as f64 * gini(l) + r.len() as f64 * gini(r))
+            / samples.len() as f64;
+        if score < best_score {
+            best_score = score;
+            best_split = Some(((samples[i - 1].size + samples[i].size) / 2.0, i));
+        }
+    }
+    match best_split {
+        Some((threshold, i)) if best_score < gini(samples) - 1e-12 => {
+            let (l, r) = samples.split_at_mut(i);
+            Node::Split {
+                threshold,
+                left: Box::new(build(l, depth + 1, max_depth, min_leaf)),
+                right: Box::new(build(r, depth + 1, max_depth, min_leaf)),
+            }
+        }
+        _ => Node::Leaf { best, confidence },
+    }
+}
+
+impl DecisionTree {
+    /// Fit on observations.  `max_depth` bounds the tree, `min_leaf` the
+    /// smallest leaf.
+    pub fn fit(observations: &[Observation], max_depth: u32, min_leaf: usize) -> Self {
+        let mut s = observations.to_vec();
+        let root = if s.is_empty() {
+            // No data: stay local (never offload blindly without evidence).
+            Node::Leaf { best: TargetId::ArmCore, confidence: 0.0 }
+        } else {
+            build(&mut s, 0, max_depth, min_leaf.max(1))
+        };
+        DecisionTree { root, n_train: observations.len() }
+    }
+
+    /// Predicted best target for a workload of `size`.
+    pub fn predict(&self, size: f64) -> TargetId {
+        self.predict_with_confidence(size).0
+    }
+
+    /// Prediction plus the winning leaf's training purity.
+    pub fn predict_with_confidence(&self, size: f64) -> (TargetId, f64) {
+        let mut node = &self.root;
+        loop {
+            match node {
+                Node::Leaf { best, confidence } => return (*best, *confidence),
+                Node::Split { threshold, left, right } => {
+                    node = if size <= *threshold { left } else { right };
+                }
+            }
+        }
+    }
+
+    /// The first split threshold, if the tree learned one — for matmul
+    /// this is the learned Fig 2b crossover size.
+    pub fn root_threshold(&self) -> Option<f64> {
+        match &self.root {
+            Node::Split { threshold, .. } => Some(*threshold),
+            Node::Leaf { .. } => None,
+        }
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.n_train
+    }
+
+    /// Training accuracy (sanity metric).
+    pub fn accuracy(&self, observations: &[Observation]) -> f64 {
+        if observations.is_empty() {
+            return 1.0;
+        }
+        let ok = observations.iter().filter(|o| self.predict(o.size) == o.best).count();
+        ok as f64 / observations.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn threshold_data(cut: f64, n: usize) -> Vec<Observation> {
+        (0..n)
+            .map(|i| {
+                let size = i as f64 * 200.0 / n as f64;
+                Observation {
+                    size,
+                    best: if size <= cut { TargetId::ArmCore } else { TargetId::C64xDsp },
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn learns_a_clean_threshold() {
+        let data = threshold_data(75.0, 100);
+        let t = DecisionTree::fit(&data, 4, 2);
+        assert_eq!(t.accuracy(&data), 1.0);
+        let learned = t.root_threshold().unwrap();
+        assert!((learned - 75.0).abs() < 5.0, "learned {learned}");
+        assert_eq!(t.predict(10.0), TargetId::ArmCore);
+        assert_eq!(t.predict(150.0), TargetId::C64xDsp);
+    }
+
+    #[test]
+    fn pure_data_yields_a_leaf() {
+        let data: Vec<_> = (0..20)
+            .map(|i| Observation { size: i as f64, best: TargetId::ArmCore })
+            .collect();
+        let t = DecisionTree::fit(&data, 4, 2);
+        assert!(t.root_threshold().is_none());
+        assert_eq!(t.predict(1e9), TargetId::ArmCore);
+    }
+
+    #[test]
+    fn empty_data_defaults_local() {
+        let t = DecisionTree::fit(&[], 4, 2);
+        assert_eq!(t.predict(42.0), TargetId::ArmCore);
+    }
+
+    #[test]
+    fn tolerates_label_noise() {
+        let mut data = threshold_data(75.0, 200);
+        // Flip 5% of labels.
+        for i in (0..data.len()).step_by(20) {
+            data[i].best = match data[i].best {
+                TargetId::ArmCore => TargetId::C64xDsp,
+                TargetId::C64xDsp => TargetId::ArmCore,
+            };
+        }
+        let t = DecisionTree::fit(&data, 3, 5);
+        assert!(t.accuracy(&data) > 0.9);
+        // Far from the boundary the prediction is still right.
+        assert_eq!(t.predict(5.0), TargetId::ArmCore);
+        assert_eq!(t.predict(195.0), TargetId::C64xDsp);
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let data = threshold_data(75.0, 100);
+        let t = DecisionTree::fit(&data, 0, 1);
+        // Depth 0: a single leaf.
+        assert!(t.root_threshold().is_none());
+    }
+}

@@ -1,0 +1,113 @@
+//! Structured event log: every decision VPE takes is recorded with its
+//! simulated timestamp, so tests and examples can assert on the story
+//! ("offloaded at iteration k, reverted after the observation window").
+
+use crate::jit::module::FunctionId;
+use crate::platform::TargetId;
+
+/// Why a function was sent back to the host.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RevertReason {
+    /// The remote target was measurably slower (the paper's FFT case).
+    SlowerOnRemote { local_ns: f64, remote_ns: f64 },
+    /// The remote target failed at run time.
+    TargetFailed,
+    /// Operator/manual request.
+    Manual,
+}
+
+/// One event in VPE's life.
+#[derive(Debug, Clone, PartialEq)]
+pub enum VpeEvent {
+    FunctionRegistered { function: FunctionId, name: String },
+    ModuleFinalized { functions: usize },
+    HotspotDetected { function: FunctionId, cycle_share: f64 },
+    Offloaded { function: FunctionId, to: TargetId },
+    Reverted { function: FunctionId, reason: RevertReason },
+    TargetFailedOver { function: FunctionId, target: TargetId },
+    OutputMismatch { function: FunctionId, target: TargetId },
+    AnalysisBurst { cost_ns: u64 },
+}
+
+/// Append-only log of (sim-time ns, event).
+#[derive(Debug, Clone, Default)]
+pub struct EventLog {
+    entries: Vec<(u64, VpeEvent)>,
+}
+
+impl EventLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, at_ns: u64, event: VpeEvent) {
+        self.entries.push((at_ns, event));
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &(u64, VpeEvent)> {
+        self.entries.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// All offload events, in order.
+    pub fn offloads(&self) -> Vec<(u64, FunctionId, TargetId)> {
+        self.entries
+            .iter()
+            .filter_map(|(t, e)| match e {
+                VpeEvent::Offloaded { function, to } => Some((*t, *function, *to)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// All revert events, in order.
+    pub fn reverts(&self) -> Vec<(u64, FunctionId, RevertReason)> {
+        self.entries
+            .iter()
+            .filter_map(|(t, e)| match e {
+                VpeEvent::Reverted { function, reason } => Some((*t, *function, *reason)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Render a human-readable trace.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for (t, e) in &self.entries {
+            out.push_str(&format!("[{:>10.3} ms] {:?}\n", *t as f64 / 1e6, e));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_preserves_order_and_filters() {
+        let mut log = EventLog::new();
+        let f = FunctionId(0);
+        log.push(10, VpeEvent::HotspotDetected { function: f, cycle_share: 0.9 });
+        log.push(20, VpeEvent::Offloaded { function: f, to: TargetId::C64xDsp });
+        log.push(
+            30,
+            VpeEvent::Reverted {
+                function: f,
+                reason: RevertReason::SlowerOnRemote { local_ns: 1.0, remote_ns: 2.0 },
+            },
+        );
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.offloads(), vec![(20, f, TargetId::C64xDsp)]);
+        assert_eq!(log.reverts().len(), 1);
+        assert!(log.to_text().contains("Offloaded"));
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 — the VPE coordinator (the paper's contribution).
+
+pub mod config;
+pub mod decision_tree;
+pub mod events;
+pub mod policies_ext;
+pub mod policy;
+pub mod scheduler;
+pub mod trace;
+pub mod vpe;
+
+pub use events::{EventLog, VpeEvent};
+pub use policy::{BlindOffloadPolicy, OffloadPolicy, PolicyAction};
+pub use vpe::{CallRecord, Vpe, VpeConfig};

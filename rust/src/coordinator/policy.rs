@@ -1,0 +1,428 @@
+//! Off-load policies.
+//!
+//! The paper's strategy (§3.1) is deliberately simple: *blind
+//! off-loading* — move the hottest function to the DSP, watch what
+//! happens, and revert if it turned out slower ("we can easily detect a
+//! mediocre performance on the remote unit and reverse our decision").
+//! [`BlindOffloadPolicy`] implements exactly that lifecycle; the other
+//! policies are baselines for the benches and ablations.
+
+use std::collections::HashMap;
+
+use crate::jit::module::FunctionId;
+use crate::platform::TargetId;
+use crate::profiler::hotspot::Hotspot;
+use crate::profiler::sampler::FunctionProfile;
+
+use super::events::RevertReason;
+
+/// Everything a policy may look at when deciding about one function.
+#[derive(Debug)]
+pub struct PolicyCtx<'a> {
+    pub function: FunctionId,
+    pub profile: &'a FunctionProfile,
+    /// Where the wrapper currently points.
+    pub current: TargetId,
+    /// The detector's current nomination, if it is this function.
+    pub is_hotspot: Option<Hotspot>,
+    /// The DSP is healthy *and* a DSP build of this function exists.
+    pub dsp_available: bool,
+    /// Compile-time metadata from the JIT module (static policies —
+    /// the BAAR-like [`super::policies_ext::PredictivePolicy`] — decide
+    /// on this alone).
+    pub op_mix: crate::jit::module::OpMix,
+    pub loop_depth: u32,
+}
+
+/// What the policy wants done.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PolicyAction {
+    Offload { to: TargetId },
+    Revert { reason: RevertReason },
+}
+
+/// An off-load decision policy.
+pub trait OffloadPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Called after every profiled call of a function.
+    fn decide(&mut self, ctx: &PolicyCtx<'_>) -> Option<PolicyAction>;
+
+    /// Notification that the coordinator force-reverted a function
+    /// (target failure) so the policy can update its bookkeeping.
+    fn on_forced_revert(&mut self, _f: FunctionId) {}
+}
+
+// ---------------------------------------------------------------------------
+// Blind offload (the paper's policy)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    /// Watching ARM samples accumulate.
+    Profiling,
+    /// On the DSP, within the observation window.
+    Trialing,
+    /// On the DSP for good (it won).
+    Committed,
+    /// Sent back to ARM; `since` counts calls since the revert.
+    Blacklisted { since: u64 },
+}
+
+/// Configuration of [`BlindOffloadPolicy`].
+#[derive(Debug, Clone, Copy)]
+pub struct BlindOffloadConfig {
+    /// DSP samples to observe before judging the trial.
+    pub observe_window: u64,
+    /// Revert if `dsp_mean > arm_mean * revert_margin`.
+    pub revert_margin: f64,
+    /// Re-try a blacklisted function after this many further calls
+    /// (None: permanent — the input pattern is assumed stable).
+    pub retry_after: Option<u64>,
+}
+
+impl Default for BlindOffloadConfig {
+    fn default() -> Self {
+        BlindOffloadConfig { observe_window: 5, revert_margin: 0.98, retry_after: None }
+    }
+}
+
+/// The paper's blind offload + observe + revert policy.
+#[derive(Debug)]
+pub struct BlindOffloadPolicy {
+    cfg: BlindOffloadConfig,
+    phases: HashMap<FunctionId, Phase>,
+}
+
+impl BlindOffloadPolicy {
+    pub fn new(cfg: BlindOffloadConfig) -> Self {
+        BlindOffloadPolicy { cfg, phases: HashMap::new() }
+    }
+
+    pub fn phase_name(&self, f: FunctionId) -> &'static str {
+        match self.phases.get(&f) {
+            None | Some(Phase::Profiling) => "profiling",
+            Some(Phase::Trialing) => "trialing",
+            Some(Phase::Committed) => "committed",
+            Some(Phase::Blacklisted { .. }) => "blacklisted",
+        }
+    }
+}
+
+impl Default for BlindOffloadPolicy {
+    fn default() -> Self {
+        Self::new(BlindOffloadConfig::default())
+    }
+}
+
+impl OffloadPolicy for BlindOffloadPolicy {
+    fn name(&self) -> &'static str {
+        "blind-offload"
+    }
+
+    fn decide(&mut self, ctx: &PolicyCtx<'_>) -> Option<PolicyAction> {
+        let phase = self.phases.entry(ctx.function).or_insert(Phase::Profiling);
+        match *phase {
+            Phase::Profiling => {
+                // Offload the hottest function as soon as the detector
+                // nominates it (blind: no prediction of the outcome).
+                if ctx.is_hotspot.is_some() && ctx.dsp_available {
+                    *phase = Phase::Trialing;
+                    return Some(PolicyAction::Offload { to: TargetId::C64xDsp });
+                }
+                None
+            }
+            Phase::Trialing => {
+                if ctx.current != TargetId::C64xDsp {
+                    // Coordinator bounced it (failure); start over.
+                    *phase = Phase::Profiling;
+                    return None;
+                }
+                let dsp_n = ctx.profile.count_on(TargetId::C64xDsp);
+                if dsp_n < self.cfg.observe_window {
+                    return None;
+                }
+                let arm = ctx.profile.mean_ns_on(TargetId::ArmCore)?;
+                let dsp = ctx.profile.mean_ns_on(TargetId::C64xDsp)?;
+                if dsp > arm * self.cfg.revert_margin {
+                    *phase = Phase::Blacklisted { since: 0 };
+                    Some(PolicyAction::Revert {
+                        reason: RevertReason::SlowerOnRemote { local_ns: arm, remote_ns: dsp },
+                    })
+                } else {
+                    *phase = Phase::Committed;
+                    None
+                }
+            }
+            Phase::Committed => None,
+            Phase::Blacklisted { since } => {
+                match self.cfg.retry_after {
+                    Some(n) if since + 1 >= n => {
+                        // Input patterns may have changed: give the DSP
+                        // another chance (paper §3: VPE "can revise its
+                        // decisions").
+                        *phase = Phase::Profiling;
+                    }
+                    _ => {
+                        *phase = Phase::Blacklisted { since: since + 1 };
+                    }
+                }
+                None
+            }
+        }
+    }
+
+    fn on_forced_revert(&mut self, f: FunctionId) {
+        self.phases.insert(f, Phase::Profiling);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Baseline policies
+// ---------------------------------------------------------------------------
+
+/// Never offload — the Table 1 "normal execution" baseline.
+#[derive(Debug, Default)]
+pub struct NeverOffloadPolicy;
+
+impl OffloadPolicy for NeverOffloadPolicy {
+    fn name(&self) -> &'static str {
+        "never-offload"
+    }
+
+    fn decide(&mut self, _ctx: &PolicyCtx<'_>) -> Option<PolicyAction> {
+        None
+    }
+}
+
+/// Offload immediately and never revert — the no-feedback strawman that
+/// shows why the observe/revert loop matters (it loses on FFT forever).
+#[derive(Debug, Default)]
+pub struct AlwaysOffloadPolicy;
+
+impl OffloadPolicy for AlwaysOffloadPolicy {
+    fn name(&self) -> &'static str {
+        "always-offload"
+    }
+
+    fn decide(&mut self, ctx: &PolicyCtx<'_>) -> Option<PolicyAction> {
+        if ctx.current == TargetId::ArmCore && ctx.dsp_available {
+            Some(PolicyAction::Offload { to: TargetId::C64xDsp })
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jit::module::OpMix;
+    use crate::profiler::sampler::FunctionProfile;
+
+    fn profile_with(arm: &[f64], dsp: &[f64]) -> FunctionProfile {
+        let mut p = FunctionProfile::default();
+        for &x in arm {
+            p.time_ns.push(x);
+            p.on_mut(TargetId::ArmCore).push(x);
+            p.calls += 1;
+        }
+        for &x in dsp {
+            p.time_ns.push(x);
+            p.on_mut(TargetId::C64xDsp).push(x);
+            p.calls += 1;
+        }
+        p
+    }
+
+    fn hot(f: FunctionId) -> Option<Hotspot> {
+        Some(Hotspot { function: f, cycle_share: 0.9 })
+    }
+
+    #[test]
+    fn offloads_when_hot_and_available() {
+        let mut pol = BlindOffloadPolicy::default();
+        let f = FunctionId(0);
+        let p = profile_with(&[100.0; 6], &[]);
+        let ctx = PolicyCtx {
+            function: f,
+            profile: &p,
+            current: TargetId::ArmCore,
+            is_hotspot: hot(f),
+            dsp_available: true,
+            op_mix: OpMix::integer_loop(),
+            loop_depth: 1,
+        };
+        assert_eq!(
+            pol.decide(&ctx),
+            Some(PolicyAction::Offload { to: TargetId::C64xDsp })
+        );
+    }
+
+    #[test]
+    fn does_not_offload_without_dsp_build() {
+        let mut pol = BlindOffloadPolicy::default();
+        let f = FunctionId(0);
+        let p = profile_with(&[100.0; 6], &[]);
+        let ctx = PolicyCtx {
+            function: f,
+            profile: &p,
+            current: TargetId::ArmCore,
+            is_hotspot: hot(f),
+            dsp_available: false,
+            op_mix: OpMix::integer_loop(),
+            loop_depth: 1,
+        };
+        assert_eq!(pol.decide(&ctx), None);
+    }
+
+    #[test]
+    fn commits_when_dsp_wins() {
+        let mut pol = BlindOffloadPolicy::default();
+        let f = FunctionId(0);
+        // Trial accepted...
+        let p = profile_with(&[100.0; 6], &[]);
+        let ctx = PolicyCtx {
+            function: f,
+            profile: &p,
+            current: TargetId::ArmCore,
+            is_hotspot: hot(f),
+            dsp_available: true,
+            op_mix: OpMix::integer_loop(),
+            loop_depth: 1,
+        };
+        pol.decide(&ctx);
+        // ...after the window, DSP is 5x faster: commit (no action).
+        let p = profile_with(&[100.0; 6], &[20.0; 5]);
+        let ctx = PolicyCtx {
+            function: f,
+            profile: &p,
+            current: TargetId::C64xDsp,
+            is_hotspot: hot(f),
+            dsp_available: true,
+            op_mix: OpMix::integer_loop(),
+            loop_depth: 1,
+        };
+        assert_eq!(pol.decide(&ctx), None);
+        assert_eq!(pol.phase_name(f), "committed");
+    }
+
+    #[test]
+    fn reverts_when_dsp_loses_the_fft_case() {
+        let mut pol = BlindOffloadPolicy::default();
+        let f = FunctionId(0);
+        let p = profile_with(&[542.7e6; 6], &[]);
+        let ctx = PolicyCtx {
+            function: f,
+            profile: &p,
+            current: TargetId::ArmCore,
+            is_hotspot: hot(f),
+            dsp_available: true,
+            op_mix: OpMix::integer_loop(),
+            loop_depth: 1,
+        };
+        pol.decide(&ctx);
+        // DSP turns out 0.7x (slower): revert.
+        let p = profile_with(&[542.7e6; 6], &[720.9e6; 5]);
+        let ctx = PolicyCtx {
+            function: f,
+            profile: &p,
+            current: TargetId::C64xDsp,
+            is_hotspot: hot(f),
+            dsp_available: true,
+            op_mix: OpMix::integer_loop(),
+            loop_depth: 1,
+        };
+        match pol.decide(&ctx) {
+            Some(PolicyAction::Revert { reason: RevertReason::SlowerOnRemote { .. } }) => {}
+            other => panic!("expected revert, got {other:?}"),
+        }
+        assert_eq!(pol.phase_name(f), "blacklisted");
+        // And it stays local afterwards.
+        let ctx = PolicyCtx {
+            function: f,
+            profile: &p,
+            current: TargetId::ArmCore,
+            is_hotspot: hot(f),
+            dsp_available: true,
+            op_mix: OpMix::integer_loop(),
+            loop_depth: 1,
+        };
+        assert_eq!(pol.decide(&ctx), None);
+    }
+
+    #[test]
+    fn retry_after_reopens_the_trial() {
+        let cfg = BlindOffloadConfig { retry_after: Some(3), ..Default::default() };
+        let mut pol = BlindOffloadPolicy::new(cfg);
+        let f = FunctionId(0);
+        // Drive into blacklist.
+        let p6 = profile_with(&[100.0; 6], &[]);
+        let ctx_arm = |p| PolicyCtx {
+            function: f,
+            profile: p,
+            current: TargetId::ArmCore,
+            is_hotspot: hot(f),
+            dsp_available: true,
+            op_mix: OpMix::integer_loop(),
+            loop_depth: 1,
+        };
+        pol.decide(&ctx_arm(&p6));
+        let p_bad = profile_with(&[100.0; 6], &[500.0; 5]);
+        let ctx_dsp = PolicyCtx {
+            function: f,
+            profile: &p_bad,
+            current: TargetId::C64xDsp,
+            is_hotspot: hot(f),
+            dsp_available: true,
+            op_mix: OpMix::integer_loop(),
+            loop_depth: 1,
+        };
+        assert!(matches!(pol.decide(&ctx_dsp), Some(PolicyAction::Revert { .. })));
+        // Three more calls: back to profiling, then a fresh offload.
+        for _ in 0..3 {
+            assert_eq!(pol.decide(&ctx_arm(&p_bad)), None);
+        }
+        assert_eq!(
+            pol.decide(&ctx_arm(&p_bad)),
+            Some(PolicyAction::Offload { to: TargetId::C64xDsp })
+        );
+    }
+
+    #[test]
+    fn never_policy_never_acts() {
+        let mut pol = NeverOffloadPolicy;
+        let f = FunctionId(0);
+        let p = profile_with(&[1e9; 100], &[]);
+        let ctx = PolicyCtx {
+            function: f,
+            profile: &p,
+            current: TargetId::ArmCore,
+            is_hotspot: hot(f),
+            dsp_available: true,
+            op_mix: OpMix::integer_loop(),
+            loop_depth: 1,
+        };
+        assert_eq!(pol.decide(&ctx), None);
+    }
+
+    #[test]
+    fn always_policy_offloads_without_evidence() {
+        let mut pol = AlwaysOffloadPolicy;
+        let f = FunctionId(0);
+        let p = profile_with(&[], &[]);
+        let ctx = PolicyCtx {
+            function: f,
+            profile: &p,
+            current: TargetId::ArmCore,
+            is_hotspot: None,
+            dsp_available: true,
+            op_mix: OpMix::integer_loop(),
+            loop_depth: 1,
+        };
+        assert_eq!(
+            pol.decide(&ctx),
+            Some(PolicyAction::Offload { to: TargetId::C64xDsp })
+        );
+    }
+}

@@ -1,0 +1,84 @@
+//! Per-target occupancy tracking.
+//!
+//! The paper lists "the remote target is already busy" among the reasons
+//! to keep a function local (§3.2).  The scheduler tracks, on the sim
+//! clock, until when each target is occupied, so the coordinator can
+//! bounce a dispatch back to the host instead of queueing behind a
+//! long-running remote call.
+
+use std::collections::HashMap;
+
+use crate::platform::TargetId;
+
+/// Busy-until bookkeeping per target.
+#[derive(Debug, Clone, Default)]
+pub struct TargetScheduler {
+    busy_until_ns: HashMap<TargetId, u64>,
+    bounced: u64,
+}
+
+impl TargetScheduler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Is `t` still busy at sim time `now_ns`?
+    pub fn is_busy(&self, t: TargetId, now_ns: u64) -> bool {
+        self.busy_until_ns.get(&t).map(|&u| u > now_ns).unwrap_or(false)
+    }
+
+    /// Mark `t` occupied for `dur_ns` starting at `now_ns`.
+    pub fn occupy(&mut self, t: TargetId, now_ns: u64, dur_ns: u64) {
+        let until = now_ns.saturating_add(dur_ns);
+        let e = self.busy_until_ns.entry(t).or_insert(0);
+        *e = (*e).max(until);
+    }
+
+    /// Record a dispatch bounced back to the host because the remote was
+    /// busy.
+    pub fn record_bounce(&mut self) {
+        self.bounced += 1;
+    }
+
+    /// Number of bounced dispatches.
+    pub fn bounce_count(&self) -> u64 {
+        self.bounced
+    }
+
+    /// When does `t` become free (0 if it already is)?
+    pub fn free_at(&self, t: TargetId) -> u64 {
+        self.busy_until_ns.get(&t).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_targets_are_free() {
+        let s = TargetScheduler::new();
+        assert!(!s.is_busy(TargetId::C64xDsp, 0));
+    }
+
+    #[test]
+    fn occupancy_expires() {
+        let mut s = TargetScheduler::new();
+        s.occupy(TargetId::C64xDsp, 100, 50);
+        assert!(s.is_busy(TargetId::C64xDsp, 100));
+        assert!(s.is_busy(TargetId::C64xDsp, 149));
+        assert!(!s.is_busy(TargetId::C64xDsp, 150));
+        // Other targets unaffected.
+        assert!(!s.is_busy(TargetId::ArmCore, 120));
+    }
+
+    #[test]
+    fn occupy_extends_not_shrinks() {
+        let mut s = TargetScheduler::new();
+        s.occupy(TargetId::C64xDsp, 0, 100);
+        s.occupy(TargetId::C64xDsp, 10, 20); // ends earlier: no shrink
+        assert_eq!(s.free_at(TargetId::C64xDsp), 100);
+        s.occupy(TargetId::C64xDsp, 50, 100);
+        assert_eq!(s.free_at(TargetId::C64xDsp), 150);
+    }
+}

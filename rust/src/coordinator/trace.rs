@@ -1,0 +1,316 @@
+//! Execution traces: record a VPE run, persist it as JSON, and replay
+//! it under a different policy (trace-driven what-if analysis).
+//!
+//! The replay engine answers "what would policy P have cost on this
+//! exact run?" without re-simulating the platform: each trace entry
+//! carries both targets' execution times for that call (the cost model
+//! is deterministic given the workload scale), so any policy's decision
+//! sequence can be re-priced exactly.  This is the ablation machinery
+//! behind `benches/policies.rs` and the `vpe replay` CLI verb.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::jit::module::{FunctionId, IrFunction, IrModule, OpMix};
+use crate::platform::TargetId;
+use crate::profiler::hotspot::Hotspot;
+use crate::profiler::sampler::FunctionProfile;
+use crate::util::json;
+use crate::workloads::WorkloadKind;
+
+use super::policy::{OffloadPolicy, PolicyAction, PolicyCtx};
+use super::vpe::CallRecord;
+
+/// One recorded call with both targets' (noise-free) prices.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEntry {
+    pub function: u32,
+    pub kind: WorkloadKind,
+    /// What the recorded run actually did.
+    pub executed_on: TargetId,
+    pub exec_ns: u64,
+    pub profiling_ns: u64,
+    /// Counterfactual prices for the replay engine.
+    pub arm_ns: u64,
+    pub dsp_ns: u64,
+}
+
+/// A recorded run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub entries: Vec<TraceEntry>,
+}
+
+fn kind_name(k: WorkloadKind) -> &'static str {
+    match k {
+        WorkloadKind::Complement => "complement",
+        WorkloadKind::Conv2d => "conv2d",
+        WorkloadKind::Dotprod => "dotprod",
+        WorkloadKind::Matmul => "matmul",
+        WorkloadKind::Pattern => "pattern",
+        WorkloadKind::Fft => "fft",
+    }
+}
+
+fn kind_from(s: &str) -> Result<WorkloadKind> {
+    Ok(match s {
+        "complement" => WorkloadKind::Complement,
+        "conv2d" => WorkloadKind::Conv2d,
+        "dotprod" => WorkloadKind::Dotprod,
+        "matmul" => WorkloadKind::Matmul,
+        "pattern" => WorkloadKind::Pattern,
+        "fft" => WorkloadKind::Fft,
+        other => return Err(Error::Parse(format!("unknown workload '{other}'"))),
+    })
+}
+
+impl Trace {
+    /// Record an entry from a live [`CallRecord`] plus the two
+    /// counterfactual prices (the coordinator knows its own cost model).
+    pub fn push(&mut self, rec: &CallRecord, kind: WorkloadKind, arm_ns: u64, dsp_ns: u64) {
+        self.entries.push(TraceEntry {
+            function: rec.function.0,
+            kind,
+            executed_on: rec.target,
+            exec_ns: rec.exec_ns,
+            profiling_ns: rec.profiling_ns,
+            arm_ns,
+            dsp_ns,
+        });
+    }
+
+    /// Total recorded cost, ms.
+    pub fn total_ms(&self) -> f64 {
+        self.entries.iter().map(|e| (e.exec_ns + e.profiling_ns) as f64).sum::<f64>() / 1e6
+    }
+
+    // -- persistence --------------------------------------------------------
+
+    /// Serialize as JSON.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"format\":\"vpe-trace-v1\",\"entries\":[\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            let _ = write!(
+                out,
+                "{{\"f\":{},\"kind\":\"{}\",\"on\":\"{}\",\"exec_ns\":{},\"prof_ns\":{},\"arm_ns\":{},\"dsp_ns\":{}}}{}\n",
+                e.function,
+                kind_name(e.kind),
+                if e.executed_on.is_host() { "arm" } else { "dsp" },
+                e.exec_ns,
+                e.profiling_ns,
+                e.arm_ns,
+                e.dsp_ns,
+                if i + 1 < self.entries.len() { "," } else { "" },
+            );
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Parse from JSON.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = json::parse(text)?;
+        if j.req("format")?.as_str() != Some("vpe-trace-v1") {
+            return Err(Error::Parse("not a vpe-trace-v1 document".into()));
+        }
+        let entries = j
+            .req("entries")?
+            .as_arr()
+            .ok_or_else(|| Error::Parse("'entries' must be an array".into()))?
+            .iter()
+            .map(|e| -> Result<TraceEntry> {
+                let num = |k: &str| -> Result<u64> {
+                    e.req(k)?
+                        .as_f64()
+                        .filter(|v| *v >= 0.0)
+                        .map(|v| v as u64)
+                        .ok_or_else(|| Error::Parse(format!("bad '{k}'")))
+                };
+                Ok(TraceEntry {
+                    function: num("f")? as u32,
+                    kind: kind_from(
+                        e.req("kind")?.as_str().ok_or_else(|| Error::Parse("bad kind".into()))?,
+                    )?,
+                    executed_on: match e.req("on")?.as_str() {
+                        Some("arm") => TargetId::ArmCore,
+                        Some("dsp") => TargetId::C64xDsp,
+                        _ => return Err(Error::Parse("bad 'on'".into())),
+                    },
+                    exec_ns: num("exec_ns")?,
+                    profiling_ns: num("prof_ns")?,
+                    arm_ns: num("arm_ns")?,
+                    dsp_ns: num("dsp_ns")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Trace { entries })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        Ok(std::fs::write(path, self.to_json())?)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_json(&std::fs::read_to_string(path)?)
+    }
+}
+
+/// Result of replaying a trace under a policy.
+#[derive(Debug, Clone)]
+pub struct ReplayOutcome {
+    pub policy: String,
+    pub total_ms: f64,
+    pub dsp_calls: usize,
+    pub arm_calls: usize,
+    pub offloads: usize,
+    pub reverts: usize,
+}
+
+/// Re-price the recorded calls under `policy`'s decision sequence.
+///
+/// The replay mirrors the live coordinator's loop: a per-function
+/// profile accumulates the *replayed* observations, a simple dominant-
+/// cycles hotspot rule nominates candidates, and each call executes on
+/// the target the dispatch slot currently points at.
+pub fn replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> ReplayOutcome {
+    let mut module = IrModule::new("replay");
+    let mut targets: HashMap<u32, TargetId> = HashMap::new();
+    let mut profiles: HashMap<u32, FunctionProfile> = HashMap::new();
+    let mut id_map: HashMap<u32, FunctionId> = HashMap::new();
+    // Pre-register every function seen in the trace.
+    for e in &trace.entries {
+        id_map.entry(e.function).or_insert_with(|| {
+            module.add_function(IrFunction::user(&format!("f{}", e.function), Some(e.kind)))
+        });
+        targets.entry(e.function).or_insert(TargetId::ArmCore);
+    }
+    module.finalize();
+
+    let mut outcome = ReplayOutcome {
+        policy: policy.name().to_string(),
+        total_ms: 0.0,
+        dsp_calls: 0,
+        arm_calls: 0,
+        offloads: 0,
+        reverts: 0,
+    };
+    let mut total_cycles: f64 = 0.0;
+    for e in &trace.entries {
+        let fid = id_map[&e.function];
+        let target = targets[&e.function];
+        let exec_ns = match target {
+            TargetId::ArmCore => e.arm_ns,
+            TargetId::C64xDsp => e.dsp_ns,
+        };
+        outcome.total_ms += exec_ns as f64 / 1e6;
+        match target {
+            TargetId::ArmCore => outcome.arm_calls += 1,
+            TargetId::C64xDsp => outcome.dsp_calls += 1,
+        }
+        // Update the replayed profile.
+        let p = profiles.entry(e.function).or_default();
+        p.time_ns.push(exec_ns as f64);
+        p.ewma_ns.push(exec_ns as f64);
+        p.on_mut(target).push(exec_ns as f64);
+        p.total_cycles += exec_ns; // 1 cycle/ns at 1 GHz: rank-equivalent
+        p.calls += 1;
+        total_cycles += exec_ns as f64;
+
+        let share = p.total_cycles as f64 / total_cycles.max(1.0);
+        let irf = module.function(fid).expect("registered");
+        let ctx = PolicyCtx {
+            function: fid,
+            profile: p,
+            current: target,
+            is_hotspot: (p.calls >= 5 && share >= 0.10)
+                .then_some(Hotspot { function: fid, cycle_share: share }),
+            dsp_available: true,
+            op_mix: irf.op_mix,
+            loop_depth: irf.loop_depth,
+        };
+        match policy.decide(&ctx) {
+            Some(PolicyAction::Offload { to }) => {
+                targets.insert(e.function, to);
+                outcome.offloads += 1;
+            }
+            Some(PolicyAction::Revert { .. }) => {
+                targets.insert(e.function, TargetId::ArmCore);
+                outcome.reverts += 1;
+            }
+            None => {}
+        }
+    }
+    outcome
+}
+
+/// Fallback op mix used when replaying traces with no IR metadata.
+pub fn default_op_mix() -> OpMix {
+    OpMix::integer_loop()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::{
+        AlwaysOffloadPolicy, BlindOffloadPolicy, NeverOffloadPolicy,
+    };
+
+    fn synthetic_trace(kind: WorkloadKind, arm_ms: u64, dsp_ms: u64, n: usize) -> Trace {
+        let mut t = Trace::default();
+        for _ in 0..n {
+            t.entries.push(TraceEntry {
+                function: 0,
+                kind,
+                executed_on: TargetId::ArmCore,
+                exec_ns: arm_ms * 1_000_000,
+                profiling_ns: 0,
+                arm_ns: arm_ms * 1_000_000,
+                dsp_ns: dsp_ms * 1_000_000,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_the_trace() {
+        let t = synthetic_trace(WorkloadKind::Matmul, 16482, 516, 7);
+        let back = Trace::from_json(&t.to_json()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn replay_never_equals_all_arm() {
+        let t = synthetic_trace(WorkloadKind::Matmul, 100, 10, 20);
+        let out = replay(&t, &mut NeverOffloadPolicy);
+        assert_eq!(out.arm_calls, 20);
+        assert!((out.total_ms - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replay_blind_beats_never_on_matmul() {
+        let t = synthetic_trace(WorkloadKind::Matmul, 16482, 516, 30);
+        let never = replay(&t, &mut NeverOffloadPolicy);
+        let blind = replay(&t, &mut BlindOffloadPolicy::default());
+        assert!(blind.total_ms < never.total_ms / 5.0, "{} vs {}", blind.total_ms, never.total_ms);
+        assert_eq!(blind.offloads, 1);
+        assert_eq!(blind.reverts, 0);
+    }
+
+    #[test]
+    fn replay_blind_reverts_on_fft_and_beats_always() {
+        let t = synthetic_trace(WorkloadKind::Fft, 543, 721, 40);
+        let blind = replay(&t, &mut BlindOffloadPolicy::default());
+        let always = replay(&t, &mut AlwaysOffloadPolicy);
+        assert_eq!(blind.reverts, 1);
+        assert!(blind.total_ms < always.total_ms);
+    }
+
+    #[test]
+    fn bad_documents_are_rejected() {
+        assert!(Trace::from_json("{}").is_err());
+        assert!(Trace::from_json(r#"{"format":"vpe-trace-v1","entries":[{"f":0}]}"#).is_err());
+        assert!(Trace::from_json(r#"{"format":"other","entries":[]}"#).is_err());
+    }
+}

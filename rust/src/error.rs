@@ -1,0 +1,62 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Errors surfaced by the VPE library.
+#[derive(Debug)]
+pub enum Error {
+    /// PJRT / XLA failure (compile, execute, literal conversion).
+    Xla(xla::Error),
+    /// Filesystem problem while loading artifacts.
+    Io(std::io::Error),
+    /// Manifest / JSON parsing problem.
+    Parse(String),
+    /// An artifact referenced by name does not exist / does not match.
+    Artifact(String),
+    /// Invalid configuration.
+    Config(String),
+    /// Platform-model violation (unknown target, failed target, OOM in
+    /// the shared region, ...).
+    Platform(String),
+    /// Coordinator-level invariant violation (unknown function id, ...).
+    Coordinator(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla error: {e}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Platform(m) => write!(f, "platform error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

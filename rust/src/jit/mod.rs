@@ -1,0 +1,26 @@
+//! The MCJIT-analog JIT substrate (paper §3.2, Fig 1).
+//!
+//! The paper runs user code in LLVM's MCJIT and, because MCJIT can only
+//! swap whole finalized modules, rewrites the IR at load time so *every*
+//! function is invoked through a wrapper holding a function pointer.
+//! Re-dispatching a function to the DSP is then a pointer swap; reverting
+//! is restoring the original pointer.  This module implements exactly
+//! that mechanism:
+//!
+//! - [`module`] — the IR-level function registry (name, op mix, loop
+//!   shape, syscall flag) with MCJIT's finalize-before-execute rule;
+//! - [`wrapper`] — the injected caller wrappers: an atomic dispatch slot
+//!   per function (the function pointer of Fig 1), swap/restore, call
+//!   counting, and the indirection overhead;
+//! - [`symbols`] — the DSP toolchain analog: the paper compiles
+//!   functions with TI's closed-source compiler and extracts a symbol
+//!   table that VPE loads; here the "TI compiler" is the AOT'd Pallas
+//!   artifact set, and the symbol table maps functions to artifacts.
+
+pub mod module;
+pub mod symbols;
+pub mod wrapper;
+
+pub use module::{FunctionId, IrFunction, IrModule};
+pub use symbols::{DspSymbol, DspToolchain};
+pub use wrapper::DispatchTable;

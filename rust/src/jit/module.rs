@@ -1,0 +1,184 @@
+//! IR-level function registry — the MCJIT module VPE loads and rewrites.
+//!
+//! VPE does not need the full LLVM IR: its analysis consumes function-
+//! level metadata (is it a syscall? what is the op mix? how deep is the
+//! loop nest?) which is what this registry carries.  MCJIT's operational
+//! constraint is preserved: a module must be *finalized* before execution
+//! and cannot grow afterwards (the reason the paper's wrappers exist at
+//! all — see `wrapper.rs`).
+
+use crate::error::{Error, Result};
+use crate::workloads::WorkloadKind;
+
+/// Dense function handle (index into the module).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FunctionId(pub u32);
+
+impl std::fmt::Display for FunctionId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "f{}", self.0)
+    }
+}
+
+/// Static mix of operations in a function's hot loop, as IR analysis
+/// would summarize it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpMix {
+    /// Fraction of integer ALU ops.
+    pub int_frac: f64,
+    /// Fraction of floating-point ops (drives the DSP's software-float
+    /// penalty — the paper's FFT case).
+    pub float_frac: f64,
+    /// Fraction of memory ops.
+    pub mem_frac: f64,
+    /// Fraction of branches.
+    pub branch_frac: f64,
+}
+
+impl OpMix {
+    pub fn integer_loop() -> Self {
+        OpMix { int_frac: 0.6, float_frac: 0.0, mem_frac: 0.3, branch_frac: 0.1 }
+    }
+
+    pub fn float_loop() -> Self {
+        OpMix { int_frac: 0.1, float_frac: 0.6, mem_frac: 0.25, branch_frac: 0.05 }
+    }
+}
+
+/// One function in the module.
+#[derive(Debug, Clone)]
+pub struct IrFunction {
+    pub name: String,
+    /// Which benchmark computation this function bodies (None for
+    /// program scaffolding like I/O helpers).
+    pub workload: Option<WorkloadKind>,
+    /// System calls are excluded from VPE's analysis (paper §3).
+    pub is_syscall: bool,
+    pub op_mix: OpMix,
+    /// Depth of the deepest loop nest — what the TI compiler's software
+    /// pipeliner keys on (paper §5.2).
+    pub loop_depth: u32,
+}
+
+impl IrFunction {
+    /// A user function bodying `workload` (or scaffolding if None).
+    pub fn user(name: &str, workload: Option<WorkloadKind>) -> Self {
+        let (op_mix, loop_depth) = match workload {
+            Some(WorkloadKind::Fft) => (OpMix::float_loop(), 2),
+            Some(WorkloadKind::Matmul) => (OpMix::integer_loop(), 3),
+            Some(WorkloadKind::Conv2d) => (OpMix::integer_loop(), 4),
+            Some(_) => (OpMix::integer_loop(), 1),
+            None => (OpMix { int_frac: 0.3, float_frac: 0.0, mem_frac: 0.5, branch_frac: 0.2 }, 0),
+        };
+        IrFunction { name: name.into(), workload, is_syscall: false, op_mix, loop_depth }
+    }
+
+    /// A system call stub (never offloaded).
+    pub fn syscall(name: &str) -> Self {
+        IrFunction {
+            name: name.into(),
+            workload: None,
+            is_syscall: true,
+            op_mix: OpMix { int_frac: 0.2, float_frac: 0.0, mem_frac: 0.6, branch_frac: 0.2 },
+            loop_depth: 0,
+        }
+    }
+}
+
+/// The loaded module.
+#[derive(Debug, Clone)]
+pub struct IrModule {
+    pub name: String,
+    functions: Vec<IrFunction>,
+    finalized: bool,
+}
+
+impl IrModule {
+    pub fn new(name: &str) -> Self {
+        IrModule { name: name.into(), functions: Vec::new(), finalized: false }
+    }
+
+    /// Add a function. Errors after finalization (MCJIT's rule).
+    pub fn try_add_function(&mut self, f: IrFunction) -> Result<FunctionId> {
+        if self.finalized {
+            return Err(Error::Coordinator(format!(
+                "module '{}' is finalized; MCJIT modules cannot grow",
+                self.name
+            )));
+        }
+        let id = FunctionId(self.functions.len() as u32);
+        self.functions.push(f);
+        Ok(id)
+    }
+
+    /// Add a function, panicking on a finalized module (test helper).
+    pub fn add_function(&mut self, f: IrFunction) -> FunctionId {
+        self.try_add_function(f).expect("module not finalized")
+    }
+
+    /// Finalize: after this the function set is immutable and wrappers
+    /// can be generated.
+    pub fn finalize(&mut self) {
+        self.finalized = true;
+    }
+
+    pub fn is_finalized(&self) -> bool {
+        self.finalized
+    }
+
+    pub fn function(&self, id: FunctionId) -> Option<&IrFunction> {
+        self.functions.get(id.0 as usize)
+    }
+
+    pub fn len(&self) -> usize {
+        self.functions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.functions.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (FunctionId, &IrFunction)> {
+        self.functions.iter().enumerate().map(|(i, f)| (FunctionId(i as u32), f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_dense_and_stable() {
+        let mut m = IrModule::new("t");
+        let a = m.add_function(IrFunction::user("a", None));
+        let b = m.add_function(IrFunction::user("b", None));
+        assert_eq!(a, FunctionId(0));
+        assert_eq!(b, FunctionId(1));
+        assert_eq!(m.function(b).unwrap().name, "b");
+        assert!(m.function(FunctionId(99)).is_none());
+    }
+
+    #[test]
+    fn finalized_module_rejects_growth() {
+        let mut m = IrModule::new("t");
+        m.add_function(IrFunction::user("a", None));
+        m.finalize();
+        assert!(m.try_add_function(IrFunction::user("b", None)).is_err());
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn fft_functions_are_float_heavy() {
+        let f = IrFunction::user("fft", Some(WorkloadKind::Fft));
+        assert!(f.op_mix.float_frac > 0.5);
+        let g = IrFunction::user("mm", Some(WorkloadKind::Matmul));
+        assert_eq!(g.op_mix.float_frac, 0.0);
+        assert_eq!(g.loop_depth, 3);
+    }
+
+    #[test]
+    fn syscalls_are_flagged() {
+        assert!(IrFunction::syscall("write").is_syscall);
+        assert!(!IrFunction::user("f", None).is_syscall);
+    }
+}

@@ -1,0 +1,124 @@
+//! The DSP toolchain analog (paper §4).
+//!
+//! "The chosen DSP lacks an LLVM back-end [...] we have circumvented it
+//! by creating a set of scripts that compiles the functions' code using
+//! the aforementioned closed-source compiler, and then extracts a symbol
+//! table that is loaded and used in VPE."
+//!
+//! In this reproduction the "closed-source TI compiler" is the build-time
+//! Pallas/JAX AOT pipeline: for every workload there is a `__dsp`
+//! artifact (the L1 Pallas kernel lowering).  This module is the symbol
+//! table that maps a function in the JIT module to its DSP build — if one
+//! exists.  Functions without a DSP build (scaffolding, syscalls) simply
+//! cannot be offloaded, mirroring the paper's restriction to the
+//! functions its scripts compiled.
+
+use std::collections::HashMap;
+
+use crate::workloads::WorkloadKind;
+
+use super::module::IrFunction;
+
+/// One entry of the extracted symbol table.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DspSymbol {
+    /// The artifact implementing this function on the DSP.
+    pub artifact: String,
+    /// Did the pipeliner find a regular loop nest to pipeline?  (The
+    /// paper credits software pipelining for the matmul/pattern wins.)
+    pub software_pipelined: bool,
+}
+
+/// The "TI compiler + symbol extraction scripts" pipeline.
+#[derive(Debug, Clone)]
+pub struct DspToolchain {
+    by_workload: HashMap<WorkloadKind, DspSymbol>,
+}
+
+impl DspToolchain {
+    /// Toolchain with the standard artifact set (`<workload>__dsp`).
+    pub fn standard() -> Self {
+        let mut by_workload = HashMap::new();
+        for kind in WorkloadKind::ALL {
+            let artifact = match kind {
+                WorkloadKind::Complement => "complement__dsp",
+                WorkloadKind::Conv2d => "conv2d__dsp",
+                WorkloadKind::Dotprod => "dotprod__dsp",
+                // Matmul artifacts are per-size; the symbol names the
+                // family, the runtime resolves the size.
+                WorkloadKind::Matmul => "matmul{n}__dsp",
+                WorkloadKind::Pattern => "pattern__dsp",
+                WorkloadKind::Fft => "fft__dsp",
+            };
+            by_workload.insert(
+                kind,
+                DspSymbol {
+                    artifact: artifact.to_string(),
+                    // The pipeliner wins on regular >=2-deep integer
+                    // nests; the FFT's butterflies are float-bound.
+                    software_pipelined: kind != WorkloadKind::Fft,
+                },
+            );
+        }
+        DspToolchain { by_workload }
+    }
+
+    /// An empty toolchain (no DSP builds at all) — for tests of the
+    /// "nothing to offload to" path.
+    pub fn empty() -> Self {
+        DspToolchain { by_workload: HashMap::new() }
+    }
+
+    /// "Compile" a function for the DSP: return its symbol if the
+    /// toolchain can build it.
+    pub fn compile(&self, f: &IrFunction) -> Option<&DspSymbol> {
+        if f.is_syscall {
+            return None;
+        }
+        f.workload.and_then(|k| self.by_workload.get(&k))
+    }
+
+    /// Remove a workload's DSP build (failure-injection in tests).
+    pub fn remove(&mut self, kind: WorkloadKind) {
+        self.by_workload.remove(&kind);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jit::module::IrFunction;
+
+    #[test]
+    fn every_workload_has_a_dsp_build() {
+        let tc = DspToolchain::standard();
+        for kind in WorkloadKind::ALL {
+            let f = IrFunction::user("f", Some(kind));
+            assert!(tc.compile(&f).is_some(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn syscalls_and_scaffolding_have_no_dsp_build() {
+        let tc = DspToolchain::standard();
+        assert!(tc.compile(&IrFunction::syscall("write")).is_none());
+        assert!(tc.compile(&IrFunction::user("helper", None)).is_none());
+    }
+
+    #[test]
+    fn fft_is_not_software_pipelined() {
+        let tc = DspToolchain::standard();
+        let fft = IrFunction::user("fft", Some(WorkloadKind::Fft));
+        assert!(!tc.compile(&fft).unwrap().software_pipelined);
+        let mm = IrFunction::user("mm", Some(WorkloadKind::Matmul));
+        assert!(tc.compile(&mm).unwrap().software_pipelined);
+    }
+
+    #[test]
+    fn removal_disables_offload() {
+        let mut tc = DspToolchain::standard();
+        tc.remove(WorkloadKind::Matmul);
+        let mm = IrFunction::user("mm", Some(WorkloadKind::Matmul));
+        assert!(tc.compile(&mm).is_none());
+    }
+}

@@ -1,0 +1,53 @@
+//! # VPE — Versatile Performance Enhancer
+//!
+//! A reproduction of *"Toward Transparent Heterogeneous Systems"*
+//! (Delporte, Rigamonti, Dassatti — REDS HEIG-VD, 2015): a transparent
+//! run-time optimization system that JIT-executes user code, profiles it
+//! with a `perf_event`-style sampler, detects computationally hot
+//! functions, and transparently re-dispatches them to a heterogeneous
+//! compute target (the C64x+ DSP of a TI DM3730 SoC in the paper) —
+//! reverting the decision whenever it does not pay off.
+//!
+//! ## Architecture (three layers)
+//!
+//! - **L3 (this crate)** — the VPE coordinator: profiling → hot-spot
+//!   detection → function-pointer re-dispatch → observe → revert.
+//! - **L2 (python/compile/model.py)** — the six benchmark computations as
+//!   JAX functions, AOT-lowered once to HLO text under `artifacts/`.
+//! - **L1 (python/compile/kernels/)** — Pallas kernels: the "DSP builds"
+//!   of each computation (blocked/tiled schedules).
+//!
+//! The hardware the paper uses (REPTAR board, ARM Cortex-A8 + C64x+ DSP)
+//! is simulated by the [`platform`] substrate: a calibrated cycle-cost
+//! model drives every *decision* and every paper-scale *metric*, while the
+//! actual numerics of each dispatched call are computed for real by
+//! executing the corresponding AOT artifact through the PJRT CPU client
+//! ([`runtime`]). See DESIGN.md for the substitution table.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use vpe::coordinator::{Vpe, VpeConfig};
+//! use vpe::workloads::WorkloadKind;
+//!
+//! let mut vpe = Vpe::new(VpeConfig::default()).unwrap();
+//! let f = vpe.register_workload(WorkloadKind::Matmul).unwrap();
+//! for _ in 0..100 {
+//!     vpe.call(f).unwrap(); // VPE offloads to the DSP when it pays off
+//! }
+//! println!("{}", vpe.report());
+//! ```
+
+pub mod bench_harness;
+pub mod coordinator;
+pub mod error;
+pub mod jit;
+pub mod metrics;
+pub mod platform;
+pub mod profiler;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workloads;
+
+pub use error::{Error, Result};

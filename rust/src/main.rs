@@ -1,0 +1,228 @@
+//! `vpe` — CLI for the VPE reproduction.
+//!
+//! Subcommands regenerate each paper artifact (Table 1, Fig 2a/2b,
+//! Fig 3), run individual workloads under the coordinator, and inspect
+//! the platform/artifact store.
+
+use vpe::bench_harness::{fig2, fig3, table1};
+use vpe::coordinator::{Vpe, VpeConfig};
+use vpe::platform::TargetId;
+use vpe::util::cli::Args;
+use vpe::workloads::WorkloadKind;
+
+const USAGE: &str = "\
+vpe — Versatile Performance Enhancer (reproduction of 'Toward Transparent
+Heterogeneous Systems', 2015)
+
+USAGE: vpe <command> [options]
+
+COMMANDS:
+  info                       platform + artifact-store overview
+  run <workload>             run one workload under VPE and print the trace
+      --iters N              hot-loop iterations (default 30)
+      --sim-only             skip PJRT execution
+      --config FILE          JSON config (see examples/vpe.config.json)
+  table1                     regenerate Table 1
+      --samples N            samples per phase (default 15)
+      --walls                also measure real PJRT wall times
+  fig2a [--samples N]        regenerate Fig 2(a)
+  fig2b                      regenerate Fig 2(b) + decision tree
+  fig3                       regenerate Fig 3 (video prototype)
+      --frames N             total frames (default 300)
+      --grant N              frame at which VPE may act (default 60)
+      --artifacts            execute the convolution through PJRT
+  record <workload>          run under VPE and save an execution trace
+      --iters N              iterations (default 40)
+      --out FILE             trace path (default trace.json)
+  replay <trace.json>        re-price a recorded trace under every policy
+
+workloads: complement | conv2d | dotprod | matmul | pattern | fft
+";
+
+fn parse_workload(s: &str) -> Option<WorkloadKind> {
+    Some(match s.to_ascii_lowercase().as_str() {
+        "complement" => WorkloadKind::Complement,
+        "conv2d" | "convolution" => WorkloadKind::Conv2d,
+        "dotprod" | "dot" => WorkloadKind::Dotprod,
+        "matmul" => WorkloadKind::Matmul,
+        "pattern" => WorkloadKind::Pattern,
+        "fft" => WorkloadKind::Fft,
+        _ => return None,
+    })
+}
+
+fn run() -> vpe::Result<()> {
+    let args = Args::from_env()?;
+    let Some(cmd) = args.positionals.first().map(String::as_str) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    match cmd {
+        "info" => {
+            let soc = vpe::platform::Soc::dm3730();
+            println!("platform: simulated TI DM3730 (REPTAR)");
+            for id in TargetId::ALL {
+                let t = soc.target(id)?;
+                println!(
+                    "  {:<14} {:>5} MHz  issue-width {}  hw-float {}",
+                    t.id.name(),
+                    t.freq_hz / 1_000_000,
+                    t.issue_width,
+                    t.has_hw_float
+                );
+            }
+            println!("  shared region: {} MiB", soc.shared.size() >> 20);
+            match vpe::runtime::ArtifactStore::open_default() {
+                Ok(store) => {
+                    println!("artifacts ({}):", store.names().len());
+                    for n in store.names() {
+                        println!("  {n}");
+                    }
+                }
+                Err(e) => println!("artifacts: unavailable ({e}) — run `make artifacts`"),
+            }
+        }
+        "run" => {
+            let w = args
+                .positionals
+                .get(1)
+                .ok_or_else(|| vpe::Error::Config("run: missing workload".into()))?;
+            let kind = parse_workload(w)
+                .ok_or_else(|| vpe::Error::Config(format!("unknown workload '{w}'")))?;
+            let iters: usize = args.opt("iters", 30)?;
+            let mut cfg =
+                if args.flag("sim-only") { VpeConfig::sim_only() } else { VpeConfig::default() };
+            let config_path = args.opt_str("config", "");
+            if !config_path.is_empty() {
+                cfg = vpe::coordinator::config::load(std::path::Path::new(&config_path))?;
+            }
+            args.finish()?;
+            let mut v = Vpe::new(cfg)?;
+            let f = v.register_workload(kind)?;
+            let recs = v.run(f, iters)?;
+            println!("{}", v.report());
+            println!("event trace:\n{}", v.events().to_text());
+            let verified = recs.iter().filter(|r| r.output_ok == Some(true)).count();
+            let failed = recs.iter().filter(|r| r.output_ok == Some(false)).count();
+            if verified + failed > 0 {
+                println!("output verification: {verified} ok, {failed} mismatched");
+            }
+        }
+        "table1" => {
+            let samples: usize = args.opt("samples", 15)?;
+            let walls = args.flag("walls");
+            args.finish()?;
+            let rows = table1::table1(samples, walls)?;
+            println!("{}", table1::render(&rows).to_markdown());
+            if walls {
+                println!("real PJRT wall times (artifact shapes, CPU substrate):");
+                for r in &rows {
+                    if let (Some(nv), Some(dv)) = (r.wall_naive_ms, r.wall_dsp_ms) {
+                        println!(
+                            "  {:<14} naive {nv:>8.3} ms   pallas {dv:>8.3} ms",
+                            r.kind.name()
+                        );
+                    }
+                }
+            }
+        }
+        "fig2a" => {
+            let samples: usize = args.opt("samples", 15)?;
+            args.finish()?;
+            println!("{}", fig2::fig2a(samples)?.to_markdown());
+        }
+        "fig2b" => {
+            args.finish()?;
+            let (points, tree) = fig2::fig2b(&fig2::default_sizes(), 5, 0xF162B);
+            println!("{}", fig2::render_fig2b(&points, &tree).to_markdown());
+            println!(
+                "analytic crossover: N = {:.0} (paper: ~75; see EXPERIMENTS.md)",
+                fig2::analytic_crossover()
+            );
+            if let Some(t) = tree.root_threshold() {
+                println!("decision-tree learned crossover: N = {t:.0}");
+            }
+        }
+        "fig3" => {
+            let frames: usize = args.opt("frames", 300)?;
+            let grant: usize = args.opt("grant", 60)?;
+            let artifacts = args.flag("artifacts");
+            args.finish()?;
+            let s = fig3::fig3(frames, grant, artifacts)?;
+            println!("{}", fig3::render(&s).to_markdown());
+            println!("analysis bursts: {}", s.bursts);
+        }
+        "record" => {
+            let w = args
+                .positionals
+                .get(1)
+                .ok_or_else(|| vpe::Error::Config("record: missing workload".into()))?;
+            let kind = parse_workload(w)
+                .ok_or_else(|| vpe::Error::Config(format!("unknown workload '{w}'")))?;
+            let iters: usize = args.opt("iters", 40)?;
+            let out = args.opt_str("out", "trace.json");
+            args.finish()?;
+            let mut v = Vpe::new(VpeConfig::sim_only())?;
+            v.enable_tracing();
+            let f = if kind == WorkloadKind::Matmul {
+                v.register_matmul(500)?
+            } else {
+                v.register_workload(kind)?
+            };
+            v.run(f, iters)?;
+            let trace = v.trace().expect("tracing enabled");
+            trace.save(std::path::Path::new(&out))?;
+            println!(
+                "recorded {} calls ({:.1} ms simulated) -> {out}",
+                trace.entries.len(),
+                trace.total_ms()
+            );
+        }
+        "replay" => {
+            let path = args
+                .positionals
+                .get(1)
+                .ok_or_else(|| vpe::Error::Config("replay: missing trace file".into()))?;
+            args.finish()?;
+            let trace = vpe::coordinator::trace::Trace::load(std::path::Path::new(path))?;
+            println!(
+                "trace: {} calls, {:.1} ms as recorded\n",
+                trace.entries.len(),
+                trace.total_ms()
+            );
+            use vpe::coordinator::policies_ext::*;
+            use vpe::coordinator::policy::*;
+            let mut policies: Vec<Box<dyn OffloadPolicy>> = vec![
+                Box::new(NeverOffloadPolicy),
+                Box::new(AlwaysOffloadPolicy),
+                Box::<BlindOffloadPolicy>::default(),
+                Box::<HysteresisPolicy>::default(),
+                Box::<PredictivePolicy>::default(),
+                Box::new(EpsilonGreedyPolicy::new(0.1, 0xE95)),
+            ];
+            println!(
+                "{:<18} {:>12} {:>8} {:>8} {:>9} {:>8}",
+                "policy", "total ms", "arm", "dsp", "offloads", "reverts"
+            );
+            for p in policies.iter_mut() {
+                let o = vpe::coordinator::trace::replay(&trace, p.as_mut());
+                println!(
+                    "{:<18} {:>12.1} {:>8} {:>8} {:>9} {:>8}",
+                    o.policy, o.total_ms, o.arm_calls, o.dsp_calls, o.offloads, o.reverts
+                );
+            }
+        }
+        other => {
+            print!("{USAGE}");
+            return Err(vpe::Error::Config(format!("unknown command '{other}'")));
+        }
+    }
+    Ok(())
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,185 @@
+//! Calibrated cycle-cost model for the DM3730's two targets.
+//!
+//! This is the load-bearing substitution of the reproduction (DESIGN.md):
+//! we do not have the REPTAR board, so execution *time* is produced by an
+//! analytic per-workload cost model whose constants are derived from the
+//! paper's own measurements (Table 1, Fig 2b).  The model generalizes
+//! across workload sizes (items scale), which is what lets one set of
+//! constants reproduce Table 1, both figures, and the video prototype.
+//!
+//! Derivation (paper Table 1; ARM @ 1 GHz, DSP @ 800 MHz, and the ~100 ms
+//! per-dispatch DSP setup of Fig 2b — code load + IPC + cache coherency):
+//!
+//! | workload   | paper size           | items           | ARM ms  | DSP ms (minus setup) |
+//! |------------|----------------------|-----------------|---------|----------------------|
+//! | complement | 32 Mi-char sequence  | N = 2^25        | 818.4   | 109.9 − 100 = 9.9    |
+//! | conv2d     | 512² image, 9×9 kern | H·W·k² = 2.12e7 | 432.2   | 111.5 − 100 = 11.5   |
+//! | dotprod    | 64 Mi elements       | N = 2^26        | 783.8   | 124.9 − 100 = 24.9   |
+//! | matmul     | 500×500              | N³ = 1.25e8     | 16482.0 | 515.9 − 100 = 415.9  |
+//! | pattern    | 32 Mi seq, P = 16    | N·P = 5.37e8    | 6081.7  | 268.2 − 100 = 168.2  |
+//! | fft        | 512 Ki points        | 5·N·log2 N      | 542.7   | 720.9 − 100 = 620.9  |
+//!
+//! ns_per_item = ms · 1e6 / items.  The resulting per-item rates are
+//! physically plausible: e.g. matmul 131.9 ns/MAC on a cache-thrashing
+//! naive ARM triple loop vs 3.33 ns/MAC on the software-pipelined VLIW;
+//! FFT *slower* on the DSP (10.9 → 12.5 ns/op) because every butterfly is
+//! software floating point — exactly the paper's 0.7× regression case.
+
+use crate::workloads::WorkloadKind;
+
+use super::target::TargetId;
+
+/// Per-(workload, target) execution rate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadRate {
+    /// ns per inner-loop item on the ARM host (naive -O3 build).
+    pub arm_ns_per_item: f64,
+    /// ns per inner-loop item on the DSP (TI software-pipelined build),
+    /// excluding dispatch setup.
+    pub dsp_ns_per_item: f64,
+}
+
+/// The calibrated cost model.
+///
+/// `exec_ns` is *pure compute* time; dispatch setup lives in
+/// [`super::transfer::TransferModel`] and health-derating in
+/// [`super::soc::Soc`].
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    rates: [(WorkloadKind, WorkloadRate); 6],
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self::dm3730_calibrated()
+    }
+}
+
+impl CostModel {
+    /// The Table-1-calibrated DM3730 model (see module docs for derivation).
+    pub fn dm3730_calibrated() -> Self {
+        use WorkloadKind::*;
+        let r = |a, d| WorkloadRate { arm_ns_per_item: a, dsp_ns_per_item: d };
+        CostModel {
+            rates: [
+                // 818.4e6 / 2^25 ; 9.9e6 / 2^25
+                (Complement, r(24.391, 0.2951)),
+                // 432.2e6 / (512*512*81) ; 11.5e6 / same
+                (Conv2d, r(20.354, 0.5416)),
+                // 783.8e6 / 2^26 ; 24.9e6 / 2^26
+                (Dotprod, r(11.680, 0.3711)),
+                // 16482e6 / 500^3 ; 415.9e6 / 500^3
+                (Matmul, r(131.856, 3.3272)),
+                // 6081.7e6 / (2^25 * 16) ; 168.2e6 / same
+                (Pattern, r(11.328, 0.3133)),
+                // 542.7e6 / (5 * 2^19 * 19) ; 620.9e6 / same — DSP SLOWER
+                // (software floating point), the paper's revert case.
+                (Fft, r(10.896, 12.466)),
+            ],
+        }
+    }
+
+    /// Rate entry for a workload.
+    pub fn rate(&self, kind: WorkloadKind) -> WorkloadRate {
+        self.rates
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, r)| *r)
+            .expect("all workload kinds are in the table")
+    }
+
+    /// Pure-compute time for `items` inner-loop items on `target`, ns.
+    pub fn exec_ns(&self, kind: WorkloadKind, items: f64, target: TargetId) -> f64 {
+        let r = self.rate(kind);
+        let per = match target {
+            TargetId::ArmCore => r.arm_ns_per_item,
+            TargetId::C64xDsp => r.dsp_ns_per_item,
+        };
+        per * items
+    }
+
+    /// Compute-only speedup of the DSP over the ARM for a workload
+    /// (ignores dispatch setup).
+    pub fn compute_speedup(&self, kind: WorkloadKind) -> f64 {
+        let r = self.rate(kind);
+        r.arm_ns_per_item / r.dsp_ns_per_item
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::WorkloadKind::*;
+
+    #[test]
+    fn exec_scales_linearly_with_items() {
+        let m = CostModel::default();
+        let t1 = m.exec_ns(Matmul, 1_000.0, TargetId::ArmCore);
+        let t2 = m.exec_ns(Matmul, 2_000.0, TargetId::ArmCore);
+        assert!((t2 / t1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table1_arm_times_reproduce() {
+        // The model must reproduce the paper's "normal execution" column
+        // at the paper's own workload sizes.
+        let m = CostModel::default();
+        let cases = [
+            (Complement, (1u64 << 25) as f64, 818.4),
+            (Conv2d, 512.0 * 512.0 * 81.0, 432.2),
+            (Dotprod, (1u64 << 26) as f64, 783.8),
+            (Matmul, 500.0f64.powi(3), 16482.0),
+            (Pattern, (1u64 << 25) as f64 * 16.0, 6081.7),
+            (Fft, 5.0 * (1u64 << 19) as f64 * 19.0, 542.7),
+        ];
+        for (kind, items, want_ms) in cases {
+            let got_ms = m.exec_ns(kind, items, TargetId::ArmCore) / 1e6;
+            assert!(
+                (got_ms - want_ms).abs() / want_ms < 0.01,
+                "{kind:?}: got {got_ms:.1} want {want_ms:.1}"
+            );
+        }
+    }
+
+    #[test]
+    fn table1_dsp_compute_times_reproduce() {
+        // DSP column minus the 100 ms dispatch setup.
+        let m = CostModel::default();
+        let cases = [
+            (Complement, (1u64 << 25) as f64, 9.9),
+            (Conv2d, 512.0 * 512.0 * 81.0, 11.5),
+            (Dotprod, (1u64 << 26) as f64, 24.9),
+            (Matmul, 500.0f64.powi(3), 415.9),
+            (Pattern, (1u64 << 25) as f64 * 16.0, 168.2),
+            (Fft, 5.0 * (1u64 << 19) as f64 * 19.0, 620.9),
+        ];
+        for (kind, items, want_ms) in cases {
+            let got_ms = m.exec_ns(kind, items, TargetId::C64xDsp) / 1e6;
+            assert!(
+                (got_ms - want_ms).abs() / want_ms < 0.01,
+                "{kind:?}: got {got_ms:.1} want {want_ms:.1}"
+            );
+        }
+    }
+
+    #[test]
+    fn fft_is_the_only_compute_regression() {
+        let m = CostModel::default();
+        for kind in WorkloadKind::ALL {
+            let s = m.compute_speedup(kind);
+            if kind == Fft {
+                assert!(s < 1.0, "fft must lose on the DSP, got {s}");
+            } else {
+                assert!(s > 1.0, "{kind:?} must win on the DSP, got {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_dsp_speedup_matches_paper_band() {
+        // Paper: 31.9x end-to-end at 500x500 (including setup); compute
+        // speedup must therefore be ~39.6x.
+        let s = CostModel::default().compute_speedup(Matmul);
+        assert!((35.0..45.0).contains(&s), "compute speedup {s}");
+    }
+}

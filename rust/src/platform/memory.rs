@@ -1,0 +1,244 @@
+//! Shared-memory region allocator — the paper's custom memory management.
+//!
+//! On the DM3730 part of the address space is shared between the ARM and
+//! the DSP; VPE replaces the program's memory operations with custom ones
+//! that place shared data in that region when the JIT loads the IR
+//! (paper §4).  This module is that allocator: a first-fit free-list over
+//! a fixed-size region, with alignment, coalescing on free, and usage
+//! accounting.  The coordinator stages every offloaded function's
+//! parameter block through it, so exhaustion and fragmentation behave
+//! like the real platform.
+
+use crate::error::{Error, Result};
+
+/// One allocation inside the shared region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Allocation {
+    pub offset: u64,
+    pub size: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct FreeBlock {
+    offset: u64,
+    size: u64,
+}
+
+/// First-fit shared-memory allocator with coalescing.
+#[derive(Debug, Clone)]
+pub struct SharedRegion {
+    size: u64,
+    align: u64,
+    /// Sorted by offset, pairwise non-adjacent (always coalesced).
+    free: Vec<FreeBlock>,
+    used_bytes: u64,
+    peak_bytes: u64,
+    allocs: usize,
+}
+
+impl SharedRegion {
+    /// A region of `size` bytes with the given power-of-two alignment.
+    pub fn new(size: u64, align: u64) -> Result<Self> {
+        if align == 0 || !align.is_power_of_two() {
+            return Err(Error::Platform(format!(
+                "alignment {align} must be a power of two"
+            )));
+        }
+        Ok(SharedRegion {
+            size,
+            align,
+            free: vec![FreeBlock { offset: 0, size }],
+            used_bytes: 0,
+            peak_bytes: 0,
+            allocs: 0,
+        })
+    }
+
+    /// The DM3730 demonstrator's shared window: 64 MiB, 64-byte lines.
+    pub fn dm3730() -> Self {
+        Self::new(64 << 20, 64).expect("static config is valid")
+    }
+
+    fn round_up(&self, v: u64) -> u64 {
+        v.div_ceil(self.align) * self.align
+    }
+
+    /// Allocate `size` bytes (rounded up to the alignment). First fit.
+    pub fn alloc(&mut self, size: u64) -> Result<Allocation> {
+        if size == 0 {
+            return Err(Error::Platform("zero-size allocation".into()));
+        }
+        let size = self.round_up(size);
+        let idx = self
+            .free
+            .iter()
+            .position(|b| b.size >= size)
+            .ok_or_else(|| {
+                Error::Platform(format!(
+                    "shared region exhausted: need {size} B, used {}/{} B",
+                    self.used_bytes, self.size
+                ))
+            })?;
+        let block = self.free[idx];
+        let alloc = Allocation { offset: block.offset, size };
+        if block.size == size {
+            self.free.remove(idx);
+        } else {
+            self.free[idx] = FreeBlock { offset: block.offset + size, size: block.size - size };
+        }
+        self.used_bytes += size;
+        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
+        self.allocs += 1;
+        Ok(alloc)
+    }
+
+    /// Return an allocation to the region, coalescing with neighbours.
+    pub fn free(&mut self, alloc: Allocation) -> Result<()> {
+        if alloc.offset + alloc.size > self.size {
+            return Err(Error::Platform("free outside region".into()));
+        }
+        // Insertion point by offset.
+        let pos = self.free.partition_point(|b| b.offset < alloc.offset);
+        // Overlap checks against neighbours.
+        if pos > 0 {
+            let prev = self.free[pos - 1];
+            if prev.offset + prev.size > alloc.offset {
+                return Err(Error::Platform("double free / overlap (prev)".into()));
+            }
+        }
+        if pos < self.free.len() {
+            let next = self.free[pos];
+            if alloc.offset + alloc.size > next.offset {
+                return Err(Error::Platform("double free / overlap (next)".into()));
+            }
+        }
+        self.free.insert(pos, FreeBlock { offset: alloc.offset, size: alloc.size });
+        // Coalesce with next, then with prev.
+        if pos + 1 < self.free.len() {
+            let (cur, next) = (self.free[pos], self.free[pos + 1]);
+            if cur.offset + cur.size == next.offset {
+                self.free[pos].size += next.size;
+                self.free.remove(pos + 1);
+            }
+        }
+        if pos > 0 {
+            let (prev, cur) = (self.free[pos - 1], self.free[pos]);
+            if prev.offset + prev.size == cur.offset {
+                self.free[pos - 1].size += cur.size;
+                self.free.remove(pos);
+            }
+        }
+        self.used_bytes -= alloc.size;
+        Ok(())
+    }
+
+    /// Bytes currently allocated.
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    /// High-water mark.
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+
+    /// Total region size.
+    pub fn size(&self) -> u64 {
+        self.size
+    }
+
+    /// Number of successful allocations over the region's lifetime.
+    pub fn alloc_count(&self) -> usize {
+        self.allocs
+    }
+
+    /// Largest single allocation that would currently succeed.
+    pub fn largest_free(&self) -> u64 {
+        self.free.iter().map(|b| b.size).max().unwrap_or(0)
+    }
+
+    /// External fragmentation: 1 - largest_free / total_free.
+    pub fn fragmentation(&self) -> f64 {
+        let total: u64 = self.free.iter().map(|b| b.size).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        1.0 - self.largest_free() as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip_restores_region() {
+        let mut r = SharedRegion::new(1024, 64).unwrap();
+        let a = r.alloc(100).unwrap();
+        assert_eq!(a.size, 128); // rounded to alignment
+        assert_eq!(r.used_bytes(), 128);
+        r.free(a).unwrap();
+        assert_eq!(r.used_bytes(), 0);
+        assert_eq!(r.largest_free(), 1024);
+    }
+
+    #[test]
+    fn allocations_do_not_overlap() {
+        let mut r = SharedRegion::new(4096, 64).unwrap();
+        let xs: Vec<_> = (0..8).map(|_| r.alloc(300).unwrap()).collect();
+        for (i, a) in xs.iter().enumerate() {
+            for b in xs.iter().skip(i + 1) {
+                assert!(
+                    a.offset + a.size <= b.offset || b.offset + b.size <= a.offset,
+                    "{a:?} overlaps {b:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exhaustion_is_an_error_not_a_panic() {
+        let mut r = SharedRegion::new(256, 64).unwrap();
+        r.alloc(256).unwrap();
+        assert!(r.alloc(1).is_err());
+    }
+
+    #[test]
+    fn coalescing_reassembles_the_region() {
+        let mut r = SharedRegion::new(1024, 64).unwrap();
+        let a = r.alloc(256).unwrap();
+        let b = r.alloc(256).unwrap();
+        let c = r.alloc(256).unwrap();
+        // Free middle, then sides: must coalesce back to one block.
+        r.free(b).unwrap();
+        r.free(a).unwrap();
+        r.free(c).unwrap();
+        assert_eq!(r.largest_free(), 1024);
+        assert!(r.fragmentation() < 1e-12);
+    }
+
+    #[test]
+    fn double_free_detected() {
+        let mut r = SharedRegion::new(1024, 64).unwrap();
+        let a = r.alloc(128).unwrap();
+        r.free(a).unwrap();
+        assert!(r.free(a).is_err());
+    }
+
+    #[test]
+    fn zero_size_and_bad_align_rejected() {
+        assert!(SharedRegion::new(1024, 0).is_err());
+        assert!(SharedRegion::new(1024, 48).is_err());
+        let mut r = SharedRegion::new(1024, 64).unwrap();
+        assert!(r.alloc(0).is_err());
+    }
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let mut r = SharedRegion::new(1024, 64).unwrap();
+        let a = r.alloc(512).unwrap();
+        r.free(a).unwrap();
+        let _ = r.alloc(64).unwrap();
+        assert_eq!(r.peak_bytes(), 512);
+    }
+}

@@ -1,0 +1,30 @@
+//! The simulated heterogeneous platform — the paper's REPTAR/DM3730 SoC.
+//!
+//! The paper runs on a TI DM3730 DaVinci SoC: an ARM Cortex-A8 @ 1 GHz
+//! next to a C64x+ DSP @ 800 MHz, with a shared address region used to
+//! pass data between the two (paper §4).  None of that hardware is
+//! available here, so this module builds the closest faithful software
+//! substrate (see DESIGN.md, substitution table):
+//!
+//! - [`target`] — compute-target descriptors and health states;
+//! - [`costmodel`] — the calibrated cycle-cost model (derived from the
+//!   paper's own Table 1 / Fig 2 numbers) that drives the sim clock;
+//! - [`memory`] — the shared-memory region allocator (the custom memory
+//!   management functions VPE injects, paper §3.3/§4);
+//! - [`transfer`] — the DSP dispatch setup-cost model (the ~100 ms setup
+//!   visible in Fig 2b);
+//! - [`soc`] — the assembled DM3730 model with failure injection.
+
+pub mod costmodel;
+pub mod memory;
+pub mod soc;
+pub mod target;
+pub mod transfer;
+pub mod transport;
+
+pub use costmodel::CostModel;
+pub use memory::SharedRegion;
+pub use soc::Soc;
+pub use target::{Target, TargetHealth, TargetId};
+pub use transfer::TransferModel;
+pub use transport::{MpiModel, Transport};

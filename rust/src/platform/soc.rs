@@ -1,0 +1,184 @@
+//! The assembled DM3730 SoC model: targets + shared memory + transfer +
+//! cost model, with run-time failure injection.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::workloads::{PaperScale, WorkloadKind};
+
+use super::costmodel::CostModel;
+use super::memory::SharedRegion;
+use super::target::{Target, TargetHealth, TargetId};
+use super::transfer::TransferModel;
+use super::transport::Transport;
+
+/// The simulated SoC the coordinator runs against.
+#[derive(Debug, Clone)]
+pub struct Soc {
+    targets: HashMap<TargetId, Target>,
+    pub shared: SharedRegion,
+    /// Shared-memory staging costs (kept for introspection; the
+    /// dispatch path goes through `transport`).
+    pub transfer: TransferModel,
+    /// How bulk data reaches the remote target (paper default: the
+    /// shared window; swappable to message passing — see
+    /// `benches/transport.rs`).
+    pub transport: Transport,
+    pub cost: CostModel,
+}
+
+impl Default for Soc {
+    fn default() -> Self {
+        Self::dm3730()
+    }
+}
+
+impl Soc {
+    /// The REPTAR board's DM3730: ARM Cortex-A8 + C64x+ DSP, 64 MiB
+    /// shared window, Fig-2b transfer costs, Table-1-calibrated rates.
+    pub fn dm3730() -> Self {
+        let mut targets = HashMap::new();
+        for t in [Target::arm_cortex_a8(), Target::c64x_dsp()] {
+            targets.insert(t.id, t);
+        }
+        Soc {
+            targets,
+            shared: SharedRegion::dm3730(),
+            transfer: TransferModel::dm3730(),
+            transport: Transport::SharedMemory(TransferModel::dm3730()),
+            cost: CostModel::dm3730_calibrated(),
+        }
+    }
+
+    /// The same SoC behind a message-passing link instead of shared
+    /// memory (the paper's §3.3 alternative, as in BAAR [17]).
+    pub fn dm3730_message_passing(link: super::transport::MpiModel) -> Self {
+        let mut soc = Self::dm3730();
+        soc.transport = Transport::MessagePassing(link);
+        soc
+    }
+
+    /// Target descriptor (immutable view).
+    pub fn target(&self, id: TargetId) -> Result<&Target> {
+        self.targets
+            .get(&id)
+            .ok_or_else(|| Error::Platform(format!("unknown target {id:?}")))
+    }
+
+    /// Is `id` currently dispatchable?
+    pub fn is_usable(&self, id: TargetId) -> bool {
+        self.targets
+            .get(&id)
+            .map(|t| t.health.slowdown().is_some())
+            .unwrap_or(false)
+    }
+
+    /// Inject a hard failure (VPE must fail over — paper §1).
+    pub fn fail_target(&mut self, id: TargetId) {
+        if let Some(t) = self.targets.get_mut(&id) {
+            t.health = TargetHealth::Failed;
+        }
+    }
+
+    /// Inject a slowdown (e.g. thermal throttling).
+    pub fn degrade_target(&mut self, id: TargetId, factor: f64) {
+        if let Some(t) = self.targets.get_mut(&id) {
+            t.health = TargetHealth::Degraded(factor);
+        }
+    }
+
+    /// Restore a target to full health (resource became available again).
+    pub fn heal_target(&mut self, id: TargetId) {
+        if let Some(t) = self.targets.get_mut(&id) {
+            t.health = TargetHealth::Healthy;
+        }
+    }
+
+    /// Total execution time of one call on `target`: compute (health-
+    /// derated) plus, for remote targets, the transport's dispatch cost.
+    ///
+    /// Errors if the target is failed or unknown.
+    pub fn call_scaled_ns(
+        &self,
+        kind: WorkloadKind,
+        scale: &PaperScale,
+        target: TargetId,
+    ) -> Result<u64> {
+        let t = self.target(target)?;
+        let slow = t.health.slowdown().ok_or_else(|| {
+            Error::Platform(format!("target {target} is failed"))
+        })?;
+        let compute = self.cost.exec_ns(kind, scale.items, target) * slow;
+        let overhead = if target.is_host() { 0 } else { self.transport.dispatch_ns(scale) };
+        Ok(compute as u64 + overhead)
+    }
+
+    /// [`Self::call_scaled_ns`] from bare items/param-bytes (no bulk
+    /// payload — shared-memory semantics).
+    pub fn call_ns(
+        &self,
+        kind: WorkloadKind,
+        items: f64,
+        param_bytes: u64,
+        target: TargetId,
+    ) -> Result<u64> {
+        self.call_scaled_ns(
+            kind,
+            &PaperScale { items, param_bytes, payload_bytes: 0 },
+            target,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::WorkloadKind::*;
+
+    #[test]
+    fn table1_end_to_end_dsp_times() {
+        // call_ns on the DSP must reproduce the paper's VPE column
+        // (compute + 100 ms setup).
+        let soc = Soc::dm3730();
+        let cases = [
+            (Complement, (1u64 << 25) as f64, 109.9),
+            (Matmul, 500.0f64.powi(3), 515.9),
+            (Fft, 5.0 * (1u64 << 19) as f64 * 19.0, 720.9),
+        ];
+        for (kind, items, want_ms) in cases {
+            let got = soc.call_ns(kind, items, 64, TargetId::C64xDsp).unwrap() as f64 / 1e6;
+            assert!(
+                (got - want_ms).abs() / want_ms < 0.01,
+                "{kind:?}: got {got:.1} want {want_ms}"
+            );
+        }
+    }
+
+    #[test]
+    fn host_calls_pay_no_dispatch_setup() {
+        let soc = Soc::dm3730();
+        let a = soc.call_ns(Dotprod, 1000.0, 64, TargetId::ArmCore).unwrap();
+        let pure = soc.cost.exec_ns(Dotprod, 1000.0, TargetId::ArmCore) as u64;
+        assert_eq!(a, pure);
+    }
+
+    #[test]
+    fn failed_target_rejects_calls() {
+        let mut soc = Soc::dm3730();
+        soc.fail_target(TargetId::C64xDsp);
+        assert!(!soc.is_usable(TargetId::C64xDsp));
+        assert!(soc.call_ns(Matmul, 1000.0, 64, TargetId::C64xDsp).is_err());
+        soc.heal_target(TargetId::C64xDsp);
+        assert!(soc.call_ns(Matmul, 1000.0, 64, TargetId::C64xDsp).is_ok());
+    }
+
+    #[test]
+    fn degradation_scales_compute_not_setup() {
+        let mut soc = Soc::dm3730();
+        let before = soc.call_ns(Matmul, 1e6, 0, TargetId::C64xDsp).unwrap();
+        soc.degrade_target(TargetId::C64xDsp, 2.0);
+        let after = soc.call_ns(Matmul, 1e6, 0, TargetId::C64xDsp).unwrap();
+        let setup = soc.transfer.dispatch_ns(0);
+        assert_eq!(after - setup, 2 * (before - setup));
+    }
+}

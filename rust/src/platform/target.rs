@@ -1,0 +1,124 @@
+//! Compute-target descriptors: the ARM host and the C64x+ DSP.
+
+/// Identity of a compute unit on the SoC.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TargetId {
+    /// ARM Cortex-A8 @ 1 GHz — the host CPU the JIT runs on.
+    ArmCore,
+    /// C64x+ DSP @ 800 MHz — 8-issue VLIW, no hardware floating point.
+    C64xDsp,
+}
+
+impl TargetId {
+    pub const ALL: [TargetId; 2] = [TargetId::ArmCore, TargetId::C64xDsp];
+
+    /// Short display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            TargetId::ArmCore => "ARM Cortex-A8",
+            TargetId::C64xDsp => "C64x+ DSP",
+        }
+    }
+
+    /// Is this the host (where the JIT itself runs)?
+    pub fn is_host(self) -> bool {
+        matches!(self, TargetId::ArmCore)
+    }
+}
+
+impl std::fmt::Display for TargetId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Health of a target; VPE reacts to changes at run time (paper §1:
+/// "the system can dynamically react to [...] hardware failure").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TargetHealth {
+    Healthy,
+    /// Still functional but slowed by the given factor (> 1.0), e.g. a
+    /// thermally throttled unit.
+    Degraded(f64),
+    /// Unreachable; dispatches must fail over to the host.
+    Failed,
+}
+
+impl TargetHealth {
+    /// Multiplicative execution-time factor, or `None` if unusable.
+    pub fn slowdown(self) -> Option<f64> {
+        match self {
+            TargetHealth::Healthy => Some(1.0),
+            TargetHealth::Degraded(f) => Some(f.max(1.0)),
+            TargetHealth::Failed => None,
+        }
+    }
+}
+
+/// Static description + dynamic health of one compute unit.
+#[derive(Debug, Clone)]
+pub struct Target {
+    pub id: TargetId,
+    /// Core clock in Hz (ARM: 1 GHz, DSP: 800 MHz — DM3730 datasheet).
+    pub freq_hz: u64,
+    /// Issue width (ARM A8: dual-issue in-order; C64x+: 8 functional units).
+    pub issue_width: u32,
+    /// Hardware floating point? The C64x+ lacks it — the root cause of
+    /// the paper's FFT regression (Table 1, 0.7x).
+    pub has_hw_float: bool,
+    pub health: TargetHealth,
+}
+
+impl Target {
+    pub fn arm_cortex_a8() -> Self {
+        Target {
+            id: TargetId::ArmCore,
+            freq_hz: 1_000_000_000,
+            issue_width: 2,
+            has_hw_float: true,
+            health: TargetHealth::Healthy,
+        }
+    }
+
+    pub fn c64x_dsp() -> Self {
+        Target {
+            id: TargetId::C64xDsp,
+            freq_hz: 800_000_000,
+            issue_width: 8,
+            has_hw_float: false,
+            health: TargetHealth::Healthy,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dm3730_frequencies_match_datasheet() {
+        assert_eq!(Target::arm_cortex_a8().freq_hz, 1_000_000_000);
+        assert_eq!(Target::c64x_dsp().freq_hz, 800_000_000);
+    }
+
+    #[test]
+    fn dsp_has_no_hw_float() {
+        assert!(!Target::c64x_dsp().has_hw_float);
+        assert!(Target::arm_cortex_a8().has_hw_float);
+    }
+
+    #[test]
+    fn health_slowdown() {
+        assert_eq!(TargetHealth::Healthy.slowdown(), Some(1.0));
+        assert_eq!(TargetHealth::Degraded(2.5).slowdown(), Some(2.5));
+        // Degraded below 1.0 is clamped: degradation never speeds up.
+        assert_eq!(TargetHealth::Degraded(0.5).slowdown(), Some(1.0));
+        assert_eq!(TargetHealth::Failed.slowdown(), None);
+    }
+
+    #[test]
+    fn only_arm_is_host() {
+        assert!(TargetId::ArmCore.is_host());
+        assert!(!TargetId::C64xDsp.is_host());
+    }
+}

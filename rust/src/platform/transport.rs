@@ -1,0 +1,168 @@
+//! Remote-dispatch transports — shared memory vs message passing.
+//!
+//! The paper (§3.3) restricts VPE to shared-memory systems ("in the
+//! context of VPE we consider only shared memory systems") and notes
+//! that elsewhere "we could adopt a message passing layer to virtualize
+//! the real hardware resources as in [17]" (BAAR's MPI offload to a
+//! Xeon Phi server).  This module implements both options so the choice
+//! becomes an ablation:
+//!
+//! - [`Transport::SharedMemory`] — the DM3730: bulk data already visible
+//!   to both targets, a dispatch pays only the fixed setup (code load,
+//!   IPC, cache coherency) plus parameter staging;
+//! - [`Transport::MessagePassing`] — a BAAR-like remote server: every
+//!   dispatch serializes and ships the *full payload* both ways over an
+//!   interconnect with latency and finite bandwidth.
+//!
+//! `cargo bench --bench transport` shows the consequence: message
+//! passing kills the memory-bound wins (complement, dotprod, pattern)
+//! (complement 7.4x -> 0.1x on an embedded link) while compute-dense
+//! matmul survives on a fast one — shared memory is
+//! load-bearing for the paper's Table 1.
+
+use crate::workloads::PaperScale;
+
+use super::transfer::TransferModel;
+
+/// A BAAR-like message-passing link to the remote target.
+#[derive(Debug, Clone, Copy)]
+pub struct MpiModel {
+    /// Remote code-load/invocation setup, ns — the same ~100 ms the
+    /// shared-memory dispatch pays (the DSP must still load the
+    /// function whichever way the data travels).
+    pub setup_ns: u64,
+    /// One-way message latency, ns (per dispatch: request + response).
+    pub latency_ns: u64,
+    /// Link bandwidth, bytes/second.
+    pub bandwidth_bps: f64,
+    /// Serialization/deserialization cost per payload byte, ns.
+    pub serialize_ns_per_byte: f64,
+}
+
+impl Default for MpiModel {
+    fn default() -> Self {
+        Self::embedded_ethernet()
+    }
+}
+
+impl MpiModel {
+    /// An embedded-class link (100 Mbit-ish effective: 12.5 MB/s,
+    /// 200 us latency) — the kind of fabric a REPTAR-era remote
+    /// accelerator would sit behind.
+    pub fn embedded_ethernet() -> Self {
+        MpiModel {
+            setup_ns: 100_000_000,
+            latency_ns: 200_000,
+            bandwidth_bps: 12.5e6,
+            serialize_ns_per_byte: 0.5,
+        }
+    }
+
+    /// A fast cluster link (BAAR's setting): 10 GbE-ish, 1.25 GB/s,
+    /// 10 us latency.
+    pub fn cluster_10gbe() -> Self {
+        MpiModel {
+            setup_ns: 100_000_000,
+            latency_ns: 10_000,
+            bandwidth_bps: 1.25e9,
+            serialize_ns_per_byte: 0.2,
+        }
+    }
+
+    /// Per-dispatch cost for a payload of `bytes` (shipped both ways:
+    /// inputs out, outputs back — we charge the full payload once, as
+    /// the split between directions is already folded into
+    /// `payload_bytes`).
+    pub fn dispatch_ns(&self, payload_bytes: u64) -> u64 {
+        let wire = payload_bytes as f64 / self.bandwidth_bps * 1e9;
+        let serde_cost = payload_bytes as f64 * self.serialize_ns_per_byte;
+        self.setup_ns + 2 * self.latency_ns + (wire + serde_cost) as u64
+    }
+}
+
+/// How bulk data reaches the remote target.
+#[derive(Debug, Clone, Copy)]
+pub enum Transport {
+    /// The DM3730's shared address window (paper §3.3/§4).
+    SharedMemory(TransferModel),
+    /// A message-passing layer as in BAAR [16, 17].
+    MessagePassing(MpiModel),
+}
+
+impl Default for Transport {
+    fn default() -> Self {
+        Transport::SharedMemory(TransferModel::dm3730())
+    }
+}
+
+impl Transport {
+    /// Total remote-dispatch overhead for a call of the given scale.
+    pub fn dispatch_ns(&self, scale: &PaperScale) -> u64 {
+        match self {
+            // Shared memory: bulk data is already visible; only the
+            // parameter block stages.
+            Transport::SharedMemory(t) => t.dispatch_ns(scale.param_bytes),
+            // Message passing: parameters ride along, the payload pays.
+            Transport::MessagePassing(m) => {
+                m.dispatch_ns(scale.payload_bytes + scale.param_bytes)
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Transport::SharedMemory(_) => "shared-memory",
+            Transport::MessagePassing(_) => "message-passing",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{paper_scale, WorkloadKind};
+
+    #[test]
+    fn shared_memory_ignores_payload() {
+        let t = Transport::default();
+        let mut big = paper_scale(WorkloadKind::Complement);
+        let small = PaperScale { payload_bytes: 0, ..big };
+        big.payload_bytes = 1 << 30;
+        assert_eq!(t.dispatch_ns(&big), t.dispatch_ns(&small));
+    }
+
+    #[test]
+    fn message_passing_charges_payload() {
+        let t = Transport::MessagePassing(MpiModel::embedded_ethernet());
+        let scale = paper_scale(WorkloadKind::Complement); // 64 MiB
+        let ns = t.dispatch_ns(&scale);
+        // 64 MiB at 12.5 MB/s is > 5 s — dwarfing the 9.9 ms compute win.
+        assert!(ns > 5_000_000_000, "{ns} ns");
+    }
+
+    #[test]
+    fn cluster_link_is_orders_faster_than_embedded() {
+        let scale = paper_scale(WorkloadKind::Dotprod);
+        let slow = MpiModel::embedded_ethernet().dispatch_ns(scale.payload_bytes);
+        let fast = MpiModel::cluster_10gbe().dispatch_ns(scale.payload_bytes);
+        assert!(slow > 20 * fast);
+    }
+
+    #[test]
+    fn setup_and_latency_floor_apply_to_empty_payloads() {
+        let m = MpiModel::embedded_ethernet();
+        assert_eq!(m.dispatch_ns(0), m.setup_ns + 2 * m.latency_ns);
+    }
+
+    #[test]
+    fn mpi_is_never_cheaper_than_shared_memory() {
+        // Same setup + payload on the wire: message passing must
+        // dominate the shared-memory dispatch for every workload.
+        let sm = Transport::default();
+        let mp = Transport::MessagePassing(MpiModel::cluster_10gbe());
+        for kind in WorkloadKind::ALL {
+            let s = paper_scale(kind);
+            assert!(mp.dispatch_ns(&s) >= sm.dispatch_ns(&s), "{kind:?}");
+        }
+    }
+}

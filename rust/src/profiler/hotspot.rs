@@ -1,0 +1,143 @@
+//! Hot-function detection: rank functions by cycle share and pick the
+//! off-load candidate (paper §3.1 — "the number of CPU cycles requested
+//! for its execution" is the sole selection metric).
+
+use crate::jit::module::{FunctionId, IrModule};
+
+use super::sampler::PerfSampler;
+
+/// Configuration for the detector.
+#[derive(Debug, Clone, Copy)]
+pub struct HotspotDetector {
+    /// Minimum profiled calls before a function can be nominated (the
+    /// warm-up the paper describes).
+    pub min_samples: u64,
+    /// Minimum share of total cycles (0..1) to count as "hot".
+    pub share_threshold: f64,
+}
+
+impl Default for HotspotDetector {
+    fn default() -> Self {
+        HotspotDetector { min_samples: 5, share_threshold: 0.10 }
+    }
+}
+
+/// A nomination produced by the detector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hotspot {
+    pub function: FunctionId,
+    /// Share of all profiled cycles attributed to this function.
+    pub cycle_share: f64,
+}
+
+impl HotspotDetector {
+    /// The hottest eligible function, if any.
+    ///
+    /// System calls are excluded (paper §3: "system calls are
+    /// automatically excluded from the analysis"), as are functions with
+    /// fewer than `min_samples` profiled calls or below the share
+    /// threshold.
+    pub fn hottest(&self, sampler: &PerfSampler, module: &IrModule) -> Option<Hotspot> {
+        let total = sampler.total_cycles();
+        if total == 0 {
+            return None;
+        }
+        sampler
+            .profiles()
+            .filter(|(f, p)| {
+                p.calls >= self.min_samples
+                    && module.function(*f).map(|irf| !irf.is_syscall).unwrap_or(false)
+            })
+            .map(|(f, p)| Hotspot {
+                function: f,
+                cycle_share: p.total_cycles as f64 / total as f64,
+            })
+            .filter(|h| h.cycle_share >= self.share_threshold)
+            .max_by(|a, b| a.cycle_share.total_cmp(&b.cycle_share))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jit::module::IrFunction;
+    use crate::platform::TargetId;
+    use crate::profiler::counters::CounterSample;
+    use crate::profiler::sampler::SamplerConfig;
+    use crate::sim::SimRng;
+
+    fn setup() -> (PerfSampler, IrModule, SimRng) {
+        let mut m = IrModule::new("test");
+        m.add_function(IrFunction::user("hot", None));
+        m.add_function(IrFunction::user("cold", None));
+        m.add_function(IrFunction::syscall("write"));
+        (
+            PerfSampler::new(SamplerConfig::default()).unwrap(),
+            m,
+            SimRng::seeded(1),
+        )
+    }
+
+    fn cycles(c: u64) -> CounterSample {
+        CounterSample { cycles: c, ..Default::default() }
+    }
+
+    #[test]
+    fn picks_the_dominant_function() {
+        let (mut s, m, mut rng) = setup();
+        for _ in 0..10 {
+            s.record(FunctionId(0), TargetId::ArmCore, cycles(1000), 10, &mut rng);
+            s.record(FunctionId(1), TargetId::ArmCore, cycles(10), 10, &mut rng);
+        }
+        let h = HotspotDetector::default().hottest(&s, &m).unwrap();
+        assert_eq!(h.function, FunctionId(0));
+        assert!(h.cycle_share > 0.9);
+    }
+
+    #[test]
+    fn syscalls_are_never_nominated() {
+        let (mut s, m, mut rng) = setup();
+        // The syscall dominates the cycle count...
+        for _ in 0..10 {
+            s.record(FunctionId(2), TargetId::ArmCore, cycles(10_000), 10, &mut rng);
+            s.record(FunctionId(0), TargetId::ArmCore, cycles(100), 10, &mut rng);
+        }
+        // ...but the user function is picked.
+        let h = HotspotDetector { share_threshold: 0.0, ..Default::default() }
+            .hottest(&s, &m)
+            .unwrap();
+        assert_eq!(h.function, FunctionId(0));
+    }
+
+    #[test]
+    fn respects_min_samples_warmup() {
+        let (mut s, m, mut rng) = setup();
+        for _ in 0..3 {
+            s.record(FunctionId(0), TargetId::ArmCore, cycles(1000), 10, &mut rng);
+        }
+        let d = HotspotDetector { min_samples: 5, share_threshold: 0.0 };
+        assert!(d.hottest(&s, &m).is_none());
+        for _ in 0..2 {
+            s.record(FunctionId(0), TargetId::ArmCore, cycles(1000), 10, &mut rng);
+        }
+        assert!(d.hottest(&s, &m).is_some());
+    }
+
+    #[test]
+    fn empty_profiles_yield_nothing() {
+        let (s, m, _) = setup();
+        assert!(HotspotDetector::default().hottest(&s, &m).is_none());
+    }
+
+    #[test]
+    fn share_threshold_filters_lukewarm_functions() {
+        let (mut s, m, mut rng) = setup();
+        for _ in 0..10 {
+            s.record(FunctionId(0), TargetId::ArmCore, cycles(100), 10, &mut rng);
+            s.record(FunctionId(1), TargetId::ArmCore, cycles(100), 10, &mut rng);
+        }
+        // Both at ~50%: a 60% threshold nominates neither.
+        let d = HotspotDetector { min_samples: 1, share_threshold: 0.6 };
+        assert!(d.hottest(&s, &m).is_none());
+    }
+}

@@ -1,0 +1,30 @@
+//! The `perf_event`-analog profiler (paper §3.1).
+//!
+//! The paper profiles the JIT-ed program with Linux `perf_event`, reading
+//! hardware counters (CPU cycles, cache misses, branch misses, page
+//! faults) at a run-time overhead of up to 20 %, and uses CPU cycles as
+//! the sole metric deciding which function to off-load.  This module is
+//! that stack, built against the simulated platform:
+//!
+//! - [`counters`] — the counter set and the synthetic counter sources
+//!   (derived from the cost model, like the real ones derive from the
+//!   silicon);
+//! - [`stats`] — rolling statistics (mean / stddev / EWMA) over samples;
+//! - [`sampler`] — the sampling engine: per-function profiles, counter
+//!   multiplexing, the ≤20 % measurement overhead, and the periodic
+//!   analysis bursts that the paper calls out as the cause of the larger
+//!   standard deviations under VPE (Table 1 caption, Fig 3c peak);
+//! - [`hotspot`] — cycle-share ranking and hot-function detection, with
+//!   system calls excluded (paper §3: "system calls are automatically
+//!   excluded from the analysis").
+
+pub mod counters;
+pub mod hotspot;
+pub mod multiplex;
+pub mod sampler;
+pub mod stats;
+
+pub use counters::{CounterKind, CounterSample};
+pub use hotspot::HotspotDetector;
+pub use sampler::{PerfSampler, SamplerConfig};
+pub use stats::{Ewma, RollingStats};

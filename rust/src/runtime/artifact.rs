@@ -1,0 +1,229 @@
+//! Artifact manifest + store: the bridge from `make artifacts` to the
+//! run-time coordinator.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+use super::client::RtClient;
+use super::exec::LoadedArtifact;
+
+/// Tensor shape+dtype as recorded by aot.py.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| Error::Parse("'shape' must be an array".into()))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| Error::Parse("bad dim".into())))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .req("dtype")?
+            .as_str()
+            .ok_or_else(|| Error::Parse("'dtype' must be a string".into()))?
+            .to_string();
+        Ok(TensorMeta { shape, dtype })
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub workload: String,
+    pub variant: String,
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+impl ArtifactMeta {
+    fn from_json(j: &Json) -> Result<Self> {
+        let s = |k: &str| -> Result<String> {
+            Ok(j.req(k)?
+                .as_str()
+                .ok_or_else(|| Error::Parse(format!("'{k}' must be a string")))?
+                .to_string())
+        };
+        let tensors = |k: &str| -> Result<Vec<TensorMeta>> {
+            j.req(k)?
+                .as_arr()
+                .ok_or_else(|| Error::Parse(format!("'{k}' must be an array")))?
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect()
+        };
+        Ok(ArtifactMeta {
+            name: s("name")?,
+            workload: s("workload")?,
+            variant: s("variant")?,
+            file: s("file")?,
+            inputs: tensors("inputs")?,
+            outputs: tensors("outputs")?,
+        })
+    }
+}
+
+/// artifacts/manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: String,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Parse a manifest document.
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = json::parse(text)?;
+        let format = j
+            .req("format")?
+            .as_str()
+            .ok_or_else(|| Error::Parse("'format' must be a string".into()))?
+            .to_string();
+        if format != "hlo-text" {
+            return Err(Error::Artifact(format!(
+                "unsupported artifact format '{format}' (want hlo-text)"
+            )));
+        }
+        let artifacts = j
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| Error::Parse("'artifacts' must be an array".into()))?
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { format, artifacts })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+/// Lazy-loading, caching artifact store.  Thread-safe; executables are
+/// compiled once and shared.
+pub struct ArtifactStore {
+    root: PathBuf,
+    manifest: Manifest,
+    client: RtClient,
+    cache: Mutex<HashMap<String, Arc<LoadedArtifact>>>,
+}
+
+impl std::fmt::Debug for ArtifactStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ArtifactStore")
+            .field("root", &self.root)
+            .field("artifacts", &self.manifest.artifacts.len())
+            .field("loaded", &self.cache.lock().unwrap().len())
+            .finish()
+    }
+}
+
+impl ArtifactStore {
+    /// Open the store rooted at `root` (expects `root/manifest.json`).
+    pub fn open(root: impl Into<PathBuf>, client: RtClient) -> Result<Self> {
+        let root = root.into();
+        let manifest = Manifest::load(&root.join("manifest.json"))?;
+        Ok(ArtifactStore { root, manifest, client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Open the repo-default store (`artifacts/` in the working
+    /// directory), creating the CPU client.
+    pub fn open_default() -> Result<Self> {
+        Self::open("artifacts", RtClient::cpu()?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Artifact names available.
+    pub fn names(&self) -> Vec<String> {
+        self.manifest.artifacts.iter().map(|a| a.name.clone()).collect()
+    }
+
+    /// Load (compile) an artifact by name, from cache when possible.
+    pub fn load(&self, name: &str) -> Result<Arc<LoadedArtifact>> {
+        if let Some(a) = self.cache.lock().unwrap().get(name) {
+            return Ok(a.clone());
+        }
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("no artifact named '{name}'")))?
+            .clone();
+        let path = self.root.join(&meta.file);
+        let exe = self.client.compile_hlo_text_file(&path)?;
+        let loaded = Arc::new(LoadedArtifact::new(meta, exe));
+        self.cache.lock().unwrap().insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Number of compiled executables held.
+    pub fn loaded_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    const DOC: &str = r#"{
+        "format": "hlo-text",
+        "artifacts": [{
+            "name": "x__naive", "workload": "x", "variant": "naive",
+            "file": "x__naive.hlo.txt",
+            "inputs": [{"shape": [2, 3], "dtype": "int32"}],
+            "outputs": [{"shape": [2, 3], "dtype": "int32"}]
+        }]
+    }"#;
+
+    #[test]
+    fn manifest_parses_own_schema() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        assert_eq!(m.get("x__naive").unwrap().inputs[0].element_count(), 6);
+        assert_eq!(m.get("x__naive").unwrap().variant, "naive");
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn wrong_format_rejected() {
+        let doc = r#"{"format": "proto", "artifacts": []}"#;
+        assert!(Manifest::parse(doc).is_err());
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        let doc = r#"{"format": "hlo-text", "artifacts": [{"name": "x"}]}"#;
+        assert!(Manifest::parse(doc).is_err());
+    }
+
+    #[test]
+    fn load_from_disk() {
+        let dir = TempDir::new("manifest").unwrap();
+        std::fs::write(dir.path().join("manifest.json"), DOC).unwrap();
+        let m = Manifest::load(&dir.path().join("manifest.json")).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+    }
+}

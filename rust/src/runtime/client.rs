@@ -1,0 +1,76 @@
+//! PJRT CPU client wrapper.
+
+use std::sync::Arc;
+
+use crate::error::Result;
+
+/// Shared handle to the PJRT CPU client.
+///
+/// One client serves the whole process; executables keep it alive via
+/// `Arc`.  (`xla::PjRtClient` is internally reference-counted, but we
+/// wrap it to own the construction policy and keep `xla` types out of
+/// the coordinator's signatures.)
+#[derive(Clone)]
+pub struct RtClient {
+    inner: Arc<xla::PjRtClient>,
+}
+
+impl std::fmt::Debug for RtClient {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RtClient")
+            .field("platform", &self.inner.platform_name())
+            .field("devices", &self.inner.device_count())
+            .finish()
+    }
+}
+
+impl RtClient {
+    /// Create the CPU client (the substrate standing in for both the ARM
+    /// core and the DSP — see DESIGN.md).
+    pub fn cpu() -> Result<Self> {
+        Ok(RtClient { inner: Arc::new(xla::PjRtClient::cpu()?) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.inner.device_count()
+    }
+
+    /// Compile an HLO computation to a loaded executable.
+    pub fn compile(&self, comp: &xla::XlaComputation) -> Result<xla::PjRtLoadedExecutable> {
+        Ok(self.inner.compile(comp)?)
+    }
+
+    /// Load an HLO-text file and compile it.
+    pub fn compile_hlo_text_file(
+        &self,
+        path: &std::path::Path,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.compile(&comp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let c = RtClient::cpu().unwrap();
+        assert!(c.device_count() >= 1);
+        assert!(!c.platform_name().is_empty());
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let c = RtClient::cpu().unwrap();
+        assert!(c
+            .compile_hlo_text_file(std::path::Path::new("/nonexistent.hlo.txt"))
+            .is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Loaded executable handle: typed conversion and timed execution.
+
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::workloads::{HostData, Tensor};
+
+use super::artifact::ArtifactMeta;
+
+/// A compiled artifact ready to execute.
+pub struct LoadedArtifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl std::fmt::Debug for LoadedArtifact {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LoadedArtifact").field("name", &self.meta.name).finish()
+    }
+}
+
+/// Convert a host tensor to an XLA literal with the right shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    let lit = match &t.data {
+        HostData::I32(v) => xla::Literal::vec1(v),
+        HostData::F32(v) => xla::Literal::vec1(v),
+    };
+    // Rank-1 (and rank-0 via reshape to []) round-trips through reshape.
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Convert an output literal back to a host tensor using the manifest's
+/// dtype/shape record.
+pub fn literal_to_tensor(lit: &xla::Literal, dtype: &str, shape: &[usize]) -> Result<Tensor> {
+    let data = match dtype {
+        "int32" => HostData::I32(lit.to_vec::<i32>()?),
+        "float32" => HostData::F32(lit.to_vec::<f32>()?),
+        other => {
+            return Err(Error::Artifact(format!("unsupported artifact dtype '{other}'")))
+        }
+    };
+    Ok(Tensor { shape: shape.to_vec(), data })
+}
+
+impl LoadedArtifact {
+    pub(crate) fn new(meta: ArtifactMeta, exe: xla::PjRtLoadedExecutable) -> Self {
+        LoadedArtifact { meta, exe }
+    }
+
+    /// Execute with host tensors; returns the (single) output tensor and
+    /// the host wall-clock execution time.
+    ///
+    /// All artifacts are lowered with `return_tuple=True`, so the raw
+    /// output is a 1-tuple that is unwrapped here.
+    pub fn execute(&self, inputs: &[Tensor]) -> Result<(Tensor, Duration)> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(Error::Artifact(format!(
+                "artifact '{}' wants {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (t, m)) in inputs.iter().zip(&self.meta.inputs).enumerate() {
+            if t.shape != m.shape {
+                return Err(Error::Artifact(format!(
+                    "artifact '{}' input {i}: shape {:?} != manifest {:?}",
+                    self.meta.name, t.shape, m.shape
+                )));
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+
+        let start = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let wall = start.elapsed();
+
+        let out = result.to_tuple1()?;
+        let om = &self.meta.outputs[0];
+        let tensor = literal_to_tensor(&out, &om.dtype, &om.shape)?;
+        Ok((tensor, wall))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip_i32() {
+        let t = Tensor::i32(vec![2, 3], vec![1, 2, 3, 4, 5, 6]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit, "int32", &[2, 3]).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn tensor_literal_roundtrip_f32_scalar_shape() {
+        let t = Tensor::f32(vec![4], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit, "float32", &[4]).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn rank0_tensor_roundtrip() {
+        let t = Tensor::i32(vec![], vec![42]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit, "int32", &[]).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[42]);
+    }
+
+    #[test]
+    fn unsupported_dtype_is_an_error() {
+        let t = Tensor::i32(vec![1], vec![1]);
+        let lit = tensor_to_literal(&t).unwrap();
+        assert!(literal_to_tensor(&lit, "complex64", &[1]).is_err());
+    }
+}

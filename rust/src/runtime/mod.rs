@@ -1,0 +1,25 @@
+//! PJRT runtime: load AOT'd HLO-text artifacts and execute them on the
+//! request path.
+//!
+//! Python (JAX + Pallas) runs exactly once, at build time, producing
+//! `artifacts/*.hlo.txt` + `artifacts/manifest.json` (`make artifacts`).
+//! This module is everything the Rust coordinator needs at run time:
+//!
+//! - [`client`] — the PJRT CPU client (`xla` crate);
+//! - [`artifact`] — the manifest model and the [`artifact::ArtifactStore`]
+//!   (lazy load + compile + cache, one executable per artifact);
+//! - [`exec`] — the loaded executable handle, typed tensor conversion
+//!   ([`crate::workloads::Tensor`] ⇄ `xla::Literal`), and wall-clock
+//!   timing of each execution.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits HloModuleProto with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod client;
+pub mod exec;
+
+pub use artifact::{ArtifactMeta, ArtifactStore, Manifest, TensorMeta};
+pub use client::RtClient;
+pub use exec::LoadedArtifact;

@@ -1,0 +1,203 @@
+//! Deterministic simulation primitives: the simulated clock and RNG.
+//!
+//! VPE's *decisions* and all paper-scale metrics run on a simulated
+//! nanosecond clock driven by the calibrated cost model
+//! ([`crate::platform::costmodel`]); real PJRT wall-clock times are
+//! recorded separately.  Everything here is deterministic under a seed so
+//! tests and benches are reproducible.
+//!
+//! The RNG is an in-tree xoshiro256++ (seeded via SplitMix64) — the build
+//! environment is offline and vendors only the `xla` closure, so `rand`
+//! is not available; xoshiro256++ is small, fast, and plenty for
+//! simulation noise.
+
+/// Simulated monotonic clock, nanosecond resolution.
+#[derive(Debug, Clone, Default)]
+pub struct SimClock {
+    now_ns: u64,
+}
+
+impl SimClock {
+    /// A clock starting at t = 0.
+    pub fn new() -> Self {
+        Self { now_ns: 0 }
+    }
+
+    /// Current simulated time in nanoseconds.
+    pub fn now_ns(&self) -> u64 {
+        self.now_ns
+    }
+
+    /// Advance the clock by `ns` nanoseconds.
+    pub fn advance(&mut self, ns: u64) {
+        self.now_ns = self.now_ns.saturating_add(ns);
+    }
+
+    /// Current simulated time in milliseconds (f64, for reporting).
+    pub fn now_ms(&self) -> f64 {
+        self.now_ns as f64 / 1e6
+    }
+}
+
+/// xoshiro256++ PRNG with the distributions the simulator needs.
+#[derive(Debug, Clone)]
+pub struct SimRng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl SimRng {
+    /// Seed the generator (any u64, including 0, is fine — SplitMix64
+    /// expands it into a full non-zero state).
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = seed;
+        SimRng {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
+    }
+
+    /// Next raw u64 (xoshiro256++).
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` (53-bit resolution).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    pub fn uniform_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo < hi, "empty range [{lo}, {hi})");
+        // Rejection-free mapping is fine at simulation scale.
+        lo + (self.uniform() * (hi - lo) as f64) as u64
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn standard_normal(&mut self) -> f64 {
+        let mut u1 = self.uniform();
+        if u1 <= f64::MIN_POSITIVE {
+            u1 = f64::MIN_POSITIVE;
+        }
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Normal with the given mean / stddev.
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.standard_normal()
+    }
+
+    /// Normal, truncated below at `floor`.
+    pub fn normal_clamped(&mut self, mean: f64, std: f64, floor: f64) -> f64 {
+        self.normal(mean, std).max(floor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_starts_at_zero_and_advances() {
+        let mut c = SimClock::new();
+        assert_eq!(c.now_ns(), 0);
+        c.advance(1_500_000);
+        assert_eq!(c.now_ns(), 1_500_000);
+        assert!((c.now_ms() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clock_saturates_instead_of_overflowing() {
+        let mut c = SimClock::new();
+        c.advance(u64::MAX);
+        c.advance(10);
+        assert_eq!(c.now_ns(), u64::MAX);
+    }
+
+    #[test]
+    fn rng_is_deterministic_under_seed() {
+        let mut a = SimRng::seeded(42);
+        let mut b = SimRng::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_differs_across_seeds() {
+        let mut a = SimRng::seeded(1);
+        let mut b = SimRng::seeded(2);
+        let same = (0..32).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_is_in_unit_interval_and_spread() {
+        let mut rng = SimRng::seeded(9);
+        let xs: Vec<f64> = (0..10_000).map(|_| rng.uniform()).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn uniform_u64_respects_bounds() {
+        let mut rng = SimRng::seeded(4);
+        for _ in 0..10_000 {
+            let v = rng.uniform_u64(10, 20);
+            assert!((10..20).contains(&v));
+        }
+    }
+
+    #[test]
+    fn normal_has_roughly_right_moments() {
+        let mut rng = SimRng::seeded(7);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal(10.0, 2.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 10.0).abs() < 0.1, "mean {mean}");
+        assert!((var.sqrt() - 2.0).abs() < 0.1, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn normal_clamped_respects_floor() {
+        let mut rng = SimRng::seeded(3);
+        for _ in 0..1000 {
+            assert!(rng.normal_clamped(0.0, 100.0, 0.0) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn zero_seed_is_not_degenerate() {
+        let mut rng = SimRng::seeded(0);
+        let a = rng.next_u64();
+        let b = rng.next_u64();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,108 @@
+//! Minimal bench runner for the `harness = false` bench targets —
+//! criterion-style statistics (warmup, N timed iterations, mean/min/max/
+//! stddev) without the external crate.
+
+use std::time::Instant;
+
+use crate::profiler::stats::RollingStats;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>10}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.min_ns),
+            fmt_ns(self.max_ns),
+            format!("±{}", fmt_ns(self.std_ns)),
+        );
+    }
+}
+
+/// Pretty time formatting (ns → µs → ms → s).
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Print the standard header.
+pub fn header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>12} {:>12} {:>12} {:>10}",
+        "benchmark", "mean", "min", "max", "std"
+    );
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = RollingStats::new();
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        stats.push(t.elapsed().as_nanos() as f64);
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: stats.mean(),
+        std_ns: stats.stddev(),
+        min_ns: stats.min(),
+        max_ns: stats.max(),
+    };
+    r.print();
+    r
+}
+
+/// Prevent the optimizer from discarding a value (std::hint-based).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 1, 5, || {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns && r.mean_ns <= r.max_ns);
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.0e9), "3.000 s");
+    }
+}

@@ -1,0 +1,130 @@
+//! Tiny argv parser: `--flag`, `--key value`, and positionals.
+//!
+//! Replaces `clap` in this offline build.  Each binary declares its
+//! options by querying the parsed [`Args`]; unknown flags are reported.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Config("bare '--' not supported".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().expect("peeked");
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string(), String::new());
+                }
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process's own argv.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// Boolean flag: present (with or without value "true").
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(v) => v.is_empty() || v == "true",
+            None => false,
+        }
+    }
+
+    /// String option with default.
+    pub fn opt_str(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed numeric option with default.
+    pub fn opt<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|_| {
+                Error::Config(format!("--{key}: cannot parse '{v}'"))
+            }),
+        }
+    }
+
+    /// Error on any flag never queried (typo protection).
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.consumed.borrow();
+        for k in self.flags.keys() {
+            if !seen.iter().any(|s| s == k) {
+                return Err(Error::Config(format!("unknown option --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positionals_flags_and_values() {
+        let a = parse(&["run", "--iters", "30", "--sim-only", "--name=x"]);
+        assert_eq!(a.positionals, vec!["run"]);
+        assert_eq!(a.opt::<usize>("iters", 0).unwrap(), 30);
+        assert!(a.flag("sim-only"));
+        assert_eq!(a.opt_str("name", "-"), "x");
+        assert!(!a.flag("absent"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.opt::<u64>("n", 7).unwrap(), 7);
+        assert_eq!(a.opt_str("s", "d"), "d");
+    }
+
+    #[test]
+    fn bad_value_is_an_error() {
+        let a = parse(&["--n", "abc"]);
+        assert!(a.opt::<u64>("n", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = parse(&["--typo", "1"]);
+        assert!(a.finish().is_err());
+        let b = parse(&["--known", "1"]);
+        b.opt::<u64>("known", 0).unwrap();
+        assert!(b.finish().is_ok());
+    }
+}

@@ -1,0 +1,16 @@
+//! In-tree utilities replacing external crates (the build environment is
+//! offline and vendors only the `xla` closure):
+//!
+//! - [`json`] — minimal JSON parser + emitter for the artifact manifest;
+//! - [`cli`] — tiny argv parser for the `vpe` binary and the examples;
+//! - [`bench`] — the bench runner used by `cargo bench` targets
+//!   (criterion-style statistics, no external harness);
+//! - [`prop`] — a small property-testing driver (seeded random cases +
+//!   failure reporting) used by the `proptest`-style suites;
+//! - [`tmp`] — unique temporary directories for tests.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod tmp;

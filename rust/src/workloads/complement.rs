@@ -1,0 +1,42 @@
+//! DNA complement — the paper's first benchmark (7.4x on the DSP).
+
+use super::{generator, paper_scale, shapes, Tensor, WorkloadInstance, WorkloadKind};
+
+/// Pure-Rust reference: table-lookup complement, the loop a C programmer
+/// writes.  Also used as the honest local baseline in benches.
+pub fn reference(seq: &[i32]) -> Vec<i32> {
+    const TABLE: [i32; 4] = [3, 2, 1, 0];
+    seq.iter().map(|&c| TABLE[c as usize]).collect()
+}
+
+/// Deterministic artifact-shape instance.
+pub fn instance(seed: u64) -> WorkloadInstance {
+    let n = shapes::COMPLEMENT_N;
+    let seq = generator::dna(n, seed);
+    let expected = reference(&seq);
+    WorkloadInstance {
+        kind: WorkloadKind::Complement,
+        scale: paper_scale(WorkloadKind::Complement),
+        inputs: vec![Tensor::i32(vec![n], seq)],
+        expected: Tensor::i32(vec![n], expected),
+        artifact_naive: "complement__naive".into(),
+        artifact_dsp: "complement__dsp".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complement_is_involutive() {
+        let seq = generator::dna(1000, 3);
+        assert_eq!(reference(&reference(&seq)), seq);
+    }
+
+    #[test]
+    fn complement_pairs() {
+        // A(0)<->T(3), C(1)<->G(2)
+        assert_eq!(reference(&[0, 1, 2, 3]), vec![3, 2, 1, 0]);
+    }
+}

@@ -1,0 +1,89 @@
+//! 2-D convolution (contour detection) — the paper's image-processing
+//! workload (3.8x on the DSP; the Fig 3 video prototype's hot function).
+
+use super::{generator, paper_scale, shapes, Tensor, WorkloadInstance, WorkloadKind};
+
+/// Pure-Rust reference: SAME cross-correlation with zero padding — the
+/// nested loop the paper's C code runs.
+pub fn reference(img: &[i32], h: usize, w: usize, kernel: &[i32], k: usize) -> Vec<i32> {
+    assert_eq!(img.len(), h * w);
+    assert_eq!(kernel.len(), k * k);
+    let pad = (k / 2) as isize;
+    let mut out = vec![0i32; h * w];
+    for y in 0..h as isize {
+        for x in 0..w as isize {
+            let mut acc = 0i32;
+            for dy in 0..k as isize {
+                for dx in 0..k as isize {
+                    let sy = y + dy - pad;
+                    let sx = x + dx - pad;
+                    if sy >= 0 && sy < h as isize && sx >= 0 && sx < w as isize {
+                        acc += kernel[(dy * k as isize + dx) as usize]
+                            * img[(sy * w as isize + sx) as usize];
+                    }
+                }
+            }
+            out[(y * w as isize + x) as usize] = acc;
+        }
+    }
+    out
+}
+
+/// A 3x3 Laplacian edge-detection kernel (the demonstrator's contour
+/// filter).
+pub fn laplacian3() -> Vec<i32> {
+    vec![0, 1, 0, 1, -4, 1, 0, 1, 0]
+}
+
+/// Deterministic artifact-shape instance.
+pub fn instance(seed: u64) -> WorkloadInstance {
+    let (h, w, k) = (shapes::CONV_H, shapes::CONV_W, shapes::CONV_K);
+    let img = generator::ints(h * w, -8, 8, seed);
+    let kernel = generator::ints(k * k, -4, 4, seed.wrapping_add(1));
+    let expected = reference(&img, h, w, &kernel, k);
+    WorkloadInstance {
+        kind: WorkloadKind::Conv2d,
+        scale: paper_scale(WorkloadKind::Conv2d),
+        inputs: vec![Tensor::i32(vec![h, w], img), Tensor::i32(vec![k, k], kernel)],
+        expected: Tensor::i32(vec![h, w], expected),
+        artifact_naive: "conv2d__naive".into(),
+        artifact_dsp: "conv2d__dsp".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kernel_is_identity() {
+        let img = generator::ints(16 * 16, -8, 8, 1);
+        let mut k = vec![0i32; 9];
+        k[4] = 1;
+        assert_eq!(reference(&img, 16, 16, &k, 3), img);
+    }
+
+    #[test]
+    fn constant_image_laplacian_is_zero_in_interior() {
+        let img = vec![5i32; 8 * 8];
+        let out = reference(&img, 8, 8, &laplacian3(), 3);
+        // Interior pixels: 5*(0+1+0+1-4+1+0+1+0) = 0.
+        for y in 1..7 {
+            for x in 1..7 {
+                assert_eq!(out[y * 8 + x], 0);
+            }
+        }
+        // Border pixels see zero padding, so they are non-zero.
+        assert_ne!(out[0], 0);
+    }
+
+    #[test]
+    fn linearity_in_image() {
+        let img = generator::ints(8 * 8, -8, 8, 2);
+        let k = generator::ints(9, -4, 4, 3);
+        let doubled: Vec<i32> = img.iter().map(|x| 2 * x).collect();
+        let a = reference(&doubled, 8, 8, &k, 3);
+        let b: Vec<i32> = reference(&img, 8, 8, &k, 3).iter().map(|x| 2 * x).collect();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,47 @@
+//! Integer dot product — the paper's third benchmark (6.3x on the DSP).
+
+use super::{generator, paper_scale, shapes, Tensor, WorkloadInstance, WorkloadKind};
+
+/// Pure-Rust reference: the multiply-accumulate loop.
+pub fn reference(x: &[i32], y: &[i32]) -> i32 {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a.wrapping_mul(*b)).fold(0i32, i32::wrapping_add)
+}
+
+/// Deterministic artifact-shape instance.
+pub fn instance(seed: u64) -> WorkloadInstance {
+    let n = shapes::DOT_N;
+    let x = generator::ints(n, -8, 8, seed);
+    let y = generator::ints(n, -8, 8, seed.wrapping_add(1));
+    let expected = reference(&x, &y);
+    WorkloadInstance {
+        kind: WorkloadKind::Dotprod,
+        scale: paper_scale(WorkloadKind::Dotprod),
+        inputs: vec![Tensor::i32(vec![n], x), Tensor::i32(vec![n], y)],
+        expected: Tensor::i32(vec![], vec![expected]),
+        artifact_naive: "dotprod__naive".into(),
+        artifact_dsp: "dotprod__dsp".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_value() {
+        assert_eq!(reference(&[1, 2, 3], &[4, 5, 6]), 32);
+    }
+
+    #[test]
+    fn orthogonal_vectors() {
+        assert_eq!(reference(&[1, 0], &[0, 1]), 0);
+    }
+
+    #[test]
+    fn commutative() {
+        let x = generator::ints(1000, -8, 8, 1);
+        let y = generator::ints(1000, -8, 8, 2);
+        assert_eq!(reference(&x, &y), reference(&y, &x));
+    }
+}

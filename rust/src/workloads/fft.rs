@@ -1,0 +1,108 @@
+//! FFT — the paper's *regression* case: float-heavy, software floating
+//! point on the C64x+, 0.7x under blind offload (Table 1), hence the
+//! workload that exercises VPE's revert path.
+
+use super::{generator, paper_scale, shapes, Tensor, WorkloadInstance, WorkloadKind};
+
+/// Pure-Rust reference: iterative radix-2 DIT FFT over split re/im
+/// planes.  Returns (re, im).
+pub fn reference(re_in: &[f32], im_in: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let n = re_in.len();
+    assert!(n.is_power_of_two() && n >= 2, "N={n} must be a power of two");
+    assert_eq!(im_in.len(), n);
+    let bits = n.trailing_zeros();
+    // Bit-reversal permutation.
+    let mut re = vec![0f32; n];
+    let mut im = vec![0f32; n];
+    for (i, (&r, &q)) in re_in.iter().zip(im_in).enumerate() {
+        let j = (i as u32).reverse_bits() >> (32 - bits);
+        re[j as usize] = r;
+        im[j as usize] = q;
+    }
+    // log2(N) butterfly stages.
+    let mut m = 1usize;
+    while m < n {
+        let step = std::f64::consts::PI / m as f64;
+        for block in (0..n).step_by(2 * m) {
+            for j in 0..m {
+                let ang = -(j as f64) * step;
+                let (w_re, w_im) = (ang.cos() as f32, ang.sin() as f32);
+                let (t, b) = (block + j, block + j + m);
+                let wb_re = re[b] * w_re - im[b] * w_im;
+                let wb_im = re[b] * w_im + im[b] * w_re;
+                let (tr, ti) = (re[t], im[t]);
+                re[t] = tr + wb_re;
+                im[t] = ti + wb_im;
+                re[b] = tr - wb_re;
+                im[b] = ti - wb_im;
+            }
+        }
+        m *= 2;
+    }
+    (re, im)
+}
+
+/// Deterministic artifact-shape instance; expected output stacked as
+/// (2, N) to match the artifact output layout.
+pub fn instance(seed: u64) -> WorkloadInstance {
+    let n = shapes::FFT_N;
+    let re = generator::normals(n, seed);
+    let im = generator::normals(n, seed.wrapping_add(1));
+    let (out_re, out_im) = reference(&re, &im);
+    let mut stacked = out_re;
+    stacked.extend_from_slice(&out_im);
+    WorkloadInstance {
+        kind: WorkloadKind::Fft,
+        scale: paper_scale(WorkloadKind::Fft),
+        inputs: vec![Tensor::f32(vec![n], re), Tensor::f32(vec![n], im)],
+        expected: Tensor::f32(vec![2, n], stacked),
+        artifact_naive: "fft__naive".into(),
+        artifact_dsp: "fft__dsp".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn impulse_transforms_to_ones() {
+        let n = 64;
+        let mut re = vec![0f32; n];
+        re[0] = 1.0;
+        let (fr, fi) = reference(&re, &vec![0f32; n]);
+        for k in 0..n {
+            assert!((fr[k] - 1.0).abs() < 1e-5);
+            assert!(fi[k].abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn constant_transforms_to_impulse() {
+        let n = 32;
+        let (fr, fi) = reference(&vec![1f32; n], &vec![0f32; n]);
+        assert!((fr[0] - n as f32).abs() < 1e-4);
+        for k in 1..n {
+            assert!(fr[k].abs() < 1e-4, "re[{k}]={}", fr[k]);
+            assert!(fi[k].abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let n = 256;
+        let re = generator::normals(n, 1);
+        let im = generator::normals(n, 2);
+        let (fr, fi) = reference(&re, &im);
+        let t: f64 = re.iter().zip(&im).map(|(a, b)| (a * a + b * b) as f64).sum();
+        let f: f64 =
+            fr.iter().zip(&fi).map(|(a, b)| (a * a + b * b) as f64).sum::<f64>() / n as f64;
+        assert!((t - f).abs() / t < 1e-5, "t={t} f={f}");
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_pow2() {
+        reference(&[0.0; 100], &[0.0; 100]);
+    }
+}

@@ -1,0 +1,50 @@
+//! Deterministic input generators for the benchmark workloads.
+//!
+//! All generators are seeded (ChaCha8) so every test, bench, and example
+//! sees identical data; values are kept small (|x| < 8) so int32
+//! accumulations are exact at every size we use.
+
+use crate::sim::SimRng;
+
+/// A DNA sequence: codes 0..4 (A, C, G, T).
+pub fn dna(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = SimRng::seeded(seed);
+    (0..n).map(|_| rng.uniform_u64(0, 4) as i32).collect()
+}
+
+/// Small signed integers in [lo, hi).
+pub fn ints(n: usize, lo: i64, hi: i64, seed: u64) -> Vec<i32> {
+    let mut rng = SimRng::seeded(seed);
+    (0..n)
+        .map(|_| (lo + rng.uniform_u64(0, (hi - lo) as u64) as i64) as i32)
+        .collect()
+}
+
+/// Standard-normal f32 samples.
+pub fn normals(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SimRng::seeded(seed);
+    (0..n).map(|_| rng.standard_normal() as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dna_is_in_alphabet() {
+        assert!(dna(10_000, 1).iter().all(|&c| (0..4).contains(&c)));
+    }
+
+    #[test]
+    fn ints_respect_bounds() {
+        assert!(ints(10_000, -8, 8, 2).iter().all(|&x| (-8..8).contains(&x)));
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        assert_eq!(dna(100, 5), dna(100, 5));
+        assert_eq!(ints(100, -8, 8, 5), ints(100, -8, 8, 5));
+        assert_eq!(normals(100, 5), normals(100, 5));
+        assert_ne!(dna(100, 5), dna(100, 6));
+    }
+}

@@ -1,0 +1,94 @@
+//! Square matrix multiplication — the paper's headline benchmark
+//! (31.9x on the DSP at 500x500; the Fig 2b size sweep).
+
+use super::{generator, matmul_scale, Tensor, WorkloadInstance, WorkloadKind};
+
+/// Pure-Rust reference: the naive ijk triple loop — exactly the
+//  cache-unfriendly code the paper's 131.9 ns/MAC ARM rate comes from.
+pub fn reference(a: &[i32], b: &[i32], n: usize) -> Vec<i32> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n * n);
+    let mut c = vec![0i32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for k in 0..n {
+                acc = acc.wrapping_add(a[i * n + k].wrapping_mul(b[k * n + j]));
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Cache-blocked ikj variant — used by the perf pass as the optimized
+/// local baseline (what `-O3` + a careful developer achieves on the host).
+pub fn reference_blocked(a: &[i32], b: &[i32], n: usize, block: usize) -> Vec<i32> {
+    let mut c = vec![0i32; n * n];
+    let bs = block.max(1);
+    for ii in (0..n).step_by(bs) {
+        for kk in (0..n).step_by(bs) {
+            for jj in (0..n).step_by(bs) {
+                for i in ii..(ii + bs).min(n) {
+                    for k in kk..(kk + bs).min(n) {
+                        let aik = a[i * n + k];
+                        for j in jj..(jj + bs).min(n) {
+                            c[i * n + j] =
+                                c[i * n + j].wrapping_add(aik.wrapping_mul(b[k * n + j]));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Deterministic instance at size `n` (one of `shapes::MATMUL_SIZES` for
+/// artifact-backed execution; any size for sim-only use).
+pub fn instance(n: usize, seed: u64) -> WorkloadInstance {
+    let a = generator::ints(n * n, -8, 8, seed);
+    let b = generator::ints(n * n, -8, 8, seed.wrapping_add(1));
+    let expected = reference(&a, &b, n);
+    WorkloadInstance {
+        kind: WorkloadKind::Matmul,
+        scale: matmul_scale(n as u64),
+        inputs: vec![Tensor::i32(vec![n, n], a), Tensor::i32(vec![n, n], b)],
+        expected: Tensor::i32(vec![n, n], expected),
+        artifact_naive: format!("matmul{n}__naive"),
+        artifact_dsp: format!("matmul{n}__dsp"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity() {
+        let n = 8;
+        let a = generator::ints(n * n, -8, 8, 1);
+        let mut eye = vec![0i32; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1;
+        }
+        assert_eq!(reference(&a, &eye, n), a);
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        let n = 24;
+        let a = generator::ints(n * n, -8, 8, 2);
+        let b = generator::ints(n * n, -8, 8, 3);
+        let want = reference(&a, &b, n);
+        for block in [1, 4, 8, 16, 32] {
+            assert_eq!(reference_blocked(&a, &b, n, block), want, "block={block}");
+        }
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[1,2],[3,4]] @ [[1,1],[1,1]] = [[3,3],[7,7]]
+        assert_eq!(reference(&[1, 2, 3, 4], &[1, 1, 1, 1], 2), vec![3, 3, 7, 7]);
+    }
+}

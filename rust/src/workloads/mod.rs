@@ -1,0 +1,308 @@
+//! The six benchmark workloads of the paper (§5.1), as first-class
+//! objects: paper-scale parameters feeding the cost model, deterministic
+//! input generators at the AOT *artifact* shapes, and pure-Rust reference
+//! implementations (the "C program the developer wrote") used both as
+//! correctness oracles for the PJRT outputs and as honest local baselines
+//! in the benches.
+//!
+//! The algorithms come from the Computer Language Benchmarks Game-derived
+//! set the paper uses: DNA complement, 2-D convolution, dot product,
+//! square matrix multiplication, DNA pattern search, FFT — adapted (as in
+//! the paper) to limit floating point, which the C64x+ only handles in
+//! software.
+
+pub mod complement;
+pub mod conv2d;
+pub mod dotprod;
+pub mod fft;
+pub mod generator;
+pub mod matmul;
+pub mod pattern;
+
+/// The six benchmark algorithms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkloadKind {
+    Complement,
+    Conv2d,
+    Dotprod,
+    Matmul,
+    Pattern,
+    Fft,
+}
+
+impl WorkloadKind {
+    pub const ALL: [WorkloadKind; 6] = [
+        WorkloadKind::Complement,
+        WorkloadKind::Conv2d,
+        WorkloadKind::Dotprod,
+        WorkloadKind::Matmul,
+        WorkloadKind::Pattern,
+        WorkloadKind::Fft,
+    ];
+
+    /// Display name, matching the paper's Table 1 rows.
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkloadKind::Complement => "Complement",
+            WorkloadKind::Conv2d => "Convolution",
+            WorkloadKind::Dotprod => "DotProduct",
+            WorkloadKind::Matmul => "MatrixMult.",
+            WorkloadKind::Pattern => "PatternMatch.",
+            WorkloadKind::Fft => "FFT",
+        }
+    }
+
+    /// Fraction of floating-point operations in the hot loop — the
+    /// feature the paper's discussion ties to the FFT regression.
+    pub fn float_frac(self) -> f64 {
+        match self {
+            WorkloadKind::Fft => 1.0,
+            _ => 0.0,
+        }
+    }
+}
+
+impl std::fmt::Display for WorkloadKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Paper-scale workload parameters: the sizes behind Table 1, expressed
+/// as the `items` count consumed by the cost model plus the parameter
+/// block staged through shared memory on a remote dispatch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PaperScale {
+    /// Inner-loop item count (see costmodel.rs derivation table).
+    pub items: f64,
+    /// Parameter-block bytes staged per remote dispatch (pointers+sizes).
+    pub param_bytes: u64,
+    /// Bulk data bytes (inputs + outputs) the function touches.  Free
+    /// under the DM3730's shared memory (paper §3.3); paid in full by
+    /// the message-passing transport alternative
+    /// ([`crate::platform::transport`]).
+    pub payload_bytes: u64,
+}
+
+/// Paper-scale parameters for each workload (Table 1 sizes).
+pub fn paper_scale(kind: WorkloadKind) -> PaperScale {
+    match kind {
+        // 32 Mi-character sequence (1 B codes, in + out).
+        WorkloadKind::Complement => PaperScale {
+            items: (1u64 << 25) as f64,
+            param_bytes: 32,
+            payload_bytes: 2 * (1 << 25),
+        },
+        // 512x512 image, 9x9 kernel, i32 pixels (in + out + kernel).
+        WorkloadKind::Conv2d => PaperScale {
+            items: 512.0 * 512.0 * 81.0,
+            param_bytes: 48,
+            payload_bytes: 2 * 512 * 512 * 4 + 81 * 4,
+        },
+        // 64 Mi-element i32 vectors (two in, scalar out).
+        WorkloadKind::Dotprod => PaperScale {
+            items: (1u64 << 26) as f64,
+            param_bytes: 40,
+            payload_bytes: 2 * (1 << 26) * 4,
+        },
+        // 500x500 i32 matrices (two in, one out).
+        WorkloadKind::Matmul => matmul_scale(500),
+        // 32 Mi-char sequence + pattern, count out.
+        WorkloadKind::Pattern => PaperScale {
+            items: (1u64 << 25) as f64 * 16.0,
+            param_bytes: 48,
+            payload_bytes: (1 << 25) + 16 + 4,
+        },
+        // 512 Ki-point FFT: 5 N log2 N flop-ish items; f32 re+im both ways.
+        WorkloadKind::Fft => PaperScale {
+            items: 5.0 * (1u64 << 19) as f64 * 19.0,
+            param_bytes: 40,
+            payload_bytes: 4 * (1 << 19) * 4,
+        },
+    }
+}
+
+/// Matmul paper-scale parameters for an arbitrary size (Fig 2b sweep).
+pub fn matmul_scale(n: u64) -> PaperScale {
+    PaperScale {
+        items: (n as f64).powi(3),
+        param_bytes: 48,
+        payload_bytes: 3 * n * n * 4,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Host tensors (artifact-shape data exchanged with the PJRT runtime)
+// ---------------------------------------------------------------------------
+
+/// Host-side tensor buffer (only the dtypes the artifacts use).
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostData {
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+impl HostData {
+    pub fn len(&self) -> usize {
+        match self {
+            HostData::I32(v) => v.len(),
+            HostData::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self {
+            HostData::I32(_) => "int32",
+            HostData::F32(_) => "float32",
+        }
+    }
+}
+
+/// A shaped host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: HostData,
+}
+
+impl Tensor {
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: HostData::I32(data) }
+    }
+
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: HostData::F32(data) }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match &self.data {
+            HostData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match &self.data {
+            HostData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Approximate equality (exact for i32; atol for f32).
+    pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        match (&self.data, &other.data) {
+            (HostData::I32(a), HostData::I32(b)) => a == b,
+            (HostData::F32(a), HostData::F32(b)) => {
+                a.len() == b.len()
+                    && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= atol)
+            }
+            _ => false,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workload instances
+// ---------------------------------------------------------------------------
+
+/// Artifact-shape constants — MUST match python/compile/aot.py.
+pub mod shapes {
+    pub const COMPLEMENT_N: usize = 65536;
+    pub const CONV_H: usize = 128;
+    pub const CONV_W: usize = 128;
+    pub const CONV_K: usize = 3;
+    pub const DOT_N: usize = 262144;
+    pub const PATTERN_N: usize = 65536;
+    pub const PATTERN_P: usize = 16;
+    pub const FFT_N: usize = 1024;
+    pub const MATMUL_SIZES: [usize; 4] = [16, 32, 64, 128];
+}
+
+/// A fully materialized workload: inputs at artifact shape, the expected
+/// output from the pure-Rust reference, artifact names for both builds,
+/// and the paper-scale parameters for the cost model.
+#[derive(Debug, Clone)]
+pub struct WorkloadInstance {
+    pub kind: WorkloadKind,
+    pub scale: PaperScale,
+    pub inputs: Vec<Tensor>,
+    pub expected: Tensor,
+    pub artifact_naive: String,
+    pub artifact_dsp: String,
+}
+
+/// Build a deterministic instance of `kind` at the artifact shape.
+pub fn instance(kind: WorkloadKind, seed: u64) -> WorkloadInstance {
+    match kind {
+        WorkloadKind::Complement => complement::instance(seed),
+        WorkloadKind::Conv2d => conv2d::instance(seed),
+        WorkloadKind::Dotprod => dotprod::instance(seed),
+        WorkloadKind::Matmul => matmul::instance(128, seed),
+        WorkloadKind::Pattern => pattern::instance(seed),
+        WorkloadKind::Fft => fft::instance(seed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scale_items_match_costmodel_derivation() {
+        assert_eq!(paper_scale(WorkloadKind::Complement).items, (1u64 << 25) as f64);
+        assert_eq!(paper_scale(WorkloadKind::Matmul).items, 125_000_000.0);
+        assert_eq!(matmul_scale(500).items, 125_000_000.0);
+    }
+
+    #[test]
+    fn all_instances_have_consistent_shapes() {
+        for kind in WorkloadKind::ALL {
+            let w = instance(kind, 42);
+            assert!(!w.inputs.is_empty(), "{kind:?}");
+            for t in &w.inputs {
+                assert_eq!(t.shape.iter().product::<usize>(), t.data.len(), "{kind:?}");
+            }
+            assert_eq!(
+                w.expected.shape.iter().product::<usize>(),
+                w.expected.data.len(),
+                "{kind:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn instances_are_deterministic() {
+        for kind in WorkloadKind::ALL {
+            let a = instance(kind, 7);
+            let b = instance(kind, 7);
+            assert_eq!(a.inputs, b.inputs, "{kind:?}");
+            assert_eq!(a.expected, b.expected, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn tensor_allclose_discriminates() {
+        let a = Tensor::f32(vec![2], vec![1.0, 2.0]);
+        let b = Tensor::f32(vec![2], vec![1.0, 2.0 + 1e-6]);
+        assert!(a.allclose(&b, 1e-5));
+        assert!(!a.allclose(&b, 1e-8));
+        let c = Tensor::i32(vec![2], vec![1, 2]);
+        assert!(!a.allclose(&c, 1.0));
+    }
+
+    #[test]
+    fn only_fft_is_float() {
+        for kind in WorkloadKind::ALL {
+            assert_eq!(kind.float_frac() > 0.5, kind == WorkloadKind::Fft);
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! DNA pattern search — the paper's second-biggest win (22.7x).
+
+use super::{generator, paper_scale, shapes, Tensor, WorkloadInstance, WorkloadKind};
+
+/// Pure-Rust reference: count occurrences of `pat` at every start
+/// position of `seq` (naive scan, the paper's C loop).
+pub fn reference(seq: &[i32], pat: &[i32]) -> i32 {
+    if pat.is_empty() || pat.len() > seq.len() {
+        return 0;
+    }
+    let mut count = 0i32;
+    for start in 0..=(seq.len() - pat.len()) {
+        if seq[start..start + pat.len()] == *pat {
+            count += 1;
+        }
+    }
+    count
+}
+
+/// Deterministic artifact-shape instance.  The pattern is sampled from
+/// the sequence itself so at least one match exists.
+pub fn instance(seed: u64) -> WorkloadInstance {
+    let (n, p) = (shapes::PATTERN_N, shapes::PATTERN_P);
+    let seq = generator::dna(n, seed);
+    let start = (seed as usize).wrapping_mul(2654435761) % (n - p);
+    let pat: Vec<i32> = seq[start..start + p].to_vec();
+    let expected = reference(&seq, &pat);
+    WorkloadInstance {
+        kind: WorkloadKind::Pattern,
+        scale: paper_scale(WorkloadKind::Pattern),
+        inputs: vec![Tensor::i32(vec![n], seq), Tensor::i32(vec![p], pat)],
+        expected: Tensor::i32(vec![], vec![expected]),
+        artifact_naive: "pattern__naive".into(),
+        artifact_dsp: "pattern__dsp".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_overlapping_matches() {
+        // "AAAA" contains "AA" three times.
+        assert_eq!(reference(&[0, 0, 0, 0], &[0, 0]), 3);
+    }
+
+    #[test]
+    fn no_match() {
+        assert_eq!(reference(&[0, 1, 2, 3], &[3, 3]), 0);
+    }
+
+    #[test]
+    fn pattern_longer_than_seq() {
+        assert_eq!(reference(&[0, 1], &[0, 1, 2]), 0);
+    }
+
+    #[test]
+    fn instance_has_at_least_one_match() {
+        for seed in 0..5 {
+            let w = instance(seed);
+            let count = w.expected.as_i32().unwrap()[0];
+            assert!(count >= 1, "seed {seed}: count {count}");
+        }
+    }
+}

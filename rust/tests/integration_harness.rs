@@ -1,0 +1,56 @@
+//! Integration tests over the bench harness: the paper's evaluation
+//! regenerates with the right shape end to end.
+
+use vpe::bench_harness::{fig2, fig3, table1};
+use vpe::platform::TargetId;
+use vpe::workloads::WorkloadKind;
+
+#[test]
+fn table1_rows_cover_all_workloads_in_paper_order() {
+    let rows = table1::table1(10, false).unwrap();
+    let kinds: Vec<WorkloadKind> = rows.iter().map(|r| r.kind).collect();
+    assert_eq!(kinds, WorkloadKind::ALL.to_vec());
+}
+
+#[test]
+fn table1_render_includes_paper_comparison_columns() {
+    let rows = table1::table1(6, false).unwrap();
+    let md = table1::render(&rows).to_markdown();
+    assert!(md.contains("paper speedup"));
+    assert!(md.contains("reverted to ARM"));
+    assert!(md.contains("31.9x"));
+}
+
+#[test]
+fn fig2b_curve_has_the_paper_shape() {
+    // Flat DSP plateau, monotone ARM curve, single crossover.
+    let (points, _) = fig2::fig2b(&fig2::default_sizes(), 3, 9);
+    let mut crossings = 0;
+    for w in points.windows(2) {
+        assert!(w[1].arm_ms > w[0].arm_ms, "ARM curve must grow");
+        if w[0].winner() != w[1].winner() {
+            crossings += 1;
+        }
+    }
+    assert_eq!(crossings, 1, "exactly one ARM->DSP crossover");
+    assert_eq!(points.first().unwrap().winner(), TargetId::ArmCore);
+    assert_eq!(points.last().unwrap().winner(), TargetId::C64xDsp);
+}
+
+#[test]
+fn fig3_ablation_period_trades_bursts_for_fps() {
+    let fast = fig3::fig3_with_period(150, 30, 2).unwrap();
+    let slow = fig3::fig3_with_period(150, 30, 32).unwrap();
+    assert!(fast.bursts > slow.bursts);
+    // More frequent analysis -> more profiler CPU work -> lower fps.
+    assert!(fast.fps_after < slow.fps_after);
+}
+
+#[test]
+fn fig3_grant_frame_controls_the_transition() {
+    for grant in [10usize, 50] {
+        let s = fig3::fig3(120, grant, false).unwrap();
+        let off = s.offload_frame.unwrap();
+        assert!(off >= grant && off < grant + 15, "grant {grant}: offload at {off}");
+    }
+}

@@ -1,0 +1,240 @@
+//! Integration tests: the whole coordinator against the simulated
+//! platform, plus (when `make artifacts` has run) the real PJRT path.
+
+use vpe::coordinator::policy::AlwaysOffloadPolicy;
+use vpe::coordinator::{Vpe, VpeConfig};
+use vpe::platform::TargetId;
+use vpe::profiler::sampler::SamplerConfig;
+use vpe::workloads::WorkloadKind;
+
+fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+// ---------------------------------------------------------------------------
+// Simulation-level stories (always run)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_workload_reaches_the_paper_verdict() {
+    // 5 workloads end on the DSP; the FFT is tried and reverted.
+    for kind in WorkloadKind::ALL {
+        let mut v = Vpe::new(VpeConfig::sim_only()).unwrap();
+        let f = v.register_workload(kind).unwrap();
+        v.run(f, 25).unwrap();
+        let want = if kind == WorkloadKind::Fft {
+            TargetId::ArmCore
+        } else {
+            TargetId::C64xDsp
+        };
+        assert_eq!(v.current_target(f).unwrap(), want, "{kind:?}");
+        assert_eq!(v.events().offloads().len(), 1, "{kind:?} must be tried once");
+    }
+}
+
+#[test]
+fn hotspot_is_chosen_among_competing_functions() {
+    // An app with a heavy matmul and a light dotprod: the matmul is
+    // offloaded first (it dominates the cycle counts).
+    let mut v = Vpe::new(VpeConfig::sim_only()).unwrap();
+    let mm = v.register_matmul(500).unwrap();
+    let dot = v.register_workload(WorkloadKind::Dotprod).unwrap();
+    for _ in 0..8 {
+        v.call(mm).unwrap();
+        v.call(dot).unwrap();
+    }
+    assert_eq!(v.current_target(mm).unwrap(), TargetId::C64xDsp);
+    let first_offload = v.events().offloads()[0].1;
+    assert_eq!(first_offload, mm, "matmul must be nominated first");
+}
+
+#[test]
+fn syscalls_are_registered_but_never_offloaded() {
+    let mut v = Vpe::new(VpeConfig::sim_only()).unwrap();
+    let _write = v.register_syscall("write").unwrap();
+    let mm = v.register_workload(WorkloadKind::Matmul).unwrap();
+    v.run(mm, 20).unwrap();
+    // Only the user function shows up in offloads.
+    for (_, f, _) in v.events().offloads() {
+        assert_eq!(f, mm);
+    }
+}
+
+#[test]
+fn degraded_dsp_changes_the_verdict() {
+    // A 40x-degraded DSP makes even the matmul not worth offloading:
+    // VPE tries it, observes, and reverts — adaptivity beyond the
+    // paper's static table.
+    let mut v = Vpe::new(VpeConfig::sim_only()).unwrap();
+    v.soc_mut().degrade_target(TargetId::C64xDsp, 40.0);
+    let f = v.register_matmul(500).unwrap();
+    v.run(f, 25).unwrap();
+    assert_eq!(v.current_target(f).unwrap(), TargetId::ArmCore);
+    assert_eq!(v.events().reverts().len(), 1);
+}
+
+#[test]
+fn clock_accumulates_warmup_plus_steady_state() {
+    let mut v = Vpe::new(VpeConfig::sim_only()).unwrap();
+    let f = v.register_matmul(500).unwrap();
+    let recs = v.run(f, 10).unwrap();
+    let total: u64 = recs.iter().map(|r| r.total_ns()).sum();
+    assert_eq!(v.clock().now_ns(), total, "clock must equal the sum of call costs");
+}
+
+#[test]
+fn shared_region_is_clean_after_a_run() {
+    let mut v = Vpe::new(VpeConfig::sim_only()).unwrap();
+    let f = v.register_workload(WorkloadKind::Conv2d).unwrap();
+    v.run(f, 30).unwrap();
+    assert_eq!(v.soc().shared.used_bytes(), 0, "staged parameter blocks leaked");
+    assert!(v.soc().shared.alloc_count() > 0, "offloaded calls must stage params");
+}
+
+#[test]
+fn always_offload_never_recovers_from_fft() {
+    // Ablation: without the observe/revert loop the FFT stays 0.7x
+    // forever — the paper's §5.2 argument for VPE's dynamism.
+    let mut cfg = VpeConfig::sim_only();
+    cfg.sampler = SamplerConfig::default();
+    let mut v = Vpe::with_policy(cfg, Box::new(AlwaysOffloadPolicy)).unwrap();
+    let f = v.register_workload(WorkloadKind::Fft).unwrap();
+    v.run(f, 25).unwrap();
+    assert_eq!(v.current_target(f).unwrap(), TargetId::C64xDsp);
+    assert!(v.events().reverts().is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// Real-artifact stories (skip when artifacts are absent)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn all_artifacts_load_and_verify_against_rust_references() {
+    if !artifacts_present() {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    }
+    let store = vpe::runtime::ArtifactStore::open_default().unwrap();
+    // Every workload, both builds, must produce the Rust reference's
+    // output at the artifact shape.
+    for kind in WorkloadKind::ALL {
+        let inst = vpe::workloads::instance(kind, 0xABCD);
+        for name in [&inst.artifact_naive, &inst.artifact_dsp] {
+            let a = store.load(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            let (out, _) = a.execute(&inst.inputs).unwrap();
+            let tol = if kind == WorkloadKind::Fft { 0.1 } else { 0.0 };
+            assert!(
+                inst.expected.allclose(&out, tol),
+                "{name}: output does not match the Rust reference"
+            );
+        }
+    }
+}
+
+#[test]
+fn matmul_artifacts_cover_all_aot_sizes() {
+    if !artifacts_present() {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    }
+    let store = vpe::runtime::ArtifactStore::open_default().unwrap();
+    for n in vpe::workloads::shapes::MATMUL_SIZES {
+        let inst = vpe::workloads::matmul::instance(n, 7);
+        for name in [&inst.artifact_naive, &inst.artifact_dsp] {
+            let a = store.load(name).unwrap();
+            let (out, _) = a.execute(&inst.inputs).unwrap();
+            assert!(inst.expected.allclose(&out, 0.0), "{name}");
+        }
+    }
+}
+
+#[test]
+fn full_lifecycle_with_real_execution() {
+    if !artifacts_present() {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    }
+    let mut v = Vpe::new(VpeConfig::default()).unwrap();
+    let f = v.register_workload(WorkloadKind::Conv2d).unwrap();
+    let recs = v.run(f, 15).unwrap();
+    // Both the naive build (warm-up on ARM) and the Pallas build
+    // (steady state on DSP) really executed and verified.
+    assert!(recs.iter().all(|r| r.output_ok == Some(true)));
+    assert!(recs.iter().any(|r| r.target == TargetId::ArmCore));
+    assert!(recs.iter().any(|r| r.target == TargetId::C64xDsp));
+    assert_eq!(v.mismatch_count(f), 0);
+}
+
+#[test]
+fn call_with_runs_custom_inputs_through_the_current_target() {
+    if !artifacts_present() {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    }
+    let mut v = Vpe::new(VpeConfig::default()).unwrap();
+    let f = v.register_workload(WorkloadKind::Conv2d).unwrap();
+    let h = vpe::workloads::shapes::CONV_H;
+    let w = vpe::workloads::shapes::CONV_W;
+    let img = vpe::workloads::generator::ints(h * w, -8, 8, 99);
+    let ker = vpe::workloads::conv2d::laplacian3();
+    let want = vpe::workloads::conv2d::reference(&img, h, w, &ker, 3);
+    let inputs = [
+        vpe::workloads::Tensor::i32(vec![h, w], img),
+        vpe::workloads::Tensor::i32(vec![3, 3], ker),
+    ];
+    // Before and after the offload the same inputs give the same output.
+    let (_, out1) = v.call_with(f, &inputs).unwrap();
+    for _ in 0..12 {
+        v.call(f).unwrap();
+    }
+    assert_eq!(v.current_target(f).unwrap(), TargetId::C64xDsp);
+    let (rec2, out2) = v.call_with(f, &inputs).unwrap();
+    assert_eq!(rec2.target, TargetId::C64xDsp);
+    assert_eq!(out1.unwrap().as_i32().unwrap(), want.as_slice());
+    assert_eq!(out2.unwrap().as_i32().unwrap(), want.as_slice());
+}
+
+// ---------------------------------------------------------------------------
+// Input-pattern discontinuities (paper §3: VPE "can revise its decisions")
+// ---------------------------------------------------------------------------
+
+#[test]
+fn input_discontinuity_reopens_a_blacklisted_decision() {
+    // Small matrices: the 100 ms setup makes the DSP lose, VPE reverts.
+    // Then the caller's matrices grow 500x in work: with retry_after the
+    // policy re-trials and commits to the DSP.
+    let mut cfg = VpeConfig::sim_only();
+    cfg.blind.retry_after = Some(8);
+    let mut v = Vpe::new(cfg).unwrap();
+    let f = v.register_matmul(40).unwrap(); // ARM ~8.4 ms, DSP ~100 ms
+    v.run(f, 18).unwrap();
+    assert_eq!(v.current_target(f).unwrap(), TargetId::ArmCore, "small: must revert");
+    let reverts_small = v.events().reverts().len();
+    assert!(reverts_small >= 1, "at least one failed trial");
+
+    // The input pattern changes: same function, 500x500 matrices.
+    v.set_scale(f, vpe::workloads::matmul_scale(500)).unwrap();
+    v.run(f, 30).unwrap();
+    assert_eq!(
+        v.current_target(f).unwrap(),
+        TargetId::C64xDsp,
+        "large: the re-trial must commit"
+    );
+    assert!(
+        v.events().offloads().len() > reverts_small,
+        "a fresh trial happened after the discontinuity"
+    );
+    assert_eq!(v.events().reverts().len(), reverts_small, "the new trial succeeded");
+}
+
+#[test]
+fn without_retry_the_decision_stays_stale() {
+    // Ablation for the test above: the paper's plain blind offload with
+    // permanent blacklisting misses the input change.
+    let mut v = Vpe::new(VpeConfig::sim_only()).unwrap();
+    let f = v.register_matmul(40).unwrap();
+    v.run(f, 20).unwrap();
+    v.set_scale(f, vpe::workloads::matmul_scale(500)).unwrap();
+    v.run(f, 30).unwrap();
+    assert_eq!(v.current_target(f).unwrap(), TargetId::ArmCore, "stale verdict persists");
+}

@@ -1,0 +1,247 @@
+//! Property-based tests over the coordinator's substrates (in-tree
+//! `util::prop` driver, 100+ random cases per property).
+
+use vpe::coordinator::decision_tree::{DecisionTree, Observation};
+use vpe::jit::module::{FunctionId, IrFunction, IrModule};
+use vpe::jit::wrapper::DispatchTable;
+use vpe::platform::memory::SharedRegion;
+use vpe::platform::{CostModel, Soc, TargetId};
+use vpe::profiler::stats::RollingStats;
+use vpe::util::prop::{self, assert_prop};
+use vpe::workloads::WorkloadKind;
+
+// ---------------------------------------------------------------------------
+// Shared-memory allocator
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_allocations_never_overlap_and_free_restores() {
+    prop::check("shared-region random alloc/free", 150, |g| {
+        let mut region = SharedRegion::new(1 << 16, 64).expect("region");
+        let mut live: Vec<vpe::platform::memory::Allocation> = Vec::new();
+        for _ in 0..g.usize_in(5, 60) {
+            if !live.is_empty() && g.bool() {
+                let idx = g.usize_in(0, live.len());
+                let a = live.swap_remove(idx);
+                region.free(a).map_err(|e| e.to_string())?;
+            } else {
+                let size = g.u64_in(1, 4096);
+                if let Ok(a) = region.alloc(size) {
+                    // overlap check against every live allocation
+                    for b in &live {
+                        let disjoint =
+                            a.offset + a.size <= b.offset || b.offset + b.size <= a.offset;
+                        assert_prop(disjoint, format!("{a:?} overlaps {b:?}"))?;
+                    }
+                    live.push(a);
+                }
+            }
+            let live_sum: u64 = live.iter().map(|a| a.size).sum();
+            assert_prop(
+                region.used_bytes() == live_sum,
+                format!("used {} != live {}", region.used_bytes(), live_sum),
+            )?;
+        }
+        // Free everything: the region must coalesce back to one block.
+        for a in live.drain(..) {
+            region.free(a).map_err(|e| e.to_string())?;
+        }
+        assert_prop(region.used_bytes() == 0, "leak")?;
+        assert_prop(region.largest_free() == 1 << 16, "fragmentation remains")
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Cost model
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_cost_model_is_monotone_in_items() {
+    let model = CostModel::default();
+    let kinds = WorkloadKind::ALL;
+    prop::check("exec_ns monotone", 200, |g| {
+        let kind = *g.choose(&kinds);
+        let a = g.u64_in(1, 1 << 28) as f64;
+        let b = a + g.u64_in(1, 1 << 20) as f64;
+        for t in TargetId::ALL {
+            assert_prop(
+                model.exec_ns(kind, a, t) < model.exec_ns(kind, b, t),
+                format!("{kind:?}/{t:?}: not monotone at {a}->{b}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dsp_dispatch_overhead_always_charged() {
+    let soc = Soc::dm3730();
+    let kinds = WorkloadKind::ALL;
+    prop::check("remote call >= setup", 200, |g| {
+        let kind = *g.choose(&kinds);
+        let items = g.u64_in(1, 1 << 24) as f64;
+        let bytes = g.u64_in(0, 4096);
+        let dsp = soc.call_ns(kind, items, bytes, TargetId::C64xDsp).expect("dsp healthy");
+        let setup = soc.transfer.dispatch_ns(bytes);
+        assert_prop(dsp >= setup, format!("dsp {dsp} < setup {setup}"))
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch table
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_dispatch_table_tracks_last_write() {
+    prop::check("dispatch slots independent", 100, |g| {
+        let n = g.usize_in(1, 32);
+        let mut m = IrModule::new("p");
+        for i in 0..n {
+            m.add_function(IrFunction::user(&format!("f{i}"), None));
+        }
+        m.finalize();
+        let table = DispatchTable::for_module(&m).expect("table");
+        let mut expected = vec![TargetId::ArmCore; n];
+        for _ in 0..g.usize_in(1, 80) {
+            let f = g.usize_in(0, n);
+            let t = if g.bool() { TargetId::C64xDsp } else { TargetId::ArmCore };
+            table.set_target(FunctionId(f as u32), t).expect("set");
+            expected[f] = t;
+            // Every slot must read back its own last write.
+            for (i, want) in expected.iter().enumerate() {
+                let got = table.current_target(FunctionId(i as u32)).expect("get");
+                assert_prop(got == *want, format!("slot {i}: {got:?} != {want:?}"))?;
+            }
+        }
+        let offloaded: Vec<usize> = expected
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| **t == TargetId::C64xDsp)
+            .map(|(i, _)| i)
+            .collect();
+        let got: Vec<usize> = table.offloaded().iter().map(|f| f.0 as usize).collect();
+        assert_prop(got == offloaded, format!("offloaded {got:?} != {offloaded:?}"))
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Rolling statistics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_welford_matches_two_pass() {
+    prop::check("welford == two-pass", 150, |g| {
+        let n = g.usize_in(2, 200);
+        let xs: Vec<f64> = (0..n).map(|_| g.f64_unit() * 1e6).collect();
+        let mut s = RollingStats::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64;
+        assert_prop((s.mean() - mean).abs() < 1e-6 * mean.abs().max(1.0), "mean mismatch")?;
+        assert_prop(
+            (s.stddev() - var.sqrt()).abs() < 1e-6 * var.sqrt().max(1.0),
+            "stddev mismatch",
+        )
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Decision tree
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_decision_tree_recovers_planted_threshold() {
+    prop::check("tree finds planted cut", 60, |g| {
+        let cut = 20.0 + g.f64_unit() * 400.0;
+        let n = g.usize_in(40, 200);
+        let obs: Vec<Observation> = (0..n)
+            .map(|i| {
+                let size = i as f64 * 500.0 / n as f64;
+                Observation {
+                    size,
+                    best: if size <= cut { TargetId::ArmCore } else { TargetId::C64xDsp },
+                }
+            })
+            .collect();
+        let tree = DecisionTree::fit(&obs, 6, 1);
+        let acc = tree.accuracy(&obs);
+        assert_prop(acc > 0.97, format!("cut {cut:.1}: accuracy {acc}"))
+    });
+}
+
+#[test]
+fn prop_decision_tree_never_panics_on_noise() {
+    prop::check("tree total on random labels", 80, |g| {
+        let n = g.usize_in(0, 60);
+        let obs: Vec<Observation> = (0..n)
+            .map(|_| Observation {
+                size: g.f64_unit() * 1000.0,
+                best: if g.bool() { TargetId::ArmCore } else { TargetId::C64xDsp },
+            })
+            .collect();
+        let tree = DecisionTree::fit(&obs, 4, 2);
+        // Predictions are total over the whole domain.
+        for _ in 0..10 {
+            let _ = tree.predict(g.f64_unit() * 2000.0 - 500.0);
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Workload references (cross-validated against each other)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_blocked_matmul_matches_naive() {
+    prop::check("blocked == naive matmul", 40, |g| {
+        let n = g.usize_in(1, 40);
+        let a = g.vec_i32(n * n, -8, 8);
+        let b = g.vec_i32(n * n, -8, 8);
+        let block = g.usize_in(1, 24);
+        let want = vpe::workloads::matmul::reference(&a, &b, n);
+        let got = vpe::workloads::matmul::reference_blocked(&a, &b, n, block);
+        assert_prop(got == want, format!("n={n} block={block}"))
+    });
+}
+
+#[test]
+fn prop_complement_involution_and_alphabet() {
+    prop::check("complement involution", 100, |g| {
+        let n = g.usize_in(1, 4096);
+        let seq: Vec<i32> = (0..n).map(|_| g.i64_in(0, 4) as i32).collect();
+        let c = vpe::workloads::complement::reference(&seq);
+        assert_prop(c.iter().all(|&x| (0..4).contains(&x)), "out of alphabet")?;
+        let cc = vpe::workloads::complement::reference(&c);
+        assert_prop(cc == seq, "not an involution")
+    });
+}
+
+#[test]
+fn prop_pattern_count_matches_bruteforce_windows() {
+    prop::check("pattern count", 100, |g| {
+        let n = g.usize_in(4, 512);
+        let p = g.usize_in(1, 8.min(n));
+        let seq: Vec<i32> = (0..n).map(|_| g.i64_in(0, 3) as i32).collect();
+        let pat: Vec<i32> = (0..p).map(|_| g.i64_in(0, 3) as i32).collect();
+        let got = vpe::workloads::pattern::reference(&seq, &pat);
+        let brute = (0..=n - p).filter(|&s| seq[s..s + p] == pat[..]).count() as i32;
+        assert_prop(got == brute, format!("n={n} p={p}: {got} != {brute}"))
+    });
+}
+
+#[test]
+fn prop_fft_parseval_and_linearity() {
+    prop::check("fft parseval", 40, |g| {
+        let n = 1usize << g.usize_in(1, 10);
+        let re: Vec<f32> = (0..n).map(|_| (g.f64_unit() * 2.0 - 1.0) as f32).collect();
+        let im: Vec<f32> = (0..n).map(|_| (g.f64_unit() * 2.0 - 1.0) as f32).collect();
+        let (fr, fi) = vpe::workloads::fft::reference(&re, &im);
+        let t: f64 = re.iter().zip(&im).map(|(a, b)| (a * a + b * b) as f64).sum();
+        let f: f64 =
+            fr.iter().zip(&fi).map(|(a, b)| (a * a + b * b) as f64).sum::<f64>() / n as f64;
+        assert_prop((t - f).abs() <= 1e-4 * t.max(1.0), format!("n={n}: {t} vs {f}"))
+    });
+}
