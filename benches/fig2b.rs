@@ -21,6 +21,7 @@ fn main() {
 
     // -- real execution across sizes --------------------------------------
     header("matmul — real execution across sizes");
+    #[cfg(feature = "pjrt")]
     let store = vpe::runtime::ArtifactStore::open_default().ok();
     for n in shapes::MATMUL_SIZES {
         let inst = matmul::instance(n, 42);
@@ -32,6 +33,7 @@ fn main() {
         bench(&format!("rust-blocked/matmul{n}"), 1, 5, || {
             black_box(matmul::reference_blocked(&a, &b, n, 32));
         });
+        #[cfg(feature = "pjrt")]
         if let Some(store) = &store {
             for name in [&inst.artifact_naive, &inst.artifact_dsp] {
                 if let Ok(art) = store.load(name) {

@@ -12,7 +12,7 @@ use vpe::coordinator::{Vpe, VpeConfig};
 use vpe::jit::module::{FunctionId, IrFunction, IrModule};
 use vpe::jit::wrapper::DispatchTable;
 use vpe::platform::memory::SharedRegion;
-use vpe::platform::{Soc, TargetId};
+use vpe::platform::{dm3730, Soc};
 use vpe::util::bench::{bench, black_box, header};
 use vpe::workloads::WorkloadKind;
 
@@ -30,7 +30,7 @@ fn main() {
         black_box(table.dispatch(FunctionId(17)).expect("dispatch"));
     });
     bench("DispatchTable::set_target+reset", 10_000, 500_000, || {
-        table.set_target(FunctionId(17), TargetId::C64xDsp).expect("set");
+        table.set_target(FunctionId(17), dm3730::DSP).expect("set");
         table.reset(FunctionId(17)).expect("reset");
     });
 
@@ -45,7 +45,7 @@ fn main() {
     let soc = Soc::dm3730();
     bench("Soc::call_ns", 10_000, 1_000_000, || {
         black_box(
-            soc.call_ns(WorkloadKind::Matmul, 2_097_152.0, 48, TargetId::C64xDsp)
+            soc.call_ns(WorkloadKind::Matmul, 2_097_152.0, 48, dm3730::DSP)
                 .expect("call_ns"),
         );
     });
@@ -54,7 +54,7 @@ fn main() {
     let mut v = Vpe::new(VpeConfig::sim_only()).expect("vpe");
     let f = v.register_workload(WorkloadKind::Matmul).expect("register");
     v.run(f, 15).expect("warmup");
-    assert_eq!(v.current_target(f).expect("target"), TargetId::C64xDsp);
+    assert_eq!(v.current_target(f).expect("target"), dm3730::DSP);
     bench("Vpe::call (sim-only, steady)", 1000, 100_000, || {
         black_box(v.call(f).expect("call"));
     });

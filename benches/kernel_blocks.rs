@@ -9,9 +9,17 @@
 //!
 //! `cargo bench --bench kernel_blocks`
 
+#[cfg(feature = "pjrt")]
 use vpe::util::bench::{bench, black_box, header};
+#[cfg(feature = "pjrt")]
 use vpe::workloads::matmul;
 
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    println!("kernel_blocks measures PJRT artifacts; rebuild with --features pjrt");
+}
+
+#[cfg(feature = "pjrt")]
 fn main() {
     let store = match vpe::runtime::ArtifactStore::open_default() {
         Ok(s) => s,

@@ -16,7 +16,7 @@ use vpe::coordinator::policy::{
     AlwaysOffloadPolicy, BlindOffloadPolicy, NeverOffloadPolicy, OffloadPolicy,
 };
 use vpe::coordinator::{Vpe, VpeConfig};
-use vpe::platform::TargetId;
+use vpe::platform::dm3730;
 use vpe::workloads::WorkloadKind;
 
 fn policy(name: &str) -> Box<dyn OffloadPolicy> {
@@ -34,7 +34,7 @@ fn policy(name: &str) -> Box<dyn OffloadPolicy> {
 fn total_sim_ms(kind: WorkloadKind, pol: &str, degrade: Option<f64>) -> f64 {
     let mut v = Vpe::with_policy(VpeConfig::sim_only(), policy(pol)).expect("vpe");
     if let Some(f) = degrade {
-        v.soc_mut().degrade_target(TargetId::C64xDsp, f);
+        v.soc_mut().degrade_target(dm3730::DSP, f);
     }
     let f = if kind == WorkloadKind::Matmul {
         v.register_matmul(500).expect("register")

@@ -62,14 +62,14 @@ fn main() {
         page_faults: 0,
     };
     bench("PerfSampler::record", 1000, 200_000, || {
-        black_box(sampler.record(FunctionId(0), TargetId::ArmCore, sample, 1_000_000, &mut rng));
+        black_box(sampler.record(FunctionId(0), TargetId::HOST, sample, 1_000_000, &mut rng));
     });
     bench("CounterSample::synthesize", 1000, 200_000, || {
         black_box(CounterSample::synthesize(
             WorkloadKind::Matmul,
             1e6,
             1e6,
-            TargetId::ArmCore,
+            TargetId::HOST,
             1_000_000_000,
         ));
     });

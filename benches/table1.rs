@@ -56,6 +56,9 @@ fn main() {
     }
 
     // PJRT artifacts (both builds), if present.
+    #[cfg(not(feature = "pjrt"))]
+    println!("(PJRT disabled — rebuild with --features pjrt for artifact walls)");
+    #[cfg(feature = "pjrt")]
     match vpe::runtime::ArtifactStore::open_default() {
         Ok(store) => {
             for kind in WorkloadKind::ALL {

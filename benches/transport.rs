@@ -10,24 +10,24 @@
 //!
 //! `cargo bench --bench transport`
 
-use vpe::platform::{MpiModel, Soc, TargetId};
+use vpe::platform::{dm3730, MpiModel, Soc};
 use vpe::workloads::{matmul_scale, paper_scale, WorkloadKind};
 
 fn row(soc: &Soc, kind: WorkloadKind) -> (f64, f64) {
     let scale =
         if kind == WorkloadKind::Matmul { matmul_scale(500) } else { paper_scale(kind) };
     let arm =
-        soc.call_scaled_ns(kind, &scale, TargetId::ArmCore).expect("arm healthy") as f64 / 1e6;
+        soc.call_scaled_ns(kind, &scale, dm3730::ARM).expect("arm healthy") as f64 / 1e6;
     let dsp =
-        soc.call_scaled_ns(kind, &scale, TargetId::C64xDsp).expect("dsp healthy") as f64 / 1e6;
+        soc.call_scaled_ns(kind, &scale, dm3730::DSP).expect("dsp healthy") as f64 / 1e6;
     (arm, dsp)
 }
 
 fn crossover(soc: &Soc) -> Option<u64> {
     (8..=2048).find(|&n| {
         let s = matmul_scale(n);
-        let arm = soc.call_scaled_ns(WorkloadKind::Matmul, &s, TargetId::ArmCore).unwrap();
-        let dsp = soc.call_scaled_ns(WorkloadKind::Matmul, &s, TargetId::C64xDsp).unwrap();
+        let arm = soc.call_scaled_ns(WorkloadKind::Matmul, &s, dm3730::ARM).unwrap();
+        let dsp = soc.call_scaled_ns(WorkloadKind::Matmul, &s, dm3730::DSP).unwrap();
         dsp < arm
     })
 }

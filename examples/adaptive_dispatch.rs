@@ -14,7 +14,7 @@
 //! no blind trial, each call lands on the right target immediately.
 
 use vpe::coordinator::decision_tree::{DecisionTree, Observation};
-use vpe::platform::{Soc, TargetId};
+use vpe::platform::{dm3730, Soc, TargetId};
 use vpe::sim::SimRng;
 use vpe::util::cli::Args;
 use vpe::workloads::{matmul_scale, WorkloadKind};
@@ -40,11 +40,11 @@ fn main() -> vpe::Result<()> {
     let mut obs = Vec::new();
     for &n in &train_sizes {
         for _ in 0..reps {
-            let arm = measure(&soc, n, TargetId::ArmCore, &mut rng);
-            let dsp = measure(&soc, n, TargetId::C64xDsp, &mut rng);
+            let arm = measure(&soc, n, dm3730::ARM, &mut rng);
+            let dsp = measure(&soc, n, dm3730::DSP, &mut rng);
             obs.push(Observation {
                 size: n as f64,
-                best: if dsp < arm { TargetId::C64xDsp } else { TargetId::ArmCore },
+                best: if dsp < arm { dm3730::DSP } else { dm3730::ARM },
             });
         }
     }
@@ -64,10 +64,10 @@ fn main() -> vpe::Result<()> {
     println!("{:>5} {:>12} {:>12} {:>12} {:>10} {:>8}", "N", "ARM ms", "DSP ms", "predicted", "actual", "ok");
     let mut correct = 0;
     for &n in &test_sizes {
-        let arm = measure(&soc, n, TargetId::ArmCore, &mut rng) / 1e6;
-        let dsp = measure(&soc, n, TargetId::C64xDsp, &mut rng) / 1e6;
+        let arm = measure(&soc, n, dm3730::ARM, &mut rng) / 1e6;
+        let dsp = measure(&soc, n, dm3730::DSP, &mut rng) / 1e6;
         let predicted = tree.predict(n as f64);
-        let actual = if dsp < arm { TargetId::C64xDsp } else { TargetId::ArmCore };
+        let actual = if dsp < arm { dm3730::DSP } else { dm3730::ARM };
         let ok = predicted == actual;
         correct += ok as usize;
         println!(
@@ -87,8 +87,5 @@ fn main() -> vpe::Result<()> {
 }
 
 fn short(t: TargetId) -> &'static str {
-    match t {
-        TargetId::ArmCore => "ARM",
-        TargetId::C64xDsp => "DSP",
-    }
+    if t.is_host() { "ARM" } else { "DSP" }
 }

@@ -11,7 +11,7 @@
 //! `cargo run --release --example failure_recovery`
 
 use vpe::coordinator::{Vpe, VpeConfig};
-use vpe::platform::TargetId;
+use vpe::platform::{dm3730, TargetId};
 use vpe::workloads::WorkloadKind;
 
 fn main() -> vpe::Result<()> {
@@ -20,21 +20,21 @@ fn main() -> vpe::Result<()> {
 
     println!("phase 1: warm up + offload");
     vpe.run(f, 15)?;
-    assert_eq!(vpe.current_target(f)?, TargetId::C64xDsp);
+    assert_eq!(vpe.current_target(f)?, dm3730::DSP);
     println!("  matmul is on the DSP after {} calls", 15);
 
     println!("phase 2: DSP hardware failure injected");
-    vpe.soc_mut().fail_target(TargetId::C64xDsp);
+    vpe.soc_mut().fail_target(dm3730::DSP);
     let recs = vpe.run(f, 10)?;
     // Every call still succeeded — on the host.
-    assert!(recs.iter().all(|r| r.target == TargetId::ArmCore));
-    assert_eq!(vpe.current_target(f)?, TargetId::ArmCore);
+    assert!(recs.iter().all(|r| r.target == TargetId::HOST));
+    assert_eq!(vpe.current_target(f)?, TargetId::HOST);
     println!("  10/10 calls served locally, zero failures surfaced to the app");
 
     println!("phase 3: DSP restored");
-    vpe.soc_mut().heal_target(TargetId::C64xDsp);
+    vpe.soc_mut().heal_target(dm3730::DSP);
     vpe.run(f, 15)?;
-    assert_eq!(vpe.current_target(f)?, TargetId::C64xDsp);
+    assert_eq!(vpe.current_target(f)?, dm3730::DSP);
     println!("  VPE re-profiled and re-offloaded");
 
     println!("\nevent trace:\n{}", vpe.events().to_text());

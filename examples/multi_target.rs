@@ -1,0 +1,136 @@
+//! N-target dispatch, end to end — the refactor's acceptance demo.
+//!
+//! The paper's prototype pairs one ARM host with one DSP; its outlook
+//! (and the ROADMAP north-star) is *many* heterogeneous units.  This
+//! example builds a 4-unit platform **purely from data** — the DM3730
+//! pair plus a NEON-class vector engine and a GPU-class accelerator,
+//! each a `TargetSpec` registration + cost-model rows, zero coordinator
+//! or policy changes — then:
+//!
+//! 1. lets the unchanged blind-offload policy route three hot functions
+//!    to three different units (each lands where it wins);
+//! 2. switches to the queued call path (`submit`/`drain`) and issues
+//!    bursts whose dispatches execute **concurrently** on the sim
+//!    clock, retiring in completion order;
+//! 3. prints the in-flight timeline and verifies ≥2 dispatches were in
+//!    flight at once with overlapping execution windows.
+//!
+//! `cargo run --release --example multi_target`
+
+use vpe::coordinator::{Vpe, VpeConfig};
+use vpe::platform::{TargetSpec, TransferModel, Transport};
+use vpe::workloads::WorkloadKind;
+
+fn main() -> vpe::Result<()> {
+    let mut cfg = VpeConfig::sim_only();
+    // Three hot functions share the cycle budget; let the cooler ones
+    // still reach nomination.
+    cfg.detector.share_threshold = 0.02;
+    let mut vpe = Vpe::new(cfg)?;
+
+    // -- the platform is data -------------------------------------------------
+    // A tightly-coupled on-die vector engine: tiny dispatch setup.
+    let neon = vpe.soc_mut().add_target(
+        TargetSpec::new("NEON-class vector unit", 1_000_000_000)
+            .with_issue_width(4)
+            .with_transport(Transport::SharedMemory(TransferModel {
+                dispatch_fixed_ns: 5_000_000,
+                per_param_byte_ns: 1.0,
+            })),
+    );
+    // A GPU-class accelerator: bigger setup, massive throughput.
+    let gpu = vpe.soc_mut().add_target(
+        TargetSpec::new("GPU-class accelerator", 1_200_000_000)
+            .with_issue_width(32)
+            .with_transport(Transport::SharedMemory(TransferModel {
+                dispatch_fixed_ns: 30_000_000,
+                per_param_byte_ns: 1.0,
+            })),
+    );
+    // Cost-model rows: what each new unit is good at (ns per item).
+    let cost = &mut vpe.soc_mut().cost;
+    cost.set_rate(WorkloadKind::Conv2d, neon, 0.05); // streams stencils
+    cost.set_rate(WorkloadKind::Matmul, neon, 3.0); //  ...but matmul only so-so
+    cost.set_rate(WorkloadKind::Matmul, gpu, 0.2); //   matmul monster
+    println!("platform: {} compute units", vpe.soc().registry.len());
+    for (id, spec) in vpe.soc().targets() {
+        println!("  [{id}] {}", spec.name);
+    }
+    assert!(vpe.soc().registry.len() >= 4, "host + >=3 units");
+
+    // -- phase 1: each hot function finds its own unit ------------------------
+    let mm = vpe.register_matmul(500)?;
+    let conv = vpe.register_workload(WorkloadKind::Conv2d)?;
+    let dot = vpe.register_workload(WorkloadKind::Dotprod)?;
+    for _ in 0..30 {
+        vpe.call(mm)?;
+        vpe.call(conv)?;
+        vpe.call(dot)?;
+    }
+    println!("\nphase 1 — steady-state placement after 30 iterations:");
+    for (f, label) in [(mm, "matmul 500x500"), (conv, "conv2d"), (dot, "dotprod")] {
+        let t = vpe.current_target(f)?;
+        println!("  {label:<16} -> [{t}] {}", vpe.target_name(t));
+    }
+    assert_eq!(vpe.current_target(mm)?, gpu);
+    assert_eq!(vpe.current_target(conv)?, neon);
+    assert!(!vpe.current_target(dot)?.is_host(), "dotprod must leave the host");
+
+    // -- phase 2: concurrent in-flight dispatches -----------------------------
+    println!("\nphase 2 — queued bursts (submit/drain, completion-ordered):");
+    let mut all = Vec::new();
+    for burst in 0..3 {
+        for f in [mm, conv, dot] {
+            vpe.submit(f)?;
+        }
+        let in_flight = vpe.in_flight();
+        let recs = vpe.drain()?;
+        println!("  burst {burst}: {in_flight} dispatches in flight, retired in order:");
+        for r in &recs {
+            println!(
+                "    {:<14} on [{}] {:<24} start {:>9.3} ms  end {:>9.3} ms{}",
+                vpe.kind_of(r.function).map(|k| k.name()).unwrap_or("?"),
+                r.target,
+                vpe.target_name(r.target),
+                r.start_ns as f64 / 1e6,
+                r.complete_ns as f64 / 1e6,
+                if r.queued_ns() > 0 {
+                    format!("  (queued {:.3} ms)", r.queued_ns() as f64 / 1e6)
+                } else {
+                    String::new()
+                },
+            );
+        }
+        all.extend(recs);
+    }
+
+    // ≥2 dispatches genuinely overlapped on the sim clock.
+    let mut max_overlap = 0usize;
+    for r in &all {
+        let concurrent = all
+            .iter()
+            .filter(|o| o.start_ns < r.complete_ns && r.start_ns < o.complete_ns)
+            .count();
+        max_overlap = max_overlap.max(concurrent);
+    }
+    println!(
+        "\nmax dispatches in flight: {} (peak {} concurrently executing)",
+        vpe.max_in_flight(),
+        max_overlap
+    );
+    assert!(vpe.max_in_flight() >= 2, "bursts must overlap in flight");
+    assert!(max_overlap >= 2, "execution windows must overlap on the sim clock");
+
+    // Per-target serialization still holds.
+    for (id, _) in vpe.soc().targets() {
+        let mut on: Vec<_> = all.iter().filter(|r| r.target == id).collect();
+        on.sort_by_key(|r| r.start_ns);
+        for w in on.windows(2) {
+            assert!(w[1].start_ns >= w[0].complete_ns, "unit {id} double-booked");
+        }
+    }
+
+    println!("\n{}", vpe.report());
+    println!("three units joined as data (TargetSpec + cost rows); dispatches overlap; each function found its best unit.");
+    Ok(())
+}

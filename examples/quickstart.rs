@@ -9,7 +9,7 @@
 //! missing).
 
 use vpe::coordinator::{Vpe, VpeConfig};
-use vpe::platform::TargetId;
+use vpe::platform::dm3730;
 use vpe::workloads::WorkloadKind;
 
 fn main() -> vpe::Result<()> {
@@ -33,7 +33,7 @@ fn main() -> vpe::Result<()> {
         if i % 5 == 0 || rec.action.is_some() {
             println!(
                 "iter {i:>2}: ran on {:<14} sim {:>7.1} ms{}{}",
-                rec.target.name(),
+                vpe.target_name(rec.target),
                 rec.exec_ns as f64 / 1e6,
                 rec.wall
                     .map(|w| format!("  (real PJRT {:.2} ms)", w.as_secs_f64() * 1e3))
@@ -44,7 +44,7 @@ fn main() -> vpe::Result<()> {
     }
 
     println!("\n{}", vpe.report());
-    assert_eq!(vpe.current_target(matmul)?, TargetId::C64xDsp);
+    assert_eq!(vpe.current_target(matmul)?, dm3730::DSP);
     println!("matmul now runs on the DSP — transparently.");
     Ok(())
 }

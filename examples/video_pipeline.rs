@@ -81,15 +81,19 @@ fn main() -> vpe::Result<()> {
     let (done_tx, done_rx) = mpsc::sync_channel::<Done>(4);
     let kernel_conv = kernel.clone();
     let conv_thread = std::thread::spawn(move || -> vpe::Result<()> {
-        let mut cfg = match vpe::runtime::ArtifactStore::open_default() {
-            Ok(_) => VpeConfig::default(),
+        // Prefer a numerics-producing backend (PJRT artifacts or the
+        // pure-Rust references); fall back to simulation-only.
+        let mut cfg = VpeConfig::default();
+        cfg.sampler.enabled = false; // VPE not yet granted the right to act
+        let mut vpe = match Vpe::new(cfg) {
+            Ok(v) => v,
             Err(_) => {
                 eprintln!("(artifacts missing — conv runs simulation-only)");
-                VpeConfig::sim_only()
+                let mut c = VpeConfig::sim_only();
+                c.sampler.enabled = false;
+                Vpe::new(c)?
             }
         };
-        cfg.sampler.enabled = false; // VPE not yet granted the right to act
-        let mut vpe = Vpe::new(cfg)?;
         // Register the convolution: artifact-shape numerics, paper-scale
         // costs (600x600 frame, 9x9 contour kernel).
         let mut inst = conv2d::instance(0xF16_3);
@@ -124,14 +128,13 @@ fn main() -> vpe::Result<()> {
             };
             let conv_ms = (rec.exec_ns + rec.profiling_ns) as f64 / 1e6;
             let cpu_stage_ms = stage::DECODE_MS + stage::IPC_MS + stage::DISPLAY_MS;
-            let (sim_frame_ms, cpu_busy_ms) = match rec.target {
-                TargetId::ArmCore => (cpu_stage_ms + conv_ms, cpu_stage_ms + conv_ms),
-                TargetId::C64xDsp => {
-                    let prof_ms = rec.profiling_ns as f64 / 1e6;
-                    let span =
-                        stage::DECODE_MS.max(conv_ms) + stage::IPC_MS + stage::DISPLAY_MS;
-                    (span, cpu_stage_ms + prof_ms)
-                }
+            let (sim_frame_ms, cpu_busy_ms) = if rec.target.is_host() {
+                (cpu_stage_ms + conv_ms, cpu_stage_ms + conv_ms)
+            } else {
+                let prof_ms = rec.profiling_ns as f64 / 1e6;
+                let span =
+                    stage::DECODE_MS.max(conv_ms) + stage::IPC_MS + stage::DISPLAY_MS;
+                (span, cpu_stage_ms + prof_ms)
             };
             let done = Done {
                 frame: i,
@@ -159,15 +162,15 @@ fn main() -> vpe::Result<()> {
         if d.verified == Some(false) {
             mismatches += 1;
         }
-        if d.target == TargetId::C64xDsp && offload_frame.is_none() {
+        if !d.target.is_host() && offload_frame.is_none() {
             offload_frame = Some(d.frame);
-            println!(">>> frame {:>4}: VPE moved the convolution to the DSP", d.frame);
+            println!(">>> frame {:>4}: VPE moved the convolution off the host", d.frame);
         }
         if d.frame % 25 == 0 {
             println!(
                 "frame {:>4}: conv on {:<14} sim {:>6.1} ms/frame ({:>4.1} fps sim)  cpu {:>3.0}%  edges {}{}",
                 d.frame,
-                d.target.name(),
+                if d.target.is_host() { "ARM Cortex-A8" } else { "C64x+ DSP" },
                 d.sim_frame_ms,
                 1e3 / d.sim_frame_ms,
                 (d.cpu_busy_ms / d.sim_frame_ms).min(1.0) * 100.0,
@@ -176,7 +179,7 @@ fn main() -> vpe::Result<()> {
             );
         }
         let rec = (d.sim_frame_ms, d.cpu_busy_ms);
-        if d.target == TargetId::ArmCore {
+        if d.target.is_host() {
             before.push(rec);
         } else {
             after.push(rec);

@@ -9,7 +9,7 @@
 use crate::coordinator::decision_tree::{DecisionTree, Observation};
 use crate::error::Result;
 use crate::metrics::Table;
-use crate::platform::{Soc, TargetId};
+use crate::platform::{dm3730, Soc, TargetId};
 use crate::sim::SimRng;
 use crate::workloads::{matmul_scale, WorkloadKind};
 
@@ -48,9 +48,9 @@ pub struct Fig2bPoint {
 impl Fig2bPoint {
     pub fn winner(&self) -> TargetId {
         if self.dsp_ms < self.arm_ms {
-            TargetId::C64xDsp
+            dm3730::DSP
         } else {
-            TargetId::ArmCore
+            dm3730::ARM
         }
     }
 }
@@ -70,10 +70,10 @@ pub fn fig2b(sizes: &[u64], noise_samples: usize, seed: u64) -> (Vec<Fig2bPoint>
     for &n in sizes {
         let scale = matmul_scale(n);
         let arm_base = soc
-            .call_scaled_ns(WorkloadKind::Matmul, &scale, TargetId::ArmCore)
+            .call_scaled_ns(WorkloadKind::Matmul, &scale, dm3730::ARM)
             .expect("arm is healthy") as f64;
         let dsp_base = soc
-            .call_scaled_ns(WorkloadKind::Matmul, &scale, TargetId::C64xDsp)
+            .call_scaled_ns(WorkloadKind::Matmul, &scale, dm3730::DSP)
             .expect("dsp is healthy") as f64;
         let mut arm_ms = 0.0;
         let mut dsp_ms = 0.0;
@@ -84,7 +84,7 @@ pub fn fig2b(sizes: &[u64], noise_samples: usize, seed: u64) -> (Vec<Fig2bPoint>
             dsp_ms += d / 1e6;
             observations.push(Observation {
                 size: n as f64,
-                best: if d < a { TargetId::C64xDsp } else { TargetId::ArmCore },
+                best: if d < a { dm3730::DSP } else { dm3730::ARM },
             });
         }
         arm_ms /= noise_samples.max(1) as f64;
@@ -100,10 +100,11 @@ pub fn fig2b(sizes: &[u64], noise_samples: usize, seed: u64) -> (Vec<Fig2bPoint>
 /// Analytic crossover of the model (where the curves intersect).
 pub fn analytic_crossover() -> f64 {
     let soc = Soc::dm3730();
-    let r = soc.cost.rate(WorkloadKind::Matmul);
+    let arm = soc.cost.rate_ns(WorkloadKind::Matmul, dm3730::ARM).expect("dm3730 row");
+    let dsp = soc.cost.rate_ns(WorkloadKind::Matmul, dm3730::DSP).expect("dm3730 row");
     let setup_ns = soc.transfer.dispatch_ns(48) as f64;
     // n^3 * (arm - dsp) = setup  =>  n = cbrt(setup / delta)
-    (setup_ns / (r.arm_ns_per_item - r.dsp_ns_per_item)).cbrt()
+    (setup_ns / (arm - dsp)).cbrt()
 }
 
 /// Render the sweep as a table (with the paper's qualitative markers).
@@ -112,13 +113,14 @@ pub fn render_fig2b(points: &[Fig2bPoint], tree: &DecisionTree) -> Table {
         "Fig 2(b) — matmul time vs size (ms, log scale)",
         &["N", "ARM ms", "DSP ms", "winner", "tree prediction"],
     );
+    let label = |t: TargetId| if t.is_host() { "ARM" } else { "DSP" };
     for p in points {
         t.push_row(vec![
             p.n.to_string(),
             format!("{:.1}", p.arm_ms),
             format!("{:.1}", p.dsp_ms),
-            p.winner().name().into(),
-            tree.predict(p.n as f64).name().into(),
+            label(p.winner()).into(),
+            label(tree.predict(p.n as f64)).into(),
         ]);
     }
     t
@@ -134,7 +136,7 @@ mod tests {
         // All small sizes: DSP ~ 100 ms setup-dominated, ARM wins.
         for p in &points {
             assert!((p.dsp_ms - 100.0).abs() < 10.0, "N={} dsp {}", p.n, p.dsp_ms);
-            assert_eq!(p.winner(), TargetId::ArmCore, "N={}", p.n);
+            assert_eq!(p.winner(), dm3730::ARM, "N={}", p.n);
         }
     }
 
@@ -142,7 +144,7 @@ mod tests {
     fn dsp_wins_big_sizes_by_paper_margin() {
         let (points, _) = fig2b(&[500], 3, 1);
         let p = points[0];
-        assert_eq!(p.winner(), TargetId::C64xDsp);
+        assert_eq!(p.winner(), dm3730::DSP);
         let speedup = p.arm_ms / p.dsp_ms;
         assert!((speedup - 31.9).abs() < 3.0, "speedup {speedup}");
     }
@@ -166,8 +168,8 @@ mod tests {
             "learned {learned} vs analytic {analytic}"
         );
         // Predictions agree with the physics far from the boundary.
-        assert_eq!(tree.predict(16.0), TargetId::ArmCore);
-        assert_eq!(tree.predict(400.0), TargetId::C64xDsp);
+        assert_eq!(tree.predict(16.0), dm3730::ARM);
+        assert_eq!(tree.predict(400.0), dm3730::DSP);
     }
 
     #[test]

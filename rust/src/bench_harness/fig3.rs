@@ -125,19 +125,18 @@ fn fig3_impl(
         let conv_ms = (rec.exec_ns + rec.profiling_ns) as f64 / 1e6;
         let cpu_stage_ms = stage::DECODE_MS + stage::IPC_MS + stage::DISPLAY_MS;
 
-        let (frame_ms, cpu_busy_ms) = match rec.target {
+        let (frame_ms, cpu_busy_ms) = if rec.target.is_host() {
             // Conv on the CPU: everything serializes on the ARM core.
-            TargetId::ArmCore => (cpu_stage_ms + conv_ms, cpu_stage_ms + conv_ms),
-            // Conv on the DSP: decode of the next frame overlaps the DSP
-            // convolution; IPC and display still serialize.  Profiling
-            // cost (the analysis bursts) is CPU work.
-            TargetId::C64xDsp => {
-                let prof_ms = rec.profiling_ns as f64 / 1e6;
-                let span = stage::DECODE_MS.max(conv_ms) + stage::IPC_MS + stage::DISPLAY_MS;
-                (span, cpu_stage_ms + prof_ms)
-            }
+            (cpu_stage_ms + conv_ms, cpu_stage_ms + conv_ms)
+        } else {
+            // Conv on an accelerator: decode of the next frame overlaps
+            // the remote convolution; IPC and display still serialize.
+            // Profiling cost (the analysis bursts) is CPU work.
+            let prof_ms = rec.profiling_ns as f64 / 1e6;
+            let span = stage::DECODE_MS.max(conv_ms) + stage::IPC_MS + stage::DISPLAY_MS;
+            (span, cpu_stage_ms + prof_ms)
         };
-        if offload_frame.is_none() && rec.target == TargetId::C64xDsp {
+        if offload_frame.is_none() && !rec.target.is_host() {
             offload_frame = Some(i);
         }
         frames.push(FrameStat {
@@ -150,9 +149,9 @@ fn fig3_impl(
     }
 
     let before: Vec<&FrameStat> =
-        frames.iter().filter(|f| f.conv_target == TargetId::ArmCore).collect();
+        frames.iter().filter(|f| f.conv_target.is_host()).collect();
     let after: Vec<&FrameStat> =
-        frames.iter().filter(|f| f.conv_target == TargetId::C64xDsp).collect();
+        frames.iter().filter(|f| !f.conv_target.is_host()).collect();
     let mean = |xs: &[&FrameStat], g: fn(&FrameStat) -> f64| -> f64 {
         if xs.is_empty() {
             f64::NAN
@@ -204,6 +203,7 @@ pub fn render(s: &Fig3Summary) -> Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::platform::dm3730;
 
     #[test]
     fn frame_rate_multiplies_and_cpu_halves() {
@@ -223,7 +223,7 @@ mod tests {
         let off = s.offload_frame.unwrap();
         assert!(off >= 20, "offloaded at {off} before the grant");
         for f in &s.frames[..20] {
-            assert_eq!(f.conv_target, TargetId::ArmCore);
+            assert_eq!(f.conv_target, dm3730::ARM);
         }
     }
 

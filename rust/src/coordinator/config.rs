@@ -54,6 +54,12 @@ pub fn apply(base: VpeConfig, doc: &Json) -> Result<VpeConfig> {
     if let Some(v) = f64_of(doc, "exec_noise_frac")? {
         cfg.exec_noise_frac = v;
     }
+    if let Some(v) = u64_of(doc, "max_queue_per_target")? {
+        if v == 0 {
+            return Err(Error::Config("'max_queue_per_target' must be >= 1".into()));
+        }
+        cfg.max_queue_per_target = v as usize;
+    }
     if let Some(s) = doc.get("sampler") {
         if let Some(v) = bool_of(s, "enabled")? {
             cfg.sampler.enabled = v;
@@ -119,6 +125,7 @@ mod tests {
             "seed": 7,
             "verify_outputs": false,
             "exec_noise_frac": 0.02,
+            "max_queue_per_target": 3,
             "sampler": {"enabled": true, "overhead_frac": 0.10,
                         "analysis_period": 4, "burst_mean_ms": 50, "burst_std_ms": 10},
             "detector": {"min_samples": 3, "share_threshold": 0.25},
@@ -131,6 +138,7 @@ mod tests {
         assert_eq!(cfg.seed, 7);
         assert!(!cfg.verify_outputs);
         assert_eq!(cfg.exec_noise_frac, 0.02);
+        assert_eq!(cfg.max_queue_per_target, 3);
         assert_eq!(cfg.sampler.overhead_frac, 0.10);
         assert_eq!(cfg.sampler.analysis_period, 4);
         assert_eq!(cfg.sampler.burst_mean_ns, 50e6);

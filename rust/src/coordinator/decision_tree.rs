@@ -9,6 +9,8 @@
 //! observations collected at run time, used by the Fig 2b example to
 //! dispatch matmuls by size without re-measuring.
 
+#[cfg(test)]
+use crate::platform::dm3730;
 use crate::platform::TargetId;
 
 /// One labeled observation: workload size and which target won.
@@ -31,23 +33,36 @@ pub struct DecisionTree {
     n_train: usize,
 }
 
-fn majority(samples: &[Observation]) -> (TargetId, f64) {
-    let dsp = samples.iter().filter(|o| o.best == TargetId::C64xDsp).count();
-    let n = samples.len().max(1);
-    if dsp * 2 >= n {
-        (TargetId::C64xDsp, dsp as f64 / n as f64)
-    } else {
-        (TargetId::ArmCore, (n - dsp) as f64 / n as f64)
+/// Per-label counts over a sample slice (multiclass: any TargetId can
+/// be a label, so the tree generalizes beyond the ARM/DSP pair).
+fn label_counts(samples: &[Observation]) -> std::collections::HashMap<TargetId, usize> {
+    let mut counts = std::collections::HashMap::new();
+    for o in samples {
+        *counts.entry(o.best).or_insert(0usize) += 1;
     }
+    counts
 }
 
+fn majority(samples: &[Observation]) -> (TargetId, f64) {
+    let n = samples.len().max(1);
+    label_counts(samples)
+        .into_iter()
+        // Deterministic tie-break: prefer the lower slot (host first).
+        .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0)))
+        .map(|(t, c)| (t, c as f64 / n as f64))
+        .unwrap_or((TargetId::HOST, 0.0))
+}
+
+/// Multiclass Gini impurity: 1 - Σ pᵢ².
 fn gini(samples: &[Observation]) -> f64 {
     if samples.is_empty() {
         return 0.0;
     }
-    let p = samples.iter().filter(|o| o.best == TargetId::C64xDsp).count() as f64
-        / samples.len() as f64;
-    2.0 * p * (1.0 - p)
+    let n = samples.len() as f64;
+    1.0 - label_counts(samples)
+        .values()
+        .map(|&c| (c as f64 / n).powi(2))
+        .sum::<f64>()
 }
 
 fn build(samples: &mut [Observation], depth: u32, max_depth: u32, min_leaf: usize) -> Node {
@@ -91,7 +106,7 @@ impl DecisionTree {
         let mut s = observations.to_vec();
         let root = if s.is_empty() {
             // No data: stay local (never offload blindly without evidence).
-            Node::Leaf { best: TargetId::ArmCore, confidence: 0.0 }
+            Node::Leaf { best: TargetId::HOST, confidence: 0.0 }
         } else {
             build(&mut s, 0, max_depth, min_leaf.max(1))
         };
@@ -149,7 +164,7 @@ mod tests {
                 let size = i as f64 * 200.0 / n as f64;
                 Observation {
                     size,
-                    best: if size <= cut { TargetId::ArmCore } else { TargetId::C64xDsp },
+                    best: if size <= cut { dm3730::ARM } else { dm3730::DSP },
                 }
             })
             .collect()
@@ -162,24 +177,24 @@ mod tests {
         assert_eq!(t.accuracy(&data), 1.0);
         let learned = t.root_threshold().unwrap();
         assert!((learned - 75.0).abs() < 5.0, "learned {learned}");
-        assert_eq!(t.predict(10.0), TargetId::ArmCore);
-        assert_eq!(t.predict(150.0), TargetId::C64xDsp);
+        assert_eq!(t.predict(10.0), dm3730::ARM);
+        assert_eq!(t.predict(150.0), dm3730::DSP);
     }
 
     #[test]
     fn pure_data_yields_a_leaf() {
         let data: Vec<_> = (0..20)
-            .map(|i| Observation { size: i as f64, best: TargetId::ArmCore })
+            .map(|i| Observation { size: i as f64, best: dm3730::ARM })
             .collect();
         let t = DecisionTree::fit(&data, 4, 2);
         assert!(t.root_threshold().is_none());
-        assert_eq!(t.predict(1e9), TargetId::ArmCore);
+        assert_eq!(t.predict(1e9), dm3730::ARM);
     }
 
     #[test]
     fn empty_data_defaults_local() {
         let t = DecisionTree::fit(&[], 4, 2);
-        assert_eq!(t.predict(42.0), TargetId::ArmCore);
+        assert_eq!(t.predict(42.0), dm3730::ARM);
     }
 
     #[test]
@@ -187,16 +202,40 @@ mod tests {
         let mut data = threshold_data(75.0, 200);
         // Flip 5% of labels.
         for i in (0..data.len()).step_by(20) {
-            data[i].best = match data[i].best {
-                TargetId::ArmCore => TargetId::C64xDsp,
-                TargetId::C64xDsp => TargetId::ArmCore,
-            };
+            data[i].best =
+                if data[i].best == dm3730::ARM { dm3730::DSP } else { dm3730::ARM };
         }
         let t = DecisionTree::fit(&data, 3, 5);
         assert!(t.accuracy(&data) > 0.9);
         // Far from the boundary the prediction is still right.
-        assert_eq!(t.predict(5.0), TargetId::ArmCore);
-        assert_eq!(t.predict(195.0), TargetId::C64xDsp);
+        assert_eq!(t.predict(5.0), dm3730::ARM);
+        assert_eq!(t.predict(195.0), dm3730::DSP);
+    }
+
+    #[test]
+    fn learns_three_way_size_bands() {
+        // Multiclass: small sizes stay on the host, mid sizes win on the
+        // DSP, huge sizes win on a GPU-class unit (slot 2) — the tree
+        // must carve all three bands.
+        let gpu = TargetId(2);
+        let data: Vec<Observation> = (0..300)
+            .map(|i| {
+                let size = i as f64;
+                let best = if size <= 80.0 {
+                    dm3730::ARM
+                } else if size <= 200.0 {
+                    dm3730::DSP
+                } else {
+                    gpu
+                };
+                Observation { size, best }
+            })
+            .collect();
+        let t = DecisionTree::fit(&data, 4, 2);
+        assert_eq!(t.accuracy(&data), 1.0);
+        assert_eq!(t.predict(40.0), dm3730::ARM);
+        assert_eq!(t.predict(150.0), dm3730::DSP);
+        assert_eq!(t.predict(250.0), gpu);
     }
 
     #[test]

@@ -27,6 +27,10 @@ pub enum VpeEvent {
     TargetFailedOver { function: FunctionId, target: TargetId },
     OutputMismatch { function: FunctionId, target: TargetId },
     AnalysisBurst { cost_ns: u64 },
+    /// A dispatch had to wait for its target (queued behind an earlier
+    /// in-flight call) — only logged when the wait is non-zero, to keep
+    /// the trace readable.
+    DispatchWaited { function: FunctionId, target: TargetId, wait_ns: u64 },
 }
 
 /// Append-only log of (sim-time ns, event).
@@ -97,7 +101,7 @@ mod tests {
         let mut log = EventLog::new();
         let f = FunctionId(0);
         log.push(10, VpeEvent::HotspotDetected { function: f, cycle_share: 0.9 });
-        log.push(20, VpeEvent::Offloaded { function: f, to: TargetId::C64xDsp });
+        log.push(20, VpeEvent::Offloaded { function: f, to: TargetId(1) });
         log.push(
             30,
             VpeEvent::Reverted {
@@ -106,7 +110,7 @@ mod tests {
             },
         );
         assert_eq!(log.len(), 3);
-        assert_eq!(log.offloads(), vec![(20, f, TargetId::C64xDsp)]);
+        assert_eq!(log.offloads(), vec![(20, f, TargetId(1))]);
         assert_eq!(log.reverts().len(), 1);
         assert!(log.to_text().contains("Offloaded"));
     }

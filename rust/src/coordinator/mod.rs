@@ -1,14 +1,17 @@
-//! L3 — the VPE coordinator (the paper's contribution).
+//! L3 — the VPE coordinator (the paper's contribution), generalized to
+//! N targets with an event-driven concurrent dispatch queue.
 
 pub mod config;
 pub mod decision_tree;
 pub mod events;
 pub mod policies_ext;
 pub mod policy;
+pub mod queue;
 pub mod scheduler;
 pub mod trace;
 pub mod vpe;
 
 pub use events::{EventLog, VpeEvent};
-pub use policy::{BlindOffloadPolicy, OffloadPolicy, PolicyAction};
+pub use policy::{BlindOffloadPolicy, Candidate, OffloadPolicy, PolicyAction};
+pub use queue::{DispatchQueue, TicketId};
 pub use vpe::{CallRecord, Vpe, VpeConfig};

@@ -1,5 +1,6 @@
 //! Extended off-load policies — ablations around the paper's blind
-//! offload (§3.1) and its related-work contrasts (§2).
+//! offload (§3.1) and its related-work contrasts (§2), generalized to
+//! the N-candidate ranking the coordinator supplies.
 //!
 //! - [`HysteresisPolicy`] — blind offload with an EWMA drift detector:
 //!   re-evaluates committed decisions when the function's cost drifts
@@ -12,8 +13,9 @@
 //!   [...] not to expected-usage scenarios or other compile-time
 //!   metrics"); the ablation bench shows where it wins (no warm-up) and
 //!   where it loses (degraded hardware, miscalibration).
-//! - [`EpsilonGreedyPolicy`] — a bandit baseline: explores both targets
-//!   forever with probability epsilon, exploits the best mean otherwise.
+//! - [`EpsilonGreedyPolicy`] — a bandit baseline: explores all arms
+//!   (host + every candidate) forever with probability epsilon,
+//!   exploits the best measured mean otherwise.
 
 use std::collections::HashMap;
 
@@ -32,9 +34,9 @@ use super::policy::{OffloadPolicy, PolicyAction, PolicyCtx};
 /// Configuration for [`HysteresisPolicy`].
 #[derive(Debug, Clone, Copy)]
 pub struct HysteresisConfig {
-    /// DSP samples to observe before judging a trial.
+    /// Remote samples to observe before judging a trial.
     pub observe_window: u64,
-    /// Revert if `dsp_mean > arm_mean * revert_margin`.
+    /// Revert if `remote_mean > host_mean * revert_margin`.
     pub revert_margin: f64,
     /// Re-open a committed/blacklisted decision when the EWMA of call
     /// time drifts from the decision-time level by more than this
@@ -51,7 +53,7 @@ impl Default for HysteresisConfig {
 #[derive(Debug, Clone, Copy)]
 enum HPhase {
     Profiling,
-    Trialing,
+    Trialing { target: TargetId },
     Committed { level_ns: f64 },
     Blacklisted { level_ns: f64 },
 }
@@ -61,12 +63,18 @@ enum HPhase {
 pub struct HysteresisPolicy {
     cfg: HysteresisConfig,
     phases: HashMap<FunctionId, HPhase>,
+    rejected: HashMap<FunctionId, Vec<TargetId>>,
     ewma: HashMap<FunctionId, Ewma>,
 }
 
 impl HysteresisPolicy {
     pub fn new(cfg: HysteresisConfig) -> Self {
-        HysteresisPolicy { cfg, phases: HashMap::new(), ewma: HashMap::new() }
+        HysteresisPolicy {
+            cfg,
+            phases: HashMap::new(),
+            rejected: HashMap::new(),
+            ewma: HashMap::new(),
+        }
     }
 }
 
@@ -89,29 +97,46 @@ impl OffloadPolicy for HysteresisPolicy {
         }
         let ewma_now = e.value().unwrap_or(last);
 
+        let rejected = self.rejected.entry(ctx.function).or_default();
         let phase = self.phases.entry(ctx.function).or_insert(HPhase::Profiling);
         match *phase {
             HPhase::Profiling => {
-                if ctx.is_hotspot.is_some() && ctx.dsp_available {
-                    *phase = HPhase::Trialing;
-                    return Some(PolicyAction::Offload { to: TargetId::C64xDsp });
+                if ctx.is_hotspot.is_some() {
+                    if let Some(c) =
+                        ctx.candidates.iter().find(|c| !rejected.contains(&c.target))
+                    {
+                        *phase = HPhase::Trialing { target: c.target };
+                        return Some(PolicyAction::Offload { to: c.target });
+                    }
                 }
                 None
             }
-            HPhase::Trialing => {
-                if ctx.current != TargetId::C64xDsp {
+            HPhase::Trialing { target } => {
+                if ctx.current != target {
                     *phase = HPhase::Profiling;
                     return None;
                 }
-                if ctx.profile.count_on(TargetId::C64xDsp) < self.cfg.observe_window {
+                if ctx.profile.count_on(target) < self.cfg.observe_window {
                     return None;
                 }
-                let arm = ctx.profile.mean_ns_on(TargetId::ArmCore)?;
-                let dsp = ctx.profile.mean_ns_on(TargetId::C64xDsp)?;
-                if dsp > arm * self.cfg.revert_margin {
-                    *phase = HPhase::Blacklisted { level_ns: ewma_now };
+                let host = ctx.host_mean_ns()?;
+                let remote = ctx.profile.mean_ns_on(target)?;
+                if remote > host * self.cfg.revert_margin {
+                    // This unit lost; walk to the next candidate (as
+                    // blind offload does) before giving up.
+                    rejected.push(target);
+                    let more =
+                        ctx.candidates.iter().any(|c| !rejected.contains(&c.target));
+                    *phase = if more {
+                        HPhase::Profiling
+                    } else {
+                        HPhase::Blacklisted { level_ns: ewma_now }
+                    };
                     Some(PolicyAction::Revert {
-                        reason: RevertReason::SlowerOnRemote { local_ns: arm, remote_ns: dsp },
+                        reason: RevertReason::SlowerOnRemote {
+                            local_ns: host,
+                            remote_ns: remote,
+                        },
                     })
                 } else {
                     *phase = HPhase::Committed { level_ns: ewma_now };
@@ -122,7 +147,9 @@ impl OffloadPolicy for HysteresisPolicy {
                 let drifted = ewma_now > level_ns * self.cfg.drift_factor
                     || ewma_now < level_ns / self.cfg.drift_factor;
                 if drifted {
-                    // The workload changed character: forget the verdict.
+                    // The workload changed character: forget the verdict
+                    // (and every per-unit rejection with it).
+                    rejected.clear();
                     *phase = HPhase::Profiling;
                 }
                 None
@@ -139,8 +166,8 @@ impl OffloadPolicy for HysteresisPolicy {
 // Predictive (BAAR-like static dispatch)
 // ---------------------------------------------------------------------------
 
-/// Compile-time dispatch model: predicts the DSP win factor from the IR
-/// op mix and loop shape alone (no measurements).
+/// Compile-time dispatch model: predicts the accelerator win factor from
+/// the IR op mix and loop shape alone (no measurements).
 #[derive(Debug, Clone, Copy)]
 pub struct StaticModel {
     /// Predicted VLIW pipelining gain for regular integer nests.
@@ -158,7 +185,8 @@ impl Default for StaticModel {
 }
 
 impl StaticModel {
-    /// Predicted DSP speedup for a function with the given op mix/loops.
+    /// Predicted accelerator speedup for a function with the given op
+    /// mix/loops.
     pub fn predicted_gain(&self, op_mix: OpMix, loop_depth: u32) -> f64 {
         let depth_factor = 1.0 + 0.5 * (loop_depth.min(4) as f64 - 1.0).max(0.0);
         let int_gain = self.pipelining_gain * depth_factor * op_mix.int_frac.max(0.05);
@@ -167,7 +195,9 @@ impl StaticModel {
     }
 }
 
-/// Dispatch-by-static-analysis: the §2 BAAR contrast.
+/// Dispatch-by-static-analysis: the §2 BAAR contrast.  Takes the
+/// best-ranked candidate when the static model predicts a win; one
+/// decision per function, never revisited.
 #[derive(Debug, Default)]
 pub struct PredictivePolicy {
     model: StaticModel,
@@ -191,10 +221,11 @@ impl OffloadPolicy for PredictivePolicy {
         }
         let gain = self.model.predicted_gain(ctx.op_mix, ctx.loop_depth);
         self.decided.insert(ctx.function, gain >= self.model.min_gain);
-        if gain >= self.model.min_gain && ctx.dsp_available {
-            Some(PolicyAction::Offload { to: TargetId::C64xDsp })
-        } else {
-            None
+        match ctx.candidates.first() {
+            Some(c) if gain >= self.model.min_gain => {
+                Some(PolicyAction::Offload { to: c.target })
+            }
+            _ => None,
         }
     }
 }
@@ -203,7 +234,8 @@ impl OffloadPolicy for PredictivePolicy {
 // Epsilon-greedy bandit
 // ---------------------------------------------------------------------------
 
-/// Bandit baseline: explore with probability epsilon, else exploit.
+/// Bandit baseline: explore with probability epsilon, else exploit the
+/// arm (host or any candidate) with the best measured mean.
 #[derive(Debug)]
 pub struct EpsilonGreedyPolicy {
     pub epsilon: f64,
@@ -214,6 +246,16 @@ impl EpsilonGreedyPolicy {
     pub fn new(epsilon: f64, seed: u64) -> Self {
         EpsilonGreedyPolicy { epsilon, rng: SimRng::seeded(seed) }
     }
+
+    fn action_for(ctx: &PolicyCtx<'_>, want: TargetId) -> Option<PolicyAction> {
+        if want == ctx.current {
+            None
+        } else if want.is_host() {
+            Some(PolicyAction::Revert { reason: RevertReason::Manual })
+        } else {
+            Some(PolicyAction::Offload { to: want })
+        }
+    }
 }
 
 impl OffloadPolicy for EpsilonGreedyPolicy {
@@ -222,54 +264,90 @@ impl OffloadPolicy for EpsilonGreedyPolicy {
     }
 
     fn decide(&mut self, ctx: &PolicyCtx<'_>) -> Option<PolicyAction> {
-        if !ctx.dsp_available {
+        if ctx.candidates.is_empty() {
             return None;
         }
         let explore = self.rng.uniform() < self.epsilon;
         let want = if explore {
-            if self.rng.uniform() < 0.5 { TargetId::ArmCore } else { TargetId::C64xDsp }
-        } else {
-            match (
-                ctx.profile.mean_ns_on(TargetId::ArmCore),
-                ctx.profile.mean_ns_on(TargetId::C64xDsp),
-            ) {
-                (Some(a), Some(d)) if d < a => TargetId::C64xDsp,
-                (Some(_), Some(_)) => TargetId::ArmCore,
-                // Not enough data yet: try the unexplored arm.
-                (Some(_), None) => TargetId::C64xDsp,
-                _ => TargetId::ArmCore,
+            // Uniform over host + candidates.
+            let arm = self.rng.uniform_u64(0, ctx.candidates.len() as u64 + 1);
+            if arm == 0 {
+                TargetId::HOST
+            } else {
+                ctx.candidates[arm as usize - 1].target
             }
-        };
-        if want == ctx.current {
-            None
-        } else if want == TargetId::C64xDsp {
-            Some(PolicyAction::Offload { to: want })
+        } else if ctx.host_mean_ns().is_none() {
+            TargetId::HOST
+        } else if let Some(unexplored) =
+            ctx.candidates.iter().find(|c| ctx.profile.count_on(c.target) == 0)
+        {
+            // Not enough data yet: try the unexplored arm.
+            unexplored.target
         } else {
-            Some(PolicyAction::Revert { reason: RevertReason::Manual })
-        }
+            // Exploit the best measured mean across every arm.
+            let mut best = (TargetId::HOST, ctx.host_mean_ns().expect("checked"));
+            for c in ctx.candidates {
+                if let Some(m) = ctx.profile.mean_ns_on(c.target) {
+                    if m < best.1 {
+                        best = (c.target, m);
+                    }
+                }
+            }
+            best.0
+        };
+        Self::action_for(ctx, want)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::platform::dm3730;
+    use crate::profiler::hotspot::Hotspot;
     use crate::profiler::sampler::FunctionProfile;
     use crate::workloads::WorkloadKind;
 
-    fn profile_with(arm: &[f64], dsp: &[f64]) -> FunctionProfile {
+    use super::super::policy::Candidate;
+
+    fn profile_with(host: &[f64], remote: &[(TargetId, f64)]) -> FunctionProfile {
         let mut p = FunctionProfile::default();
-        for &x in arm.iter().chain(dsp) {
+        for &x in host {
             p.time_ns.push(x);
             p.ewma_ns.push(x);
+            p.on_mut(TargetId::HOST).push(x);
             p.calls += 1;
         }
-        for &x in arm {
-            p.on_mut(TargetId::ArmCore).push(x);
-        }
-        for &x in dsp {
-            p.on_mut(TargetId::C64xDsp).push(x);
+        for &(t, x) in remote {
+            p.time_ns.push(x);
+            p.ewma_ns.push(x);
+            p.on_mut(t).push(x);
+            p.calls += 1;
         }
         p
+    }
+
+    fn dsp_candidates() -> Vec<Candidate> {
+        vec![Candidate { target: dm3730::DSP, predicted_ns: 1000 }]
+    }
+
+    fn ctx<'a>(
+        f: FunctionId,
+        p: &'a FunctionProfile,
+        current: TargetId,
+        hotspot: Option<Hotspot>,
+        candidates: &'a [Candidate],
+        op_mix: OpMix,
+        loop_depth: u32,
+    ) -> PolicyCtx<'a> {
+        PolicyCtx {
+            function: f,
+            profile: p,
+            current,
+            is_hotspot: hotspot,
+            candidates,
+            op_mix,
+            loop_depth,
+        }
     }
 
     #[test]
@@ -285,73 +363,35 @@ mod tests {
     fn predictive_policy_decides_once_and_never_reverts() {
         let mut pol = PredictivePolicy::default();
         let f = FunctionId(0);
+        let cands = dsp_candidates();
         let p = profile_with(&[100.0], &[]);
-        let ctx = PolicyCtx {
-            function: f,
-            profile: &p,
-            current: TargetId::ArmCore,
-            is_hotspot: None,
-            dsp_available: true,
-            op_mix: OpMix::integer_loop(),
-            loop_depth: 1,
-        };
-        assert!(matches!(pol.decide(&ctx), Some(PolicyAction::Offload { .. })));
+        let c = ctx(f, &p, TargetId::HOST, None, &cands, OpMix::integer_loop(), 1);
+        assert!(matches!(pol.decide(&c), Some(PolicyAction::Offload { .. })));
         // Even with terrible measured numbers it never acts again.
-        let p = profile_with(&[100.0], &[100_000.0]);
-        let ctx = PolicyCtx {
-            function: f,
-            profile: &p,
-            current: TargetId::C64xDsp,
-            is_hotspot: None,
-            dsp_available: true,
-            op_mix: OpMix::integer_loop(),
-            loop_depth: 1,
-        };
-        assert_eq!(pol.decide(&ctx), None);
+        let p = profile_with(&[100.0], &[(dm3730::DSP, 100_000.0)]);
+        let c = ctx(f, &p, dm3730::DSP, None, &cands, OpMix::integer_loop(), 1);
+        assert_eq!(pol.decide(&c), None);
     }
 
     #[test]
     fn hysteresis_reopens_on_drift() {
         let mut pol = HysteresisPolicy::default();
         let f = FunctionId(0);
-        let hot = Some(crate::profiler::hotspot::Hotspot { function: f, cycle_share: 0.9 });
+        let cands = dsp_candidates();
+        let hot = Some(Hotspot { function: f, cycle_share: 0.9 });
         // Trial + commit at level ~100.
         let p = profile_with(&[100.0; 6], &[]);
-        let ctx = PolicyCtx {
-            function: f,
-            profile: &p,
-            current: TargetId::ArmCore,
-            is_hotspot: hot,
-            dsp_available: true,
-            op_mix: OpMix::integer_loop(),
-            loop_depth: 1,
-        };
-        assert!(pol.decide(&ctx).is_some());
-        let p = profile_with(&[100.0; 6], &[20.0; 5]);
-        let ctx = PolicyCtx {
-            function: f,
-            profile: &p,
-            current: TargetId::C64xDsp,
-            is_hotspot: hot,
-            dsp_available: true,
-            op_mix: OpMix::integer_loop(),
-            loop_depth: 1,
-        };
-        assert_eq!(pol.decide(&ctx), None); // committed
+        let c = ctx(f, &p, TargetId::HOST, hot, &cands, OpMix::integer_loop(), 1);
+        assert!(pol.decide(&c).is_some());
+        let p = profile_with(&[100.0; 6], &[(dm3730::DSP, 20.0); 5]);
+        let c = ctx(f, &p, dm3730::DSP, hot, &cands, OpMix::integer_loop(), 1);
+        assert_eq!(pol.decide(&c), None); // committed
         // Massive drift (workload grew 100x): the phase reopens and the
         // next hotspot nomination triggers a fresh trial.
-        let p = profile_with(&[100.0; 2], &[8000.0; 20]);
-        let ctx = PolicyCtx {
-            function: f,
-            profile: &p,
-            current: TargetId::C64xDsp,
-            is_hotspot: hot,
-            dsp_available: true,
-            op_mix: OpMix::integer_loop(),
-            loop_depth: 1,
-        };
-        pol.decide(&ctx); // drift detected -> Profiling
-        let out = pol.decide(&ctx);
+        let p = profile_with(&[100.0; 2], &[(dm3730::DSP, 8000.0); 20]);
+        let c = ctx(f, &p, dm3730::DSP, hot, &cands, OpMix::integer_loop(), 1);
+        pol.decide(&c); // drift detected -> Profiling
+        let out = pol.decide(&c);
         assert!(
             matches!(out, Some(PolicyAction::Offload { .. })),
             "expected re-trial after drift, got {out:?}"
@@ -359,32 +399,60 @@ mod tests {
     }
 
     #[test]
+    fn hysteresis_walks_the_candidate_ranking_after_a_failed_trial() {
+        let mut pol = HysteresisPolicy::default();
+        let f = FunctionId(0);
+        let gpu = TargetId(2);
+        let hot = Some(Hotspot { function: f, cycle_share: 0.9 });
+        let cands = vec![
+            Candidate { target: dm3730::DSP, predicted_ns: 500 },
+            Candidate { target: gpu, predicted_ns: 800 },
+        ];
+        let p = profile_with(&[100.0; 6], &[]);
+        assert_eq!(
+            pol.decide(&ctx(f, &p, TargetId::HOST, hot, &cands, OpMix::integer_loop(), 1)),
+            Some(PolicyAction::Offload { to: dm3730::DSP })
+        );
+        // DSP loses its trial: revert, but keep searching.
+        let p = profile_with(&[100.0; 6], &[(dm3730::DSP, 500.0); 5]);
+        assert!(matches!(
+            pol.decide(&ctx(f, &p, dm3730::DSP, hot, &cands, OpMix::integer_loop(), 1)),
+            Some(PolicyAction::Revert { .. })
+        ));
+        // The next nomination trials the GPU instead of re-blacklisting.
+        assert_eq!(
+            pol.decide(&ctx(f, &p, TargetId::HOST, hot, &cands, OpMix::integer_loop(), 1)),
+            Some(PolicyAction::Offload { to: gpu })
+        );
+    }
+
+    #[test]
     fn epsilon_greedy_exploits_the_faster_target() {
         let mut pol = EpsilonGreedyPolicy::new(0.0, 7); // pure exploitation
         let f = FunctionId(0);
-        let p = profile_with(&[100.0; 5], &[20.0; 5]);
-        let ctx = PolicyCtx {
-            function: f,
-            profile: &p,
-            current: TargetId::ArmCore,
-            is_hotspot: None,
-            dsp_available: true,
-            op_mix: OpMix::integer_loop(),
-            loop_depth: 1,
-        };
-        assert!(matches!(pol.decide(&ctx), Some(PolicyAction::Offload { .. })));
-        // And sends a slower DSP home.
-        let p = profile_with(&[100.0; 5], &[500.0; 5]);
-        let ctx = PolicyCtx {
-            function: f,
-            profile: &p,
-            current: TargetId::C64xDsp,
-            is_hotspot: None,
-            dsp_available: true,
-            op_mix: OpMix::integer_loop(),
-            loop_depth: 1,
-        };
-        assert!(matches!(pol.decide(&ctx), Some(PolicyAction::Revert { .. })));
+        let cands = dsp_candidates();
+        let p = profile_with(&[100.0; 5], &[(dm3730::DSP, 20.0); 5]);
+        let c = ctx(f, &p, TargetId::HOST, None, &cands, OpMix::integer_loop(), 1);
+        assert!(matches!(pol.decide(&c), Some(PolicyAction::Offload { .. })));
+        // And sends a slower remote home.
+        let p = profile_with(&[100.0; 5], &[(dm3730::DSP, 500.0); 5]);
+        let c = ctx(f, &p, dm3730::DSP, None, &cands, OpMix::integer_loop(), 1);
+        assert!(matches!(pol.decide(&c), Some(PolicyAction::Revert { .. })));
+    }
+
+    #[test]
+    fn epsilon_greedy_explores_unsampled_candidates_first() {
+        let mut pol = EpsilonGreedyPolicy::new(0.0, 7);
+        let f = FunctionId(0);
+        let gpu = TargetId(2);
+        let cands = vec![
+            Candidate { target: dm3730::DSP, predicted_ns: 500 },
+            Candidate { target: gpu, predicted_ns: 800 },
+        ];
+        // DSP sampled, GPU not: the bandit must pull the unexplored arm.
+        let p = profile_with(&[100.0; 5], &[(dm3730::DSP, 20.0); 5]);
+        let c = ctx(f, &p, dm3730::DSP, None, &cands, OpMix::integer_loop(), 1);
+        assert_eq!(pol.decide(&c), Some(PolicyAction::Offload { to: gpu }));
     }
 
     #[test]

@@ -1,11 +1,16 @@
-//! Off-load policies.
+//! Off-load policies over N candidate targets.
 //!
 //! The paper's strategy (§3.1) is deliberately simple: *blind
-//! off-loading* — move the hottest function to the DSP, watch what
-//! happens, and revert if it turned out slower ("we can easily detect a
-//! mediocre performance on the remote unit and reverse our decision").
-//! [`BlindOffloadPolicy`] implements exactly that lifecycle; the other
-//! policies are baselines for the benches and ablations.
+//! off-loading* — move the hottest function to the remote unit, watch
+//! what happens, and revert if it turned out slower ("we can easily
+//! detect a mediocre performance on the remote unit and reverse our
+//! decision").  [`BlindOffloadPolicy`] implements exactly that
+//! lifecycle, generalized from the paper's single DSP to the ranked
+//! candidate list the coordinator supplies: a failed trial blacklists
+//! *that unit* and the next hotspot nomination trials the next
+//! candidate, so the policy walks the platform until a unit pays off or
+//! all of them are exhausted.  The other policies are baselines for the
+//! benches and ablations.
 
 use std::collections::HashMap;
 
@@ -16,6 +21,16 @@ use crate::profiler::sampler::FunctionProfile;
 
 use super::events::RevertReason;
 
+/// One dispatchable non-host target for the function under decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub target: TargetId,
+    /// Cost-model estimate for one call at the current scale (compute +
+    /// dispatch overhead + health derating), ns.  Candidates arrive
+    /// best-first.
+    pub predicted_ns: u64,
+}
+
 /// Everything a policy may look at when deciding about one function.
 #[derive(Debug)]
 pub struct PolicyCtx<'a> {
@@ -25,13 +40,22 @@ pub struct PolicyCtx<'a> {
     pub current: TargetId,
     /// The detector's current nomination, if it is this function.
     pub is_hotspot: Option<Hotspot>,
-    /// The DSP is healthy *and* a DSP build of this function exists.
-    pub dsp_available: bool,
+    /// Usable non-host targets that can run this function (healthy, a
+    /// build exists, the cost model has a row), ranked best-first by
+    /// predicted cost.  Empty means there is nowhere to offload.
+    pub candidates: &'a [Candidate],
     /// Compile-time metadata from the JIT module (static policies —
     /// the BAAR-like [`super::policies_ext::PredictivePolicy`] — decide
     /// on this alone).
     pub op_mix: crate::jit::module::OpMix,
     pub loop_depth: u32,
+}
+
+impl PolicyCtx<'_> {
+    /// Mean measured time on the host, if sampled.
+    pub fn host_mean_ns(&self) -> Option<f64> {
+        self.profile.mean_ns_on(TargetId::HOST)
+    }
 }
 
 /// What the policy wants done.
@@ -54,27 +78,34 @@ pub trait OffloadPolicy: Send {
 }
 
 // ---------------------------------------------------------------------------
-// Blind offload (the paper's policy)
+// Blind offload (the paper's policy, N-target generalization)
 // ---------------------------------------------------------------------------
 
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 enum Phase {
-    /// Watching ARM samples accumulate.
+    /// Watching host samples accumulate.
     Profiling,
-    /// On the DSP, within the observation window.
-    Trialing,
-    /// On the DSP for good (it won).
-    Committed,
-    /// Sent back to ARM; `since` counts calls since the revert.
+    /// On `target`, within the observation window.
+    Trialing { target: TargetId },
+    /// On `target` for good (it won).
+    Committed { target: TargetId },
+    /// Every candidate lost; `since` counts calls since the last revert.
     Blacklisted { since: u64 },
+}
+
+#[derive(Debug, Default)]
+struct FnState {
+    phase: Option<Phase>,
+    /// Targets whose trials were lost (skipped until a retry reopens).
+    rejected: Vec<TargetId>,
 }
 
 /// Configuration of [`BlindOffloadPolicy`].
 #[derive(Debug, Clone, Copy)]
 pub struct BlindOffloadConfig {
-    /// DSP samples to observe before judging the trial.
+    /// Remote samples to observe before judging a trial.
     pub observe_window: u64,
-    /// Revert if `dsp_mean > arm_mean * revert_margin`.
+    /// Revert if `remote_mean > host_mean * revert_margin`.
     pub revert_margin: f64,
     /// Re-try a blacklisted function after this many further calls
     /// (None: permanent — the input pattern is assumed stable).
@@ -87,31 +118,26 @@ impl Default for BlindOffloadConfig {
     }
 }
 
-/// The paper's blind offload + observe + revert policy.
-#[derive(Debug)]
+/// The paper's blind offload + observe + revert policy, walking the
+/// candidate ranking one unit at a time.
+#[derive(Debug, Default)]
 pub struct BlindOffloadPolicy {
     cfg: BlindOffloadConfig,
-    phases: HashMap<FunctionId, Phase>,
+    state: HashMap<FunctionId, FnState>,
 }
 
 impl BlindOffloadPolicy {
     pub fn new(cfg: BlindOffloadConfig) -> Self {
-        BlindOffloadPolicy { cfg, phases: HashMap::new() }
+        BlindOffloadPolicy { cfg, state: HashMap::new() }
     }
 
     pub fn phase_name(&self, f: FunctionId) -> &'static str {
-        match self.phases.get(&f) {
+        match self.state.get(&f).and_then(|s| s.phase.as_ref()) {
             None | Some(Phase::Profiling) => "profiling",
-            Some(Phase::Trialing) => "trialing",
-            Some(Phase::Committed) => "committed",
+            Some(Phase::Trialing { .. }) => "trialing",
+            Some(Phase::Committed { .. }) => "committed",
             Some(Phase::Blacklisted { .. }) => "blacklisted",
         }
-    }
-}
-
-impl Default for BlindOffloadPolicy {
-    fn default() -> Self {
-        Self::new(BlindOffloadConfig::default())
     }
 }
 
@@ -121,47 +147,69 @@ impl OffloadPolicy for BlindOffloadPolicy {
     }
 
     fn decide(&mut self, ctx: &PolicyCtx<'_>) -> Option<PolicyAction> {
-        let phase = self.phases.entry(ctx.function).or_insert(Phase::Profiling);
-        match *phase {
+        let s = self.state.entry(ctx.function).or_default();
+        let phase = s.phase.get_or_insert(Phase::Profiling);
+        match phase.clone() {
             Phase::Profiling => {
-                // Offload the hottest function as soon as the detector
-                // nominates it (blind: no prediction of the outcome).
-                if ctx.is_hotspot.is_some() && ctx.dsp_available {
-                    *phase = Phase::Trialing;
-                    return Some(PolicyAction::Offload { to: TargetId::C64xDsp });
+                // Offload the hottest function to the first candidate
+                // not yet rejected, as soon as the detector nominates it
+                // (blind: no prediction of the outcome — the ranking
+                // only orders the trials).
+                if ctx.is_hotspot.is_some() {
+                    if let Some(c) =
+                        ctx.candidates.iter().find(|c| !s.rejected.contains(&c.target))
+                    {
+                        *phase = Phase::Trialing { target: c.target };
+                        return Some(PolicyAction::Offload { to: c.target });
+                    }
                 }
                 None
             }
-            Phase::Trialing => {
-                if ctx.current != TargetId::C64xDsp {
+            Phase::Trialing { target } => {
+                if ctx.current != target {
                     // Coordinator bounced it (failure); start over.
                     *phase = Phase::Profiling;
                     return None;
                 }
-                let dsp_n = ctx.profile.count_on(TargetId::C64xDsp);
-                if dsp_n < self.cfg.observe_window {
+                let remote_n = ctx.profile.count_on(target);
+                if remote_n < self.cfg.observe_window {
                     return None;
                 }
-                let arm = ctx.profile.mean_ns_on(TargetId::ArmCore)?;
-                let dsp = ctx.profile.mean_ns_on(TargetId::C64xDsp)?;
-                if dsp > arm * self.cfg.revert_margin {
-                    *phase = Phase::Blacklisted { since: 0 };
+                let host = ctx.host_mean_ns()?;
+                let remote = ctx.profile.mean_ns_on(target)?;
+                if remote > host * self.cfg.revert_margin {
+                    // This unit lost; next hotspot nomination trials the
+                    // next candidate, if one remains.
+                    s.rejected.push(target);
+                    let more = ctx
+                        .candidates
+                        .iter()
+                        .any(|c| !s.rejected.contains(&c.target));
+                    s.phase = Some(if more {
+                        Phase::Profiling
+                    } else {
+                        Phase::Blacklisted { since: 0 }
+                    });
                     Some(PolicyAction::Revert {
-                        reason: RevertReason::SlowerOnRemote { local_ns: arm, remote_ns: dsp },
+                        reason: RevertReason::SlowerOnRemote {
+                            local_ns: host,
+                            remote_ns: remote,
+                        },
                     })
                 } else {
-                    *phase = Phase::Committed;
+                    *phase = Phase::Committed { target };
                     None
                 }
             }
-            Phase::Committed => None,
+            Phase::Committed { .. } => None,
             Phase::Blacklisted { since } => {
                 match self.cfg.retry_after {
                     Some(n) if since + 1 >= n => {
-                        // Input patterns may have changed: give the DSP
-                        // another chance (paper §3: VPE "can revise its
-                        // decisions").
-                        *phase = Phase::Profiling;
+                        // Input patterns may have changed: give the
+                        // platform another chance (paper §3: VPE "can
+                        // revise its decisions").
+                        s.rejected.clear();
+                        s.phase = Some(Phase::Profiling);
                     }
                     _ => {
                         *phase = Phase::Blacklisted { since: since + 1 };
@@ -173,7 +221,7 @@ impl OffloadPolicy for BlindOffloadPolicy {
     }
 
     fn on_forced_revert(&mut self, f: FunctionId) {
-        self.phases.insert(f, Phase::Profiling);
+        self.state.entry(f).or_default().phase = Some(Phase::Profiling);
     }
 }
 
@@ -195,8 +243,9 @@ impl OffloadPolicy for NeverOffloadPolicy {
     }
 }
 
-/// Offload immediately and never revert — the no-feedback strawman that
-/// shows why the observe/revert loop matters (it loses on FFT forever).
+/// Offload to the best-ranked candidate immediately and never revert —
+/// the no-feedback strawman that shows why the observe/revert loop
+/// matters (it loses on FFT forever).
 #[derive(Debug, Default)]
 pub struct AlwaysOffloadPolicy;
 
@@ -206,10 +255,9 @@ impl OffloadPolicy for AlwaysOffloadPolicy {
     }
 
     fn decide(&mut self, ctx: &PolicyCtx<'_>) -> Option<PolicyAction> {
-        if ctx.current == TargetId::ArmCore && ctx.dsp_available {
-            Some(PolicyAction::Offload { to: TargetId::C64xDsp })
-        } else {
-            None
+        match ctx.candidates.first() {
+            Some(c) if ctx.current.is_host() => Some(PolicyAction::Offload { to: c.target }),
+            _ => None,
         }
     }
 }
@@ -218,18 +266,19 @@ impl OffloadPolicy for AlwaysOffloadPolicy {
 mod tests {
     use super::*;
     use crate::jit::module::OpMix;
+    use crate::platform::dm3730;
     use crate::profiler::sampler::FunctionProfile;
 
-    fn profile_with(arm: &[f64], dsp: &[f64]) -> FunctionProfile {
+    fn profile_with(host: &[f64], remote: &[(TargetId, f64)]) -> FunctionProfile {
         let mut p = FunctionProfile::default();
-        for &x in arm {
+        for &x in host {
             p.time_ns.push(x);
-            p.on_mut(TargetId::ArmCore).push(x);
+            p.on_mut(TargetId::HOST).push(x);
             p.calls += 1;
         }
-        for &x in dsp {
+        for &(t, x) in remote {
             p.time_ns.push(x);
-            p.on_mut(TargetId::C64xDsp).push(x);
+            p.on_mut(t).push(x);
             p.calls += 1;
         }
         p
@@ -239,116 +288,116 @@ mod tests {
         Some(Hotspot { function: f, cycle_share: 0.9 })
     }
 
+    fn dsp_candidates() -> Vec<Candidate> {
+        vec![Candidate { target: dm3730::DSP, predicted_ns: 1000 }]
+    }
+
+    fn ctx<'a>(
+        f: FunctionId,
+        p: &'a FunctionProfile,
+        current: TargetId,
+        hotspot: Option<Hotspot>,
+        candidates: &'a [Candidate],
+    ) -> PolicyCtx<'a> {
+        PolicyCtx {
+            function: f,
+            profile: p,
+            current,
+            is_hotspot: hotspot,
+            candidates,
+            op_mix: OpMix::integer_loop(),
+            loop_depth: 1,
+        }
+    }
+
     #[test]
     fn offloads_when_hot_and_available() {
         let mut pol = BlindOffloadPolicy::default();
         let f = FunctionId(0);
         let p = profile_with(&[100.0; 6], &[]);
-        let ctx = PolicyCtx {
-            function: f,
-            profile: &p,
-            current: TargetId::ArmCore,
-            is_hotspot: hot(f),
-            dsp_available: true,
-            op_mix: OpMix::integer_loop(),
-            loop_depth: 1,
-        };
+        let cands = dsp_candidates();
         assert_eq!(
-            pol.decide(&ctx),
-            Some(PolicyAction::Offload { to: TargetId::C64xDsp })
+            pol.decide(&ctx(f, &p, TargetId::HOST, hot(f), &cands)),
+            Some(PolicyAction::Offload { to: dm3730::DSP })
         );
     }
 
     #[test]
-    fn does_not_offload_without_dsp_build() {
+    fn does_not_offload_without_candidates() {
         let mut pol = BlindOffloadPolicy::default();
         let f = FunctionId(0);
         let p = profile_with(&[100.0; 6], &[]);
-        let ctx = PolicyCtx {
-            function: f,
-            profile: &p,
-            current: TargetId::ArmCore,
-            is_hotspot: hot(f),
-            dsp_available: false,
-            op_mix: OpMix::integer_loop(),
-            loop_depth: 1,
-        };
-        assert_eq!(pol.decide(&ctx), None);
+        assert_eq!(pol.decide(&ctx(f, &p, TargetId::HOST, hot(f), &[])), None);
     }
 
     #[test]
-    fn commits_when_dsp_wins() {
+    fn commits_when_remote_wins() {
         let mut pol = BlindOffloadPolicy::default();
         let f = FunctionId(0);
+        let cands = dsp_candidates();
         // Trial accepted...
         let p = profile_with(&[100.0; 6], &[]);
-        let ctx = PolicyCtx {
-            function: f,
-            profile: &p,
-            current: TargetId::ArmCore,
-            is_hotspot: hot(f),
-            dsp_available: true,
-            op_mix: OpMix::integer_loop(),
-            loop_depth: 1,
-        };
-        pol.decide(&ctx);
-        // ...after the window, DSP is 5x faster: commit (no action).
-        let p = profile_with(&[100.0; 6], &[20.0; 5]);
-        let ctx = PolicyCtx {
-            function: f,
-            profile: &p,
-            current: TargetId::C64xDsp,
-            is_hotspot: hot(f),
-            dsp_available: true,
-            op_mix: OpMix::integer_loop(),
-            loop_depth: 1,
-        };
-        assert_eq!(pol.decide(&ctx), None);
+        pol.decide(&ctx(f, &p, TargetId::HOST, hot(f), &cands));
+        // ...after the window, the DSP is 5x faster: commit (no action).
+        let p = profile_with(&[100.0; 6], &[(dm3730::DSP, 20.0); 5]);
+        assert_eq!(pol.decide(&ctx(f, &p, dm3730::DSP, hot(f), &cands)), None);
         assert_eq!(pol.phase_name(f), "committed");
     }
 
     #[test]
-    fn reverts_when_dsp_loses_the_fft_case() {
+    fn reverts_when_remote_loses_the_fft_case() {
         let mut pol = BlindOffloadPolicy::default();
         let f = FunctionId(0);
+        let cands = dsp_candidates();
         let p = profile_with(&[542.7e6; 6], &[]);
-        let ctx = PolicyCtx {
-            function: f,
-            profile: &p,
-            current: TargetId::ArmCore,
-            is_hotspot: hot(f),
-            dsp_available: true,
-            op_mix: OpMix::integer_loop(),
-            loop_depth: 1,
-        };
-        pol.decide(&ctx);
+        pol.decide(&ctx(f, &p, TargetId::HOST, hot(f), &cands));
         // DSP turns out 0.7x (slower): revert.
-        let p = profile_with(&[542.7e6; 6], &[720.9e6; 5]);
-        let ctx = PolicyCtx {
-            function: f,
-            profile: &p,
-            current: TargetId::C64xDsp,
-            is_hotspot: hot(f),
-            dsp_available: true,
-            op_mix: OpMix::integer_loop(),
-            loop_depth: 1,
-        };
-        match pol.decide(&ctx) {
+        let p = profile_with(&[542.7e6; 6], &[(dm3730::DSP, 720.9e6); 5]);
+        match pol.decide(&ctx(f, &p, dm3730::DSP, hot(f), &cands)) {
             Some(PolicyAction::Revert { reason: RevertReason::SlowerOnRemote { .. } }) => {}
             other => panic!("expected revert, got {other:?}"),
         }
         assert_eq!(pol.phase_name(f), "blacklisted");
         // And it stays local afterwards.
-        let ctx = PolicyCtx {
-            function: f,
-            profile: &p,
-            current: TargetId::ArmCore,
-            is_hotspot: hot(f),
-            dsp_available: true,
-            op_mix: OpMix::integer_loop(),
-            loop_depth: 1,
-        };
-        assert_eq!(pol.decide(&ctx), None);
+        assert_eq!(pol.decide(&ctx(f, &p, TargetId::HOST, hot(f), &cands)), None);
+    }
+
+    #[test]
+    fn walks_the_candidate_ranking_after_a_failed_trial() {
+        // Two remote units: the first trial loses, the next hotspot
+        // nomination trials the *other* unit instead of re-trying or
+        // giving up — the N-target generalization of blind offload.
+        let mut pol = BlindOffloadPolicy::default();
+        let f = FunctionId(0);
+        let gpu = TargetId(2);
+        let cands = vec![
+            Candidate { target: dm3730::DSP, predicted_ns: 500 },
+            Candidate { target: gpu, predicted_ns: 800 },
+        ];
+        let p = profile_with(&[100.0; 6], &[]);
+        assert_eq!(
+            pol.decide(&ctx(f, &p, TargetId::HOST, hot(f), &cands)),
+            Some(PolicyAction::Offload { to: dm3730::DSP })
+        );
+        // DSP loses its trial.
+        let p = profile_with(&[100.0; 6], &[(dm3730::DSP, 500.0); 5]);
+        assert!(matches!(
+            pol.decide(&ctx(f, &p, dm3730::DSP, hot(f), &cands)),
+            Some(PolicyAction::Revert { .. })
+        ));
+        assert_eq!(pol.phase_name(f), "profiling", "one loss must not end the search");
+        // Next nomination trials the GPU.
+        assert_eq!(
+            pol.decide(&ctx(f, &p, TargetId::HOST, hot(f), &cands)),
+            Some(PolicyAction::Offload { to: gpu })
+        );
+        // GPU wins: committed there.
+        let p = profile_with(
+            &[100.0; 6],
+            &[(dm3730::DSP, 500.0), (gpu, 10.0), (gpu, 10.0), (gpu, 10.0), (gpu, 10.0), (gpu, 10.0)],
+        );
+        assert_eq!(pol.decide(&ctx(f, &p, gpu, hot(f), &cands)), None);
+        assert_eq!(pol.phase_name(f), "committed");
     }
 
     #[test]
@@ -356,36 +405,22 @@ mod tests {
         let cfg = BlindOffloadConfig { retry_after: Some(3), ..Default::default() };
         let mut pol = BlindOffloadPolicy::new(cfg);
         let f = FunctionId(0);
+        let cands = dsp_candidates();
         // Drive into blacklist.
         let p6 = profile_with(&[100.0; 6], &[]);
-        let ctx_arm = |p| PolicyCtx {
-            function: f,
-            profile: p,
-            current: TargetId::ArmCore,
-            is_hotspot: hot(f),
-            dsp_available: true,
-            op_mix: OpMix::integer_loop(),
-            loop_depth: 1,
-        };
-        pol.decide(&ctx_arm(&p6));
-        let p_bad = profile_with(&[100.0; 6], &[500.0; 5]);
-        let ctx_dsp = PolicyCtx {
-            function: f,
-            profile: &p_bad,
-            current: TargetId::C64xDsp,
-            is_hotspot: hot(f),
-            dsp_available: true,
-            op_mix: OpMix::integer_loop(),
-            loop_depth: 1,
-        };
-        assert!(matches!(pol.decide(&ctx_dsp), Some(PolicyAction::Revert { .. })));
+        pol.decide(&ctx(f, &p6, TargetId::HOST, hot(f), &cands));
+        let p_bad = profile_with(&[100.0; 6], &[(dm3730::DSP, 500.0); 5]);
+        assert!(matches!(
+            pol.decide(&ctx(f, &p_bad, dm3730::DSP, hot(f), &cands)),
+            Some(PolicyAction::Revert { .. })
+        ));
         // Three more calls: back to profiling, then a fresh offload.
         for _ in 0..3 {
-            assert_eq!(pol.decide(&ctx_arm(&p_bad)), None);
+            assert_eq!(pol.decide(&ctx(f, &p_bad, TargetId::HOST, hot(f), &cands)), None);
         }
         assert_eq!(
-            pol.decide(&ctx_arm(&p_bad)),
-            Some(PolicyAction::Offload { to: TargetId::C64xDsp })
+            pol.decide(&ctx(f, &p_bad, TargetId::HOST, hot(f), &cands)),
+            Some(PolicyAction::Offload { to: dm3730::DSP })
         );
     }
 
@@ -394,16 +429,8 @@ mod tests {
         let mut pol = NeverOffloadPolicy;
         let f = FunctionId(0);
         let p = profile_with(&[1e9; 100], &[]);
-        let ctx = PolicyCtx {
-            function: f,
-            profile: &p,
-            current: TargetId::ArmCore,
-            is_hotspot: hot(f),
-            dsp_available: true,
-            op_mix: OpMix::integer_loop(),
-            loop_depth: 1,
-        };
-        assert_eq!(pol.decide(&ctx), None);
+        let cands = dsp_candidates();
+        assert_eq!(pol.decide(&ctx(f, &p, TargetId::HOST, hot(f), &cands)), None);
     }
 
     #[test]
@@ -411,18 +438,10 @@ mod tests {
         let mut pol = AlwaysOffloadPolicy;
         let f = FunctionId(0);
         let p = profile_with(&[], &[]);
-        let ctx = PolicyCtx {
-            function: f,
-            profile: &p,
-            current: TargetId::ArmCore,
-            is_hotspot: None,
-            dsp_available: true,
-            op_mix: OpMix::integer_loop(),
-            loop_depth: 1,
-        };
+        let cands = dsp_candidates();
         assert_eq!(
-            pol.decide(&ctx),
-            Some(PolicyAction::Offload { to: TargetId::C64xDsp })
+            pol.decide(&ctx(f, &p, TargetId::HOST, None, &cands)),
+            Some(PolicyAction::Offload { to: dm3730::DSP })
         );
     }
 }

@@ -1,0 +1,188 @@
+//! The event-driven dispatch queue: concurrent in-flight calls on the
+//! sim clock.
+//!
+//! The seed coordinator executed one call at a time — submit, advance
+//! the clock past completion, return.  This queue decouples *issuing* a
+//! dispatch from *retiring* it: a submitted call becomes an
+//! [`InFlight`] event with an issue time, a start time (when its target
+//! actually becomes free — targets serialize) and a completion time.
+//! Retirement is completion-ordered: whichever in-flight call finishes
+//! first on the sim clock retires first, regardless of issue order, so
+//! calls on different targets genuinely overlap.
+//!
+//! Invariants (property-tested in `rust/tests/prop_invariants.rs`):
+//!
+//! - no two dispatches overlap on one target (per-target serialization
+//!   via the occupancy scheduler);
+//! - every submitted ticket retires exactly once;
+//! - on any single target — the host fallback path in particular —
+//!   start order equals issue order (program order is preserved).
+
+use crate::jit::module::FunctionId;
+use crate::platform::memory::Allocation;
+use crate::platform::TargetId;
+
+/// Handle for one submitted dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TicketId(pub u64);
+
+impl std::fmt::Display for TicketId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "d{}", self.0)
+    }
+}
+
+/// One dispatched-but-not-yet-retired call.
+#[derive(Debug)]
+pub struct InFlight {
+    pub ticket: TicketId,
+    pub function: FunctionId,
+    pub target: TargetId,
+    /// Which wrapper invocation this was (1-based).
+    pub iteration: u64,
+    /// Sim time the wrapper issued the dispatch.
+    pub issue_ns: u64,
+    /// Sim time the target started executing it (>= issue when queued
+    /// behind an earlier call).
+    pub start_ns: u64,
+    /// Sim time the target finishes (start + exec).
+    pub complete_ns: u64,
+    /// Execution time on the target (compute + dispatch setup + noise).
+    pub exec_ns: u64,
+    /// Parameter block staged in the shared region, freed at retirement.
+    pub staged: Option<Allocation>,
+}
+
+/// Completion-ordered queue of in-flight dispatches.
+#[derive(Debug, Default)]
+pub struct DispatchQueue {
+    inflight: Vec<InFlight>,
+    next_ticket: u64,
+    submitted: u64,
+    retired: u64,
+    max_in_flight: usize,
+}
+
+impl DispatchQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate the next ticket id (monotonic; issue order).
+    pub fn next_ticket(&mut self) -> TicketId {
+        let t = TicketId(self.next_ticket);
+        self.next_ticket += 1;
+        t
+    }
+
+    /// Enqueue a dispatch.
+    pub fn push(&mut self, call: InFlight) {
+        debug_assert!(call.complete_ns >= call.start_ns);
+        debug_assert!(call.start_ns >= call.issue_ns);
+        self.inflight.push(call);
+        self.submitted += 1;
+        self.max_in_flight = self.max_in_flight.max(self.inflight.len());
+    }
+
+    /// Remove and return the earliest-completing call (ties broken by
+    /// issue order).
+    pub fn pop_earliest(&mut self) -> Option<InFlight> {
+        let idx = self
+            .inflight
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, c)| (c.complete_ns, c.ticket))
+            .map(|(i, _)| i)?;
+        self.retired += 1;
+        Some(self.inflight.swap_remove(idx))
+    }
+
+    /// Dispatches currently queued or executing.
+    pub fn len(&self) -> usize {
+        self.inflight.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inflight.is_empty()
+    }
+
+    /// In-flight dispatches bound for `target`.
+    pub fn depth_on(&self, target: TargetId) -> usize {
+        self.inflight.iter().filter(|c| c.target == target).count()
+    }
+
+    /// Total dispatches ever submitted.
+    pub fn submitted(&self) -> u64 {
+        self.submitted
+    }
+
+    /// Total dispatches retired.
+    pub fn retired(&self) -> u64 {
+        self.retired
+    }
+
+    /// High-water mark of concurrent in-flight dispatches.
+    pub fn max_in_flight(&self) -> usize {
+        self.max_in_flight
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::dm3730;
+
+    fn call(q: &mut DispatchQueue, target: TargetId, issue: u64, start: u64, exec: u64) -> TicketId {
+        let ticket = q.next_ticket();
+        q.push(InFlight {
+            ticket,
+            function: FunctionId(0),
+            target,
+            iteration: ticket.0 + 1,
+            issue_ns: issue,
+            start_ns: start,
+            complete_ns: start + exec,
+            exec_ns: exec,
+            staged: None,
+        });
+        ticket
+    }
+
+    #[test]
+    fn retirement_is_completion_ordered_not_issue_ordered() {
+        let mut q = DispatchQueue::new();
+        // Issued first but slow...
+        let slow = call(&mut q, dm3730::DSP, 0, 0, 1000);
+        // ...issued second on another unit, fast.
+        let fast = call(&mut q, TargetId(2), 1, 1, 10);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.max_in_flight(), 2);
+        assert_eq!(q.pop_earliest().unwrap().ticket, fast);
+        assert_eq!(q.pop_earliest().unwrap().ticket, slow);
+        assert!(q.pop_earliest().is_none());
+        assert_eq!(q.submitted(), 2);
+        assert_eq!(q.retired(), 2);
+    }
+
+    #[test]
+    fn completion_ties_retire_in_issue_order() {
+        let mut q = DispatchQueue::new();
+        let a = call(&mut q, dm3730::DSP, 0, 0, 100);
+        let b = call(&mut q, TargetId(2), 0, 0, 100);
+        assert_eq!(q.pop_earliest().unwrap().ticket, a);
+        assert_eq!(q.pop_earliest().unwrap().ticket, b);
+    }
+
+    #[test]
+    fn depth_counts_per_target() {
+        let mut q = DispatchQueue::new();
+        call(&mut q, dm3730::DSP, 0, 0, 100);
+        call(&mut q, dm3730::DSP, 0, 100, 100);
+        call(&mut q, TargetId(2), 0, 0, 50);
+        assert_eq!(q.depth_on(dm3730::DSP), 2);
+        assert_eq!(q.depth_on(TargetId(2)), 1);
+        assert_eq!(q.depth_on(dm3730::ARM), 0);
+        q.pop_earliest();
+        assert_eq!(q.depth_on(TargetId(2)), 0);
+    }
+}

@@ -3,8 +3,8 @@
 //! The paper lists "the remote target is already busy" among the reasons
 //! to keep a function local (§3.2).  The scheduler tracks, on the sim
 //! clock, until when each target is occupied, so the coordinator can
-//! bounce a dispatch back to the host instead of queueing behind a
-//! long-running remote call.
+//! either bounce a dispatch back to the host or queue it behind the
+//! in-flight call ([`super::queue::DispatchQueue`]).
 
 use std::collections::HashMap;
 
@@ -27,9 +27,9 @@ impl TargetScheduler {
         self.busy_until_ns.get(&t).map(|&u| u > now_ns).unwrap_or(false)
     }
 
-    /// Mark `t` occupied for `dur_ns` starting at `now_ns`.
-    pub fn occupy(&mut self, t: TargetId, now_ns: u64, dur_ns: u64) {
-        let until = now_ns.saturating_add(dur_ns);
+    /// Mark `t` occupied for `dur_ns` starting at `start_ns`.
+    pub fn occupy(&mut self, t: TargetId, start_ns: u64, dur_ns: u64) {
+        let until = start_ns.saturating_add(dur_ns);
         let e = self.busy_until_ns.entry(t).or_insert(0);
         *e = (*e).max(until);
     }
@@ -45,8 +45,19 @@ impl TargetScheduler {
         self.bounced
     }
 
-    /// When does `t` become free (0 if it already is)?
-    pub fn free_at(&self, t: TargetId) -> u64 {
+    /// When does `t` become free, as seen from `now_ns` (0 if it already
+    /// is)?  A busy-until mark in the past is *not* returned: an expired
+    /// occupancy means the target is free now.
+    pub fn free_at(&self, t: TargetId, now_ns: u64) -> u64 {
+        match self.busy_until_ns.get(&t) {
+            Some(&until) if until > now_ns => until,
+            _ => 0,
+        }
+    }
+
+    /// The raw busy-until mark (may be in the past); the dispatch queue
+    /// uses `max(now, busy_until)` as the earliest start time.
+    pub fn busy_until(&self, t: TargetId) -> u64 {
         self.busy_until_ns.get(&t).copied().unwrap_or(0)
     }
 }
@@ -54,31 +65,46 @@ impl TargetScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::platform::dm3730;
 
     #[test]
     fn fresh_targets_are_free() {
         let s = TargetScheduler::new();
-        assert!(!s.is_busy(TargetId::C64xDsp, 0));
+        assert!(!s.is_busy(dm3730::DSP, 0));
+        assert_eq!(s.free_at(dm3730::DSP, 0), 0);
     }
 
     #[test]
     fn occupancy_expires() {
         let mut s = TargetScheduler::new();
-        s.occupy(TargetId::C64xDsp, 100, 50);
-        assert!(s.is_busy(TargetId::C64xDsp, 100));
-        assert!(s.is_busy(TargetId::C64xDsp, 149));
-        assert!(!s.is_busy(TargetId::C64xDsp, 150));
+        s.occupy(dm3730::DSP, 100, 50);
+        assert!(s.is_busy(dm3730::DSP, 100));
+        assert!(s.is_busy(dm3730::DSP, 149));
+        assert!(!s.is_busy(dm3730::DSP, 150));
         // Other targets unaffected.
-        assert!(!s.is_busy(TargetId::ArmCore, 120));
+        assert!(!s.is_busy(dm3730::ARM, 120));
     }
 
     #[test]
     fn occupy_extends_not_shrinks() {
         let mut s = TargetScheduler::new();
-        s.occupy(TargetId::C64xDsp, 0, 100);
-        s.occupy(TargetId::C64xDsp, 10, 20); // ends earlier: no shrink
-        assert_eq!(s.free_at(TargetId::C64xDsp), 100);
-        s.occupy(TargetId::C64xDsp, 50, 100);
-        assert_eq!(s.free_at(TargetId::C64xDsp), 150);
+        s.occupy(dm3730::DSP, 0, 100);
+        s.occupy(dm3730::DSP, 10, 20); // ends earlier: no shrink
+        assert_eq!(s.busy_until(dm3730::DSP), 100);
+        s.occupy(dm3730::DSP, 50, 100);
+        assert_eq!(s.busy_until(dm3730::DSP), 150);
+    }
+
+    #[test]
+    fn free_at_never_reports_stale_past_timestamps() {
+        // The documented contract: 0 once the occupancy has expired,
+        // even though the raw busy-until mark is still recorded.
+        let mut s = TargetScheduler::new();
+        s.occupy(dm3730::DSP, 100, 50);
+        assert_eq!(s.free_at(dm3730::DSP, 100), 150, "mid-occupancy: real free time");
+        assert_eq!(s.free_at(dm3730::DSP, 149), 150);
+        assert_eq!(s.free_at(dm3730::DSP, 150), 0, "expired: free now");
+        assert_eq!(s.free_at(dm3730::DSP, 10_000), 0, "long expired: still free");
+        assert_eq!(s.busy_until(dm3730::DSP), 150, "raw mark is preserved");
     }
 }

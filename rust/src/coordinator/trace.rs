@@ -14,13 +14,13 @@ use std::path::Path;
 
 use crate::error::{Error, Result};
 use crate::jit::module::{FunctionId, IrFunction, IrModule, OpMix};
-use crate::platform::TargetId;
+use crate::platform::{dm3730, TargetId};
 use crate::profiler::hotspot::Hotspot;
 use crate::profiler::sampler::FunctionProfile;
 use crate::util::json;
 use crate::workloads::WorkloadKind;
 
-use super::policy::{OffloadPolicy, PolicyAction, PolicyCtx};
+use super::policy::{Candidate, OffloadPolicy, PolicyAction, PolicyCtx};
 use super::vpe::CallRecord;
 
 /// One recorded call with both targets' (noise-free) prices.
@@ -134,8 +134,8 @@ impl Trace {
                         e.req("kind")?.as_str().ok_or_else(|| Error::Parse("bad kind".into()))?,
                     )?,
                     executed_on: match e.req("on")?.as_str() {
-                        Some("arm") => TargetId::ArmCore,
-                        Some("dsp") => TargetId::C64xDsp,
+                        Some("arm") => dm3730::ARM,
+                        Some("dsp") => dm3730::DSP,
                         _ => return Err(Error::Parse("bad 'on'".into())),
                     },
                     exec_ns: num("exec_ns")?,
@@ -184,7 +184,7 @@ pub fn replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> ReplayOutcome {
         id_map.entry(e.function).or_insert_with(|| {
             module.add_function(IrFunction::user(&format!("f{}", e.function), Some(e.kind)))
         });
-        targets.entry(e.function).or_insert(TargetId::ArmCore);
+        targets.entry(e.function).or_insert(TargetId::HOST);
     }
     module.finalize();
 
@@ -200,14 +200,12 @@ pub fn replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> ReplayOutcome {
     for e in &trace.entries {
         let fid = id_map[&e.function];
         let target = targets[&e.function];
-        let exec_ns = match target {
-            TargetId::ArmCore => e.arm_ns,
-            TargetId::C64xDsp => e.dsp_ns,
-        };
+        let exec_ns = if target.is_host() { e.arm_ns } else { e.dsp_ns };
         outcome.total_ms += exec_ns as f64 / 1e6;
-        match target {
-            TargetId::ArmCore => outcome.arm_calls += 1,
-            TargetId::C64xDsp => outcome.dsp_calls += 1,
+        if target.is_host() {
+            outcome.arm_calls += 1;
+        } else {
+            outcome.dsp_calls += 1;
         }
         // Update the replayed profile.
         let p = profiles.entry(e.function).or_default();
@@ -220,13 +218,17 @@ pub fn replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> ReplayOutcome {
 
         let share = p.total_cycles as f64 / total_cycles.max(1.0);
         let irf = module.function(fid).expect("registered");
+        // The recorded counterfactual prices cover the DM3730 pair, so
+        // the replayed platform exposes one remote candidate.
+        let candidates =
+            [Candidate { target: dm3730::DSP, predicted_ns: e.dsp_ns }];
         let ctx = PolicyCtx {
             function: fid,
             profile: p,
             current: target,
             is_hotspot: (p.calls >= 5 && share >= 0.10)
                 .then_some(Hotspot { function: fid, cycle_share: share }),
-            dsp_available: true,
+            candidates: &candidates,
             op_mix: irf.op_mix,
             loop_depth: irf.loop_depth,
         };
@@ -236,7 +238,7 @@ pub fn replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> ReplayOutcome {
                 outcome.offloads += 1;
             }
             Some(PolicyAction::Revert { .. }) => {
-                targets.insert(e.function, TargetId::ArmCore);
+                targets.insert(e.function, TargetId::HOST);
                 outcome.reverts += 1;
             }
             None => {}
@@ -263,7 +265,7 @@ mod tests {
             t.entries.push(TraceEntry {
                 function: 0,
                 kind,
-                executed_on: TargetId::ArmCore,
+                executed_on: dm3730::ARM,
                 exec_ns: arm_ms * 1_000_000,
                 profiling_ns: 0,
                 arm_ns: arm_ms * 1_000_000,

@@ -1,44 +1,57 @@
 //! The VPE runtime: the transparent profile → detect → dispatch →
-//! observe → revert loop of the paper, assembled from the substrates.
+//! observe → revert loop of the paper, assembled from the substrates —
+//! generalized to N targets and concurrent in-flight dispatches.
 //!
 //! One `Vpe` owns a JIT module (with injected caller wrappers), the
 //! `perf_event` sampler, the hot-spot detector, an off-load policy, the
-//! simulated DM3730, and (optionally) the PJRT artifact store that
-//! actually computes every dispatched call.  The application just
-//! registers its functions and calls them; everything else is VPE's job
-//! — "the developer just writes the code as if it had to be executed on
-//! a standard CPU" (§3).
+//! simulated SoC (a registry of compute units), an execution backend
+//! that actually computes dispatched calls, and the event-driven
+//! dispatch queue.  The application just registers its functions and
+//! calls them; everything else is VPE's job — "the developer just
+//! writes the code as if it had to be executed on a standard CPU" (§3).
+//!
+//! Two call shapes exist:
+//!
+//! - [`Vpe::call`] — the paper's synchronous semantics: issue one
+//!   dispatch and retire it before returning (the sim clock advances
+//!   past its completion);
+//! - [`Vpe::submit`] + [`Vpe::drain`] — the queued semantics: submits
+//!   only charge the wrapper overhead and enqueue an in-flight event;
+//!   calls on different targets overlap on the sim clock, and
+//!   retirement is completion-ordered.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
-use std::sync::Arc;
 use std::time::Duration;
 
 use crate::error::{Error, Result};
 use crate::jit::module::{FunctionId, IrFunction, IrModule};
 use crate::jit::symbols::DspToolchain;
 use crate::jit::wrapper::DispatchTable;
-use crate::platform::{Soc, TargetId};
+use crate::platform::registry::BuildKind;
+use crate::platform::{dm3730, Soc, TargetId};
 use crate::profiler::counters::CounterSample;
 use crate::profiler::hotspot::HotspotDetector;
 use crate::profiler::sampler::{PerfSampler, SamplerConfig};
-use crate::runtime::exec::LoadedArtifact;
-use crate::runtime::ArtifactStore;
+use crate::runtime::backend::{ExecRequest, ExecutionBackend, SimBackend};
 use crate::sim::{SimClock, SimRng};
 use crate::workloads::{self, Tensor, WorkloadInstance, WorkloadKind};
 
 use super::events::{EventLog, VpeEvent};
 use super::policy::{
-    BlindOffloadConfig, BlindOffloadPolicy, OffloadPolicy, PolicyAction, PolicyCtx,
+    BlindOffloadConfig, BlindOffloadPolicy, Candidate, OffloadPolicy, PolicyAction, PolicyCtx,
 };
+use super::queue::{DispatchQueue, InFlight, TicketId};
 use super::scheduler::TargetScheduler;
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct VpeConfig {
-    /// Directory with `manifest.json` + HLO artifacts.  `None` runs the
-    /// coordinator sim-only (decisions and timing, no real numerics) —
-    /// used by pure-simulation sweeps.
+    /// Directory with `manifest.json` + HLO artifacts.  With the `pjrt`
+    /// feature this selects the PJRT backend; without it, real numerics
+    /// come from the pure-Rust reference backend.  `None` runs the
+    /// coordinator sim-only (decisions and timing, no numerics) — used
+    /// by pure-simulation sweeps.
     pub artifacts_dir: Option<PathBuf>,
     pub sampler: SamplerConfig,
     pub detector: HotspotDetector,
@@ -51,6 +64,10 @@ pub struct VpeConfig {
     /// Relative stddev of per-call compute-time noise (the paper's
     /// "normal execution" rows show ~0.2–1 %).
     pub exec_noise_frac: f64,
+    /// Maximum in-flight dispatches per remote target before a further
+    /// submit bounces back to the host (the paper's "remote target is
+    /// already busy" rule, §3.2, generalized to a bounded queue).
+    pub max_queue_per_target: usize,
 }
 
 impl Default for VpeConfig {
@@ -63,12 +80,13 @@ impl Default for VpeConfig {
             seed: 0xD3730,
             verify_outputs: true,
             exec_noise_frac: 0.008,
+            max_queue_per_target: 2,
         }
     }
 }
 
 impl VpeConfig {
-    /// Simulation-only config (no PJRT, no artifacts).
+    /// Simulation-only config (no backend numerics).
     pub fn sim_only() -> Self {
         VpeConfig { artifacts_dir: None, verify_outputs: false, ..Default::default() }
     }
@@ -87,7 +105,14 @@ pub struct CallRecord {
     pub profiling_ns: u64,
     /// Wrapper indirection cost, ns.
     pub wrapper_ns: u64,
-    /// Real PJRT wall time, if an artifact backed this call.
+    /// Sim time the wrapper issued the dispatch.
+    pub issue_ns: u64,
+    /// Sim time the target started executing (later than issue when the
+    /// dispatch queued behind an earlier in-flight call).
+    pub start_ns: u64,
+    /// Sim time the target finished (start + exec).
+    pub complete_ns: u64,
+    /// Real backend wall time, if the backend computed this call.
     pub wall: Option<Duration>,
     /// Output verified against the Rust reference (None if unverified).
     pub output_ok: Option<bool>,
@@ -100,15 +125,27 @@ impl CallRecord {
     pub fn total_ns(&self) -> u64 {
         self.exec_ns + self.profiling_ns + self.wrapper_ns
     }
+
+    /// Time spent waiting for the target behind earlier dispatches, ns.
+    pub fn queued_ns(&self) -> u64 {
+        self.start_ns.saturating_sub(self.issue_ns)
+    }
 }
 
-/// Per-function binding: workload instance + loaded executables.
+/// Per-function binding: workload instance + toolchain availability.
 struct Binding {
     instance: WorkloadInstance,
-    has_dsp_build: bool,
-    loaded: HashMap<TargetId, Arc<LoadedArtifact>>, // lazily filled
-    artifact_missing: bool,
+    /// The accelerator toolchain produced a tuned build (functions
+    /// without one cannot dispatch to `BuildKind::Tuned` targets).
+    has_tuned_build: bool,
     mismatches: u64,
+}
+
+/// One retired dispatch, before it is handed back to the caller.
+struct Retired {
+    ticket: TicketId,
+    record: CallRecord,
+    output: Option<Tensor>,
 }
 
 /// The VPE coordinator.
@@ -122,10 +159,14 @@ pub struct Vpe {
     soc: Soc,
     clock: SimClock,
     rng: SimRng,
-    store: Option<ArtifactStore>,
+    backend: Box<dyn ExecutionBackend>,
     toolchain: DspToolchain,
     bindings: HashMap<FunctionId, Binding>,
     scheduler: TargetScheduler,
+    queue: DispatchQueue,
+    /// Records retired while waiting for another ticket (mixed
+    /// `submit`/`call` usage); handed out by the next `drain`.
+    completed: VecDeque<CallRecord>,
     events: EventLog,
     trace: Option<super::trace::Trace>,
 }
@@ -135,40 +176,51 @@ impl std::fmt::Debug for Vpe {
         f.debug_struct("Vpe")
             .field("functions", &self.module.len())
             .field("policy", &self.policy.name())
+            .field("backend", &self.backend.name())
+            .field("targets", &self.soc.registry.len())
+            .field("in_flight", &self.queue.len())
             .field("sim_ms", &self.clock.now_ms())
             .finish()
+    }
+}
+
+/// Pick the execution backend for a config (see `VpeConfig::artifacts_dir`).
+fn backend_for(cfg: &VpeConfig) -> Result<Box<dyn ExecutionBackend>> {
+    match &cfg.artifacts_dir {
+        None => Ok(Box::new(SimBackend)),
+        #[cfg(feature = "pjrt")]
+        Some(dir) => Ok(Box::new(crate::runtime::backend::PjrtBackend::open(dir.clone())?)),
+        #[cfg(not(feature = "pjrt"))]
+        Some(_) => Ok(Box::new(crate::runtime::backend::ReferenceBackend)),
     }
 }
 
 impl Vpe {
     /// Build a coordinator with the paper's blind-offload policy.
     pub fn new(cfg: VpeConfig) -> Result<Self> {
-        let store = match &cfg.artifacts_dir {
-            Some(dir) => Some(ArtifactStore::open(
-                dir.clone(),
-                crate::runtime::RtClient::cpu()?,
-            )?),
-            None => None,
-        };
+        let backend = backend_for(&cfg)?;
         let policy = Box::new(BlindOffloadPolicy::new(cfg.blind));
-        Self::with_parts(cfg, store, policy)
+        Self::with_parts(cfg, backend, policy)
     }
 
     /// Build with a custom policy (ablations, baselines).
     pub fn with_policy(cfg: VpeConfig, policy: Box<dyn OffloadPolicy>) -> Result<Self> {
-        let store = match &cfg.artifacts_dir {
-            Some(dir) => Some(ArtifactStore::open(
-                dir.clone(),
-                crate::runtime::RtClient::cpu()?,
-            )?),
-            None => None,
-        };
-        Self::with_parts(cfg, store, policy)
+        let backend = backend_for(&cfg)?;
+        Self::with_parts(cfg, backend, policy)
+    }
+
+    /// Build with a custom execution backend (and policy).
+    pub fn with_backend(
+        cfg: VpeConfig,
+        backend: Box<dyn ExecutionBackend>,
+        policy: Box<dyn OffloadPolicy>,
+    ) -> Result<Self> {
+        Self::with_parts(cfg, backend, policy)
     }
 
     fn with_parts(
         cfg: VpeConfig,
-        store: Option<ArtifactStore>,
+        backend: Box<dyn ExecutionBackend>,
         policy: Box<dyn OffloadPolicy>,
     ) -> Result<Self> {
         let sampler = PerfSampler::new(cfg.sampler.clone())?;
@@ -181,10 +233,12 @@ impl Vpe {
             policy,
             soc: Soc::dm3730(),
             clock: SimClock::new(),
-            store,
+            backend,
             toolchain: DspToolchain::standard(),
             bindings: HashMap::new(),
             scheduler: TargetScheduler::new(),
+            queue: DispatchQueue::new(),
+            completed: VecDeque::new(),
             events: EventLog::new(),
             trace: None,
             cfg,
@@ -220,18 +274,9 @@ impl Vpe {
     pub fn register_instance(&mut self, instance: WorkloadInstance) -> Result<FunctionId> {
         let name = format!("{}#{}", instance.kind.name(), self.module.len());
         let irf = IrFunction::user(&name, Some(instance.kind));
-        let has_dsp_build = self.toolchain.compile(&irf).is_some();
+        let has_tuned_build = self.toolchain.compile(&irf).is_some();
         let f = self.module.try_add_function(irf)?;
-        self.bindings.insert(
-            f,
-            Binding {
-                instance,
-                has_dsp_build,
-                loaded: HashMap::new(),
-                artifact_missing: false,
-                mismatches: 0,
-            },
-        );
+        self.bindings.insert(f, Binding { instance, has_tuned_build, mismatches: 0 });
         self.events.push(self.clock.now_ns(), VpeEvent::FunctionRegistered {
             function: f,
             name,
@@ -264,9 +309,54 @@ impl Vpe {
             .ok_or_else(|| Error::Coordinator("module not finalized".into()))
     }
 
+    fn binding(&self, f: FunctionId) -> Result<&Binding> {
+        self.bindings
+            .get(&f)
+            .ok_or_else(|| Error::Coordinator(format!("{f} has no workload binding")))
+    }
+
+    // -- candidate ranking --------------------------------------------------
+
+    /// Can a function with (or without) a tuned build run on a unit
+    /// executing `build`?  The single source of truth for both the
+    /// candidate ranking and the submit-time failover check.
+    fn build_available(has_tuned_build: bool, build: BuildKind) -> bool {
+        match build {
+            BuildKind::Naive => true,
+            BuildKind::Tuned => has_tuned_build,
+        }
+    }
+
+    /// Usable non-host targets for `f`, ranked best-first by the cost
+    /// model's price for one call at the current scale.  A target
+    /// qualifies when it is healthy, the function's build exists for it,
+    /// and the cost model has a row — so registering a new unit plus its
+    /// rate rows is all it takes to join this ranking.
+    fn candidates_for(&self, f: FunctionId) -> Result<Vec<Candidate>> {
+        let binding = self.binding(f)?;
+        let kind = binding.instance.kind;
+        let scale = binding.instance.scale;
+        let mut out: Vec<Candidate> = Vec::new();
+        for (id, spec) in self.soc.targets() {
+            if id.is_host()
+                || !self.soc.is_usable(id)
+                || !Self::build_available(binding.has_tuned_build, spec.build)
+            {
+                continue;
+            }
+            if let Ok(ns) = self.soc.call_scaled_ns(kind, &scale, id) {
+                out.push(Candidate { target: id, predicted_ns: ns });
+            }
+        }
+        out.sort_by_key(|c| (c.predicted_ns, c.target));
+        Ok(out)
+    }
+
     // -- the call path ------------------------------------------------------
 
-    /// Invoke function `f` once through its wrapper: the VPE hot path.
+    /// Invoke function `f` once through its wrapper, synchronously: the
+    /// dispatch is issued and retired before returning (the VPE hot
+    /// path, the paper's semantics).
     pub fn call(&mut self, f: FunctionId) -> Result<CallRecord> {
         self.call_impl(f, None).map(|(rec, _)| rec)
     }
@@ -283,44 +373,101 @@ impl Vpe {
         self.call_impl(f, Some(inputs))
     }
 
+    /// Issue a dispatch of `f` without waiting for it: only the wrapper
+    /// overhead is charged to the clock and the call becomes an
+    /// in-flight event.  Dispatches to different targets overlap; a
+    /// target's own dispatches serialize (queued starts).  Retire with
+    /// [`Vpe::drain`].
+    pub fn submit(&mut self, f: FunctionId) -> Result<TicketId> {
+        self.submit_impl(f)
+    }
+
+    /// Retire every in-flight dispatch (completion-ordered, advancing
+    /// the sim clock to each completion) and return all finished
+    /// records, including any buffered from earlier mixed usage.
+    pub fn drain(&mut self) -> Result<Vec<CallRecord>> {
+        let mut out: Vec<CallRecord> = self.completed.drain(..).collect();
+        while let Some(r) = self.retire_earliest(None, None)? {
+            out.push(r.record);
+        }
+        Ok(out)
+    }
+
+    /// Dispatches currently in flight.
+    pub fn in_flight(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// High-water mark of concurrent in-flight dispatches.
+    pub fn max_in_flight(&self) -> usize {
+        self.queue.max_in_flight()
+    }
+
     fn call_impl(
         &mut self,
         f: FunctionId,
         custom_inputs: Option<&[Tensor]>,
     ) -> Result<(CallRecord, Option<Tensor>)> {
+        let ticket = self.submit_impl(f)?;
+        loop {
+            let retired = self
+                .retire_earliest(Some(ticket), custom_inputs)?
+                .ok_or_else(|| Error::Coordinator("submitted ticket vanished".into()))?;
+            if retired.ticket == ticket {
+                return Ok((retired.record, retired.output));
+            }
+            self.completed.push_back(retired.record);
+        }
+    }
+
+    fn submit_impl(&mut self, f: FunctionId) -> Result<TicketId> {
         self.finalize()?;
         let table = self.table.as_ref().expect("finalized above");
         let wrapper_ns = table.wrapper_overhead_ns;
         let mut target = table.dispatch(f)?;
         let iteration = table.call_count(f)?;
 
+        // Field-level lookup: the binding borrow must not lock the whole
+        // coordinator (clock/scheduler/queue mutate below).
         let binding = self
             .bindings
             .get(&f)
             .ok_or_else(|| Error::Coordinator(format!("{f} has no workload binding")))?;
         let kind = binding.instance.kind;
         let scale = binding.instance.scale;
+        let has_tuned_build = binding.has_tuned_build;
 
-        // Fail over if the remote target died (paper §1: react to
-        // hardware failure) or is busy (paper §3.2).
-        if target == TargetId::C64xDsp {
-            if !self.soc.is_usable(target) {
+        // The wrapper indirection happens at issue time.
+        self.clock.advance(wrapper_ns);
+        let issue_ns = self.clock.now_ns();
+
+        if !target.is_host() {
+            // Fail over if the remote target died (paper §1: react to
+            // hardware failure), lost its build, or can no longer be
+            // priced.
+            let build_ok = self
+                .soc
+                .target(target)
+                .map(|s| Self::build_available(has_tuned_build, s.build))
+                .unwrap_or(false);
+            let usable =
+                self.soc.is_usable(target) && build_ok && self.soc.cost.has_rate(kind, target);
+            if !usable {
                 table.reset(f)?;
                 self.policy.on_forced_revert(f);
-                self.events.push(self.clock.now_ns(), VpeEvent::TargetFailedOver {
-                    function: f,
-                    target,
-                });
-                target = TargetId::ArmCore;
-            } else if self.scheduler.is_busy(target, self.clock.now_ns()) {
+                self.events.push(issue_ns, VpeEvent::TargetFailedOver { function: f, target });
+                target = TargetId::HOST;
+            } else if self.queue.depth_on(target) >= self.cfg.max_queue_per_target {
+                // Bounded queue: beyond the limit the dispatch bounces
+                // back to the host (paper §3.2, "already busy").
                 self.scheduler.record_bounce();
-                target = TargetId::ArmCore;
+                target = TargetId::HOST;
             }
         }
 
-        // Stage the parameter block through the shared region (alloc +
-        // free around the call), as VPE's injected allocators do.
-        let staged = if target == TargetId::C64xDsp {
+        // Stage the parameter block through the shared region for the
+        // lifetime of the dispatch, as VPE's injected allocators do.
+        let staged = if !target.is_host() {
             Some(self.soc.shared.alloc(scale.param_bytes.max(1))?)
         } else {
             None
@@ -331,64 +478,106 @@ impl Vpe {
         let noise = 1.0 + self.cfg.exec_noise_frac * self.rng.standard_normal();
         let exec_ns = (base_ns as f64 * noise.max(0.1)) as u64;
 
-        // Real execution through PJRT (numerics + wall clock).
-        let (wall, output_ok, output) = self.execute_real(f, target, custom_inputs)?;
+        // Targets serialize: start when the unit is free.
+        let start_ns = issue_ns.max(self.scheduler.busy_until(target));
+        if start_ns > issue_ns {
+            self.events.push(issue_ns, VpeEvent::DispatchWaited {
+                function: f,
+                target,
+                wait_ns: start_ns - issue_ns,
+            });
+        }
+        self.scheduler.occupy(target, start_ns, exec_ns);
 
-        if let Some(a) = staged {
+        let ticket = self.queue.next_ticket();
+        self.queue.push(InFlight {
+            ticket,
+            function: f,
+            target,
+            iteration,
+            issue_ns,
+            start_ns,
+            complete_ns: start_ns + exec_ns,
+            exec_ns,
+            staged,
+        });
+        Ok(ticket)
+    }
+
+    /// Retire the earliest-completing in-flight dispatch: advance the
+    /// clock to its completion, run the backend, charge profiling, free
+    /// staging, and tick the policy.  `custom` carries caller inputs for
+    /// one specific ticket (the synchronous `call_with` path).
+    fn retire_earliest(
+        &mut self,
+        custom_ticket: Option<TicketId>,
+        custom_inputs: Option<&[Tensor]>,
+    ) -> Result<Option<Retired>> {
+        let Some(call) = self.queue.pop_earliest() else { return Ok(None) };
+        let f = call.function;
+        let target = call.target;
+        self.clock.advance_to(call.complete_ns);
+
+        if let Some(a) = call.staged {
             self.soc.shared.free(a)?;
         }
 
+        // Real execution through the backend (numerics + wall clock).
+        let custom = match (custom_ticket, custom_inputs) {
+            (Some(t), Some(inputs)) if t == call.ticket => Some(inputs),
+            _ => None,
+        };
+        let (wall, output_ok, output) = self.execute_real(f, target, custom)?;
+
         // Profile the call (perf_event) and charge its cost.
+        let binding = self
+            .bindings
+            .get(&f)
+            .ok_or_else(|| Error::Coordinator(format!("{f} has no workload binding")))?;
+        let kind = binding.instance.kind;
+        let scale = binding.instance.scale;
         let freq = self.soc.target(target)?.freq_hz;
-        let sample = CounterSample::synthesize(kind, scale.items, exec_ns as f64, target, freq);
-        let cost = self.sampler.record(f, target, sample, exec_ns, &mut self.rng);
+        let sample =
+            CounterSample::synthesize(kind, scale.items, call.exec_ns as f64, target, freq);
+        let cost = self.sampler.record(f, target, sample, call.exec_ns, &mut self.rng);
         if cost.burst_ns > 0 {
             self.events
                 .push(self.clock.now_ns(), VpeEvent::AnalysisBurst { cost_ns: cost.burst_ns });
         }
-
-        self.scheduler.occupy(target, self.clock.now_ns(), exec_ns);
-        self.clock.advance(exec_ns + cost.total_ns() + wrapper_ns);
+        self.clock.advance(cost.total_ns());
 
         // Policy tick.
         let action = self.policy_tick(f, target)?;
 
+        let wrapper_ns = self.table()?.wrapper_overhead_ns;
+        let record = CallRecord {
+            function: f,
+            iteration: call.iteration,
+            target,
+            exec_ns: call.exec_ns,
+            profiling_ns: cost.total_ns(),
+            wrapper_ns,
+            issue_ns: call.issue_ns,
+            start_ns: call.start_ns,
+            complete_ns: call.complete_ns,
+            wall,
+            output_ok,
+            action,
+        };
+
         if self.trace.is_some() {
-            // Record both targets' noise-free prices for what-if replay.
-            let arm_ns = self.soc.call_scaled_ns(kind, &scale, TargetId::ArmCore)?;
+            // Record the host's and the DM3730 remote's noise-free
+            // prices for what-if replay (unknown units price as MAX).
+            let arm_ns = self.soc.call_scaled_ns(kind, &scale, TargetId::HOST)?;
             let dsp_ns =
-                self.soc.call_scaled_ns(kind, &scale, TargetId::C64xDsp).unwrap_or(u64::MAX);
-            let rec = CallRecord {
-                function: f,
-                iteration,
-                target,
-                exec_ns,
-                profiling_ns: cost.total_ns(),
-                wrapper_ns,
-                wall,
-                output_ok,
-                action,
-            };
-            self.trace.as_mut().expect("checked").push(&rec, kind, arm_ns, dsp_ns);
+                self.soc.call_scaled_ns(kind, &scale, dm3730::DSP).unwrap_or(u64::MAX);
+            self.trace.as_mut().expect("checked").push(&record, kind, arm_ns, dsp_ns);
         }
 
-        Ok((
-            CallRecord {
-                function: f,
-                iteration,
-                target,
-                exec_ns,
-                profiling_ns: cost.total_ns(),
-                wrapper_ns,
-                wall,
-                output_ok,
-                action,
-            },
-            output,
-        ))
+        Ok(Some(Retired { ticket: call.ticket, record, output }))
     }
 
-    /// Run `iters` consecutive calls of `f`.
+    /// Run `iters` consecutive synchronous calls of `f`.
     pub fn run(&mut self, f: FunctionId, iters: usize) -> Result<Vec<CallRecord>> {
         (0..iters).map(|_| self.call(f)).collect()
     }
@@ -399,32 +588,20 @@ impl Vpe {
         target: TargetId,
         custom_inputs: Option<&[Tensor]>,
     ) -> Result<(Option<Duration>, Option<bool>, Option<Tensor>)> {
-        let Some(store) = &self.store else { return Ok((None, None, None)) };
-        let binding = self.bindings.get_mut(&f).expect("checked by caller");
-        if binding.artifact_missing {
-            return Ok((None, None, None));
-        }
-        if !binding.loaded.contains_key(&target) {
-            let name = match target {
-                TargetId::ArmCore => &binding.instance.artifact_naive,
-                TargetId::C64xDsp => &binding.instance.artifact_dsp,
-            };
-            match store.load(name) {
-                Ok(a) => {
-                    binding.loaded.insert(target, a);
-                }
-                Err(Error::Artifact(_)) => {
-                    // Not AOT'd at this size (e.g. a sim-only matmul in
-                    // the Fig 2b sweep): run sim-only from now on.
-                    binding.artifact_missing = true;
-                    return Ok((None, None, None));
-                }
-                Err(e) => return Err(e),
-            }
-        }
-        let artifact = binding.loaded.get(&target).expect("inserted above").clone();
+        let build = self.soc.target(target)?.build;
+        let binding = self
+            .bindings
+            .get_mut(&f)
+            .ok_or_else(|| Error::Coordinator(format!("{f} has no workload binding")))?;
+        let artifact = match build {
+            BuildKind::Naive => binding.instance.artifact_naive.clone(),
+            BuildKind::Tuned => binding.instance.artifact_dsp.clone(),
+        };
         let inputs = custom_inputs.unwrap_or(&binding.instance.inputs);
-        let (out, wall) = artifact.execute(inputs)?;
+        let req = ExecRequest { artifact: &artifact, kind: binding.instance.kind, inputs };
+        let Some((out, wall)) = self.backend.execute(&req)? else {
+            return Ok((None, None, None));
+        };
         // Verify only the registered inputs (callers of call_with own
         // the correctness of their custom data).
         let ok = if self.cfg.verify_outputs && custom_inputs.is_none() {
@@ -442,16 +619,22 @@ impl Vpe {
     }
 
     fn policy_tick(&mut self, f: FunctionId, current: TargetId) -> Result<Option<PolicyAction>> {
-        let Some(profile) = self.sampler.profile(f) else { return Ok(None) };
-        let hotspot = self
-            .detector
-            .hottest(&self.sampler, &self.module)
-            .filter(|h| h.function == f);
+        if self.sampler.profile(f).is_none() {
+            return Ok(None);
+        }
+        // Nominate the hottest function still resident on the host:
+        // once a function has been moved to its unit, the next-hottest
+        // becomes the candidate (the N-target generalization of "move
+        // the hottest function to the DSP").
+        let table = self.table()?;
+        let nomination = self.detector.hottest_where(&self.sampler, &self.module, |g| {
+            table.current_target(g).map(|t| t.is_host()).unwrap_or(false)
+        });
+        let current_slot = table.current_target(f)?;
+        let hotspot = nomination.filter(|h| h.function == f);
         if let Some(h) = hotspot {
             // Log only transitions to keep the event log readable.
-            if current == TargetId::ArmCore
-                && self.table()?.current_target(f)? == TargetId::ArmCore
-            {
+            if current.is_host() && current_slot.is_host() {
                 let already = self
                     .events
                     .iter()
@@ -464,18 +647,18 @@ impl Vpe {
                 }
             }
         }
-        let binding = &self.bindings[&f];
-        let dsp_available = binding.has_dsp_build && self.soc.is_usable(TargetId::C64xDsp);
+        let candidates = self.candidates_for(f)?;
         let irf = self
             .module
             .function(f)
             .ok_or_else(|| Error::Coordinator(format!("{f} not in module")))?;
+        let profile = self.sampler.profile(f).expect("checked above");
         let ctx = PolicyCtx {
             function: f,
             profile,
-            current: self.table()?.current_target(f)?,
+            current: current_slot,
             is_hotspot: hotspot,
-            dsp_available,
+            candidates: &candidates,
             op_mix: irf.op_mix,
             loop_depth: irf.loop_depth,
         };
@@ -520,13 +703,27 @@ impl Vpe {
         &self.soc
     }
 
-    /// Mutable SoC access — failure injection in tests/examples.
+    /// Mutable SoC access — failure injection and target registration
+    /// in tests/examples.
     pub fn soc_mut(&mut self) -> &mut Soc {
         &mut self.soc
     }
 
+    pub fn scheduler(&self) -> &TargetScheduler {
+        &self.scheduler
+    }
+
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Display name of a target on this coordinator's platform.
+    pub fn target_name(&self, t: TargetId) -> String {
+        self.soc.target_name(t)
     }
 
     pub fn kind_of(&self, f: FunctionId) -> Option<WorkloadKind> {
@@ -553,13 +750,20 @@ impl Vpe {
     pub fn report(&self) -> String {
         let mut t = crate::metrics::Table::new(
             "VPE status",
-            &["function", "kind", "calls", "target", "ARM ms", "DSP ms", "speedup"],
+            &["function", "kind", "calls", "target", "host ms", "best remote ms", "speedup"],
         );
         for (f, b) in &self.bindings {
             let p = self.sampler.profile(*f);
-            let arm = p.and_then(|p| p.mean_ns_on(TargetId::ArmCore));
-            let dsp = p.and_then(|p| p.mean_ns_on(TargetId::C64xDsp));
-            let speedup = match (arm, dsp) {
+            let host = p.and_then(|p| p.mean_ns_on(TargetId::HOST));
+            // Best measured mean across every non-host unit.
+            let remote = p.and_then(|p| {
+                p.sampled_targets()
+                    .into_iter()
+                    .filter(|t| !t.is_host())
+                    .filter_map(|t| p.mean_ns_on(t))
+                    .min_by(|a, b| a.total_cmp(b))
+            });
+            let speedup = match (host, remote) {
                 (Some(a), Some(d)) if d > 0.0 => format!("{:.1}x", a / d),
                 _ => "-".into(),
             };
@@ -567,9 +771,11 @@ impl Vpe {
                 f.to_string(),
                 b.instance.kind.name().into(),
                 p.map(|p| p.calls).unwrap_or(0).to_string(),
-                self.current_target(*f).map(|t| t.name().to_string()).unwrap_or("-".into()),
-                arm.map(|v| format!("{:.1}", v / 1e6)).unwrap_or("-".into()),
-                dsp.map(|v| format!("{:.1}", v / 1e6)).unwrap_or("-".into()),
+                self.current_target(*f)
+                    .map(|t| self.soc.target_name(t))
+                    .unwrap_or("-".into()),
+                host.map(|v| format!("{:.1}", v / 1e6)).unwrap_or("-".into()),
+                remote.map(|v| format!("{:.1}", v / 1e6)).unwrap_or("-".into()),
                 speedup,
             ]);
         }
@@ -593,6 +799,8 @@ fn verify_output(instance: &WorkloadInstance, out: &Tensor) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::platform::registry::TargetSpec;
+    use crate::platform::{TransferModel, Transport};
 
     fn sim_vpe() -> Vpe {
         Vpe::new(VpeConfig::sim_only()).unwrap()
@@ -603,18 +811,18 @@ mod tests {
         let mut vpe = sim_vpe();
         let f = vpe.register_workload(WorkloadKind::Matmul).unwrap();
         let recs = vpe.run(f, 20).unwrap();
-        // Warm-up on ARM, then offloaded to the DSP and stays there.
-        assert_eq!(recs[0].target, TargetId::ArmCore);
-        assert_eq!(vpe.current_target(f).unwrap(), TargetId::C64xDsp);
+        // Warm-up on the host, then offloaded to the DSP and stays there.
+        assert_eq!(recs[0].target, TargetId::HOST);
+        assert_eq!(vpe.current_target(f).unwrap(), dm3730::DSP);
         assert_eq!(vpe.events().offloads().len(), 1);
         assert!(vpe.events().reverts().is_empty());
-        // Steady-state DSP calls are much faster than the ARM warm-up.
+        // Steady-state DSP calls are much faster than the host warm-up.
         // At the default 128x128 size the 100 ms dispatch setup caps the
         // end-to-end win at ~2.6x (ARM 276.6 ms vs DSP 107 ms) — still a
         // clear speedup; Table 1's 31.9x happens at 500x500.
         let arm_mean = recs[..3].iter().map(|r| r.exec_ns as f64).sum::<f64>() / 3.0;
         let last = recs.last().unwrap();
-        assert_eq!(last.target, TargetId::C64xDsp);
+        assert_eq!(last.target, dm3730::DSP);
         assert!(arm_mean / last.exec_ns as f64 > 2.0);
     }
 
@@ -626,7 +834,7 @@ mod tests {
         // Blind offload tried the DSP, found it slower, came back.
         assert_eq!(vpe.events().offloads().len(), 1);
         assert_eq!(vpe.events().reverts().len(), 1);
-        assert_eq!(vpe.current_target(f).unwrap(), TargetId::ArmCore);
+        assert_eq!(vpe.current_target(f).unwrap(), TargetId::HOST);
     }
 
     #[test]
@@ -634,12 +842,12 @@ mod tests {
         let mut vpe = sim_vpe();
         let f = vpe.register_workload(WorkloadKind::Matmul).unwrap();
         vpe.run(f, 15).unwrap();
-        assert_eq!(vpe.current_target(f).unwrap(), TargetId::C64xDsp);
-        vpe.soc_mut().fail_target(TargetId::C64xDsp);
+        assert_eq!(vpe.current_target(f).unwrap(), dm3730::DSP);
+        vpe.soc_mut().fail_target(dm3730::DSP);
         let rec = vpe.call(f).unwrap();
         // The call still succeeded — locally.
-        assert_eq!(rec.target, TargetId::ArmCore);
-        assert_eq!(vpe.current_target(f).unwrap(), TargetId::ArmCore);
+        assert_eq!(rec.target, TargetId::HOST);
+        assert_eq!(vpe.current_target(f).unwrap(), TargetId::HOST);
         assert!(!vpe
             .events()
             .iter()
@@ -656,7 +864,7 @@ mod tests {
         let f = vpe.register_workload(WorkloadKind::Matmul).unwrap();
         vpe.run(f, 20).unwrap();
         // Blind to the hotspot: everything stays local.
-        assert_eq!(vpe.current_target(f).unwrap(), TargetId::ArmCore);
+        assert_eq!(vpe.current_target(f).unwrap(), TargetId::HOST);
         assert!(vpe.events().offloads().is_empty());
     }
 
@@ -677,11 +885,95 @@ mod tests {
         let recs = vpe.run(f, 25).unwrap();
         let arm_ms = recs[0].exec_ns as f64 / 1e6;
         assert!((arm_ms - 16482.0).abs() / 16482.0 < 0.05, "arm {arm_ms}");
-        let dsp_recs: Vec<_> =
-            recs.iter().filter(|r| r.target == TargetId::C64xDsp).collect();
+        let dsp_recs: Vec<_> = recs.iter().filter(|r| r.target == dm3730::DSP).collect();
         assert!(dsp_recs.len() >= 10);
         let dsp_ms =
             dsp_recs.iter().map(|r| r.exec_ns as f64).sum::<f64>() / dsp_recs.len() as f64 / 1e6;
         assert!((dsp_ms - 515.9).abs() / 515.9 < 0.10, "dsp {dsp_ms}");
+    }
+
+    #[test]
+    fn submitted_dispatches_overlap_across_targets() {
+        // The tentpole behaviour: two functions on two different units
+        // run concurrently on the sim clock.  The FFT ends up pinned to
+        // the host (its DSP trial reverts), the matmul on the DSP.
+        let mut vpe = sim_vpe();
+        let mm = vpe.register_matmul(500).unwrap();
+        let fft = vpe.register_workload(WorkloadKind::Fft).unwrap();
+        for _ in 0..25 {
+            vpe.call(mm).unwrap();
+            vpe.call(fft).unwrap();
+        }
+        assert_eq!(vpe.current_target(mm).unwrap(), dm3730::DSP);
+        assert_eq!(vpe.current_target(fft).unwrap(), TargetId::HOST);
+        // Queue one dispatch on each target without draining.
+        let t1 = vpe.submit(mm).unwrap(); // DSP
+        let t2 = vpe.submit(fft).unwrap(); // host
+        assert_ne!(t1, t2);
+        assert_eq!(vpe.in_flight(), 2);
+        let recs = vpe.drain().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(vpe.in_flight(), 0);
+        // Their execution windows overlap: both started before either
+        // finished.
+        let a = recs.iter().find(|r| r.function == mm).unwrap();
+        let b = recs.iter().find(|r| r.function == fft).unwrap();
+        assert_ne!(a.target, b.target);
+        assert!(a.start_ns < b.complete_ns && b.start_ns < a.complete_ns,
+            "windows must overlap: {a:?} vs {b:?}");
+        assert!(vpe.max_in_flight() >= 2);
+    }
+
+    #[test]
+    fn same_target_submissions_serialize_in_program_order() {
+        let mut vpe = sim_vpe();
+        let f = vpe.register_workload(WorkloadKind::Conv2d).unwrap();
+        vpe.call(f).unwrap(); // finalize + first sample
+        let t1 = vpe.submit(f).unwrap();
+        let t2 = vpe.submit(f).unwrap();
+        assert!(t1 < t2);
+        let recs = vpe.drain().unwrap();
+        assert_eq!(recs.len(), 2);
+        // Same unit: the second starts no earlier than the first ends.
+        assert!(recs[1].start_ns >= recs[0].complete_ns);
+        assert!(recs[1].queued_ns() > 0 || recs[1].issue_ns >= recs[0].complete_ns);
+    }
+
+    #[test]
+    fn bounded_queue_bounces_to_host() {
+        let mut cfg = VpeConfig::sim_only();
+        cfg.max_queue_per_target = 1;
+        // Pin to the remote so every submit wants the DSP.
+        let mut vpe =
+            Vpe::with_policy(cfg, Box::new(super::super::policy::AlwaysOffloadPolicy)).unwrap();
+        let f = vpe.register_workload(WorkloadKind::Conv2d).unwrap();
+        vpe.call(f).unwrap(); // offloads after the first call
+        assert_eq!(vpe.current_target(f).unwrap(), dm3730::DSP);
+        let _a = vpe.submit(f).unwrap(); // takes the DSP slot
+        let _b = vpe.submit(f).unwrap(); // queue full -> bounced home
+        let recs = vpe.drain().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert!(recs.iter().any(|r| r.target == TargetId::HOST));
+        assert!(vpe.scheduler().bounce_count() >= 1);
+    }
+
+    #[test]
+    fn third_target_joins_via_spec_and_rates_only() {
+        // Acceptance criterion: no coordinator/policy changes — a new
+        // unit is a TargetSpec + cost rows, and the policy walks to it.
+        let mut vpe = sim_vpe();
+        let gpu = vpe.soc_mut().add_target(
+            TargetSpec::new("GPU-class unit", 1_200_000_000)
+                .with_issue_width(32)
+                .with_transport(Transport::SharedMemory(TransferModel {
+                    dispatch_fixed_ns: 20_000_000,
+                    per_param_byte_ns: 1.0,
+                })),
+        );
+        // 10x faster than the DSP on matmul: it outranks the DSP.
+        vpe.soc_mut().cost.set_rate(WorkloadKind::Matmul, gpu, 0.33);
+        let f = vpe.register_matmul(500).unwrap();
+        vpe.run(f, 20).unwrap();
+        assert_eq!(vpe.current_target(f).unwrap(), gpu, "best unit must win the ranking");
     }
 }

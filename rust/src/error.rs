@@ -6,6 +6,7 @@ use std::fmt;
 #[derive(Debug)]
 pub enum Error {
     /// PJRT / XLA failure (compile, execute, literal conversion).
+    #[cfg(feature = "pjrt")]
     Xla(xla::Error),
     /// Filesystem problem while loading artifacts.
     Io(std::io::Error),
@@ -25,6 +26,7 @@ pub enum Error {
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
+            #[cfg(feature = "pjrt")]
             Error::Xla(e) => write!(f, "xla error: {e}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Parse(m) => write!(f, "parse error: {m}"),
@@ -39,6 +41,7 @@ impl fmt::Display for Error {
 impl std::error::Error for Error {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
+            #[cfg(feature = "pjrt")]
             Error::Xla(e) => Some(e),
             Error::Io(e) => Some(e),
             _ => None,
@@ -46,6 +49,7 @@ impl std::error::Error for Error {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e)

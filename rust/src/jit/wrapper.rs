@@ -6,40 +6,24 @@
 //! pointer. [...] when we wish to execute a function on the remote
 //! target, we just have to alter this function pointer" (paper §3.2).
 //!
-//! The dispatch slot is an atomic per function, so the hot path is a
-//! single relaxed load; swapping and restoring are stores.  The wrapper
-//! itself costs a few nanoseconds per call ("this introduces a call
-//! overhead") which the coordinator charges to the sim clock.
+//! The dispatch slot is an atomic per function holding the registry slot
+//! of the current target, so the hot path is a single relaxed load;
+//! swapping and restoring are stores.  The wrapper itself costs a few
+//! nanoseconds per call ("this introduces a call overhead") which the
+//! coordinator charges to the sim clock.
 
-use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicU16, AtomicU64, Ordering};
 
 use crate::error::{Error, Result};
 use crate::platform::TargetId;
 
 use super::module::{FunctionId, IrModule};
 
-/// Encoding of targets in the atomic slot.
-const SLOT_ARM: u8 = 0;
-const SLOT_DSP: u8 = 1;
-
-fn encode(t: TargetId) -> u8 {
-    match t {
-        TargetId::ArmCore => SLOT_ARM,
-        TargetId::C64xDsp => SLOT_DSP,
-    }
-}
-
-fn decode(v: u8) -> TargetId {
-    match v {
-        SLOT_ARM => TargetId::ArmCore,
-        _ => TargetId::C64xDsp,
-    }
-}
-
 /// Per-function dispatch state generated at module finalization.
 #[derive(Debug)]
 pub struct DispatchTable {
-    slots: Vec<AtomicU8>,
+    /// Registry slot of each function's current target (host = 0).
+    slots: Vec<AtomicU16>,
     calls: Vec<AtomicU64>,
     /// Indirection cost per call, ns (the "caller step").
     pub wrapper_overhead_ns: u64,
@@ -54,14 +38,14 @@ impl DispatchTable {
             ));
         }
         Ok(DispatchTable {
-            slots: (0..module.len()).map(|_| AtomicU8::new(SLOT_ARM)).collect(),
+            slots: (0..module.len()).map(|_| AtomicU16::new(TargetId::HOST.0)).collect(),
             calls: (0..module.len()).map(|_| AtomicU64::new(0)).collect(),
             // A guarded indirect call on the A8: ~10 cycles at 1 GHz.
             wrapper_overhead_ns: 10,
         })
     }
 
-    fn slot(&self, f: FunctionId) -> Result<&AtomicU8> {
+    fn slot(&self, f: FunctionId) -> Result<&AtomicU16> {
         self.slots
             .get(f.0 as usize)
             .ok_or_else(|| Error::Coordinator(format!("unknown function {f}")))
@@ -70,25 +54,25 @@ impl DispatchTable {
     /// Current dispatch target (the wrapper's pointer load). Also counts
     /// the call.
     pub fn dispatch(&self, f: FunctionId) -> Result<TargetId> {
-        let t = decode(self.slot(f)?.load(Ordering::Relaxed));
+        let t = TargetId(self.slot(f)?.load(Ordering::Relaxed));
         self.calls[f.0 as usize].fetch_add(1, Ordering::Relaxed);
         Ok(t)
     }
 
     /// Current target without counting a call.
     pub fn current_target(&self, f: FunctionId) -> Result<TargetId> {
-        Ok(decode(self.slot(f)?.load(Ordering::Relaxed)))
+        Ok(TargetId(self.slot(f)?.load(Ordering::Relaxed)))
     }
 
     /// Point the wrapper at `target` (the off-load pointer swap).
     pub fn set_target(&self, f: FunctionId, target: TargetId) -> Result<()> {
-        self.slot(f)?.store(encode(target), Ordering::Relaxed);
+        self.slot(f)?.store(target.0, Ordering::Relaxed);
         Ok(())
     }
 
     /// Restore the original pointer (revert to local execution).
     pub fn reset(&self, f: FunctionId) -> Result<()> {
-        self.set_target(f, TargetId::ArmCore)
+        self.set_target(f, TargetId::HOST)
     }
 
     /// Calls made through the wrapper of `f`.
@@ -101,7 +85,7 @@ impl DispatchTable {
         self.slots
             .iter()
             .enumerate()
-            .filter(|(_, s)| s.load(Ordering::Relaxed) != SLOT_ARM)
+            .filter(|(_, s)| s.load(Ordering::Relaxed) != TargetId::HOST.0)
             .map(|(i, _)| FunctionId(i as u32))
             .collect()
     }
@@ -119,6 +103,7 @@ impl DispatchTable {
 mod tests {
     use super::*;
     use crate::jit::module::IrFunction;
+    use crate::platform::dm3730;
 
     fn table(n: usize) -> DispatchTable {
         let mut m = IrModule::new("t");
@@ -142,7 +127,7 @@ mod tests {
     fn all_functions_start_local() {
         let t = table(4);
         for i in 0..4 {
-            assert_eq!(t.current_target(FunctionId(i)).unwrap(), TargetId::ArmCore);
+            assert_eq!(t.current_target(FunctionId(i)).unwrap(), TargetId::HOST);
         }
         assert!(t.offloaded().is_empty());
     }
@@ -151,14 +136,28 @@ mod tests {
     fn swap_and_restore() {
         let t = table(2);
         let f = FunctionId(1);
-        t.set_target(f, TargetId::C64xDsp).unwrap();
-        assert_eq!(t.current_target(f).unwrap(), TargetId::C64xDsp);
+        t.set_target(f, dm3730::DSP).unwrap();
+        assert_eq!(t.current_target(f).unwrap(), dm3730::DSP);
         assert_eq!(t.offloaded(), vec![f]);
         // The other function is untouched.
-        assert_eq!(t.current_target(FunctionId(0)).unwrap(), TargetId::ArmCore);
+        assert_eq!(t.current_target(FunctionId(0)).unwrap(), TargetId::HOST);
         t.reset(f).unwrap();
-        assert_eq!(t.current_target(f).unwrap(), TargetId::ArmCore);
+        assert_eq!(t.current_target(f).unwrap(), TargetId::HOST);
         assert!(t.offloaded().is_empty());
+    }
+
+    #[test]
+    fn slots_address_any_registry_target() {
+        // The wrapper no longer hard-codes a two-unit encoding: any
+        // registry slot round-trips.
+        let t = table(1);
+        let f = FunctionId(0);
+        for slot in [1u16, 2, 3, 42] {
+            t.set_target(f, TargetId(slot)).unwrap();
+            assert_eq!(t.current_target(f).unwrap(), TargetId(slot));
+        }
+        t.reset(f).unwrap();
+        assert_eq!(t.current_target(f).unwrap(), TargetId::HOST);
     }
 
     #[test]
@@ -179,6 +178,6 @@ mod tests {
     fn unknown_function_is_an_error() {
         let t = table(1);
         assert!(t.dispatch(FunctionId(9)).is_err());
-        assert!(t.set_target(FunctionId(9), TargetId::C64xDsp).is_err());
+        assert!(t.set_target(FunctionId(9), dm3730::DSP).is_err());
     }
 }

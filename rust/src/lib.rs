@@ -18,11 +18,17 @@
 //!   of each computation (blocked/tiled schedules).
 //!
 //! The hardware the paper uses (REPTAR board, ARM Cortex-A8 + C64x+ DSP)
-//! is simulated by the [`platform`] substrate: a calibrated cycle-cost
-//! model drives every *decision* and every paper-scale *metric*, while the
-//! actual numerics of each dispatched call are computed for real by
-//! executing the corresponding AOT artifact through the PJRT CPU client
-//! ([`runtime`]). See DESIGN.md for the substitution table.
+//! is simulated by the [`platform`] substrate: a registry of data-driven
+//! target descriptors plus a calibrated cycle-cost model drives every
+//! *decision* and every paper-scale *metric* (further simulated units are
+//! a [`platform::TargetSpec`] + cost-model rows away — see
+//! `examples/multi_target.rs`), while the actual numerics of each
+//! dispatched call are computed by a pluggable [`runtime`] backend: the
+//! pure-Rust references by default, or the AOT artifacts through the
+//! PJRT CPU client with the `pjrt` feature.  Dispatches are in-flight
+//! events on the sim clock ([`coordinator::queue`]): calls on different
+//! units overlap and retire in completion order.  See DESIGN.md for the
+//! substitution table.
 //!
 //! ## Quickstart
 //!

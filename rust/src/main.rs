@@ -6,7 +6,6 @@
 
 use vpe::bench_harness::{fig2, fig3, table1};
 use vpe::coordinator::{Vpe, VpeConfig};
-use vpe::platform::TargetId;
 use vpe::util::cli::Args;
 use vpe::workloads::WorkloadKind;
 
@@ -60,18 +59,20 @@ fn run() -> vpe::Result<()> {
     match cmd {
         "info" => {
             let soc = vpe::platform::Soc::dm3730();
-            println!("platform: simulated TI DM3730 (REPTAR)");
-            for id in TargetId::ALL {
-                let t = soc.target(id)?;
+            println!("platform: simulated TI DM3730 (REPTAR); target registry:");
+            for (id, t) in soc.targets() {
                 println!(
-                    "  {:<14} {:>5} MHz  issue-width {}  hw-float {}",
-                    t.id.name(),
+                    "  [{id}] {:<22} {:>5} MHz  issue-width {:<2}  hw-float {:<5}  {} ({:?})",
+                    t.name,
                     t.freq_hz / 1_000_000,
                     t.issue_width,
-                    t.has_hw_float
+                    t.has_hw_float,
+                    if id.is_host() { "host" } else { t.transport.name() },
+                    t.build,
                 );
             }
             println!("  shared region: {} MiB", soc.shared.size() >> 20);
+            #[cfg(feature = "pjrt")]
             match vpe::runtime::ArtifactStore::open_default() {
                 Ok(store) => {
                     println!("artifacts ({}):", store.names().len());
@@ -81,6 +82,8 @@ fn run() -> vpe::Result<()> {
                 }
                 Err(e) => println!("artifacts: unavailable ({e}) — run `make artifacts`"),
             }
+            #[cfg(not(feature = "pjrt"))]
+            println!("artifacts: PJRT disabled (build with --features pjrt); reference backend computes numerics");
         }
         "run" => {
             let w = args

@@ -1,4 +1,4 @@
-//! Calibrated cycle-cost model for the DM3730's two targets.
+//! Calibrated cycle-cost model: one `ns/item` row per (workload, target).
 //!
 //! This is the load-bearing substitution of the reproduction (DESIGN.md):
 //! we do not have the REPTAR board, so execution *time* is produced by an
@@ -7,8 +7,14 @@
 //! across workload sizes (items scale), which is what lets one set of
 //! constants reproduce Table 1, both figures, and the video prototype.
 //!
-//! Derivation (paper Table 1; ARM @ 1 GHz, DSP @ 800 MHz, and the ~100 ms
-//! per-dispatch DSP setup of Fig 2b — code load + IPC + cache coherency):
+//! The table is *data*: a new simulated unit joins the platform by
+//! registering a [`super::registry::TargetSpec`] and calling
+//! [`CostModel::set_rate`] for each workload it can run — no code
+//! changes anywhere else (the coordinator skips targets with no row).
+//!
+//! Derivation of the DM3730 rows (paper Table 1; ARM @ 1 GHz, DSP @
+//! 800 MHz, and the ~100 ms per-dispatch DSP setup of Fig 2b — code load
+//! + IPC + cache coherency):
 //!
 //! | workload   | paper size           | items           | ARM ms  | DSP ms (minus setup) |
 //! |------------|----------------------|-----------------|---------|----------------------|
@@ -25,28 +31,20 @@
 //! FFT *slower* on the DSP (10.9 → 12.5 ns/op) because every butterfly is
 //! software floating point — exactly the paper's 0.7× regression case.
 
+use std::collections::HashMap;
+
 use crate::workloads::WorkloadKind;
 
-use super::target::TargetId;
+use super::target::{dm3730, TargetId};
 
-/// Per-(workload, target) execution rate.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct WorkloadRate {
-    /// ns per inner-loop item on the ARM host (naive -O3 build).
-    pub arm_ns_per_item: f64,
-    /// ns per inner-loop item on the DSP (TI software-pipelined build),
-    /// excluding dispatch setup.
-    pub dsp_ns_per_item: f64,
-}
-
-/// The calibrated cost model.
+/// The calibrated cost model: `ns/item` per (workload, target).
 ///
-/// `exec_ns` is *pure compute* time; dispatch setup lives in
-/// [`super::transfer::TransferModel`] and health-derating in
+/// `exec_ns` is *pure compute* time; dispatch setup lives in each
+/// target's transport ([`super::transport`]) and health-derating in
 /// [`super::soc::Soc`].
 #[derive(Debug, Clone)]
 pub struct CostModel {
-    rates: [(WorkloadKind, WorkloadRate); 6],
+    rates: HashMap<(WorkloadKind, TargetId), f64>,
 }
 
 impl Default for CostModel {
@@ -56,53 +54,75 @@ impl Default for CostModel {
 }
 
 impl CostModel {
-    /// The Table-1-calibrated DM3730 model (see module docs for derivation).
-    pub fn dm3730_calibrated() -> Self {
-        use WorkloadKind::*;
-        let r = |a, d| WorkloadRate { arm_ns_per_item: a, dsp_ns_per_item: d };
-        CostModel {
-            rates: [
-                // 818.4e6 / 2^25 ; 9.9e6 / 2^25
-                (Complement, r(24.391, 0.2951)),
-                // 432.2e6 / (512*512*81) ; 11.5e6 / same
-                (Conv2d, r(20.354, 0.5416)),
-                // 783.8e6 / 2^26 ; 24.9e6 / 2^26
-                (Dotprod, r(11.680, 0.3711)),
-                // 16482e6 / 500^3 ; 415.9e6 / 500^3
-                (Matmul, r(131.856, 3.3272)),
-                // 6081.7e6 / (2^25 * 16) ; 168.2e6 / same
-                (Pattern, r(11.328, 0.3133)),
-                // 542.7e6 / (5 * 2^19 * 19) ; 620.9e6 / same — DSP SLOWER
-                // (software floating point), the paper's revert case.
-                (Fft, r(10.896, 12.466)),
-            ],
-        }
+    /// An empty model (no rows); populate with [`CostModel::set_rate`].
+    pub fn empty() -> Self {
+        CostModel { rates: HashMap::new() }
     }
 
-    /// Rate entry for a workload.
-    pub fn rate(&self, kind: WorkloadKind) -> WorkloadRate {
-        self.rates
-            .iter()
-            .find(|(k, _)| *k == kind)
-            .map(|(_, r)| *r)
-            .expect("all workload kinds are in the table")
+    /// The Table-1-calibrated DM3730 model (see module docs for the
+    /// derivation of every row).
+    pub fn dm3730_calibrated() -> Self {
+        use WorkloadKind::*;
+        let mut m = CostModel::empty();
+        let rows: [(WorkloadKind, f64, f64); 6] = [
+            // 818.4e6 / 2^25 ; 9.9e6 / 2^25
+            (Complement, 24.391, 0.2951),
+            // 432.2e6 / (512*512*81) ; 11.5e6 / same
+            (Conv2d, 20.354, 0.5416),
+            // 783.8e6 / 2^26 ; 24.9e6 / 2^26
+            (Dotprod, 11.680, 0.3711),
+            // 16482e6 / 500^3 ; 415.9e6 / 500^3
+            (Matmul, 131.856, 3.3272),
+            // 6081.7e6 / (2^25 * 16) ; 168.2e6 / same
+            (Pattern, 11.328, 0.3133),
+            // 542.7e6 / (5 * 2^19 * 19) ; 620.9e6 / same — DSP SLOWER
+            // (software floating point), the paper's revert case.
+            (Fft, 10.896, 12.466),
+        ];
+        for (kind, arm, dsp) in rows {
+            m.set_rate(kind, dm3730::ARM, arm);
+            m.set_rate(kind, dm3730::DSP, dsp);
+        }
+        m
+    }
+
+    /// Add (or replace) the `ns/item` row for one (workload, target) —
+    /// the "cost-model entry" a newly registered unit contributes.
+    pub fn set_rate(&mut self, kind: WorkloadKind, target: TargetId, ns_per_item: f64) {
+        self.rates.insert((kind, target), ns_per_item);
+    }
+
+    /// The `ns/item` rate, if the target has a row for this workload.
+    pub fn rate_ns(&self, kind: WorkloadKind, target: TargetId) -> Option<f64> {
+        self.rates.get(&(kind, target)).copied()
+    }
+
+    /// Does `target` have a row for `kind` (i.e. can the model price a
+    /// dispatch there)?
+    pub fn has_rate(&self, kind: WorkloadKind, target: TargetId) -> bool {
+        self.rates.contains_key(&(kind, target))
     }
 
     /// Pure-compute time for `items` inner-loop items on `target`, ns.
+    ///
+    /// Panics if the row is missing — callers on the dispatch path must
+    /// filter candidates with [`CostModel::has_rate`] first.
     pub fn exec_ns(&self, kind: WorkloadKind, items: f64, target: TargetId) -> f64 {
-        let r = self.rate(kind);
-        let per = match target {
-            TargetId::ArmCore => r.arm_ns_per_item,
-            TargetId::C64xDsp => r.dsp_ns_per_item,
-        };
+        let per = self.rate_ns(kind, target).unwrap_or_else(|| {
+            panic!("no cost-model row for {kind:?} on {target}; add one with set_rate")
+        });
         per * items
     }
 
-    /// Compute-only speedup of the DSP over the ARM for a workload
-    /// (ignores dispatch setup).
+    /// Compute-only speedup of `target` over the host for a workload
+    /// (ignores dispatch setup); `None` if either row is missing.
+    pub fn speedup(&self, kind: WorkloadKind, target: TargetId) -> Option<f64> {
+        Some(self.rate_ns(kind, TargetId::HOST)? / self.rate_ns(kind, target)?)
+    }
+
+    /// DM3730 convenience: compute-only DSP-over-ARM speedup.
     pub fn compute_speedup(&self, kind: WorkloadKind) -> f64 {
-        let r = self.rate(kind);
-        r.arm_ns_per_item / r.dsp_ns_per_item
+        self.speedup(kind, dm3730::DSP).expect("dm3730 rows present")
     }
 }
 
@@ -113,9 +133,9 @@ mod tests {
 
     #[test]
     fn exec_scales_linearly_with_items() {
-        let m = CostModel::default();
-        let t1 = m.exec_ns(Matmul, 1_000.0, TargetId::ArmCore);
-        let t2 = m.exec_ns(Matmul, 2_000.0, TargetId::ArmCore);
+        let m = CostModel::dm3730_calibrated();
+        let t1 = m.exec_ns(Matmul, 1_000.0, dm3730::ARM);
+        let t2 = m.exec_ns(Matmul, 2_000.0, dm3730::ARM);
         assert!((t2 / t1 - 2.0).abs() < 1e-12);
     }
 
@@ -123,7 +143,7 @@ mod tests {
     fn table1_arm_times_reproduce() {
         // The model must reproduce the paper's "normal execution" column
         // at the paper's own workload sizes.
-        let m = CostModel::default();
+        let m = CostModel::dm3730_calibrated();
         let cases = [
             (Complement, (1u64 << 25) as f64, 818.4),
             (Conv2d, 512.0 * 512.0 * 81.0, 432.2),
@@ -133,7 +153,7 @@ mod tests {
             (Fft, 5.0 * (1u64 << 19) as f64 * 19.0, 542.7),
         ];
         for (kind, items, want_ms) in cases {
-            let got_ms = m.exec_ns(kind, items, TargetId::ArmCore) / 1e6;
+            let got_ms = m.exec_ns(kind, items, dm3730::ARM) / 1e6;
             assert!(
                 (got_ms - want_ms).abs() / want_ms < 0.01,
                 "{kind:?}: got {got_ms:.1} want {want_ms:.1}"
@@ -144,7 +164,7 @@ mod tests {
     #[test]
     fn table1_dsp_compute_times_reproduce() {
         // DSP column minus the 100 ms dispatch setup.
-        let m = CostModel::default();
+        let m = CostModel::dm3730_calibrated();
         let cases = [
             (Complement, (1u64 << 25) as f64, 9.9),
             (Conv2d, 512.0 * 512.0 * 81.0, 11.5),
@@ -154,7 +174,7 @@ mod tests {
             (Fft, 5.0 * (1u64 << 19) as f64 * 19.0, 620.9),
         ];
         for (kind, items, want_ms) in cases {
-            let got_ms = m.exec_ns(kind, items, TargetId::C64xDsp) / 1e6;
+            let got_ms = m.exec_ns(kind, items, dm3730::DSP) / 1e6;
             assert!(
                 (got_ms - want_ms).abs() / want_ms < 0.01,
                 "{kind:?}: got {got_ms:.1} want {want_ms:.1}"
@@ -164,7 +184,7 @@ mod tests {
 
     #[test]
     fn fft_is_the_only_compute_regression() {
-        let m = CostModel::default();
+        let m = CostModel::dm3730_calibrated();
         for kind in WorkloadKind::ALL {
             let s = m.compute_speedup(kind);
             if kind == Fft {
@@ -179,7 +199,22 @@ mod tests {
     fn matmul_dsp_speedup_matches_paper_band() {
         // Paper: 31.9x end-to-end at 500x500 (including setup); compute
         // speedup must therefore be ~39.6x.
-        let s = CostModel::default().compute_speedup(Matmul);
+        let s = CostModel::dm3730_calibrated().compute_speedup(Matmul);
         assert!((35.0..45.0).contains(&s), "compute speedup {s}");
+    }
+
+    #[test]
+    fn new_targets_are_rows_not_code() {
+        // The registry promise: a third unit is one set_rate call away.
+        let mut m = CostModel::dm3730_calibrated();
+        let gpu = TargetId(2);
+        assert!(!m.has_rate(Matmul, gpu));
+        assert!(m.rate_ns(Matmul, gpu).is_none());
+        m.set_rate(Matmul, gpu, 0.5);
+        assert!(m.has_rate(Matmul, gpu));
+        assert!(m.speedup(Matmul, gpu).unwrap() > 100.0);
+        // Workloads without a row stay unpriceable on the new unit.
+        assert!(!m.has_rate(Fft, gpu));
+        assert!(m.speedup(Fft, gpu).is_none());
     }
 }

@@ -1,22 +1,33 @@
-//! The simulated heterogeneous platform — the paper's REPTAR/DM3730 SoC.
+//! The simulated heterogeneous platform — N compute units behind a
+//! data-driven registry.
 //!
 //! The paper runs on a TI DM3730 DaVinci SoC: an ARM Cortex-A8 @ 1 GHz
 //! next to a C64x+ DSP @ 800 MHz, with a shared address region used to
 //! pass data between the two (paper §4).  None of that hardware is
 //! available here, so this module builds the closest faithful software
-//! substrate (see DESIGN.md, substitution table):
+//! substrate (see DESIGN.md, substitution table) — generalized so the
+//! unit set is *data*, not code:
 //!
-//! - [`target`] — compute-target descriptors and health states;
+//! - [`target`] — compute-target identity (dense registry slots) and
+//!   health states;
+//! - [`registry`] — [`registry::TargetSpec`] descriptors and the
+//!   [`registry::TargetRegistry`]; new simulated units are registered,
+//!   not hard-coded;
 //! - [`costmodel`] — the calibrated cycle-cost model (derived from the
-//!   paper's own Table 1 / Fig 2 numbers) that drives the sim clock;
+//!   paper's own Table 1 / Fig 2 numbers) that drives the sim clock,
+//!   one `ns/item` row per (workload, target);
 //! - [`memory`] — the shared-memory region allocator (the custom memory
 //!   management functions VPE injects, paper §3.3/§4);
 //! - [`transfer`] — the DSP dispatch setup-cost model (the ~100 ms setup
 //!   visible in Fig 2b);
-//! - [`soc`] — the assembled DM3730 model with failure injection.
+//! - [`transport`] — per-target dispatch transports (shared memory vs
+//!   message passing);
+//! - [`soc`] — the assembled SoC with failure injection and the
+//!   [`soc::Soc::add_target`] extension point.
 
 pub mod costmodel;
 pub mod memory;
+pub mod registry;
 pub mod soc;
 pub mod target;
 pub mod transfer;
@@ -24,7 +35,8 @@ pub mod transport;
 
 pub use costmodel::CostModel;
 pub use memory::SharedRegion;
+pub use registry::{BuildKind, TargetRegistry, TargetSpec};
 pub use soc::Soc;
-pub use target::{Target, TargetHealth, TargetId};
+pub use target::{dm3730, TargetHealth, TargetId};
 pub use transfer::TransferModel;
 pub use transport::{MpiModel, Transport};

@@ -1,0 +1,191 @@
+//! The target registry: data-driven descriptors of every compute unit.
+//!
+//! The paper's prototype pairs one host with one DSP; its conclusion —
+//! echoed by Tornado's multi-device framework and HPA's opportunistic
+//! multi-unit dispatch — is that the approach should scale to *many*
+//! heterogeneous units.  This module makes the unit set a value, not a
+//! type: a [`TargetSpec`] describes one unit (clock, issue width, float
+//! support, transport, which artifact build it executes, health) and a
+//! [`TargetRegistry`] assigns dense [`TargetId`] slots.  Adding a new
+//! simulated unit (a NEON-class vector engine, a GPU-class accelerator)
+//! is a `register` call plus a cost-model row — no coordinator or policy
+//! code changes (see `examples/multi_target.rs`).
+
+use crate::error::{Error, Result};
+
+use super::target::{TargetHealth, TargetId};
+use super::transport::Transport;
+
+/// Which AOT build a unit executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BuildKind {
+    /// The naive `-O3`-style host build — any CPU-like unit can run it.
+    Naive,
+    /// The tuned accelerator build (the Pallas/"TI compiler" lowering);
+    /// only functions the toolchain compiled can dispatch here.
+    Tuned,
+}
+
+/// Static description + dynamic health of one compute unit.
+#[derive(Debug, Clone)]
+pub struct TargetSpec {
+    /// Human-readable name (report/event rendering).
+    pub name: String,
+    /// Core clock in Hz.
+    pub freq_hz: u64,
+    /// Issue width (ARM A8: dual-issue in-order; C64x+: 8 functional
+    /// units).
+    pub issue_width: u32,
+    /// Hardware floating point?  The C64x+ lacks it — the root cause of
+    /// the paper's FFT regression (Table 1, 0.7x).
+    pub has_hw_float: bool,
+    /// How dispatches reach this unit (ignored for the host).
+    pub transport: Transport,
+    /// Which artifact build the unit executes.
+    pub build: BuildKind,
+    pub health: TargetHealth,
+}
+
+impl TargetSpec {
+    /// A generic spec with host-like defaults; chain the `with_*`
+    /// builders to specialize.
+    pub fn new(name: &str, freq_hz: u64) -> Self {
+        TargetSpec {
+            name: name.to_string(),
+            freq_hz,
+            issue_width: 1,
+            has_hw_float: true,
+            transport: Transport::default(),
+            build: BuildKind::Tuned,
+            health: TargetHealth::Healthy,
+        }
+    }
+
+    pub fn with_issue_width(mut self, w: u32) -> Self {
+        self.issue_width = w;
+        self
+    }
+
+    pub fn with_hw_float(mut self, f: bool) -> Self {
+        self.has_hw_float = f;
+        self
+    }
+
+    pub fn with_transport(mut self, t: Transport) -> Self {
+        self.transport = t;
+        self
+    }
+
+    pub fn with_build(mut self, b: BuildKind) -> Self {
+        self.build = b;
+        self
+    }
+
+    /// ARM Cortex-A8 @ 1 GHz — the DM3730 host (datasheet values).
+    pub fn arm_cortex_a8() -> Self {
+        TargetSpec::new("ARM Cortex-A8", 1_000_000_000)
+            .with_issue_width(2)
+            .with_build(BuildKind::Naive)
+    }
+
+    /// C64x+ DSP @ 800 MHz — 8-issue VLIW, no hardware floating point.
+    pub fn c64x_dsp() -> Self {
+        TargetSpec::new("C64x+ DSP", 800_000_000)
+            .with_issue_width(8)
+            .with_hw_float(false)
+    }
+}
+
+/// Dense registry of compute units; slot 0 is always the host.
+#[derive(Debug, Clone)]
+pub struct TargetRegistry {
+    specs: Vec<TargetSpec>,
+}
+
+impl TargetRegistry {
+    /// A registry seeded with its host unit (slot 0).
+    pub fn with_host(host: TargetSpec) -> Self {
+        TargetRegistry { specs: vec![host] }
+    }
+
+    /// Register a remote unit; returns its assigned slot.
+    pub fn register(&mut self, spec: TargetSpec) -> TargetId {
+        let id = TargetId(self.specs.len() as u16);
+        self.specs.push(spec);
+        id
+    }
+
+    pub fn get(&self, id: TargetId) -> Result<&TargetSpec> {
+        self.specs
+            .get(id.index())
+            .ok_or_else(|| Error::Platform(format!("unknown target {id}")))
+    }
+
+    pub fn get_mut(&mut self, id: TargetId) -> Result<&mut TargetSpec> {
+        self.specs
+            .get_mut(id.index())
+            .ok_or_else(|| Error::Platform(format!("unknown target {id}")))
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Iterate all (id, spec) pairs, host first.
+    pub fn iter(&self) -> impl Iterator<Item = (TargetId, &TargetSpec)> {
+        self.specs.iter().enumerate().map(|(i, s)| (TargetId(i as u16), s))
+    }
+
+    /// Ids of every non-host unit.
+    pub fn remote_ids(&self) -> Vec<TargetId> {
+        (1..self.specs.len() as u16).map(TargetId).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::target::dm3730;
+
+    fn dm3730_registry() -> TargetRegistry {
+        let mut r = TargetRegistry::with_host(TargetSpec::arm_cortex_a8());
+        r.register(TargetSpec::c64x_dsp());
+        r
+    }
+
+    #[test]
+    fn dm3730_frequencies_match_datasheet() {
+        let r = dm3730_registry();
+        assert_eq!(r.get(dm3730::ARM).unwrap().freq_hz, 1_000_000_000);
+        assert_eq!(r.get(dm3730::DSP).unwrap().freq_hz, 800_000_000);
+    }
+
+    #[test]
+    fn dsp_has_no_hw_float() {
+        let r = dm3730_registry();
+        assert!(r.get(dm3730::ARM).unwrap().has_hw_float);
+        assert!(!r.get(dm3730::DSP).unwrap().has_hw_float);
+    }
+
+    #[test]
+    fn slots_are_dense_and_stable() {
+        let mut r = dm3730_registry();
+        let neon = r.register(TargetSpec::new("NEON-class unit", 1_000_000_000));
+        assert_eq!(neon, TargetId(2));
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.remote_ids(), vec![TargetId(1), TargetId(2)]);
+        assert!(r.get(TargetId(9)).is_err());
+    }
+
+    #[test]
+    fn host_is_always_slot_zero() {
+        let r = dm3730_registry();
+        let (id, spec) = r.iter().next().unwrap();
+        assert!(id.is_host());
+        assert_eq!(spec.name, "ARM Cortex-A8");
+    }
+}

@@ -1,29 +1,31 @@
-//! The assembled DM3730 SoC model: targets + shared memory + transfer +
-//! cost model, with run-time failure injection.
-
-use std::collections::HashMap;
+//! The assembled SoC model: a target registry + shared memory + per-
+//! target transports + the cost model, with run-time failure injection.
+//!
+//! The default topology is the paper's DM3730 (ARM host + C64x+ DSP),
+//! but the unit set is data: [`Soc::add_target`] registers any further
+//! simulated unit, and a [`CostModel::set_rate`] row per workload makes
+//! it dispatchable — the coordinator and policies pick it up with no
+//! code changes (see `examples/multi_target.rs`).
 
 use crate::error::{Error, Result};
 use crate::workloads::{PaperScale, WorkloadKind};
 
 use super::costmodel::CostModel;
 use super::memory::SharedRegion;
-use super::target::{Target, TargetHealth, TargetId};
+use super::registry::{TargetRegistry, TargetSpec};
+use super::target::{TargetHealth, TargetId};
 use super::transfer::TransferModel;
 use super::transport::Transport;
 
 /// The simulated SoC the coordinator runs against.
 #[derive(Debug, Clone)]
 pub struct Soc {
-    targets: HashMap<TargetId, Target>,
+    /// Every compute unit on the platform (host at slot 0).
+    pub registry: TargetRegistry,
     pub shared: SharedRegion,
     /// Shared-memory staging costs (kept for introspection; the
-    /// dispatch path goes through `transport`).
+    /// dispatch path goes through each target's transport).
     pub transfer: TransferModel,
-    /// How bulk data reaches the remote target (paper default: the
-    /// shared window; swappable to message passing — see
-    /// `benches/transport.rs`).
-    pub transport: Transport,
     pub cost: CostModel,
 }
 
@@ -37,59 +39,77 @@ impl Soc {
     /// The REPTAR board's DM3730: ARM Cortex-A8 + C64x+ DSP, 64 MiB
     /// shared window, Fig-2b transfer costs, Table-1-calibrated rates.
     pub fn dm3730() -> Self {
-        let mut targets = HashMap::new();
-        for t in [Target::arm_cortex_a8(), Target::c64x_dsp()] {
-            targets.insert(t.id, t);
-        }
+        let mut registry = TargetRegistry::with_host(TargetSpec::arm_cortex_a8());
+        registry.register(
+            TargetSpec::c64x_dsp()
+                .with_transport(Transport::SharedMemory(TransferModel::dm3730())),
+        );
         Soc {
-            targets,
+            registry,
             shared: SharedRegion::dm3730(),
             transfer: TransferModel::dm3730(),
-            transport: Transport::SharedMemory(TransferModel::dm3730()),
             cost: CostModel::dm3730_calibrated(),
         }
     }
 
     /// The same SoC behind a message-passing link instead of shared
-    /// memory (the paper's §3.3 alternative, as in BAAR [17]).
+    /// memory (the paper's §3.3 alternative, as in BAAR [17]): every
+    /// remote unit's transport becomes the given link.
     pub fn dm3730_message_passing(link: super::transport::MpiModel) -> Self {
         let mut soc = Self::dm3730();
-        soc.transport = Transport::MessagePassing(link);
+        for id in soc.registry.remote_ids() {
+            soc.registry.get_mut(id).expect("registered").transport =
+                Transport::MessagePassing(link);
+        }
         soc
     }
 
+    /// Register a further compute unit (data-driven extension point).
+    /// Pair with [`CostModel::set_rate`] rows to make it dispatchable.
+    pub fn add_target(&mut self, spec: TargetSpec) -> TargetId {
+        self.registry.register(spec)
+    }
+
     /// Target descriptor (immutable view).
-    pub fn target(&self, id: TargetId) -> Result<&Target> {
-        self.targets
-            .get(&id)
-            .ok_or_else(|| Error::Platform(format!("unknown target {id:?}")))
+    pub fn target(&self, id: TargetId) -> Result<&TargetSpec> {
+        self.registry.get(id)
+    }
+
+    /// Display name of a target ("?" if unknown).
+    pub fn target_name(&self, id: TargetId) -> String {
+        self.registry.get(id).map(|s| s.name.clone()).unwrap_or_else(|_| "?".into())
+    }
+
+    /// All (id, spec) pairs, host first.
+    pub fn targets(&self) -> impl Iterator<Item = (TargetId, &TargetSpec)> {
+        self.registry.iter()
     }
 
     /// Is `id` currently dispatchable?
     pub fn is_usable(&self, id: TargetId) -> bool {
-        self.targets
-            .get(&id)
+        self.registry
+            .get(id)
             .map(|t| t.health.slowdown().is_some())
             .unwrap_or(false)
     }
 
     /// Inject a hard failure (VPE must fail over — paper §1).
     pub fn fail_target(&mut self, id: TargetId) {
-        if let Some(t) = self.targets.get_mut(&id) {
+        if let Ok(t) = self.registry.get_mut(id) {
             t.health = TargetHealth::Failed;
         }
     }
 
     /// Inject a slowdown (e.g. thermal throttling).
     pub fn degrade_target(&mut self, id: TargetId, factor: f64) {
-        if let Some(t) = self.targets.get_mut(&id) {
+        if let Ok(t) = self.registry.get_mut(id) {
             t.health = TargetHealth::Degraded(factor);
         }
     }
 
     /// Restore a target to full health (resource became available again).
     pub fn heal_target(&mut self, id: TargetId) {
-        if let Some(t) = self.targets.get_mut(&id) {
+        if let Ok(t) = self.registry.get_mut(id) {
             t.health = TargetHealth::Healthy;
         }
     }
@@ -97,7 +117,8 @@ impl Soc {
     /// Total execution time of one call on `target`: compute (health-
     /// derated) plus, for remote targets, the transport's dispatch cost.
     ///
-    /// Errors if the target is failed or unknown.
+    /// Errors if the target is failed, unknown, or has no cost-model row
+    /// for the workload.
     pub fn call_scaled_ns(
         &self,
         kind: WorkloadKind,
@@ -105,11 +126,15 @@ impl Soc {
         target: TargetId,
     ) -> Result<u64> {
         let t = self.target(target)?;
-        let slow = t.health.slowdown().ok_or_else(|| {
-            Error::Platform(format!("target {target} is failed"))
+        let slow = t
+            .health
+            .slowdown()
+            .ok_or_else(|| Error::Platform(format!("target {target} is failed")))?;
+        let rate = self.cost.rate_ns(kind, target).ok_or_else(|| {
+            Error::Platform(format!("no cost-model row for {kind:?} on {target}"))
         })?;
-        let compute = self.cost.exec_ns(kind, scale.items, target) * slow;
-        let overhead = if target.is_host() { 0 } else { self.transport.dispatch_ns(scale) };
+        let compute = rate * scale.items * slow;
+        let overhead = if target.is_host() { 0 } else { t.transport.dispatch_ns(scale) };
         Ok(compute as u64 + overhead)
     }
 
@@ -133,6 +158,8 @@ impl Soc {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::platform::registry::BuildKind;
+    use crate::platform::target::dm3730;
     use crate::workloads::WorkloadKind::*;
 
     #[test]
@@ -146,7 +173,7 @@ mod tests {
             (Fft, 5.0 * (1u64 << 19) as f64 * 19.0, 720.9),
         ];
         for (kind, items, want_ms) in cases {
-            let got = soc.call_ns(kind, items, 64, TargetId::C64xDsp).unwrap() as f64 / 1e6;
+            let got = soc.call_ns(kind, items, 64, dm3730::DSP).unwrap() as f64 / 1e6;
             assert!(
                 (got - want_ms).abs() / want_ms < 0.01,
                 "{kind:?}: got {got:.1} want {want_ms}"
@@ -157,28 +184,69 @@ mod tests {
     #[test]
     fn host_calls_pay_no_dispatch_setup() {
         let soc = Soc::dm3730();
-        let a = soc.call_ns(Dotprod, 1000.0, 64, TargetId::ArmCore).unwrap();
-        let pure = soc.cost.exec_ns(Dotprod, 1000.0, TargetId::ArmCore) as u64;
+        let a = soc.call_ns(Dotprod, 1000.0, 64, dm3730::ARM).unwrap();
+        let pure = soc.cost.exec_ns(Dotprod, 1000.0, dm3730::ARM) as u64;
         assert_eq!(a, pure);
     }
 
     #[test]
     fn failed_target_rejects_calls() {
         let mut soc = Soc::dm3730();
-        soc.fail_target(TargetId::C64xDsp);
-        assert!(!soc.is_usable(TargetId::C64xDsp));
-        assert!(soc.call_ns(Matmul, 1000.0, 64, TargetId::C64xDsp).is_err());
-        soc.heal_target(TargetId::C64xDsp);
-        assert!(soc.call_ns(Matmul, 1000.0, 64, TargetId::C64xDsp).is_ok());
+        soc.fail_target(dm3730::DSP);
+        assert!(!soc.is_usable(dm3730::DSP));
+        assert!(soc.call_ns(Matmul, 1000.0, 64, dm3730::DSP).is_err());
+        soc.heal_target(dm3730::DSP);
+        assert!(soc.call_ns(Matmul, 1000.0, 64, dm3730::DSP).is_ok());
     }
 
     #[test]
     fn degradation_scales_compute_not_setup() {
         let mut soc = Soc::dm3730();
-        let before = soc.call_ns(Matmul, 1e6, 0, TargetId::C64xDsp).unwrap();
-        soc.degrade_target(TargetId::C64xDsp, 2.0);
-        let after = soc.call_ns(Matmul, 1e6, 0, TargetId::C64xDsp).unwrap();
+        let before = soc.call_ns(Matmul, 1e6, 0, dm3730::DSP).unwrap();
+        soc.degrade_target(dm3730::DSP, 2.0);
+        let after = soc.call_ns(Matmul, 1e6, 0, dm3730::DSP).unwrap();
         let setup = soc.transfer.dispatch_ns(0);
         assert_eq!(after - setup, 2 * (before - setup));
+    }
+
+    #[test]
+    fn third_target_is_spec_plus_rate_rows() {
+        // The acceptance criterion of the registry refactor: a new unit
+        // needs only a TargetSpec and cost-model entries.
+        let mut soc = Soc::dm3730();
+        let neon = soc.add_target(
+            TargetSpec::new("NEON-class vector unit", 1_000_000_000)
+                .with_issue_width(4)
+                .with_build(BuildKind::Tuned)
+                .with_transport(Transport::SharedMemory(TransferModel {
+                    dispatch_fixed_ns: 5_000_000, // on-die: far cheaper than the DSP bridge
+                    per_param_byte_ns: 1.0,
+                })),
+        );
+        assert_eq!(neon, TargetId(2));
+        // No row yet: unpriceable, not dispatchable.
+        assert!(soc.call_ns(Dotprod, 1e6, 0, neon).is_err());
+        soc.cost.set_rate(Dotprod, neon, 1.0);
+        let ns = soc.call_ns(Dotprod, 1e6, 0, neon).unwrap();
+        assert_eq!(ns, 1_000_000 + 5_000_000);
+        // Health machinery applies to it like any other unit.
+        soc.fail_target(neon);
+        assert!(!soc.is_usable(neon));
+        soc.heal_target(neon);
+        assert!(soc.is_usable(neon));
+    }
+
+    #[test]
+    fn message_passing_covers_every_remote_unit() {
+        let mut soc = Soc::dm3730();
+        soc.add_target(TargetSpec::new("extra", 1_000_000_000));
+        let mp = Soc::dm3730_message_passing(super::super::transport::MpiModel::default());
+        for id in mp.registry.remote_ids() {
+            assert_eq!(mp.target(id).unwrap().transport.name(), "message-passing");
+        }
+        assert_eq!(
+            soc.target(dm3730::DSP).unwrap().transport.name(),
+            "shared-memory"
+        );
     }
 }

@@ -1,35 +1,53 @@
-//! Compute-target descriptors: the ARM host and the C64x+ DSP.
+//! Compute-target identity and health.
+//!
+//! A [`TargetId`] is a dense slot index into the platform's
+//! [`super::registry::TargetRegistry`]; the descriptors themselves
+//! ([`super::registry::TargetSpec`]) are plain data, so adding a compute
+//! unit is a registration call, not a code change.  The only structural
+//! convention is that **slot 0 is the host** (the unit the JIT itself
+//! runs on); everything else is a remote unit reached through its
+//! transport.
 
-/// Identity of a compute unit on the SoC.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum TargetId {
-    /// ARM Cortex-A8 @ 1 GHz — the host CPU the JIT runs on.
-    ArmCore,
-    /// C64x+ DSP @ 800 MHz — 8-issue VLIW, no hardware floating point.
-    C64xDsp,
-}
+/// Identity of a compute unit: its slot in the target registry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TargetId(pub u16);
 
 impl TargetId {
-    pub const ALL: [TargetId; 2] = [TargetId::ArmCore, TargetId::C64xDsp];
-
-    /// Short display name.
-    pub fn name(self) -> &'static str {
-        match self {
-            TargetId::ArmCore => "ARM Cortex-A8",
-            TargetId::C64xDsp => "C64x+ DSP",
-        }
-    }
+    /// The host slot (where the JIT runs; dispatch slot wrappers reset
+    /// to it on revert).
+    pub const HOST: TargetId = TargetId(0);
 
     /// Is this the host (where the JIT itself runs)?
     pub fn is_host(self) -> bool {
-        matches!(self, TargetId::ArmCore)
+        self.0 == 0
+    }
+
+    /// Dense registry index.
+    pub fn index(self) -> usize {
+        self.0 as usize
     }
 }
 
 impl std::fmt::Display for TargetId {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str(self.name())
+        if self.is_host() {
+            f.write_str("host")
+        } else {
+            write!(f, "t{}", self.0)
+        }
     }
+}
+
+/// Conventional slots of the DM3730 reference topology (the paper's
+/// REPTAR board): the ARM Cortex-A8 host at slot 0, the C64x+ DSP at
+/// slot 1.  Purely a naming convenience for tests, benches and the
+/// paper harness — nothing in the coordinator depends on these beyond
+/// slot 0 being the host.
+pub mod dm3730 {
+    use super::TargetId;
+
+    pub const ARM: TargetId = TargetId::HOST;
+    pub const DSP: TargetId = TargetId(1);
 }
 
 /// Health of a target; VPE reacts to changes at run time (paper §1:
@@ -55,57 +73,9 @@ impl TargetHealth {
     }
 }
 
-/// Static description + dynamic health of one compute unit.
-#[derive(Debug, Clone)]
-pub struct Target {
-    pub id: TargetId,
-    /// Core clock in Hz (ARM: 1 GHz, DSP: 800 MHz — DM3730 datasheet).
-    pub freq_hz: u64,
-    /// Issue width (ARM A8: dual-issue in-order; C64x+: 8 functional units).
-    pub issue_width: u32,
-    /// Hardware floating point? The C64x+ lacks it — the root cause of
-    /// the paper's FFT regression (Table 1, 0.7x).
-    pub has_hw_float: bool,
-    pub health: TargetHealth,
-}
-
-impl Target {
-    pub fn arm_cortex_a8() -> Self {
-        Target {
-            id: TargetId::ArmCore,
-            freq_hz: 1_000_000_000,
-            issue_width: 2,
-            has_hw_float: true,
-            health: TargetHealth::Healthy,
-        }
-    }
-
-    pub fn c64x_dsp() -> Self {
-        Target {
-            id: TargetId::C64xDsp,
-            freq_hz: 800_000_000,
-            issue_width: 8,
-            has_hw_float: false,
-            health: TargetHealth::Healthy,
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn dm3730_frequencies_match_datasheet() {
-        assert_eq!(Target::arm_cortex_a8().freq_hz, 1_000_000_000);
-        assert_eq!(Target::c64x_dsp().freq_hz, 800_000_000);
-    }
-
-    #[test]
-    fn dsp_has_no_hw_float() {
-        assert!(!Target::c64x_dsp().has_hw_float);
-        assert!(Target::arm_cortex_a8().has_hw_float);
-    }
 
     #[test]
     fn health_slowdown() {
@@ -117,8 +87,16 @@ mod tests {
     }
 
     #[test]
-    fn only_arm_is_host() {
-        assert!(TargetId::ArmCore.is_host());
-        assert!(!TargetId::C64xDsp.is_host());
+    fn only_slot_zero_is_host() {
+        assert!(TargetId::HOST.is_host());
+        assert!(dm3730::ARM.is_host());
+        assert!(!dm3730::DSP.is_host());
+        assert!(!TargetId(7).is_host());
+    }
+
+    #[test]
+    fn display_is_compact() {
+        assert_eq!(TargetId::HOST.to_string(), "host");
+        assert_eq!(TargetId(3).to_string(), "t3");
     }
 }

@@ -69,18 +69,17 @@ impl CounterSample {
         freq_hz: u64,
     ) -> Self {
         let cycles = (exec_ns * freq_hz as f64 / 1e9) as u64;
-        // Instructions per item: VLIW packs more work per instruction.
-        let ipi = match target {
-            TargetId::ArmCore => 6.0,
-            TargetId::C64xDsp => 1.5,
-        };
-        // Cache-miss rate per item (the naive ARM matmul thrashes; the
-        // DSP streams through its scratchpad via DMA).
-        let miss_rate = match (kind, target) {
-            (WorkloadKind::Matmul, TargetId::ArmCore) => 0.5,
-            (WorkloadKind::Matmul, TargetId::C64xDsp) => 0.02,
-            (_, TargetId::ArmCore) => 0.05,
-            (_, TargetId::C64xDsp) => 0.01,
+        // Instructions per item: accelerator builds (anything off the
+        // host) pack more work per instruction (VLIW bundles, vector
+        // lanes).
+        let ipi = if target.is_host() { 6.0 } else { 1.5 };
+        // Cache-miss rate per item (the naive host matmul thrashes;
+        // accelerators stream through scratchpads via DMA).
+        let miss_rate = match (kind, target.is_host()) {
+            (WorkloadKind::Matmul, true) => 0.5,
+            (WorkloadKind::Matmul, false) => 0.02,
+            (_, true) => 0.05,
+            (_, false) => 0.01,
         };
         let branch_rate = match kind {
             WorkloadKind::Pattern => 0.2, // data-dependent compares
@@ -100,6 +99,7 @@ impl CounterSample {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::platform::dm3730;
 
     #[test]
     fn cycles_follow_exec_time_and_frequency() {
@@ -107,7 +107,7 @@ mod tests {
             WorkloadKind::Matmul,
             1e6,
             1_000_000.0, // 1 ms
-            TargetId::ArmCore,
+            TargetId::HOST,
             1_000_000_000,
         );
         assert_eq!(s.cycles, 1_000_000);
@@ -115,7 +115,7 @@ mod tests {
             WorkloadKind::Matmul,
             1e6,
             1_000_000.0,
-            TargetId::C64xDsp,
+            dm3730::DSP,
             800_000_000,
         );
         assert_eq!(d.cycles, 800_000);
@@ -124,10 +124,10 @@ mod tests {
     #[test]
     fn naive_matmul_thrashes_caches_dsp_does_not() {
         let arm = CounterSample::synthesize(
-            WorkloadKind::Matmul, 1e6, 1e6, TargetId::ArmCore, 1_000_000_000,
+            WorkloadKind::Matmul, 1e6, 1e6, TargetId::HOST, 1_000_000_000,
         );
         let dsp = CounterSample::synthesize(
-            WorkloadKind::Matmul, 1e6, 1e6, TargetId::C64xDsp, 800_000_000,
+            WorkloadKind::Matmul, 1e6, 1e6, dm3730::DSP, 800_000_000,
         );
         assert!(arm.cache_misses > 10 * dsp.cache_misses);
     }

@@ -31,13 +31,22 @@ pub struct Hotspot {
 }
 
 impl HotspotDetector {
-    /// The hottest eligible function, if any.
+    /// The hottest eligible function satisfying `pred`, in one linear
+    /// pass (this sits on the coordinator's retire hot path, which
+    /// nominates per retired call — the coordinator passes a
+    /// "still resident on the host" predicate so that, with N targets,
+    /// several functions can each be moved to their own unit).
     ///
     /// System calls are excluded (paper §3: "system calls are
     /// automatically excluded from the analysis"), as are functions with
     /// fewer than `min_samples` profiled calls or below the share
     /// threshold.
-    pub fn hottest(&self, sampler: &PerfSampler, module: &IrModule) -> Option<Hotspot> {
+    pub fn hottest_where<F: Fn(FunctionId) -> bool>(
+        &self,
+        sampler: &PerfSampler,
+        module: &IrModule,
+        pred: F,
+    ) -> Option<Hotspot> {
         let total = sampler.total_cycles();
         if total == 0 {
             return None;
@@ -47,6 +56,7 @@ impl HotspotDetector {
             .filter(|(f, p)| {
                 p.calls >= self.min_samples
                     && module.function(*f).map(|irf| !irf.is_syscall).unwrap_or(false)
+                    && pred(*f)
             })
             .map(|(f, p)| Hotspot {
                 function: f,
@@ -54,6 +64,11 @@ impl HotspotDetector {
             })
             .filter(|h| h.cycle_share >= self.share_threshold)
             .max_by(|a, b| a.cycle_share.total_cmp(&b.cycle_share))
+    }
+
+    /// The hottest eligible function, if any.
+    pub fn hottest(&self, sampler: &PerfSampler, module: &IrModule) -> Option<Hotspot> {
+        self.hottest_where(sampler, module, |_| true)
     }
 }
 
@@ -86,8 +101,8 @@ mod tests {
     fn picks_the_dominant_function() {
         let (mut s, m, mut rng) = setup();
         for _ in 0..10 {
-            s.record(FunctionId(0), TargetId::ArmCore, cycles(1000), 10, &mut rng);
-            s.record(FunctionId(1), TargetId::ArmCore, cycles(10), 10, &mut rng);
+            s.record(FunctionId(0), TargetId::HOST, cycles(1000), 10, &mut rng);
+            s.record(FunctionId(1), TargetId::HOST, cycles(10), 10, &mut rng);
         }
         let h = HotspotDetector::default().hottest(&s, &m).unwrap();
         assert_eq!(h.function, FunctionId(0));
@@ -99,8 +114,8 @@ mod tests {
         let (mut s, m, mut rng) = setup();
         // The syscall dominates the cycle count...
         for _ in 0..10 {
-            s.record(FunctionId(2), TargetId::ArmCore, cycles(10_000), 10, &mut rng);
-            s.record(FunctionId(0), TargetId::ArmCore, cycles(100), 10, &mut rng);
+            s.record(FunctionId(2), TargetId::HOST, cycles(10_000), 10, &mut rng);
+            s.record(FunctionId(0), TargetId::HOST, cycles(100), 10, &mut rng);
         }
         // ...but the user function is picked.
         let h = HotspotDetector { share_threshold: 0.0, ..Default::default() }
@@ -113,12 +128,12 @@ mod tests {
     fn respects_min_samples_warmup() {
         let (mut s, m, mut rng) = setup();
         for _ in 0..3 {
-            s.record(FunctionId(0), TargetId::ArmCore, cycles(1000), 10, &mut rng);
+            s.record(FunctionId(0), TargetId::HOST, cycles(1000), 10, &mut rng);
         }
         let d = HotspotDetector { min_samples: 5, share_threshold: 0.0 };
         assert!(d.hottest(&s, &m).is_none());
         for _ in 0..2 {
-            s.record(FunctionId(0), TargetId::ArmCore, cycles(1000), 10, &mut rng);
+            s.record(FunctionId(0), TargetId::HOST, cycles(1000), 10, &mut rng);
         }
         assert!(d.hottest(&s, &m).is_some());
     }
@@ -133,8 +148,8 @@ mod tests {
     fn share_threshold_filters_lukewarm_functions() {
         let (mut s, m, mut rng) = setup();
         for _ in 0..10 {
-            s.record(FunctionId(0), TargetId::ArmCore, cycles(100), 10, &mut rng);
-            s.record(FunctionId(1), TargetId::ArmCore, cycles(100), 10, &mut rng);
+            s.record(FunctionId(0), TargetId::HOST, cycles(100), 10, &mut rng);
+            s.record(FunctionId(1), TargetId::HOST, cycles(100), 10, &mut rng);
         }
         // Both at ~50%: a 60% threshold nominates neither.
         let d = HotspotDetector { min_samples: 1, share_threshold: 0.6 };

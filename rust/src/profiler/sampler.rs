@@ -79,12 +79,12 @@ impl SamplerConfig {
 pub struct FunctionProfile {
     /// Simulated execution time per call (all targets merged).
     pub time_ns: RollingStats,
-    /// Per-target execution time — what the policy compares.  Stored
-    /// inline (two targets on the DM3730): the sampler sits on the L3
-    /// hot path, and the HashMap this used to be cost ~40% of
-    /// `record()` (EXPERIMENTS.md §Perf).
-    pub arm_ns: RollingStats,
-    pub dsp_ns: RollingStats,
+    /// Per-target execution time — what the policy compares.  Stored as
+    /// a dense vector indexed by registry slot: the sampler sits on the
+    /// L3 hot path, and the HashMap this used to be cost ~40% of
+    /// `record()` (EXPERIMENTS.md §Perf).  The vector grows lazily to
+    /// the highest slot that ever executed this function.
+    per_target_ns: Vec<RollingStats>,
     /// EWMA of call time, for drift detection.
     pub ewma_ns: Ewma,
     /// Accumulated cycle counter (the paper's off-load metric).
@@ -98,31 +98,37 @@ impl FunctionProfile {
         FunctionProfile { ewma_ns: Ewma::new(0.25), ..Default::default() }
     }
 
-    /// Per-target stats.
-    pub fn on(&self, t: TargetId) -> &RollingStats {
-        match t {
-            TargetId::ArmCore => &self.arm_ns,
-            TargetId::C64xDsp => &self.dsp_ns,
-        }
+    /// Per-target stats, if any samples were recorded there.
+    pub fn on(&self, t: TargetId) -> Option<&RollingStats> {
+        self.per_target_ns.get(t.index()).filter(|s| s.count() > 0)
     }
 
-    /// Per-target stats, mutable.
+    /// Per-target stats, mutable (grows the table to cover `t`).
     pub fn on_mut(&mut self, t: TargetId) -> &mut RollingStats {
-        match t {
-            TargetId::ArmCore => &mut self.arm_ns,
-            TargetId::C64xDsp => &mut self.dsp_ns,
+        if self.per_target_ns.len() <= t.index() {
+            self.per_target_ns.resize_with(t.index() + 1, RollingStats::default);
         }
+        &mut self.per_target_ns[t.index()]
     }
 
     /// Mean time on one target, if any samples exist.
     pub fn mean_ns_on(&self, t: TargetId) -> Option<f64> {
-        let s = self.on(t);
-        (s.count() > 0).then(|| s.mean())
+        self.on(t).map(|s| s.mean())
     }
 
     /// Samples recorded on one target.
     pub fn count_on(&self, t: TargetId) -> u64 {
-        self.on(t).count()
+        self.on(t).map(|s| s.count()).unwrap_or(0)
+    }
+
+    /// Targets with at least one sample, lowest slot first.
+    pub fn sampled_targets(&self) -> Vec<TargetId> {
+        self.per_target_ns
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.count() > 0)
+            .map(|(i, _)| TargetId(i as u16))
+            .collect()
     }
 }
 
@@ -242,6 +248,7 @@ impl PerfSampler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::platform::dm3730;
 
     fn sample(cycles: u64) -> CounterSample {
         CounterSample { cycles, ..Default::default() }
@@ -251,7 +258,7 @@ mod tests {
     fn disabled_sampler_is_free_and_blind() {
         let mut s = PerfSampler::new(SamplerConfig::disabled()).unwrap();
         let mut rng = SimRng::seeded(1);
-        let c = s.record(FunctionId(0), TargetId::ArmCore, sample(100), 1000, &mut rng);
+        let c = s.record(FunctionId(0), TargetId::HOST, sample(100), 1000, &mut rng);
         assert_eq!(c.total_ns(), 0);
         assert!(s.profile(FunctionId(0)).is_none());
     }
@@ -273,7 +280,7 @@ mod tests {
         };
         let mut s = PerfSampler::new(cfg).unwrap();
         let mut rng = SimRng::seeded(1);
-        let c = s.record(FunctionId(0), TargetId::ArmCore, sample(1), 1_000_000, &mut rng);
+        let c = s.record(FunctionId(0), TargetId::HOST, sample(1), 1_000_000, &mut rng);
         assert_eq!(c.measurement_ns, 100_000);
         assert_eq!(c.burst_ns, 0);
     }
@@ -285,7 +292,7 @@ mod tests {
         let mut rng = SimRng::seeded(1);
         let mut burst_calls = vec![];
         for i in 0..12 {
-            let c = s.record(FunctionId(0), TargetId::ArmCore, sample(1), 1000, &mut rng);
+            let c = s.record(FunctionId(0), TargetId::HOST, sample(1), 1000, &mut rng);
             if c.burst_ns > 0 {
                 burst_calls.push(i);
             }
@@ -300,16 +307,16 @@ mod tests {
         let mut rng = SimRng::seeded(1);
         let f = FunctionId(3);
         for _ in 0..5 {
-            s.record(f, TargetId::ArmCore, sample(10), 1000, &mut rng);
+            s.record(f, TargetId::HOST, sample(10), 1000, &mut rng);
         }
         for _ in 0..3 {
-            s.record(f, TargetId::C64xDsp, sample(10), 500, &mut rng);
+            s.record(f, dm3730::DSP, sample(10), 500, &mut rng);
         }
         let p = s.profile(f).unwrap();
-        assert_eq!(p.count_on(TargetId::ArmCore), 5);
-        assert_eq!(p.count_on(TargetId::C64xDsp), 3);
-        assert_eq!(p.mean_ns_on(TargetId::ArmCore), Some(1000.0));
-        assert_eq!(p.mean_ns_on(TargetId::C64xDsp), Some(500.0));
+        assert_eq!(p.count_on(TargetId::HOST), 5);
+        assert_eq!(p.count_on(dm3730::DSP), 3);
+        assert_eq!(p.mean_ns_on(TargetId::HOST), Some(1000.0));
+        assert_eq!(p.mean_ns_on(dm3730::DSP), Some(500.0));
         assert_eq!(p.calls, 8);
     }
 
@@ -317,8 +324,8 @@ mod tests {
     fn cycles_accumulate_for_ranking() {
         let mut s = PerfSampler::new(SamplerConfig::default()).unwrap();
         let mut rng = SimRng::seeded(1);
-        s.record(FunctionId(0), TargetId::ArmCore, sample(100), 10, &mut rng);
-        s.record(FunctionId(1), TargetId::ArmCore, sample(900), 10, &mut rng);
+        s.record(FunctionId(0), TargetId::HOST, sample(100), 10, &mut rng);
+        s.record(FunctionId(1), TargetId::HOST, sample(900), 10, &mut rng);
         assert_eq!(s.total_cycles(), 1000);
         assert_eq!(s.profile(FunctionId(1)).unwrap().total_cycles, 900);
     }
@@ -327,7 +334,7 @@ mod tests {
     fn reset_clears_state() {
         let mut s = PerfSampler::new(SamplerConfig::default()).unwrap();
         let mut rng = SimRng::seeded(1);
-        s.record(FunctionId(0), TargetId::ArmCore, sample(100), 10, &mut rng);
+        s.record(FunctionId(0), TargetId::HOST, sample(100), 10, &mut rng);
         s.reset();
         assert_eq!(s.total_cycles(), 0);
         assert!(s.profile(FunctionId(0)).is_none());

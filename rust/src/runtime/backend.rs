@@ -1,0 +1,169 @@
+//! Pluggable execution backends: who actually computes a dispatched call.
+//!
+//! The coordinator prices every call with the platform cost model (the
+//! sim clock), but the *numerics* of a call are produced by an
+//! [`ExecutionBackend`]:
+//!
+//! - [`SimBackend`] — no numerics at all: decisions and timing only
+//!   (pure-simulation sweeps, the Fig 2b size sweep);
+//! - [`ReferenceBackend`] — the pure-Rust reference implementations
+//!   compute every call for real (and are wall-clocked), so outputs and
+//!   verification work without any external runtime;
+//! - `PjrtBackend` (feature `pjrt`) — the AOT'd HLO artifacts execute
+//!   through the PJRT CPU client, exactly as the seed runtime did.
+//!
+//! The backend is chosen once at coordinator construction and consulted
+//! at every retirement; it never influences the sim clock (that is the
+//! cost model's job), only `CallRecord::wall` and the output tensor.
+
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+use crate::workloads::{self, Tensor, WorkloadKind};
+
+/// One execution request, as the coordinator hands it down.
+#[derive(Debug)]
+pub struct ExecRequest<'a> {
+    /// Resolved artifact name for the (function, target) pair — which
+    /// build variant this is came from the target's
+    /// [`crate::platform::TargetSpec::build`].
+    pub artifact: &'a str,
+    pub kind: WorkloadKind,
+    pub inputs: &'a [Tensor],
+}
+
+/// A backend that can really execute dispatched calls.
+///
+/// `execute` returns `Ok(None)` when the backend has no implementation
+/// for the request (sim-only, artifact not AOT'd at this size, ...);
+/// the coordinator then records the call without numerics.
+pub trait ExecutionBackend: Send {
+    fn name(&self) -> &'static str;
+
+    fn execute(&mut self, req: &ExecRequest<'_>) -> Result<Option<(Tensor, Duration)>>;
+}
+
+/// No real execution: decisions and timing only.
+#[derive(Debug, Default)]
+pub struct SimBackend;
+
+impl ExecutionBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn execute(&mut self, _req: &ExecRequest<'_>) -> Result<Option<(Tensor, Duration)>> {
+        Ok(None)
+    }
+}
+
+/// Pure-Rust reference execution: every call really computes through
+/// the workload reference implementations ("the C program the developer
+/// wrote"), wall-clocked on the host.
+#[derive(Debug, Default)]
+pub struct ReferenceBackend;
+
+impl ExecutionBackend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn execute(&mut self, req: &ExecRequest<'_>) -> Result<Option<(Tensor, Duration)>> {
+        let start = Instant::now();
+        let out = workloads::reference_output(req.kind, req.inputs)?;
+        Ok(Some((out, start.elapsed())))
+    }
+}
+
+/// PJRT-backed execution through the AOT'd HLO artifacts.
+#[cfg(feature = "pjrt")]
+pub mod pjrt {
+    use std::collections::HashSet;
+    use std::path::PathBuf;
+
+    use super::*;
+    use crate::error::Error;
+    use crate::runtime::artifact::ArtifactStore;
+    use crate::runtime::client::RtClient;
+
+    pub struct PjrtBackend {
+        store: ArtifactStore,
+        /// Artifacts we know are not in the manifest (e.g. sim-only
+        /// matmul sizes in the Fig 2b sweep): skip without re-probing.
+        missing: HashSet<String>,
+    }
+
+    impl PjrtBackend {
+        /// Open the store rooted at `dir` (expects `dir/manifest.json`).
+        pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+            let store = ArtifactStore::open(dir, RtClient::cpu()?)?;
+            Ok(PjrtBackend { store, missing: HashSet::new() })
+        }
+
+        pub fn store(&self) -> &ArtifactStore {
+            &self.store
+        }
+    }
+
+    impl ExecutionBackend for PjrtBackend {
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
+
+        fn execute(&mut self, req: &ExecRequest<'_>) -> Result<Option<(Tensor, Duration)>> {
+            if self.missing.contains(req.artifact) {
+                return Ok(None);
+            }
+            let artifact = match self.store.load(req.artifact) {
+                Ok(a) => a,
+                Err(Error::Artifact(_)) => {
+                    // Not AOT'd (e.g. a sim-only matmul size): run
+                    // sim-only from now on.
+                    self.missing.insert(req.artifact.to_string());
+                    return Ok(None);
+                }
+                Err(e) => return Err(e),
+            };
+            let (out, wall) = artifact.execute(req.inputs)?;
+            Ok(Some((out, wall)))
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::WorkloadKind;
+
+    #[test]
+    fn sim_backend_produces_nothing() {
+        let inst = workloads::instance(WorkloadKind::Dotprod, 1);
+        let mut b = SimBackend;
+        let req = ExecRequest {
+            artifact: &inst.artifact_naive,
+            kind: inst.kind,
+            inputs: &inst.inputs,
+        };
+        assert!(b.execute(&req).unwrap().is_none());
+    }
+
+    #[test]
+    fn reference_backend_matches_expected_for_all_workloads() {
+        let mut b = ReferenceBackend;
+        for kind in WorkloadKind::ALL {
+            let inst = workloads::instance(kind, 42);
+            let req = ExecRequest {
+                artifact: &inst.artifact_dsp,
+                kind,
+                inputs: &inst.inputs,
+            };
+            let (out, _wall) = b.execute(&req).unwrap().expect("reference always computes");
+            let tol = if kind == WorkloadKind::Fft { 1e-2 } else { 0.0 };
+            assert!(inst.expected.allclose(&out, tol), "{kind:?} output mismatch");
+            assert!(!out.data.is_empty());
+        }
+    }
+}

@@ -1,9 +1,19 @@
-//! PJRT runtime: load AOT'd HLO-text artifacts and execute them on the
-//! request path.
+//! Execution runtime: the pluggable backends that really compute
+//! dispatched calls.
 //!
-//! Python (JAX + Pallas) runs exactly once, at build time, producing
-//! `artifacts/*.hlo.txt` + `artifacts/manifest.json` (`make artifacts`).
-//! This module is everything the Rust coordinator needs at run time:
+//! The coordinator talks to one [`backend::ExecutionBackend`]; three
+//! implementations exist:
+//!
+//! - [`backend::SimBackend`] — decisions and timing only, no numerics;
+//! - [`backend::ReferenceBackend`] — the pure-Rust reference
+//!   implementations compute every call (default for real numerics —
+//!   needs nothing beyond this crate);
+//! - `PjrtBackend` (feature **`pjrt`**) — loads AOT'd HLO-text artifacts
+//!   and executes them through the PJRT CPU client (`xla` crate).
+//!
+//! With `pjrt` enabled, Python (JAX + Pallas) runs exactly once, at
+//! build time, producing `artifacts/*.hlo.txt` + `artifacts/manifest.json`
+//! (`make artifacts`); the PJRT-facing pieces are:
 //!
 //! - [`client`] — the PJRT CPU client (`xla` crate);
 //! - [`artifact`] — the manifest model and the [`artifact::ArtifactStore`]
@@ -16,10 +26,22 @@
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md).
 
+pub mod backend;
+
+#[cfg(feature = "pjrt")]
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod exec;
 
+pub use backend::{ExecRequest, ExecutionBackend, ReferenceBackend, SimBackend};
+
+#[cfg(feature = "pjrt")]
 pub use artifact::{ArtifactMeta, ArtifactStore, Manifest, TensorMeta};
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;
+#[cfg(feature = "pjrt")]
 pub use client::RtClient;
+#[cfg(feature = "pjrt")]
 pub use exec::LoadedArtifact;

@@ -33,6 +33,13 @@ impl SimClock {
         self.now_ns = self.now_ns.saturating_add(ns);
     }
 
+    /// Advance the clock to absolute time `at_ns` (no-op if already
+    /// past it — the clock is monotonic).  The dispatch queue uses this
+    /// to jump to the next completion event.
+    pub fn advance_to(&mut self, at_ns: u64) {
+        self.now_ns = self.now_ns.max(at_ns);
+    }
+
     /// Current simulated time in milliseconds (f64, for reporting).
     pub fn now_ms(&self) -> f64 {
         self.now_ns as f64 / 1e6
@@ -128,6 +135,17 @@ mod tests {
         c.advance(1_500_000);
         assert_eq!(c.now_ns(), 1_500_000);
         assert!((c.now_ms() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn advance_to_is_monotone() {
+        let mut c = SimClock::new();
+        c.advance_to(500);
+        assert_eq!(c.now_ns(), 500);
+        c.advance_to(100); // never rewinds
+        assert_eq!(c.now_ns(), 500);
+        c.advance_to(501);
+        assert_eq!(c.now_ns(), 501);
     }
 
     #[test]

@@ -252,6 +252,80 @@ pub fn instance(kind: WorkloadKind, seed: u64) -> WorkloadInstance {
     }
 }
 
+/// Compute `kind`'s output from input tensors with the pure-Rust
+/// reference implementation — the engine behind
+/// [`crate::runtime::backend::ReferenceBackend`].  Input layout matches
+/// the instance/artifact convention of each workload module.
+pub fn reference_output(kind: WorkloadKind, inputs: &[Tensor]) -> crate::Result<Tensor> {
+    use crate::error::Error;
+    fn arg<'a>(
+        kind: WorkloadKind,
+        inputs: &'a [Tensor],
+        i: usize,
+    ) -> crate::Result<&'a Tensor> {
+        inputs
+            .get(i)
+            .ok_or_else(|| Error::Coordinator(format!("{kind:?}: missing input {i}")))
+    }
+    fn ints<'a>(
+        kind: WorkloadKind,
+        inputs: &'a [Tensor],
+        i: usize,
+    ) -> crate::Result<&'a [i32]> {
+        arg(kind, inputs, i)?
+            .as_i32()
+            .ok_or_else(|| Error::Coordinator(format!("{kind:?}: input {i} must be i32")))
+    }
+    fn floats<'a>(
+        kind: WorkloadKind,
+        inputs: &'a [Tensor],
+        i: usize,
+    ) -> crate::Result<&'a [f32]> {
+        arg(kind, inputs, i)?
+            .as_f32()
+            .ok_or_else(|| Error::Coordinator(format!("{kind:?}: input {i} must be f32")))
+    }
+    Ok(match kind {
+        WorkloadKind::Complement => {
+            let seq = ints(kind, inputs, 0)?;
+            Tensor::i32(arg(kind, inputs, 0)?.shape.clone(), complement::reference(seq))
+        }
+        WorkloadKind::Conv2d => {
+            let (h, w) = match arg(kind, inputs, 0)?.shape[..] {
+                [h, w] => (h, w),
+                _ => return Err(Error::Coordinator("conv2d image must be rank 2".into())),
+            };
+            let k = arg(kind, inputs, 1)?.shape[0];
+            let out =
+                conv2d::reference(ints(kind, inputs, 0)?, h, w, ints(kind, inputs, 1)?, k);
+            Tensor::i32(vec![h, w], out)
+        }
+        WorkloadKind::Dotprod => Tensor::i32(
+            vec![],
+            vec![dotprod::reference(ints(kind, inputs, 0)?, ints(kind, inputs, 1)?)],
+        ),
+        WorkloadKind::Matmul => {
+            let n = arg(kind, inputs, 0)?.shape[0];
+            Tensor::i32(
+                vec![n, n],
+                matmul::reference(ints(kind, inputs, 0)?, ints(kind, inputs, 1)?, n),
+            )
+        }
+        WorkloadKind::Pattern => Tensor::i32(
+            vec![],
+            vec![pattern::reference(ints(kind, inputs, 0)?, ints(kind, inputs, 1)?)],
+        ),
+        WorkloadKind::Fft => {
+            let (re, im) = (floats(kind, inputs, 0)?, floats(kind, inputs, 1)?);
+            let n = re.len();
+            let (fr, fi) = fft::reference(re, im);
+            let mut stacked = fr;
+            stacked.extend_from_slice(&fi);
+            Tensor::f32(vec![2, n], stacked)
+        }
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -297,6 +371,22 @@ mod tests {
         assert!(!a.allclose(&b, 1e-8));
         let c = Tensor::i32(vec![2], vec![1, 2]);
         assert!(!a.allclose(&c, 1.0));
+    }
+
+    #[test]
+    fn reference_output_reproduces_every_instance() {
+        for kind in WorkloadKind::ALL {
+            let w = instance(kind, 11);
+            let out = reference_output(kind, &w.inputs).unwrap();
+            assert!(w.expected.allclose(&out, 0.0), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn reference_output_rejects_malformed_inputs() {
+        assert!(reference_output(WorkloadKind::Dotprod, &[]).is_err());
+        let t = Tensor::f32(vec![2], vec![1.0, 2.0]);
+        assert!(reference_output(WorkloadKind::Complement, &[t]).is_err());
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! regenerates with the right shape end to end.
 
 use vpe::bench_harness::{fig2, fig3, table1};
-use vpe::platform::TargetId;
+use vpe::platform::dm3730;
 use vpe::workloads::WorkloadKind;
 
 #[test]
@@ -33,8 +33,8 @@ fn fig2b_curve_has_the_paper_shape() {
         }
     }
     assert_eq!(crossings, 1, "exactly one ARM->DSP crossover");
-    assert_eq!(points.first().unwrap().winner(), TargetId::ArmCore);
-    assert_eq!(points.last().unwrap().winner(), TargetId::C64xDsp);
+    assert_eq!(points.first().unwrap().winner(), dm3730::ARM);
+    assert_eq!(points.last().unwrap().winner(), dm3730::DSP);
 }
 
 #[test]

@@ -3,10 +3,11 @@
 
 use vpe::coordinator::policy::AlwaysOffloadPolicy;
 use vpe::coordinator::{Vpe, VpeConfig};
-use vpe::platform::TargetId;
+use vpe::platform::{dm3730, TargetId};
 use vpe::profiler::sampler::SamplerConfig;
 use vpe::workloads::WorkloadKind;
 
+#[cfg(feature = "pjrt")]
 fn artifacts_present() -> bool {
     std::path::Path::new("artifacts/manifest.json").exists()
 }
@@ -23,9 +24,9 @@ fn every_workload_reaches_the_paper_verdict() {
         let f = v.register_workload(kind).unwrap();
         v.run(f, 25).unwrap();
         let want = if kind == WorkloadKind::Fft {
-            TargetId::ArmCore
+            TargetId::HOST
         } else {
-            TargetId::C64xDsp
+            dm3730::DSP
         };
         assert_eq!(v.current_target(f).unwrap(), want, "{kind:?}");
         assert_eq!(v.events().offloads().len(), 1, "{kind:?} must be tried once");
@@ -43,7 +44,7 @@ fn hotspot_is_chosen_among_competing_functions() {
         v.call(mm).unwrap();
         v.call(dot).unwrap();
     }
-    assert_eq!(v.current_target(mm).unwrap(), TargetId::C64xDsp);
+    assert_eq!(v.current_target(mm).unwrap(), dm3730::DSP);
     let first_offload = v.events().offloads()[0].1;
     assert_eq!(first_offload, mm, "matmul must be nominated first");
 }
@@ -66,10 +67,10 @@ fn degraded_dsp_changes_the_verdict() {
     // VPE tries it, observes, and reverts — adaptivity beyond the
     // paper's static table.
     let mut v = Vpe::new(VpeConfig::sim_only()).unwrap();
-    v.soc_mut().degrade_target(TargetId::C64xDsp, 40.0);
+    v.soc_mut().degrade_target(dm3730::DSP, 40.0);
     let f = v.register_matmul(500).unwrap();
     v.run(f, 25).unwrap();
-    assert_eq!(v.current_target(f).unwrap(), TargetId::ArmCore);
+    assert_eq!(v.current_target(f).unwrap(), TargetId::HOST);
     assert_eq!(v.events().reverts().len(), 1);
 }
 
@@ -100,7 +101,7 @@ fn always_offload_never_recovers_from_fft() {
     let mut v = Vpe::with_policy(cfg, Box::new(AlwaysOffloadPolicy)).unwrap();
     let f = v.register_workload(WorkloadKind::Fft).unwrap();
     v.run(f, 25).unwrap();
-    assert_eq!(v.current_target(f).unwrap(), TargetId::C64xDsp);
+    assert_eq!(v.current_target(f).unwrap(), dm3730::DSP);
     assert!(v.events().reverts().is_empty());
 }
 
@@ -108,6 +109,7 @@ fn always_offload_never_recovers_from_fft() {
 // Real-artifact stories (skip when artifacts are absent)
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn all_artifacts_load_and_verify_against_rust_references() {
     if !artifacts_present() {
@@ -131,6 +133,7 @@ fn all_artifacts_load_and_verify_against_rust_references() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn matmul_artifacts_cover_all_aot_sizes() {
     if !artifacts_present() {
@@ -148,6 +151,7 @@ fn matmul_artifacts_cover_all_aot_sizes() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn full_lifecycle_with_real_execution() {
     if !artifacts_present() {
@@ -160,11 +164,12 @@ fn full_lifecycle_with_real_execution() {
     // Both the naive build (warm-up on ARM) and the Pallas build
     // (steady state on DSP) really executed and verified.
     assert!(recs.iter().all(|r| r.output_ok == Some(true)));
-    assert!(recs.iter().any(|r| r.target == TargetId::ArmCore));
-    assert!(recs.iter().any(|r| r.target == TargetId::C64xDsp));
+    assert!(recs.iter().any(|r| r.target == TargetId::HOST));
+    assert!(recs.iter().any(|r| r.target == dm3730::DSP));
     assert_eq!(v.mismatch_count(f), 0);
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn call_with_runs_custom_inputs_through_the_current_target() {
     if !artifacts_present() {
@@ -187,9 +192,9 @@ fn call_with_runs_custom_inputs_through_the_current_target() {
     for _ in 0..12 {
         v.call(f).unwrap();
     }
-    assert_eq!(v.current_target(f).unwrap(), TargetId::C64xDsp);
+    assert_eq!(v.current_target(f).unwrap(), dm3730::DSP);
     let (rec2, out2) = v.call_with(f, &inputs).unwrap();
-    assert_eq!(rec2.target, TargetId::C64xDsp);
+    assert_eq!(rec2.target, dm3730::DSP);
     assert_eq!(out1.unwrap().as_i32().unwrap(), want.as_slice());
     assert_eq!(out2.unwrap().as_i32().unwrap(), want.as_slice());
 }
@@ -208,7 +213,7 @@ fn input_discontinuity_reopens_a_blacklisted_decision() {
     let mut v = Vpe::new(cfg).unwrap();
     let f = v.register_matmul(40).unwrap(); // ARM ~8.4 ms, DSP ~100 ms
     v.run(f, 18).unwrap();
-    assert_eq!(v.current_target(f).unwrap(), TargetId::ArmCore, "small: must revert");
+    assert_eq!(v.current_target(f).unwrap(), TargetId::HOST, "small: must revert");
     let reverts_small = v.events().reverts().len();
     assert!(reverts_small >= 1, "at least one failed trial");
 
@@ -217,7 +222,7 @@ fn input_discontinuity_reopens_a_blacklisted_decision() {
     v.run(f, 30).unwrap();
     assert_eq!(
         v.current_target(f).unwrap(),
-        TargetId::C64xDsp,
+        dm3730::DSP,
         "large: the re-trial must commit"
     );
     assert!(
@@ -225,6 +230,108 @@ fn input_discontinuity_reopens_a_blacklisted_decision() {
         "a fresh trial happened after the discontinuity"
     );
     assert_eq!(v.events().reverts().len(), reverts_small, "the new trial succeeded");
+}
+
+// ---------------------------------------------------------------------------
+// N-target registry + concurrent dispatch queue (the multi-unit refactor)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn functions_spread_across_three_units_by_data_alone() {
+    // Register two extra units as pure data (spec + cost rows) and make
+    // each unit the best home for a different workload: the unchanged
+    // policy/coordinator must route each function to its own unit.
+    use vpe::platform::{TargetSpec, TransferModel, Transport};
+    let mut cfg = VpeConfig::sim_only();
+    // The matmul dominates total cycles; lower the share gate so the
+    // cooler functions still get their nomination.
+    cfg.detector.share_threshold = 0.02;
+    let mut v = Vpe::new(cfg).unwrap();
+    let neon = v.soc_mut().add_target(
+        TargetSpec::new("NEON-class vector unit", 1_000_000_000)
+            .with_issue_width(4)
+            .with_transport(Transport::SharedMemory(TransferModel {
+                dispatch_fixed_ns: 5_000_000,
+                per_param_byte_ns: 1.0,
+            })),
+    );
+    let gpu = v.soc_mut().add_target(
+        TargetSpec::new("GPU-class accelerator", 1_200_000_000)
+            .with_issue_width(32)
+            .with_transport(Transport::SharedMemory(TransferModel {
+                dispatch_fixed_ns: 30_000_000,
+                per_param_byte_ns: 1.0,
+            })),
+    );
+    // NEON: great at conv2d, mediocre at matmul. GPU: great at matmul.
+    v.soc_mut().cost.set_rate(WorkloadKind::Conv2d, neon, 0.05);
+    v.soc_mut().cost.set_rate(WorkloadKind::Matmul, neon, 3.0);
+    v.soc_mut().cost.set_rate(WorkloadKind::Matmul, gpu, 0.2);
+    let mm = v.register_matmul(500).unwrap();
+    let conv = v.register_workload(WorkloadKind::Conv2d).unwrap();
+    let dot = v.register_workload(WorkloadKind::Dotprod).unwrap();
+    for _ in 0..30 {
+        v.call(mm).unwrap();
+        v.call(conv).unwrap();
+        v.call(dot).unwrap();
+    }
+    assert_eq!(v.current_target(mm).unwrap(), gpu, "matmul belongs on the GPU-class unit");
+    assert_eq!(v.current_target(conv).unwrap(), neon, "conv2d belongs on the vector unit");
+    assert_eq!(v.current_target(dot).unwrap(), dm3730::DSP, "dotprod keeps the DSP");
+}
+
+#[test]
+fn queued_dispatches_overlap_and_retire_exactly_once() {
+    let mut v = Vpe::new(VpeConfig::sim_only()).unwrap();
+    let mm = v.register_matmul(500).unwrap();
+    let fft = v.register_workload(WorkloadKind::Fft).unwrap();
+    for _ in 0..10 {
+        v.call(mm).unwrap();
+        v.call(fft).unwrap();
+    }
+    assert_eq!(v.current_target(mm).unwrap(), dm3730::DSP);
+    assert_eq!(v.current_target(fft).unwrap(), TargetId::HOST);
+    // Issue a burst without waiting, then drain.
+    let mut tickets = Vec::new();
+    for _ in 0..3 {
+        tickets.push(v.submit(mm).unwrap());
+        tickets.push(v.submit(fft).unwrap());
+    }
+    assert_eq!(v.in_flight(), 6);
+    let recs = v.drain().unwrap();
+    assert_eq!(recs.len(), tickets.len(), "every ticket retires exactly once");
+    assert_eq!(v.in_flight(), 0);
+    assert!(v.max_in_flight() >= 2, "dispatches must have been concurrent");
+    // Per-target serialization: on each unit, execution windows are
+    // disjoint and ordered.
+    for unit in [TargetId::HOST, dm3730::DSP] {
+        let mut on_unit: Vec<_> = recs.iter().filter(|r| r.target == unit).collect();
+        on_unit.sort_by_key(|r| r.start_ns);
+        for w in on_unit.windows(2) {
+            assert!(w[1].start_ns >= w[0].complete_ns, "overlap on {unit}");
+        }
+    }
+    // Cross-target concurrency really happened.
+    let dsp = recs.iter().find(|r| r.target == dm3730::DSP).unwrap();
+    let host = recs.iter().find(|r| r.target == TargetId::HOST).unwrap();
+    assert!(
+        dsp.start_ns < host.complete_ns && host.start_ns < dsp.complete_ns,
+        "windows on different units must overlap"
+    );
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn reference_backend_computes_and_verifies_numerics() {
+    // Without PJRT, `artifacts_dir: Some(..)` selects the pure-Rust
+    // reference backend: every call really computes and verifies.
+    let mut v = Vpe::new(VpeConfig::default()).unwrap();
+    assert_eq!(v.backend_name(), "reference");
+    let f = v.register_workload(WorkloadKind::Conv2d).unwrap();
+    let recs = v.run(f, 12).unwrap();
+    assert!(recs.iter().all(|r| r.output_ok == Some(true)));
+    assert!(recs.iter().all(|r| r.wall.is_some()));
+    assert_eq!(v.mismatch_count(f), 0);
 }
 
 #[test]
@@ -236,5 +343,5 @@ fn without_retry_the_decision_stays_stale() {
     v.run(f, 20).unwrap();
     v.set_scale(f, vpe::workloads::matmul_scale(500)).unwrap();
     v.run(f, 30).unwrap();
-    assert_eq!(v.current_target(f).unwrap(), TargetId::ArmCore, "stale verdict persists");
+    assert_eq!(v.current_target(f).unwrap(), TargetId::HOST, "stale verdict persists");
 }

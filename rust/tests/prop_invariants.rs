@@ -5,7 +5,7 @@ use vpe::coordinator::decision_tree::{DecisionTree, Observation};
 use vpe::jit::module::{FunctionId, IrFunction, IrModule};
 use vpe::jit::wrapper::DispatchTable;
 use vpe::platform::memory::SharedRegion;
-use vpe::platform::{CostModel, Soc, TargetId};
+use vpe::platform::{dm3730, CostModel, Soc, TargetId};
 use vpe::profiler::stats::RollingStats;
 use vpe::util::prop::{self, assert_prop};
 use vpe::workloads::WorkloadKind;
@@ -63,7 +63,7 @@ fn prop_cost_model_is_monotone_in_items() {
         let kind = *g.choose(&kinds);
         let a = g.u64_in(1, 1 << 28) as f64;
         let b = a + g.u64_in(1, 1 << 20) as f64;
-        for t in TargetId::ALL {
+        for t in [dm3730::ARM, dm3730::DSP] {
             assert_prop(
                 model.exec_ns(kind, a, t) < model.exec_ns(kind, b, t),
                 format!("{kind:?}/{t:?}: not monotone at {a}->{b}"),
@@ -81,7 +81,7 @@ fn prop_dsp_dispatch_overhead_always_charged() {
         let kind = *g.choose(&kinds);
         let items = g.u64_in(1, 1 << 24) as f64;
         let bytes = g.u64_in(0, 4096);
-        let dsp = soc.call_ns(kind, items, bytes, TargetId::C64xDsp).expect("dsp healthy");
+        let dsp = soc.call_ns(kind, items, bytes, dm3730::DSP).expect("dsp healthy");
         let setup = soc.transfer.dispatch_ns(bytes);
         assert_prop(dsp >= setup, format!("dsp {dsp} < setup {setup}"))
     });
@@ -101,10 +101,10 @@ fn prop_dispatch_table_tracks_last_write() {
         }
         m.finalize();
         let table = DispatchTable::for_module(&m).expect("table");
-        let mut expected = vec![TargetId::ArmCore; n];
+        let mut expected = vec![dm3730::ARM; n];
         for _ in 0..g.usize_in(1, 80) {
             let f = g.usize_in(0, n);
-            let t = if g.bool() { TargetId::C64xDsp } else { TargetId::ArmCore };
+            let t = if g.bool() { dm3730::DSP } else { dm3730::ARM };
             table.set_target(FunctionId(f as u32), t).expect("set");
             expected[f] = t;
             // Every slot must read back its own last write.
@@ -116,7 +116,7 @@ fn prop_dispatch_table_tracks_last_write() {
         let offloaded: Vec<usize> = expected
             .iter()
             .enumerate()
-            .filter(|(_, t)| **t == TargetId::C64xDsp)
+            .filter(|(_, t)| **t == dm3730::DSP)
             .map(|(i, _)| i)
             .collect();
         let got: Vec<usize> = table.offloaded().iter().map(|f| f.0 as usize).collect();
@@ -161,7 +161,7 @@ fn prop_decision_tree_recovers_planted_threshold() {
                 let size = i as f64 * 500.0 / n as f64;
                 Observation {
                     size,
-                    best: if size <= cut { TargetId::ArmCore } else { TargetId::C64xDsp },
+                    best: if size <= cut { dm3730::ARM } else { dm3730::DSP },
                 }
             })
             .collect();
@@ -178,13 +178,131 @@ fn prop_decision_tree_never_panics_on_noise() {
         let obs: Vec<Observation> = (0..n)
             .map(|_| Observation {
                 size: g.f64_unit() * 1000.0,
-                best: if g.bool() { TargetId::ArmCore } else { TargetId::C64xDsp },
+                best: if g.bool() { dm3730::ARM } else { dm3730::DSP },
             })
             .collect();
         let tree = DecisionTree::fit(&obs, 4, 2);
         // Predictions are total over the whole domain.
         for _ in 0..10 {
             let _ = tree.predict(g.f64_unit() * 2000.0 - 500.0);
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch-queue invariants (the event-driven concurrent dispatch path)
+// ---------------------------------------------------------------------------
+
+/// A 4-unit coordinator (host + DSP + two data-registered units), every
+/// workload priced everywhere, always-offload so remote units see load.
+fn multi_target_vpe(seed: u64) -> (vpe::coordinator::Vpe, Vec<TargetId>) {
+    use vpe::coordinator::policy::AlwaysOffloadPolicy;
+    use vpe::coordinator::VpeConfig;
+    use vpe::platform::{TargetSpec, TransferModel, Transport};
+
+    let mut cfg = VpeConfig::sim_only();
+    cfg.seed = seed;
+    let mut v = vpe::coordinator::Vpe::with_policy(cfg, Box::new(AlwaysOffloadPolicy))
+        .expect("vpe");
+    let mut targets = vec![dm3730::ARM, dm3730::DSP];
+    for (name, fixed_ns) in [("unit-a", 3_000_000u64), ("unit-b", 9_000_000u64)] {
+        let id = v.soc_mut().add_target(
+            TargetSpec::new(name, 1_000_000_000).with_transport(Transport::SharedMemory(
+                TransferModel { dispatch_fixed_ns: fixed_ns, per_param_byte_ns: 1.0 },
+            )),
+        );
+        for kind in WorkloadKind::ALL {
+            // Arbitrary but distinct per-unit rates.
+            let host = v.soc().cost.rate_ns(kind, dm3730::ARM).expect("row");
+            v.soc_mut().cost.set_rate(kind, id, host / (2.0 + id.0 as f64));
+        }
+        targets.push(id);
+    }
+    (v, targets)
+}
+
+#[test]
+fn prop_queue_serializes_targets_and_retires_exactly_once() {
+    prop::check("dispatch queue invariants", 60, |g| {
+        let (mut v, targets) = multi_target_vpe(g.u64_in(0, u64::MAX - 1));
+        let kinds = [WorkloadKind::Matmul, WorkloadKind::Dotprod, WorkloadKind::Conv2d];
+        let mut fns = Vec::new();
+        for kind in kinds {
+            fns.push(v.register_workload(kind).expect("register"));
+        }
+        // Random interleaving of submits and partial drains.
+        let mut submitted = 0u64;
+        let mut records = Vec::new();
+        for _ in 0..g.usize_in(5, 40) {
+            if g.bool() {
+                let f = *g.choose(&fns);
+                v.submit(f).expect("submit");
+                submitted += 1;
+            } else {
+                records.extend(v.drain().expect("drain"));
+            }
+        }
+        records.extend(v.drain().expect("drain"));
+        assert_prop(
+            records.len() as u64 == submitted,
+            format!("retired {} != submitted {submitted}", records.len()),
+        )?;
+        assert_prop(v.in_flight() == 0, "queue must be empty after a full drain")?;
+
+        // No two dispatches overlap on one target; host order == issue
+        // order (program order preserved on the fallback path).
+        for &t in &targets {
+            let mut on_t: Vec<_> = records.iter().filter(|r| r.target == t).collect();
+            on_t.sort_by_key(|r| r.start_ns);
+            for w in on_t.windows(2) {
+                assert_prop(
+                    w[1].start_ns >= w[0].complete_ns,
+                    format!("overlap on {t}: {:?} then {:?}", w[0], w[1]),
+                )?;
+            }
+            if t.is_host() {
+                let mut by_issue = on_t.clone();
+                by_issue.sort_by_key(|r| r.issue_ns);
+                let issue_order: Vec<u64> = by_issue.iter().map(|r| r.start_ns).collect();
+                let start_order: Vec<u64> = on_t.iter().map(|r| r.start_ns).collect();
+                assert_prop(
+                    issue_order == start_order,
+                    "host dispatches must start in program order",
+                )?;
+            }
+        }
+
+        // The shared region never leaks staged parameter blocks.
+        assert_prop(v.soc().shared.used_bytes() == 0, "staged params leaked")
+    });
+}
+
+#[test]
+fn prop_scheduler_free_at_matches_busy_until() {
+    prop::check("free_at vs busy_until", 150, |g| {
+        let mut s = vpe::coordinator::scheduler::TargetScheduler::new();
+        let t = TargetId(g.u64_in(0, 4) as u16);
+        let mut horizon = 0u64;
+        for _ in 0..g.usize_in(1, 30) {
+            let start = g.u64_in(0, 1 << 30);
+            let dur = g.u64_in(1, 1 << 20);
+            s.occupy(t, start, dur);
+            horizon = horizon.max(start + dur);
+            // free_at never reports a stale (past) timestamp...
+            let now = g.u64_in(0, 1 << 31);
+            let free = s.free_at(t, now);
+            assert_prop(
+                free == 0 || free > now,
+                format!("free_at({now}) returned stale {free}"),
+            )?;
+            // ...and agrees with the raw busy-until mark.
+            assert_prop(s.busy_until(t) == horizon, "busy_until drifted")?;
+            if now < horizon {
+                assert_prop(free == horizon, "mid-occupancy must report the horizon")?;
+            } else {
+                assert_prop(free == 0, "expired occupancy must report free")?;
+            }
         }
         Ok(())
     });
