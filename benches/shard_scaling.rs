@@ -1,0 +1,68 @@
+//! Bench: sharded fan-out scaling, 1 -> N units (sim clock).
+//!
+//! Sweeps the number of registered accelerator units and reports, for a
+//! 500x500 matmul, the planner's fan-out width, the sharded makespan,
+//! and the speedup over the best single-unit dispatch of the same call.
+//! Times are simulated (the cost model drives the clock), so the sweep
+//! isolates the *scheduling* win from backend numerics.
+//!
+//! `cargo bench --bench shard_scaling`
+
+use vpe::coordinator::{Vpe, VpeConfig};
+use vpe::platform::{TargetSpec, TransferModel, Transport};
+use vpe::workloads::{matmul_scale, WorkloadKind};
+
+/// A platform with `extra` accelerator units besides the DM3730 pair.
+fn vpe_with_units(extra: usize) -> vpe::Result<Vpe> {
+    let mut cfg = VpeConfig::sim_only();
+    cfg.exec_noise_frac = 0.0;
+    let mut v = Vpe::new(cfg)?;
+    for i in 0..extra {
+        let id = v.soc_mut().add_target(
+            TargetSpec::new(&format!("accel-{i}"), 1_000_000_000).with_transport(
+                Transport::SharedMemory(TransferModel {
+                    dispatch_fixed_ns: 10_000_000 + 5_000_000 * i as u64,
+                    per_param_byte_ns: 1.0,
+                }),
+            ),
+        );
+        // Progressively slower extra units: 0.2, 0.3, 0.4, ... ns/MAC.
+        v.soc_mut()
+            .cost
+            .set_rate(WorkloadKind::Matmul, id, 0.2 + 0.1 * i as f64);
+    }
+    Ok(v)
+}
+
+fn main() -> vpe::Result<()> {
+    println!("== sharded fan-out scaling (500x500 matmul, sim clock) ==");
+    println!(
+        "{:>6} {:>8} {:>14} {:>16} {:>9}",
+        "units", "shards", "makespan ms", "best single ms", "speedup"
+    );
+    let scale = matmul_scale(500);
+    for extra in 0..=4 {
+        let mut v = vpe_with_units(extra)?;
+        let f = v.register_matmul(500)?;
+        let best_single = v
+            .soc()
+            .targets()
+            .filter_map(|(id, _)| v.soc().call_scaled_ns(WorkloadKind::Matmul, &scale, id).ok())
+            .min()
+            .unwrap_or(u64::MAX);
+        let rec = v.call_sharded(f)?;
+        // Sanity: the queue drained and nothing leaked.
+        assert_eq!(v.in_flight(), 0);
+        assert_eq!(v.soc().shared.used_bytes(), 0);
+        println!(
+            "{:>6} {:>8} {:>14.1} {:>16.1} {:>8.2}x",
+            2 + extra,
+            rec.shards,
+            rec.exec_ns as f64 / 1e6,
+            best_single as f64 / 1e6,
+            best_single as f64 / rec.exec_ns as f64,
+        );
+    }
+    println!("\n(speedup < 1x never happens: the planner falls back to one shard when fanning out would lose)");
+    Ok(())
+}

@@ -31,6 +31,25 @@ pub enum VpeEvent {
     /// in-flight call) — only logged when the wait is non-zero, to keep
     /// the trace readable.
     DispatchWaited { function: FunctionId, target: TargetId, wait_ns: u64 },
+    /// A dispatch bound for `target` bounced back to the host because
+    /// the target's queue was full (`depth` in-flight dispatches, at the
+    /// configured bound).
+    DispatchBounced { function: FunctionId, target: TargetId, depth: usize },
+    /// A policy chose to fan the function's calls out across up to
+    /// `width` units instead of offloading to a single one.
+    FanOutChosen { function: FunctionId, width: usize },
+    /// One call was split into `shards` concurrent shards (group id ties
+    /// the shards' events together).
+    ShardedDispatch { function: FunctionId, group: u64, shards: usize },
+    /// One shard of a fanned-out call finished on its unit.
+    ShardRetired {
+        function: FunctionId,
+        group: u64,
+        index: usize,
+        target: TargetId,
+        start_ns: u64,
+        complete_ns: u64,
+    },
 }
 
 /// Append-only log of (sim-time ns, event).
@@ -66,6 +85,34 @@ impl EventLog {
             .iter()
             .filter_map(|(t, e)| match e {
                 VpeEvent::Offloaded { function, to } => Some((*t, *function, *to)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// All host-bounce events, in order.
+    pub fn bounces(&self) -> Vec<(u64, FunctionId, TargetId)> {
+        self.entries
+            .iter()
+            .filter_map(|(t, e)| match e {
+                VpeEvent::DispatchBounced { function, target, .. } => {
+                    Some((*t, *function, *target))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Execution windows of every retired shard: `(target, start_ns,
+    /// complete_ns)`, in retirement order — the data behind the
+    /// per-target serialization checks on the sharded path.
+    pub fn shard_windows(&self) -> Vec<(TargetId, u64, u64)> {
+        self.entries
+            .iter()
+            .filter_map(|(_, e)| match e {
+                VpeEvent::ShardRetired { target, start_ns, complete_ns, .. } => {
+                    Some((*target, *start_ns, *complete_ns))
+                }
                 _ => None,
             })
             .collect()

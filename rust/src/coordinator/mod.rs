@@ -8,10 +8,12 @@ pub mod policies_ext;
 pub mod policy;
 pub mod queue;
 pub mod scheduler;
+pub mod shard;
 pub mod trace;
 pub mod vpe;
 
 pub use events::{EventLog, VpeEvent};
 pub use policy::{BlindOffloadPolicy, Candidate, OffloadPolicy, PolicyAction};
 pub use queue::{DispatchQueue, TicketId};
+pub use shard::{PlanTarget, PlannedShard, ShardPlan};
 pub use vpe::{CallRecord, Vpe, VpeConfig};

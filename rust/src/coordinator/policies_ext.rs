@@ -231,6 +231,79 @@ impl OffloadPolicy for PredictivePolicy {
 }
 
 // ---------------------------------------------------------------------------
+// Fan-out (sharded dispatch as a policy action)
+// ---------------------------------------------------------------------------
+
+/// Configuration of [`FanOutPolicy`].
+#[derive(Debug, Clone, Copy)]
+pub struct FanOutConfig {
+    /// Host samples to observe before acting.
+    pub observe_window: u64,
+    /// A candidate joins the fan-out set when its predicted cost is
+    /// within this factor of the best candidate's.
+    pub spread: f64,
+    /// Maximum units to fan one call across.
+    pub max_width: usize,
+}
+
+impl Default for FanOutConfig {
+    fn default() -> Self {
+        FanOutConfig { observe_window: 5, spread: 8.0, max_width: 4 }
+    }
+}
+
+/// Chooses *fan-out* as an action alongside offload/revert: when the
+/// hottest function sees several comparably priced candidates, split its
+/// calls across them (HPA's "use all idle units") instead of committing
+/// to the single best.  With only one viable candidate it degrades to a
+/// plain blind offload.
+#[derive(Debug, Default)]
+pub struct FanOutPolicy {
+    cfg: FanOutConfig,
+    decided: HashMap<FunctionId, bool>,
+}
+
+impl FanOutPolicy {
+    pub fn new(cfg: FanOutConfig) -> Self {
+        FanOutPolicy { cfg, decided: HashMap::new() }
+    }
+}
+
+impl OffloadPolicy for FanOutPolicy {
+    fn name(&self) -> &'static str {
+        "fan-out"
+    }
+
+    fn decide(&mut self, ctx: &PolicyCtx<'_>) -> Option<PolicyAction> {
+        if self.decided.contains_key(&ctx.function) {
+            return None;
+        }
+        if ctx.is_hotspot.is_none()
+            || ctx.profile.count_on(TargetId::HOST) < self.cfg.observe_window
+        {
+            return None;
+        }
+        let best = ctx.candidates.first()?;
+        let comparable = ctx
+            .candidates
+            .iter()
+            .filter(|c| c.predicted_ns as f64 <= best.predicted_ns as f64 * self.cfg.spread)
+            .count();
+        self.decided.insert(ctx.function, true);
+        if comparable >= 2 {
+            Some(PolicyAction::FanOut { width: comparable.min(self.cfg.max_width) })
+        } else {
+            Some(PolicyAction::Offload { to: best.target })
+        }
+    }
+
+    fn on_forced_revert(&mut self, f: FunctionId) {
+        // The platform changed under us (unit failure): re-decide.
+        self.decided.remove(&f);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Epsilon-greedy bandit
 // ---------------------------------------------------------------------------
 
@@ -453,6 +526,34 @@ mod tests {
         let p = profile_with(&[100.0; 5], &[(dm3730::DSP, 20.0); 5]);
         let c = ctx(f, &p, dm3730::DSP, None, &cands, OpMix::integer_loop(), 1);
         assert_eq!(pol.decide(&c), Some(PolicyAction::Offload { to: gpu }));
+    }
+
+    #[test]
+    fn fan_out_policy_spreads_over_comparable_candidates() {
+        let mut pol = FanOutPolicy::default();
+        let f = FunctionId(0);
+        let hot = Some(Hotspot { function: f, cycle_share: 0.9 });
+        let cands = vec![
+            Candidate { target: dm3730::DSP, predicted_ns: 1000 },
+            Candidate { target: TargetId(2), predicted_ns: 1500 },
+            Candidate { target: TargetId(3), predicted_ns: 40_000 }, // priced out
+        ];
+        let p = profile_with(&[100.0; 6], &[]);
+        let c = ctx(f, &p, TargetId::HOST, hot, &cands, OpMix::integer_loop(), 1);
+        assert_eq!(pol.decide(&c), Some(PolicyAction::FanOut { width: 2 }));
+        // One decision per function.
+        assert_eq!(pol.decide(&c), None);
+    }
+
+    #[test]
+    fn fan_out_policy_degrades_to_offload_with_one_candidate() {
+        let mut pol = FanOutPolicy::default();
+        let f = FunctionId(1);
+        let hot = Some(Hotspot { function: f, cycle_share: 0.9 });
+        let cands = dsp_candidates();
+        let p = profile_with(&[100.0; 6], &[]);
+        let c = ctx(f, &p, TargetId::HOST, hot, &cands, OpMix::integer_loop(), 1);
+        assert_eq!(pol.decide(&c), Some(PolicyAction::Offload { to: dm3730::DSP }));
     }
 
     #[test]

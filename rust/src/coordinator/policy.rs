@@ -63,6 +63,11 @@ impl PolicyCtx<'_> {
 pub enum PolicyAction {
     Offload { to: TargetId },
     Revert { reason: RevertReason },
+    /// Fan subsequent calls of the function out across up to `width`
+    /// units at once (the sharded dispatch path,
+    /// [`super::shard`]), instead of moving it to a single unit.
+    /// Reverting clears the fan-out again.
+    FanOut { width: usize },
 }
 
 /// An off-load decision policy.

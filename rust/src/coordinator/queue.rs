@@ -32,6 +32,22 @@ impl std::fmt::Display for TicketId {
     }
 }
 
+/// Membership of an in-flight dispatch in a sharded fan-out group: one
+/// logical call split into `of` concurrent shards (see
+/// [`super::shard`]), each covering output units `[start, end)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSlice {
+    /// Group id (one per sharded call).
+    pub group: u64,
+    /// This shard's index within the group.
+    pub index: usize,
+    /// Total shards in the group.
+    pub of: usize,
+    /// Output-unit range this shard computes.
+    pub start: usize,
+    pub end: usize,
+}
+
 /// One dispatched-but-not-yet-retired call.
 #[derive(Debug)]
 pub struct InFlight {
@@ -51,6 +67,9 @@ pub struct InFlight {
     pub exec_ns: u64,
     /// Parameter block staged in the shared region, freed at retirement.
     pub staged: Option<Allocation>,
+    /// Set when this dispatch is one shard of a fanned-out call; the
+    /// coordinator retires the group as one aggregate record.
+    pub shard: Option<ShardSlice>,
 }
 
 /// Completion-ordered queue of in-flight dispatches.
@@ -76,7 +95,13 @@ impl DispatchQueue {
     }
 
     /// Enqueue a dispatch.
+    ///
+    /// A zero-length dispatch (`exec_ns == 0`, i.e. `complete == start`)
+    /// is rejected outright: it would degenerate EWMA and speedup ratios
+    /// downstream, so the submit path clamps to ≥ 1 ns and this assert
+    /// keeps the invariant honest.
     pub fn push(&mut self, call: InFlight) {
+        assert!(call.exec_ns >= 1, "zero-length dispatch: exec_ns must be >= 1 ns");
         debug_assert!(call.complete_ns >= call.start_ns);
         debug_assert!(call.start_ns >= call.issue_ns);
         self.inflight.push(call);
@@ -144,8 +169,16 @@ mod tests {
             complete_ns: start + exec,
             exec_ns: exec,
             staged: None,
+            shard: None,
         });
         ticket
+    }
+
+    #[test]
+    #[should_panic(expected = "zero-length dispatch")]
+    fn zero_length_dispatches_are_rejected() {
+        let mut q = DispatchQueue::new();
+        call(&mut q, dm3730::DSP, 0, 0, 0);
     }
 
     #[test]

@@ -1,0 +1,384 @@
+//! The sharded fan-out planner: split one call's output units across
+//! several compute units, sized by the cost model and the current
+//! dispatch-queue state.
+//!
+//! HPA (Delporte et al., 2015) argues the opportunistic runtime should
+//! exploit *all* idle units, not just the single best one; Tornado shows
+//! task-graph fan-out across heterogeneous devices is where managed
+//! runtimes win.  This planner is the sizing half of that idea: given
+//! the per-target `ns/item` rates, fixed dispatch overheads, and each
+//! unit's current backlog (what the queue already promised it), it
+//! water-fills work so every participating unit finishes at the same
+//! time — the minimum-makespan split for a linear cost model:
+//!
+//! ```text
+//!   T = (W + Σ_t o_t · s_t) / Σ_t s_t     where s_t = 1 / rate_t (items/ns)
+//!   w_t = (T − o_t) · s_t                  with  o_t = overhead + backlog
+//! ```
+//!
+//! The participant set is built greedily: start from the best single
+//! unit (fixed costs and backlog included) and add whichever unit most
+//! reduces the equalized makespan, up to the width cap.  Units whose
+//! fixed cost `o_t` alone exceeds the equalized makespan would be
+//! assigned negative work: they are evicted and the system re-solved,
+//! so a slow or congested unit never degrades the plan (nor crowds an
+//! idle one out of a width-capped set).  The continuous assignment is
+//! then quantized to whole output units (matmul rows, conv2d rows,
+//! element ranges) by largest remainder.
+//!
+//! The planner assigns at most one shard per target — per-target
+//! serialization is the queue's invariant, so two shards on one unit
+//! would just serialize anyway.
+
+use crate::platform::TargetId;
+
+/// One dispatchable unit, as the coordinator prices it for this call.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanTarget {
+    pub target: TargetId,
+    /// Health-derated compute rate for this workload, ns per item.
+    pub rate_ns_per_item: f64,
+    /// Fixed dispatch overhead of one shard on this unit, ns (0 for the
+    /// host).
+    pub overhead_ns: u64,
+    /// How long the unit stays busy with already-queued dispatches, ns
+    /// (`TargetScheduler::busy_until − now`).
+    pub backlog_ns: u64,
+}
+
+impl PlanTarget {
+    fn fixed_ns(&self) -> f64 {
+        self.overhead_ns.saturating_add(self.backlog_ns) as f64
+    }
+}
+
+/// One planned shard: output units `[start, end)` on `target`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlannedShard {
+    pub target: TargetId,
+    pub start: usize,
+    pub end: usize,
+    /// Predicted completion offset from issue (fixed costs + compute).
+    pub predicted_ns: u64,
+}
+
+/// A fan-out plan over one call's output units.
+#[derive(Debug, Clone, Default)]
+pub struct ShardPlan {
+    /// Total output units of the call being split.
+    pub units: usize,
+    /// Contiguous shards tiling `[0, units)`, in assignment order.
+    pub shards: Vec<PlannedShard>,
+    /// Predicted completion of the slowest shard, ns from issue.
+    pub makespan_ns: u64,
+}
+
+impl ShardPlan {
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Does this plan actually fan out (≥ 2 shards)?
+    pub fn is_fan_out(&self) -> bool {
+        self.shards.len() >= 2
+    }
+}
+
+/// Equalized makespan for a candidate set (see module docs).
+fn solve_makespan(total_items: f64, ts: &[PlanTarget]) -> f64 {
+    let mut speed_sum = 0.0;
+    let mut fixed_scaled = 0.0;
+    for t in ts {
+        let s = 1.0 / t.rate_ns_per_item;
+        speed_sum += s;
+        fixed_scaled += t.fixed_ns() * s;
+    }
+    (total_items + fixed_scaled) / speed_sum
+}
+
+/// Equalize a candidate set, iteratively evicting units whose fixed
+/// costs alone meet the makespan (they would get zero or negative
+/// work).  Returns the makespan and the surviving set.
+fn solve_set(total_items: f64, mut ts: Vec<PlanTarget>) -> (f64, Vec<PlanTarget>) {
+    let mut t_ns = solve_makespan(total_items, &ts);
+    while ts.len() > 1 {
+        let worst = ts
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.fixed_ns() >= t_ns)
+            .max_by(|(_, a), (_, b)| a.fixed_ns().total_cmp(&b.fixed_ns()))
+            .map(|(i, _)| i);
+        match worst {
+            Some(i) => {
+                ts.remove(i);
+                t_ns = solve_makespan(total_items, &ts);
+            }
+            None => break,
+        }
+    }
+    (t_ns, ts)
+}
+
+/// Plan a fan-out of `units` output units (`items_per_unit` cost-model
+/// items each) across `targets`, using at most `max_width` of them.
+///
+/// Returns an empty plan when there is nothing to split (no units, no
+/// targets) and a single-shard plan when fanning out would not help —
+/// callers fall back to the ordinary dispatch path via
+/// [`ShardPlan::is_fan_out`].
+pub fn plan(
+    units: usize,
+    items_per_unit: f64,
+    targets: &[PlanTarget],
+    max_width: usize,
+) -> ShardPlan {
+    if units == 0 || targets.is_empty() || max_width == 0 || items_per_unit <= 0.0 {
+        return ShardPlan::empty();
+    }
+    let pool: Vec<PlanTarget> = targets
+        .iter()
+        .copied()
+        .filter(|t| t.rate_ns_per_item > 0.0)
+        .collect();
+    if pool.is_empty() {
+        return ShardPlan::empty();
+    }
+    let width = max_width.min(units);
+    let total_items = items_per_unit * units as f64;
+
+    // Greedy marginal-makespan selection: start from the best single
+    // unit (fixed costs and backlog included) and keep adding whichever
+    // excluded unit most reduces the equalized makespan, re-solving
+    // with the eviction rule each time — so a congested fast unit never
+    // crowds an idle slower one out of a width-capped plan; joining a
+    // better set can also evict it.  Stops at `width` shards or when no
+    // addition improves the makespan.
+    let mut ts: Vec<PlanTarget> = Vec::new();
+    let mut t_ns = f64::INFINITY;
+    while ts.len() < width {
+        let mut best: Option<(f64, Vec<PlanTarget>)> = None;
+        for c in &pool {
+            if ts.iter().any(|t| t.target == c.target) {
+                continue;
+            }
+            let mut cand = ts.clone();
+            cand.push(*c);
+            let (t, set) = solve_set(total_items, cand);
+            if best.as_ref().map_or(true, |(bt, _)| t < *bt) {
+                best = Some((t, set));
+            }
+        }
+        match best {
+            Some((t, set)) if t < t_ns => {
+                t_ns = t;
+                ts = set;
+            }
+            _ => break,
+        }
+    }
+
+    // Continuous assignment in output units, then largest-remainder
+    // quantization so the shards tile [0, units) exactly.
+    let ideal: Vec<f64> = ts
+        .iter()
+        .map(|t| (t_ns - t.fixed_ns()).max(0.0) / t.rate_ns_per_item / items_per_unit)
+        .collect();
+    let mut assigned: Vec<usize> = ideal.iter().map(|w| w.floor() as usize).collect();
+    // Never over-assign (floor can still overshoot by rounding when a
+    // single unit holds everything).
+    let mut sum: usize = assigned.iter().sum();
+    while sum > units {
+        if let Some(i) = (0..assigned.len()).rev().find(|&i| assigned[i] > 0) {
+            assigned[i] -= 1;
+            sum -= 1;
+        } else {
+            break;
+        }
+    }
+    // Distribute the remainder by largest fractional part (ties to the
+    // faster unit, which sorts first).
+    let mut order: Vec<usize> = (0..ts.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = ideal[a] - ideal[a].floor();
+        let fb = ideal[b] - ideal[b].floor();
+        fb.total_cmp(&fa).then(a.cmp(&b))
+    });
+    let mut left = units - sum;
+    for &i in order.iter().cycle().take(order.len().max(1) * (left / ts.len().max(1) + 2)) {
+        if left == 0 {
+            break;
+        }
+        assigned[i] += 1;
+        left -= 1;
+    }
+
+    // Materialize contiguous ranges, skipping units that got nothing.
+    let mut shards = Vec::new();
+    let mut cursor = 0usize;
+    let mut makespan = 0u64;
+    for (t, &n_units) in ts.iter().zip(&assigned) {
+        if n_units == 0 {
+            continue;
+        }
+        let predicted =
+            (t.fixed_ns() + n_units as f64 * items_per_unit * t.rate_ns_per_item) as u64;
+        makespan = makespan.max(predicted);
+        shards.push(PlannedShard {
+            target: t.target,
+            start: cursor,
+            end: cursor + n_units,
+            predicted_ns: predicted,
+        });
+        cursor += n_units;
+    }
+    debug_assert_eq!(cursor, units, "shards must tile the output exactly");
+    ShardPlan { units, shards, makespan_ns: makespan }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::dm3730;
+
+    fn t(slot: u16, rate: f64, overhead: u64, backlog: u64) -> PlanTarget {
+        PlanTarget {
+            target: TargetId(slot),
+            rate_ns_per_item: rate,
+            overhead_ns: overhead,
+            backlog_ns: backlog,
+        }
+    }
+
+    fn covered(plan: &ShardPlan) -> usize {
+        let mut c = 0;
+        for s in &plan.shards {
+            assert_eq!(s.start, c, "shards must be contiguous");
+            assert!(s.end > s.start);
+            c = s.end;
+        }
+        c
+    }
+
+    #[test]
+    fn equal_units_split_evenly() {
+        let ts = [t(1, 1.0, 0, 0), t(2, 1.0, 0, 0)];
+        let p = plan(100, 10.0, &ts, usize::MAX);
+        assert_eq!(p.shards.len(), 2);
+        assert_eq!(covered(&p), 100);
+        assert_eq!(p.shards[0].end - p.shards[0].start, 50);
+        assert_eq!(p.shards[1].end - p.shards[1].start, 50);
+    }
+
+    #[test]
+    fn faster_units_get_proportionally_more() {
+        // 3x faster unit gets ~3x the rows.
+        let ts = [t(1, 1.0, 0, 0), t(2, 3.0, 0, 0)];
+        let p = plan(400, 10.0, &ts, usize::MAX);
+        assert_eq!(covered(&p), 400);
+        let fast = p.shards.iter().find(|s| s.target == TargetId(1)).unwrap();
+        let slow = p.shards.iter().find(|s| s.target == TargetId(2)).unwrap();
+        assert_eq!(fast.end - fast.start, 300);
+        assert_eq!(slow.end - slow.start, 100);
+    }
+
+    #[test]
+    fn makespan_beats_the_best_single_unit() {
+        let ts = [t(1, 2.0, 1000, 0), t(2, 3.0, 1000, 0), t(3, 4.0, 1000, 0)];
+        let p = plan(1000, 100.0, &ts, usize::MAX);
+        let best_single = 1000 + (1000.0 * 100.0 * 2.0) as u64;
+        assert!(p.is_fan_out());
+        assert!(
+            p.makespan_ns < best_single,
+            "fan-out {} must beat single {}",
+            p.makespan_ns,
+            best_single
+        );
+    }
+
+    #[test]
+    fn overloaded_unit_is_dropped() {
+        // The second unit's fixed costs exceed any sensible makespan:
+        // the whole call lands on the first.
+        let ts = [t(1, 1.0, 0, 0), t(2, 1.0, u64::MAX / 4, 0)];
+        let p = plan(100, 1.0, &ts, usize::MAX);
+        assert_eq!(p.shards.len(), 1);
+        assert_eq!(p.shards[0].target, TargetId(1));
+        assert_eq!(covered(&p), 100);
+        assert!(!p.is_fan_out());
+    }
+
+    #[test]
+    fn backlog_shifts_work_away() {
+        // Same rates, but unit 2 has a long queue: unit 1 gets more.
+        let ts = [t(1, 1.0, 0, 0), t(2, 1.0, 0, 500_000)];
+        let p = plan(1000, 1000.0, &ts, usize::MAX);
+        assert_eq!(covered(&p), 1000);
+        let free = p.shards.iter().find(|s| s.target == TargetId(1)).unwrap();
+        let busy = p.shards.iter().find(|s| s.target == TargetId(2)).unwrap();
+        assert!(
+            free.end - free.start > busy.end - busy.start,
+            "{free:?} vs {busy:?}"
+        );
+    }
+
+    #[test]
+    fn width_cap_keeps_the_fastest() {
+        let ts = [t(1, 4.0, 0, 0), t(2, 1.0, 0, 0), t(3, 2.0, 0, 0)];
+        let p = plan(100, 10.0, &ts, 2);
+        assert_eq!(p.shards.len(), 2);
+        let used: Vec<TargetId> = p.shards.iter().map(|s| s.target).collect();
+        assert!(used.contains(&TargetId(2)));
+        assert!(used.contains(&TargetId(3)));
+        assert_eq!(covered(&p), 100);
+    }
+
+    #[test]
+    fn congested_fast_unit_does_not_crowd_out_idle_units() {
+        // Width-capped at 2 with the fastest unit deeply backlogged:
+        // the plan must fan out over the two idle units rather than
+        // shortlist the congested one and collapse to a single shard.
+        let ts = [
+            t(1, 1.0, 0, 10_000_000_000), // fastest rate, huge backlog
+            t(2, 1.1, 0, 0),
+            t(3, 2.0, 0, 0),
+        ];
+        let p = plan(1000, 100.0, &ts, 2);
+        assert!(p.is_fan_out(), "congestion must not disable fan-out: {p:?}");
+        let used: Vec<TargetId> = p.shards.iter().map(|s| s.target).collect();
+        assert!(
+            used.contains(&TargetId(2)) && used.contains(&TargetId(3)),
+            "{used:?}"
+        );
+        assert_eq!(covered(&p), 1000);
+    }
+
+    #[test]
+    fn degenerate_inputs_give_empty_plans() {
+        assert!(plan(0, 1.0, &[t(1, 1.0, 0, 0)], 4).shards.is_empty());
+        assert!(plan(10, 1.0, &[], 4).shards.is_empty());
+        assert!(plan(10, 1.0, &[t(1, 1.0, 0, 0)], 0).shards.is_empty());
+        assert!(plan(10, 0.0, &[t(1, 1.0, 0, 0)], 4).shards.is_empty());
+    }
+
+    #[test]
+    fn never_more_shards_than_units() {
+        let ts = [t(1, 1.0, 0, 0), t(2, 1.0, 0, 0), t(3, 1.0, 0, 0)];
+        let p = plan(2, 5.0, &ts, usize::MAX);
+        assert!(p.shards.len() <= 2);
+        assert_eq!(covered(&p), 2);
+    }
+
+    #[test]
+    fn dm3730_pair_prefers_the_dsp_for_matmul() {
+        // The calibrated DM3730 rates: DSP ~40x faster; the host still
+        // picks up a sliver of rows when its fixed cost is zero.
+        let ts = [
+            t(dm3730::ARM.0, 131.856, 0, 0),
+            t(dm3730::DSP.0, 3.3272, 100_000_000, 0),
+        ];
+        let p = plan(500, 250_000.0, &ts, usize::MAX);
+        assert_eq!(covered(&p), 500);
+        let dsp = p.shards.iter().find(|s| s.target == dm3730::DSP).unwrap();
+        assert!(dsp.end - dsp.start > 450, "DSP must take most rows: {p:?}");
+    }
+}

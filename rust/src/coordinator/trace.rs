@@ -3,10 +3,22 @@
 //!
 //! The replay engine answers "what would policy P have cost on this
 //! exact run?" without re-simulating the platform: each trace entry
-//! carries both targets' execution times for that call (the cost model
-//! is deterministic given the workload scale), so any policy's decision
-//! sequence can be re-priced exactly.  This is the ablation machinery
-//! behind `benches/policies.rs` and the `vpe replay` CLI verb.
+//! carries every registered unit's noise-free execution price for that
+//! call (the cost model is deterministic given the workload scale), so
+//! any policy's decision sequence can be re-priced exactly.  This is the
+//! ablation machinery behind `benches/policies.rs` and the `vpe replay`
+//! CLI verb.
+//!
+//! ## Formats
+//!
+//! - **`vpe-trace-v2`** (written): `"on"` is the numeric registry slot
+//!   the call executed on and `"prices"` lists `[slot, ns]` pairs for
+//!   every unit the cost model could price — an N-target run round-trips
+//!   with every unit's identity and price intact.
+//! - **`vpe-trace-v1`** (read-compat): the original DM3730-pair format
+//!   (`"on": "arm"|"dsp"`, `arm_ns`/`dsp_ns` fields).  v1 used
+//!   `u64::MAX` as an "unpriceable" sentinel for the DSP column; those
+//!   entries load with the price simply absent.
 
 use std::collections::HashMap;
 use std::fmt::Write as _;
@@ -23,8 +35,8 @@ use crate::workloads::WorkloadKind;
 use super::policy::{Candidate, OffloadPolicy, PolicyAction, PolicyCtx};
 use super::vpe::CallRecord;
 
-/// One recorded call with both targets' (noise-free) prices.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// One recorded call with the whole platform's (noise-free) prices.
+#[derive(Debug, Clone, PartialEq)]
 pub struct TraceEntry {
     pub function: u32,
     pub kind: WorkloadKind,
@@ -32,9 +44,21 @@ pub struct TraceEntry {
     pub executed_on: TargetId,
     pub exec_ns: u64,
     pub profiling_ns: u64,
-    /// Counterfactual prices for the replay engine.
-    pub arm_ns: u64,
-    pub dsp_ns: u64,
+    /// Counterfactual price per registered unit (registry slot, ns),
+    /// host first; units the cost model cannot price are absent.
+    pub prices: Vec<(TargetId, u64)>,
+}
+
+impl TraceEntry {
+    /// The recorded price of this call on `t`, if the unit was priceable.
+    pub fn price_on(&self, t: TargetId) -> Option<u64> {
+        self.prices.iter().find(|(id, _)| *id == t).map(|(_, ns)| *ns)
+    }
+
+    /// The host's recorded price.
+    pub fn host_ns(&self) -> Option<u64> {
+        self.price_on(TargetId::HOST)
+    }
 }
 
 /// A recorded run.
@@ -67,17 +91,16 @@ fn kind_from(s: &str) -> Result<WorkloadKind> {
 }
 
 impl Trace {
-    /// Record an entry from a live [`CallRecord`] plus the two
+    /// Record an entry from a live [`CallRecord`] plus the platform's
     /// counterfactual prices (the coordinator knows its own cost model).
-    pub fn push(&mut self, rec: &CallRecord, kind: WorkloadKind, arm_ns: u64, dsp_ns: u64) {
+    pub fn push(&mut self, rec: &CallRecord, kind: WorkloadKind, prices: Vec<(TargetId, u64)>) {
         self.entries.push(TraceEntry {
             function: rec.function.0,
             kind,
             executed_on: rec.target,
             exec_ns: rec.exec_ns,
             profiling_ns: rec.profiling_ns,
-            arm_ns,
-            dsp_ns,
+            prices,
         });
     }
 
@@ -88,20 +111,25 @@ impl Trace {
 
     // -- persistence --------------------------------------------------------
 
-    /// Serialize as JSON.
+    /// Serialize as JSON (`vpe-trace-v2`).
     pub fn to_json(&self) -> String {
-        let mut out = String::from("{\"format\":\"vpe-trace-v1\",\"entries\":[\n");
+        let mut out = String::from("{\"format\":\"vpe-trace-v2\",\"entries\":[\n");
         for (i, e) in self.entries.iter().enumerate() {
+            let prices = e
+                .prices
+                .iter()
+                .map(|(t, ns)| format!("[{},{}]", t.0, ns))
+                .collect::<Vec<_>>()
+                .join(",");
             let _ = write!(
                 out,
-                "{{\"f\":{},\"kind\":\"{}\",\"on\":\"{}\",\"exec_ns\":{},\"prof_ns\":{},\"arm_ns\":{},\"dsp_ns\":{}}}{}\n",
+                "{{\"f\":{},\"kind\":\"{}\",\"on\":{},\"exec_ns\":{},\"prof_ns\":{},\"prices\":[{}]}}{}\n",
                 e.function,
                 kind_name(e.kind),
-                if e.executed_on.is_host() { "arm" } else { "dsp" },
+                e.executed_on.0,
                 e.exec_ns,
                 e.profiling_ns,
-                e.arm_ns,
-                e.dsp_ns,
+                prices,
                 if i + 1 < self.entries.len() { "," } else { "" },
             );
         }
@@ -109,12 +137,14 @@ impl Trace {
         out
     }
 
-    /// Parse from JSON.
+    /// Parse from JSON — v2, with v1 read-compatibility.
     pub fn from_json(text: &str) -> Result<Self> {
         let j = json::parse(text)?;
-        if j.req("format")?.as_str() != Some("vpe-trace-v1") {
-            return Err(Error::Parse("not a vpe-trace-v1 document".into()));
-        }
+        let v1 = match j.req("format")?.as_str() {
+            Some("vpe-trace-v2") => false,
+            Some("vpe-trace-v1") => true,
+            _ => return Err(Error::Parse("not a vpe-trace-v1/v2 document".into())),
+        };
         let entries = j
             .req("entries")?
             .as_arr()
@@ -128,20 +158,61 @@ impl Trace {
                         .map(|v| v as u64)
                         .ok_or_else(|| Error::Parse(format!("bad '{k}'")))
                 };
+                let (executed_on, prices) = if v1 {
+                    let on = match e.req("on")?.as_str() {
+                        Some("arm") => dm3730::ARM,
+                        Some("dsp") => dm3730::DSP,
+                        _ => return Err(Error::Parse("bad 'on'".into())),
+                    };
+                    // v1 recorded only the DM3730 pair and used u64::MAX
+                    // as an "unpriceable" sentinel — dropped here.
+                    let mut prices = vec![(dm3730::ARM, num("arm_ns")?)];
+                    let dsp = num("dsp_ns")?;
+                    if dsp != u64::MAX {
+                        prices.push((dm3730::DSP, dsp));
+                    }
+                    (on, prices)
+                } else {
+                    let on = TargetId(
+                        e.req("on")?
+                            .as_usize()
+                            .filter(|v| *v <= u16::MAX as usize)
+                            .ok_or_else(|| Error::Parse("bad 'on'".into()))?
+                            as u16,
+                    );
+                    let prices = e
+                        .req("prices")?
+                        .as_arr()
+                        .ok_or_else(|| Error::Parse("'prices' must be an array".into()))?
+                        .iter()
+                        .map(|p| -> Result<(TargetId, u64)> {
+                            let pair =
+                                p.as_arr().filter(|a| a.len() == 2).ok_or_else(|| {
+                                    Error::Parse("price must be a [slot, ns] pair".into())
+                                })?;
+                            let slot = pair[0]
+                                .as_usize()
+                                .filter(|v| *v <= u16::MAX as usize)
+                                .ok_or_else(|| Error::Parse("bad price slot".into()))?;
+                            let ns = pair[1]
+                                .as_f64()
+                                .filter(|v| *v >= 0.0)
+                                .map(|v| v as u64)
+                                .ok_or_else(|| Error::Parse("bad price ns".into()))?;
+                            Ok((TargetId(slot as u16), ns))
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    (on, prices)
+                };
                 Ok(TraceEntry {
                     function: num("f")? as u32,
                     kind: kind_from(
                         e.req("kind")?.as_str().ok_or_else(|| Error::Parse("bad kind".into()))?,
                     )?,
-                    executed_on: match e.req("on")?.as_str() {
-                        Some("arm") => dm3730::ARM,
-                        Some("dsp") => dm3730::DSP,
-                        _ => return Err(Error::Parse("bad 'on'".into())),
-                    },
+                    executed_on,
                     exec_ns: num("exec_ns")?,
                     profiling_ns: num("prof_ns")?,
-                    arm_ns: num("arm_ns")?,
-                    dsp_ns: num("dsp_ns")?,
+                    prices,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -162,8 +233,10 @@ impl Trace {
 pub struct ReplayOutcome {
     pub policy: String,
     pub total_ms: f64,
-    pub dsp_calls: usize,
-    pub arm_calls: usize,
+    /// Calls the replayed decision sequence priced on the host.
+    pub host_calls: usize,
+    /// Calls priced on any non-host unit.
+    pub remote_calls: usize,
     pub offloads: usize,
     pub reverts: usize,
 }
@@ -173,7 +246,9 @@ pub struct ReplayOutcome {
 /// The replay mirrors the live coordinator's loop: a per-function
 /// profile accumulates the *replayed* observations, a simple dominant-
 /// cycles hotspot rule nominates candidates, and each call executes on
-/// the target the dispatch slot currently points at.
+/// the target the dispatch slot currently points at.  The candidate
+/// slice spans every unit the entry recorded a price for — an N-target
+/// trace replays over the full platform, not a hard-wired pair.
 pub fn replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> ReplayOutcome {
     let mut module = IrModule::new("replay");
     let mut targets: HashMap<u32, TargetId> = HashMap::new();
@@ -191,8 +266,8 @@ pub fn replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> ReplayOutcome {
     let mut outcome = ReplayOutcome {
         policy: policy.name().to_string(),
         total_ms: 0.0,
-        dsp_calls: 0,
-        arm_calls: 0,
+        host_calls: 0,
+        remote_calls: 0,
         offloads: 0,
         reverts: 0,
     };
@@ -200,12 +275,15 @@ pub fn replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> ReplayOutcome {
     for e in &trace.entries {
         let fid = id_map[&e.function];
         let target = targets[&e.function];
-        let exec_ns = if target.is_host() { e.arm_ns } else { e.dsp_ns };
+        // Price on the slot's current target; a target the trace cannot
+        // price (possible only in hand-built traces) falls back to the
+        // recorded execution time.
+        let exec_ns = e.price_on(target).unwrap_or(e.exec_ns);
         outcome.total_ms += exec_ns as f64 / 1e6;
         if target.is_host() {
-            outcome.arm_calls += 1;
+            outcome.host_calls += 1;
         } else {
-            outcome.dsp_calls += 1;
+            outcome.remote_calls += 1;
         }
         // Update the replayed profile.
         let p = profiles.entry(e.function).or_default();
@@ -218,10 +296,15 @@ pub fn replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> ReplayOutcome {
 
         let share = p.total_cycles as f64 / total_cycles.max(1.0);
         let irf = module.function(fid).expect("registered");
-        // The recorded counterfactual prices cover the DM3730 pair, so
-        // the replayed platform exposes one remote candidate.
-        let candidates =
-            [Candidate { target: dm3730::DSP, predicted_ns: e.dsp_ns }];
+        // Every priced non-host unit is a candidate, best-first — the
+        // full slice the live coordinator would have ranked.
+        let mut candidates: Vec<Candidate> = e
+            .prices
+            .iter()
+            .filter(|(t, _)| !t.is_host())
+            .map(|(t, ns)| Candidate { target: *t, predicted_ns: *ns })
+            .collect();
+        candidates.sort_by_key(|c| (c.predicted_ns, c.target));
         let ctx = PolicyCtx {
             function: fid,
             profile: p,
@@ -241,7 +324,9 @@ pub fn replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> ReplayOutcome {
                 targets.insert(e.function, TargetId::HOST);
                 outcome.reverts += 1;
             }
-            None => {}
+            // The replay engine prices one call on one target; fan-out
+            // re-pricing would need per-shard counterfactuals.
+            Some(PolicyAction::FanOut { .. }) | None => {}
         }
     }
     outcome
@@ -268,8 +353,10 @@ mod tests {
                 executed_on: dm3730::ARM,
                 exec_ns: arm_ms * 1_000_000,
                 profiling_ns: 0,
-                arm_ns: arm_ms * 1_000_000,
-                dsp_ns: dsp_ms * 1_000_000,
+                prices: vec![
+                    (dm3730::ARM, arm_ms * 1_000_000),
+                    (dm3730::DSP, dsp_ms * 1_000_000),
+                ],
             });
         }
         t
@@ -283,10 +370,61 @@ mod tests {
     }
 
     #[test]
-    fn replay_never_equals_all_arm() {
+    fn n_target_roundtrip_preserves_every_unit() {
+        // The v1 bug: any non-host unit serialized as "dsp" and loaded
+        // back as slot 1.  v2 must keep slot 3's identity and price.
+        let mut t = Trace::default();
+        t.entries.push(TraceEntry {
+            function: 2,
+            kind: WorkloadKind::Conv2d,
+            executed_on: TargetId(3),
+            exec_ns: 42_000_000,
+            profiling_ns: 1_000_000,
+            prices: vec![
+                (TargetId(0), 400_000_000),
+                (TargetId(1), 120_000_000),
+                (TargetId(2), 90_000_000),
+                (TargetId(3), 41_500_000),
+            ],
+        });
+        let back = Trace::from_json(&t.to_json()).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(back.entries[0].executed_on, TargetId(3));
+        assert_eq!(back.entries[0].price_on(TargetId(3)), Some(41_500_000));
+        assert_eq!(back.entries[0].price_on(TargetId(2)), Some(90_000_000));
+    }
+
+    #[test]
+    fn v1_documents_still_load() {
+        let doc = r#"{"format":"vpe-trace-v1","entries":[
+{"f":0,"kind":"matmul","on":"arm","exec_ns":100,"prof_ns":5,"arm_ns":100,"dsp_ns":50},
+{"f":0,"kind":"matmul","on":"dsp","exec_ns":48,"prof_ns":5,"arm_ns":100,"dsp_ns":50}]}"#;
+        let t = Trace::from_json(doc).unwrap();
+        assert_eq!(t.entries.len(), 2);
+        assert_eq!(t.entries[0].executed_on, dm3730::ARM);
+        assert_eq!(t.entries[1].executed_on, dm3730::DSP);
+        assert_eq!(t.entries[0].price_on(dm3730::DSP), Some(50));
+        assert_eq!(t.entries[0].host_ns(), Some(100));
+    }
+
+    #[test]
+    fn v1_unpriceable_sentinel_is_dropped() {
+        let doc = format!(
+            r#"{{"format":"vpe-trace-v1","entries":[
+{{"f":0,"kind":"fft","on":"arm","exec_ns":100,"prof_ns":0,"arm_ns":100,"dsp_ns":{}}}]}}"#,
+            u64::MAX
+        );
+        let t = Trace::from_json(&doc).unwrap();
+        assert_eq!(t.entries[0].price_on(dm3730::DSP), None, "sentinel must not leak");
+        assert_eq!(t.entries[0].host_ns(), Some(100));
+    }
+
+    #[test]
+    fn replay_never_equals_all_host() {
         let t = synthetic_trace(WorkloadKind::Matmul, 100, 10, 20);
         let out = replay(&t, &mut NeverOffloadPolicy);
-        assert_eq!(out.arm_calls, 20);
+        assert_eq!(out.host_calls, 20);
+        assert_eq!(out.remote_calls, 0);
         assert!((out.total_ms - 2000.0).abs() < 1e-9);
     }
 
@@ -310,9 +448,67 @@ mod tests {
     }
 
     #[test]
+    fn replay_walks_all_recorded_units() {
+        // Three remote units; the second-best is the only one that beats
+        // the host, so blind offload must reach it through the ranking.
+        let mut t = Trace::default();
+        for _ in 0..30 {
+            t.entries.push(TraceEntry {
+                function: 0,
+                kind: WorkloadKind::Matmul,
+                executed_on: TargetId(0),
+                exec_ns: 100_000_000,
+                prices: vec![
+                    (TargetId(0), 100_000_000),
+                    (TargetId(1), 200_000_000), // slower than the host
+                    (TargetId(2), 10_000_000),  // the winner
+                    (TargetId(3), 300_000_000),
+                ],
+                profiling_ns: 0,
+            });
+        }
+        let blind = replay(&t, &mut BlindOffloadPolicy::default());
+        // Ranked best-first, slot 2 is trialed first and wins outright.
+        assert_eq!(blind.offloads, 1);
+        assert_eq!(blind.reverts, 0);
+        assert!(blind.remote_calls > 0);
+        assert!(
+            blind.total_ms < 30.0 * 100.0,
+            "must exploit the off-pair unit: {} ms",
+            blind.total_ms
+        );
+    }
+
+    #[test]
     fn bad_documents_are_rejected() {
         assert!(Trace::from_json("{}").is_err());
         assert!(Trace::from_json(r#"{"format":"vpe-trace-v1","entries":[{"f":0}]}"#).is_err());
+        assert!(Trace::from_json(r#"{"format":"vpe-trace-v2","entries":[{"f":0}]}"#).is_err());
         assert!(Trace::from_json(r#"{"format":"other","entries":[]}"#).is_err());
+        // v2 requires a numeric registry slot and [slot, ns] price pairs.
+        assert!(Trace::from_json(
+            r#"{"format":"vpe-trace-v2","entries":[
+{"f":0,"kind":"matmul","on":"dsp","exec_ns":1,"prof_ns":0,"prices":[]}]}"#
+        )
+        .is_err());
+        assert!(Trace::from_json(
+            r#"{"format":"vpe-trace-v2","entries":[
+{"f":0,"kind":"matmul","on":1,"exec_ns":1,"prof_ns":0,"prices":[[1]]}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn empty_price_lists_parse_and_replay_falls_back_to_recorded_time() {
+        // A priceless entry is degenerate but legal (hand-built traces):
+        // replay has no candidates and prices the call at its recorded
+        // execution time.
+        let doc = r#"{"format":"vpe-trace-v2","entries":[
+{"f":0,"kind":"matmul","on":0,"exec_ns":7000000,"prof_ns":0,"prices":[]}]}"#;
+        let t = Trace::from_json(doc).unwrap();
+        assert!(t.entries[0].prices.is_empty());
+        let out = replay(&t, &mut BlindOffloadPolicy::default());
+        assert_eq!(out.host_calls, 1);
+        assert!((out.total_ms - 7.0).abs() < 1e-9);
     }
 }

@@ -22,27 +22,29 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::jit::module::{FunctionId, IrFunction, IrModule};
 use crate::jit::symbols::DspToolchain;
 use crate::jit::wrapper::DispatchTable;
+use crate::platform::memory::Allocation;
 use crate::platform::registry::BuildKind;
-use crate::platform::{dm3730, Soc, TargetId};
+use crate::platform::{Soc, TargetId};
 use crate::profiler::counters::CounterSample;
 use crate::profiler::hotspot::HotspotDetector;
 use crate::profiler::sampler::{PerfSampler, SamplerConfig};
 use crate::runtime::backend::{ExecRequest, ExecutionBackend, SimBackend};
 use crate::sim::{SimClock, SimRng};
-use crate::workloads::{self, Tensor, WorkloadInstance, WorkloadKind};
+use crate::workloads::{self, PaperScale, Tensor, WorkloadInstance, WorkloadKind};
 
 use super::events::{EventLog, VpeEvent};
 use super::policy::{
     BlindOffloadConfig, BlindOffloadPolicy, Candidate, OffloadPolicy, PolicyAction, PolicyCtx,
 };
-use super::queue::{DispatchQueue, InFlight, TicketId};
+use super::queue::{DispatchQueue, InFlight, ShardSlice, TicketId};
 use super::scheduler::TargetScheduler;
+use super::shard::{self as shard_plan, PlanTarget, ShardPlan};
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -118,6 +120,11 @@ pub struct CallRecord {
     pub output_ok: Option<bool>,
     /// Policy action applied after this call, if any.
     pub action: Option<PolicyAction>,
+    /// Concurrent shards this call was split into (1 for an ordinary
+    /// dispatch; > 1 for a fanned-out call, where `target` is the
+    /// primary — widest — shard's unit and `exec_ns` the group
+    /// makespan).
+    pub shards: usize,
 }
 
 impl CallRecord {
@@ -148,6 +155,32 @@ struct Retired {
     output: Option<Tensor>,
 }
 
+/// Accumulator for one sharded call: folds per-shard retirements until
+/// the whole group is done, then becomes one aggregate [`CallRecord`].
+struct ShardGroup {
+    function: FunctionId,
+    iteration: u64,
+    /// The group's representative ticket (the first shard's); the
+    /// aggregate record retires under it.
+    first_ticket: TicketId,
+    issue_ns: u64,
+    of: usize,
+    done: usize,
+    min_start_ns: u64,
+    max_complete_ns: u64,
+    wall: Option<Duration>,
+    /// Target of the widest shard seen so far (the aggregate record's
+    /// "primary" target) and its width in output units.
+    primary: (TargetId, usize),
+    /// `(start, end, output)` per retired shard, for the reduction step
+    /// (empty when the config runs without numerics).
+    parts: Vec<(usize, usize, Tensor)>,
+    /// Caller-provided inputs (the `call_with` path); shards slice
+    /// these instead of the registered instance's inputs, and output
+    /// verification is the caller's responsibility.
+    custom: Option<Vec<Tensor>>,
+}
+
 /// The VPE coordinator.
 pub struct Vpe {
     cfg: VpeConfig,
@@ -167,6 +200,12 @@ pub struct Vpe {
     /// Records retired while waiting for another ticket (mixed
     /// `submit`/`call` usage); handed out by the next `drain`.
     completed: VecDeque<CallRecord>,
+    /// In-flight sharded groups, by group id.
+    groups: HashMap<u64, ShardGroup>,
+    next_group: u64,
+    /// Functions a policy chose to fan out, with the chosen width;
+    /// their `call`s route through the shard planner.
+    fanout: HashMap<FunctionId, usize>,
     events: EventLog,
     trace: Option<super::trace::Trace>,
 }
@@ -239,6 +278,9 @@ impl Vpe {
             scheduler: TargetScheduler::new(),
             queue: DispatchQueue::new(),
             completed: VecDeque::new(),
+            groups: HashMap::new(),
+            next_group: 0,
+            fanout: HashMap::new(),
             events: EventLog::new(),
             trace: None,
             cfg,
@@ -356,20 +398,67 @@ impl Vpe {
 
     /// Invoke function `f` once through its wrapper, synchronously: the
     /// dispatch is issued and retired before returning (the VPE hot
-    /// path, the paper's semantics).
+    /// path, the paper's semantics).  Functions a policy fanned out
+    /// ([`PolicyAction::FanOut`]) route through the shard planner
+    /// transparently.
     pub fn call(&mut self, f: FunctionId) -> Result<CallRecord> {
+        if self.fanout.contains_key(&f) {
+            return self.call_sharded(f);
+        }
         self.call_impl(f, None).map(|(rec, _)| rec)
+    }
+
+    /// Invoke `f` once as a *sharded* call: the planner splits the
+    /// call's output units across every worthwhile unit (cost model +
+    /// queue state, see [`super::shard`]), the shards run concurrently
+    /// through the dispatch queue, and a reduction step reassembles the
+    /// output and retires one aggregate record.  Falls back to a plain
+    /// synchronous call when fanning out would not help (one unit,
+    /// unshardable workload, tiny call).
+    pub fn call_sharded(&mut self, f: FunctionId) -> Result<CallRecord> {
+        self.call_sharded_impl(f, None).map(|(rec, _)| rec)
+    }
+
+    fn call_sharded_impl(
+        &mut self,
+        f: FunctionId,
+        custom_inputs: Option<&[Tensor]>,
+    ) -> Result<(CallRecord, Option<Tensor>)> {
+        let tickets = self.submit_sharded_impl(f, custom_inputs)?;
+        let want = *tickets
+            .first()
+            .ok_or_else(|| Error::Coordinator("empty shard submission".into()))?;
+        // A one-ticket result is the plain-dispatch fallback: hand the
+        // caller's inputs to the ordinary retirement path instead (a
+        // group carries them itself).
+        let plain_fallback = tickets.len() == 1;
+        loop {
+            let retired = self
+                .retire_earliest(
+                    plain_fallback.then_some(want),
+                    if plain_fallback { custom_inputs } else { None },
+                )?
+                .ok_or_else(|| Error::Coordinator("sharded submission vanished".into()))?;
+            if retired.ticket == want {
+                return Ok((retired.record, retired.output));
+            }
+            self.completed.push_back(retired.record);
+        }
     }
 
     /// Invoke `f` with caller-provided inputs (e.g. a fresh video frame)
     /// and get the computed output back.  Shapes must match the
     /// registered instance's artifact; output verification is the
-    /// caller's responsibility.
+    /// caller's responsibility.  A fanned-out function shards the
+    /// caller's inputs exactly like its registered ones.
     pub fn call_with(
         &mut self,
         f: FunctionId,
         inputs: &[Tensor],
     ) -> Result<(CallRecord, Option<Tensor>)> {
+        if self.fanout.contains_key(&f) {
+            return self.call_sharded_impl(f, Some(inputs));
+        }
         self.call_impl(f, Some(inputs))
     }
 
@@ -377,9 +466,166 @@ impl Vpe {
     /// overhead is charged to the clock and the call becomes an
     /// in-flight event.  Dispatches to different targets overlap; a
     /// target's own dispatches serialize (queued starts).  Retire with
-    /// [`Vpe::drain`].
+    /// [`Vpe::drain`].  Functions a policy fanned out route through the
+    /// shard planner; the returned ticket is the group's representative
+    /// (the aggregate record retires under it).
     pub fn submit(&mut self, f: FunctionId) -> Result<TicketId> {
+        if self.fanout.contains_key(&f) {
+            let tickets = self.submit_sharded(f)?;
+            return Ok(tickets[0]);
+        }
         self.submit_impl(f)
+    }
+
+    /// Issue one *sharded* dispatch of `f` without waiting: the planned
+    /// shards all become in-flight events at once (one per target,
+    /// per-target serialization and host-bounce rules unchanged) and the
+    /// group retires as a single aggregate record under the first
+    /// returned ticket.  Falls back to a one-ticket plain submit when
+    /// the plan does not fan out.
+    pub fn submit_sharded(&mut self, f: FunctionId) -> Result<Vec<TicketId>> {
+        self.submit_sharded_impl(f, None)
+    }
+
+    fn submit_sharded_impl(
+        &mut self,
+        f: FunctionId,
+        custom_inputs: Option<&[Tensor]>,
+    ) -> Result<Vec<TicketId>> {
+        self.finalize()?;
+        let width = self.fanout.get(&f).copied().unwrap_or(usize::MAX);
+        let plan = self.plan_fanout(f, width, custom_inputs)?;
+        if !plan.is_fan_out() {
+            return Ok(vec![self.submit_impl(f)?]);
+        }
+        let (kind, scale) = {
+            let binding = self.binding(f)?;
+            (binding.instance.kind, binding.instance.scale)
+        };
+
+        // Price every shard up front so nothing below can fail half-way
+        // through queueing the group.
+        let mut base: Vec<u64> = Vec::with_capacity(plan.shards.len());
+        for s in &plan.shards {
+            let shard_scale =
+                workloads::shard::shard_scale(&scale, s.start, s.end, plan.units);
+            base.push(self.soc.call_scaled_ns(kind, &shard_scale, s.target)?);
+        }
+        // Stage every remote shard's parameter block through the shared
+        // region (freed at that shard's retirement); roll back cleanly
+        // if the region is exhausted mid-group.
+        let mut staged = Vec::with_capacity(plan.shards.len());
+        for s in &plan.shards {
+            if s.target.is_host() {
+                staged.push(None);
+                continue;
+            }
+            match self.soc.shared.alloc(scale.param_bytes.max(1)) {
+                Ok(a) => staged.push(Some(a)),
+                Err(e) => {
+                    for a in staged.into_iter().flatten() {
+                        let _ = self.soc.shared.free(a);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+
+        // One logical call through the wrapper: one indirection charge,
+        // one iteration count.
+        let table = self.table.as_ref().expect("finalized above");
+        let wrapper_ns = table.wrapper_overhead_ns;
+        let _slot = table.dispatch(f)?;
+        let iteration = table.call_count(f)?;
+        self.clock.advance(wrapper_ns);
+        let issue_ns = self.clock.now_ns();
+
+        let group = self.next_group;
+        self.next_group += 1;
+        let of = plan.shards.len();
+        let mut tickets = Vec::with_capacity(of);
+        for (idx, s) in plan.shards.iter().enumerate() {
+            let slice = ShardSlice { group, index: idx, of, start: s.start, end: s.end };
+            let ticket = self.enqueue_dispatch(
+                f,
+                s.target,
+                iteration,
+                issue_ns,
+                base[idx],
+                staged[idx].take(),
+                Some(slice),
+            );
+            tickets.push(ticket);
+        }
+        self.groups.insert(group, ShardGroup {
+            function: f,
+            iteration,
+            first_ticket: tickets[0],
+            issue_ns,
+            of,
+            done: 0,
+            min_start_ns: u64::MAX,
+            max_complete_ns: 0,
+            wall: None,
+            primary: (TargetId::HOST, 0),
+            parts: Vec::new(),
+            custom: custom_inputs.map(<[Tensor]>::to_vec),
+        });
+        self.events
+            .push(issue_ns, VpeEvent::ShardedDispatch { function: f, group, shards: of });
+        Ok(tickets)
+    }
+
+    /// Build a fan-out plan for one call of `f` across at most
+    /// `max_width` units: every usable unit with a build and a cost row
+    /// joins, priced by rate (health-derated), its transport's dispatch
+    /// overhead, and its current backlog; remote units at the bounded
+    /// queue depth sit this call out.  See [`super::shard::plan`].
+    fn plan_fanout(
+        &self,
+        f: FunctionId,
+        max_width: usize,
+        custom_inputs: Option<&[Tensor]>,
+    ) -> Result<ShardPlan> {
+        let binding = self.binding(f)?;
+        let kind = binding.instance.kind;
+        if !workloads::shard::shardable(kind) {
+            return Ok(ShardPlan::empty());
+        }
+        let inputs = custom_inputs.unwrap_or(&binding.instance.inputs);
+        let units = workloads::shard::shard_units(kind, inputs)?;
+        if units < 2 {
+            return Ok(ShardPlan::empty());
+        }
+        let scale = binding.instance.scale;
+        let now = self.clock.now_ns();
+        let mut targets = Vec::new();
+        for (id, spec) in self.soc.targets() {
+            if !self.soc.is_usable(id)
+                || !Self::build_available(binding.has_tuned_build, spec.build)
+                || !self.soc.cost.has_rate(kind, id)
+            {
+                continue;
+            }
+            if !id.is_host() && self.queue.depth_on(id) >= self.cfg.max_queue_per_target {
+                continue;
+            }
+            let slow = spec.health.slowdown().unwrap_or(1.0);
+            let rate = self.soc.cost.rate_ns(kind, id).expect("has_rate checked") * slow;
+            // Full-call transport cost as the fixed overhead: exact for
+            // shared memory (the parameter block does not shrink with
+            // the shard), conservative for message passing.
+            let overhead_ns =
+                if id.is_host() { 0 } else { spec.transport.dispatch_ns(&scale) };
+            let backlog_ns = self.scheduler.busy_until(id).saturating_sub(now);
+            targets.push(PlanTarget {
+                target: id,
+                rate_ns_per_item: rate,
+                overhead_ns,
+                backlog_ns,
+            });
+        }
+        Ok(shard_plan::plan(units, scale.items / units as f64, &targets, max_width))
     }
 
     /// Retire every in-flight dispatch (completion-ordered, advancing
@@ -401,6 +647,23 @@ impl Vpe {
     /// High-water mark of concurrent in-flight dispatches.
     pub fn max_in_flight(&self) -> usize {
         self.queue.max_in_flight()
+    }
+
+    /// Active fan-out width for `f`, if a policy chose
+    /// [`PolicyAction::FanOut`] for it.
+    pub fn fanout_width(&self, f: FunctionId) -> Option<usize> {
+        self.fanout.get(&f).copied()
+    }
+
+    /// Total dispatches ever pushed through the queue (each shard of a
+    /// fanned-out call counts individually).
+    pub fn dispatches_submitted(&self) -> u64 {
+        self.queue.submitted()
+    }
+
+    /// Total dispatches retired from the queue.
+    pub fn dispatches_retired(&self) -> u64 {
+        self.queue.retired()
     }
 
     fn call_impl(
@@ -460,7 +723,10 @@ impl Vpe {
             } else if self.queue.depth_on(target) >= self.cfg.max_queue_per_target {
                 // Bounded queue: beyond the limit the dispatch bounces
                 // back to the host (paper §3.2, "already busy").
+                let depth = self.queue.depth_on(target);
                 self.scheduler.record_bounce();
+                self.events
+                    .push(issue_ns, VpeEvent::DispatchBounced { function: f, target, depth });
                 target = TargetId::HOST;
             }
         }
@@ -475,8 +741,28 @@ impl Vpe {
 
         // Simulated execution time (the decision/metric clock).
         let base_ns = self.soc.call_scaled_ns(kind, &scale, target)?;
+        Ok(self.enqueue_dispatch(f, target, iteration, issue_ns, base_ns, staged, None))
+    }
+
+    /// The one place a dispatch becomes an in-flight event: sample the
+    /// execution noise (clamped to >= 1 ns — a tiny scaled call must
+    /// never truncate to a zero-length dispatch, which would degenerate
+    /// EWMA and speedup ratios downstream), serialize on the target's
+    /// occupancy, and push the queue entry.  Shared by the plain and
+    /// sharded submit paths so their timing semantics cannot drift.
+    #[allow(clippy::too_many_arguments)]
+    fn enqueue_dispatch(
+        &mut self,
+        f: FunctionId,
+        target: TargetId,
+        iteration: u64,
+        issue_ns: u64,
+        base_ns: u64,
+        staged: Option<Allocation>,
+        shard: Option<ShardSlice>,
+    ) -> TicketId {
         let noise = 1.0 + self.cfg.exec_noise_frac * self.rng.standard_normal();
-        let exec_ns = (base_ns as f64 * noise.max(0.1)) as u64;
+        let exec_ns = ((base_ns as f64 * noise.max(0.1)) as u64).max(1);
 
         // Targets serialize: start when the unit is free.
         let start_ns = issue_ns.max(self.scheduler.busy_until(target));
@@ -500,20 +786,43 @@ impl Vpe {
             complete_ns: start_ns + exec_ns,
             exec_ns,
             staged,
+            shard,
         });
-        Ok(ticket)
+        ticket
     }
 
     /// Retire the earliest-completing in-flight dispatch: advance the
     /// clock to its completion, run the backend, charge profiling, free
     /// staging, and tick the policy.  `custom` carries caller inputs for
     /// one specific ticket (the synchronous `call_with` path).
+    ///
+    /// Shards of a fanned-out group fold into their accumulator as they
+    /// complete; the group surfaces as one aggregate record when its
+    /// last shard retires.
     fn retire_earliest(
         &mut self,
         custom_ticket: Option<TicketId>,
         custom_inputs: Option<&[Tensor]>,
     ) -> Result<Option<Retired>> {
-        let Some(call) = self.queue.pop_earliest() else { return Ok(None) };
+        loop {
+            let Some(call) = self.queue.pop_earliest() else { return Ok(None) };
+            if call.shard.is_some() {
+                match self.retire_shard(call)? {
+                    Some(r) => return Ok(Some(r)),
+                    None => continue,
+                }
+            }
+            return self.retire_single(call, custom_ticket, custom_inputs).map(Some);
+        }
+    }
+
+    /// Retire one ordinary (unsharded) dispatch.
+    fn retire_single(
+        &mut self,
+        call: InFlight,
+        custom_ticket: Option<TicketId>,
+        custom_inputs: Option<&[Tensor]>,
+    ) -> Result<Retired> {
         let f = call.function;
         let target = call.target;
         self.clock.advance_to(call.complete_ns);
@@ -563,18 +872,166 @@ impl Vpe {
             wall,
             output_ok,
             action,
+            shards: 1,
         };
 
-        if self.trace.is_some() {
-            // Record the host's and the DM3730 remote's noise-free
-            // prices for what-if replay (unknown units price as MAX).
-            let arm_ns = self.soc.call_scaled_ns(kind, &scale, TargetId::HOST)?;
-            let dsp_ns =
-                self.soc.call_scaled_ns(kind, &scale, dm3730::DSP).unwrap_or(u64::MAX);
-            self.trace.as_mut().expect("checked").push(&record, kind, arm_ns, dsp_ns);
+        self.record_trace(&record, kind, &scale);
+
+        Ok(Retired { ticket: call.ticket, record, output })
+    }
+
+    /// Retire one shard of a fanned-out call: free its staging, compute
+    /// its piece of the output, profile it on its unit, and fold it into
+    /// the group.  Returns the aggregate record when the group is done.
+    fn retire_shard(&mut self, call: InFlight) -> Result<Option<Retired>> {
+        let info = call.shard.expect("retire_shard requires a shard entry");
+        let f = call.function;
+        let target = call.target;
+        self.clock.advance_to(call.complete_ns);
+        if let Some(a) = call.staged {
+            self.soc.shared.free(a)?;
         }
 
-        Ok(Some(Retired { ticket: call.ticket, record, output }))
+        // Shard numerics always run through the pure-Rust reference
+        // engine: AOT artifacts are fixed-shape full calls, while shard
+        // shapes vary with the split (sim-only configs skip numerics).
+        let compute = self.cfg.artifacts_dir.is_some();
+        let binding = self.binding(f)?;
+        let kind = binding.instance.kind;
+        let scale = binding.instance.scale;
+        // Caller-provided inputs (the call_with path) take precedence
+        // over the registered instance's.
+        let full_inputs: &[Tensor] = match self.groups.get(&info.group) {
+            Some(g) if g.custom.is_some() => g.custom.as_deref().expect("checked"),
+            _ => &binding.instance.inputs,
+        };
+        let (part, wall) = if compute {
+            let inputs =
+                workloads::shard::shard_inputs(kind, full_inputs, info.start, info.end)?;
+            let t0 = Instant::now();
+            let out = workloads::reference_output(kind, &inputs)?;
+            (Some(out), Some(t0.elapsed()))
+        } else {
+            (None, None)
+        };
+
+        // No per-shard profiling: a shard is a fraction of a call, and
+        // folding its partial-scale time into the per-target means would
+        // corrupt the full-call comparisons policies judge with.  The
+        // group profiles once, at full scale, when it completes.
+        self.events.push(self.clock.now_ns(), VpeEvent::ShardRetired {
+            function: f,
+            group: info.group,
+            index: info.index,
+            target,
+            start_ns: call.start_ns,
+            complete_ns: call.complete_ns,
+        });
+
+        let g = self.groups.get_mut(&info.group).ok_or_else(|| {
+            Error::Coordinator(format!("shard retired for unknown group {}", info.group))
+        })?;
+        g.done += 1;
+        g.min_start_ns = g.min_start_ns.min(call.start_ns);
+        g.max_complete_ns = g.max_complete_ns.max(call.complete_ns);
+        if let Some(w) = wall {
+            g.wall = Some(g.wall.unwrap_or_default() + w);
+        }
+        let width = info.end - info.start;
+        if width > g.primary.1 {
+            g.primary = (target, width);
+        }
+        if let Some(out) = part {
+            g.parts.push((info.start, info.end, out));
+        }
+        if g.done < g.of {
+            return Ok(None);
+        }
+        let group = self.groups.remove(&info.group).expect("just updated");
+        self.finish_group(group, kind, scale).map(Some)
+    }
+
+    /// The reduction step: reassemble a completed group's output, verify
+    /// it against the full-call expectation, tick the policy once, and
+    /// emit one aggregate record whose `exec_ns` is the group makespan.
+    fn finish_group(&mut self, g: ShardGroup, kind: WorkloadKind, scale: PaperScale) -> Result<Retired> {
+        let f = g.function;
+        let (output, output_ok) = if g.parts.len() == g.of {
+            let binding = self.binding(f)?;
+            let inputs = g.custom.as_deref().unwrap_or(&binding.instance.inputs);
+            let out = workloads::shard::reassemble(kind, inputs, &g.parts)?;
+            // Verify only registered inputs (callers of call_with own
+            // the correctness of their custom data).  Sharded workloads
+            // are integer: the reassembly must be bit-exact against the
+            // full-call reference.
+            let ok = if self.cfg.verify_outputs && g.custom.is_none() {
+                Some(binding.instance.expected.allclose(&out, 0.0))
+            } else {
+                None
+            };
+            (Some(out), ok)
+        } else {
+            (None, None)
+        };
+        if output_ok == Some(false) {
+            if let Some(b) = self.bindings.get_mut(&f) {
+                b.mismatches += 1;
+            }
+            self.events.push(self.clock.now_ns(), VpeEvent::OutputMismatch {
+                function: f,
+                target: g.primary.0,
+            });
+        }
+
+        // The group profiles as ONE full-scale call on its primary
+        // target, with the makespan as the per-call time — per-target
+        // means stay comparable between plain and sharded calls.
+        let makespan_ns = g.max_complete_ns.saturating_sub(g.min_start_ns).max(1);
+        let freq = self.soc.target(g.primary.0)?.freq_hz;
+        let sample =
+            CounterSample::synthesize(kind, scale.items, makespan_ns as f64, g.primary.0, freq);
+        let cost = self.sampler.record(f, g.primary.0, sample, makespan_ns, &mut self.rng);
+        if cost.burst_ns > 0 {
+            self.events
+                .push(self.clock.now_ns(), VpeEvent::AnalysisBurst { cost_ns: cost.burst_ns });
+        }
+        self.clock.advance(cost.total_ns());
+
+        let action = self.policy_tick(f, g.primary.0)?;
+        let wrapper_ns = self.table()?.wrapper_overhead_ns;
+        let record = CallRecord {
+            function: f,
+            iteration: g.iteration,
+            target: g.primary.0,
+            exec_ns: makespan_ns,
+            profiling_ns: cost.total_ns(),
+            wrapper_ns,
+            issue_ns: g.issue_ns,
+            start_ns: g.min_start_ns,
+            complete_ns: g.max_complete_ns,
+            wall: g.wall,
+            output_ok,
+            action,
+            shards: g.of,
+        };
+        self.record_trace(&record, kind, &scale);
+        Ok(Retired { ticket: g.first_ticket, record, output })
+    }
+
+    /// Record every registered unit's noise-free price for this call
+    /// (trace v2: the whole platform, not a hard-wired pair; units the
+    /// cost model cannot price are simply absent).
+    fn record_trace(&mut self, record: &CallRecord, kind: WorkloadKind, scale: &PaperScale) {
+        if self.trace.is_none() {
+            return;
+        }
+        let mut prices = Vec::new();
+        for (id, _) in self.soc.targets() {
+            if let Ok(ns) = self.soc.call_scaled_ns(kind, scale, id) {
+                prices.push((id, ns));
+            }
+        }
+        self.trace.as_mut().expect("checked").push(record, kind, prices);
     }
 
     /// Run `iters` consecutive synchronous calls of `f`.
@@ -623,12 +1080,15 @@ impl Vpe {
             return Ok(None);
         }
         // Nominate the hottest function still resident on the host:
-        // once a function has been moved to its unit, the next-hottest
-        // becomes the candidate (the N-target generalization of "move
-        // the hottest function to the DSP").
+        // once a function has been moved to its unit — or fanned out
+        // across several — the next-hottest becomes the candidate (the
+        // N-target generalization of "move the hottest function to the
+        // DSP").  Fanned-out functions keep their table slot at HOST,
+        // so they must be excluded explicitly.
         let table = self.table()?;
         let nomination = self.detector.hottest_where(&self.sampler, &self.module, |g| {
-            table.current_target(g).map(|t| t.is_host()).unwrap_or(false)
+            !self.fanout.contains_key(&g)
+                && table.current_target(g).map(|t| t.is_host()).unwrap_or(false)
         });
         let current_slot = table.current_target(f)?;
         let hotspot = nomination.filter(|h| h.function == f);
@@ -665,12 +1125,24 @@ impl Vpe {
         let action = self.policy.decide(&ctx);
         match action {
             Some(PolicyAction::Offload { to }) => {
+                // Single-unit placement and fan-out are mutually
+                // exclusive: an offload decision supersedes a fan-out.
+                self.fanout.remove(&f);
                 self.table()?.set_target(f, to)?;
                 self.events.push(self.clock.now_ns(), VpeEvent::Offloaded { function: f, to });
             }
             Some(PolicyAction::Revert { reason }) => {
+                // Reverting also clears any fan-out: back to plain host
+                // calls.
+                self.fanout.remove(&f);
                 self.table()?.reset(f)?;
                 self.events.push(self.clock.now_ns(), VpeEvent::Reverted { function: f, reason });
+            }
+            Some(PolicyAction::FanOut { width }) => {
+                let width = width.max(2);
+                self.fanout.insert(f, width);
+                self.events
+                    .push(self.clock.now_ns(), VpeEvent::FanOutChosen { function: f, width });
             }
             None => {}
         }
@@ -779,7 +1251,14 @@ impl Vpe {
                 speedup,
             ]);
         }
-        t.to_markdown()
+        let mut out = t.to_markdown();
+        let bounced = self.scheduler.bounce_count();
+        if bounced > 0 {
+            out.push_str(&format!(
+                "\nbounced dispatches: {bounced} (remote queue full -> executed on the host)\n"
+            ));
+        }
+        out
     }
 }
 
@@ -800,7 +1279,7 @@ fn verify_output(instance: &WorkloadInstance, out: &Tensor) -> bool {
 mod tests {
     use super::*;
     use crate::platform::registry::TargetSpec;
-    use crate::platform::{TransferModel, Transport};
+    use crate::platform::{dm3730, TransferModel, Transport};
 
     fn sim_vpe() -> Vpe {
         Vpe::new(VpeConfig::sim_only()).unwrap()
@@ -955,6 +1434,201 @@ mod tests {
         assert_eq!(recs.len(), 2);
         assert!(recs.iter().any(|r| r.target == TargetId::HOST));
         assert!(vpe.scheduler().bounce_count() >= 1);
+    }
+
+    #[test]
+    fn sharded_call_reassembles_and_beats_the_best_single_unit() {
+        // Reference backend (real numerics) + two extra comparable
+        // units: a sharded call must verify bit-exactly and finish
+        // faster on the sim clock than any single-unit dispatch.
+        let mut cfg = VpeConfig::default();
+        cfg.exec_noise_frac = 0.0;
+        let mut vpe = Vpe::new(cfg).unwrap();
+        for (name, rate) in [("unit-a", 3.0), ("unit-b", 3.5)] {
+            let id = vpe.soc_mut().add_target(
+                TargetSpec::new(name, 1_000_000_000).with_transport(
+                    Transport::SharedMemory(TransferModel {
+                        dispatch_fixed_ns: 1_000_000,
+                        per_param_byte_ns: 1.0,
+                    }),
+                ),
+            );
+            vpe.soc_mut().cost.set_rate(WorkloadKind::Matmul, id, rate);
+        }
+        let f = vpe.register_workload(WorkloadKind::Matmul).unwrap(); // 128x128
+        let scale = crate::workloads::matmul_scale(128);
+        let best_single = vpe
+            .soc()
+            .targets()
+            .filter_map(|(id, _)| {
+                vpe.soc().call_scaled_ns(WorkloadKind::Matmul, &scale, id).ok()
+            })
+            .min()
+            .unwrap();
+
+        let rec = vpe.call_sharded(f).unwrap();
+        assert!(rec.shards >= 2, "must actually fan out: {rec:?}");
+        assert_eq!(rec.output_ok, Some(true), "reassembled output must verify");
+        assert!(
+            rec.exec_ns < best_single,
+            "fan-out makespan {} must beat the best single unit {}",
+            rec.exec_ns,
+            best_single
+        );
+        // The shards landed on at least two different units, and no
+        // unit ran two shards at once.
+        let windows = vpe.events().shard_windows();
+        assert!(windows.len() >= 2);
+        let distinct: std::collections::HashSet<TargetId> =
+            windows.iter().map(|w| w.0).collect();
+        assert!(distinct.len() >= 2, "windows: {windows:?}");
+        for (id, _) in vpe.soc().targets() {
+            let mut on: Vec<_> = windows.iter().filter(|w| w.0 == id).collect();
+            on.sort_by_key(|w| w.1);
+            for p in on.windows(2) {
+                assert!(p[1].1 >= p[0].2, "unit {id} double-booked: {windows:?}");
+            }
+        }
+        // Exactly-once retirement, no staging leaks.
+        assert_eq!(vpe.in_flight(), 0);
+        assert_eq!(vpe.dispatches_submitted(), vpe.dispatches_retired());
+        assert_eq!(vpe.soc().shared.used_bytes(), 0);
+    }
+
+    #[test]
+    fn call_with_shards_custom_inputs_when_fanned_out() {
+        // The call_with path must honor a FanOut decision: the caller's
+        // fresh inputs are sliced across the units and the reassembled
+        // output handed back (verification stays the caller's job).
+        let mut cfg = VpeConfig::default();
+        cfg.exec_noise_frac = 0.0;
+        let mut vpe = Vpe::with_policy(
+            cfg,
+            Box::new(super::super::policies_ext::FanOutPolicy::default()),
+        )
+        .unwrap();
+        for (name, rate) in [("unit-a", 3.0), ("unit-b", 3.5)] {
+            let id = vpe.soc_mut().add_target(
+                TargetSpec::new(name, 1_000_000_000).with_transport(
+                    Transport::SharedMemory(TransferModel {
+                        dispatch_fixed_ns: 1_000_000,
+                        per_param_byte_ns: 1.0,
+                    }),
+                ),
+            );
+            vpe.soc_mut().cost.set_rate(WorkloadKind::Matmul, id, rate);
+        }
+        let f = vpe.register_workload(WorkloadKind::Matmul).unwrap(); // 128x128
+        for _ in 0..6 {
+            vpe.call(f).unwrap();
+        }
+        assert!(vpe.fanout_width(f).is_some(), "{}", vpe.events().to_text());
+
+        // Fresh inputs from a different seed: the sharded result must
+        // match their own reference product, not the registered one.
+        let inst = crate::workloads::matmul::instance(128, 999);
+        let (rec, out) = vpe.call_with(f, &inst.inputs).unwrap();
+        assert!(rec.shards >= 2, "call_with must fan out too: {rec:?}");
+        assert_eq!(rec.output_ok, None, "verification is the caller's responsibility");
+        let got = out.expect("reference numerics");
+        assert!(inst.expected.allclose(&got, 0.0), "custom-input reassembly differs");
+        assert_eq!(vpe.in_flight(), 0);
+        assert_eq!(vpe.soc().shared.used_bytes(), 0);
+    }
+
+    #[test]
+    fn sharded_call_falls_back_to_plain_dispatch_on_one_unit_platforms() {
+        // FFT cannot shard; a sharded call must degrade gracefully to
+        // the ordinary synchronous path.
+        let mut vpe = sim_vpe();
+        let f = vpe.register_workload(WorkloadKind::Fft).unwrap();
+        let rec = vpe.call_sharded(f).unwrap();
+        assert_eq!(rec.shards, 1);
+        assert_eq!(vpe.in_flight(), 0);
+    }
+
+    #[test]
+    fn fan_out_policy_routes_calls_through_the_shard_planner() {
+        // The policy hook end to end: FanOutPolicy sees two comparable
+        // candidates, chooses FanOut, and subsequent `call`s shard.
+        let cfg = VpeConfig::sim_only();
+        let mut vpe = Vpe::with_policy(
+            cfg,
+            Box::new(super::super::policies_ext::FanOutPolicy::default()),
+        )
+        .unwrap();
+        let gpu = vpe.soc_mut().add_target(
+            TargetSpec::new("GPU-class unit", 1_200_000_000).with_transport(
+                Transport::SharedMemory(TransferModel {
+                    dispatch_fixed_ns: 30_000_000,
+                    per_param_byte_ns: 1.0,
+                }),
+            ),
+        );
+        vpe.soc_mut().cost.set_rate(WorkloadKind::Matmul, gpu, 3.0);
+        let f = vpe.register_matmul(500).unwrap();
+        let recs = vpe.run(f, 12).unwrap();
+        assert_eq!(
+            vpe.fanout_width(f),
+            Some(2),
+            "policy must have chosen fan-out: {}",
+            vpe.events().to_text()
+        );
+        assert!(vpe
+            .events()
+            .iter()
+            .any(|(_, e)| matches!(e, VpeEvent::FanOutChosen { .. })));
+        assert!(vpe
+            .events()
+            .iter()
+            .any(|(_, e)| matches!(e, VpeEvent::ShardedDispatch { .. })));
+        let sharded: Vec<_> = recs.iter().filter(|r| r.shards >= 2).collect();
+        assert!(!sharded.is_empty(), "post-decision calls must fan out");
+        // The fanned-out calls beat the pre-decision host calls.
+        let host_warmup = recs[0].exec_ns as f64;
+        let best_shard = sharded.iter().map(|r| r.exec_ns).min().unwrap() as f64;
+        assert!(host_warmup / best_shard > 2.0, "{host_warmup} vs {best_shard}");
+    }
+
+    #[test]
+    fn bounced_dispatches_are_visible_in_events_and_report() {
+        let mut cfg = VpeConfig::sim_only();
+        cfg.max_queue_per_target = 1;
+        let mut vpe =
+            Vpe::with_policy(cfg, Box::new(super::super::policy::AlwaysOffloadPolicy)).unwrap();
+        let f = vpe.register_workload(WorkloadKind::Conv2d).unwrap();
+        vpe.call(f).unwrap();
+        let _a = vpe.submit(f).unwrap(); // takes the DSP slot
+        let _b = vpe.submit(f).unwrap(); // queue full -> bounced home
+        vpe.drain().unwrap();
+        let bounces = vpe.events().bounces();
+        assert_eq!(bounces.len(), 1, "{}", vpe.events().to_text());
+        assert_eq!(bounces[0].1, f);
+        assert_eq!(bounces[0].2, dm3730::DSP);
+        assert!(
+            vpe.report().contains("bounced dispatches: 1"),
+            "report must mention the bounce:\n{}",
+            vpe.report()
+        );
+    }
+
+    #[test]
+    fn tiny_scaled_calls_never_produce_zero_length_dispatches() {
+        // A microscopic scale truncates to sub-ns compute; the clamp
+        // must keep exec_ns >= 1 so complete > start always holds.
+        let mut vpe = sim_vpe();
+        let f = vpe.register_workload(WorkloadKind::Dotprod).unwrap();
+        vpe.set_scale(f, crate::workloads::PaperScale {
+            items: 0.001,
+            param_bytes: 8,
+            payload_bytes: 8,
+        })
+        .unwrap();
+        for _ in 0..10 {
+            let rec = vpe.call(f).unwrap();
+            assert!(rec.exec_ns >= 1);
+            assert!(rec.complete_ns > rec.start_ns);
+        }
     }
 
     #[test]

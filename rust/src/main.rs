@@ -205,13 +205,13 @@ fn run() -> vpe::Result<()> {
             ];
             println!(
                 "{:<18} {:>12} {:>8} {:>8} {:>9} {:>8}",
-                "policy", "total ms", "arm", "dsp", "offloads", "reverts"
+                "policy", "total ms", "host", "remote", "offloads", "reverts"
             );
             for p in policies.iter_mut() {
                 let o = vpe::coordinator::trace::replay(&trace, p.as_mut());
                 println!(
                     "{:<18} {:>12.1} {:>8} {:>8} {:>9} {:>8}",
-                    o.policy, o.total_ms, o.arm_calls, o.dsp_calls, o.offloads, o.reverts
+                    o.policy, o.total_ms, o.host_calls, o.remote_calls, o.offloads, o.reverts
                 );
             }
         }

@@ -44,6 +44,26 @@ pub fn reference_blocked(a: &[i32], b: &[i32], n: usize, block: usize) -> Vec<i3
     c
 }
 
+/// Rectangular matmul: `(r x k) . (k x n)`, cache-blocked ikj order —
+/// the engine behind sharded row-block execution.  Accumulation order
+/// per output element matches [`reference`] (ascending `k`), so results
+/// are bit-exact against the naive square loop.
+pub fn reference_rect(a: &[i32], b: &[i32], r: usize, k: usize, n: usize) -> Vec<i32> {
+    assert_eq!(a.len(), r * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0i32; r * n];
+    for i in 0..r {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in a[i * k..(i + 1) * k].iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cj, &bj) in crow.iter_mut().zip(brow) {
+                *cj = cj.wrapping_add(aik.wrapping_mul(bj));
+            }
+        }
+    }
+    c
+}
+
 /// Deterministic instance at size `n` (one of `shapes::MATMUL_SIZES` for
 /// artifact-backed execution; any size for sim-only use).
 pub fn instance(n: usize, seed: u64) -> WorkloadInstance {
@@ -84,6 +104,19 @@ mod tests {
         for block in [1, 4, 8, 16, 32] {
             assert_eq!(reference_blocked(&a, &b, n, block), want, "block={block}");
         }
+    }
+
+    #[test]
+    fn rect_matches_naive_on_squares_and_row_blocks() {
+        let n = 16;
+        let a = generator::ints(n * n, -8, 8, 4);
+        let b = generator::ints(n * n, -8, 8, 5);
+        let want = reference(&a, &b, n);
+        assert_eq!(reference_rect(&a, &b, n, n, n), want);
+        // A row block computes exactly the corresponding output rows.
+        let (lo, hi) = (3, 11);
+        let block = reference_rect(&a[lo * n..hi * n], &b, hi - lo, n, n);
+        assert_eq!(block, want[lo * n..hi * n]);
     }
 
     #[test]

@@ -18,6 +18,7 @@ pub mod fft;
 pub mod generator;
 pub mod matmul;
 pub mod pattern;
+pub mod shard;
 
 /// The six benchmark algorithms.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -305,10 +306,24 @@ pub fn reference_output(kind: WorkloadKind, inputs: &[Tensor]) -> crate::Result<
             vec![dotprod::reference(ints(kind, inputs, 0)?, ints(kind, inputs, 1)?)],
         ),
         WorkloadKind::Matmul => {
-            let n = arg(kind, inputs, 0)?.shape[0];
+            // Rectangular row blocks are first-class (sharded fan-out
+            // dispatches `(rows x k) . (k x n)` pieces); the full square
+            // call is the `rows == k == n` special case.
+            let (r, k) = match arg(kind, inputs, 0)?.shape[..] {
+                [r, k] => (r, k),
+                _ => return Err(Error::Coordinator("matmul A must be rank 2".into())),
+            };
+            let n = match arg(kind, inputs, 1)?.shape[..] {
+                [kb, n] if kb == k => n,
+                _ => {
+                    return Err(Error::Coordinator(
+                        "matmul B must be rank 2 with B rows == A cols".into(),
+                    ))
+                }
+            };
             Tensor::i32(
-                vec![n, n],
-                matmul::reference(ints(kind, inputs, 0)?, ints(kind, inputs, 1)?, n),
+                vec![r, n],
+                matmul::reference_rect(ints(kind, inputs, 0)?, ints(kind, inputs, 1)?, r, k, n),
             )
         }
         WorkloadKind::Pattern => Tensor::i32(

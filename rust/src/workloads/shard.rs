@@ -1,0 +1,334 @@
+//! Shard/reassemble support: split one workload call into independent
+//! output ranges and put the pieces back together.
+//!
+//! This is the workloads half of the sharded fan-out subsystem (the
+//! coordinator half — sizing shards against the cost model and the
+//! dispatch queue — lives in `coordinator/shard.rs`).  A shard is a
+//! contiguous range `[start, end)` of *output units*:
+//!
+//! | workload   | output unit          | shard inputs                       |
+//! |------------|----------------------|------------------------------------|
+//! | complement | one sequence element | the element range                  |
+//! | dotprod    | one product term     | both vector ranges (partial sums)  |
+//! | pattern    | one window start     | range + `P - 1` trailing overlap   |
+//! | matmul     | one output row       | the A row block + the full B       |
+//! | conv2d     | one output row       | the row band + a `k/2` halo        |
+//! | fft        | — (not shardable: every butterfly couples all points)   |
+//!
+//! Every shard's inputs are shaped so [`super::reference_output`]
+//! computes exactly the full call's output restricted to the range
+//! (integer workloads: bit-exact), which is what the reassembly
+//! property test in `rust/tests/prop_invariants.rs` asserts.
+
+use crate::error::{Error, Result};
+
+use super::{PaperScale, Tensor, WorkloadKind};
+
+/// Can calls of this workload be split across several targets?
+pub fn shardable(kind: WorkloadKind) -> bool {
+    // The FFT's butterflies couple every point with every other point;
+    // a row split would need a transpose + twiddle pass between stages.
+    !matches!(kind, WorkloadKind::Fft)
+}
+
+fn arg<'a>(kind: WorkloadKind, inputs: &'a [Tensor], i: usize) -> Result<&'a Tensor> {
+    inputs
+        .get(i)
+        .ok_or_else(|| Error::Coordinator(format!("{kind:?}: missing input {i}")))
+}
+
+fn ints<'a>(kind: WorkloadKind, inputs: &'a [Tensor], i: usize) -> Result<&'a [i32]> {
+    arg(kind, inputs, i)?
+        .as_i32()
+        .ok_or_else(|| Error::Coordinator(format!("{kind:?}: input {i} must be i32")))
+}
+
+/// Number of independently computable output units of a call with these
+/// inputs (0 when the workload cannot shard).
+pub fn shard_units(kind: WorkloadKind, inputs: &[Tensor]) -> Result<usize> {
+    Ok(match kind {
+        WorkloadKind::Complement | WorkloadKind::Dotprod => arg(kind, inputs, 0)?.data.len(),
+        WorkloadKind::Pattern => {
+            let n = arg(kind, inputs, 0)?.data.len();
+            let p = arg(kind, inputs, 1)?.data.len();
+            if p == 0 || p > n {
+                0
+            } else {
+                n - p + 1
+            }
+        }
+        WorkloadKind::Matmul | WorkloadKind::Conv2d => *arg(kind, inputs, 0)?
+            .shape
+            .first()
+            .ok_or_else(|| Error::Coordinator(format!("{kind:?}: input 0 must be rank 2")))?,
+        WorkloadKind::Fft => 0,
+    })
+}
+
+/// Cost-model scale of one shard: the items (and bulk payload) prorate
+/// with the output range; the staged parameter block does not (every
+/// shard ships its own pointers + sizes).
+pub fn shard_scale(full: &PaperScale, start: usize, end: usize, units: usize) -> PaperScale {
+    let frac = (end - start) as f64 / units.max(1) as f64;
+    PaperScale {
+        items: full.items * frac,
+        param_bytes: full.param_bytes,
+        payload_bytes: (full.payload_bytes as f64 * frac).ceil() as u64,
+    }
+}
+
+/// Build the input tensors of the shard covering output units
+/// `[start, end)` of a call with `inputs`.
+pub fn shard_inputs(
+    kind: WorkloadKind,
+    inputs: &[Tensor],
+    start: usize,
+    end: usize,
+) -> Result<Vec<Tensor>> {
+    let units = shard_units(kind, inputs)?;
+    if start >= end || end > units {
+        return Err(Error::Coordinator(format!(
+            "{kind:?}: bad shard range [{start}, {end}) of {units} units"
+        )));
+    }
+    Ok(match kind {
+        WorkloadKind::Complement => {
+            let seq = ints(kind, inputs, 0)?;
+            vec![Tensor::i32(vec![end - start], seq[start..end].to_vec())]
+        }
+        WorkloadKind::Dotprod => {
+            let x = ints(kind, inputs, 0)?;
+            let y = ints(kind, inputs, 1)?;
+            vec![
+                Tensor::i32(vec![end - start], x[start..end].to_vec()),
+                Tensor::i32(vec![end - start], y[start..end].to_vec()),
+            ]
+        }
+        WorkloadKind::Pattern => {
+            // Windows starting in [start, end) read `P - 1` elements past
+            // the range; the overlap rides along so each window is
+            // counted by exactly one shard.
+            let seq = ints(kind, inputs, 0)?;
+            let p = arg(kind, inputs, 1)?.data.len();
+            let hi = (end + p - 1).min(seq.len());
+            vec![
+                Tensor::i32(vec![hi - start], seq[start..hi].to_vec()),
+                inputs[1].clone(),
+            ]
+        }
+        WorkloadKind::Matmul => {
+            // Row block of A times the full B.
+            let a = ints(kind, inputs, 0)?;
+            let k = *arg(kind, inputs, 0)?
+                .shape
+                .get(1)
+                .ok_or_else(|| Error::Coordinator("matmul A must be rank 2".into()))?;
+            vec![
+                Tensor::i32(vec![end - start, k], a[start * k..end * k].to_vec()),
+                inputs[1].clone(),
+            ]
+        }
+        WorkloadKind::Conv2d => {
+            // Row band plus a `k/2` halo on each side (clamped at the
+            // image boundary, where the full call zero-pads anyway).
+            let img = ints(kind, inputs, 0)?;
+            let (h, w) = match arg(kind, inputs, 0)?.shape[..] {
+                [h, w] => (h, w),
+                _ => return Err(Error::Coordinator("conv2d image must be rank 2".into())),
+            };
+            let pad = arg(kind, inputs, 1)?.shape.first().copied().unwrap_or(1) / 2;
+            let top = start.saturating_sub(pad);
+            let bot = (end + pad).min(h);
+            vec![
+                Tensor::i32(vec![bot - top, w], img[top * w..bot * w].to_vec()),
+                inputs[1].clone(),
+            ]
+        }
+        WorkloadKind::Fft => {
+            return Err(Error::Coordinator("fft calls cannot be sharded".into()))
+        }
+    })
+}
+
+/// Reassemble shard outputs into the full call's output tensor.
+///
+/// `parts` holds `(start, end, output)` per shard — the output as
+/// computed by [`super::reference_output`] on that shard's
+/// [`shard_inputs`].  The ranges must tile `[0, units)` exactly.
+pub fn reassemble(
+    kind: WorkloadKind,
+    inputs: &[Tensor],
+    parts: &[(usize, usize, Tensor)],
+) -> Result<Tensor> {
+    let units = shard_units(kind, inputs)?;
+    let mut sorted: Vec<&(usize, usize, Tensor)> = parts.iter().collect();
+    sorted.sort_by_key(|(s, _, _)| *s);
+    let mut covered = 0usize;
+    for (s, e, _) in &sorted {
+        if *s != covered || *e <= *s {
+            return Err(Error::Coordinator(format!(
+                "{kind:?}: shard ranges must tile [0, {units}); hole at {covered}"
+            )));
+        }
+        covered = *e;
+    }
+    if covered != units {
+        return Err(Error::Coordinator(format!(
+            "{kind:?}: shards cover {covered} of {units} units"
+        )));
+    }
+    fn part_ints(kind: WorkloadKind, t: &Tensor) -> Result<&[i32]> {
+        t.as_i32()
+            .ok_or_else(|| Error::Coordinator(format!("{kind:?}: shard output must be i32")))
+    }
+    Ok(match kind {
+        WorkloadKind::Complement => {
+            let mut out = Vec::with_capacity(units);
+            for (_, _, t) in &sorted {
+                out.extend_from_slice(part_ints(kind, t)?);
+            }
+            Tensor::i32(vec![units], out)
+        }
+        WorkloadKind::Dotprod | WorkloadKind::Pattern => {
+            // Partial sums / partial counts reduce by (wrapping) addition.
+            let mut acc = 0i32;
+            for (_, _, t) in &sorted {
+                let v = part_ints(kind, t)?;
+                acc = acc.wrapping_add(*v.first().ok_or_else(|| {
+                    Error::Coordinator(format!("{kind:?}: empty shard output"))
+                })?);
+            }
+            Tensor::i32(vec![], vec![acc])
+        }
+        WorkloadKind::Matmul => {
+            let n = *arg(kind, inputs, 1)?
+                .shape
+                .get(1)
+                .ok_or_else(|| Error::Coordinator("matmul B must be rank 2".into()))?;
+            let mut out = Vec::with_capacity(units * n);
+            for (_, _, t) in &sorted {
+                out.extend_from_slice(part_ints(kind, t)?);
+            }
+            Tensor::i32(vec![units, n], out)
+        }
+        WorkloadKind::Conv2d => {
+            // Crop each band's halo rows before concatenating.
+            let w = *arg(kind, inputs, 0)?
+                .shape
+                .get(1)
+                .ok_or_else(|| Error::Coordinator("conv2d image must be rank 2".into()))?;
+            let pad = arg(kind, inputs, 1)?.shape.first().copied().unwrap_or(1) / 2;
+            let mut out = Vec::with_capacity(units * w);
+            for (s, e, t) in &sorted {
+                let halo_top = (*s).min(pad);
+                let v = part_ints(kind, t)?;
+                let lo = halo_top * w;
+                let hi = lo + (e - s) * w;
+                if hi > v.len() {
+                    return Err(Error::Coordinator(format!(
+                        "conv2d shard [{s}, {e}) output too small: {} < {hi}",
+                        v.len()
+                    )));
+                }
+                out.extend_from_slice(&v[lo..hi]);
+            }
+            Tensor::i32(vec![units, w], out)
+        }
+        WorkloadKind::Fft => {
+            return Err(Error::Coordinator("fft calls cannot be sharded".into()))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{instance, reference_output};
+
+    /// Split [0, units) into `n` near-equal contiguous ranges.
+    fn even_ranges(units: usize, n: usize) -> Vec<(usize, usize)> {
+        let n = n.min(units).max(1);
+        (0..n)
+            .map(|i| (i * units / n, (i + 1) * units / n))
+            .collect()
+    }
+
+    #[test]
+    fn every_shardable_kind_reassembles_exactly() {
+        for kind in WorkloadKind::ALL {
+            if !shardable(kind) {
+                continue;
+            }
+            let w = instance(kind, 9);
+            let units = shard_units(kind, &w.inputs).unwrap();
+            for n_shards in [2, 3, 7] {
+                let parts: Vec<(usize, usize, Tensor)> = even_ranges(units, n_shards)
+                    .into_iter()
+                    .map(|(s, e)| {
+                        let inp = shard_inputs(kind, &w.inputs, s, e).unwrap();
+                        (s, e, reference_output(kind, &inp).unwrap())
+                    })
+                    .collect();
+                let whole = reassemble(kind, &w.inputs, &parts).unwrap();
+                assert!(
+                    w.expected.allclose(&whole, 0.0),
+                    "{kind:?} x{n_shards}: reassembly differs from the full call"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fft_is_not_shardable() {
+        assert!(!shardable(WorkloadKind::Fft));
+        let w = instance(WorkloadKind::Fft, 1);
+        assert_eq!(shard_units(WorkloadKind::Fft, &w.inputs).unwrap(), 0);
+        assert!(shard_inputs(WorkloadKind::Fft, &w.inputs, 0, 1).is_err());
+    }
+
+    #[test]
+    fn shard_scale_prorates_items_but_not_params() {
+        let full = PaperScale { items: 1000.0, param_bytes: 48, payload_bytes: 4000 };
+        let s = shard_scale(&full, 10, 35, 100);
+        assert!((s.items - 250.0).abs() < 1e-9);
+        assert_eq!(s.param_bytes, 48);
+        assert_eq!(s.payload_bytes, 1000);
+    }
+
+    #[test]
+    fn holes_and_overlaps_are_rejected() {
+        let w = instance(WorkloadKind::Complement, 3);
+        let units = shard_units(WorkloadKind::Complement, &w.inputs).unwrap();
+        let part = |s: usize, e: usize| {
+            let inp = shard_inputs(WorkloadKind::Complement, &w.inputs, s, e).unwrap();
+            (s, e, reference_output(WorkloadKind::Complement, &inp).unwrap())
+        };
+        // Hole: [0, 10) + [20, units).
+        let parts = vec![part(0, 10), part(20, units)];
+        assert!(reassemble(WorkloadKind::Complement, &w.inputs, &parts).is_err());
+        // Out-of-range shard request.
+        assert!(shard_inputs(WorkloadKind::Complement, &w.inputs, 5, units + 1).is_err());
+        assert!(shard_inputs(WorkloadKind::Complement, &w.inputs, 7, 7).is_err());
+    }
+
+    #[test]
+    fn pattern_overlap_windows_counted_exactly_once() {
+        // "AAAA" / "AA" -> 3 overlapping matches; a 2-way split must
+        // still count each window once.
+        let inputs = vec![
+            Tensor::i32(vec![4], vec![0, 0, 0, 0]),
+            Tensor::i32(vec![2], vec![0, 0]),
+        ];
+        let units = shard_units(WorkloadKind::Pattern, &inputs).unwrap();
+        assert_eq!(units, 3);
+        let parts: Vec<(usize, usize, Tensor)> = [(0usize, 2usize), (2, 3)]
+            .into_iter()
+            .map(|(s, e)| {
+                let inp = shard_inputs(WorkloadKind::Pattern, &inputs, s, e).unwrap();
+                (s, e, reference_output(WorkloadKind::Pattern, &inp).unwrap())
+            })
+            .collect();
+        let whole = reassemble(WorkloadKind::Pattern, &inputs, &parts).unwrap();
+        assert_eq!(whole.as_i32().unwrap()[0], 3);
+    }
+}

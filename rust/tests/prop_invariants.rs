@@ -309,6 +309,124 @@ fn prop_scheduler_free_at_matches_busy_until() {
 }
 
 // ---------------------------------------------------------------------------
+// Sharded fan-out (split -> concurrent dispatch -> reassemble)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_shard_reassembly_matches_reference_for_every_kind() {
+    use vpe::workloads::{instance, reference_output, shard, Tensor};
+    let kinds: Vec<WorkloadKind> = WorkloadKind::ALL
+        .into_iter()
+        .filter(|k| shard::shardable(*k))
+        .collect();
+    prop::check("shard/reassemble == full reference", 25, |g| {
+        let kind = *g.choose(&kinds);
+        let w = instance(kind, g.u64_in(0, 1 << 20));
+        let units = shard::shard_units(kind, &w.inputs).map_err(|e| e.to_string())?;
+        // Random contiguous split: 2..8 shards at random cut points.
+        let n_shards = g.usize_in(2, 8.min(units));
+        let mut cuts: Vec<usize> = (0..n_shards - 1).map(|_| g.usize_in(1, units)).collect();
+        cuts.push(0);
+        cuts.push(units);
+        cuts.sort_unstable();
+        cuts.dedup();
+        let parts: Vec<(usize, usize, Tensor)> = cuts
+            .windows(2)
+            .map(|p| -> Result<_, String> {
+                let inp =
+                    shard::shard_inputs(kind, &w.inputs, p[0], p[1]).map_err(|e| e.to_string())?;
+                let out = reference_output(kind, &inp).map_err(|e| e.to_string())?;
+                Ok((p[0], p[1], out))
+            })
+            .collect::<Result<_, _>>()?;
+        let whole = shard::reassemble(kind, &w.inputs, &parts).map_err(|e| e.to_string())?;
+        assert_prop(
+            w.expected.allclose(&whole, 0.0),
+            format!("{kind:?} x{} shards: reassembly differs", parts.len()),
+        )
+    });
+}
+
+#[test]
+fn prop_mixed_sharded_and_unsharded_submits_keep_queue_invariants() {
+    prop::check("mixed sharded + plain submits", 40, |g| {
+        let (mut v, targets) = multi_target_vpe(g.u64_in(0, u64::MAX - 1));
+        let kinds = [WorkloadKind::Matmul, WorkloadKind::Dotprod, WorkloadKind::Conv2d];
+        let mut fns = Vec::new();
+        for kind in kinds {
+            fns.push(v.register_workload(kind).expect("register"));
+        }
+        // Random interleaving of plain submits, sharded submits, and
+        // partial drains.
+        let mut logical = 0u64;
+        let mut records = Vec::new();
+        for _ in 0..g.usize_in(5, 30) {
+            match g.usize_in(0, 3) {
+                0 => {
+                    v.submit(*g.choose(&fns)).expect("submit");
+                    logical += 1;
+                }
+                1 => {
+                    let tickets = v.submit_sharded(*g.choose(&fns)).expect("submit_sharded");
+                    assert_prop(!tickets.is_empty(), "sharded submit returned no tickets")?;
+                    logical += 1;
+                }
+                _ => {
+                    records.extend(v.drain().expect("drain"));
+                }
+            }
+        }
+        records.extend(v.drain().expect("drain"));
+
+        // Exactly-once: one record per logical call, nothing in flight,
+        // queue counters balanced, no staging leaks.
+        assert_prop(
+            records.len() as u64 == logical,
+            format!("retired {} != submitted {logical}", records.len()),
+        )?;
+        assert_prop(v.in_flight() == 0, "queue must be empty after a full drain")?;
+        assert_prop(
+            v.dispatches_submitted() == v.dispatches_retired(),
+            format!(
+                "dispatch counters diverge: {} vs {}",
+                v.dispatches_submitted(),
+                v.dispatches_retired()
+            ),
+        )?;
+        assert_prop(v.soc().shared.used_bytes() == 0, "staged params leaked")?;
+
+        // Per-target serialization over the union of plain-call windows
+        // and per-shard windows (aggregate records span several targets
+        // and are replaced by their shards here).
+        let mut windows: Vec<(TargetId, u64, u64)> = records
+            .iter()
+            .filter(|r| r.shards == 1)
+            .map(|r| (r.target, r.start_ns, r.complete_ns))
+            .collect();
+        windows.extend(v.events().shard_windows());
+        for &t in &targets {
+            let mut on_t: Vec<_> = windows.iter().filter(|w| w.0 == t).collect();
+            on_t.sort_by_key(|w| w.1);
+            for p in on_t.windows(2) {
+                assert_prop(
+                    p[1].1 >= p[0].2,
+                    format!("overlap on {t}: {:?} then {:?}", p[0], p[1]),
+                )?;
+            }
+        }
+
+        // Every aggregate record's makespan covers its shards.
+        for r in records.iter().filter(|r| r.shards > 1) {
+            assert_prop(
+                r.complete_ns > r.start_ns,
+                format!("degenerate aggregate window: {r:?}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Workload references (cross-validated against each other)
 // ---------------------------------------------------------------------------
 
