@@ -60,6 +60,21 @@ pub fn apply(base: VpeConfig, doc: &Json) -> Result<VpeConfig> {
         }
         cfg.max_queue_per_target = v as usize;
     }
+    if let Some(v) = u64_of(doc, "max_batch_width")? {
+        if v == 0 {
+            return Err(Error::Config("'max_batch_width' must be >= 1".into()));
+        }
+        cfg.max_batch_width = v as usize;
+    }
+    if let Some(v) = bool_of(doc, "learn_rates")? {
+        cfg.learn_rates = v;
+    }
+    if let Some(v) = f64_of(doc, "rate_learn_alpha")? {
+        if !(0.0..=1.0).contains(&v) {
+            return Err(Error::Config("'rate_learn_alpha' must be in [0, 1]".into()));
+        }
+        cfg.rate_learn_alpha = v;
+    }
     if let Some(s) = doc.get("sampler") {
         if let Some(v) = bool_of(s, "enabled")? {
             cfg.sampler.enabled = v;
@@ -126,6 +141,9 @@ mod tests {
             "verify_outputs": false,
             "exec_noise_frac": 0.02,
             "max_queue_per_target": 3,
+            "max_batch_width": 6,
+            "learn_rates": true,
+            "rate_learn_alpha": 0.4,
             "sampler": {"enabled": true, "overhead_frac": 0.10,
                         "analysis_period": 4, "burst_mean_ms": 50, "burst_std_ms": 10},
             "detector": {"min_samples": 3, "share_threshold": 0.25},
@@ -139,6 +157,9 @@ mod tests {
         assert!(!cfg.verify_outputs);
         assert_eq!(cfg.exec_noise_frac, 0.02);
         assert_eq!(cfg.max_queue_per_target, 3);
+        assert_eq!(cfg.max_batch_width, 6);
+        assert!(cfg.learn_rates);
+        assert_eq!(cfg.rate_learn_alpha, 0.4);
         assert_eq!(cfg.sampler.overhead_frac, 0.10);
         assert_eq!(cfg.sampler.analysis_period, 4);
         assert_eq!(cfg.sampler.burst_mean_ns, 50e6);
@@ -158,6 +179,14 @@ mod tests {
     #[test]
     fn paper_overhead_bound_enforced_through_config() {
         let doc = json::parse(r#"{"sampler": {"overhead_frac": 0.5}}"#).unwrap();
+        assert!(apply(VpeConfig::default(), &doc).is_err());
+    }
+
+    #[test]
+    fn batch_and_learning_bounds_enforced() {
+        let doc = json::parse(r#"{"max_batch_width": 0}"#).unwrap();
+        assert!(apply(VpeConfig::default(), &doc).is_err());
+        let doc = json::parse(r#"{"rate_learn_alpha": 1.5}"#).unwrap();
         assert!(apply(VpeConfig::default(), &doc).is_err());
     }
 

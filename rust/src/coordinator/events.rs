@@ -35,6 +35,12 @@ pub enum VpeEvent {
     /// the target's queue was full (`depth` in-flight dispatches, at the
     /// configured bound).
     DispatchBounced { function: FunctionId, target: TargetId, depth: usize },
+    /// A forming batch of `width` same-target dispatches flushed as one
+    /// coalesced group, paying the transport's fixed setup once and
+    /// saving `saved_ns` over dispatching its members individually
+    /// (`saved_ns == (width - 1) * batch_setup_ns`).  Only batches that
+    /// actually coalesce (width >= 2) are logged.
+    BatchDispatched { target: TargetId, width: usize, saved_ns: u64 },
     /// A policy chose to fan the function's calls out across up to
     /// `width` units instead of offloading to a single one.
     FanOutChosen { function: FunctionId, width: usize },
@@ -97,6 +103,20 @@ impl EventLog {
             .filter_map(|(t, e)| match e {
                 VpeEvent::DispatchBounced { function, target, .. } => {
                     Some((*t, *function, *target))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// All coalesced-batch flushes: `(time, target, width, saved_ns)`,
+    /// in order.
+    pub fn batches(&self) -> Vec<(u64, TargetId, usize, u64)> {
+        self.entries
+            .iter()
+            .filter_map(|(t, e)| match e {
+                VpeEvent::BatchDispatched { target, width, saved_ns } => {
+                    Some((*t, *target, *width, *saved_ns))
                 }
                 _ => None,
             })

@@ -25,10 +25,24 @@ use super::events::RevertReason;
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Candidate {
     pub target: TargetId,
-    /// Cost-model estimate for one call at the current scale (compute +
-    /// dispatch overhead + health derating), ns.  Candidates arrive
-    /// best-first.
+    /// Cost-model estimate for one lone call at the current scale
+    /// (compute + full dispatch overhead + health derating), ns.
+    /// Candidates arrive best-first.
     pub predicted_ns: u64,
+    /// The same call priced at steady-state batching: the transport's
+    /// fixed setup amortized over the achievable batch width, so a unit
+    /// whose ~100 ms setup dwarfs a medium-scale call still looks
+    /// viable when its queue traffic coalesces.  Equals `predicted_ns`
+    /// for the host-adjacent case of no batching (width 1).
+    pub amortized_ns: u64,
+}
+
+impl Candidate {
+    /// A candidate with no batching upside (amortized == predicted) —
+    /// trace replay and tests that predate batching use this.
+    pub fn uniform(target: TargetId, predicted_ns: u64) -> Self {
+        Candidate { target, predicted_ns, amortized_ns: predicted_ns }
+    }
 }
 
 /// Everything a policy may look at when deciding about one function.
@@ -294,7 +308,7 @@ mod tests {
     }
 
     fn dsp_candidates() -> Vec<Candidate> {
-        vec![Candidate { target: dm3730::DSP, predicted_ns: 1000 }]
+        vec![Candidate::uniform(dm3730::DSP, 1000)]
     }
 
     fn ctx<'a>(
@@ -376,8 +390,8 @@ mod tests {
         let f = FunctionId(0);
         let gpu = TargetId(2);
         let cands = vec![
-            Candidate { target: dm3730::DSP, predicted_ns: 500 },
-            Candidate { target: gpu, predicted_ns: 800 },
+            Candidate::uniform(dm3730::DSP, 500),
+            Candidate::uniform(gpu, 800),
         ];
         let p = profile_with(&[100.0; 6], &[]);
         assert_eq!(

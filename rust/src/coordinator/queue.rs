@@ -1,5 +1,5 @@
 //! The event-driven dispatch queue: concurrent in-flight calls on the
-//! sim clock.
+//! sim clock, with same-target traffic coalesced into batches.
 //!
 //! The seed coordinator executed one call at a time — submit, advance
 //! the clock past completion, return.  This queue decouples *issuing* a
@@ -8,15 +8,33 @@
 //! actually becomes free — targets serialize) and a completion time.
 //! Retirement is completion-ordered: whichever in-flight call finishes
 //! first on the sim clock retires first, regardless of issue order, so
-//! calls on different targets genuinely overlap.
+//! calls on different targets genuinely overlap.  In-flight events live
+//! in a completion-keyed binary heap, so retiring is O(log n) instead
+//! of the previous linear scan (ties still break by ticket, i.e. issue
+//! order — trace replay is unchanged).
+//!
+//! **Batching** (the Fig-2b amortization): remote dispatches do not go
+//! in flight one by one.  They first land in a per-target *forming
+//! batch*; everything that accumulates there flushes as one group that
+//! pays the transport's fixed setup (~100 ms on the DM3730) exactly
+//! once, while per-call costs (parameter staging, wire/serde) stay per
+//! member.  A batch flushes when it reaches the configured width cap or
+//! at the next retirement attempt (`drain`/`call`), so latency never
+//! waits on a batch that will not fill.  The queue owns the staging
+//! bookkeeping; the coordinator owns the clock and prices the flush.
 //!
 //! Invariants (property-tested in `rust/tests/prop_invariants.rs`):
 //!
 //! - no two dispatches overlap on one target (per-target serialization
 //!   via the occupancy scheduler);
-//! - every submitted ticket retires exactly once;
+//! - every submitted ticket retires exactly once (staged or not);
 //! - on any single target — the host fallback path in particular —
-//!   start order equals issue order (program order is preserved).
+//!   start order equals issue order (program order is preserved; the
+//!   forming batch is per-target FIFO);
+//! - a batch of width `w` saves exactly `(w-1) * batch_setup_ns` over
+//!   dispatching its members individually.
+
+use std::collections::{BTreeMap, BinaryHeap};
 
 use crate::jit::module::FunctionId;
 use crate::platform::memory::Allocation;
@@ -59,12 +77,18 @@ pub struct InFlight {
     /// Sim time the wrapper issued the dispatch.
     pub issue_ns: u64,
     /// Sim time the target started executing it (>= issue when queued
-    /// behind an earlier call).
+    /// behind an earlier call or held in a forming batch).
     pub start_ns: u64,
     /// Sim time the target finishes (start + exec).
     pub complete_ns: u64,
-    /// Execution time on the target (compute + dispatch setup + noise).
+    /// Execution time on the target (compute + dispatch overhead +
+    /// noise).
     pub exec_ns: u64,
+    /// Transport overhead actually charged inside `exec_ns`: the full
+    /// dispatch cost for a batch leader or lone dispatch, the variable
+    /// part only for a coalesced follower, 0 on the host.  The
+    /// cost-model learner subtracts this to recover the compute rate.
+    pub overhead_ns: u64,
     /// Parameter block staged in the shared region, freed at retirement.
     pub staged: Option<Allocation>,
     /// Set when this dispatch is one shard of a fanned-out call; the
@@ -72,14 +96,70 @@ pub struct InFlight {
     pub shard: Option<ShardSlice>,
 }
 
-/// Completion-ordered queue of in-flight dispatches.
+/// A dispatch accepted by `submit` but still waiting in its target's
+/// forming batch (not yet priced onto the target's timeline).
+#[derive(Debug)]
+pub struct PendingDispatch {
+    pub ticket: TicketId,
+    pub function: FunctionId,
+    pub target: TargetId,
+    pub iteration: u64,
+    /// Sim time the wrapper issued the dispatch.
+    pub issue_ns: u64,
+    /// Compute + per-call variable transport cost, noise applied,
+    /// >= 1 ns.  The batch leader additionally pays `setup_ns`.
+    pub core_exec_ns: u64,
+    /// The per-call variable transport cost folded into `core_exec_ns`
+    /// (what a coalesced follower is charged as overhead).
+    pub variable_ns: u64,
+    /// The once-per-batch fixed transport setup this dispatch would pay
+    /// if it flushed alone.
+    pub setup_ns: u64,
+    pub staged: Option<Allocation>,
+    pub shard: Option<ShardSlice>,
+}
+
+/// Min-heap adapter: `BinaryHeap::pop` must yield the
+/// earliest-completing call, ties broken by ticket (issue order).
+#[derive(Debug)]
+struct QueueEntry(InFlight);
+
+impl PartialEq for QueueEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.complete_ns == other.0.complete_ns && self.0.ticket == other.0.ticket
+    }
+}
+
+impl Eq for QueueEntry {}
+
+impl PartialOrd for QueueEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for QueueEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: the max-heap surfaces the minimum key.
+        (other.0.complete_ns, other.0.ticket).cmp(&(self.0.complete_ns, self.0.ticket))
+    }
+}
+
+/// Completion-ordered queue of in-flight dispatches plus the per-target
+/// forming batches.
 #[derive(Debug, Default)]
 pub struct DispatchQueue {
-    inflight: Vec<InFlight>,
+    inflight: BinaryHeap<QueueEntry>,
+    /// Per-target forming batches (FIFO per target; `BTreeMap` so batch
+    /// flush order is deterministic across runs).
+    forming: BTreeMap<TargetId, Vec<PendingDispatch>>,
     next_ticket: u64,
     submitted: u64,
     retired: u64,
     max_in_flight: usize,
+    batches_formed: u64,
+    coalesced: u64,
+    saved_setup_ns: u64,
 }
 
 impl DispatchQueue {
@@ -94,49 +174,107 @@ impl DispatchQueue {
         t
     }
 
-    /// Enqueue a dispatch.
+    /// Enqueue a dispatch directly (the host path — nothing to
+    /// coalesce).  Counts toward `submitted`.
     ///
     /// A zero-length dispatch (`exec_ns == 0`, i.e. `complete == start`)
     /// is rejected outright: it would degenerate EWMA and speedup ratios
     /// downstream, so the submit path clamps to ≥ 1 ns and this assert
     /// keeps the invariant honest.
     pub fn push(&mut self, call: InFlight) {
+        self.submitted += 1;
+        self.push_in_flight(call);
+    }
+
+    /// Move a flushed batch member in flight.  It was already counted
+    /// as submitted when it was staged, so only the heap is touched —
+    /// `submitted == retired + len` holds at every instant, staged or
+    /// not.
+    pub fn push_flushed(&mut self, call: InFlight) {
+        self.push_in_flight(call);
+    }
+
+    fn push_in_flight(&mut self, call: InFlight) {
         assert!(call.exec_ns >= 1, "zero-length dispatch: exec_ns must be >= 1 ns");
         debug_assert!(call.complete_ns >= call.start_ns);
         debug_assert!(call.start_ns >= call.issue_ns);
-        self.inflight.push(call);
-        self.submitted += 1;
-        self.max_in_flight = self.max_in_flight.max(self.inflight.len());
+        self.inflight.push(QueueEntry(call));
+        self.max_in_flight = self.max_in_flight.max(self.len());
     }
 
     /// Remove and return the earliest-completing call (ties broken by
-    /// issue order).
+    /// issue order).  O(log n).
     pub fn pop_earliest(&mut self) -> Option<InFlight> {
-        let idx = self
-            .inflight
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, c)| (c.complete_ns, c.ticket))
-            .map(|(i, _)| i)?;
+        let call = self.inflight.pop()?.0;
         self.retired += 1;
-        Some(self.inflight.swap_remove(idx))
+        Some(call)
     }
 
-    /// Dispatches currently queued or executing.
+    /// Stage a dispatch into its target's forming batch; returns the
+    /// batch width after joining.  Staging is acceptance: the dispatch
+    /// counts as submitted now (its ticket is out), not at flush.  The
+    /// caller flushes the batch when the width hits its cap (and at
+    /// every retirement attempt).
+    pub fn stage(&mut self, pending: PendingDispatch) -> usize {
+        self.submitted += 1;
+        let batch = self.forming.entry(pending.target).or_default();
+        batch.push(pending);
+        let width = batch.len();
+        self.max_in_flight = self.max_in_flight.max(self.len());
+        width
+    }
+
+    /// Take (and clear) the forming batch for `target`, in issue order.
+    pub fn take_forming(&mut self, target: TargetId) -> Vec<PendingDispatch> {
+        self.forming.remove(&target).unwrap_or_default()
+    }
+
+    /// Targets that currently have a forming batch, ascending by slot.
+    pub fn forming_targets(&self) -> Vec<TargetId> {
+        self.forming.keys().copied().collect()
+    }
+
+    /// Dispatches waiting in `target`'s forming batch.
+    pub fn forming_on(&self, target: TargetId) -> usize {
+        self.forming.get(&target).map(Vec::len).unwrap_or(0)
+    }
+
+    /// Total core execution time staged in `target`'s forming batch
+    /// (the planner folds this into the target's backlog).
+    pub fn forming_exec_ns_on(&self, target: TargetId) -> u64 {
+        self.forming
+            .get(&target)
+            .map(|b| b.iter().map(|p| p.core_exec_ns).sum())
+            .unwrap_or(0)
+    }
+
+    /// Record a flushed batch of `width` coalesced dispatches that
+    /// saved `saved_ns` of transport setup (only called for width >= 2).
+    pub fn record_batch(&mut self, width: usize, saved_ns: u64) {
+        debug_assert!(width >= 2);
+        self.batches_formed += 1;
+        self.coalesced += width as u64 - 1;
+        self.saved_setup_ns += saved_ns;
+    }
+
+    /// Dispatches currently queued, executing, or forming.
     pub fn len(&self) -> usize {
-        self.inflight.len()
+        self.inflight.len() + self.forming.values().map(Vec::len).sum::<usize>()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.inflight.is_empty()
+        self.len() == 0
     }
 
-    /// In-flight dispatches bound for `target`.
+    /// Dispatches bound for `target`: in flight plus forming.
     pub fn depth_on(&self, target: TargetId) -> usize {
-        self.inflight.iter().filter(|c| c.target == target).count()
+        self.inflight.iter().filter(|c| c.0.target == target).count()
+            + self.forming_on(target)
     }
 
-    /// Total dispatches ever submitted.
+    /// Total dispatches ever accepted (pushed in flight or staged into
+    /// a forming batch).  `submitted == retired + len` at every
+    /// instant.
     pub fn submitted(&self) -> u64 {
         self.submitted
     }
@@ -146,9 +284,25 @@ impl DispatchQueue {
         self.retired
     }
 
-    /// High-water mark of concurrent in-flight dispatches.
+    /// High-water mark of concurrent in-flight + forming dispatches.
     pub fn max_in_flight(&self) -> usize {
         self.max_in_flight
+    }
+
+    /// Batches of >= 2 coalesced dispatches flushed so far.
+    pub fn batches_formed(&self) -> u64 {
+        self.batches_formed
+    }
+
+    /// Dispatches that rode an existing batch (batch members beyond
+    /// each batch's leader).
+    pub fn coalesced(&self) -> u64 {
+        self.coalesced
+    }
+
+    /// Cumulative transport setup avoided by coalescing, ns.
+    pub fn saved_setup_ns(&self) -> u64 {
+        self.saved_setup_ns
     }
 }
 
@@ -168,6 +322,24 @@ mod tests {
             start_ns: start,
             complete_ns: start + exec,
             exec_ns: exec,
+            overhead_ns: 0,
+            staged: None,
+            shard: None,
+        });
+        ticket
+    }
+
+    fn pending(q: &mut DispatchQueue, target: TargetId, issue: u64, core: u64) -> TicketId {
+        let ticket = q.next_ticket();
+        q.stage(PendingDispatch {
+            ticket,
+            function: FunctionId(0),
+            target,
+            iteration: ticket.0 + 1,
+            issue_ns: issue,
+            core_exec_ns: core,
+            variable_ns: 0,
+            setup_ns: 100,
             staged: None,
             shard: None,
         });
@@ -207,6 +379,25 @@ mod tests {
     }
 
     #[test]
+    fn heap_matches_linear_scan_order_on_a_shuffled_load() {
+        // The O(log n) heap must retire in exactly the (complete_ns,
+        // ticket) order the old linear scan produced.
+        let mut q = DispatchQueue::new();
+        let execs = [500u64, 20, 380, 20, 750, 1, 90, 90, 1000, 5];
+        let mut expect: Vec<(u64, u64)> = Vec::new();
+        for (i, &e) in execs.iter().enumerate() {
+            let t = call(&mut q, TargetId((i % 3) as u16 + 1), 0, i as u64, e);
+            expect.push((i as u64 + e, t.0));
+        }
+        expect.sort_unstable();
+        let mut got = Vec::new();
+        while let Some(c) = q.pop_earliest() {
+            got.push((c.complete_ns, c.ticket.0));
+        }
+        assert_eq!(got, expect);
+    }
+
+    #[test]
     fn depth_counts_per_target() {
         let mut q = DispatchQueue::new();
         call(&mut q, dm3730::DSP, 0, 0, 100);
@@ -217,5 +408,42 @@ mod tests {
         assert_eq!(q.depth_on(dm3730::ARM), 0);
         q.pop_earliest();
         assert_eq!(q.depth_on(TargetId(2)), 0);
+    }
+
+    #[test]
+    fn forming_batches_count_toward_depth_and_len() {
+        let mut q = DispatchQueue::new();
+        pending(&mut q, dm3730::DSP, 0, 100);
+        pending(&mut q, dm3730::DSP, 1, 200);
+        call(&mut q, TargetId(2), 0, 0, 50);
+        // Staged dispatches are accepted dispatches: the bookkeeping
+        // invariant holds mid-formation, not just after a drain.
+        assert_eq!(q.submitted(), 3);
+        assert_eq!(q.submitted(), q.retired() + q.len() as u64);
+        assert_eq!(q.depth_on(dm3730::DSP), 2, "forming members are queue traffic");
+        assert_eq!(q.forming_on(dm3730::DSP), 2);
+        assert_eq!(q.forming_exec_ns_on(dm3730::DSP), 300);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.max_in_flight(), 3);
+        assert_eq!(q.forming_targets(), vec![dm3730::DSP]);
+
+        let batch = q.take_forming(dm3730::DSP);
+        assert_eq!(batch.len(), 2);
+        // FIFO: issue order preserved inside the batch.
+        assert!(batch[0].ticket < batch[1].ticket);
+        assert_eq!(q.depth_on(dm3730::DSP), 0);
+        assert_eq!(q.forming_on(dm3730::DSP), 0);
+        assert_eq!(q.len(), 1);
+        assert!(q.take_forming(dm3730::DSP).is_empty());
+    }
+
+    #[test]
+    fn batch_stats_accumulate() {
+        let mut q = DispatchQueue::new();
+        q.record_batch(3, 200);
+        q.record_batch(2, 100);
+        assert_eq!(q.batches_formed(), 2);
+        assert_eq!(q.coalesced(), 3);
+        assert_eq!(q.saved_setup_ns(), 300);
     }
 }

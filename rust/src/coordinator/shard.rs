@@ -39,7 +39,12 @@ pub struct PlanTarget {
     /// Health-derated compute rate for this workload, ns per item.
     pub rate_ns_per_item: f64,
     /// Fixed dispatch overhead of one shard on this unit, ns (0 for the
-    /// host).
+    /// host).  When the unit has an *open forming batch* the shard
+    /// would join, the coordinator passes the marginal (per-call
+    /// variable) cost instead of a full transport setup — the setup is
+    /// already sunk, which shifts the water-filling toward such units
+    /// at scales where a full setup would price them out (see
+    /// `Vpe::plan_fanout` and ARCHITECTURE.md "Batched dispatch").
     pub overhead_ns: u64,
     /// How long the unit stays busy with already-queued dispatches, ns
     /// (`TargetScheduler::busy_until − now`).

@@ -19,6 +19,17 @@
 //!   (`"on": "arm"|"dsp"`, `arm_ns`/`dsp_ns` fields).  v1 used
 //!   `u64::MAX` as an "unpriceable" sentinel for the DSP column; those
 //!   entries load with the price simply absent.
+//!
+//! ## Known limitation
+//!
+//! Trace v2 records lone-dispatch prices only; replay rebuilds
+//! candidates with `amortized_ns == predicted_ns`.  A policy that
+//! decides from batch-amortized prices (`FanOutPolicy` since the
+//! batched-dispatch PR) can therefore diverge from the live run when a
+//! unit is setup-dominated alone but comparable amortized — recording
+//! per-unit amortized prices needs a format rev (see the ROADMAP
+//! "batch/shard-aware replay" item), like fan-out itself, which replay
+//! already treats as a no-op.
 
 use std::collections::HashMap;
 use std::fmt::Write as _;
@@ -302,7 +313,7 @@ pub fn replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> ReplayOutcome {
             .prices
             .iter()
             .filter(|(t, _)| !t.is_host())
-            .map(|(t, ns)| Candidate { target: *t, predicted_ns: *ns })
+            .map(|(t, ns)| Candidate::uniform(*t, *ns))
             .collect();
         candidates.sort_by_key(|c| (c.predicted_ns, c.target));
         let ctx = PolicyCtx {

@@ -19,8 +19,14 @@
 //!   only charge the wrapper overhead and enqueue an in-flight event;
 //!   calls on different targets overlap on the sim clock, and
 //!   retirement is completion-ordered.
+//!
+//! Queued remote submits bound for the same unit coalesce into
+//! *batches* that pay the transport's fixed setup (the paper's ~100 ms
+//! Fig-2b cost) once per group instead of once per call — see
+//! [`super::queue`] for the forming/flush rules and
+//! `examples/batched_pipeline.rs` for the throughput win.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
@@ -42,7 +48,7 @@ use super::events::{EventLog, VpeEvent};
 use super::policy::{
     BlindOffloadConfig, BlindOffloadPolicy, Candidate, OffloadPolicy, PolicyAction, PolicyCtx,
 };
-use super::queue::{DispatchQueue, InFlight, ShardSlice, TicketId};
+use super::queue::{DispatchQueue, InFlight, PendingDispatch, ShardSlice, TicketId};
 use super::scheduler::TargetScheduler;
 use super::shard::{self as shard_plan, PlanTarget, ShardPlan};
 
@@ -70,6 +76,25 @@ pub struct VpeConfig {
     /// submit bounces back to the host (the paper's "remote target is
     /// already busy" rule, §3.2, generalized to a bounded queue).
     pub max_queue_per_target: usize,
+    /// Maximum dispatches coalesced into one batched transport setup.
+    /// Queued remote submits bound for the same unit gather in a
+    /// per-target forming batch until it reaches this width (or the
+    /// next `drain`/retirement flushes it half-full); the whole batch
+    /// then pays the transport's fixed setup once.  `1` disables
+    /// coalescing — every dispatch pays its own setup.  The achievable
+    /// width is additionally capped by `max_queue_per_target` (traffic
+    /// beyond the bound bounces to the host before it can coalesce).
+    pub max_batch_width: usize,
+    /// Feed measured execution back into the cost model: after every
+    /// retired (unsharded) dispatch, EWMA-blend the observed ns/item —
+    /// with the transport overhead actually paid subtracted out — into
+    /// `CostModel::set_rate`, so candidate ranking and the shard
+    /// planner track reality (degradation, miscalibration) instead of
+    /// the seeded rates.  Off by default: the paper's tables are
+    /// reproduced from the calibrated constants.
+    pub learn_rates: bool,
+    /// EWMA weight of one new observation when `learn_rates` is on.
+    pub rate_learn_alpha: f64,
 }
 
 impl Default for VpeConfig {
@@ -83,6 +108,9 @@ impl Default for VpeConfig {
             verify_outputs: true,
             exec_noise_frac: 0.008,
             max_queue_per_target: 2,
+            max_batch_width: 8,
+            learn_rates: false,
+            rate_learn_alpha: 0.25,
         }
     }
 }
@@ -206,6 +234,15 @@ pub struct Vpe {
     /// Functions a policy chose to fan out, with the chosen width;
     /// their `call`s route through the shard planner.
     fanout: HashMap<FunctionId, usize>,
+    /// Ground-truth rate table the *simulated hardware* follows once
+    /// cost-model learning starts mutating `soc.cost` (the beliefs).
+    /// Snapshotted lazily at the first learned update; `None` while
+    /// beliefs and truth still coincide.
+    truth: Option<crate::platform::CostModel>,
+    /// Rows the learner has updated from measurements — these already
+    /// embody observed health effects, so pricing must not derate them
+    /// again.
+    learned_rows: HashSet<(WorkloadKind, TargetId)>,
     events: EventLog,
     trace: Option<super::trace::Trace>,
 }
@@ -281,6 +318,8 @@ impl Vpe {
             groups: HashMap::new(),
             next_group: 0,
             fanout: HashMap::new(),
+            truth: None,
+            learned_rows: HashSet::new(),
             events: EventLog::new(),
             trace: None,
             cfg,
@@ -374,10 +413,21 @@ impl Vpe {
     /// qualifies when it is healthy, the function's build exists for it,
     /// and the cost model has a row — so registering a new unit plus its
     /// rate rows is all it takes to join this ranking.
+    ///
+    /// The ranking sees the batch amortization through `amortized_ns`:
+    /// the call priced with the fixed transport setup spread over the
+    /// achievable batch width — what a steady stream of queued submits
+    /// actually pays per call (`policies_ext::FanOutPolicy` compares
+    /// these).  `predicted_ns` stays the lone-dispatch price: policies
+    /// run at retire time, after every forming batch has flushed, so
+    /// there is never an open batch to join at that point (the
+    /// join-an-open-batch marginal pricing lives in `plan_fanout`,
+    /// which runs at submit time where open batches do exist).
     fn candidates_for(&self, f: FunctionId) -> Result<Vec<Candidate>> {
         let binding = self.binding(f)?;
         let kind = binding.instance.kind;
         let scale = binding.instance.scale;
+        let width = self.steady_batch_width() as u64;
         let mut out: Vec<Candidate> = Vec::new();
         for (id, spec) in self.soc.targets() {
             if id.is_host()
@@ -386,12 +436,67 @@ impl Vpe {
             {
                 continue;
             }
-            if let Ok(ns) = self.soc.call_scaled_ns(kind, &scale, id) {
-                out.push(Candidate { target: id, predicted_ns: ns });
+            if let Ok(ns) = self.price_call_ns(kind, &scale, id) {
+                let setup = spec.transport.batch_setup_ns();
+                let amortized_ns = ns.saturating_sub(setup) + setup / width;
+                out.push(Candidate { target: id, predicted_ns: ns, amortized_ns });
             }
         }
         out.sort_by_key(|c| (c.predicted_ns, c.target));
         Ok(out)
+    }
+
+    /// The batch width a sustained stream of same-target submits can
+    /// realistically reach: the configured cap, further limited by the
+    /// bounded queue depth (traffic beyond it bounces before it can
+    /// coalesce).
+    fn steady_batch_width(&self) -> usize {
+        self.cfg.max_batch_width.min(self.cfg.max_queue_per_target).max(1)
+    }
+
+    /// Price one call for *decisions* (candidate ranking, fan-out
+    /// sizing, trace counterfactuals): the believed rate table.  Rows
+    /// the cost-model learner has updated already embody measured
+    /// health effects and are not derated again; everything else prices
+    /// exactly as the generator does.
+    fn price_call_ns(
+        &self,
+        kind: WorkloadKind,
+        scale: &PaperScale,
+        target: TargetId,
+    ) -> Result<u64> {
+        if self.learned_rows.contains(&(kind, target)) {
+            self.soc.call_scaled_measured_ns(kind, scale, target)
+        } else {
+            self.soc.call_scaled_ns(kind, scale, target)
+        }
+    }
+
+    /// Price one call for *execution* (what the simulated hardware
+    /// actually takes): the ground-truth rate table.  Once learning
+    /// starts rewriting beliefs, the generator keeps following the
+    /// snapshot taken at that moment — the feedback loop adjusts
+    /// decisions, never the physics it is estimating.
+    fn true_call_ns(
+        &self,
+        kind: WorkloadKind,
+        scale: &PaperScale,
+        target: TargetId,
+    ) -> Result<u64> {
+        match &self.truth {
+            // Rows added after the snapshot (a unit registered mid-run)
+            // only exist in the live table — fall through for those.
+            Some(t) if t.has_rate(kind, target) => {
+                self.soc.call_scaled_ns_with(t, kind, scale, target)
+            }
+            _ => self.soc.call_scaled_ns(kind, scale, target),
+        }
+    }
+
+    /// The current candidate ranking for `f` (see `candidates_for`) —
+    /// introspection for tests, examples and tooling.
+    pub fn candidates(&self, f: FunctionId) -> Result<Vec<Candidate>> {
+        self.candidates_for(f)
     }
 
     // -- the call path ------------------------------------------------------
@@ -503,13 +608,21 @@ impl Vpe {
             (binding.instance.kind, binding.instance.scale)
         };
 
-        // Price every shard up front so nothing below can fail half-way
+        // Price every shard up front — full cost plus its transport's
+        // fixed/variable split — so nothing below can fail half-way
         // through queueing the group.
-        let mut base: Vec<u64> = Vec::with_capacity(plan.shards.len());
+        let mut base: Vec<(u64, u64, u64)> = Vec::with_capacity(plan.shards.len());
         for s in &plan.shards {
             let shard_scale =
                 workloads::shard::shard_scale(&scale, s.start, s.end, plan.units);
-            base.push(self.soc.call_scaled_ns(kind, &shard_scale, s.target)?);
+            let full = self.true_call_ns(kind, &shard_scale, s.target)?;
+            let (setup, variable) = if s.target.is_host() {
+                (0, 0)
+            } else {
+                let t = self.soc.target(s.target)?.transport;
+                (t.batch_setup_ns(), t.dispatch_variable_ns(&shard_scale))
+            };
+            base.push((full, setup, variable));
         }
         // Stage every remote shard's parameter block through the shared
         // region (freed at that shard's retirement); roll back cleanly
@@ -546,12 +659,15 @@ impl Vpe {
         let mut tickets = Vec::with_capacity(of);
         for (idx, s) in plan.shards.iter().enumerate() {
             let slice = ShardSlice { group, index: idx, of, start: s.start, end: s.end };
-            let ticket = self.enqueue_dispatch(
+            let (base_ns, setup_ns, variable_ns) = base[idx];
+            let ticket = self.dispatch_or_stage(
                 f,
                 s.target,
                 iteration,
                 issue_ns,
-                base[idx],
+                base_ns,
+                setup_ns,
+                variable_ns,
                 staged[idx].take(),
                 Some(slice),
             );
@@ -610,14 +726,46 @@ impl Vpe {
             if !id.is_host() && self.queue.depth_on(id) >= self.cfg.max_queue_per_target {
                 continue;
             }
-            let slow = spec.health.slowdown().unwrap_or(1.0);
+            // Learned rows already embody measured health effects —
+            // derating them again would double-count the slowdown.
+            let slow = if self.learned_rows.contains(&(kind, id)) {
+                1.0
+            } else {
+                spec.health.slowdown().unwrap_or(1.0)
+            };
             let rate = self.soc.cost.rate_ns(kind, id).expect("has_rate checked") * slow;
             // Full-call transport cost as the fixed overhead: exact for
             // shared memory (the parameter block does not shrink with
-            // the shard), conservative for message passing.
-            let overhead_ns =
-                if id.is_host() { 0 } else { spec.transport.dispatch_ns(&scale) };
-            let backlog_ns = self.scheduler.busy_until(id).saturating_sub(now);
+            // the shard), conservative for message passing.  When the
+            // unit has an open forming batch with room, the shard would
+            // *join* it — its marginal transport cost is the per-call
+            // variable part only (the fixed setup is sunk), which lets
+            // the water-filling give such units real work at scales
+            // where a full setup would price them out.
+            let forming = self.queue.forming_on(id);
+            let joins_open_batch =
+                !id.is_host() && forming > 0 && forming < self.cfg.max_batch_width;
+            let overhead_ns = if id.is_host() {
+                0
+            } else if joins_open_batch {
+                spec.transport.dispatch_variable_ns(&scale)
+            } else {
+                spec.transport.dispatch_ns(&scale)
+            };
+            // Work already promised to the unit: what the scheduler has
+            // on its timeline plus what sits in its forming batch —
+            // including the one-time setup that batch will pay at
+            // flush, which is exactly why the joining shard's own
+            // overhead above is variable-only (the setup is sunk *into
+            // the backlog*, not free).
+            let mut backlog_ns = self
+                .scheduler
+                .busy_until(id)
+                .saturating_sub(now)
+                .saturating_add(self.queue.forming_exec_ns_on(id));
+            if forming > 0 {
+                backlog_ns = backlog_ns.saturating_add(spec.transport.batch_setup_ns());
+            }
             targets.push(PlanTarget {
                 target: id,
                 rate_ns_per_item: rate,
@@ -631,6 +779,8 @@ impl Vpe {
     /// Retire every in-flight dispatch (completion-ordered, advancing
     /// the sim clock to each completion) and return all finished
     /// records, including any buffered from earlier mixed usage.
+    /// Forming batches flush first — a half-full batch never holds a
+    /// drain hostage.
     pub fn drain(&mut self) -> Result<Vec<CallRecord>> {
         let mut out: Vec<CallRecord> = self.completed.drain(..).collect();
         while let Some(r) = self.retire_earliest(None, None)? {
@@ -639,7 +789,8 @@ impl Vpe {
         Ok(out)
     }
 
-    /// Dispatches currently in flight.
+    /// Dispatches currently in flight (executing or waiting in a
+    /// forming batch).
     pub fn in_flight(&self) -> usize {
         self.queue.len()
     }
@@ -647,6 +798,23 @@ impl Vpe {
     /// High-water mark of concurrent in-flight dispatches.
     pub fn max_in_flight(&self) -> usize {
         self.queue.max_in_flight()
+    }
+
+    /// Batches of >= 2 same-target dispatches flushed so far.
+    pub fn batches_formed(&self) -> u64 {
+        self.queue.batches_formed()
+    }
+
+    /// Dispatches that rode an existing batch instead of paying their
+    /// own transport setup.
+    pub fn coalesced_dispatches(&self) -> u64 {
+        self.queue.coalesced()
+    }
+
+    /// Cumulative transport setup avoided by batching, ns (the Fig-2b
+    /// amortization win, also surfaced by [`Vpe::report`]).
+    pub fn saved_setup_ns(&self) -> u64 {
+        self.queue.saved_setup_ns()
     }
 
     /// Active fan-out width for `f`, if a policy chose
@@ -731,6 +899,17 @@ impl Vpe {
             }
         }
 
+        // Simulated execution time (the decision/metric clock) plus the
+        // transport's fixed/variable split, priced before anything is
+        // allocated or queued.
+        let base_ns = self.true_call_ns(kind, &scale, target)?;
+        let (setup_ns, variable_ns) = if target.is_host() {
+            (0, 0)
+        } else {
+            let t = self.soc.target(target)?.transport;
+            (t.batch_setup_ns(), t.dispatch_variable_ns(&scale))
+        };
+
         // Stage the parameter block through the shared region for the
         // lifetime of the dispatch, as VPE's injected allocators do.
         let staged = if !target.is_host() {
@@ -739,17 +918,120 @@ impl Vpe {
             None
         };
 
-        // Simulated execution time (the decision/metric clock).
-        let base_ns = self.soc.call_scaled_ns(kind, &scale, target)?;
-        Ok(self.enqueue_dispatch(f, target, iteration, issue_ns, base_ns, staged, None))
+        Ok(self.dispatch_or_stage(
+            f, target, iteration, issue_ns, base_ns, setup_ns, variable_ns, staged, None,
+        ))
     }
 
-    /// The one place a dispatch becomes an in-flight event: sample the
+    /// Route one priced dispatch: host calls go in flight immediately
+    /// (the host pays no transport, so there is nothing to coalesce —
+    /// and program order on the fallback path must hold); remote calls
+    /// land in their target's forming batch and flush later as one
+    /// coalesced transport setup.  Shared by the plain and sharded
+    /// submit paths so their timing semantics cannot drift.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_or_stage(
+        &mut self,
+        f: FunctionId,
+        target: TargetId,
+        iteration: u64,
+        issue_ns: u64,
+        base_ns: u64,
+        setup_ns: u64,
+        variable_ns: u64,
+        staged: Option<Allocation>,
+        shard: Option<ShardSlice>,
+    ) -> TicketId {
+        if target.is_host() {
+            return self.enqueue_dispatch(f, target, iteration, issue_ns, base_ns, staged, shard);
+        }
+        // Noise models compute/wire variance; the fixed setup is the
+        // deterministic once-per-batch lump the flush adds back.
+        let noise = 1.0 + self.cfg.exec_noise_frac * self.rng.standard_normal();
+        let core_base = base_ns.saturating_sub(setup_ns);
+        let core_exec_ns = ((core_base as f64 * noise.max(0.1)) as u64).max(1);
+        let ticket = self.queue.next_ticket();
+        let width = self.queue.stage(PendingDispatch {
+            ticket,
+            function: f,
+            target,
+            iteration,
+            issue_ns,
+            core_exec_ns,
+            variable_ns,
+            setup_ns,
+            staged,
+            shard,
+        });
+        if width >= self.cfg.max_batch_width.max(1) {
+            self.flush_target(target);
+        }
+        ticket
+    }
+
+    /// Flush `target`'s forming batch onto its timeline: the batch pays
+    /// the fixed transport setup once (carried by its first member —
+    /// followers serialize behind it and pay only their per-call
+    /// costs), saving `(width - 1) * setup` over individual dispatches.
+    fn flush_target(&mut self, target: TargetId) {
+        let batch = self.queue.take_forming(target);
+        if batch.is_empty() {
+            return;
+        }
+        let width = batch.len();
+        let now = self.clock.now_ns();
+        let setup_ns = batch.iter().map(|p| p.setup_ns).max().unwrap_or(0);
+        if width >= 2 {
+            let saved_ns = (width as u64 - 1) * setup_ns;
+            self.queue.record_batch(width, saved_ns);
+            self.events
+                .push(now, VpeEvent::BatchDispatched { target, width, saved_ns });
+        }
+        for (i, p) in batch.into_iter().enumerate() {
+            let (exec_ns, overhead_ns) = if i == 0 {
+                (p.core_exec_ns + setup_ns, p.variable_ns + setup_ns)
+            } else {
+                (p.core_exec_ns, p.variable_ns)
+            };
+            let start_ns = now.max(self.scheduler.busy_until(target));
+            if start_ns > p.issue_ns {
+                self.events.push(now, VpeEvent::DispatchWaited {
+                    function: p.function,
+                    target,
+                    wait_ns: start_ns - p.issue_ns,
+                });
+            }
+            self.scheduler.occupy(target, start_ns, exec_ns);
+            self.queue.push_flushed(InFlight {
+                ticket: p.ticket,
+                function: p.function,
+                target,
+                iteration: p.iteration,
+                issue_ns: p.issue_ns,
+                start_ns,
+                complete_ns: start_ns + exec_ns,
+                exec_ns,
+                overhead_ns,
+                staged: p.staged,
+                shard: p.shard,
+            });
+        }
+    }
+
+    /// Flush every forming batch (ascending by target slot — flush
+    /// order across targets does not affect any single target's
+    /// timeline, but a fixed order keeps runs reproducible).
+    fn flush_all(&mut self) {
+        for target in self.queue.forming_targets() {
+            self.flush_target(target);
+        }
+    }
+
+    /// The host path of [`Vpe::dispatch_or_stage`]: sample the
     /// execution noise (clamped to >= 1 ns — a tiny scaled call must
     /// never truncate to a zero-length dispatch, which would degenerate
     /// EWMA and speedup ratios downstream), serialize on the target's
-    /// occupancy, and push the queue entry.  Shared by the plain and
-    /// sharded submit paths so their timing semantics cannot drift.
+    /// occupancy, and push the queue entry.
     #[allow(clippy::too_many_arguments)]
     fn enqueue_dispatch(
         &mut self,
@@ -785,6 +1067,7 @@ impl Vpe {
             start_ns,
             complete_ns: start_ns + exec_ns,
             exec_ns,
+            overhead_ns: 0,
             staged,
             shard,
         });
@@ -799,11 +1082,17 @@ impl Vpe {
     /// Shards of a fanned-out group fold into their accumulator as they
     /// complete; the group surfaces as one aggregate record when its
     /// last shard retires.
+    ///
+    /// Every retirement attempt first flushes the forming batches: a
+    /// batch that will not fill must never delay the caller (the
+    /// flush-on-drain rule), and a synchronous `call` that staged its
+    /// own dispatch needs it in flight to retire it.
     fn retire_earliest(
         &mut self,
         custom_ticket: Option<TicketId>,
         custom_inputs: Option<&[Tensor]>,
     ) -> Result<Option<Retired>> {
+        self.flush_all();
         loop {
             let Some(call) = self.queue.pop_earliest() else { return Ok(None) };
             if call.shard.is_some() {
@@ -854,6 +1143,36 @@ impl Vpe {
                 .push(self.clock.now_ns(), VpeEvent::AnalysisBurst { cost_ns: cost.burst_ns });
         }
         self.clock.advance(cost.total_ns());
+
+        // Cost-model learning (opt-in): blend the measured compute rate
+        // back into the table the candidate ranking and shard planner
+        // read, so predictions track reality (degradation, thermal
+        // throttling, miscalibrated seed rates).  The transport overhead
+        // this dispatch actually paid — full setup, or only the variable
+        // part for a coalesced batch member — is subtracted first, so
+        // batching never skews the learned compute rate.  Sharded
+        // groups are excluded: a group makespan is not a single-unit
+        // compute measurement.
+        if self.cfg.learn_rates && scale.items > 0.0 {
+            let compute_ns = call.exec_ns.saturating_sub(call.overhead_ns).max(1);
+            let observed = compute_ns as f64 / scale.items;
+            if let Some(old) = self.soc.cost.rate_ns(kind, target) {
+                // Freeze the generator's view of the platform the
+                // moment beliefs start diverging from it.
+                let truth = self.truth.get_or_insert_with(|| self.soc.cost.clone());
+                // A unit registered *after* the snapshot exists only in
+                // the live table; freeze its still-unlearned rate into
+                // the snapshot before the first belief update, or the
+                // generator would read the learner's own output — a
+                // self-reinforcing feedback loop.
+                if !truth.has_rate(kind, target) {
+                    truth.set_rate(kind, target, old);
+                }
+                let alpha = self.cfg.rate_learn_alpha.clamp(0.0, 1.0);
+                self.soc.cost.set_rate(kind, target, (1.0 - alpha) * old + alpha * observed);
+                self.learned_rows.insert((kind, target));
+            }
+        }
 
         // Policy tick.
         let action = self.policy_tick(f, target)?;
@@ -1027,7 +1346,7 @@ impl Vpe {
         }
         let mut prices = Vec::new();
         for (id, _) in self.soc.targets() {
-            if let Ok(ns) = self.soc.call_scaled_ns(kind, scale, id) {
+            if let Ok(ns) = self.price_call_ns(kind, scale, id) {
                 prices.push((id, ns));
             }
         }
@@ -1252,10 +1571,33 @@ impl Vpe {
             ]);
         }
         let mut out = t.to_markdown();
+        // Per-target queue depth (in flight + forming), host first.
+        let depths: Vec<String> = self
+            .soc
+            .targets()
+            .map(|(id, spec)| format!("{} {}", spec.name, self.queue.depth_on(id)))
+            .collect();
+        out.push_str(&format!("\nqueue depth: {}\n", depths.join(" | ")));
         let bounced = self.scheduler.bounce_count();
         if bounced > 0 {
             out.push_str(&format!(
-                "\nbounced dispatches: {bounced} (remote queue full -> executed on the host)\n"
+                "bounced dispatches: {bounced} (remote queue full -> executed on the host)\n"
+            ));
+        }
+        // The amortization win, visible without reading the event log.
+        let batches = self.queue.batches_formed();
+        if batches > 0 {
+            out.push_str(&format!(
+                "batched dispatches: {} batches coalesced {} dispatches, saved {:.1} ms of transport setup\n",
+                batches,
+                self.queue.coalesced(),
+                self.queue.saved_setup_ns() as f64 / 1e6
+            ));
+        }
+        if self.cfg.learn_rates {
+            out.push_str(&format!(
+                "cost-model learning: on ({} rate rows tracking measurements)\n",
+                self.learned_rows.len()
             ));
         }
         out
@@ -1649,5 +1991,135 @@ mod tests {
         let f = vpe.register_matmul(500).unwrap();
         vpe.run(f, 20).unwrap();
         assert_eq!(vpe.current_target(f).unwrap(), gpu, "best unit must win the ranking");
+    }
+
+    #[test]
+    fn same_target_submits_coalesce_into_one_transport_setup() {
+        let mut cfg = VpeConfig::sim_only();
+        cfg.exec_noise_frac = 0.0;
+        let mut vpe =
+            Vpe::with_policy(cfg, Box::new(super::super::policy::AlwaysOffloadPolicy)).unwrap();
+        let f = vpe.register_workload(WorkloadKind::Conv2d).unwrap();
+        vpe.call(f).unwrap(); // offloads after the first call
+        assert_eq!(vpe.current_target(f).unwrap(), dm3730::DSP);
+        let setup = vpe.soc().target(dm3730::DSP).unwrap().transport.batch_setup_ns();
+
+        let _a = vpe.submit(f).unwrap();
+        let _b = vpe.submit(f).unwrap();
+        assert_eq!(vpe.in_flight(), 2);
+        let recs = vpe.drain().unwrap();
+        assert_eq!(recs.len(), 2);
+
+        // One batch of two flushed: the fixed setup was paid once and
+        // (width-1) * setup saved.
+        let batches = vpe.events().batches();
+        assert_eq!(batches.len(), 1, "{}", vpe.events().to_text());
+        let (_, target, width, saved) = batches[0];
+        assert_eq!(target, dm3730::DSP);
+        assert_eq!(width, 2);
+        assert_eq!(saved, setup);
+        assert_eq!(vpe.batches_formed(), 1);
+        assert_eq!(vpe.coalesced_dispatches(), 1);
+        assert_eq!(vpe.saved_setup_ns(), setup);
+
+        // The leader carries the setup for the group; the follower pays
+        // compute + staging only — and they still serialize.
+        let on_dsp: Vec<_> = recs.iter().filter(|r| r.target == dm3730::DSP).collect();
+        assert_eq!(on_dsp.len(), 2);
+        assert!(on_dsp[0].exec_ns > setup, "leader: {on_dsp:?}");
+        assert!(on_dsp[1].exec_ns < on_dsp[0].exec_ns - setup / 2, "follower: {on_dsp:?}");
+        assert!(on_dsp[1].start_ns >= on_dsp[0].complete_ns);
+
+        assert!(
+            vpe.report().contains("batched dispatches: 1 batches"),
+            "report must surface the amortization:\n{}",
+            vpe.report()
+        );
+        assert_eq!(vpe.in_flight(), 0);
+        assert_eq!(vpe.dispatches_submitted(), vpe.dispatches_retired());
+        assert_eq!(vpe.soc().shared.used_bytes(), 0);
+    }
+
+    #[test]
+    fn width_one_disables_coalescing() {
+        let mut cfg = VpeConfig::sim_only();
+        cfg.exec_noise_frac = 0.0;
+        cfg.max_batch_width = 1;
+        let mut vpe =
+            Vpe::with_policy(cfg, Box::new(super::super::policy::AlwaysOffloadPolicy)).unwrap();
+        let f = vpe.register_workload(WorkloadKind::Conv2d).unwrap();
+        vpe.call(f).unwrap();
+        let setup = vpe.soc().target(dm3730::DSP).unwrap().transport.batch_setup_ns();
+        let _a = vpe.submit(f).unwrap();
+        let _b = vpe.submit(f).unwrap();
+        let recs = vpe.drain().unwrap();
+        assert!(vpe.events().batches().is_empty(), "width 1 must never coalesce");
+        assert_eq!(vpe.saved_setup_ns(), 0);
+        // Every remote dispatch pays its own setup.
+        for r in recs.iter().filter(|r| r.target == dm3730::DSP) {
+            assert!(r.exec_ns > setup, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn candidates_carry_amortized_batch_prices() {
+        let mut vpe = sim_vpe(); // batch width 8, queue bound 2 -> steady width 2
+        let f = vpe.register_matmul(100).unwrap();
+        let cands = vpe.candidates(f).unwrap();
+        let dsp = cands.iter().find(|c| c.target == dm3730::DSP).unwrap();
+        let setup = vpe.soc().target(dm3730::DSP).unwrap().transport.batch_setup_ns();
+        // No open batch: predicted is the full lone-dispatch price; the
+        // amortized price spreads the setup over the steady width.
+        assert_eq!(dsp.amortized_ns, dsp.predicted_ns - setup + setup / 2);
+        assert!(dsp.amortized_ns < dsp.predicted_ns);
+    }
+
+    #[test]
+    fn learned_rates_track_a_degraded_target() {
+        let mut cfg = VpeConfig::sim_only();
+        cfg.learn_rates = true;
+        cfg.rate_learn_alpha = 0.5;
+        let mut vpe = Vpe::new(cfg).unwrap();
+        let f = vpe.register_workload(WorkloadKind::Matmul).unwrap();
+        vpe.run(f, 15).unwrap();
+        assert_eq!(vpe.current_target(f).unwrap(), dm3730::DSP);
+        let seeded = 3.3272;
+        let learned = vpe.soc().cost.rate_ns(WorkloadKind::Matmul, dm3730::DSP).unwrap();
+        assert!(
+            (learned - seeded).abs() / seeded < 0.05,
+            "healthy unit: the learned rate stays near the seed ({learned})"
+        );
+
+        // Thermal throttling halves the unit's speed.  Measurements
+        // must pull the believed rate up ~2x...
+        vpe.soc_mut().degrade_target(dm3730::DSP, 2.0);
+        vpe.run(f, 12).unwrap();
+        let learned = vpe.soc().cost.rate_ns(WorkloadKind::Matmul, dm3730::DSP).unwrap();
+        assert!(learned > seeded * 1.8, "degradation must be learned ({learned})");
+
+        // ...while candidate pricing does not derate the learned row a
+        // second time (the measured rate already embodies the slowdown).
+        let inst = crate::workloads::instance(WorkloadKind::Matmul, 0);
+        let cands = vpe.candidates(f).unwrap();
+        let dsp = cands.iter().find(|c| c.target == dm3730::DSP).unwrap();
+        let double_derated = vpe
+            .soc()
+            .call_scaled_ns(WorkloadKind::Matmul, &inst.scale, dm3730::DSP)
+            .unwrap();
+        assert!(
+            dsp.predicted_ns < double_derated,
+            "learned rows must not be health-derated again: {} vs {}",
+            dsp.predicted_ns,
+            double_derated
+        );
+    }
+
+    #[test]
+    fn without_learning_the_seeded_rates_never_move() {
+        let mut vpe = sim_vpe();
+        let f = vpe.register_workload(WorkloadKind::Matmul).unwrap();
+        vpe.run(f, 10).unwrap();
+        let r = vpe.soc().cost.rate_ns(WorkloadKind::Matmul, dm3730::DSP).unwrap();
+        assert_eq!(r, 3.3272, "learning is opt-in; the calibrated table is untouched");
     }
 }

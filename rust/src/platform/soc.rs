@@ -125,15 +125,58 @@ impl Soc {
         scale: &PaperScale,
         target: TargetId,
     ) -> Result<u64> {
+        self.call_scaled_ns_with(&self.cost, kind, scale, target)
+    }
+
+    /// [`Self::call_scaled_ns`] priced from an explicit rate table —
+    /// the cost-model learner prices *beliefs* from `self.cost` while
+    /// the simulated hardware keeps following a snapshot, so the
+    /// feedback loop cannot distort the physics it estimates.
+    pub fn call_scaled_ns_with(
+        &self,
+        cost: &CostModel,
+        kind: WorkloadKind,
+        scale: &PaperScale,
+        target: TargetId,
+    ) -> Result<u64> {
+        self.priced_call_ns(cost, kind, scale, target, true)
+    }
+
+    /// Like [`Self::call_scaled_ns`] but *without* health derating of
+    /// the compute term — for rate rows the learner has already updated
+    /// from measurements, where the observed slowdown is baked into the
+    /// rate itself and derating again would double-count it.  A failed
+    /// target still errors.
+    pub fn call_scaled_measured_ns(
+        &self,
+        kind: WorkloadKind,
+        scale: &PaperScale,
+        target: TargetId,
+    ) -> Result<u64> {
+        self.priced_call_ns(&self.cost, kind, scale, target, false)
+    }
+
+    /// The one pricing formula behind every `call_scaled_*` variant:
+    /// compute from `cost`'s rate row (health-derated unless the rate
+    /// already embodies it) plus the transport overhead for remote
+    /// targets.  A failed target errors regardless of derating.
+    fn priced_call_ns(
+        &self,
+        cost: &CostModel,
+        kind: WorkloadKind,
+        scale: &PaperScale,
+        target: TargetId,
+        derate: bool,
+    ) -> Result<u64> {
         let t = self.target(target)?;
         let slow = t
             .health
             .slowdown()
             .ok_or_else(|| Error::Platform(format!("target {target} is failed")))?;
-        let rate = self.cost.rate_ns(kind, target).ok_or_else(|| {
+        let rate = cost.rate_ns(kind, target).ok_or_else(|| {
             Error::Platform(format!("no cost-model row for {kind:?} on {target}"))
         })?;
-        let compute = rate * scale.items * slow;
+        let compute = rate * scale.items * if derate { slow } else { 1.0 };
         let overhead = if target.is_host() { 0 } else { t.transport.dispatch_ns(scale) };
         Ok(compute as u64 + overhead)
     }

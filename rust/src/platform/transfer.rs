@@ -32,7 +32,25 @@ impl TransferModel {
 
     /// Total dispatch overhead for a parameter block of `param_bytes`.
     pub fn dispatch_ns(&self, param_bytes: u64) -> u64 {
-        self.dispatch_fixed_ns + (self.per_param_byte_ns * param_bytes as f64) as u64
+        self.dispatch_fixed_ns + self.variable_ns(param_bytes)
+    }
+
+    /// The per-call part of the overhead (parameter staging); paid by
+    /// every member of a batch.
+    pub fn variable_ns(&self, param_bytes: u64) -> u64 {
+        (self.per_param_byte_ns * param_bytes as f64) as u64
+    }
+
+    /// Overhead of dispatching a *batch* of calls in one transport
+    /// setup: the fixed code-load/IPC/coherency cost is paid once for
+    /// the group, parameter staging stays per call.  An empty batch
+    /// costs nothing.
+    pub fn dispatch_batch_ns(&self, param_bytes: &[u64]) -> u64 {
+        if param_bytes.is_empty() {
+            return 0;
+        }
+        self.dispatch_fixed_ns
+            + param_bytes.iter().map(|&b| self.variable_ns(b)).sum::<u64>()
     }
 }
 
@@ -59,5 +77,17 @@ mod tests {
     fn monotone_in_param_bytes() {
         let t = TransferModel::dm3730();
         assert!(t.dispatch_ns(1 << 20) > t.dispatch_ns(1 << 10));
+    }
+
+    #[test]
+    fn batched_dispatch_amortizes_the_fixed_setup() {
+        let t = TransferModel::dm3730();
+        let blocks = [64u64, 64, 128, 256];
+        let solo: u64 = blocks.iter().map(|&b| t.dispatch_ns(b)).sum();
+        let batched = t.dispatch_batch_ns(&blocks);
+        // Exactly (n-1) setups saved; staging still paid per call.
+        assert_eq!(solo - batched, 3 * t.dispatch_fixed_ns);
+        assert_eq!(t.dispatch_batch_ns(&[]), 0);
+        assert_eq!(t.dispatch_batch_ns(&[64]), t.dispatch_ns(64));
     }
 }

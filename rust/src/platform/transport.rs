@@ -74,9 +74,32 @@ impl MpiModel {
     /// the split between directions is already folded into
     /// `payload_bytes`).
     pub fn dispatch_ns(&self, payload_bytes: u64) -> u64 {
+        self.batch_setup_ns() + self.variable_ns(payload_bytes)
+    }
+
+    /// The once-per-batch fixed part: remote code load plus the
+    /// request/response round trip.  Coalesced dispatches share one
+    /// setup and one round trip; their payloads still ride the wire
+    /// individually.
+    pub fn batch_setup_ns(&self) -> u64 {
+        self.setup_ns + 2 * self.latency_ns
+    }
+
+    /// The per-call part: wire time + serialization for one payload.
+    pub fn variable_ns(&self, payload_bytes: u64) -> u64 {
         let wire = payload_bytes as f64 / self.bandwidth_bps * 1e9;
         let serde_cost = payload_bytes as f64 * self.serialize_ns_per_byte;
-        self.setup_ns + 2 * self.latency_ns + (wire + serde_cost) as u64
+        (wire + serde_cost) as u64
+    }
+
+    /// Cost of shipping a batch of payloads in one transport setup:
+    /// setup + round trip once, wire/serde per payload.
+    pub fn dispatch_batch_ns(&self, payload_bytes: &[u64]) -> u64 {
+        if payload_bytes.is_empty() {
+            return 0;
+        }
+        self.batch_setup_ns()
+            + payload_bytes.iter().map(|&b| self.variable_ns(b)).sum::<u64>()
     }
 }
 
@@ -107,6 +130,46 @@ impl Transport {
                 m.dispatch_ns(scale.payload_bytes + scale.param_bytes)
             }
         }
+    }
+
+    /// The fixed, scale-independent part of the dispatch overhead — the
+    /// cost a *batch* of coalesced dispatches pays exactly once (code
+    /// load + IPC + coherency for shared memory; setup + round-trip
+    /// latency for message passing).
+    pub fn batch_setup_ns(&self) -> u64 {
+        match self {
+            Transport::SharedMemory(t) => t.dispatch_fixed_ns,
+            Transport::MessagePassing(m) => m.batch_setup_ns(),
+        }
+    }
+
+    /// The per-call part of the dispatch overhead (parameter staging,
+    /// or wire + serde for message passing) — paid by every batch
+    /// member individually.
+    pub fn dispatch_variable_ns(&self, scale: &PaperScale) -> u64 {
+        match self {
+            Transport::SharedMemory(t) => t.variable_ns(scale.param_bytes),
+            Transport::MessagePassing(m) => {
+                m.variable_ns(scale.payload_bytes + scale.param_bytes)
+            }
+        }
+    }
+
+    /// Total overhead of dispatching `scales` as one coalesced batch:
+    /// the fixed setup once, the variable cost per call.  Equals
+    /// `dispatch_ns` for a batch of one; an empty batch is free.
+    ///
+    /// This is the canonical *aggregate* form of the same
+    /// `batch_setup_ns` + `dispatch_variable_ns` split the coordinator
+    /// charges per member at flush (leader: setup + variable,
+    /// followers: variable) — change the split primitives, not the
+    /// compositions, and both stay in lockstep.
+    pub fn dispatch_batch_ns(&self, scales: &[PaperScale]) -> u64 {
+        if scales.is_empty() {
+            return 0;
+        }
+        self.batch_setup_ns()
+            + scales.iter().map(|s| self.dispatch_variable_ns(s)).sum::<u64>()
     }
 
     pub fn name(&self) -> &'static str {
@@ -152,6 +215,40 @@ mod tests {
     fn setup_and_latency_floor_apply_to_empty_payloads() {
         let m = MpiModel::embedded_ethernet();
         assert_eq!(m.dispatch_ns(0), m.setup_ns + 2 * m.latency_ns);
+    }
+
+    #[test]
+    fn batch_pays_setup_once_and_variable_per_call() {
+        for t in [
+            Transport::default(),
+            Transport::MessagePassing(MpiModel::cluster_10gbe()),
+        ] {
+            let scale = paper_scale(WorkloadKind::Matmul);
+            let one = t.dispatch_ns(&scale);
+            assert_eq!(t.dispatch_batch_ns(&[scale]), one, "{}", t.name());
+            let four = t.dispatch_batch_ns(&[scale; 4]);
+            let saved = 4 * one - four;
+            assert_eq!(saved, 3 * t.batch_setup_ns(), "{}", t.name());
+            // Decomposition is exact: fixed + variable == per-call price.
+            assert_eq!(
+                t.batch_setup_ns() + t.dispatch_variable_ns(&scale),
+                one,
+                "{}",
+                t.name()
+            );
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_free() {
+        assert_eq!(Transport::default().dispatch_batch_ns(&[]), 0);
+        assert_eq!(MpiModel::embedded_ethernet().dispatch_batch_ns(&[]), 0);
+    }
+
+    #[test]
+    fn mpi_batch_setup_includes_the_round_trip() {
+        let m = MpiModel::embedded_ethernet();
+        assert_eq!(m.batch_setup_ns(), m.setup_ns + 2 * m.latency_ns);
     }
 
     #[test]

@@ -197,12 +197,24 @@ fn prop_decision_tree_never_panics_on_noise() {
 /// A 4-unit coordinator (host + DSP + two data-registered units), every
 /// workload priced everywhere, always-offload so remote units see load.
 fn multi_target_vpe(seed: u64) -> (vpe::coordinator::Vpe, Vec<TargetId>) {
+    multi_target_vpe_with(seed, 2, 8)
+}
+
+/// [`multi_target_vpe`] with explicit bounded-queue depth and batch
+/// width caps (the batching property tests need room to coalesce).
+fn multi_target_vpe_with(
+    seed: u64,
+    max_queue: usize,
+    max_batch: usize,
+) -> (vpe::coordinator::Vpe, Vec<TargetId>) {
     use vpe::coordinator::policy::AlwaysOffloadPolicy;
     use vpe::coordinator::VpeConfig;
     use vpe::platform::{TargetSpec, TransferModel, Transport};
 
     let mut cfg = VpeConfig::sim_only();
     cfg.seed = seed;
+    cfg.max_queue_per_target = max_queue;
+    cfg.max_batch_width = max_batch;
     let mut v = vpe::coordinator::Vpe::with_policy(cfg, Box::new(AlwaysOffloadPolicy))
         .expect("vpe");
     let mut targets = vec![dm3730::ARM, dm3730::DSP];
@@ -424,6 +436,121 @@ fn prop_mixed_sharded_and_unsharded_submits_keep_queue_invariants() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// Batched dispatch (same-target coalescing into one transport setup)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batched_mixed_traffic_keeps_invariants_and_saves_exact_setup() {
+    prop::check("batched + sharded + plain submits", 40, |g| {
+        // Queue bound 4 / batch cap 3: batches really form, the width
+        // cap really bites, and traffic beyond the bound still bounces.
+        let (mut v, targets) = multi_target_vpe_with(g.u64_in(0, u64::MAX - 1), 4, 3);
+        let kinds = [WorkloadKind::Matmul, WorkloadKind::Dotprod, WorkloadKind::Conv2d];
+        let mut fns = Vec::new();
+        for kind in kinds {
+            fns.push(v.register_workload(kind).expect("register"));
+        }
+        let mut logical = 0u64;
+        let mut records = Vec::new();
+        for _ in 0..g.usize_in(8, 40) {
+            match g.usize_in(0, 4) {
+                0 | 1 => {
+                    v.submit(*g.choose(&fns)).expect("submit");
+                    logical += 1;
+                }
+                2 => {
+                    let tickets = v.submit_sharded(*g.choose(&fns)).expect("submit_sharded");
+                    assert_prop(!tickets.is_empty(), "sharded submit returned no tickets")?;
+                    logical += 1;
+                }
+                _ => {
+                    records.extend(v.drain().expect("drain"));
+                }
+            }
+        }
+        records.extend(v.drain().expect("drain"));
+
+        // Exactly-once retirement, balanced counters, no staging leaks.
+        assert_prop(
+            records.len() as u64 == logical,
+            format!("retired {} != submitted {logical}", records.len()),
+        )?;
+        assert_prop(v.in_flight() == 0, "queue must be empty after a full drain")?;
+        assert_prop(
+            v.dispatches_submitted() == v.dispatches_retired(),
+            "dispatch counters diverge",
+        )?;
+        assert_prop(v.soc().shared.used_bytes() == 0, "staged params leaked")?;
+
+        // Every flushed batch saved exactly (width-1) x its target's
+        // fixed transport setup, within the width cap; the queue's
+        // cumulative counter agrees with the event log.
+        let mut total_saved = 0u64;
+        for (_, target, width, saved) in v.events().batches() {
+            let setup =
+                v.soc().target(target).expect("registered").transport.batch_setup_ns();
+            assert_prop(
+                (2..=3).contains(&width),
+                format!("batch width {width} outside [2, cap]"),
+            )?;
+            assert_prop(
+                saved == (width as u64 - 1) * setup,
+                format!("batch on {target}: saved {saved} != ({width}-1) * {setup}"),
+            )?;
+            total_saved += saved;
+        }
+        assert_prop(
+            v.saved_setup_ns() == total_saved,
+            format!("saved counter {} != event sum {total_saved}", v.saved_setup_ns()),
+        )?;
+
+        // Per-target serialization over plain-call windows + per-shard
+        // windows (batch members included — they are ordinary records).
+        let mut windows: Vec<(TargetId, u64, u64)> = records
+            .iter()
+            .filter(|r| r.shards == 1)
+            .map(|r| (r.target, r.start_ns, r.complete_ns))
+            .collect();
+        windows.extend(v.events().shard_windows());
+        for &t in &targets {
+            let mut on_t: Vec<_> = windows.iter().filter(|w| w.0 == t).collect();
+            on_t.sort_by_key(|w| w.1);
+            for p in on_t.windows(2) {
+                assert_prop(
+                    p[1].1 >= p[0].2,
+                    format!("overlap on {t}: {:?} then {:?}", p[0], p[1]),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn half_full_batch_flushes_on_drain() {
+    // Regression: a forming batch below the width cap must flush the
+    // moment the caller drains — latency never waits on a batch that
+    // will not fill.
+    use vpe::coordinator::policy::AlwaysOffloadPolicy;
+    use vpe::coordinator::{Vpe, VpeConfig};
+    let mut cfg = VpeConfig::sim_only();
+    cfg.max_batch_width = 4;
+    cfg.max_queue_per_target = 4;
+    let mut v = Vpe::with_policy(cfg, Box::new(AlwaysOffloadPolicy)).unwrap();
+    let f = v.register_workload(WorkloadKind::Conv2d).unwrap();
+    v.call(f).unwrap(); // offloads to the DSP
+    v.submit(f).unwrap();
+    v.submit(f).unwrap();
+    assert_eq!(v.in_flight(), 2, "half-full batch is forming");
+    let recs = v.drain().unwrap();
+    assert_eq!(recs.len(), 2, "drain must flush the half-full batch");
+    assert_eq!(v.in_flight(), 0);
+    let batches = v.events().batches();
+    assert_eq!(batches.len(), 1, "one coalesced flush expected");
+    assert_eq!(batches[0].2, 2, "flushed at width 2, not the cap of 4");
 }
 
 // ---------------------------------------------------------------------------
