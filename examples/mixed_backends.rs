@@ -1,0 +1,151 @@
+//! Mixed execution backends — the per-target backend selection
+//! acceptance demo.
+//!
+//! PR 1 made the *unit set* data; this example shows the *engine set*
+//! is data too.  It builds a platform where two simulated DSP-class
+//! units (`BackendKind::Sim`: calibrated timing, no numerics) sit next
+//! to two real multicore units (`BackendKind::Rayon`: genuine thread
+//! pools computing the reference numerics, wall-clocked), then:
+//!
+//! 1. lets the policy commit a hot matmul to the best-priced multicore
+//!    unit and the cost-model learner replace its seeded rate with the
+//!    *measured* wall-clock rate — asserting the learned row lands
+//!    within 2x of the measured mean (the paper's warm-up-then-win
+//!    loop, running on real hardware instead of calibrated constants);
+//! 2. fans one large matmul out across *both* engine kinds at once and
+//!    asserts the reassembled output is bit-exact against the
+//!    reference — a batch never spans engines (batches are per-target),
+//!    but a fan-out happily mixes them.
+//!
+//! `cargo run --release --example mixed_backends`
+
+use std::collections::HashSet;
+
+use vpe::coordinator::policy::AlwaysOffloadPolicy;
+use vpe::coordinator::{Vpe, VpeConfig};
+use vpe::platform::{BackendKind, TargetId, TargetSpec, TransferModel, Transport};
+use vpe::workloads::{matmul_scale, WorkloadKind};
+
+fn add_unit(vpe: &mut Vpe, name: &str, backend: BackendKind, seed_rate: f64) -> TargetId {
+    let id = vpe.soc_mut().add_target(
+        TargetSpec::new(name, 1_000_000_000)
+            .with_backend(backend)
+            .with_transport(Transport::SharedMemory(TransferModel {
+                dispatch_fixed_ns: 1_000_000, // on-die-class link: 1 ms setup
+                per_param_byte_ns: 1.0,
+            })),
+    );
+    vpe.soc_mut().cost.set_rate(WorkloadKind::Matmul, id, seed_rate);
+    id
+}
+
+fn main() -> vpe::Result<()> {
+    let mut cfg = VpeConfig::default(); // reference numerics for default units
+    cfg.exec_noise_frac = 0.0;
+    cfg.learn_rates = true; // measured wall feeds the cost model
+    cfg.rate_learn_alpha = 0.5;
+    cfg.rayon_threads = 2;
+    let mut vpe = Vpe::with_policy(cfg, Box::new(AlwaysOffloadPolicy))?;
+
+    // -- the engine set is data ----------------------------------------------
+    // Two simulated DSP-class units: calibrated physics, no numerics.
+    let sim0 = add_unit(&mut vpe, "sim-dsp-0", BackendKind::Sim, 3.0);
+    let sim1 = add_unit(&mut vpe, "sim-dsp-1", BackendKind::Sim, 3.6);
+    // Two real multicore units: their seeded rates are deliberately
+    // rough guesses — the learner will replace them with measurements.
+    let mc0 = add_unit(&mut vpe, "multicore-0", BackendKind::Rayon, 0.6);
+    let mc1 = add_unit(&mut vpe, "multicore-1", BackendKind::Rayon, 0.8);
+    println!("platform: {} units", vpe.soc().registry.len());
+    for (id, spec) in vpe.soc().targets() {
+        println!("  [{id}] {:<24} engine {}", spec.name, vpe.backend_name_on(id));
+    }
+
+    // Register everything up front (the module finalizes at the first
+    // call): the phase-1 stream at 128x128 and the phase-2 fan-out at
+    // 512x512.
+    let f = vpe.register_workload(WorkloadKind::Matmul)?; // 128x128
+    let big = vpe.register_matmul(512)?;
+
+    // -- phase 1: warm-up, then honest measured prices ------------------------
+    let recs = vpe.run(f, 18)?;
+    let committed = vpe.current_target(f)?;
+    println!(
+        "\nphase 1 — matmul committed to [{committed}] {} ({})",
+        vpe.target_name(committed),
+        vpe.backend_name_on(committed),
+    );
+    assert_eq!(committed, mc0, "the best-priced multicore unit must win");
+
+    let items = matmul_scale(128).items;
+    let measured: Vec<f64> = recs
+        .iter()
+        .filter(|r| r.target == mc0)
+        .filter_map(|r| r.wall)
+        .map(|w| w.as_nanos() as f64 / items)
+        .collect();
+    assert!(measured.len() >= 10, "multicore-0 must have served the stream");
+    let mean = measured.iter().sum::<f64>() / measured.len() as f64;
+    let learned = vpe.soc().cost.rate_ns(WorkloadKind::Matmul, mc0).expect("row");
+    println!(
+        "  measured {:>7.3} ns/item over {} calls | learned row {:>7.3} ns/item (seed 0.600)",
+        mean,
+        measured.len(),
+        learned
+    );
+    assert!(
+        learned / mean < 2.0 && mean / learned < 2.0,
+        "learned rate {learned} must converge within 2x of measured {mean}"
+    );
+    // Every real execution verified against the reference oracle.
+    assert!(recs
+        .iter()
+        .filter(|r| r.target == mc0)
+        .all(|r| r.output_ok == Some(true)));
+    // The ranking now prices the real engine from measurements.
+    println!("  candidate ranking (honest prices after warm-up):");
+    for c in vpe.candidates(f)? {
+        println!(
+            "    [{}] {:<24} predicted {:>9.3} ms",
+            c.target,
+            vpe.target_name(c.target),
+            c.predicted_ns as f64 / 1e6
+        );
+    }
+
+    // -- phase 2: one call fanned out across BOTH engine kinds ----------------
+    let rec = vpe.call_sharded(big)?;
+    let on: HashSet<TargetId> = vpe.events().shard_windows().iter().map(|w| w.0).collect();
+    println!(
+        "\nphase 2 — 512x512 matmul fanned out across {} shards on {:?} (makespan {:.3} ms)",
+        rec.shards,
+        {
+            let mut names: Vec<String> = on.iter().map(|t| vpe.target_name(*t)).collect();
+            names.sort();
+            names
+        },
+        rec.exec_ns as f64 / 1e6
+    );
+    assert!(rec.shards >= 2, "must actually fan out: {rec:?}");
+    assert_eq!(
+        rec.output_ok,
+        Some(true),
+        "reassembly across sim + rayon engines must be bit-exact"
+    );
+    assert!(
+        on.contains(&sim0) || on.contains(&sim1),
+        "a simulated unit must take a shard: {on:?}"
+    );
+    assert!(
+        on.contains(&mc0) || on.contains(&mc1),
+        "a real multicore unit must take a shard: {on:?}"
+    );
+    assert_eq!(vpe.in_flight(), 0);
+    assert_eq!(vpe.soc().shared.used_bytes(), 0);
+
+    println!("\n{}", vpe.report());
+    println!(
+        "two engines behind one dispatch interface: simulated physics and a real \
+         thread pool ranked, learned, and fanned out together."
+    );
+    Ok(())
+}

@@ -4,9 +4,10 @@
 //! it, notices it is hot, moves it to the DSP, and your loop gets faster
 //! — no code changes, no toolchain knowledge.
 //!
-//! Run with `cargo run --release --example quickstart` (after
-//! `make artifacts`; falls back to simulation-only when artifacts are
-//! missing).
+//! Run with `cargo run --release --example quickstart`.  Real numerics
+//! come from the pure-Rust reference backend by default (PJRT artifact
+//! execution is opt-in via `--features pjrt` + `python/compile`); the
+//! example falls back to simulation-only if construction fails.
 
 use vpe::coordinator::{Vpe, VpeConfig};
 use vpe::platform::dm3730;

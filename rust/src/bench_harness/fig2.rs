@@ -40,12 +40,16 @@ pub fn fig2a(samples: usize) -> Result<Table> {
 /// One point of the Fig 2b sweep.
 #[derive(Debug, Clone, Copy)]
 pub struct Fig2bPoint {
+    /// Matrix size.
     pub n: u64,
+    /// Simulated ARM time, ms.
     pub arm_ms: f64,
+    /// Simulated DSP-under-VPE time (incl. dispatch setup), ms.
     pub dsp_ms: f64,
 }
 
 impl Fig2bPoint {
+    /// Which unit wins at this size.
     pub fn winner(&self) -> TargetId {
         if self.dsp_ms < self.arm_ms {
             dm3730::DSP

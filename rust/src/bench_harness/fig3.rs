@@ -26,7 +26,9 @@ use crate::workloads::{conv2d, PaperScale};
 pub mod stage {
     /// Frame is 600x600, contour kernel 9x9 (paper uses a square kernel).
     pub const FRAME_W: u64 = 600;
+    /// Frame height (square frames).
     pub const FRAME_H: u64 = 600;
+    /// Contour kernel side.
     pub const KERNEL: u64 = 9;
     /// Video decode, per frame (ms).
     pub const DECODE_MS: f64 = 40.0;
@@ -35,6 +37,7 @@ pub mod stage {
     /// Display/render (ms).
     pub const DISPLAY_MS: f64 = 15.0;
 
+    /// Inner-loop items of one frame's convolution (H·W·k²).
     pub fn conv_items() -> f64 {
         (FRAME_W * FRAME_H * KERNEL * KERNEL) as f64
     }
@@ -43,6 +46,7 @@ pub mod stage {
 /// Per-frame record of the simulated pipeline.
 #[derive(Debug, Clone, Copy)]
 pub struct FrameStat {
+    /// Frame index, 0-based.
     pub frame: usize,
     /// Pipeline time for this frame, ms.
     pub frame_ms: f64,
@@ -57,10 +61,15 @@ pub struct FrameStat {
 /// Summary of a Fig 3 run.
 #[derive(Debug, Clone)]
 pub struct Fig3Summary {
+    /// Per-frame records, in order.
     pub frames: Vec<FrameStat>,
+    /// Mean frame rate before the offload, fps.
     pub fps_before: f64,
+    /// Mean frame rate after the offload, fps.
     pub fps_after: f64,
+    /// Mean CPU load before the offload (fraction).
     pub cpu_before: f64,
+    /// Mean CPU load after the offload (fraction).
     pub cpu_after: f64,
     /// Frame index at which VPE moved the convolution to the DSP.
     pub offload_frame: Option<usize>,
@@ -69,6 +78,7 @@ pub struct Fig3Summary {
 }
 
 impl Fig3Summary {
+    /// Frame-rate improvement (after / before).
     pub fn fps_ratio(&self) -> f64 {
         self.fps_after / self.fps_before
     }

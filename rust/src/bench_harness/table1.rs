@@ -26,19 +26,24 @@ pub fn paper_values(kind: WorkloadKind) -> (f64, f64, f64, f64, f64) {
 /// One regenerated row.
 #[derive(Debug, Clone)]
 pub struct Table1Row {
+    /// The workload of this row.
     pub kind: WorkloadKind,
-    /// Normal execution (ARM, no profiling): mean / std, ms.
+    /// Normal execution (ARM, no profiling): mean, ms.
     pub normal_ms: f64,
+    /// Normal execution: standard deviation, ms.
     pub normal_std_ms: f64,
-    /// VPE (on the DSP, profiler running): mean / std, ms.
+    /// VPE (on the DSP, profiler running): mean, ms.
     pub vpe_ms: f64,
+    /// VPE execution: standard deviation, ms.
     pub vpe_std_ms: f64,
+    /// End-to-end speedup (normal / VPE).
     pub speedup: f64,
     /// Blind policy's final target after the observe window ("DSP" or
     /// "ARM (reverted)").
     pub final_target: TargetId,
     /// Real PJRT wall times (naive vs dsp artifact), if artifacts exist.
     pub wall_naive_ms: Option<f64>,
+    /// Real wall time of the tuned (dsp) artifact, if artifacts exist.
     pub wall_dsp_ms: Option<f64>,
 }
 

@@ -75,6 +75,9 @@ pub fn apply(base: VpeConfig, doc: &Json) -> Result<VpeConfig> {
         }
         cfg.rate_learn_alpha = v;
     }
+    if let Some(v) = u64_of(doc, "rayon_threads")? {
+        cfg.rayon_threads = v as usize;
+    }
     if let Some(s) = doc.get("sampler") {
         if let Some(v) = bool_of(s, "enabled")? {
             cfg.sampler.enabled = v;
@@ -144,6 +147,7 @@ mod tests {
             "max_batch_width": 6,
             "learn_rates": true,
             "rate_learn_alpha": 0.4,
+            "rayon_threads": 3,
             "sampler": {"enabled": true, "overhead_frac": 0.10,
                         "analysis_period": 4, "burst_mean_ms": 50, "burst_std_ms": 10},
             "detector": {"min_samples": 3, "share_threshold": 0.25},
@@ -160,6 +164,7 @@ mod tests {
         assert_eq!(cfg.max_batch_width, 6);
         assert!(cfg.learn_rates);
         assert_eq!(cfg.rate_learn_alpha, 0.4);
+        assert_eq!(cfg.rayon_threads, 3);
         assert_eq!(cfg.sampler.overhead_frac, 0.10);
         assert_eq!(cfg.sampler.analysis_period, 4);
         assert_eq!(cfg.sampler.burst_mean_ns, 50e6);

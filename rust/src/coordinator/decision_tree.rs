@@ -16,7 +16,9 @@ use crate::platform::TargetId;
 /// One labeled observation: workload size and which target won.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Observation {
+    /// The size feature (e.g. matrix dimension).
     pub size: f64,
+    /// The unit that won at this size.
     pub best: TargetId,
 }
 
@@ -140,6 +142,7 @@ impl DecisionTree {
         }
     }
 
+    /// Number of observations the tree was fitted on.
     pub fn n_train(&self) -> usize {
         self.n_train
     }

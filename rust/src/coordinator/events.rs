@@ -19,14 +19,27 @@ pub enum RevertReason {
 /// One event in VPE's life.
 #[derive(Debug, Clone, PartialEq)]
 pub enum VpeEvent {
+    /// A function joined the module under the given display name.
     FunctionRegistered { function: FunctionId, name: String },
+    /// The module finalized with this many functions; wrappers injected.
     ModuleFinalized { functions: usize },
+    /// The detector nominated the function as the current hotspot.
     HotspotDetected { function: FunctionId, cycle_share: f64 },
+    /// A policy moved the function's dispatch slot to a remote unit.
     Offloaded { function: FunctionId, to: TargetId },
+    /// The function went back to the host.
     Reverted { function: FunctionId, reason: RevertReason },
+    /// The function's remote unit became unusable mid-run; its dispatch
+    /// failed over to the host.
     TargetFailedOver { function: FunctionId, target: TargetId },
+    /// A real execution's output differed from the reference oracle.
     OutputMismatch { function: FunctionId, target: TargetId },
+    /// The profiler ran one of its periodic analysis bursts.
     AnalysisBurst { cost_ns: u64 },
+    /// A non-default execution engine was instantiated for `target` (at
+    /// the target's first dispatch; see
+    /// [`crate::platform::BackendKind`]).
+    BackendBound { target: TargetId, backend: &'static str },
     /// A dispatch had to wait for its target (queued behind an earlier
     /// in-flight call) — only logged when the wait is non-zero, to keep
     /// the trace readable.
@@ -65,22 +78,27 @@ pub struct EventLog {
 }
 
 impl EventLog {
+    /// An empty log.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append one event at the given sim time.
     pub fn push(&mut self, at_ns: u64, event: VpeEvent) {
         self.entries.push((at_ns, event));
     }
 
+    /// Iterate all `(sim-time ns, event)` entries in insertion order.
     pub fn iter(&self) -> impl Iterator<Item = &(u64, VpeEvent)> {
         self.entries.iter()
     }
 
+    /// Number of recorded events.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when nothing has been recorded yet.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

@@ -68,6 +68,7 @@ pub struct HysteresisPolicy {
 }
 
 impl HysteresisPolicy {
+    /// A policy with the given hysteresis configuration.
     pub fn new(cfg: HysteresisConfig) -> Self {
         HysteresisPolicy {
             cfg,
@@ -205,6 +206,7 @@ pub struct PredictivePolicy {
 }
 
 impl PredictivePolicy {
+    /// A policy deciding from the given static model.
     pub fn new(model: StaticModel) -> Self {
         PredictivePolicy { model, ..Default::default() }
     }
@@ -264,6 +266,7 @@ pub struct FanOutPolicy {
 }
 
 impl FanOutPolicy {
+    /// A policy with the given fan-out configuration.
     pub fn new(cfg: FanOutConfig) -> Self {
         FanOutPolicy { cfg, decided: HashMap::new() }
     }
@@ -322,11 +325,13 @@ impl OffloadPolicy for FanOutPolicy {
 /// arm (host or any candidate) with the best measured mean.
 #[derive(Debug)]
 pub struct EpsilonGreedyPolicy {
+    /// Exploration probability, in `[0, 1]`.
     pub epsilon: f64,
     rng: SimRng,
 }
 
 impl EpsilonGreedyPolicy {
+    /// A bandit exploring with probability `epsilon` (seeded RNG).
     pub fn new(epsilon: f64, seed: u64) -> Self {
         EpsilonGreedyPolicy { epsilon, rng: SimRng::seeded(seed) }
     }

@@ -24,6 +24,7 @@ use super::events::RevertReason;
 /// One dispatchable non-host target for the function under decision.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Candidate {
+    /// The unit this candidate describes.
     pub target: TargetId,
     /// Cost-model estimate for one lone call at the current scale
     /// (compute + full dispatch overhead + health derating), ns.
@@ -48,7 +49,9 @@ impl Candidate {
 /// Everything a policy may look at when deciding about one function.
 #[derive(Debug)]
 pub struct PolicyCtx<'a> {
+    /// The function under decision.
     pub function: FunctionId,
+    /// Its measured profile (per-target call times).
     pub profile: &'a FunctionProfile,
     /// Where the wrapper currently points.
     pub current: TargetId,
@@ -62,6 +65,7 @@ pub struct PolicyCtx<'a> {
     /// the BAAR-like [`super::policies_ext::PredictivePolicy`] — decide
     /// on this alone).
     pub op_mix: crate::jit::module::OpMix,
+    /// Deepest loop nesting in the function body (JIT metadata).
     pub loop_depth: u32,
 }
 
@@ -75,7 +79,9 @@ impl PolicyCtx<'_> {
 /// What the policy wants done.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum PolicyAction {
+    /// Move the function's dispatch slot to the given unit.
     Offload { to: TargetId },
+    /// Send the function back to the host.
     Revert { reason: RevertReason },
     /// Fan subsequent calls of the function out across up to `width`
     /// units at once (the sharded dispatch path,
@@ -86,6 +92,7 @@ pub enum PolicyAction {
 
 /// An off-load decision policy.
 pub trait OffloadPolicy: Send {
+    /// Policy name, for reports and traces.
     fn name(&self) -> &'static str;
 
     /// Called after every profiled call of a function.
@@ -146,10 +153,12 @@ pub struct BlindOffloadPolicy {
 }
 
 impl BlindOffloadPolicy {
+    /// A policy with the given window/margin/retry configuration.
     pub fn new(cfg: BlindOffloadConfig) -> Self {
         BlindOffloadPolicy { cfg, state: HashMap::new() }
     }
 
+    /// The lifecycle phase `f` is currently in (for reports/tests).
     pub fn phase_name(&self, f: FunctionId) -> &'static str {
         match self.state.get(&f).and_then(|s| s.phase.as_ref()) {
             None | Some(Phase::Profiling) => "profiling",

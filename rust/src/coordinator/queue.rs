@@ -61,16 +61,20 @@ pub struct ShardSlice {
     pub index: usize,
     /// Total shards in the group.
     pub of: usize,
-    /// Output-unit range this shard computes.
+    /// First output unit this shard computes (inclusive).
     pub start: usize,
+    /// One past the last output unit this shard computes.
     pub end: usize,
 }
 
 /// One dispatched-but-not-yet-retired call.
 #[derive(Debug)]
 pub struct InFlight {
+    /// The dispatch's ticket (issue-ordered).
     pub ticket: TicketId,
+    /// The dispatched function.
     pub function: FunctionId,
+    /// The unit executing the dispatch.
     pub target: TargetId,
     /// Which wrapper invocation this was (1-based).
     pub iteration: u64,
@@ -100,9 +104,13 @@ pub struct InFlight {
 /// forming batch (not yet priced onto the target's timeline).
 #[derive(Debug)]
 pub struct PendingDispatch {
+    /// The dispatch's ticket (issue-ordered).
     pub ticket: TicketId,
+    /// The dispatched function.
     pub function: FunctionId,
+    /// The unit this dispatch is bound for.
     pub target: TargetId,
+    /// Which wrapper invocation this was (1-based).
     pub iteration: u64,
     /// Sim time the wrapper issued the dispatch.
     pub issue_ns: u64,
@@ -115,7 +123,9 @@ pub struct PendingDispatch {
     /// The once-per-batch fixed transport setup this dispatch would pay
     /// if it flushed alone.
     pub setup_ns: u64,
+    /// Parameter block staged in the shared region, freed at retirement.
     pub staged: Option<Allocation>,
+    /// Set when this dispatch is one shard of a fanned-out call.
     pub shard: Option<ShardSlice>,
 }
 
@@ -163,6 +173,7 @@ pub struct DispatchQueue {
 }
 
 impl DispatchQueue {
+    /// An empty queue.
     pub fn new() -> Self {
         Self::default()
     }
@@ -262,6 +273,7 @@ impl DispatchQueue {
         self.inflight.len() + self.forming.values().map(Vec::len).sum::<usize>()
     }
 
+    /// True when nothing is queued, executing, or forming.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

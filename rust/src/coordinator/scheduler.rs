@@ -18,6 +18,7 @@ pub struct TargetScheduler {
 }
 
 impl TargetScheduler {
+    /// A scheduler with every target free.
     pub fn new() -> Self {
         Self::default()
     }

@@ -35,6 +35,7 @@ use crate::platform::TargetId;
 /// One dispatchable unit, as the coordinator prices it for this call.
 #[derive(Debug, Clone, Copy)]
 pub struct PlanTarget {
+    /// The unit being priced.
     pub target: TargetId,
     /// Health-derated compute rate for this workload, ns per item.
     pub rate_ns_per_item: f64,
@@ -60,8 +61,11 @@ impl PlanTarget {
 /// One planned shard: output units `[start, end)` on `target`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PlannedShard {
+    /// The unit assigned this shard.
     pub target: TargetId,
+    /// First output unit of the shard (inclusive).
     pub start: usize,
+    /// One past the shard's last output unit.
     pub end: usize,
     /// Predicted completion offset from issue (fixed costs + compute).
     pub predicted_ns: u64,
@@ -79,6 +83,7 @@ pub struct ShardPlan {
 }
 
 impl ShardPlan {
+    /// The no-fan-out plan (callers fall back to a plain dispatch).
     pub fn empty() -> Self {
         Self::default()
     }

@@ -49,11 +49,15 @@ use super::vpe::CallRecord;
 /// One recorded call with the whole platform's (noise-free) prices.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceEntry {
+    /// The called function's id (`FunctionId.0`).
     pub function: u32,
+    /// The workload algorithm of the call.
     pub kind: WorkloadKind,
     /// What the recorded run actually did.
     pub executed_on: TargetId,
+    /// Simulated execution time of the recorded call, ns.
     pub exec_ns: u64,
+    /// Profiling cost charged on top of the recorded call, ns.
     pub profiling_ns: u64,
     /// Counterfactual price per registered unit (registry slot, ns),
     /// host first; units the cost model cannot price are absent.
@@ -75,6 +79,7 @@ impl TraceEntry {
 /// A recorded run.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Trace {
+    /// The recorded calls, in execution order.
     pub entries: Vec<TraceEntry>,
 }
 
@@ -230,10 +235,12 @@ impl Trace {
         Ok(Trace { entries })
     }
 
+    /// Write the trace to `path` as v2 JSON.
     pub fn save(&self, path: &Path) -> Result<()> {
         Ok(std::fs::write(path, self.to_json())?)
     }
 
+    /// Load a trace from `path` (v2, or v1 read-compat).
     pub fn load(path: &Path) -> Result<Self> {
         Self::from_json(&std::fs::read_to_string(path)?)
     }
@@ -242,13 +249,17 @@ impl Trace {
 /// Result of replaying a trace under a policy.
 #[derive(Debug, Clone)]
 pub struct ReplayOutcome {
+    /// Name of the replayed policy.
     pub policy: String,
+    /// Total re-priced time of the run, ms.
     pub total_ms: f64,
     /// Calls the replayed decision sequence priced on the host.
     pub host_calls: usize,
     /// Calls priced on any non-host unit.
     pub remote_calls: usize,
+    /// Offload decisions the replayed policy made.
     pub offloads: usize,
+    /// Revert decisions the replayed policy made.
     pub reverts: usize,
 }
 

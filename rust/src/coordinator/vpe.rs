@@ -35,7 +35,7 @@ use crate::jit::module::{FunctionId, IrFunction, IrModule};
 use crate::jit::symbols::DspToolchain;
 use crate::jit::wrapper::DispatchTable;
 use crate::platform::memory::Allocation;
-use crate::platform::registry::BuildKind;
+use crate::platform::registry::{BackendKind, BuildKind};
 use crate::platform::{Soc, TargetId};
 use crate::profiler::counters::CounterSample;
 use crate::profiler::hotspot::HotspotDetector;
@@ -59,22 +59,34 @@ pub struct VpeConfig {
     /// feature this selects the PJRT backend; without it, real numerics
     /// come from the pure-Rust reference backend.  `None` runs the
     /// coordinator sim-only (decisions and timing, no numerics) — used
-    /// by pure-simulation sweeps.
+    /// by pure-simulation sweeps.  This only chooses the *default*
+    /// engine: a unit whose [`crate::platform::TargetSpec::backend`]
+    /// binds an explicit [`BackendKind`] uses its own engine regardless
+    /// (a rayon-backed unit computes for real even under
+    /// [`VpeConfig::sim_only`]).  Default: `Some("artifacts")`.
     pub artifacts_dir: Option<PathBuf>,
+    /// `perf_event` sampler settings (overhead fraction, analysis
+    /// bursts).  Default: [`SamplerConfig::default`].
     pub sampler: SamplerConfig,
+    /// Hot-spot detector thresholds (minimum samples, cycle share).
+    /// Default: [`HotspotDetector::default`].
     pub detector: HotspotDetector,
+    /// Blind-offload policy settings, used by [`Vpe::new`] (observation
+    /// window, revert margin).  Default: [`BlindOffloadConfig::default`].
     pub blind: BlindOffloadConfig,
-    /// Seed for all simulated noise.
+    /// Seed for all simulated noise.  Default: `0xD3730`.
     pub seed: u64,
     /// Check every real execution's output against the pure-Rust
-    /// reference.
+    /// reference.  Default: `true`.
     pub verify_outputs: bool,
-    /// Relative stddev of per-call compute-time noise (the paper's
-    /// "normal execution" rows show ~0.2–1 %).
+    /// Relative stddev of per-call compute-time noise, as a fraction of
+    /// the call's simulated time (the paper's "normal execution" rows
+    /// show ~0.2–1 %).  Default: `0.008`.
     pub exec_noise_frac: f64,
     /// Maximum in-flight dispatches per remote target before a further
     /// submit bounces back to the host (the paper's "remote target is
     /// already busy" rule, §3.2, generalized to a bounded queue).
+    /// Default: `2` dispatches.
     pub max_queue_per_target: usize,
     /// Maximum dispatches coalesced into one batched transport setup.
     /// Queued remote submits bound for the same unit gather in a
@@ -84,6 +96,7 @@ pub struct VpeConfig {
     /// coalescing — every dispatch pays its own setup.  The achievable
     /// width is additionally capped by `max_queue_per_target` (traffic
     /// beyond the bound bounces to the host before it can coalesce).
+    /// Default: `8` dispatches.
     pub max_batch_width: usize,
     /// Feed measured execution back into the cost model: after every
     /// retired (unsharded) dispatch, EWMA-blend the observed ns/item —
@@ -92,9 +105,20 @@ pub struct VpeConfig {
     /// planner track reality (degradation, miscalibration) instead of
     /// the seeded rates.  Off by default: the paper's tables are
     /// reproduced from the calibrated constants.
+    ///
+    /// Units on a *measured* engine ([`BackendKind::Rayon`]) learn from
+    /// the real wall clock instead of the simulated time, so their rows
+    /// converge to genuine hardware rates.
     pub learn_rates: bool,
-    /// EWMA weight of one new observation when `learn_rates` is on.
+    /// EWMA weight of one new observation when `learn_rates` is on, in
+    /// `[0, 1]` (1 = trust only the latest measurement).  Default:
+    /// `0.25`.
     pub rate_learn_alpha: f64,
+    /// Worker threads for each [`BackendKind::Rayon`] unit's thread
+    /// pool (`0` = auto: one per available core).  Each rayon-backed
+    /// target gets its own pool instance, created at its first
+    /// dispatch.  Default: `0` (auto).
+    pub rayon_threads: usize,
 }
 
 impl Default for VpeConfig {
@@ -111,6 +135,7 @@ impl Default for VpeConfig {
             max_batch_width: 8,
             learn_rates: false,
             rate_learn_alpha: 0.25,
+            rayon_threads: 0,
         }
     }
 }
@@ -125,7 +150,9 @@ impl VpeConfig {
 /// Result of one call through VPE.
 #[derive(Debug, Clone, Copy)]
 pub struct CallRecord {
+    /// The function that was called.
     pub function: FunctionId,
+    /// Which wrapper invocation of the function this was (1-based).
     pub iteration: u64,
     /// Where the call actually executed.
     pub target: TargetId,
@@ -221,6 +248,11 @@ pub struct Vpe {
     clock: SimClock,
     rng: SimRng,
     backend: Box<dyn ExecutionBackend>,
+    /// Per-target engine instances for units bound to a non-default
+    /// [`BackendKind`], created lazily at each unit's first dispatch
+    /// (units can register at any time via `soc_mut().add_target`).
+    /// Units left at `BackendKind::Default` share `backend`.
+    target_backends: HashMap<TargetId, Box<dyn ExecutionBackend>>,
     toolchain: DspToolchain,
     bindings: HashMap<FunctionId, Binding>,
     scheduler: TargetScheduler,
@@ -310,6 +342,7 @@ impl Vpe {
             soc: Soc::dm3730(),
             clock: SimClock::new(),
             backend,
+            target_backends: HashMap::new(),
             toolchain: DspToolchain::standard(),
             bindings: HashMap::new(),
             scheduler: TargetScheduler::new(),
@@ -483,6 +516,14 @@ impl Vpe {
         scale: &PaperScale,
         target: TargetId,
     ) -> Result<u64> {
+        // Measured engines have no simulated physics to protect: once
+        // the learner has blended real wall-clock observations into a
+        // rayon-backed unit's row, that measured rate IS the unit's
+        // ground truth — the sim clock follows it (un-derated; the
+        // measurement already embodies any real slowdown).
+        if self.measured_engine(target) && self.learned_rows.contains(&(kind, target)) {
+            return self.soc.call_scaled_measured_ns(kind, scale, target);
+        }
         match &self.truth {
             // Rows added after the snapshot (a unit registered mid-run)
             // only exist in the live table — fall through for those.
@@ -506,6 +547,18 @@ impl Vpe {
     /// path, the paper's semantics).  Functions a policy fanned out
     /// ([`PolicyAction::FanOut`]) route through the shard planner
     /// transparently.
+    ///
+    /// ```
+    /// use vpe::coordinator::{Vpe, VpeConfig};
+    /// use vpe::workloads::WorkloadKind;
+    ///
+    /// let mut vpe = Vpe::new(VpeConfig::sim_only())?;
+    /// let f = vpe.register_workload(WorkloadKind::Dotprod)?;
+    /// let rec = vpe.call(f)?;
+    /// assert_eq!(rec.iteration, 1);
+    /// assert!(rec.exec_ns >= 1, "the clock always advances");
+    /// # Ok::<(), vpe::Error>(())
+    /// ```
     pub fn call(&mut self, f: FunctionId) -> Result<CallRecord> {
         if self.fanout.contains_key(&f) {
             return self.call_sharded(f);
@@ -520,6 +573,31 @@ impl Vpe {
     /// output and retires one aggregate record.  Falls back to a plain
     /// synchronous call when fanning out would not help (one unit,
     /// unshardable workload, tiny call).
+    ///
+    /// ```
+    /// use vpe::coordinator::{Vpe, VpeConfig};
+    /// use vpe::platform::{TargetSpec, TransferModel, Transport};
+    /// use vpe::workloads::WorkloadKind;
+    ///
+    /// let mut vpe = Vpe::new(VpeConfig::sim_only())?;
+    /// // Two cheap-transport accelerators join as data...
+    /// for (name, rate) in [("unit-a", 3.0), ("unit-b", 3.5)] {
+    ///     let id = vpe.soc_mut().add_target(
+    ///         TargetSpec::new(name, 1_000_000_000).with_transport(
+    ///             Transport::SharedMemory(TransferModel {
+    ///                 dispatch_fixed_ns: 1_000_000,
+    ///                 per_param_byte_ns: 1.0,
+    ///             }),
+    ///         ),
+    ///     );
+    ///     vpe.soc_mut().cost.set_rate(WorkloadKind::Matmul, id, rate);
+    /// }
+    /// let f = vpe.register_workload(WorkloadKind::Matmul)?;
+    /// // ...and one call spreads across them, retiring as one record.
+    /// let rec = vpe.call_sharded(f)?;
+    /// assert!(rec.shards >= 2, "the planner fanned the call out");
+    /// # Ok::<(), vpe::Error>(())
+    /// ```
     pub fn call_sharded(&mut self, f: FunctionId) -> Result<CallRecord> {
         self.call_sharded_impl(f, None).map(|(rec, _)| rec)
     }
@@ -574,6 +652,22 @@ impl Vpe {
     /// [`Vpe::drain`].  Functions a policy fanned out route through the
     /// shard planner; the returned ticket is the group's representative
     /// (the aggregate record retires under it).
+    ///
+    /// ```
+    /// use vpe::coordinator::{Vpe, VpeConfig};
+    /// use vpe::workloads::WorkloadKind;
+    ///
+    /// let mut vpe = Vpe::new(VpeConfig::sim_only())?;
+    /// let f = vpe.register_workload(WorkloadKind::Conv2d)?;
+    /// let t1 = vpe.submit(f)?;
+    /// let t2 = vpe.submit(f)?;
+    /// assert!(t1 < t2, "tickets are issue-ordered");
+    /// assert_eq!(vpe.in_flight(), 2);
+    /// let recs = vpe.drain()?; // completion-ordered retirement
+    /// assert_eq!(recs.len(), 2);
+    /// assert_eq!(vpe.in_flight(), 0);
+    /// # Ok::<(), vpe::Error>(())
+    /// ```
     pub fn submit(&mut self, f: FunctionId) -> Result<TicketId> {
         if self.fanout.contains_key(&f) {
             let tickets = self.submit_sharded(f)?;
@@ -1153,9 +1247,22 @@ impl Vpe {
         // batching never skews the learned compute rate.  Sharded
         // groups are excluded: a group makespan is not a single-unit
         // compute measurement.
+        //
+        // Units on a *measured* engine (rayon) learn from the real wall
+        // clock instead of the simulated time: their rows converge to
+        // genuine hardware rates, which is what lets the policy rank a
+        // real multicore engine against simulated units on honest
+        // prices.  (No overhead subtraction there — the wall clock
+        // times only the backend's compute, never the modeled
+        // transport.)
         if self.cfg.learn_rates && scale.items > 0.0 {
             let compute_ns = call.exec_ns.saturating_sub(call.overhead_ns).max(1);
-            let observed = compute_ns as f64 / scale.items;
+            let observed = match wall {
+                Some(w) if self.measured_engine(target) => {
+                    (w.as_nanos() as f64).max(1.0) / scale.items
+                }
+                _ => compute_ns as f64 / scale.items,
+            };
             if let Some(old) = self.soc.cost.rate_ns(kind, target) {
                 // Freeze the generator's view of the platform the
                 // moment beliefs start diverging from it.
@@ -1211,10 +1318,23 @@ impl Vpe {
             self.soc.shared.free(a)?;
         }
 
-        // Shard numerics always run through the pure-Rust reference
-        // engine: AOT artifacts are fixed-shape full calls, while shard
-        // shapes vary with the split (sim-only configs skip numerics).
-        let compute = self.cfg.artifacts_dir.is_some();
+        // Shard numerics run through the pure-Rust reference engine —
+        // AOT artifacts are fixed-shape full calls, while shard shapes
+        // vary with the split (sim-only configs skip numerics) — except
+        // on rayon-backed units, whose shards execute on the unit's own
+        // thread pool with a measured wall clock, so a fan-out can mix
+        // simulated and real-multicore participants and still
+        // reassemble bit-exact (both engines compute identical integer
+        // numerics).  An explicit rayon binding wins even under a
+        // sim-only config, exactly as on the plain-dispatch path (a
+        // group that mixes computing and non-computing shards simply
+        // skips the reassembly).
+        let backend_kind = self.backend_kind_on(target);
+        let compute =
+            self.cfg.artifacts_dir.is_some() || backend_kind == BackendKind::Rayon;
+        if backend_kind == BackendKind::Rayon {
+            self.ensure_backend(target)?;
+        }
         let binding = self.binding(f)?;
         let kind = binding.instance.kind;
         let scale = binding.instance.scale;
@@ -1227,9 +1347,23 @@ impl Vpe {
         let (part, wall) = if compute {
             let inputs =
                 workloads::shard::shard_inputs(kind, full_inputs, info.start, info.end)?;
-            let t0 = Instant::now();
-            let out = workloads::reference_output(kind, &inputs)?;
-            (Some(out), Some(t0.elapsed()))
+            if backend_kind == BackendKind::Rayon {
+                let artifact = binding.instance.artifact_naive.clone();
+                let req = ExecRequest { artifact: &artifact, kind, inputs: &inputs };
+                match self
+                    .target_backends
+                    .get_mut(&target)
+                    .expect("ensured above")
+                    .execute(&req)?
+                {
+                    Some((out, w)) => (Some(out), Some(w)),
+                    None => (None, None),
+                }
+            } else {
+                let t0 = Instant::now();
+                let out = workloads::reference_output(kind, &inputs)?;
+                (Some(out), Some(t0.elapsed()))
+            }
         } else {
             (None, None)
         };
@@ -1358,6 +1492,43 @@ impl Vpe {
         (0..iters).map(|_| self.call(f)).collect()
     }
 
+    /// The engine bound to `target` ([`crate::platform::TargetSpec::backend`]).
+    fn backend_kind_on(&self, target: TargetId) -> BackendKind {
+        self.soc.target(target).map(|s| s.backend).unwrap_or(BackendKind::Default)
+    }
+
+    /// Does `target`'s engine *measure* execution (real wall clock per
+    /// call)?  Measured rows feed the learner real time, and their
+    /// learned rates replace the simulated physics (see
+    /// [`Vpe::true_call_ns`]).
+    fn measured_engine(&self, target: TargetId) -> bool {
+        self.backend_kind_on(target) == BackendKind::Rayon
+    }
+
+    /// Instantiate `target`'s own engine if its spec binds one and it
+    /// does not exist yet.  After this returns `Ok`, a non-`Default`
+    /// target is guaranteed a `target_backends` entry.
+    fn ensure_backend(&mut self, target: TargetId) -> Result<()> {
+        let kind = self.backend_kind_on(target);
+        if kind == BackendKind::Default || self.target_backends.contains_key(&target) {
+            return Ok(());
+        }
+        let b: Box<dyn ExecutionBackend> = match kind {
+            BackendKind::Default => unreachable!("handled above"),
+            BackendKind::Sim => Box::new(SimBackend),
+            BackendKind::Reference => Box::new(crate::runtime::backend::ReferenceBackend),
+            BackendKind::Rayon => Box::new(crate::runtime::backend_rayon::RayonBackend::new(
+                self.cfg.rayon_threads,
+            )),
+        };
+        self.events.push(self.clock.now_ns(), VpeEvent::BackendBound {
+            target,
+            backend: b.name(),
+        });
+        self.target_backends.insert(target, b);
+        Ok(())
+    }
+
     fn execute_real(
         &mut self,
         f: FunctionId,
@@ -1365,6 +1536,10 @@ impl Vpe {
         custom_inputs: Option<&[Tensor]>,
     ) -> Result<(Option<Duration>, Option<bool>, Option<Tensor>)> {
         let build = self.soc.target(target)?.build;
+        // Resolve the target's engine before borrowing the binding (the
+        // instance map and the backend slots are disjoint fields).
+        let backend_kind = self.backend_kind_on(target);
+        self.ensure_backend(target)?;
         let binding = self
             .bindings
             .get_mut(&f)
@@ -1375,7 +1550,15 @@ impl Vpe {
         };
         let inputs = custom_inputs.unwrap_or(&binding.instance.inputs);
         let req = ExecRequest { artifact: &artifact, kind: binding.instance.kind, inputs };
-        let Some((out, wall)) = self.backend.execute(&req)? else {
+        let executed = match backend_kind {
+            BackendKind::Default => self.backend.execute(&req)?,
+            _ => self
+                .target_backends
+                .get_mut(&target)
+                .expect("ensured above")
+                .execute(&req)?,
+        };
+        let Some((out, wall)) = executed else {
             return Ok((None, None, None));
         };
         // Verify only the registered inputs (callers of call_with own
@@ -1470,26 +1653,32 @@ impl Vpe {
 
     // -- introspection ------------------------------------------------------
 
+    /// Where `f`'s dispatch slot currently points (host after a revert).
     pub fn current_target(&self, f: FunctionId) -> Result<TargetId> {
         self.table()?.current_target(f)
     }
 
+    /// The structured event log (every decision, with sim timestamps).
     pub fn events(&self) -> &EventLog {
         &self.events
     }
 
+    /// The `perf_event` sampler (per-function profiles).
     pub fn sampler(&self) -> &PerfSampler {
         &self.sampler
     }
 
+    /// Mutable sampler access (reconfiguration in benches/ablations).
     pub fn sampler_mut(&mut self) -> &mut PerfSampler {
         &mut self.sampler
     }
 
+    /// The simulated clock (authoritative for decisions and metrics).
     pub fn clock(&self) -> &SimClock {
         &self.clock
     }
 
+    /// The simulated SoC (registry, cost model, shared memory).
     pub fn soc(&self) -> &Soc {
         &self.soc
     }
@@ -1500,16 +1689,31 @@ impl Vpe {
         &mut self.soc
     }
 
+    /// The per-target occupancy scheduler (busy-until marks, bounces).
     pub fn scheduler(&self) -> &TargetScheduler {
         &self.scheduler
     }
 
+    /// Name of the active off-load policy.
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
     }
 
+    /// Name of the coordinator's *default* execution engine (the one
+    /// units left at [`BackendKind::Default`] share).
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Name of the engine that computes numerics for `target`'s
+    /// dispatches — the spec-bound engine, or the default when the
+    /// target does not bind one (see
+    /// [`crate::platform::TargetSpec::backend`]).
+    pub fn backend_name_on(&self, target: TargetId) -> &'static str {
+        match self.backend_kind_on(target) {
+            BackendKind::Default => self.backend.name(),
+            other => other.name(),
+        }
     }
 
     /// Display name of a target on this coordinator's platform.
@@ -1517,10 +1721,12 @@ impl Vpe {
         self.soc.target_name(t)
     }
 
+    /// The workload kind bound to `f`, if `f` is a registered workload.
     pub fn kind_of(&self, f: FunctionId) -> Option<WorkloadKind> {
         self.bindings.get(&f).map(|b| b.instance.kind)
     }
 
+    /// How many of `f`'s verified executions mismatched the reference.
     pub fn mismatch_count(&self, f: FunctionId) -> u64 {
         self.bindings.get(&f).map(|b| b.mismatches).unwrap_or(0)
     }
@@ -1578,6 +1784,16 @@ impl Vpe {
             .map(|(id, spec)| format!("{} {}", spec.name, self.queue.depth_on(id)))
             .collect();
         out.push_str(&format!("\nqueue depth: {}\n", depths.join(" | ")));
+        // Engine routing, only worth a line when the platform mixes
+        // engines (some unit binds a non-default backend).
+        if self.soc.targets().any(|(_, s)| s.backend != BackendKind::Default) {
+            let engines: Vec<String> = self
+                .soc
+                .targets()
+                .map(|(id, spec)| format!("{} {}", spec.name, self.backend_name_on(id)))
+                .collect();
+            out.push_str(&format!("backends: {}\n", engines.join(" | ")));
+        }
         let bounced = self.scheduler.bounce_count();
         if bounced > 0 {
             out.push_str(&format!(
@@ -2112,6 +2328,128 @@ mod tests {
             dsp.predicted_ns,
             double_derated
         );
+    }
+
+    /// Register a cheap-transport remote unit bound to `backend`, rated
+    /// `rate` ns/item for matmul.
+    fn add_backed_unit(
+        vpe: &mut Vpe,
+        name: &str,
+        backend: BackendKind,
+        rate: f64,
+    ) -> TargetId {
+        let id = vpe.soc_mut().add_target(
+            TargetSpec::new(name, 1_000_000_000)
+                .with_backend(backend)
+                .with_transport(Transport::SharedMemory(TransferModel {
+                    dispatch_fixed_ns: 1_000_000,
+                    per_param_byte_ns: 1.0,
+                })),
+        );
+        vpe.soc_mut().cost.set_rate(WorkloadKind::Matmul, id, rate);
+        id
+    }
+
+    #[test]
+    fn rayon_backed_target_computes_real_numerics_with_measured_wall() {
+        let mut cfg = VpeConfig::default(); // reference default engine
+        cfg.exec_noise_frac = 0.0;
+        cfg.rayon_threads = 2;
+        let mut vpe =
+            Vpe::with_policy(cfg, Box::new(super::super::policy::AlwaysOffloadPolicy)).unwrap();
+        // Priced far below the DSP's 100 ms setup: always-offload lands here.
+        let mc = add_backed_unit(&mut vpe, "multicore", BackendKind::Rayon, 0.5);
+        let f = vpe.register_workload(WorkloadKind::Matmul).unwrap();
+        vpe.call(f).unwrap(); // host warm-up; offload decision fires
+        assert_eq!(vpe.current_target(f).unwrap(), mc);
+        let rec = vpe.call(f).unwrap();
+        assert_eq!(rec.target, mc);
+        assert_eq!(rec.output_ok, Some(true), "rayon numerics must verify: {rec:?}");
+        assert!(rec.wall.expect("measured wall").as_nanos() > 0);
+        assert_eq!(vpe.backend_name_on(mc), "rayon");
+        assert_eq!(vpe.backend_name_on(TargetId::HOST), vpe.backend_name());
+        assert!(
+            vpe.events()
+                .iter()
+                .any(|(_, e)| matches!(e, VpeEvent::BackendBound { backend: "rayon", .. })),
+            "engine instantiation must be logged:\n{}",
+            vpe.events().to_text()
+        );
+        assert!(vpe.report().contains("backends:"), "{}", vpe.report());
+    }
+
+    #[test]
+    fn rayon_rows_learn_measured_wall_rates() {
+        let mut cfg = VpeConfig::default();
+        cfg.exec_noise_frac = 0.0;
+        cfg.learn_rates = true;
+        cfg.rate_learn_alpha = 0.5;
+        cfg.rayon_threads = 2;
+        let mut vpe =
+            Vpe::with_policy(cfg, Box::new(super::super::policy::AlwaysOffloadPolicy)).unwrap();
+        // Deliberately absurd seed rate (1000x optimistic): measurements
+        // must replace it.
+        let mc = add_backed_unit(&mut vpe, "multicore", BackendKind::Rayon, 0.0001);
+        let f = vpe.register_workload(WorkloadKind::Matmul).unwrap();
+        let recs = vpe.run(f, 16).unwrap();
+        assert_eq!(vpe.current_target(f).unwrap(), mc);
+        let items = crate::workloads::matmul_scale(128).items;
+        let measured: Vec<f64> = recs
+            .iter()
+            .filter(|r| r.target == mc)
+            .filter_map(|r| r.wall)
+            .map(|w| w.as_nanos() as f64 / items)
+            .collect();
+        assert!(measured.len() >= 10, "rayon unit must have served the calls");
+        let mean = measured.iter().sum::<f64>() / measured.len() as f64;
+        let learned = vpe.soc().cost.rate_ns(WorkloadKind::Matmul, mc).unwrap();
+        assert!(
+            learned > 0.0001 * 10.0,
+            "seed must be washed out by measurements ({learned})"
+        );
+        assert!(
+            learned / mean < 2.0 && mean / learned < 2.0,
+            "learned rate {learned} must be within 2x of measured mean {mean}"
+        );
+    }
+
+    #[test]
+    fn sharded_call_spanning_sim_and_rayon_units_reassembles_bit_exact() {
+        let mut cfg = VpeConfig::default();
+        cfg.exec_noise_frac = 0.0;
+        cfg.rayon_threads = 2;
+        let mut vpe = Vpe::new(cfg).unwrap();
+        let sim = add_backed_unit(&mut vpe, "sim-unit", BackendKind::Sim, 3.0);
+        let ray = add_backed_unit(&mut vpe, "rayon-unit", BackendKind::Rayon, 3.5);
+        let f = vpe.register_workload(WorkloadKind::Matmul).unwrap(); // 128x128
+        let rec = vpe.call_sharded(f).unwrap();
+        assert!(rec.shards >= 2, "must fan out: {rec:?}");
+        assert_eq!(rec.output_ok, Some(true), "mixed-engine reassembly must be bit-exact");
+        let on: std::collections::HashSet<TargetId> =
+            vpe.events().shard_windows().iter().map(|w| w.0).collect();
+        assert!(on.contains(&sim), "sim-backed unit must take a shard: {on:?}");
+        assert!(on.contains(&ray), "rayon-backed unit must take a shard: {on:?}");
+        assert_eq!(vpe.in_flight(), 0);
+        assert_eq!(vpe.soc().shared.used_bytes(), 0);
+    }
+
+    #[test]
+    fn sim_backed_target_never_produces_numerics() {
+        // An explicit BackendKind::Sim unit stays numerics-free even
+        // when the coordinator's default engine computes for real.
+        let mut cfg = VpeConfig::default();
+        cfg.exec_noise_frac = 0.0;
+        cfg.verify_outputs = false; // sim output is None; nothing to verify
+        let mut vpe =
+            Vpe::with_policy(cfg, Box::new(super::super::policy::AlwaysOffloadPolicy)).unwrap();
+        let sim = add_backed_unit(&mut vpe, "sim-unit", BackendKind::Sim, 0.5);
+        let f = vpe.register_workload(WorkloadKind::Matmul).unwrap();
+        vpe.call(f).unwrap();
+        assert_eq!(vpe.current_target(f).unwrap(), sim);
+        let rec = vpe.call(f).unwrap();
+        assert_eq!(rec.target, sim);
+        assert_eq!(rec.wall, None, "sim engine must not execute: {rec:?}");
+        assert_eq!(vpe.backend_name_on(sim), "sim");
     }
 
     #[test]

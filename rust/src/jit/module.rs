@@ -36,10 +36,12 @@ pub struct OpMix {
 }
 
 impl OpMix {
+    /// A typical integer hot loop (matmul-like).
     pub fn integer_loop() -> Self {
         OpMix { int_frac: 0.6, float_frac: 0.0, mem_frac: 0.3, branch_frac: 0.1 }
     }
 
+    /// A float-dominated hot loop (FFT-like).
     pub fn float_loop() -> Self {
         OpMix { int_frac: 0.1, float_frac: 0.6, mem_frac: 0.25, branch_frac: 0.05 }
     }
@@ -48,12 +50,14 @@ impl OpMix {
 /// One function in the module.
 #[derive(Debug, Clone)]
 pub struct IrFunction {
+    /// Symbol name.
     pub name: String,
     /// Which benchmark computation this function bodies (None for
     /// program scaffolding like I/O helpers).
     pub workload: Option<WorkloadKind>,
     /// System calls are excluded from VPE's analysis (paper §3).
     pub is_syscall: bool,
+    /// Static instruction mix of the function body.
     pub op_mix: OpMix,
     /// Depth of the deepest loop nest — what the TI compiler's software
     /// pipeliner keys on (paper §5.2).
@@ -88,12 +92,14 @@ impl IrFunction {
 /// The loaded module.
 #[derive(Debug, Clone)]
 pub struct IrModule {
+    /// Module name (display only).
     pub name: String,
     functions: Vec<IrFunction>,
     finalized: bool,
 }
 
 impl IrModule {
+    /// An empty, unfinalized module.
     pub fn new(name: &str) -> Self {
         IrModule { name: name.into(), functions: Vec::new(), finalized: false }
     }
@@ -122,22 +128,27 @@ impl IrModule {
         self.finalized = true;
     }
 
+    /// Has [`IrModule::finalize`] been called?
     pub fn is_finalized(&self) -> bool {
         self.finalized
     }
 
+    /// The function with the given id, if registered.
     pub fn function(&self, id: FunctionId) -> Option<&IrFunction> {
         self.functions.get(id.0 as usize)
     }
 
+    /// Number of registered functions.
     pub fn len(&self) -> usize {
         self.functions.len()
     }
 
+    /// True when no functions are registered.
     pub fn is_empty(&self) -> bool {
         self.functions.is_empty()
     }
 
+    /// Iterate all (id, function) pairs in registration order.
     pub fn iter(&self) -> impl Iterator<Item = (FunctionId, &IrFunction)> {
         self.functions.iter().enumerate().map(|(i, f)| (FunctionId(i as u32), f))
     }

@@ -90,10 +90,12 @@ impl DispatchTable {
             .collect()
     }
 
+    /// Number of dispatch slots (one per module function).
     pub fn len(&self) -> usize {
         self.slots.len()
     }
 
+    /// True when the table has no slots.
     pub fn is_empty(&self) -> bool {
         self.slots.is_empty()
     }

@@ -24,11 +24,13 @@
 //! a [`platform::TargetSpec`] + cost-model rows away — see
 //! `examples/multi_target.rs`), while the actual numerics of each
 //! dispatched call are computed by a pluggable [`runtime`] backend: the
-//! pure-Rust references by default, or the AOT artifacts through the
-//! PJRT CPU client with the `pjrt` feature.  Dispatches are in-flight
-//! events on the sim clock ([`coordinator::queue`]): calls on different
-//! units overlap and retire in completion order.  See DESIGN.md for the
-//! substitution table.
+//! pure-Rust references by default, the AOT artifacts through the
+//! PJRT CPU client with the `pjrt` feature, or a real multicore thread
+//! pool ([`runtime::backend_rayon`]) — selected **per target** via
+//! [`platform::BackendKind`].  Dispatches are in-flight events on the
+//! sim clock ([`coordinator::queue`]): calls on different units overlap
+//! and retire in completion order.  See ARCHITECTURE.md for the layer
+//! diagrams and invariants, README.md for the example/bench catalog.
 //!
 //! ## Quickstart
 //!
@@ -43,6 +45,8 @@
 //! }
 //! println!("{}", vpe.report());
 //! ```
+
+#![warn(missing_docs)]
 
 pub mod bench_harness;
 pub mod coordinator;

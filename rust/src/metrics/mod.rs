@@ -6,12 +6,16 @@ use std::fmt::Write as _;
 /// A simple column-aligned table.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Table caption (markdown `###` heading; empty = none).
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows; each must match the header arity.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -20,6 +24,7 @@ impl Table {
         }
     }
 
+    /// Append one data row (must match the header arity).
     pub fn push_row(&mut self, row: Vec<String>) {
         debug_assert_eq!(row.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(row);

@@ -14,7 +14,9 @@ use crate::error::{Error, Result};
 /// One allocation inside the shared region.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Allocation {
+    /// Byte offset inside the region (aligned).
     pub offset: u64,
+    /// Allocated bytes (the aligned request size).
     pub size: u64,
 }
 

@@ -35,7 +35,7 @@ pub mod transport;
 
 pub use costmodel::CostModel;
 pub use memory::SharedRegion;
-pub use registry::{BuildKind, TargetRegistry, TargetSpec};
+pub use registry::{BackendKind, BuildKind, TargetRegistry, TargetSpec};
 pub use soc::Soc;
 pub use target::{dm3730, TargetHealth, TargetId};
 pub use transfer::TransferModel;

@@ -26,6 +26,50 @@ pub enum BuildKind {
     Tuned,
 }
 
+/// Which execution engine computes the *numerics* of a unit's
+/// dispatches (the cost model still prices the sim clock; see
+/// `runtime::backend` for the engines themselves).
+///
+/// The registry stores this per unit, so one platform can mix genuinely
+/// different engines — the paper's transparency story depends on the
+/// dispatcher choosing among *heterogeneous* execution engines, not N
+/// copies of one simulator.  A batch never spans engines: batches form
+/// per target, and each target is bound to exactly one engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// The coordinator's config-selected engine
+    /// (sim / reference / PJRT, chosen by `VpeConfig::artifacts_dir`
+    /// and the `pjrt` feature) — the only way to reach PJRT, which
+    /// needs the artifact store.
+    Default,
+    /// Simulated timing only; plain dispatches here never produce
+    /// numerics.  (Shards of a fan-out landing on this unit still
+    /// compute through the reference oracle when the config computes
+    /// numerics at all — a mixed group could not reassemble otherwise.)
+    Sim,
+    /// The single-threaded pure-Rust reference implementations,
+    /// wall-clocked.
+    Reference,
+    /// Real multicore execution on a host thread pool with measured
+    /// wall-clock (`runtime::backend_rayon::RayonBackend`); the
+    /// cost-model learner feeds the measured time back, replacing the
+    /// simulated physics for this unit's rows.
+    Rayon,
+}
+
+impl BackendKind {
+    /// Engine name for reports and events (`Default` resolves at the
+    /// coordinator, which knows the configured engine).
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Default => "default",
+            BackendKind::Sim => "sim",
+            BackendKind::Reference => "reference",
+            BackendKind::Rayon => "rayon",
+        }
+    }
+}
+
 /// Static description + dynamic health of one compute unit.
 #[derive(Debug, Clone)]
 pub struct TargetSpec {
@@ -43,6 +87,10 @@ pub struct TargetSpec {
     pub transport: Transport,
     /// Which artifact build the unit executes.
     pub build: BuildKind,
+    /// Which execution engine computes this unit's dispatched calls
+    /// ([`BackendKind::Default`] follows the coordinator's config).
+    pub backend: BackendKind,
+    /// Current health (dispatchability + slowdown factor).
     pub health: TargetHealth,
 }
 
@@ -57,27 +105,39 @@ impl TargetSpec {
             has_hw_float: true,
             transport: Transport::default(),
             build: BuildKind::Tuned,
+            backend: BackendKind::Default,
             health: TargetHealth::Healthy,
         }
     }
 
+    /// Set the issue width (functional units dispatched per cycle).
     pub fn with_issue_width(mut self, w: u32) -> Self {
         self.issue_width = w;
         self
     }
 
+    /// Set whether the unit has hardware floating point.
     pub fn with_hw_float(mut self, f: bool) -> Self {
         self.has_hw_float = f;
         self
     }
 
+    /// Set how dispatches reach the unit.
     pub fn with_transport(mut self, t: Transport) -> Self {
         self.transport = t;
         self
     }
 
+    /// Set which artifact build the unit executes.
     pub fn with_build(mut self, b: BuildKind) -> Self {
         self.build = b;
+        self
+    }
+
+    /// Bind the unit to a specific execution engine (see
+    /// [`BackendKind`]); the default follows the coordinator's config.
+    pub fn with_backend(mut self, b: BackendKind) -> Self {
+        self.backend = b;
         self
     }
 
@@ -115,22 +175,27 @@ impl TargetRegistry {
         id
     }
 
+    /// The descriptor at slot `id`, or a platform error if unknown.
     pub fn get(&self, id: TargetId) -> Result<&TargetSpec> {
         self.specs
             .get(id.index())
             .ok_or_else(|| Error::Platform(format!("unknown target {id}")))
     }
 
+    /// Mutable descriptor access (health injection, transport swaps).
     pub fn get_mut(&mut self, id: TargetId) -> Result<&mut TargetSpec> {
         self.specs
             .get_mut(id.index())
             .ok_or_else(|| Error::Platform(format!("unknown target {id}")))
     }
 
+    /// Number of registered units, host included.
     pub fn len(&self) -> usize {
         self.specs.len()
     }
 
+    /// True when no units are registered (never the case for a registry
+    /// built with [`TargetRegistry::with_host`]).
     pub fn is_empty(&self) -> bool {
         self.specs.is_empty()
     }
@@ -179,6 +244,19 @@ mod tests {
         assert_eq!(r.len(), 3);
         assert_eq!(r.remote_ids(), vec![TargetId(1), TargetId(2)]);
         assert!(r.get(TargetId(9)).is_err());
+    }
+
+    #[test]
+    fn backend_binding_is_data_like_everything_else() {
+        let mut r = dm3730_registry();
+        // Unset: every unit follows the coordinator's configured engine.
+        assert_eq!(r.get(dm3730::ARM).unwrap().backend, BackendKind::Default);
+        assert_eq!(r.get(dm3730::DSP).unwrap().backend, BackendKind::Default);
+        let mc = r.register(
+            TargetSpec::new("multicore", 1_000_000_000).with_backend(BackendKind::Rayon),
+        );
+        assert_eq!(r.get(mc).unwrap().backend, BackendKind::Rayon);
+        assert_eq!(BackendKind::Rayon.name(), "rayon");
     }
 
     #[test]

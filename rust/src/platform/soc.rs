@@ -22,10 +22,12 @@ use super::transport::Transport;
 pub struct Soc {
     /// Every compute unit on the platform (host at slot 0).
     pub registry: TargetRegistry,
+    /// The shared address window dispatches stage parameters through.
     pub shared: SharedRegion,
     /// Shared-memory staging costs (kept for introspection; the
     /// dispatch path goes through each target's transport).
     pub transfer: TransferModel,
+    /// The calibrated `ns/item` rate table driving the sim clock.
     pub cost: CostModel,
 }
 

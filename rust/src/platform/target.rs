@@ -46,7 +46,9 @@ impl std::fmt::Display for TargetId {
 pub mod dm3730 {
     use super::TargetId;
 
+    /// The ARM Cortex-A8 host (slot 0).
     pub const ARM: TargetId = TargetId::HOST;
+    /// The C64x+ DSP (slot 1 in the default topology).
     pub const DSP: TargetId = TargetId(1);
 }
 
@@ -54,6 +56,7 @@ pub mod dm3730 {
 /// "the system can dynamically react to [...] hardware failure").
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum TargetHealth {
+    /// Fully operational.
     Healthy,
     /// Still functional but slowed by the given factor (> 1.0), e.g. a
     /// thermally throttled unit.

@@ -172,6 +172,7 @@ impl Transport {
             + scales.iter().map(|s| self.dispatch_variable_ns(s)).sum::<u64>()
     }
 
+    /// Transport name, for reports.
     pub fn name(&self) -> &'static str {
         match self {
             Transport::SharedMemory(_) => "shared-memory",

@@ -15,14 +15,20 @@ use crate::workloads::WorkloadKind;
 /// The counters VPE's sampler can multiplex.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CounterKind {
+    /// CPU cycles (always on — the off-load metric).
     Cycles,
+    /// Retired instructions.
     Instructions,
+    /// Last-level cache misses.
     CacheMisses,
+    /// Mispredicted branches.
     BranchMisses,
+    /// Page faults.
     PageFaults,
 }
 
 impl CounterKind {
+    /// Every counter the sampler can multiplex.
     pub const ALL: [CounterKind; 5] = [
         CounterKind::Cycles,
         CounterKind::Instructions,
@@ -35,14 +41,20 @@ impl CounterKind {
 /// One sampled execution of one function.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CounterSample {
+    /// CPU cycles spent in the call.
     pub cycles: u64,
+    /// Retired instructions.
     pub instructions: u64,
+    /// Last-level cache misses.
     pub cache_misses: u64,
+    /// Mispredicted branches.
     pub branch_misses: u64,
+    /// Page faults.
     pub page_faults: u64,
 }
 
 impl CounterSample {
+    /// The value of one counter.
     pub fn get(&self, kind: CounterKind) -> u64 {
         match kind {
             CounterKind::Cycles => self.cycles,

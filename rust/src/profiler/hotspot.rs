@@ -25,6 +25,7 @@ impl Default for HotspotDetector {
 /// A nomination produced by the detector.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Hotspot {
+    /// The nominated function.
     pub function: FunctionId,
     /// Share of all profiled cycles attributed to this function.
     pub cycle_share: f64,

@@ -29,8 +29,9 @@ pub struct SamplerConfig {
     pub overhead_frac: f64,
     /// An analysis burst fires every `analysis_period` recorded calls.
     pub analysis_period: u64,
-    /// Analysis burst cost: mean / stddev, ns.
+    /// Analysis burst cost: mean, ns.
     pub burst_mean_ns: f64,
+    /// Analysis burst cost: standard deviation, ns.
     pub burst_std_ns: f64,
     /// Counters being multiplexed (cycles are always on).
     pub multiplex: Vec<CounterKind>,
@@ -89,7 +90,9 @@ pub struct FunctionProfile {
     pub ewma_ns: Ewma,
     /// Accumulated cycle counter (the paper's off-load metric).
     pub total_cycles: u64,
+    /// The most recent counter sample.
     pub last_sample: CounterSample,
+    /// Total recorded calls of the function.
     pub calls: u64,
 }
 
@@ -142,6 +145,7 @@ pub struct ProfilingCost {
 }
 
 impl ProfilingCost {
+    /// Everything this call's profiling charged, ns.
     pub fn total_ns(&self) -> u64 {
         self.measurement_ns + self.burst_ns
     }
@@ -160,15 +164,18 @@ pub struct PerfSampler {
 }
 
 impl PerfSampler {
+    /// A sampler with the given (validated) configuration.
     pub fn new(cfg: SamplerConfig) -> crate::Result<Self> {
         cfg.validate()?;
         Ok(PerfSampler { cfg, profiles: Vec::new(), recorded: 0, bursts: 0 })
     }
 
+    /// The active configuration.
     pub fn config(&self) -> &SamplerConfig {
         &self.cfg
     }
 
+    /// Is profiling on at all?
     pub fn is_enabled(&self) -> bool {
         self.cfg.enabled
     }
@@ -215,6 +222,7 @@ impl PerfSampler {
         ProfilingCost { measurement_ns, burst_ns }
     }
 
+    /// The profile of `f`, if it has recorded calls.
     pub fn profile(&self, f: FunctionId) -> Option<&FunctionProfile> {
         self.profiles.get(f.0 as usize).and_then(|p| p.as_ref())
     }

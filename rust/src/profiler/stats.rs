@@ -12,10 +12,12 @@ pub struct RollingStats {
 }
 
 impl RollingStats {
+    /// Empty statistics (mean is NaN until the first push).
     pub fn new() -> Self {
         RollingStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one sample in (O(1), numerically stable).
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -25,10 +27,12 @@ impl RollingStats {
         self.max = self.max.max(x);
     }
 
+    /// Number of samples pushed.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean (NaN with no samples).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             f64::NAN
@@ -46,10 +50,12 @@ impl RollingStats {
         }
     }
 
+    /// Smallest sample seen (infinity with no samples).
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest sample seen (-infinity with no samples).
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -81,6 +87,7 @@ impl Ewma {
         Ewma { alpha, value: None }
     }
 
+    /// Fold one sample in.
     pub fn push(&mut self, x: f64) {
         self.value = Some(match self.value {
             None => x,
@@ -88,6 +95,7 @@ impl Ewma {
         });
     }
 
+    /// The current average (None before the first push).
     pub fn value(&self) -> Option<f64> {
         self.value
     }

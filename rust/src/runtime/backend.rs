@@ -9,12 +9,19 @@
 //! - [`ReferenceBackend`] — the pure-Rust reference implementations
 //!   compute every call for real (and are wall-clocked), so outputs and
 //!   verification work without any external runtime;
+//! - [`super::backend_rayon::RayonBackend`] — real multicore execution
+//!   on a persistent host thread pool, wall-clocked;
 //! - `PjrtBackend` (feature `pjrt`) — the AOT'd HLO artifacts execute
 //!   through the PJRT CPU client, exactly as the seed runtime did.
 //!
-//! The backend is chosen once at coordinator construction and consulted
-//! at every retirement; it never influences the sim clock (that is the
-//! cost model's job), only `CallRecord::wall` and the output tensor.
+//! The *default* engine is chosen at coordinator construction
+//! (`VpeConfig::artifacts_dir`); individual units may bind their own
+//! engine via [`crate::platform::TargetSpec::backend`], and the
+//! coordinator consults the owning unit's engine at every retirement.
+//! A backend never influences the sim clock (that is the cost model's
+//! job), only `CallRecord::wall` and the output tensor — though with
+//! `VpeConfig::learn_rates` on, a *measured* engine's wall clock feeds
+//! back into the cost model's rate rows.
 
 use std::time::{Duration, Instant};
 
@@ -28,7 +35,9 @@ pub struct ExecRequest<'a> {
     /// build variant this is came from the target's
     /// [`crate::platform::TargetSpec::build`].
     pub artifact: &'a str,
+    /// The workload algorithm being executed.
     pub kind: WorkloadKind,
+    /// Input tensors, in the workload's instance/artifact layout.
     pub inputs: &'a [Tensor],
 }
 
@@ -37,9 +46,53 @@ pub struct ExecRequest<'a> {
 /// `execute` returns `Ok(None)` when the backend has no implementation
 /// for the request (sim-only, artifact not AOT'd at this size, ...);
 /// the coordinator then records the call without numerics.
+///
+/// Selection is per target: every unit's
+/// [`crate::platform::TargetSpec::backend`] names its engine, and the
+/// coordinator routes each dispatch at retirement (the default engine
+/// is chosen by `VpeConfig::artifacts_dir`).  Custom engines plug in
+/// through [`crate::coordinator::Vpe::with_backend`]:
+///
+/// ```
+/// use std::time::{Duration, Instant};
+/// use vpe::coordinator::policy::BlindOffloadPolicy;
+/// use vpe::coordinator::{Vpe, VpeConfig};
+/// use vpe::runtime::{ExecRequest, ExecutionBackend};
+/// use vpe::workloads::{self, Tensor};
+///
+/// /// An engine that computes through the reference oracles.
+/// struct MyEngine;
+///
+/// impl ExecutionBackend for MyEngine {
+///     fn name(&self) -> &'static str {
+///         "my-engine"
+///     }
+///
+///     fn execute(
+///         &mut self,
+///         req: &ExecRequest<'_>,
+///     ) -> vpe::Result<Option<(Tensor, Duration)>> {
+///         let t0 = Instant::now();
+///         let out = workloads::reference_output(req.kind, req.inputs)?;
+///         Ok(Some((out, t0.elapsed())))
+///     }
+/// }
+///
+/// let vpe = Vpe::with_backend(
+///     VpeConfig::sim_only(),
+///     Box::new(MyEngine),
+///     Box::new(BlindOffloadPolicy::default()),
+/// )?;
+/// assert_eq!(vpe.backend_name(), "my-engine");
+/// # Ok::<(), vpe::Error>(())
+/// ```
 pub trait ExecutionBackend: Send {
+    /// Engine name, for reports and events.
     fn name(&self) -> &'static str;
 
+    /// Really execute one call: the output tensor plus the measured
+    /// wall time, or `Ok(None)` when this engine cannot serve the
+    /// request.
     fn execute(&mut self, req: &ExecRequest<'_>) -> Result<Option<(Tensor, Duration)>>;
 }
 
@@ -86,6 +139,7 @@ pub mod pjrt {
     use crate::runtime::artifact::ArtifactStore;
     use crate::runtime::client::RtClient;
 
+    /// Executes AOT'd HLO artifacts through the PJRT CPU client.
     pub struct PjrtBackend {
         store: ArtifactStore,
         /// Artifacts we know are not in the manifest (e.g. sim-only
@@ -100,6 +154,7 @@ pub mod pjrt {
             Ok(PjrtBackend { store, missing: HashSet::new() })
         }
 
+        /// The artifact store behind this backend.
         pub fn store(&self) -> &ArtifactStore {
             &self.store
         }

@@ -1,13 +1,18 @@
 //! Execution runtime: the pluggable backends that really compute
 //! dispatched calls.
 //!
-//! The coordinator talks to one [`backend::ExecutionBackend`]; three
-//! implementations exist:
+//! The coordinator routes each target's dispatches to an
+//! [`backend::ExecutionBackend`] (selection is *per target* — see
+//! [`crate::platform::BackendKind`]); four implementations exist:
 //!
 //! - [`backend::SimBackend`] — decisions and timing only, no numerics;
 //! - [`backend::ReferenceBackend`] — the pure-Rust reference
 //!   implementations compute every call (default for real numerics —
 //!   needs nothing beyond this crate);
+//! - [`backend_rayon::RayonBackend`] — real multicore execution on a
+//!   persistent host thread pool, wall-clocked; the cost-model learner
+//!   can feed the measured time back so the policy prices this engine
+//!   honestly;
 //! - `PjrtBackend` (feature **`pjrt`**) — loads AOT'd HLO-text artifacts
 //!   and executes them through the PJRT CPU client (`xla` crate).
 //!
@@ -27,6 +32,7 @@
 //! reassigns ids (see /opt/xla-example/README.md).
 
 pub mod backend;
+pub mod backend_rayon;
 
 #[cfg(feature = "pjrt")]
 pub mod artifact;
@@ -36,6 +42,7 @@ pub mod client;
 pub mod exec;
 
 pub use backend::{ExecRequest, ExecutionBackend, ReferenceBackend, SimBackend};
+pub use backend_rayon::RayonBackend;
 
 #[cfg(feature = "pjrt")]
 pub use artifact::{ArtifactMeta, ArtifactStore, Manifest, TensorMeta};

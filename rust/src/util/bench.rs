@@ -9,15 +9,22 @@ use crate::profiler::stats::RollingStats;
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Timed iterations.
     pub iters: usize,
+    /// Mean per-iteration time, ns.
     pub mean_ns: f64,
+    /// Sample standard deviation, ns.
     pub std_ns: f64,
+    /// Fastest iteration, ns.
     pub min_ns: f64,
+    /// Slowest iteration, ns.
     pub max_ns: f64,
 }
 
 impl BenchResult {
+    /// Print one aligned result row (pair with [`header`]).
     pub fn print(&self) {
         println!(
             "{:<44} {:>12} {:>12} {:>12} {:>10}",

@@ -10,6 +10,7 @@ use crate::error::{Error, Result};
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// Non-flag arguments, in order.
     pub positionals: Vec<String>,
     flags: BTreeMap<String, String>,
     consumed: std::cell::RefCell<Vec<String>>,

@@ -16,27 +16,33 @@ use crate::sim::SimRng;
 /// Case-local generator handed to each property execution.
 pub struct Gen {
     rng: SimRng,
+    /// Which case (0-based) this execution is.
     pub case: usize,
 }
 
 impl Gen {
+    /// Uniform u64 in `[lo, hi]`.
     pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
         self.rng.uniform_u64(lo, hi)
     }
 
+    /// Uniform i64 in `[lo, hi)`.
     pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
         assert!(lo < hi);
         lo + self.rng.uniform_u64(0, (hi - lo) as u64) as i64
     }
 
+    /// Uniform usize in `[lo, hi]`.
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         self.u64_in(lo as u64, hi as u64) as usize
     }
 
+    /// Uniform f64 in `[0, 1)`.
     pub fn f64_unit(&mut self) -> f64 {
         self.rng.uniform()
     }
 
+    /// A fair coin.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }

@@ -23,6 +23,7 @@ impl TempDir {
         Ok(TempDir { path })
     }
 
+    /// The directory's path.
     pub fn path(&self) -> &std::path::Path {
         &self.path
     }

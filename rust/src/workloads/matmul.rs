@@ -4,7 +4,7 @@
 use super::{generator, matmul_scale, Tensor, WorkloadInstance, WorkloadKind};
 
 /// Pure-Rust reference: the naive ijk triple loop — exactly the
-//  cache-unfriendly code the paper's 131.9 ns/MAC ARM rate comes from.
+/// cache-unfriendly code the paper's 131.9 ns/MAC ARM rate comes from.
 pub fn reference(a: &[i32], b: &[i32], n: usize) -> Vec<i32> {
     assert_eq!(a.len(), n * n);
     assert_eq!(b.len(), n * n);

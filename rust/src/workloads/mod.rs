@@ -23,15 +23,22 @@ pub mod shard;
 /// The six benchmark algorithms.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum WorkloadKind {
+    /// DNA complement: map each base of a sequence to its complement.
     Complement,
+    /// 2-D convolution of an image with a square kernel.
     Conv2d,
+    /// Integer dot product of two vectors.
     Dotprod,
+    /// Square matrix multiplication (the paper's headline benchmark).
     Matmul,
+    /// Count pattern occurrences in a DNA sequence (overlapping windows).
     Pattern,
+    /// Radix-2 FFT — the paper's floating-point regression case.
     Fft,
 }
 
 impl WorkloadKind {
+    /// Every benchmark, in Table 1 order.
     pub const ALL: [WorkloadKind; 6] = [
         WorkloadKind::Complement,
         WorkloadKind::Conv2d,
@@ -139,11 +146,14 @@ pub fn matmul_scale(n: u64) -> PaperScale {
 /// Host-side tensor buffer (only the dtypes the artifacts use).
 #[derive(Debug, Clone, PartialEq)]
 pub enum HostData {
+    /// 32-bit signed integers.
     I32(Vec<i32>),
+    /// 32-bit floats (FFT only).
     F32(Vec<f32>),
 }
 
 impl HostData {
+    /// Number of elements.
     pub fn len(&self) -> usize {
         match self {
             HostData::I32(v) => v.len(),
@@ -151,10 +161,12 @@ impl HostData {
         }
     }
 
+    /// True for a zero-element buffer.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Numpy-style dtype name ("int32" / "float32").
     pub fn dtype_name(&self) -> &'static str {
         match self {
             HostData::I32(_) => "int32",
@@ -166,21 +178,26 @@ impl HostData {
 /// A shaped host tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Dimensions (row-major; empty = scalar).
     pub shape: Vec<usize>,
+    /// The flat element buffer (`shape` product elements).
     pub data: HostData,
 }
 
 impl Tensor {
+    /// An i32 tensor (the shape product must equal the data length).
     pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
         debug_assert_eq!(shape.iter().product::<usize>(), data.len());
         Tensor { shape, data: HostData::I32(data) }
     }
 
+    /// An f32 tensor (the shape product must equal the data length).
     pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
         debug_assert_eq!(shape.iter().product::<usize>(), data.len());
         Tensor { shape, data: HostData::F32(data) }
     }
 
+    /// The elements as `&[i32]`, if this is an integer tensor.
     pub fn as_i32(&self) -> Option<&[i32]> {
         match &self.data {
             HostData::I32(v) => Some(v),
@@ -188,6 +205,7 @@ impl Tensor {
         }
     }
 
+    /// The elements as `&[f32]`, if this is a float tensor.
     pub fn as_f32(&self) -> Option<&[f32]> {
         match &self.data {
             HostData::F32(v) => Some(v),
@@ -217,14 +235,23 @@ impl Tensor {
 
 /// Artifact-shape constants — MUST match python/compile/aot.py.
 pub mod shapes {
+    /// Complement sequence length.
     pub const COMPLEMENT_N: usize = 65536;
+    /// Convolution image height.
     pub const CONV_H: usize = 128;
+    /// Convolution image width.
     pub const CONV_W: usize = 128;
+    /// Convolution kernel side.
     pub const CONV_K: usize = 3;
+    /// Dot-product vector length.
     pub const DOT_N: usize = 262144;
+    /// Pattern-search sequence length.
     pub const PATTERN_N: usize = 65536;
+    /// Pattern length.
     pub const PATTERN_P: usize = 16;
+    /// FFT point count.
     pub const FFT_N: usize = 1024;
+    /// Matmul sizes with AOT'd artifacts (other sizes run sim-only).
     pub const MATMUL_SIZES: [usize; 4] = [16, 32, 64, 128];
 }
 
@@ -233,11 +260,17 @@ pub mod shapes {
 /// and the paper-scale parameters for the cost model.
 #[derive(Debug, Clone)]
 pub struct WorkloadInstance {
+    /// The algorithm.
     pub kind: WorkloadKind,
+    /// Paper-scale parameters consumed by the cost model.
     pub scale: PaperScale,
+    /// Deterministic inputs at the artifact shape.
     pub inputs: Vec<Tensor>,
+    /// The pure-Rust reference output for `inputs` (the oracle).
     pub expected: Tensor,
+    /// Artifact name of the naive host build.
     pub artifact_naive: String,
+    /// Artifact name of the tuned accelerator build.
     pub artifact_dsp: String,
 }
 

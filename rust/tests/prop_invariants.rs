@@ -554,6 +554,172 @@ fn half_full_batch_flushes_on_drain() {
 }
 
 // ---------------------------------------------------------------------------
+// Per-target backend routing (mixed engines on one platform)
+// ---------------------------------------------------------------------------
+
+/// A coordinator whose platform mixes engines: the DM3730 pair on the
+/// default engine, one explicit `BackendKind::Sim` unit, and one real
+/// `BackendKind::Rayon` multicore unit (2 workers).  Cheap transports
+/// so every unit sees traffic under always-offload.
+fn mixed_engine_vpe(seed: u64, sim_only: bool) -> (vpe::coordinator::Vpe, TargetId, TargetId) {
+    use vpe::coordinator::policy::AlwaysOffloadPolicy;
+    use vpe::coordinator::VpeConfig;
+    use vpe::platform::{BackendKind, TargetSpec, TransferModel, Transport};
+
+    let mut cfg = if sim_only { VpeConfig::sim_only() } else { VpeConfig::default() };
+    cfg.seed = seed;
+    cfg.rayon_threads = 2;
+    cfg.max_queue_per_target = 3;
+    cfg.max_batch_width = 2;
+    let mut v = vpe::coordinator::Vpe::with_policy(cfg, Box::new(AlwaysOffloadPolicy))
+        .expect("vpe");
+    let mut ids = Vec::new();
+    // Rates far below the host's (and cheap transports) so these two
+    // outrank the DSP's 100 ms setup and really see plain traffic.
+    for (name, backend, speedup) in [
+        ("sim-unit", BackendKind::Sim, 20.0),
+        ("rayon-unit", BackendKind::Rayon, 30.0),
+    ] {
+        let id = v.soc_mut().add_target(
+            TargetSpec::new(name, 1_000_000_000).with_backend(backend).with_transport(
+                Transport::SharedMemory(TransferModel {
+                    dispatch_fixed_ns: 2_000_000,
+                    per_param_byte_ns: 1.0,
+                }),
+            ),
+        );
+        for kind in WorkloadKind::ALL {
+            let host = v.soc().cost.rate_ns(kind, dm3730::ARM).expect("row");
+            v.soc_mut().cost.set_rate(kind, id, host / speedup);
+        }
+        ids.push(id);
+    }
+    (v, ids[0], ids[1])
+}
+
+#[test]
+fn prop_mixed_engine_traffic_keeps_queue_invariants() {
+    prop::check("mixed sim+rayon submits", 20, |g| {
+        let (mut v, sim_unit, rayon_unit) = mixed_engine_vpe(g.u64_in(0, u64::MAX - 1), true);
+        // Cheap kinds only: the rayon unit really computes its calls.
+        let kinds = [WorkloadKind::Dotprod, WorkloadKind::Conv2d];
+        let mut fns = Vec::new();
+        for kind in kinds {
+            fns.push(v.register_workload(kind).expect("register"));
+        }
+        let mut logical = 0u64;
+        let mut records = Vec::new();
+        for _ in 0..g.usize_in(5, 15) {
+            match g.usize_in(0, 3) {
+                0 => {
+                    v.submit(*g.choose(&fns)).expect("submit");
+                    logical += 1;
+                }
+                1 => {
+                    let t = v.submit_sharded(*g.choose(&fns)).expect("submit_sharded");
+                    assert_prop(!t.is_empty(), "sharded submit returned no tickets")?;
+                    logical += 1;
+                }
+                _ => records.extend(v.drain().expect("drain")),
+            }
+        }
+        records.extend(v.drain().expect("drain"));
+
+        // Exactly-once retirement across both engine kinds.
+        assert_prop(
+            records.len() as u64 == logical,
+            format!("retired {} != submitted {logical}", records.len()),
+        )?;
+        assert_prop(v.in_flight() == 0, "queue must be empty after a full drain")?;
+        assert_prop(
+            v.dispatches_submitted() == v.dispatches_retired(),
+            "dispatch counters diverge",
+        )?;
+        assert_prop(v.soc().shared.used_bytes() == 0, "staged params leaked")?;
+
+        // Batches are homogeneous per engine *by construction* (they
+        // form per target, and each target binds exactly one engine):
+        // every flushed batch names one target, and that target resolves
+        // to exactly one engine.
+        for (_, target, width, _) in v.events().batches() {
+            assert_prop(width == 2, format!("width {width} beyond the cap of 2"))?;
+            let engine = v.backend_name_on(target);
+            assert_prop(
+                ["sim", "rayon", "reference"].contains(&engine),
+                format!("batch target {target} has no engine"),
+            )?;
+        }
+
+        // Per-target serialization holds across engines (plain windows
+        // union per-shard windows).
+        let mut windows: Vec<(TargetId, u64, u64)> = records
+            .iter()
+            .filter(|r| r.shards == 1)
+            .map(|r| (r.target, r.start_ns, r.complete_ns))
+            .collect();
+        windows.extend(v.events().shard_windows());
+        for t in [dm3730::ARM, dm3730::DSP, sim_unit, rayon_unit] {
+            let mut on_t: Vec<_> = windows.iter().filter(|w| w.0 == t).collect();
+            on_t.sort_by_key(|w| w.1);
+            for p in on_t.windows(2) {
+                assert_prop(
+                    p[1].1 >= p[0].2,
+                    format!("overlap on {t}: {:?} then {:?}", p[0], p[1]),
+                )?;
+            }
+        }
+
+        // Explicitly sim-backed dispatches never produce numerics; the
+        // rayon unit always does (it computes for real even sim-only).
+        for r in records.iter().filter(|r| r.shards == 1) {
+            if r.target == sim_unit {
+                assert_prop(r.wall.is_none(), format!("sim unit produced a wall: {r:?}"))?;
+            }
+            if r.target == rayon_unit {
+                assert_prop(r.wall.is_some(), format!("rayon unit skipped compute: {r:?}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rayon_shard_reassembly_is_bit_exact() {
+    use vpe::workloads::shard;
+    let kinds: Vec<WorkloadKind> = WorkloadKind::ALL
+        .into_iter()
+        .filter(|k| shard::shardable(*k) && *k != WorkloadKind::Matmul)
+        .collect();
+    prop::check("sharded across sim+rayon == reference", 12, |g| {
+        // Real numerics everywhere: a fan-out mixing a simulated unit
+        // and a real multicore unit must reassemble bit-exact against
+        // the registered instance's reference output.
+        let (mut v, _, rayon_unit) = mixed_engine_vpe(g.u64_in(0, u64::MAX - 1), false);
+        let kind = *g.choose(&kinds);
+        let f = v.register_workload(kind).expect("register");
+        let rec = v.call_sharded(f).expect("call_sharded");
+        assert_prop(
+            rec.output_ok != Some(false),
+            format!("{kind:?}: mixed-engine reassembly differs from the reference"),
+        )?;
+        if rec.shards >= 2 {
+            let on: std::collections::HashSet<TargetId> =
+                v.events().shard_windows().iter().map(|w| w.0).collect();
+            // The planner is free to drop units, but when the rayon
+            // unit participates its shards must have really computed.
+            if on.contains(&rayon_unit) {
+                assert_prop(
+                    rec.output_ok == Some(true),
+                    format!("{kind:?}: rayon shard broke the group: {rec:?}"),
+                )?;
+            }
+        }
+        assert_prop(v.in_flight() == 0, "queue must drain")?;
+        assert_prop(v.soc().shared.used_bytes() == 0, "staged params leaked")
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Workload references (cross-validated against each other)
 // ---------------------------------------------------------------------------
 
