@@ -65,11 +65,49 @@ fn print_scenario(title: &str, degrade: Option<f64>) {
     }
 }
 
+/// Trace-driven what-if: record one blind-offload matmul run, then
+/// re-price it under every policy without re-simulating the platform —
+/// the same comparison as the sim sweep above, but from a v3 trace.
+fn print_whatif() {
+    let mut v = Vpe::with_policy(VpeConfig::sim_only(), policy("blind")).expect("vpe");
+    v.enable_tracing();
+    let f = v.register_matmul(500).expect("register");
+    v.run(f, 40).expect("run");
+    let trace = v.trace().expect("tracing enabled").clone();
+    println!(
+        "\n== trace-driven what-if (matmul-500 x 40 recorded under blind: {:.0} ms) ==",
+        trace.total_ms()
+    );
+    println!(
+        "{:<14} {:>10} {:>9} {:>9} {:>9}",
+        "policy", "total ms", "offloads", "reverts", "diverged"
+    );
+    for name in POLICIES {
+        let mut p = policy(name);
+        let o = vpe::coordinator::trace::replay(&trace, p.as_mut());
+        println!(
+            "{:<14} {:>10.0} {:>9} {:>9} {:>9}",
+            name,
+            o.total_ms,
+            o.offloads,
+            o.reverts,
+            o.diverged()
+        );
+    }
+    // Replaying the recording policy must reproduce the recorded run
+    // bit-exactly — the decision-faithful replay guarantee.
+    let mut blind = policy("blind");
+    let o = vpe::coordinator::trace::replay(&trace, blind.as_mut());
+    assert_eq!(o.diverged(), 0, "recording-policy replay must match:\n{}", o.divergence_report());
+    assert_eq!(o.total_ns, trace.total_ns(), "recording-policy replay must re-price exactly");
+}
+
 fn main() {
     print_scenario("healthy DM3730", None);
     // A 40x-degraded DSP: static prediction keeps dispatching to it,
     // measurement-driven policies escape.
     print_scenario("thermally degraded DSP (40x)", Some(40.0));
+    print_whatif();
 
     // Sanity assertions for the headline claims of the ablation.
     let blind_fft = total_sim_ms(WorkloadKind::Fft, "blind", None);
@@ -78,5 +116,8 @@ fn main() {
     let blind_deg = total_sim_ms(WorkloadKind::Matmul, "blind", Some(40.0));
     let pred_deg = total_sim_ms(WorkloadKind::Matmul, "predictive", Some(40.0));
     assert!(blind_deg < pred_deg, "blind must escape a degraded DSP, static cannot");
-    println!("\nheadline checks passed: blind recovers on FFT and escapes a degraded DSP");
+    println!(
+        "\nheadline checks passed: blind recovers on FFT, escapes a degraded DSP, and\n\
+         trace replay under the recording policy reproduces the run exactly"
+    );
 }

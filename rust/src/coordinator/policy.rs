@@ -40,7 +40,10 @@ pub struct Candidate {
 
 impl Candidate {
     /// A candidate with no batching upside (amortized == predicted) —
-    /// trace replay and tests that predate batching use this.
+    /// used by tests that predate batching and by replay of *degraded*
+    /// (pre-v3) traces; v3 traces record the live candidate slice with
+    /// its true amortized prices, so replay ranks exactly what the
+    /// recording policy saw.
     pub fn uniform(target: TargetId, predicted_ns: u64) -> Self {
         Candidate { target, predicted_ns, amortized_ns: predicted_ns }
     }

@@ -93,6 +93,15 @@ pub struct InFlight {
     /// part only for a coalesced follower, 0 on the host.  The
     /// cost-model learner subtracts this to recover the compute rate.
     pub overhead_ns: u64,
+    /// The queue's flush epoch when this dispatch was issued (see
+    /// [`DispatchQueue::current_epoch`]): dispatches sharing an epoch
+    /// were staged between the same two flush points and could
+    /// coalesce.  Trace v3 records it so replay can simulate batch
+    /// formation.
+    pub epoch: u64,
+    /// Did this dispatch ride an existing batch (flushed behind a
+    /// leader, paying only its per-call variable cost)?
+    pub coalesced: bool,
     /// Parameter block staged in the shared region, freed at retirement.
     pub staged: Option<Allocation>,
     /// Set when this dispatch is one shard of a fanned-out call; the
@@ -123,6 +132,9 @@ pub struct PendingDispatch {
     /// The once-per-batch fixed transport setup this dispatch would pay
     /// if it flushed alone.
     pub setup_ns: u64,
+    /// The queue's flush epoch when this dispatch was staged (carried
+    /// into [`InFlight::epoch`] at flush).
+    pub epoch: u64,
     /// Parameter block staged in the shared region, freed at retirement.
     pub staged: Option<Allocation>,
     /// Set when this dispatch is one shard of a fanned-out call.
@@ -164,6 +176,10 @@ pub struct DispatchQueue {
     /// flush order is deterministic across runs).
     forming: BTreeMap<TargetId, Vec<PendingDispatch>>,
     next_ticket: u64,
+    /// Flush epoch: advanced at every retirement attempt (the
+    /// flush-on-drain points).  Dispatches issued in the same epoch
+    /// were staged between two consecutive flushes and could coalesce.
+    epoch: u64,
     submitted: u64,
     retired: u64,
     max_in_flight: usize,
@@ -183,6 +199,21 @@ impl DispatchQueue {
         let t = TicketId(self.next_ticket);
         self.next_ticket += 1;
         t
+    }
+
+    /// The current flush epoch.  Dispatches issued (staged or pushed)
+    /// while the epoch holds one value were accepted between the same
+    /// two flush points and could coalesce into one batch; the
+    /// coordinator stamps it into each dispatch and trace v3 records it
+    /// for the replay batch machine.
+    pub fn current_epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Advance the flush epoch (the coordinator calls this at every
+    /// retirement attempt, i.e. at every flush-on-drain point).
+    pub fn advance_epoch(&mut self) {
+        self.epoch += 1;
     }
 
     /// Enqueue a dispatch directly (the host path — nothing to
@@ -248,6 +279,17 @@ impl DispatchQueue {
     /// Dispatches waiting in `target`'s forming batch.
     pub fn forming_on(&self, target: TargetId) -> usize {
         self.forming.get(&target).map(Vec::len).unwrap_or(0)
+    }
+
+    /// Snapshot of `target`'s forming batch — `(ticket, function, issue
+    /// epoch)` per member, in FIFO order.  Introspection for tests and
+    /// tooling (the trace recorder itself reads each dispatch's stamped
+    /// epoch at retirement); the batch stays staged.
+    pub fn forming_snapshot(&self, target: TargetId) -> Vec<(TicketId, FunctionId, u64)> {
+        self.forming
+            .get(&target)
+            .map(|b| b.iter().map(|p| (p.ticket, p.function, p.epoch)).collect())
+            .unwrap_or_default()
     }
 
     /// Total core execution time staged in `target`'s forming batch
@@ -335,6 +377,8 @@ mod tests {
             complete_ns: start + exec,
             exec_ns: exec,
             overhead_ns: 0,
+            epoch: q.current_epoch(),
+            coalesced: false,
             staged: None,
             shard: None,
         });
@@ -343,6 +387,7 @@ mod tests {
 
     fn pending(q: &mut DispatchQueue, target: TargetId, issue: u64, core: u64) -> TicketId {
         let ticket = q.next_ticket();
+        let epoch = q.current_epoch();
         q.stage(PendingDispatch {
             ticket,
             function: FunctionId(0),
@@ -352,6 +397,7 @@ mod tests {
             core_exec_ns: core,
             variable_ns: 0,
             setup_ns: 100,
+            epoch,
             staged: None,
             shard: None,
         });
@@ -447,6 +493,22 @@ mod tests {
         assert_eq!(q.forming_on(dm3730::DSP), 0);
         assert_eq!(q.len(), 1);
         assert!(q.take_forming(dm3730::DSP).is_empty());
+    }
+
+    #[test]
+    fn forming_snapshot_reports_members_with_their_issue_epochs() {
+        let mut q = DispatchQueue::new();
+        assert_eq!(q.current_epoch(), 0);
+        let a = pending(&mut q, dm3730::DSP, 0, 100);
+        q.advance_epoch(); // a retirement attempt happened in between
+        let b = pending(&mut q, dm3730::DSP, 1, 100);
+        let snap = q.forming_snapshot(dm3730::DSP);
+        assert_eq!(snap.len(), 2);
+        assert_eq!((snap[0].0, snap[0].2), (a, 0), "FIFO + issue epoch");
+        assert_eq!((snap[1].0, snap[1].2), (b, 1));
+        assert!(q.forming_snapshot(dm3730::ARM).is_empty());
+        q.take_forming(dm3730::DSP);
+        assert!(q.forming_snapshot(dm3730::DSP).is_empty());
     }
 
     #[test]

@@ -67,6 +67,10 @@ pub struct PlannedShard {
     pub start: usize,
     /// One past the shard's last output unit.
     pub end: usize,
+    /// The fixed cost the planner charged the unit (dispatch overhead
+    /// plus queue backlog), ns — recorded in trace v3 so replay can
+    /// reconstruct the planner's rate rows and re-plan at any width.
+    pub fixed_ns: u64,
     /// Predicted completion offset from issue (fixed costs + compute).
     pub predicted_ns: u64,
 }
@@ -237,6 +241,7 @@ pub fn plan(
             target: t.target,
             start: cursor,
             end: cursor + n_units,
+            fixed_ns: t.fixed_ns() as u64,
             predicted_ns: predicted,
         });
         cursor += n_units;

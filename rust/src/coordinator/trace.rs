@@ -4,64 +4,186 @@
 //! The replay engine answers "what would policy P have cost on this
 //! exact run?" without re-simulating the platform: each trace entry
 //! carries every registered unit's noise-free execution price for that
-//! call (the cost model is deterministic given the workload scale), so
-//! any policy's decision sequence can be re-priced exactly.  This is the
-//! ablation machinery behind `benches/policies.rs` and the `vpe replay`
-//! CLI verb.
+//! call, the exact candidate slice the live policy ranked (lone *and*
+//! batch-amortized prices), the dispatch-queue epoch the call was
+//! issued and retired in, and — for shardable calls — the fan-out
+//! planner's counterfactual plan.  Any policy's decision sequence can
+//! therefore be re-priced faithfully, including decisions driven by
+//! batch amortization ([`super::policies_ext::FanOutPolicy`]) and
+//! [`PolicyAction::FanOut`] itself.  This is the ablation machinery
+//! behind `benches/policies.rs`, `examples/replay_whatif.rs` and the
+//! `vpe replay` CLI verb.
 //!
 //! ## Formats
 //!
-//! - **`vpe-trace-v2`** (written): `"on"` is the numeric registry slot
-//!   the call executed on and `"prices"` lists `[slot, ns]` pairs for
-//!   every unit the cost model could price — an N-target run round-trips
-//!   with every unit's identity and price intact.
+//! - **`vpe-trace-v3`** (written): everything v2 recorded, plus a
+//!   header (`max_batch_width`, the hotspot detector's `min_samples` /
+//!   `share_threshold`, per-unit transport `setups`) and per entry the
+//!   recorded candidate slice (`[slot, predicted_ns, amortized_ns]`),
+//!   the issue/retire queue epochs, the coalesced-follower flag, the
+//!   shard count, the sampled cycle count, and the shard planner's
+//!   counterfactual plan (per-shard sizes, fixed costs, predicted ns,
+//!   group makespan).
+//! - **`vpe-trace-v2`** (read-compat): numeric registry slots plus
+//!   `[slot, ns]` lone-dispatch prices only.  Loads with
+//!   [`Trace::degraded`] set: replay rebuilds candidates with
+//!   `amortized_ns == predicted_ns`, prices no batching, and treats
+//!   `FanOut` as a plain host call — exactly the pre-v3 behavior,
+//!   now explicitly flagged in [`ReplayOutcome::degraded_fidelity`].
 //! - **`vpe-trace-v1`** (read-compat): the original DM3730-pair format
 //!   (`"on": "arm"|"dsp"`, `arm_ns`/`dsp_ns` fields).  v1 used
 //!   `u64::MAX` as an "unpriceable" sentinel for the DSP column; those
-//!   entries load with the price simply absent.
+//!   entries load with the price simply absent.  Degraded like v2.
 //!
-//! ## Known limitation
+//! ## How replay stays decision-faithful
 //!
-//! Trace v2 records lone-dispatch prices only; replay rebuilds
-//! candidates with `amortized_ns == predicted_ns`.  A policy that
-//! decides from batch-amortized prices (`FanOutPolicy` since the
-//! batched-dispatch PR) can therefore diverge from the live run when a
-//! unit is setup-dominated alone but comparable amortized — recording
-//! per-unit amortized prices needs a format rev (see the ROADMAP
-//! "batch/shard-aware replay" item), like fan-out itself, which replay
-//! already treats as a no-op.
+//! Three mechanisms close the gaps batching and sharding opened:
+//!
+//! 1. **Recorded candidate slices.**  Policies decide from
+//!    `Candidate.amortized_ns` since the batched-dispatch PR; v3
+//!    records the exact slice the live coordinator ranked at each
+//!    retirement, so replayed decisions see the same numbers —
+//!    including learned-rate drift over the run.
+//! 2. **A simulated batch state machine.**  Counterfactual placements
+//!    are priced through a per-target open-batch model mirroring
+//!    [`super::queue::DispatchQueue`]'s formation rules: dispatches
+//!    sharing an *issue epoch* (the live queue advances its epoch at
+//!    every retirement attempt, i.e. at every flush-on-drain point)
+//!    coalesce up to the recorded width cap; the leader pays the lone
+//!    price, followers pay the marginal price (lone minus the unit's
+//!    recorded transport setup).  Calls whose replayed placement
+//!    matches the recorded one are charged the *recorded* `exec_ns` —
+//!    the record already embodies the call's true batch position,
+//!    including batch members the machine cannot see (fan-out shards
+//!    that joined the same forming batch) — so replaying the recording
+//!    policy reproduces the total exactly, noise included; the machine
+//!    is synced from the recorded flags along the matched prefix.
+//! 3. **Recorded shard counterfactuals.**  Each shardable entry carries
+//!    the planner's full-width plan (sizes, per-shard fixed costs,
+//!    predicted ns).  A replayed `FanOut { width }` reconstructs the
+//!    planner's rate rows from it and re-runs
+//!    [`super::shard::plan`] at that width, pricing the decision as a
+//!    real makespan instead of a no-op.
+//!
+//! Live policy actions fire at a retirement and only affect dispatches
+//! *issued afterwards* — queued waves in flight keep their old target.
+//! Replay mirrors this with a per-function placement history keyed by
+//! the recorded retire epochs, so what-if analysis of queued runs does
+//! not apply decisions retroactively.
+//!
+//! Remaining (documented) approximations: replay has no bounded-queue
+//! model, so live *bounced* dispatches (executed on the host because
+//! the remote queue was full) replay as divergent entries; and a
+//! counterfactual fan-out's plan reflects the queue backlog at the
+//! recorded retirement, not the replayed schedule.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::fmt::Write as _;
 use std::path::Path;
 
 use crate::error::{Error, Result};
 use crate::jit::module::{FunctionId, IrFunction, IrModule, OpMix};
 use crate::platform::{dm3730, TargetId};
-use crate::profiler::hotspot::Hotspot;
+use crate::profiler::hotspot::{Hotspot, HotspotDetector};
 use crate::profiler::sampler::FunctionProfile;
-use crate::util::json;
+use crate::util::json::{self, Json};
 use crate::workloads::WorkloadKind;
 
 use super::policy::{Candidate, OffloadPolicy, PolicyAction, PolicyCtx};
-use super::vpe::CallRecord;
+use super::shard::{self as shard_plan, PlanTarget};
 
-/// One recorded call with the whole platform's (noise-free) prices.
+/// One candidate the live policy saw at a call's retirement: the unit,
+/// its lone-dispatch price and its steady-state batch-amortized price.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecordedCandidate {
+    /// The candidate unit (registry slot).
+    pub target: TargetId,
+    /// Lone-dispatch price for one call at the recorded scale, ns.
+    pub predicted_ns: u64,
+    /// The same call priced at steady-state batching (transport setup
+    /// amortized over the achievable batch width), ns.
+    pub amortized_ns: u64,
+}
+
+/// One shard of a recorded counterfactual fan-out plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecordedShard {
+    /// The unit the planner assigned this shard to.
+    pub target: TargetId,
+    /// Output units assigned (shard size).
+    pub units: usize,
+    /// The fixed cost the planner charged the unit (transport overhead
+    /// plus queue backlog at plan time), ns.
+    pub fixed_ns: u64,
+    /// Predicted completion offset of the shard (fixed + compute), ns.
+    pub predicted_ns: u64,
+}
+
+/// The shard planner's counterfactual plan for one recorded call: what
+/// a full-width fan-out of this exact call would have looked like.
+/// Replay reconstructs the planner's per-unit rate rows from the shard
+/// sizes and predicted times and re-runs [`super::shard::plan`] at any
+/// policy-chosen width.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecordedPlan {
+    /// Total output units of the call.
+    pub units: usize,
+    /// Cost-model items per output unit at the recorded scale.
+    pub items_per_unit: f64,
+    /// Predicted completion of the slowest shard, ns.
+    pub makespan_ns: u64,
+    /// The planned shards, in assignment order.
+    pub shards: Vec<RecordedShard>,
+}
+
+/// One recorded call with the whole platform's (noise-free) prices and
+/// the decision context the live coordinator saw.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceEntry {
     /// The called function's id (`FunctionId.0`).
     pub function: u32,
     /// The workload algorithm of the call.
     pub kind: WorkloadKind,
-    /// What the recorded run actually did.
+    /// What the recorded run actually did (the primary shard's unit for
+    /// a fanned-out call).
     pub executed_on: TargetId,
-    /// Simulated execution time of the recorded call, ns.
+    /// Simulated execution time of the recorded call, ns (the group
+    /// makespan for a fanned-out call).
     pub exec_ns: u64,
     /// Profiling cost charged on top of the recorded call, ns.
     pub profiling_ns: u64,
+    /// Sampled cycle count the hotspot detector ranked this call with
+    /// (0 in pre-v3 traces: replay falls back to the charged time).
+    pub cycles: u64,
+    /// Dispatch-queue epoch the call was issued in (dispatches sharing
+    /// an epoch were staged between the same two flush points and could
+    /// coalesce; pre-v3 traces use the entry index).
+    pub issue_epoch: u64,
+    /// Queue epoch at this call's retirement — live policy actions
+    /// fired here affect only dispatches issued in later epochs.
+    pub retire_epoch: u64,
+    /// Did this dispatch ride an existing batch (coalesced follower:
+    /// paid the marginal transport cost, not the setup)?
+    pub coalesced: bool,
+    /// Was the function in a policy-chosen fan-out state at this call's
+    /// retirement?  Distinguishes a live fan-out *fallback* (the
+    /// submit-time plan did not fan out, so the call ran as a plain
+    /// dispatch despite the fan-out — `shards == 1` with `fanned`) from
+    /// a plainly-placed call, so replay can mirror the fallback instead
+    /// of re-pricing it as a counterfactual fan-out.
+    pub fanned: bool,
+    /// Concurrent shards the call was split into (1 = plain dispatch).
+    pub shards: usize,
     /// Counterfactual price per registered unit (registry slot, ns),
     /// host first; units the cost model cannot price are absent.
     pub prices: Vec<(TargetId, u64)>,
+    /// The exact candidate slice the live policy ranked at this
+    /// retirement (empty in pre-v3 traces: replay degrades to uniform
+    /// candidates built from `prices`).
+    pub candidates: Vec<RecordedCandidate>,
+    /// The shard planner's counterfactual full-width plan for this
+    /// call, when the workload shards and fanning out would help.
+    pub plan: Option<RecordedPlan>,
 }
 
 impl TraceEntry {
@@ -76,10 +198,45 @@ impl TraceEntry {
     }
 }
 
+/// Run-level header of a recorded trace: the knobs replay must share
+/// with the recording coordinator so decisions cannot drift.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceMeta {
+    /// Format version the document was read from (3 for fresh traces;
+    /// 1 or 2 after loading an old document).
+    pub version: u8,
+    /// The effective batch width the recording queue could reach
+    /// (`VpeConfig::max_batch_width` capped by the bounded queue depth);
+    /// the replay batch machine's coalescing cap.
+    pub max_batch_width: usize,
+    /// The recording hotspot detector's minimum profiled calls.
+    pub min_samples: u64,
+    /// The recording hotspot detector's minimum cycle share.
+    pub share_threshold: f64,
+    /// Per-unit fixed transport setup, ns (0 for the host) — what a
+    /// coalesced follower saves over a lone dispatch.
+    pub setups: Vec<(TargetId, u64)>,
+}
+
+impl Default for TraceMeta {
+    fn default() -> Self {
+        let d = HotspotDetector::default();
+        TraceMeta {
+            version: 3,
+            max_batch_width: 1,
+            min_samples: d.min_samples,
+            share_threshold: d.share_threshold,
+            setups: Vec::new(),
+        }
+    }
+}
+
 /// A recorded run.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Trace {
-    /// The recorded calls, in execution order.
+    /// Run-level recording parameters (see [`TraceMeta`]).
+    pub meta: TraceMeta,
+    /// The recorded calls, in retirement order.
     pub entries: Vec<TraceEntry>,
 }
 
@@ -107,29 +264,49 @@ fn kind_from(s: &str) -> Result<WorkloadKind> {
 }
 
 impl Trace {
-    /// Record an entry from a live [`CallRecord`] plus the platform's
-    /// counterfactual prices (the coordinator knows its own cost model).
-    pub fn push(&mut self, rec: &CallRecord, kind: WorkloadKind, prices: Vec<(TargetId, u64)>) {
-        self.entries.push(TraceEntry {
-            function: rec.function.0,
-            kind,
-            executed_on: rec.target,
-            exec_ns: rec.exec_ns,
-            profiling_ns: rec.profiling_ns,
-            prices,
-        });
+    /// Append one recorded entry (the coordinator builds it at
+    /// retirement with its own cost model, candidate ranking and shard
+    /// planner).
+    pub fn push(&mut self, entry: TraceEntry) {
+        self.entries.push(entry);
+    }
+
+    /// Was this trace loaded from a pre-v3 document (no amortized
+    /// candidate prices, no epochs, no shard counterfactuals)?  Replay
+    /// of a degraded trace falls back to lone-price candidates and
+    /// treats fan-out as a plain host call.
+    pub fn degraded(&self) -> bool {
+        self.meta.version < 3
+    }
+
+    /// Total recorded cost, ns (execution + profiling).
+    pub fn total_ns(&self) -> u64 {
+        self.entries.iter().map(|e| e.exec_ns + e.profiling_ns).sum()
     }
 
     /// Total recorded cost, ms.
     pub fn total_ms(&self) -> f64 {
-        self.entries.iter().map(|e| (e.exec_ns + e.profiling_ns) as f64).sum::<f64>() / 1e6
+        self.total_ns() as f64 / 1e6
     }
 
     // -- persistence --------------------------------------------------------
 
-    /// Serialize as JSON (`vpe-trace-v2`).
+    /// Serialize as JSON (`vpe-trace-v3`).
     pub fn to_json(&self) -> String {
-        let mut out = String::from("{\"format\":\"vpe-trace-v2\",\"entries\":[\n");
+        let mut out = String::from("{\"format\":\"vpe-trace-v3\",");
+        let _ = write!(
+            out,
+            "\"max_batch_width\":{},\"min_samples\":{},\"share_threshold\":{},",
+            self.meta.max_batch_width, self.meta.min_samples, self.meta.share_threshold,
+        );
+        let setups = self
+            .meta
+            .setups
+            .iter()
+            .map(|(t, ns)| format!("[{},{}]", t.0, ns))
+            .collect::<Vec<_>>()
+            .join(",");
+        let _ = write!(out, "\"setups\":[{setups}],\"entries\":[\n");
         for (i, e) in self.entries.iter().enumerate() {
             let prices = e
                 .prices
@@ -137,113 +314,305 @@ impl Trace {
                 .map(|(t, ns)| format!("[{},{}]", t.0, ns))
                 .collect::<Vec<_>>()
                 .join(",");
+            let cand = e
+                .candidates
+                .iter()
+                .map(|c| format!("[{},{},{}]", c.target.0, c.predicted_ns, c.amortized_ns))
+                .collect::<Vec<_>>()
+                .join(",");
             let _ = write!(
                 out,
-                "{{\"f\":{},\"kind\":\"{}\",\"on\":{},\"exec_ns\":{},\"prof_ns\":{},\"prices\":[{}]}}{}\n",
+                "{{\"f\":{},\"kind\":\"{}\",\"on\":{},\"exec_ns\":{},\"prof_ns\":{},\
+                 \"cycles\":{},\"epoch\":{},\"retire_epoch\":{},\"coalesced\":{},\
+                 \"fanned\":{},\"shards\":{},\"prices\":[{}],\"cand\":[{}]",
                 e.function,
                 kind_name(e.kind),
                 e.executed_on.0,
                 e.exec_ns,
                 e.profiling_ns,
+                e.cycles,
+                e.issue_epoch,
+                e.retire_epoch,
+                e.coalesced,
+                e.fanned,
+                e.shards,
                 prices,
-                if i + 1 < self.entries.len() { "," } else { "" },
+                cand,
             );
+            if let Some(p) = &e.plan {
+                let shards = p
+                    .shards
+                    .iter()
+                    .map(|s| {
+                        format!("[{},{},{},{}]", s.target.0, s.units, s.fixed_ns, s.predicted_ns)
+                    })
+                    .collect::<Vec<_>>()
+                    .join(",");
+                let _ = write!(
+                    out,
+                    ",\"plan\":{{\"units\":{},\"items_per_unit\":{},\"makespan_ns\":{},\"shards\":[{}]}}",
+                    p.units, p.items_per_unit, p.makespan_ns, shards,
+                );
+            }
+            let _ = write!(out, "}}{}\n", if i + 1 < self.entries.len() { "," } else { "" });
         }
         out.push_str("]}");
         out
     }
 
-    /// Parse from JSON — v2, with v1 read-compatibility.
+    /// Parse from JSON — v3, with v2/v1 read-compatibility.
     pub fn from_json(text: &str) -> Result<Self> {
         let j = json::parse(text)?;
-        let v1 = match j.req("format")?.as_str() {
-            Some("vpe-trace-v2") => false,
-            Some("vpe-trace-v1") => true,
-            _ => return Err(Error::Parse("not a vpe-trace-v1/v2 document".into())),
+        let version: u8 = match j.req("format")?.as_str() {
+            Some("vpe-trace-v3") => 3,
+            Some("vpe-trace-v2") => 2,
+            Some("vpe-trace-v1") => 1,
+            _ => return Err(Error::Parse("not a vpe-trace-v1/v2/v3 document".into())),
         };
+        let mut meta = TraceMeta { version, ..TraceMeta::default() };
+        if version == 3 {
+            meta.max_batch_width = j
+                .req("max_batch_width")?
+                .as_usize()
+                .filter(|w| *w >= 1)
+                .ok_or_else(|| Error::Parse("bad 'max_batch_width'".into()))?;
+            meta.min_samples = j
+                .req("min_samples")?
+                .as_f64()
+                .filter(|v| *v >= 0.0)
+                .map(|v| v as u64)
+                .ok_or_else(|| Error::Parse("bad 'min_samples'".into()))?;
+            meta.share_threshold = j
+                .req("share_threshold")?
+                .as_f64()
+                .filter(|v| *v >= 0.0)
+                .ok_or_else(|| Error::Parse("bad 'share_threshold'".into()))?;
+            meta.setups = j
+                .req("setups")?
+                .as_arr()
+                .ok_or_else(|| Error::Parse("'setups' must be an array".into()))?
+                .iter()
+                .map(slot_ns_pair)
+                .collect::<Result<Vec<_>>>()?;
+        }
         let entries = j
             .req("entries")?
             .as_arr()
             .ok_or_else(|| Error::Parse("'entries' must be an array".into()))?
             .iter()
-            .map(|e| -> Result<TraceEntry> {
-                let num = |k: &str| -> Result<u64> {
-                    e.req(k)?
-                        .as_f64()
-                        .filter(|v| *v >= 0.0)
-                        .map(|v| v as u64)
-                        .ok_or_else(|| Error::Parse(format!("bad '{k}'")))
-                };
-                let (executed_on, prices) = if v1 {
-                    let on = match e.req("on")?.as_str() {
-                        Some("arm") => dm3730::ARM,
-                        Some("dsp") => dm3730::DSP,
-                        _ => return Err(Error::Parse("bad 'on'".into())),
-                    };
-                    // v1 recorded only the DM3730 pair and used u64::MAX
-                    // as an "unpriceable" sentinel — dropped here.
-                    let mut prices = vec![(dm3730::ARM, num("arm_ns")?)];
-                    let dsp = num("dsp_ns")?;
-                    if dsp != u64::MAX {
-                        prices.push((dm3730::DSP, dsp));
-                    }
-                    (on, prices)
-                } else {
-                    let on = TargetId(
-                        e.req("on")?
-                            .as_usize()
-                            .filter(|v| *v <= u16::MAX as usize)
-                            .ok_or_else(|| Error::Parse("bad 'on'".into()))?
-                            as u16,
-                    );
-                    let prices = e
-                        .req("prices")?
-                        .as_arr()
-                        .ok_or_else(|| Error::Parse("'prices' must be an array".into()))?
-                        .iter()
-                        .map(|p| -> Result<(TargetId, u64)> {
-                            let pair =
-                                p.as_arr().filter(|a| a.len() == 2).ok_or_else(|| {
-                                    Error::Parse("price must be a [slot, ns] pair".into())
-                                })?;
-                            let slot = pair[0]
-                                .as_usize()
-                                .filter(|v| *v <= u16::MAX as usize)
-                                .ok_or_else(|| Error::Parse("bad price slot".into()))?;
-                            let ns = pair[1]
-                                .as_f64()
-                                .filter(|v| *v >= 0.0)
-                                .map(|v| v as u64)
-                                .ok_or_else(|| Error::Parse("bad price ns".into()))?;
-                            Ok((TargetId(slot as u16), ns))
-                        })
-                        .collect::<Result<Vec<_>>>()?;
-                    (on, prices)
-                };
-                Ok(TraceEntry {
-                    function: num("f")? as u32,
-                    kind: kind_from(
-                        e.req("kind")?.as_str().ok_or_else(|| Error::Parse("bad kind".into()))?,
-                    )?,
-                    executed_on,
-                    exec_ns: num("exec_ns")?,
-                    profiling_ns: num("prof_ns")?,
-                    prices,
-                })
-            })
+            .enumerate()
+            .map(|(i, e)| parse_entry(e, version, i))
             .collect::<Result<Vec<_>>>()?;
-        Ok(Trace { entries })
+        Ok(Trace { meta, entries })
     }
 
-    /// Write the trace to `path` as v2 JSON.
+    /// Write the trace to `path` as v3 JSON.
     pub fn save(&self, path: &Path) -> Result<()> {
         Ok(std::fs::write(path, self.to_json())?)
     }
 
-    /// Load a trace from `path` (v2, or v1 read-compat).
+    /// Load a trace from `path` (v3, or v2/v1 read-compat).
     pub fn load(path: &Path) -> Result<Self> {
         Self::from_json(&std::fs::read_to_string(path)?)
     }
+}
+
+/// Parse a `[slot, ns]` pair.
+fn slot_ns_pair(p: &Json) -> Result<(TargetId, u64)> {
+    let pair = p
+        .as_arr()
+        .filter(|a| a.len() == 2)
+        .ok_or_else(|| Error::Parse("expected a [slot, ns] pair".into()))?;
+    let slot = pair[0]
+        .as_usize()
+        .filter(|v| *v <= u16::MAX as usize)
+        .ok_or_else(|| Error::Parse("bad slot".into()))?;
+    let ns = pair[1]
+        .as_f64()
+        .filter(|v| *v >= 0.0)
+        .map(|v| v as u64)
+        .ok_or_else(|| Error::Parse("bad ns".into()))?;
+    Ok((TargetId(slot as u16), ns))
+}
+
+fn parse_entry(e: &Json, version: u8, index: usize) -> Result<TraceEntry> {
+    let num = |k: &str| -> Result<u64> {
+        e.req(k)?
+            .as_f64()
+            .filter(|v| *v >= 0.0)
+            .map(|v| v as u64)
+            .ok_or_else(|| Error::Parse(format!("bad '{k}'")))
+    };
+    let (executed_on, prices) = if version == 1 {
+        let on = match e.req("on")?.as_str() {
+            Some("arm") => dm3730::ARM,
+            Some("dsp") => dm3730::DSP,
+            _ => return Err(Error::Parse("bad 'on'".into())),
+        };
+        // v1 recorded only the DM3730 pair and used u64::MAX as an
+        // "unpriceable" sentinel — dropped here.
+        let mut prices = vec![(dm3730::ARM, num("arm_ns")?)];
+        let dsp = num("dsp_ns")?;
+        if dsp != u64::MAX {
+            prices.push((dm3730::DSP, dsp));
+        }
+        (on, prices)
+    } else {
+        let on = TargetId(
+            e.req("on")?
+                .as_usize()
+                .filter(|v| *v <= u16::MAX as usize)
+                .ok_or_else(|| Error::Parse("bad 'on'".into()))? as u16,
+        );
+        let prices = e
+            .req("prices")?
+            .as_arr()
+            .ok_or_else(|| Error::Parse("'prices' must be an array".into()))?
+            .iter()
+            .map(slot_ns_pair)
+            .collect::<Result<Vec<_>>>()?;
+        (on, prices)
+    };
+    let mut entry = TraceEntry {
+        function: num("f")? as u32,
+        kind: kind_from(e.req("kind")?.as_str().ok_or_else(|| Error::Parse("bad kind".into()))?)?,
+        executed_on,
+        exec_ns: num("exec_ns")?,
+        profiling_ns: num("prof_ns")?,
+        // Pre-v3 defaults: entry-index epochs give every call its own
+        // formation window (no counterfactual coalescing) and make
+        // policy actions apply from the next entry on — the old
+        // immediate-effect replay semantics.
+        cycles: 0,
+        issue_epoch: index as u64,
+        retire_epoch: index as u64 + 1,
+        coalesced: false,
+        fanned: false,
+        shards: 1,
+        prices,
+        candidates: Vec::new(),
+        plan: None,
+    };
+    if version < 3 {
+        return Ok(entry);
+    }
+    entry.cycles = num("cycles")?;
+    entry.issue_epoch = num("epoch")?;
+    entry.retire_epoch = num("retire_epoch")?;
+    entry.coalesced = e
+        .req("coalesced")?
+        .as_bool()
+        .ok_or_else(|| Error::Parse("bad 'coalesced'".into()))?;
+    entry.fanned = e
+        .req("fanned")?
+        .as_bool()
+        .ok_or_else(|| Error::Parse("bad 'fanned'".into()))?;
+    entry.shards = e
+        .req("shards")?
+        .as_usize()
+        .filter(|s| *s >= 1)
+        .ok_or_else(|| Error::Parse("bad 'shards'".into()))?;
+    entry.candidates = e
+        .req("cand")?
+        .as_arr()
+        .ok_or_else(|| Error::Parse("'cand' must be an array".into()))?
+        .iter()
+        .map(|c| -> Result<RecordedCandidate> {
+            let t = c
+                .as_arr()
+                .filter(|a| a.len() == 3)
+                .ok_or_else(|| Error::Parse("candidate must be [slot, pred, amort]".into()))?;
+            let slot = t[0]
+                .as_usize()
+                .filter(|v| *v <= u16::MAX as usize)
+                .ok_or_else(|| Error::Parse("bad candidate slot".into()))?;
+            let pred = t[1]
+                .as_f64()
+                .filter(|v| *v >= 0.0)
+                .ok_or_else(|| Error::Parse("bad candidate price".into()))?;
+            let amort = t[2]
+                .as_f64()
+                .filter(|v| *v >= 0.0)
+                .ok_or_else(|| Error::Parse("bad candidate price".into()))?;
+            Ok(RecordedCandidate {
+                target: TargetId(slot as u16),
+                predicted_ns: pred as u64,
+                amortized_ns: amort as u64,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    if let Some(p) = e.get("plan") {
+        let units = p
+            .req("units")?
+            .as_usize()
+            .ok_or_else(|| Error::Parse("bad plan 'units'".into()))?;
+        let items_per_unit = p
+            .req("items_per_unit")?
+            .as_f64()
+            .filter(|v| *v >= 0.0 && v.is_finite())
+            .ok_or_else(|| Error::Parse("bad plan 'items_per_unit'".into()))?;
+        let makespan_ns = p
+            .req("makespan_ns")?
+            .as_f64()
+            .filter(|v| *v >= 0.0)
+            .map(|v| v as u64)
+            .ok_or_else(|| Error::Parse("bad plan 'makespan_ns'".into()))?;
+        let shards = p
+            .req("shards")?
+            .as_arr()
+            .ok_or_else(|| Error::Parse("plan 'shards' must be an array".into()))?
+            .iter()
+            .map(|s| -> Result<RecordedShard> {
+                let q = s.as_arr().filter(|a| a.len() == 4).ok_or_else(|| {
+                    Error::Parse("plan shard must be [slot, units, fixed, predicted]".into())
+                })?;
+                let slot = q[0]
+                    .as_usize()
+                    .filter(|v| *v <= u16::MAX as usize)
+                    .ok_or_else(|| Error::Parse("bad shard slot".into()))?;
+                let units = q[1]
+                    .as_usize()
+                    .ok_or_else(|| Error::Parse("bad shard units".into()))?;
+                let fixed = q[2]
+                    .as_f64()
+                    .filter(|v| *v >= 0.0)
+                    .ok_or_else(|| Error::Parse("bad shard fixed".into()))?;
+                let pred = q[3]
+                    .as_f64()
+                    .filter(|v| *v >= 0.0)
+                    .ok_or_else(|| Error::Parse("bad shard predicted".into()))?;
+                Ok(RecordedShard {
+                    target: TargetId(slot as u16),
+                    units,
+                    fixed_ns: fixed as u64,
+                    predicted_ns: pred as u64,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        entry.plan = Some(RecordedPlan { units, items_per_unit, makespan_ns, shards });
+    }
+    Ok(entry)
+}
+
+/// One replayed call, for comparing the replayed decision sequence
+/// against the recorded one (see [`ReplayOutcome::divergence_report`]).
+#[derive(Debug, Clone, Copy)]
+pub struct ReplayedCall {
+    /// Index of the entry in the trace.
+    pub index: usize,
+    /// Where the recorded run executed the call.
+    pub recorded_on: TargetId,
+    /// How many shards the recorded call split into (1 = plain).
+    pub recorded_shards: usize,
+    /// Where the replayed decision sequence placed the call (the
+    /// primary shard's unit for a replayed fan-out).
+    pub replayed_on: TargetId,
+    /// Shards under the replayed placement (1 = plain).
+    pub replayed_shards: usize,
+    /// What replay charged for the call, ns.
+    pub charged_ns: u64,
+    /// Did the replayed placement match the recorded one?
+    pub matched: bool,
 }
 
 /// Result of replaying a trace under a policy.
@@ -251,106 +620,401 @@ impl Trace {
 pub struct ReplayOutcome {
     /// Name of the replayed policy.
     pub policy: String,
+    /// Total re-priced time of the run (execution + profiling), ns.
+    pub total_ns: u64,
     /// Total re-priced time of the run, ms.
     pub total_ms: f64,
     /// Calls the replayed decision sequence priced on the host.
     pub host_calls: usize,
-    /// Calls priced on any non-host unit.
+    /// Calls priced on any non-host unit (a replayed fan-out counts as
+    /// one call on its primary unit).
     pub remote_calls: usize,
     /// Offload decisions the replayed policy made.
     pub offloads: usize,
     /// Revert decisions the replayed policy made.
     pub reverts: usize,
+    /// Fan-out decisions the replayed policy made.
+    pub fanouts: usize,
+    /// Calls priced as coalesced batch followers (marginal transport
+    /// cost instead of a full setup).
+    pub batched_calls: usize,
+    /// True when the trace predates v3: candidates degraded to lone
+    /// prices, no batch machine, fan-out priced as a plain host call.
+    pub degraded_fidelity: bool,
+    /// Per-entry replayed-vs-recorded placements, in trace order.
+    pub calls: Vec<ReplayedCall>,
+}
+
+impl ReplayOutcome {
+    /// Entries whose replayed placement differs from the recorded one.
+    pub fn diverged(&self) -> usize {
+        self.calls.iter().filter(|c| !c.matched).count()
+    }
+
+    /// Human-readable comparison of the replayed decision sequence
+    /// against the recorded run.
+    pub fn divergence_report(&self) -> String {
+        fn place(t: TargetId, shards: usize) -> String {
+            if shards > 1 {
+                format!("fan-out x{shards} (primary slot {})", t.0)
+            } else if t.is_host() {
+                "host".into()
+            } else {
+                format!("slot {}", t.0)
+            }
+        }
+        let mut out = String::new();
+        let div: Vec<&ReplayedCall> = self.calls.iter().filter(|c| !c.matched).collect();
+        if div.is_empty() {
+            let _ = writeln!(
+                out,
+                "replay '{}': all {} calls match the recorded decision sequence \
+                 ({} batched, {} fan-out decisions, {:.1} ms)",
+                self.policy,
+                self.calls.len(),
+                self.batched_calls,
+                self.fanouts,
+                self.total_ms,
+            );
+            return out;
+        }
+        let _ = writeln!(
+            out,
+            "replay '{}': {}/{} calls diverge from the recorded run:",
+            self.policy,
+            div.len(),
+            self.calls.len(),
+        );
+        for c in div.iter().take(10) {
+            let _ = writeln!(
+                out,
+                "  call #{:<5} recorded {:<28} -> replayed {}",
+                c.index,
+                place(c.recorded_on, c.recorded_shards),
+                place(c.replayed_on, c.replayed_shards),
+            );
+        }
+        if div.len() > 10 {
+            let _ = writeln!(out, "  ... and {} more", div.len() - 10);
+        }
+        out
+    }
+}
+
+/// Where a function's dispatches go under the replayed decision
+/// sequence: the wrapper slot plus an optional fan-out width (live
+/// fan-out keeps the slot where it was).
+#[derive(Debug, Clone, Copy)]
+struct Placement {
+    slot: TargetId,
+    fanned: Option<usize>,
+}
+
+const HOST_PLACEMENT: Placement = Placement { slot: TargetId::HOST, fanned: None };
+
+/// Re-run [`super::shard::plan`] at `width` from a recorded
+/// counterfactual plan: reconstruct each participant's rate row from
+/// its shard size and predicted time, then plan for real.  Returns the
+/// makespan, the primary (widest) shard's unit, and the shard count —
+/// or `None` when the plan does not fan out (callers fall back to a
+/// plain dispatch, as the live coordinator does).
+fn replan(plan: &RecordedPlan, width: usize) -> Option<(u64, TargetId, usize)> {
+    if plan.units == 0 || plan.items_per_unit <= 0.0 || plan.shards.len() < 2 {
+        return None;
+    }
+    let rows: Vec<PlanTarget> = plan
+        .shards
+        .iter()
+        .map(|s| PlanTarget {
+            target: s.target,
+            rate_ns_per_item: (s.predicted_ns.saturating_sub(s.fixed_ns) as f64
+                / (s.units.max(1) as f64 * plan.items_per_unit))
+                .max(1e-9),
+            overhead_ns: s.fixed_ns,
+            backlog_ns: 0,
+        })
+        .collect();
+    let p = shard_plan::plan(plan.units, plan.items_per_unit, &rows, width.max(2));
+    if !p.is_fan_out() {
+        return None;
+    }
+    // Primary = widest shard, first strict maximum in assignment order
+    // (mirrors the live group accumulator).
+    let mut primary = (TargetId::HOST, 0usize);
+    for s in &p.shards {
+        let w = s.end - s.start;
+        if w > primary.1 {
+            primary = (s.target, w);
+        }
+    }
+    Some((p.makespan_ns.max(1), primary.0, p.shards.len()))
 }
 
 /// Re-price the recorded calls under `policy`'s decision sequence.
 ///
 /// The replay mirrors the live coordinator's loop: a per-function
-/// profile accumulates the *replayed* observations, a simple dominant-
-/// cycles hotspot rule nominates candidates, and each call executes on
-/// the target the dispatch slot currently points at.  The candidate
-/// slice spans every unit the entry recorded a price for — an N-target
-/// trace replays over the full platform, not a hard-wired pair.
+/// profile accumulates the *replayed* observations, the recorded
+/// hotspot thresholds nominate the hottest host-resident function, and
+/// each call executes under the placement its issue epoch saw (live
+/// actions fire at a retirement and only affect later submits).  The
+/// candidate slice is the recorded one — lone and batch-amortized
+/// prices exactly as the live policy ranked them.  Calls whose
+/// replayed placement matches the recorded one are charged the
+/// recorded execution time (which embodies their true batch position),
+/// so replaying the recording policy reproduces the recorded total
+/// exactly; counterfactual placements are priced from the recorded
+/// price table through a simulated per-target batch machine, and
+/// counterfactual fan-outs — including a narrower replayed width over
+/// a recorded fan-out — re-run the shard planner over the recorded
+/// plan rows.
 pub fn replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> ReplayOutcome {
+    let degraded = trace.degraded();
+    let cap = trace.meta.max_batch_width.max(1);
+    let setup_of: HashMap<TargetId, u64> = trace.meta.setups.iter().copied().collect();
+
     let mut module = IrModule::new("replay");
-    let mut targets: HashMap<u32, TargetId> = HashMap::new();
-    let mut profiles: HashMap<u32, FunctionProfile> = HashMap::new();
     let mut id_map: HashMap<u32, FunctionId> = HashMap::new();
-    // Pre-register every function seen in the trace.
     for e in &trace.entries {
         id_map.entry(e.function).or_insert_with(|| {
             module.add_function(IrFunction::user(&format!("f{}", e.function), Some(e.kind)))
         });
-        targets.entry(e.function).or_insert(TargetId::HOST);
     }
     module.finalize();
 
+    // Per-function placement history: (effective-from epoch, placement),
+    // ascending.  A dispatch executes under the last placement whose
+    // epoch is <= its issue epoch; the policy sees the latest one.
+    let mut history: BTreeMap<u32, Vec<(u64, Placement)>> = BTreeMap::new();
+    let mut profiles: BTreeMap<u32, FunctionProfile> = BTreeMap::new();
+    // Per-target open-batch machine: (issue epoch, members so far).
+    let mut batch: HashMap<TargetId, (u64, usize)> = HashMap::new();
+
     let mut outcome = ReplayOutcome {
         policy: policy.name().to_string(),
+        total_ns: 0,
         total_ms: 0.0,
         host_calls: 0,
         remote_calls: 0,
         offloads: 0,
         reverts: 0,
+        fanouts: 0,
+        batched_calls: 0,
+        degraded_fidelity: degraded,
+        calls: Vec::with_capacity(trace.entries.len()),
     };
-    let mut total_cycles: f64 = 0.0;
-    for e in &trace.entries {
+    let mut total_cycles: u64 = 0;
+
+    for (i, e) in trace.entries.iter().enumerate() {
         let fid = id_map[&e.function];
-        let target = targets[&e.function];
-        // Price on the slot's current target; a target the trace cannot
-        // price (possible only in hand-built traces) falls back to the
-        // recorded execution time.
-        let exec_ns = e.price_on(target).unwrap_or(e.exec_ns);
-        outcome.total_ms += exec_ns as f64 / 1e6;
-        if target.is_host() {
+        let (issued, current) = {
+            let h = history.get(&e.function);
+            let issued = h
+                .and_then(|h| h.iter().rev().find(|(ep, _)| *ep <= e.issue_epoch))
+                .map(|(_, p)| *p)
+                .unwrap_or(HOST_PLACEMENT);
+            let current = h
+                .and_then(|h| h.last())
+                .map(|(_, p)| *p)
+                .unwrap_or(HOST_PLACEMENT);
+            (issued, current)
+        };
+
+        // -- price the call under the replayed placement ------------------
+        let fan = match issued.fanned.filter(|_| !degraded) {
+            // The recorded call fanned out and the replayed width covers
+            // it (the live plan never uses more units than the policy's
+            // cap, so same-policy replay always lands here): charge what
+            // actually happened (noise, queue waits and all).  A wider
+            // replayed cap is charged the recorded makespan too — a
+            // documented approximation.
+            Some(w) if e.shards > 1 && w >= e.shards => {
+                Some((e.exec_ns, e.executed_on, e.shards, true))
+            }
+            // The live run was fanned too but fell back to a plain
+            // dispatch (the submit-time plan did not fan out): mirror
+            // the fallback through the plain path instead of
+            // re-pricing it from the retire-time counterfactual plan.
+            Some(_) if e.shards <= 1 && e.fanned => None,
+            // Counterfactual fan-out (or a genuinely narrower width):
+            // re-plan from the recorded rows and price the makespan.
+            Some(w) => e
+                .plan
+                .as_ref()
+                .and_then(|p| replan(p, w))
+                .map(|(makespan, primary, width)| (makespan, primary, width, false)),
+            None => None,
+        };
+        let (charged, on, rep_shards, matched) = if let Some(fanned) = fan {
+            fanned
+        } else {
+            // Plain dispatch on the slot the issue epoch saw (a fanned
+            // function whose plan does not fan out falls back to its
+            // slot, exactly like the live coordinator).
+            let t = issued.slot;
+            let placed = t == e.executed_on && e.shards <= 1;
+            let mut coalesced = false;
+            if !t.is_host() && !degraded {
+                let st = batch.entry(t).or_insert((u64::MAX, 0));
+                if placed {
+                    // Matched placement: the record knows this call's
+                    // true batch position — including members the
+                    // machine cannot see, like fan-out shards that
+                    // joined the same forming batch.  Trust it and sync
+                    // the machine so a later divergence is well-seeded.
+                    coalesced = e.coalesced;
+                    if e.coalesced && st.0 == e.issue_epoch {
+                        st.1 += 1;
+                    } else {
+                        *st = (e.issue_epoch, if e.coalesced { 2 } else { 1 });
+                    }
+                } else if st.0 == e.issue_epoch && st.1 < cap {
+                    coalesced = true;
+                    st.1 += 1;
+                } else {
+                    *st = (e.issue_epoch, 1);
+                }
+            }
+            let ns = if placed {
+                // The recorded time is exactly what this placement paid.
+                e.exec_ns
+            } else {
+                // Unpriceable targets (possible only in hand-built
+                // traces) fall back to the lone-dispatch *host* price:
+                // the recorded `exec_ns` of a batched live run embeds
+                // amortized setup, which would double-count the batch
+                // savings (and, last resort, the recorded time).
+                let lone = e.price_on(t).or_else(|| e.host_ns()).unwrap_or(e.exec_ns);
+                if coalesced {
+                    let setup = setup_of.get(&t).copied().unwrap_or(0);
+                    lone.saturating_sub(setup).max(1)
+                } else {
+                    lone
+                }
+            };
+            if coalesced {
+                outcome.batched_calls += 1;
+            }
+            (ns, t, 1, placed)
+        };
+
+        outcome.total_ns += charged + e.profiling_ns;
+        if on.is_host() {
             outcome.host_calls += 1;
         } else {
             outcome.remote_calls += 1;
         }
-        // Update the replayed profile.
-        let p = profiles.entry(e.function).or_default();
-        p.time_ns.push(exec_ns as f64);
-        p.ewma_ns.push(exec_ns as f64);
-        p.on_mut(target).push(exec_ns as f64);
-        p.total_cycles += exec_ns; // 1 cycle/ns at 1 GHz: rank-equivalent
-        p.calls += 1;
-        total_cycles += exec_ns as f64;
+        outcome.calls.push(ReplayedCall {
+            index: i,
+            recorded_on: e.executed_on,
+            recorded_shards: e.shards,
+            replayed_on: on,
+            replayed_shards: rep_shards,
+            charged_ns: charged,
+            matched,
+        });
 
-        let share = p.total_cycles as f64 / total_cycles.max(1.0);
-        let irf = module.function(fid).expect("registered");
-        // Every priced non-host unit is a candidate, best-first — the
-        // full slice the live coordinator would have ranked.
-        let mut candidates: Vec<Candidate> = e
-            .prices
-            .iter()
-            .filter(|(t, _)| !t.is_host())
-            .map(|(t, ns)| Candidate::uniform(*t, *ns))
-            .collect();
+        // -- update the replayed profile ----------------------------------
+        let p = profiles.entry(e.function).or_insert_with(FunctionProfile::new);
+        p.time_ns.push(charged as f64);
+        p.ewma_ns.push(charged as f64);
+        p.on_mut(on).push(charged as f64);
+        // v3 records the sampled cycle count the live detector ranked
+        // with — but it embodies the *recorded* target's clock, so only
+        // matched placements may use it; diverged counterfactuals fall
+        // back to 1 cycle/ns of the charged time (rank-equivalent, and
+        // all pre-v3 entries price this way).
+        let cyc = if matched && e.cycles > 0 { e.cycles } else { charged };
+        p.total_cycles += cyc;
+        p.calls += 1;
+        total_cycles += cyc;
+
+        // -- nominate the hotspot (the live detector's rule) --------------
+        let nomination = {
+            let total = total_cycles.max(1) as f64;
+            let mut best: Option<Hotspot> = None;
+            for (fun, prof) in &profiles {
+                let pl = history
+                    .get(fun)
+                    .and_then(|h| h.last())
+                    .map(|(_, p)| *p)
+                    .unwrap_or(HOST_PLACEMENT);
+                if pl.fanned.is_some()
+                    || !pl.slot.is_host()
+                    || prof.calls < trace.meta.min_samples
+                {
+                    continue;
+                }
+                let share = prof.total_cycles as f64 / total;
+                if share < trace.meta.share_threshold {
+                    continue;
+                }
+                if best.as_ref().map_or(true, |b| share >= b.cycle_share) {
+                    best = Some(Hotspot { function: id_map[fun], cycle_share: share });
+                }
+            }
+            best
+        };
+        let is_hotspot = nomination.filter(|h| h.function == fid);
+
+        // -- the candidate slice the policy ranks -------------------------
+        let mut candidates: Vec<Candidate> = if !degraded {
+            e.candidates
+                .iter()
+                .map(|c| Candidate {
+                    target: c.target,
+                    predicted_ns: c.predicted_ns,
+                    amortized_ns: c.amortized_ns,
+                })
+                .collect()
+        } else {
+            e.prices
+                .iter()
+                .filter(|(t, _)| !t.is_host())
+                .map(|(t, ns)| Candidate::uniform(*t, *ns))
+                .collect()
+        };
         candidates.sort_by_key(|c| (c.predicted_ns, c.target));
+
+        let irf = module.function(fid).expect("registered");
+        let profile = profiles.get(&e.function).expect("just updated");
         let ctx = PolicyCtx {
             function: fid,
-            profile: p,
-            current: target,
-            is_hotspot: (p.calls >= 5 && share >= 0.10)
-                .then_some(Hotspot { function: fid, cycle_share: share }),
+            profile,
+            current: current.slot,
+            is_hotspot,
             candidates: &candidates,
             op_mix: irf.op_mix,
             loop_depth: irf.loop_depth,
         };
+        // Actions take effect from this entry's retire epoch: live
+        // decisions move the wrapper slot, which only dispatches issued
+        // afterwards read.
         match policy.decide(&ctx) {
             Some(PolicyAction::Offload { to }) => {
-                targets.insert(e.function, to);
+                history
+                    .entry(e.function)
+                    .or_default()
+                    .push((e.retire_epoch, Placement { slot: to, fanned: None }));
                 outcome.offloads += 1;
             }
             Some(PolicyAction::Revert { .. }) => {
-                targets.insert(e.function, TargetId::HOST);
+                history
+                    .entry(e.function)
+                    .or_default()
+                    .push((e.retire_epoch, Placement { slot: TargetId::HOST, fanned: None }));
                 outcome.reverts += 1;
             }
-            // The replay engine prices one call on one target; fan-out
-            // re-pricing would need per-shard counterfactuals.
-            Some(PolicyAction::FanOut { .. }) | None => {}
+            Some(PolicyAction::FanOut { width }) => {
+                history.entry(e.function).or_default().push((
+                    e.retire_epoch,
+                    Placement { slot: current.slot, fanned: Some(width.max(2)) },
+                ));
+                outcome.fanouts += 1;
+            }
+            None => {}
         }
     }
+    outcome.total_ms = outcome.total_ns as f64 / 1e6;
     outcome
 }
 
@@ -365,21 +1029,60 @@ mod tests {
     use crate::coordinator::policy::{
         AlwaysOffloadPolicy, BlindOffloadPolicy, NeverOffloadPolicy,
     };
+    use crate::coordinator::{Vpe, VpeConfig};
+
+    /// A v3 entry with uniform candidates derived from its prices.
+    fn entry(
+        function: u32,
+        kind: WorkloadKind,
+        on: TargetId,
+        exec_ns: u64,
+        profiling_ns: u64,
+        prices: Vec<(TargetId, u64)>,
+        index: usize,
+    ) -> TraceEntry {
+        let candidates = prices
+            .iter()
+            .filter(|(t, _)| !t.is_host())
+            .map(|(t, ns)| RecordedCandidate {
+                target: *t,
+                predicted_ns: *ns,
+                amortized_ns: *ns,
+            })
+            .collect();
+        TraceEntry {
+            function,
+            kind,
+            executed_on: on,
+            exec_ns,
+            profiling_ns,
+            cycles: 0,
+            issue_epoch: index as u64,
+            retire_epoch: index as u64 + 1,
+            coalesced: false,
+            fanned: false,
+            shards: 1,
+            prices,
+            candidates,
+            plan: None,
+        }
+    }
 
     fn synthetic_trace(kind: WorkloadKind, arm_ms: u64, dsp_ms: u64, n: usize) -> Trace {
         let mut t = Trace::default();
-        for _ in 0..n {
-            t.entries.push(TraceEntry {
-                function: 0,
+        for i in 0..n {
+            t.entries.push(entry(
+                0,
                 kind,
-                executed_on: dm3730::ARM,
-                exec_ns: arm_ms * 1_000_000,
-                profiling_ns: 0,
-                prices: vec![
+                dm3730::ARM,
+                arm_ms * 1_000_000,
+                0,
+                vec![
                     (dm3730::ARM, arm_ms * 1_000_000),
                     (dm3730::DSP, dsp_ms * 1_000_000),
                 ],
-            });
+                i,
+            ));
         }
         t
     }
@@ -389,26 +1092,81 @@ mod tests {
         let t = synthetic_trace(WorkloadKind::Matmul, 16482, 516, 7);
         let back = Trace::from_json(&t.to_json()).unwrap();
         assert_eq!(t, back);
+        assert!(!back.degraded());
+    }
+
+    #[test]
+    fn v3_roundtrip_preserves_meta_candidates_and_plan() {
+        let mut t = Trace::default();
+        t.meta.max_batch_width = 6;
+        t.meta.min_samples = 7;
+        t.meta.share_threshold = 0.25;
+        t.meta.setups = vec![(TargetId(0), 0), (TargetId(1), 100_000_000)];
+        let mut e = entry(
+            3,
+            WorkloadKind::Matmul,
+            TargetId(1),
+            40_000_000,
+            1_000_000,
+            vec![(TargetId(0), 400_000_000), (TargetId(1), 41_000_000)],
+            0,
+        );
+        e.cycles = 123_456;
+        e.issue_epoch = 9;
+        e.retire_epoch = 12;
+        e.coalesced = true;
+        e.fanned = true;
+        e.shards = 3;
+        e.candidates = vec![RecordedCandidate {
+            target: TargetId(1),
+            predicted_ns: 41_000_000,
+            amortized_ns: 29_500_000,
+        }];
+        e.plan = Some(RecordedPlan {
+            units: 500,
+            items_per_unit: 250_000.0,
+            makespan_ns: 33_000_000,
+            shards: vec![
+                RecordedShard {
+                    target: TargetId(1),
+                    units: 400,
+                    fixed_ns: 5_000_000,
+                    predicted_ns: 33_000_000,
+                },
+                RecordedShard {
+                    target: TargetId(0),
+                    units: 100,
+                    fixed_ns: 0,
+                    predicted_ns: 32_900_000,
+                },
+            ],
+        });
+        t.entries.push(e);
+        let back = Trace::from_json(&t.to_json()).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(back.entries[0].plan.as_ref().unwrap().shards.len(), 2);
+        assert!(back.entries[0].coalesced);
     }
 
     #[test]
     fn n_target_roundtrip_preserves_every_unit() {
         // The v1 bug: any non-host unit serialized as "dsp" and loaded
-        // back as slot 1.  v2 must keep slot 3's identity and price.
+        // back as slot 1.  v2+ must keep slot 3's identity and price.
         let mut t = Trace::default();
-        t.entries.push(TraceEntry {
-            function: 2,
-            kind: WorkloadKind::Conv2d,
-            executed_on: TargetId(3),
-            exec_ns: 42_000_000,
-            profiling_ns: 1_000_000,
-            prices: vec![
+        t.entries.push(entry(
+            2,
+            WorkloadKind::Conv2d,
+            TargetId(3),
+            42_000_000,
+            1_000_000,
+            vec![
                 (TargetId(0), 400_000_000),
                 (TargetId(1), 120_000_000),
                 (TargetId(2), 90_000_000),
                 (TargetId(3), 41_500_000),
             ],
-        });
+            0,
+        ));
         let back = Trace::from_json(&t.to_json()).unwrap();
         assert_eq!(t, back);
         assert_eq!(back.entries[0].executed_on, TargetId(3));
@@ -423,10 +1181,26 @@ mod tests {
 {"f":0,"kind":"matmul","on":"dsp","exec_ns":48,"prof_ns":5,"arm_ns":100,"dsp_ns":50}]}"#;
         let t = Trace::from_json(doc).unwrap();
         assert_eq!(t.entries.len(), 2);
+        assert!(t.degraded(), "v1 loads with degraded fidelity");
         assert_eq!(t.entries[0].executed_on, dm3730::ARM);
         assert_eq!(t.entries[1].executed_on, dm3730::DSP);
         assert_eq!(t.entries[0].price_on(dm3730::DSP), Some(50));
         assert_eq!(t.entries[0].host_ns(), Some(100));
+        // Pre-v3 epochs are the entry index: actions apply immediately.
+        assert_eq!(t.entries[1].issue_epoch, 1);
+        assert_eq!(t.entries[1].retire_epoch, 2);
+    }
+
+    #[test]
+    fn v2_documents_load_degraded_not_as_errors() {
+        let doc = r#"{"format":"vpe-trace-v2","entries":[
+{"f":0,"kind":"matmul","on":1,"exec_ns":100,"prof_ns":5,"prices":[[0,100],[1,50]]}]}"#;
+        let t = Trace::from_json(doc).unwrap();
+        assert!(t.degraded());
+        assert!(t.entries[0].candidates.is_empty());
+        assert!(t.entries[0].plan.is_none());
+        let out = replay(&t, &mut NeverOffloadPolicy);
+        assert!(out.degraded_fidelity, "replay must surface the fidelity loss");
     }
 
     #[test]
@@ -448,6 +1222,8 @@ mod tests {
         assert_eq!(out.host_calls, 20);
         assert_eq!(out.remote_calls, 0);
         assert!((out.total_ms - 2000.0).abs() < 1e-9);
+        assert_eq!(out.diverged(), 0, "never-offload matches an all-host trace");
+        assert_eq!(out.total_ns, t.total_ns());
     }
 
     #[test]
@@ -458,6 +1234,7 @@ mod tests {
         assert!(blind.total_ms < never.total_ms / 5.0, "{} vs {}", blind.total_ms, never.total_ms);
         assert_eq!(blind.offloads, 1);
         assert_eq!(blind.reverts, 0);
+        assert!(blind.diverged() > 0, "the what-if moved calls off the recorded unit");
     }
 
     #[test]
@@ -474,20 +1251,21 @@ mod tests {
         // Three remote units; the second-best is the only one that beats
         // the host, so blind offload must reach it through the ranking.
         let mut t = Trace::default();
-        for _ in 0..30 {
-            t.entries.push(TraceEntry {
-                function: 0,
-                kind: WorkloadKind::Matmul,
-                executed_on: TargetId(0),
-                exec_ns: 100_000_000,
-                prices: vec![
+        for i in 0..30 {
+            t.entries.push(entry(
+                0,
+                WorkloadKind::Matmul,
+                TargetId(0),
+                100_000_000,
+                0,
+                vec![
                     (TargetId(0), 100_000_000),
                     (TargetId(1), 200_000_000), // slower than the host
                     (TargetId(2), 10_000_000),  // the winner
                     (TargetId(3), 300_000_000),
                 ],
-                profiling_ns: 0,
-            });
+                i,
+            ));
         }
         let blind = replay(&t, &mut BlindOffloadPolicy::default());
         // Ranked best-first, slot 2 is trialed first and wins outright.
@@ -518,6 +1296,14 @@ mod tests {
 {"f":0,"kind":"matmul","on":1,"exec_ns":1,"prof_ns":0,"prices":[[1]]}]}"#
         )
         .is_err());
+        // v3 requires its header and per-entry fidelity fields.
+        assert!(Trace::from_json(r#"{"format":"vpe-trace-v3","entries":[]}"#).is_err());
+        assert!(Trace::from_json(
+            r#"{"format":"vpe-trace-v3","max_batch_width":2,"min_samples":5,
+"share_threshold":0.1,"setups":[],"entries":[
+{"f":0,"kind":"matmul","on":1,"exec_ns":1,"prof_ns":0,"prices":[[1,1]]}]}"#
+        )
+        .is_err());
     }
 
     #[test]
@@ -532,5 +1318,366 @@ mod tests {
         let out = replay(&t, &mut BlindOffloadPolicy::default());
         assert_eq!(out.host_calls, 1);
         assert!((out.total_ms - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unpriceable_targets_fall_back_to_the_host_price_not_exec_ns() {
+        // Satellite regression: a hand-built trace pins the function to
+        // slot 9 (never priced).  The old fallback charged `exec_ns`,
+        // which for a batched live run embeds amortized setup — replay
+        // must fall back to the lone-dispatch *host* price instead.
+        let mut t = Trace::default();
+        for i in 0..8 {
+            let mut e = entry(
+                0,
+                WorkloadKind::Matmul,
+                TargetId(1),
+                40_000_000, // amortized actual time, cheaper than any lone price
+                0,
+                vec![(TargetId(0), 300_000_000), (TargetId(1), 90_000_000)],
+                i,
+            );
+            // Pretend slot 9 is rankable so a policy can move there.
+            e.candidates = vec![RecordedCandidate {
+                target: TargetId(9),
+                predicted_ns: 1,
+                amortized_ns: 1,
+            }];
+            t.entries.push(e);
+        }
+        let out = replay(&t, &mut AlwaysOffloadPolicy);
+        // Entry 0 issues before the offload applies; entries 1.. run on
+        // slot 9, priced at the host's 300 ms lone price (not 40 ms).
+        let diverged: Vec<_> = out.calls.iter().filter(|c| !c.matched).collect();
+        assert!(!diverged.is_empty());
+        for c in &diverged {
+            assert_eq!(c.charged_ns, 300_000_000, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn replay_profiling_costs_are_charged_like_the_recording() {
+        // Satellite regression: ReplayOutcome totals include
+        // profiling_ns, so recorded and replayed totals are
+        // apples-to-apples even for width-1 traces.
+        let mut t = synthetic_trace(WorkloadKind::Matmul, 100, 10, 10);
+        for e in &mut t.entries {
+            e.profiling_ns = 2_000_000;
+        }
+        let out = replay(&t, &mut NeverOffloadPolicy);
+        assert_eq!(out.total_ns, t.total_ns());
+        assert!((out.total_ms - t.total_ms()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replaying_the_recording_policy_reproduces_a_live_run_exactly() {
+        // Satellite regression (width-1 sync run): record a live run
+        // under blind offload, replay the same policy, and require the
+        // identical decision sequence and total — noise included.
+        let mut vpe = Vpe::new(VpeConfig::sim_only()).unwrap();
+        vpe.enable_tracing();
+        let f = vpe.register_workload(WorkloadKind::Matmul).unwrap();
+        vpe.run(f, 20).unwrap();
+        let trace = vpe.trace().unwrap().clone();
+        assert!(!trace.degraded());
+        let out = replay(&trace, &mut BlindOffloadPolicy::default());
+        assert_eq!(out.diverged(), 0, "{}", out.divergence_report());
+        assert_eq!(out.total_ns, trace.total_ns());
+        assert_eq!(out.total_ms, trace.total_ms());
+        assert_eq!(out.offloads, vpe.events().offloads().len());
+        assert_eq!(out.reverts, vpe.events().reverts().len());
+    }
+
+    #[test]
+    fn replay_thresholds_follow_the_recorded_detector() {
+        // Satellite regression: a recording made with a stricter
+        // detector must replay under the *recorded* thresholds, not the
+        // defaults — otherwise live and replayed nomination drift.
+        let mut t = synthetic_trace(WorkloadKind::Matmul, 100, 10, 12);
+        t.meta.min_samples = 9; // default is 5
+        let strict = replay(&t, &mut BlindOffloadPolicy::default());
+        let mut t2 = synthetic_trace(WorkloadKind::Matmul, 100, 10, 12);
+        t2.meta.min_samples = 5;
+        let default = replay(&t2, &mut BlindOffloadPolicy::default());
+        // Stricter warm-up = more host calls before the offload.
+        assert!(strict.total_ms > default.total_ms, "{} vs {}", strict.total_ms, default.total_ms);
+        assert_eq!(strict.offloads, 1);
+    }
+
+    #[test]
+    fn counterfactual_batching_prices_followers_at_the_marginal_cost() {
+        // Four same-epoch calls recorded on the host; a policy that
+        // moves them to slot 1 must see one full setup + three marginal
+        // prices, mirroring the live formation rules.
+        let mut t = Trace::default();
+        t.meta.max_batch_width = 8;
+        t.meta.setups = vec![(TargetId(0), 0), (TargetId(1), 100)];
+        for i in 0..6 {
+            let mut e = entry(
+                0,
+                WorkloadKind::Matmul,
+                TargetId(0),
+                1_000,
+                0,
+                vec![(TargetId(0), 1_000), (TargetId(1), 400)],
+                i,
+            );
+            // Two warm-up epochs, then one shared wave epoch.
+            e.issue_epoch = if i < 2 { i as u64 } else { 2 };
+            e.retire_epoch = i as u64 + 1;
+            t.entries.push(e);
+        }
+        let out = replay(&t, &mut AlwaysOffloadPolicy);
+        // Entry 0 fires the offload (applies from epoch 1): entry 1 is a
+        // lone leader (epoch 1), entries 2-5 share epoch 2: one leader +
+        // three coalesced followers at 400 - 100 = 300 ns.
+        assert_eq!(out.batched_calls, 3, "{:?}", out.calls);
+        let charged: Vec<u64> = out.calls.iter().map(|c| c.charged_ns).collect();
+        assert_eq!(charged, vec![1_000, 400, 400, 300, 300, 300]);
+    }
+
+    #[test]
+    fn replayed_fanout_is_priced_as_a_makespan_not_a_noop() {
+        // The headline bug: a replayed FanOut used to be a no-op.  Give
+        // every entry a two-unit counterfactual plan and replay under a
+        // policy that fans out — the fanned calls must be priced at the
+        // re-planned makespan, far below the lone price.
+        use crate::coordinator::policies_ext::FanOutPolicy;
+        let mut t = Trace::default();
+        for i in 0..12 {
+            let mut e = entry(
+                0,
+                WorkloadKind::Matmul,
+                TargetId(0),
+                100_000_000,
+                0,
+                vec![
+                    (TargetId(0), 100_000_000),
+                    (TargetId(1), 20_000_000),
+                    (TargetId(2), 22_000_000),
+                ],
+                i,
+            );
+            e.plan = Some(RecordedPlan {
+                units: 100,
+                items_per_unit: 1_000.0,
+                makespan_ns: 11_000_000,
+                shards: vec![
+                    RecordedShard {
+                        target: TargetId(1),
+                        units: 52,
+                        fixed_ns: 500_000,
+                        predicted_ns: 11_000_000,
+                    },
+                    RecordedShard {
+                        target: TargetId(2),
+                        units: 48,
+                        fixed_ns: 500_000,
+                        predicted_ns: 11_000_000,
+                    },
+                ],
+            });
+            t.entries.push(e);
+        }
+        let out = replay(&t, &mut FanOutPolicy::default());
+        assert_eq!(out.fanouts, 1, "the policy must choose fan-out once");
+        let fanned: Vec<_> = out.calls.iter().filter(|c| c.replayed_shards > 1).collect();
+        assert!(!fanned.is_empty(), "post-decision calls must replay as fan-outs");
+        for c in &fanned {
+            assert!(
+                c.charged_ns < 20_000_000,
+                "fan-out must be priced as a makespan below the best lone price: {c:?}"
+            );
+            assert!(c.charged_ns >= 1);
+        }
+        // The no-op behavior would have priced them at the host's 100 ms.
+        assert!(out.total_ms < 12.0 * 100.0 * 0.5, "{}", out.total_ms);
+    }
+
+    #[test]
+    fn matched_entries_trust_the_recorded_batch_position() {
+        // A fan-out shard led the live batch, so every *plain* entry on
+        // the unit is a coalesced follower with no leader visible in
+        // the trace.  The replay machine cannot see the shard; a
+        // matched placement must still charge the recorded (amortized)
+        // time — exactness cannot depend on the wave's submit order.
+        let mut t = Trace::default();
+        t.meta.max_batch_width = 8;
+        t.meta.setups = vec![(TargetId(0), 0), (TargetId(1), 100)];
+        let mut e0 = entry(
+            0,
+            WorkloadKind::Matmul,
+            TargetId(0),
+            1_000,
+            0,
+            vec![(TargetId(0), 1_000), (TargetId(1), 550)],
+            0,
+        );
+        e0.issue_epoch = 0;
+        e0.retire_epoch = 1;
+        t.entries.push(e0);
+        for i in 1..4 {
+            let mut e = entry(
+                0,
+                WorkloadKind::Matmul,
+                TargetId(1),
+                450, // marginal (amortized) actual time
+                0,
+                vec![(TargetId(0), 1_000), (TargetId(1), 550)],
+                i,
+            );
+            e.issue_epoch = 1; // one wave, led by an invisible shard
+            e.retire_epoch = i as u64 + 1;
+            e.coalesced = true;
+            t.entries.push(e);
+        }
+        let out = replay(&t, &mut AlwaysOffloadPolicy);
+        assert_eq!(out.diverged(), 0, "{}", out.divergence_report());
+        assert_eq!(out.total_ns, t.total_ns(), "matched entries must charge recorded time");
+        assert_eq!(out.batched_calls, 3, "recorded followers count as batched");
+    }
+
+    #[test]
+    fn live_fanout_fallback_replays_as_a_matched_plain_dispatch() {
+        // A fanned function's submit-time plan can decline to fan out
+        // (e.g. the remote units sat the call out), falling back to a
+        // plain dispatch on the slot.  The entry records fanned=true,
+        // shards=1 — replay must mirror the fallback instead of
+        // re-pricing the retire-time counterfactual plan, or the
+        // same-policy guarantee breaks.
+        use crate::coordinator::policies_ext::FanOutPolicy;
+        let mut t = Trace::default();
+        for i in 0..8 {
+            let mut e = entry(
+                0,
+                WorkloadKind::Matmul,
+                TargetId(0), // every call ran on the host slot
+                100_000_000,
+                0,
+                vec![
+                    (TargetId(0), 100_000_000),
+                    (TargetId(1), 20_000_000),
+                    (TargetId(2), 21_000_000),
+                ],
+                i,
+            );
+            if i >= 5 {
+                e.fanned = true; // fan-out chosen, but every plan fell back
+            }
+            e.plan = Some(RecordedPlan {
+                units: 100,
+                items_per_unit: 1_000.0,
+                makespan_ns: 11_000_000,
+                shards: vec![
+                    RecordedShard {
+                        target: TargetId(1),
+                        units: 52,
+                        fixed_ns: 500_000,
+                        predicted_ns: 11_000_000,
+                    },
+                    RecordedShard {
+                        target: TargetId(2),
+                        units: 48,
+                        fixed_ns: 500_000,
+                        predicted_ns: 11_000_000,
+                    },
+                ],
+            });
+            t.entries.push(e);
+        }
+        let out = replay(&t, &mut FanOutPolicy::default());
+        assert_eq!(out.fanouts, 1);
+        assert_eq!(out.diverged(), 0, "{}", out.divergence_report());
+        assert_eq!(out.total_ns, t.total_ns(), "fallback calls must charge recorded time");
+    }
+
+    #[test]
+    fn narrower_replayed_fanout_width_is_replanned_not_copied() {
+        // The recorded run fanned out 3-wide; a what-if policy capped at
+        // width 2 must be priced by re-planning the recorded rows, not
+        // by silently copying the 3-wide makespan.
+        use crate::coordinator::policies_ext::{FanOutConfig, FanOutPolicy};
+        let mut t = Trace::default();
+        for i in 0..10 {
+            let mut e = entry(
+                0,
+                WorkloadKind::Matmul,
+                if i < 5 { TargetId(0) } else { TargetId(1) },
+                if i < 5 { 100_000_000 } else { 10_500_000 }, // 3-wide makespan
+                0,
+                vec![
+                    (TargetId(0), 100_000_000),
+                    (TargetId(1), 20_000_000),
+                    (TargetId(2), 21_000_000),
+                    (TargetId(3), 22_000_000),
+                ],
+                i,
+            );
+            if i >= 5 {
+                e.shards = 3;
+            }
+            e.plan = Some(RecordedPlan {
+                units: 90,
+                items_per_unit: 1_000.0,
+                makespan_ns: 10_000_000,
+                shards: (1..=3)
+                    .map(|s| RecordedShard {
+                        target: TargetId(s),
+                        units: 30,
+                        fixed_ns: 0,
+                        predicted_ns: 10_000_000,
+                    })
+                    .collect(),
+            });
+            t.entries.push(e);
+        }
+        let cfg = FanOutConfig { max_width: 2, ..Default::default() };
+        let out = replay(&t, &mut FanOutPolicy::new(cfg));
+        assert_eq!(out.fanouts, 1);
+        let narrowed: Vec<_> = out.calls.iter().filter(|c| c.replayed_shards == 2).collect();
+        assert!(!narrowed.is_empty(), "width-2 replay must re-plan: {:?}", out.calls);
+        for c in &narrowed {
+            assert!(!c.matched, "a narrower fan-out is a divergence: {c:?}");
+            // Two equal units over 90 units x 1000 items at ~333 ns/item
+            // equalize at ~15 ms — NOT the recorded 3-wide 10.5 ms.
+            assert!(
+                (14_900_000..=15_100_000).contains(&c.charged_ns),
+                "must price the re-planned 2-wide makespan: {c:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn queued_wave_actions_do_not_apply_retroactively() {
+        // Live: an offload fired while a wave is in flight cannot move
+        // the wave's already-issued calls.  Replay must honor the
+        // recorded issue/retire epochs the same way.
+        let mut t = Trace::default();
+        // One shared issue epoch for a 4-call wave; the hotspot fires
+        // during the wave's retirements.
+        t.meta.min_samples = 1;
+        for i in 0..8 {
+            let mut e = entry(
+                0,
+                WorkloadKind::Matmul,
+                TargetId(0),
+                1_000,
+                0,
+                vec![(TargetId(0), 1_000), (TargetId(1), 10)],
+                i,
+            );
+            e.issue_epoch = if i < 4 { 0 } else { 5 };
+            e.retire_epoch = i as u64 + 1;
+            t.entries.push(e);
+        }
+        let out = replay(&t, &mut AlwaysOffloadPolicy);
+        // The offload fires at entry 0 (retire epoch 1), but the whole
+        // first wave was issued in epoch 0: all 4 stay on the host.
+        for c in &out.calls[..4] {
+            assert!(c.replayed_on.is_host(), "{c:?}");
+        }
+        for c in &out.calls[4..] {
+            assert_eq!(c.replayed_on, TargetId(1), "{c:?}");
+        }
     }
 }

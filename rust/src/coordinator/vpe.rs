@@ -219,6 +219,8 @@ struct ShardGroup {
     /// aggregate record retires under it.
     first_ticket: TicketId,
     issue_ns: u64,
+    /// The queue's flush epoch at submission (trace v3 records it).
+    issue_epoch: u64,
     of: usize,
     done: usize,
     min_start_ns: u64,
@@ -359,9 +361,17 @@ impl Vpe {
         })
     }
 
-    /// Start recording an execution trace (see [`super::trace`]).
+    /// Start recording an execution trace (see [`super::trace`]).  The
+    /// trace header snapshots the knobs replay must share with this
+    /// coordinator — the achievable batch width and the hotspot
+    /// detector's thresholds — so live and replayed decisions cannot
+    /// drift.
     pub fn enable_tracing(&mut self) {
-        self.trace = Some(super::trace::Trace::default());
+        let mut trace = super::trace::Trace::default();
+        trace.meta.max_batch_width = self.steady_batch_width();
+        trace.meta.min_samples = self.cfg.detector.min_samples;
+        trace.meta.share_threshold = self.cfg.detector.share_threshold;
+        self.trace = Some(trace);
     }
 
     /// The trace recorded so far, if tracing is enabled.
@@ -772,6 +782,7 @@ impl Vpe {
             iteration,
             first_ticket: tickets[0],
             issue_ns,
+            issue_epoch: self.queue.current_epoch(),
             of,
             done: 0,
             min_start_ns: u64::MAX,
@@ -1045,6 +1056,7 @@ impl Vpe {
         let core_base = base_ns.saturating_sub(setup_ns);
         let core_exec_ns = ((core_base as f64 * noise.max(0.1)) as u64).max(1);
         let ticket = self.queue.next_ticket();
+        let epoch = self.queue.current_epoch();
         let width = self.queue.stage(PendingDispatch {
             ticket,
             function: f,
@@ -1054,6 +1066,7 @@ impl Vpe {
             core_exec_ns,
             variable_ns,
             setup_ns,
+            epoch,
             staged,
             shard,
         });
@@ -1106,6 +1119,8 @@ impl Vpe {
                 complete_ns: start_ns + exec_ns,
                 exec_ns,
                 overhead_ns,
+                epoch: p.epoch,
+                coalesced: i > 0,
                 staged: p.staged,
                 shard: p.shard,
             });
@@ -1115,7 +1130,13 @@ impl Vpe {
     /// Flush every forming batch (ascending by target slot — flush
     /// order across targets does not affect any single target's
     /// timeline, but a fixed order keeps runs reproducible).
+    ///
+    /// Every retirement attempt lands here, so this is also where the
+    /// queue's flush epoch advances: dispatches issued after this point
+    /// can no longer coalesce with anything staged before it (trace v3
+    /// records the epochs so replay can mirror batch formation).
     fn flush_all(&mut self) {
+        self.queue.advance_epoch();
         for target in self.queue.forming_targets() {
             self.flush_target(target);
         }
@@ -1152,6 +1173,7 @@ impl Vpe {
         self.scheduler.occupy(target, start_ns, exec_ns);
 
         let ticket = self.queue.next_ticket();
+        let epoch = self.queue.current_epoch();
         self.queue.push(InFlight {
             ticket,
             function: f,
@@ -1162,6 +1184,8 @@ impl Vpe {
             complete_ns: start_ns + exec_ns,
             exec_ns,
             overhead_ns: 0,
+            epoch,
+            coalesced: false,
             staged,
             shard,
         });
@@ -1231,6 +1255,7 @@ impl Vpe {
         let freq = self.soc.target(target)?.freq_hz;
         let sample =
             CounterSample::synthesize(kind, scale.items, call.exec_ns as f64, target, freq);
+        let cycles = sample.cycles;
         let cost = self.sampler.record(f, target, sample, call.exec_ns, &mut self.rng);
         if cost.burst_ns > 0 {
             self.events
@@ -1281,8 +1306,11 @@ impl Vpe {
             }
         }
 
-        // Policy tick.
-        let action = self.policy_tick(f, target)?;
+        // Policy tick.  The fan-out state *before* the tick is what the
+        // retiring call was issued under (the trace records it so
+        // replay can tell a fan-out fallback from a plain placement).
+        let was_fanned = self.fanout.contains_key(&f);
+        let (action, ranked) = self.policy_tick(f, target)?;
 
         let wrapper_ns = self.table()?.wrapper_overhead_ns;
         let record = CallRecord {
@@ -1301,7 +1329,16 @@ impl Vpe {
             shards: 1,
         };
 
-        self.record_trace(&record, kind, &scale);
+        self.record_trace(
+            &record,
+            kind,
+            &scale,
+            &ranked,
+            call.epoch,
+            call.coalesced,
+            was_fanned,
+            cycles,
+        );
 
         Ok(Retired { ticket: call.ticket, record, output })
     }
@@ -1443,6 +1480,7 @@ impl Vpe {
         let freq = self.soc.target(g.primary.0)?.freq_hz;
         let sample =
             CounterSample::synthesize(kind, scale.items, makespan_ns as f64, g.primary.0, freq);
+        let cycles = sample.cycles;
         let cost = self.sampler.record(f, g.primary.0, sample, makespan_ns, &mut self.rng);
         if cost.burst_ns > 0 {
             self.events
@@ -1450,7 +1488,8 @@ impl Vpe {
         }
         self.clock.advance(cost.total_ns());
 
-        let action = self.policy_tick(f, g.primary.0)?;
+        let was_fanned = self.fanout.contains_key(&f);
+        let (action, ranked) = self.policy_tick(f, g.primary.0)?;
         let wrapper_ns = self.table()?.wrapper_overhead_ns;
         let record = CallRecord {
             function: f,
@@ -1467,14 +1506,40 @@ impl Vpe {
             action,
             shards: g.of,
         };
-        self.record_trace(&record, kind, &scale);
+        self.record_trace(
+            &record,
+            kind,
+            &scale,
+            &ranked,
+            g.issue_epoch,
+            false,
+            was_fanned,
+            cycles,
+        );
         Ok(Retired { ticket: g.first_ticket, record, output })
     }
 
-    /// Record every registered unit's noise-free price for this call
-    /// (trace v2: the whole platform, not a hard-wired pair; units the
-    /// cost model cannot price are simply absent).
-    fn record_trace(&mut self, record: &CallRecord, kind: WorkloadKind, scale: &PaperScale) {
+    /// Record one retired call into the trace (v3): every registered
+    /// unit's noise-free lone price, the exact candidate slice the
+    /// policy just ranked (`ranked`, lone + batch-amortized — handed
+    /// through from the tick so the recorded slice cannot drift from
+    /// the one the policy saw), the issue/retire queue epochs, the
+    /// coalesced and fanned flags, the sampled cycles, and — for
+    /// shardable workloads — the fan-out planner's counterfactual
+    /// full-width plan, so replay can re-price `FanOut` decisions as
+    /// real makespans.
+    #[allow(clippy::too_many_arguments)]
+    fn record_trace(
+        &mut self,
+        record: &CallRecord,
+        kind: WorkloadKind,
+        scale: &PaperScale,
+        ranked: &[Candidate],
+        issue_epoch: u64,
+        coalesced: bool,
+        fanned: bool,
+        cycles: u64,
+    ) {
         if self.trace.is_none() {
             return;
         }
@@ -1484,7 +1549,77 @@ impl Vpe {
                 prices.push((id, ns));
             }
         }
-        self.trace.as_mut().expect("checked").push(record, kind, prices);
+        let candidates = ranked
+            .iter()
+            .map(|c| super::trace::RecordedCandidate {
+                target: c.target,
+                predicted_ns: c.predicted_ns,
+                amortized_ns: c.amortized_ns,
+            })
+            .collect();
+        // The counterfactual fan-out plan for this exact call: full
+        // width, priced from the queue state at this retirement (a
+        // replayed FanOut { width } re-plans from these rows).
+        let plan = if workloads::shard::shardable(kind) {
+            self.plan_fanout(record.function, usize::MAX, None)
+                .ok()
+                .filter(|p| p.is_fan_out() && p.units > 0)
+                .map(|p| super::trace::RecordedPlan {
+                    units: p.units,
+                    items_per_unit: scale.items / p.units as f64,
+                    makespan_ns: p.makespan_ns,
+                    shards: p
+                        .shards
+                        .iter()
+                        .map(|s| super::trace::RecordedShard {
+                            target: s.target,
+                            units: s.end - s.start,
+                            fixed_ns: s.fixed_ns,
+                            predicted_ns: s.predicted_ns,
+                        })
+                        .collect(),
+                })
+        } else {
+            None
+        };
+        // Units can register mid-run: refresh the per-unit transport
+        // setups the replay batch machine prices marginal costs with —
+        // but only when the registry actually grew (a spec's transport
+        // is fixed at registration, so the list is otherwise stable).
+        let n_targets = self.soc.registry.len();
+        let setups: Option<Vec<(TargetId, u64)>> = self
+            .trace
+            .as_ref()
+            .filter(|t| t.meta.setups.len() != n_targets)
+            .map(|_| {
+                self.soc
+                    .targets()
+                    .map(|(id, spec)| {
+                        (id, if id.is_host() { 0 } else { spec.transport.batch_setup_ns() })
+                    })
+                    .collect()
+            });
+        let retire_epoch = self.queue.current_epoch();
+        let trace = self.trace.as_mut().expect("checked");
+        if let Some(setups) = setups {
+            trace.meta.setups = setups;
+        }
+        trace.push(super::trace::TraceEntry {
+            function: record.function.0,
+            kind,
+            executed_on: record.target,
+            exec_ns: record.exec_ns,
+            profiling_ns: record.profiling_ns,
+            cycles,
+            issue_epoch,
+            retire_epoch,
+            coalesced,
+            fanned,
+            shards: record.shards,
+            prices,
+            candidates,
+            plan,
+        });
     }
 
     /// Run `iters` consecutive synchronous calls of `f`.
@@ -1577,9 +1712,17 @@ impl Vpe {
         Ok((Some(wall), ok, Some(out)))
     }
 
-    fn policy_tick(&mut self, f: FunctionId, current: TargetId) -> Result<Option<PolicyAction>> {
+    /// Run the detector + policy for one retired call of `f`.  Returns
+    /// the action taken (already applied) plus the exact candidate
+    /// slice the policy ranked — the trace recorder persists that slice
+    /// so replayed decisions see the same numbers.
+    fn policy_tick(
+        &mut self,
+        f: FunctionId,
+        current: TargetId,
+    ) -> Result<(Option<PolicyAction>, Vec<Candidate>)> {
         if self.sampler.profile(f).is_none() {
-            return Ok(None);
+            return Ok((None, Vec::new()));
         }
         // Nominate the hottest function still resident on the host:
         // once a function has been moved to its unit — or fanned out
@@ -1648,7 +1791,7 @@ impl Vpe {
             }
             None => {}
         }
-        Ok(action)
+        Ok((action, candidates))
     }
 
     // -- introspection ------------------------------------------------------

@@ -189,10 +189,18 @@ fn run() -> vpe::Result<()> {
             args.finish()?;
             let trace = vpe::coordinator::trace::Trace::load(std::path::Path::new(path))?;
             println!(
-                "trace: {} calls, {:.1} ms as recorded\n",
+                "trace: {} calls, {:.1} ms as recorded (format v{})",
                 trace.entries.len(),
-                trace.total_ms()
+                trace.total_ms(),
+                trace.meta.version
             );
+            if trace.degraded() {
+                println!(
+                    "note: pre-v3 trace — no amortized prices, batch epochs or shard\n\
+                     counterfactuals; replay degrades to lone-dispatch fidelity"
+                );
+            }
+            println!();
             use vpe::coordinator::policies_ext::*;
             use vpe::coordinator::policy::*;
             let mut policies: Vec<Box<dyn OffloadPolicy>> = vec![
@@ -201,17 +209,27 @@ fn run() -> vpe::Result<()> {
                 Box::<BlindOffloadPolicy>::default(),
                 Box::<HysteresisPolicy>::default(),
                 Box::<PredictivePolicy>::default(),
+                Box::<FanOutPolicy>::default(),
                 Box::new(EpsilonGreedyPolicy::new(0.1, 0xE95)),
             ];
             println!(
-                "{:<18} {:>12} {:>8} {:>8} {:>9} {:>8}",
-                "policy", "total ms", "host", "remote", "offloads", "reverts"
+                "{:<18} {:>12} {:>7} {:>7} {:>9} {:>8} {:>8} {:>8} {:>9}",
+                "policy", "total ms", "host", "remote", "offloads", "reverts", "fanouts",
+                "batched", "diverged"
             );
             for p in policies.iter_mut() {
                 let o = vpe::coordinator::trace::replay(&trace, p.as_mut());
                 println!(
-                    "{:<18} {:>12.1} {:>8} {:>8} {:>9} {:>8}",
-                    o.policy, o.total_ms, o.host_calls, o.remote_calls, o.offloads, o.reverts
+                    "{:<18} {:>12.1} {:>7} {:>7} {:>9} {:>8} {:>8} {:>8} {:>9}",
+                    o.policy,
+                    o.total_ms,
+                    o.host_calls,
+                    o.remote_calls,
+                    o.offloads,
+                    o.reverts,
+                    o.fanouts,
+                    o.batched_calls,
+                    o.diverged()
                 );
             }
         }

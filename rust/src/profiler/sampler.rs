@@ -97,7 +97,9 @@ pub struct FunctionProfile {
 }
 
 impl FunctionProfile {
-    fn new() -> Self {
+    /// A fresh profile with the sampler's EWMA weighting (trace replay
+    /// builds these to mirror live drift detection).
+    pub fn new() -> Self {
         FunctionProfile { ewma_ns: Ewma::new(0.25), ..Default::default() }
     }
 

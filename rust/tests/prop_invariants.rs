@@ -774,3 +774,98 @@ fn prop_fft_parseval_and_linearity() {
         assert_prop((t - f).abs() <= 1e-4 * t.max(1.0), format!("n={n}: {t} vs {f}"))
     });
 }
+
+// ---------------------------------------------------------------------------
+// Trace v3: lossless persistence + degraded-fidelity loading
+// ---------------------------------------------------------------------------
+
+/// A randomized v3 trace exercising every optional field: meta header,
+/// per-entry candidate slices, epochs, coalesced flags, shard counts
+/// and counterfactual plans.
+fn random_v3_trace(g: &mut vpe::util::prop::Gen) -> vpe::coordinator::trace::Trace {
+    use vpe::coordinator::trace::{
+        RecordedCandidate, RecordedPlan, RecordedShard, Trace, TraceEntry,
+    };
+    let mut t = Trace::default();
+    t.meta.max_batch_width = g.usize_in(1, 8);
+    t.meta.min_samples = g.u64_in(1, 10);
+    // Exact dyadic fraction: bit-exact through the shortest-roundtrip
+    // float formatting either way, but keep the input unambiguous.
+    t.meta.share_threshold = g.u64_in(0, 64) as f64 / 64.0;
+    let units = g.usize_in(1, 5);
+    t.meta.setups = (0..units)
+        .map(|s| (TargetId(s as u16), if s == 0 { 0 } else { g.u64_in(0, 1 << 40) }))
+        .collect();
+    for i in 0..g.usize_in(1, 25) {
+        let prices: Vec<(TargetId, u64)> =
+            (0..units).map(|s| (TargetId(s as u16), g.u64_in(1, 1 << 50))).collect();
+        let candidates: Vec<RecordedCandidate> = (1..units)
+            .map(|s| RecordedCandidate {
+                target: TargetId(s as u16),
+                predicted_ns: g.u64_in(1, 1 << 50),
+                amortized_ns: g.u64_in(1, 1 << 50),
+            })
+            .collect();
+        let plan = g.bool().then(|| RecordedPlan {
+            units: g.usize_in(2, 2000),
+            items_per_unit: g.u64_in(1, 1 << 40) as f64 / 16.0,
+            makespan_ns: g.u64_in(1, 1 << 50),
+            shards: (0..g.usize_in(2, 4))
+                .map(|s| RecordedShard {
+                    target: TargetId(s as u16),
+                    units: g.usize_in(1, 1000),
+                    fixed_ns: g.u64_in(0, 1 << 40),
+                    predicted_ns: g.u64_in(1, 1 << 50),
+                })
+                .collect(),
+        });
+        t.entries.push(TraceEntry {
+            function: g.u64_in(0, 3) as u32,
+            kind: *g.choose(&WorkloadKind::ALL),
+            executed_on: TargetId(g.usize_in(0, units) as u16),
+            exec_ns: g.u64_in(1, 1 << 50),
+            profiling_ns: g.u64_in(0, 1 << 30),
+            cycles: g.u64_in(0, 1 << 50),
+            issue_epoch: g.u64_in(0, i as u64 + 1),
+            retire_epoch: g.u64_in(i as u64, i as u64 + 10),
+            coalesced: g.bool(),
+            fanned: g.bool(),
+            shards: g.usize_in(1, 5),
+            prices,
+            candidates,
+            plan,
+        });
+    }
+    t
+}
+
+#[test]
+fn prop_trace_v3_roundtrips_bit_exact() {
+    prop::check("trace v3 json roundtrip", 120, |g| {
+        let t = random_v3_trace(g);
+        let json = t.to_json();
+        let back =
+            vpe::coordinator::trace::Trace::from_json(&json).map_err(|e| e.to_string())?;
+        assert_prop(!back.degraded(), "a v3 document must not load degraded")?;
+        assert_prop(t == back, "amortized/shard fields must round-trip bit-exact")?;
+        // And re-serializing is a fixed point.
+        assert_prop(back.to_json() == json, "serialization must be stable")
+    });
+}
+
+#[test]
+fn v2_documents_load_with_the_degraded_flag_not_a_parse_error() {
+    let doc = r#"{"format":"vpe-trace-v2","entries":[
+{"f":0,"kind":"matmul","on":1,"exec_ns":100,"prof_ns":5,"prices":[[0,100],[1,50]]},
+{"f":0,"kind":"matmul","on":0,"exec_ns":101,"prof_ns":5,"prices":[[0,101],[1,50]]}]}"#;
+    let t = vpe::coordinator::trace::Trace::from_json(doc).expect("v2 must still load");
+    assert!(t.degraded(), "pre-v3 fidelity must be flagged");
+    assert_eq!(t.entries.len(), 2);
+    assert!(t.entries[0].candidates.is_empty());
+    assert!(t.entries[0].plan.is_none());
+    let out = vpe::coordinator::trace::replay(
+        &t,
+        &mut vpe::coordinator::policy::NeverOffloadPolicy,
+    );
+    assert!(out.degraded_fidelity, "replay must surface the degraded fidelity");
+}
