@@ -1,0 +1,358 @@
+//! Multi-tenant serving under load — the serving layer's acceptance
+//! proof.
+//!
+//! Eight tenants with skewed, bursty call mixes (five functions from
+//! ~0.1 ms dot products to a ~27 ms monster matmul) hammer one
+//! [`Server`] wrapped around a coordinator with a single fast
+//! accelerator, two slower helpers, and the calibrated DSP.  Every
+//! function's dispatch slot pins to the fast unit, so all eight
+//! tenants contend for one genuinely shared bottleneck — which makes
+//! the fairness assertion a *scheduling* property (deficit round robin
+//! must equalize released cost), not an accident of load placement.
+//!
+//! The run sustains ~10⁵ calls (~10³ with `--smoke`) and asserts:
+//!
+//! - **zero queue-invariant violations**, swept every iteration:
+//!   accepted population <= `max_inflight_total`, `submitted ==
+//!   retired + in_flight`, every remote depth <= `max_queue_per_target`;
+//! - **zero host bounces**: admission + saturation holdback replace the
+//!   bounce path entirely;
+//! - **fairness**: at the 25%-complete mark (every tenant still
+//!   backlogged) no tenant's released-cost share sits below 1/2 of the
+//!   mean share;
+//! - **bounded tail**: pooled p99/p50 completion latency <= 50;
+//! - every admitted call completes exactly once and resolves its
+//!   [`Completion`] handle; oversized calls are preempted into shards.
+//!
+//! Emits `BENCH_serving.json` — the repo's first perf-trajectory
+//! artifact, diffable across PRs (CI uploads it per run).
+//!
+//! `cargo run --release --example serving_load [-- --smoke]`
+
+use vpe::coordinator::policy::AlwaysOffloadPolicy;
+use vpe::coordinator::serving::{AdmitOutcome, Completion, Server, TenantId};
+use vpe::coordinator::{Vpe, VpeConfig};
+use vpe::jit::module::FunctionId;
+use vpe::platform::{TargetSpec, TransferModel, Transport};
+use vpe::workloads::{PaperScale, WorkloadKind};
+
+/// Tenants sharing the server.
+const TENANTS: usize = 8;
+/// Retirements pumped per driver iteration.
+const PUMP_BATCH: usize = 32;
+/// Per-tenant mix weights over the function pool `[tiny, small, med,
+/// big, monster]` — skewed on purpose: tenant 0 is interactive
+/// small-call traffic, tenant 7 batches monsters.
+const MIXES: [[u32; 5]; TENANTS] = [
+    [6, 6, 2, 1, 0],
+    [2, 6, 5, 2, 0],
+    [1, 3, 8, 3, 0],
+    [1, 2, 3, 8, 0],
+    [3, 4, 4, 3, 1],
+    [4, 5, 2, 2, 2],
+    [2, 2, 5, 5, 1],
+    [2, 2, 3, 4, 4],
+];
+
+/// Deterministic arrival randomness (no wall clock anywhere).
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+
+    fn pick(&mut self, weights: &[u32; 5], pool: &[FunctionId; 5]) -> FunctionId {
+        let total: u32 = weights.iter().sum();
+        let mut r = (self.next() % total as u64) as u32;
+        for (w, f) in weights.iter().zip(pool) {
+            if r < *w {
+                return *f;
+            }
+            r -= w;
+        }
+        pool[4]
+    }
+}
+
+fn build_platform() -> vpe::Result<(Vpe, [FunctionId; 5])> {
+    let mut cfg = VpeConfig::sim_only();
+    cfg.tenant_quota = 32; // bound per-tenant backlog (and latency)
+    cfg.max_inflight_total = 200; // < 8 * 32: saturation rejections occur
+    cfg.deadline_ns = 20_000_000; // 20 ms: the monster must preempt
+    let mut vpe = Vpe::with_policy(cfg, Box::new(AlwaysOffloadPolicy))?;
+
+    // serve-a is strictly fastest at every workload — the shared
+    // accelerator all dispatch slots pin to.  serve-b/-c only see work
+    // through preemption fan-outs (and warm-up host calls aside, the
+    // DSP likewise).
+    let rates: [(&str, [f64; 4]); 3] = [
+        ("serve-a", [1.0, 2.0, 2.2, 1.5]),
+        ("serve-b", [1.6, 3.2, 3.0, 2.2]),
+        ("serve-c", [2.0, 4.0, 3.6, 2.6]),
+    ];
+    let kinds =
+        [WorkloadKind::Dotprod, WorkloadKind::Pattern, WorkloadKind::Conv2d, WorkloadKind::Matmul];
+    for (name, per_kind) in rates {
+        let id = vpe.soc_mut().add_target(TargetSpec::new(name, 1_200_000_000).with_transport(
+            Transport::SharedMemory(TransferModel {
+                dispatch_fixed_ns: 1_500_000,
+                per_param_byte_ns: 1.0,
+            }),
+        ));
+        for (kind, rate) in kinds.iter().zip(per_kind) {
+            vpe.soc_mut().cost.set_rate(*kind, id, rate);
+        }
+    }
+
+    // The function pool: predicted steady-state costs on serve-a of
+    // ~1.6 / 2.1 / 3.7 / 4.7 / 26.7 ms.  Only the monster crosses the
+    // 20 ms deadline.
+    let tiny = vpe.register_workload(WorkloadKind::Dotprod)?;
+    vpe.set_scale(tiny, PaperScale { items: 1e5, param_bytes: 48, payload_bytes: 4096 })?;
+    let small = vpe.register_workload(WorkloadKind::Pattern)?;
+    vpe.set_scale(small, PaperScale { items: 3e5, param_bytes: 48, payload_bytes: 4096 })?;
+    let med = vpe.register_workload(WorkloadKind::Conv2d)?;
+    vpe.set_scale(med, PaperScale { items: 1e6, param_bytes: 48, payload_bytes: 4096 })?;
+    let big = vpe.register_matmul(128)?;
+    let monster = vpe.register_matmul(256)?;
+
+    let pool = [tiny, small, med, big, monster];
+    // Warm-up: first call profiles on the host, the policy commits the
+    // offload — serving-time cost predictions are steady-state.
+    for f in pool {
+        vpe.call(f)?;
+    }
+    let accel = vpe.soc().registry.iter().find(|(_, s)| s.name == "serve-a").unwrap().0;
+    for f in pool {
+        assert_eq!(vpe.current_target(f)?, accel, "warm-up must pin every slot to serve-a");
+    }
+    Ok((vpe, pool))
+}
+
+fn main() -> vpe::Result<()> {
+    let args = vpe::util::cli::Args::parse(std::env::args().skip(1))?;
+    let smoke = args.flag("smoke");
+    let total: usize = args.opt("calls", if smoke { 1_000 } else { 100_000 })?;
+    args.finish()?;
+    let per_tenant = total / TENANTS;
+    let total = per_tenant * TENANTS;
+
+    println!("== multi-tenant serving: {total} calls, {TENANTS} tenants, skewed bursty mixes ==");
+    println!("   (one shared accelerator; DRR fairness, admission control, 20 ms deadline)\n");
+
+    let (vpe, pool) = build_platform()?;
+    let quota = vpe.config().tenant_quota;
+    let max_total = vpe.config().max_inflight_total;
+    let max_per_target = vpe.config().max_queue_per_target;
+    let mut server = Server::new(vpe);
+    server.vpe_mut().limit_events(50_000);
+    let t0 = server.vpe().clock().now_ns();
+
+    let mut rng = Lcg(0x5e41);
+    let mut remaining = [per_tenant; TENANTS];
+    let mut admitted = [0usize; TENANTS];
+    let mut completed = [0usize; TENANTS];
+    let mut backoff_until = [0u64; TENANTS];
+    let mut handles: Vec<Completion> = Vec::with_capacity(total);
+    let mut violations = 0usize;
+    let mut max_accepted = 0usize;
+    let mut snapshot: Option<Vec<u64>> = None;
+    let mut guard = 0usize;
+
+    loop {
+        guard += 1;
+        assert!(guard < total * 60 + 10_000, "driver loop failed to make progress");
+
+        // Bursty arrivals: a tenant whose pending population fell below
+        // half its quota refills to quota in one burst, backing off
+        // when admission control says so.
+        let now = server.vpe().clock().now_ns();
+        for t in 0..TENANTS {
+            if remaining[t] == 0 || now < backoff_until[t] {
+                continue;
+            }
+            let pending = admitted[t] - completed[t];
+            if pending >= quota / 2 {
+                continue;
+            }
+            let mut burst = (quota - pending).min(remaining[t]);
+            while burst > 0 {
+                let f = rng.pick(&MIXES[t], &pool);
+                match server.try_submit(TenantId(t as u32), f)? {
+                    AdmitOutcome::Admitted(done) => {
+                        handles.push(done);
+                        admitted[t] += 1;
+                        remaining[t] -= 1;
+                        burst -= 1;
+                    }
+                    AdmitOutcome::Rejected { retry_after_ns, .. } => {
+                        backoff_until[t] =
+                            server.vpe().clock().now_ns().saturating_add(retry_after_ns);
+                        break;
+                    }
+                }
+            }
+        }
+
+        // Drive a batch of retirements.
+        let mut progressed = false;
+        for _ in 0..PUMP_BATCH {
+            match server.pump()? {
+                Some(rec) => {
+                    progressed = true;
+                    if let Some(TenantId(t)) = rec.tenant {
+                        completed[t as usize] += 1;
+                    }
+                }
+                None => break,
+            }
+        }
+
+        // Invariant sweep, every iteration.
+        if server.accepted_inflight() > max_total {
+            violations += 1;
+        }
+        {
+            let v = server.vpe();
+            if v.dispatches_submitted() - v.dispatches_retired() != v.in_flight() as u64 {
+                violations += 1;
+            }
+            let over: usize = v
+                .soc()
+                .targets()
+                .filter(|(id, _)| !id.is_host() && v.queue_depth_on(*id) > max_per_target)
+                .count();
+            violations += over;
+        }
+        max_accepted = max_accepted.max(server.accepted_inflight());
+
+        let done_total: usize = completed.iter().sum();
+        if snapshot.is_none() && done_total >= total / 4 {
+            snapshot =
+                Some((0..TENANTS).map(|t| server.served_ns(TenantId(t as u32))).collect());
+        }
+        if remaining.iter().all(|&r| r == 0) && server.is_idle() {
+            break;
+        }
+        if !progressed {
+            // Nothing retirable and every eligible tenant backed off:
+            // advance the sim clock to the earliest retry.
+            let next = (0..TENANTS)
+                .filter(|&t| remaining[t] > 0)
+                .map(|t| backoff_until[t])
+                .min();
+            if let Some(at) = next {
+                server.idle_until(at);
+            }
+        }
+    }
+
+    let elapsed_ns = server.vpe().clock().now_ns() - t0;
+    let elapsed_s = elapsed_ns as f64 / 1e9;
+    let throughput = total as f64 / elapsed_s;
+    let (p50_ns, p99_ns) =
+        server.vpe().serving_latency_percentiles().expect("completions recorded");
+    let tail_ratio = p99_ns as f64 / p50_ns.max(1) as f64;
+    let snap = snapshot.expect("the run crossed the 25% mark");
+    let mean_served = snap.iter().sum::<u64>() as f64 / TENANTS as f64;
+    let min_share_frac = *snap.iter().min().unwrap() as f64 / mean_served;
+
+    println!("tenant  submitted  completed  rejected   p50 ms   p99 ms  released ms");
+    for s in server.vpe().serving_stats() {
+        println!(
+            "{:>6}  {:>9}  {:>9}  {:>8}  {:>7.1}  {:>7.1}  {:>11.1}",
+            format!("t{}", s.tenant.0),
+            s.submitted,
+            s.completed,
+            s.rejected,
+            s.p50_latency_ns as f64 / 1e6,
+            s.p99_latency_ns as f64 / 1e6,
+            server.served_ns(s.tenant) as f64 / 1e6,
+        );
+    }
+    println!();
+    println!("sim time: {elapsed_s:.2} s   throughput: {throughput:.1} calls/s");
+    println!(
+        "pooled latency: p50 {:.1} ms, p99 {:.1} ms (ratio {tail_ratio:.1})",
+        p50_ns as f64 / 1e6,
+        p99_ns as f64 / 1e6
+    );
+    println!(
+        "admission: {} rejected, max accepted in flight {max_accepted}/{max_total}",
+        server.rejected()
+    );
+    println!(
+        "preemption: {} monster calls sharded; batching saved {:.1} ms of setup",
+        server.preempted(),
+        server.vpe().saved_setup_ns() as f64 / 1e6
+    );
+    println!("fairness at 25% complete: min released share = {min_share_frac:.2}x mean");
+
+    // The accelerator's utilization over the run (occupied / elapsed).
+    let accel =
+        server.vpe().soc().registry.iter().find(|(_, s)| s.name == "serve-a").unwrap().0;
+    let utilization = server.vpe().scheduler().occupied_ns(accel) as f64 / elapsed_ns as f64;
+    println!("accelerator utilization: {:.0}%", utilization * 100.0);
+
+    // -- acceptance ---------------------------------------------------------
+    let completed_total: usize = completed.iter().sum();
+    assert_eq!(completed_total, total, "every admitted call completes");
+    assert_eq!(handles.len(), total);
+    assert!(handles.iter().all(|h| h.is_done()), "every handle resolved");
+    for (t, done) in completed.iter().enumerate() {
+        assert_eq!(*done, per_tenant, "tenant {t} finished its budget");
+    }
+    assert_eq!(violations, 0, "queue invariants held throughout");
+    assert_eq!(server.vpe().scheduler().bounce_count(), 0, "holdback replaces the host bounce");
+    assert_eq!(server.accepted_inflight(), 0);
+    assert_eq!(server.vpe().in_flight(), 0);
+    assert_eq!(server.vpe().soc().shared.used_bytes(), 0, "no staging leaks");
+    assert!(server.rejected() > 0, "admission control must engage at this load");
+    assert!(server.preempted() > 0, "the monster must preempt into shards");
+    assert!(
+        min_share_frac >= 0.5,
+        "no tenant below half its fair share (got {min_share_frac:.2})"
+    );
+    assert!(tail_ratio <= 50.0, "p99/p50 must stay bounded (got {tail_ratio:.1})");
+
+    let bench = format!(
+        "{{\n  \"example\": \"serving_load\",\n  \"mode\": \"{}\",\n  \"calls\": {},\n  \
+         \"tenants\": {},\n  \"sim_seconds\": {:.3},\n  \"throughput_calls_per_s\": {:.1},\n  \
+         \"p50_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \"p99_over_p50\": {:.2},\n  \
+         \"rejected\": {},\n  \"preempted\": {},\n  \"bounced\": {},\n  \
+         \"batches_formed\": {},\n  \"saved_setup_ms\": {:.1},\n  \
+         \"max_accepted_inflight\": {},\n  \"accel_utilization\": {:.3},\n  \
+         \"min_share_frac\": {:.3},\n  \"violations\": {}\n}}\n",
+        if smoke { "smoke" } else { "full" },
+        total,
+        TENANTS,
+        elapsed_s,
+        throughput,
+        p50_ns as f64 / 1e6,
+        p99_ns as f64 / 1e6,
+        tail_ratio,
+        server.rejected(),
+        server.preempted(),
+        server.vpe().scheduler().bounce_count(),
+        server.vpe().batches_formed(),
+        server.vpe().saved_setup_ns() as f64 / 1e6,
+        max_accepted,
+        utilization,
+        min_share_frac,
+        violations,
+    );
+    std::fs::write("BENCH_serving.json", &bench)?;
+    println!("\nwrote BENCH_serving.json");
+    println!(
+        "\n{} calls from {TENANTS} tenants: fair to within {:.0}% of an equal split, \
+         {} oversized calls preempted, {} rejected with retry hints, zero bounces, \
+         zero invariant violations.",
+        total,
+        (1.0 - min_share_frac) * 100.0,
+        server.preempted(),
+        server.rejected()
+    );
+    Ok(())
+}

@@ -78,6 +78,27 @@ pub fn apply(base: VpeConfig, doc: &Json) -> Result<VpeConfig> {
     if let Some(v) = u64_of(doc, "rayon_threads")? {
         cfg.rayon_threads = v as usize;
     }
+    if let Some(v) = u64_of(doc, "max_inflight_total")? {
+        if v == 0 {
+            return Err(Error::Config("'max_inflight_total' must be >= 1".into()));
+        }
+        cfg.max_inflight_total = v as usize;
+    }
+    if let Some(v) = u64_of(doc, "tenant_quota")? {
+        if v == 0 {
+            return Err(Error::Config("'tenant_quota' must be >= 1".into()));
+        }
+        cfg.tenant_quota = v as usize;
+    }
+    if let Some(v) = u64_of(doc, "deadline_ns")? {
+        cfg.deadline_ns = v;
+    }
+    if let Some(v) = u64_of(doc, "drr_quantum_ns")? {
+        if v == 0 {
+            return Err(Error::Config("'drr_quantum_ns' must be >= 1".into()));
+        }
+        cfg.drr_quantum_ns = v;
+    }
     if let Some(s) = doc.get("sampler") {
         if let Some(v) = bool_of(s, "enabled")? {
             cfg.sampler.enabled = v;
@@ -148,6 +169,10 @@ mod tests {
             "learn_rates": true,
             "rate_learn_alpha": 0.4,
             "rayon_threads": 3,
+            "max_inflight_total": 64,
+            "tenant_quota": 16,
+            "deadline_ns": 250000000,
+            "drr_quantum_ns": 5000000,
             "sampler": {"enabled": true, "overhead_frac": 0.10,
                         "analysis_period": 4, "burst_mean_ms": 50, "burst_std_ms": 10},
             "detector": {"min_samples": 3, "share_threshold": 0.25},
@@ -165,6 +190,10 @@ mod tests {
         assert!(cfg.learn_rates);
         assert_eq!(cfg.rate_learn_alpha, 0.4);
         assert_eq!(cfg.rayon_threads, 3);
+        assert_eq!(cfg.max_inflight_total, 64);
+        assert_eq!(cfg.tenant_quota, 16);
+        assert_eq!(cfg.deadline_ns, 250_000_000);
+        assert_eq!(cfg.drr_quantum_ns, 5_000_000);
         assert_eq!(cfg.sampler.overhead_frac, 0.10);
         assert_eq!(cfg.sampler.analysis_period, 4);
         assert_eq!(cfg.sampler.burst_mean_ns, 50e6);
@@ -193,6 +222,21 @@ mod tests {
         assert!(apply(VpeConfig::default(), &doc).is_err());
         let doc = json::parse(r#"{"rate_learn_alpha": 1.5}"#).unwrap();
         assert!(apply(VpeConfig::default(), &doc).is_err());
+    }
+
+    #[test]
+    fn serving_bounds_enforced() {
+        for bad in [
+            r#"{"max_inflight_total": 0}"#,
+            r#"{"tenant_quota": 0}"#,
+            r#"{"drr_quantum_ns": 0}"#,
+        ] {
+            let doc = json::parse(bad).unwrap();
+            assert!(apply(VpeConfig::default(), &doc).is_err(), "{bad} must be rejected");
+        }
+        // A zero deadline is legal: it disables preemption.
+        let doc = json::parse(r#"{"deadline_ns": 0}"#).unwrap();
+        assert_eq!(apply(VpeConfig::default(), &doc).unwrap().deadline_ns, 0);
     }
 
     #[test]

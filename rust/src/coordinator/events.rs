@@ -2,8 +2,23 @@
 //! simulated timestamp, so tests and examples can assert on the story
 //! ("offloaded at iteration k, reverted after the observation window").
 
+use std::collections::VecDeque;
+
 use crate::jit::module::FunctionId;
 use crate::platform::TargetId;
+
+use super::queue::TenantId;
+
+/// Why the serving front-end rejected an ingest request (see
+/// [`super::serving::Server::try_submit`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The server-wide accepted-but-not-completed population reached
+    /// `max_inflight_total`.
+    ServerSaturated,
+    /// The tenant's own pending population reached `tenant_quota`.
+    TenantQuota,
+}
 
 /// Why a function was sent back to the host.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -69,12 +84,35 @@ pub enum VpeEvent {
         start_ns: u64,
         complete_ns: u64,
     },
+    /// The serving front-end accepted a tenant's request into its
+    /// submission queue.
+    Admitted { tenant: TenantId, function: FunctionId },
+    /// The serving front-end rejected a tenant's request, with a hint
+    /// for when a retry is likely to succeed (backpressure instead of
+    /// unbounded queueing).
+    Rejected { tenant: TenantId, function: FunctionId, reason: RejectReason, retry_after_ns: u64 },
+    /// A call predicted to exceed the serving deadline was preempted
+    /// into `shards` cooperative shards (the epoch-deadline analogue:
+    /// the call yields the planner between shards instead of holding
+    /// one unit for its whole length).
+    Preempted {
+        tenant: TenantId,
+        function: FunctionId,
+        shards: usize,
+        predicted_ns: u64,
+        deadline_ns: u64,
+    },
 }
 
-/// Append-only log of (sim-time ns, event).
+/// Append-only log of (sim-time ns, event), optionally bounded: a
+/// sustained serving run emits events per dispatch, so callers that
+/// keep a coordinator alive for ~10⁵ calls cap the log and the oldest
+/// entries roll off (counted, never silently).
 #[derive(Debug, Clone, Default)]
 pub struct EventLog {
-    entries: Vec<(u64, VpeEvent)>,
+    entries: VecDeque<(u64, VpeEvent)>,
+    limit: Option<usize>,
+    dropped: u64,
 }
 
 impl EventLog {
@@ -83,9 +121,31 @@ impl EventLog {
         Self::default()
     }
 
+    /// Bound the log to the most recent `cap` entries (`cap >= 1`).
+    /// Older entries roll off on push and count toward
+    /// [`EventLog::dropped`].
+    pub fn set_limit(&mut self, cap: usize) {
+        self.limit = Some(cap.max(1));
+        while self.entries.len() > cap.max(1) {
+            self.entries.pop_front();
+            self.dropped += 1;
+        }
+    }
+
+    /// Entries evicted by the bound so far (0 for an unbounded log).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
     /// Append one event at the given sim time.
     pub fn push(&mut self, at_ns: u64, event: VpeEvent) {
-        self.entries.push((at_ns, event));
+        if let Some(cap) = self.limit {
+            if self.entries.len() >= cap {
+                self.entries.pop_front();
+                self.dropped += 1;
+            }
+        }
+        self.entries.push_back((at_ns, event));
     }
 
     /// Iterate all `(sim-time ns, event)` entries in insertion order.
@@ -156,6 +216,31 @@ impl EventLog {
             .collect()
     }
 
+    /// All serving rejections: `(time, tenant, reason)`, in order.
+    pub fn rejections(&self) -> Vec<(u64, TenantId, RejectReason)> {
+        self.entries
+            .iter()
+            .filter_map(|(t, e)| match e {
+                VpeEvent::Rejected { tenant, reason, .. } => Some((*t, *tenant, *reason)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// All deadline preemptions: `(time, tenant, function, shards)`, in
+    /// order.
+    pub fn preemptions(&self) -> Vec<(u64, TenantId, FunctionId, usize)> {
+        self.entries
+            .iter()
+            .filter_map(|(t, e)| match e {
+                VpeEvent::Preempted { tenant, function, shards, .. } => {
+                    Some((*t, *tenant, *function, *shards))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
     /// All revert events, in order.
     pub fn reverts(&self) -> Vec<(u64, FunctionId, RevertReason)> {
         self.entries
@@ -198,5 +283,44 @@ mod tests {
         assert_eq!(log.offloads(), vec![(20, f, TargetId(1))]);
         assert_eq!(log.reverts().len(), 1);
         assert!(log.to_text().contains("Offloaded"));
+    }
+
+    #[test]
+    fn bounded_log_rolls_off_oldest_and_counts_drops() {
+        let mut log = EventLog::new();
+        log.set_limit(3);
+        for i in 0..5u64 {
+            log.push(i, VpeEvent::AnalysisBurst { cost_ns: i });
+        }
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.dropped(), 2);
+        let first = log.iter().next().unwrap();
+        assert_eq!(first.0, 2, "oldest surviving entry is the third pushed");
+        // Tightening the bound on a full log evicts immediately.
+        log.set_limit(1);
+        assert_eq!(log.len(), 1);
+        assert_eq!(log.dropped(), 4);
+    }
+
+    #[test]
+    fn serving_filters_pick_out_rejections_and_preemptions() {
+        let mut log = EventLog::new();
+        let (f, t) = (FunctionId(1), TenantId(3));
+        log.push(5, VpeEvent::Admitted { tenant: t, function: f });
+        log.push(9, VpeEvent::Rejected {
+            tenant: t,
+            function: f,
+            reason: RejectReason::TenantQuota,
+            retry_after_ns: 100,
+        });
+        log.push(12, VpeEvent::Preempted {
+            tenant: t,
+            function: f,
+            shards: 4,
+            predicted_ns: 900,
+            deadline_ns: 300,
+        });
+        assert_eq!(log.rejections(), vec![(9, t, RejectReason::TenantQuota)]);
+        assert_eq!(log.preemptions(), vec![(12, t, f, 4)]);
     }
 }

@@ -8,12 +8,14 @@ pub mod policies_ext;
 pub mod policy;
 pub mod queue;
 pub mod scheduler;
+pub mod serving;
 pub mod shard;
 pub mod trace;
 pub mod vpe;
 
-pub use events::{EventLog, VpeEvent};
+pub use events::{EventLog, RejectReason, VpeEvent};
 pub use policy::{BlindOffloadPolicy, Candidate, OffloadPolicy, PolicyAction};
-pub use queue::{DispatchQueue, TicketId};
+pub use queue::{DispatchQueue, TenantId, TicketId};
+pub use serving::{AdmitOutcome, Completion, Server};
 pub use shard::{PlanTarget, PlannedShard, ShardPlan};
-pub use vpe::{CallRecord, Vpe, VpeConfig};
+pub use vpe::{CallRecord, TenantServingStats, Vpe, VpeConfig};

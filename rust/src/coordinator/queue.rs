@@ -50,6 +50,18 @@ impl std::fmt::Display for TicketId {
     }
 }
 
+/// Identity of one serving tenant (see [`super::serving`]).  Dispatches
+/// submitted through the serving front-end carry their tenant through
+/// the queue, so retirement can credit the right per-tenant counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TenantId(pub u32);
+
+impl std::fmt::Display for TenantId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "t{}", self.0)
+    }
+}
+
 /// Membership of an in-flight dispatch in a sharded fan-out group: one
 /// logical call split into `of` concurrent shards (see
 /// [`super::shard`]), each covering output units `[start, end)`.
@@ -107,6 +119,9 @@ pub struct InFlight {
     /// Set when this dispatch is one shard of a fanned-out call; the
     /// coordinator retires the group as one aggregate record.
     pub shard: Option<ShardSlice>,
+    /// The serving tenant this dispatch was submitted for, if it came
+    /// through the serving front-end (see [`super::serving`]).
+    pub tenant: Option<TenantId>,
 }
 
 /// A dispatch accepted by `submit` but still waiting in its target's
@@ -139,6 +154,8 @@ pub struct PendingDispatch {
     pub staged: Option<Allocation>,
     /// Set when this dispatch is one shard of a fanned-out call.
     pub shard: Option<ShardSlice>,
+    /// The serving tenant this dispatch was submitted for, if any.
+    pub tenant: Option<TenantId>,
 }
 
 /// Min-heap adapter: `BinaryHeap::pop` must yield the
@@ -175,6 +192,11 @@ pub struct DispatchQueue {
     /// Per-target forming batches (FIFO per target; `BTreeMap` so batch
     /// flush order is deterministic across runs).
     forming: BTreeMap<TargetId, Vec<PendingDispatch>>,
+    /// Per-target count of heap entries — `depth_on` reads this instead
+    /// of scanning the heap (the scan made every planner/policy tick
+    /// O(n) in the in-flight population).  Updated at push/pop;
+    /// `depth_on_scan` stays as the reference implementation.
+    inflight_on: BTreeMap<TargetId, usize>,
     next_ticket: u64,
     /// Flush epoch: advanced at every retirement attempt (the
     /// flush-on-drain points).  Dispatches issued in the same epoch
@@ -240,6 +262,7 @@ impl DispatchQueue {
         assert!(call.exec_ns >= 1, "zero-length dispatch: exec_ns must be >= 1 ns");
         debug_assert!(call.complete_ns >= call.start_ns);
         debug_assert!(call.start_ns >= call.issue_ns);
+        *self.inflight_on.entry(call.target).or_insert(0) += 1;
         self.inflight.push(QueueEntry(call));
         self.max_in_flight = self.max_in_flight.max(self.len());
     }
@@ -249,6 +272,11 @@ impl DispatchQueue {
     pub fn pop_earliest(&mut self) -> Option<InFlight> {
         let call = self.inflight.pop()?.0;
         self.retired += 1;
+        let n = self.inflight_on.get_mut(&call.target).expect("pushed with a counter");
+        *n -= 1;
+        if *n == 0 {
+            self.inflight_on.remove(&call.target);
+        }
         Some(call)
     }
 
@@ -320,8 +348,19 @@ impl DispatchQueue {
         self.len() == 0
     }
 
-    /// Dispatches bound for `target`: in flight plus forming.
+    /// Dispatches bound for `target`: in flight plus forming.  O(log
+    /// targets) — the per-target counter is maintained at push/pop, so
+    /// planner and policy ticks no longer scan the whole in-flight heap
+    /// (see `depth_on_scan`, the reference implementation).
     pub fn depth_on(&self, target: TargetId) -> usize {
+        self.inflight_on.get(&target).copied().unwrap_or(0) + self.forming_on(target)
+    }
+
+    /// Reference implementation of [`DispatchQueue::depth_on`]: the
+    /// original O(n) heap scan.  Kept for the regression property test
+    /// (`counter == scan` on randomized loads); production paths use
+    /// the counter.
+    pub fn depth_on_scan(&self, target: TargetId) -> usize {
         self.inflight.iter().filter(|c| c.0.target == target).count()
             + self.forming_on(target)
     }
@@ -381,6 +420,7 @@ mod tests {
             coalesced: false,
             staged: None,
             shard: None,
+            tenant: None,
         });
         ticket
     }
@@ -400,6 +440,7 @@ mod tests {
             epoch,
             staged: None,
             shard: None,
+            tenant: None,
         });
         ticket
     }
@@ -509,6 +550,53 @@ mod tests {
         assert!(q.forming_snapshot(dm3730::ARM).is_empty());
         q.take_forming(dm3730::DSP);
         assert!(q.forming_snapshot(dm3730::DSP).is_empty());
+    }
+
+    #[test]
+    fn depth_counter_matches_scan_through_push_pop_cycles() {
+        let mut q = DispatchQueue::new();
+        let targets = [dm3730::ARM, dm3730::DSP, TargetId(2), TargetId(3)];
+        for i in 0..24u64 {
+            let t = targets[(i % 4) as usize];
+            if i % 3 == 0 {
+                pending(&mut q, t, i, 50 + i);
+            } else {
+                call(&mut q, t, i, i, 10 + i);
+            }
+            for &t in &targets {
+                assert_eq!(q.depth_on(t), q.depth_on_scan(t), "after push on {t}");
+            }
+        }
+        for &t in &targets {
+            // Forming members move in flight through the flush path.
+            for p in q.take_forming(t) {
+                let exec = p.core_exec_ns;
+                q.push_flushed(InFlight {
+                    ticket: p.ticket,
+                    function: p.function,
+                    target: p.target,
+                    iteration: p.iteration,
+                    issue_ns: p.issue_ns,
+                    start_ns: p.issue_ns,
+                    complete_ns: p.issue_ns + exec,
+                    exec_ns: exec,
+                    overhead_ns: 0,
+                    epoch: p.epoch,
+                    coalesced: false,
+                    staged: p.staged,
+                    shard: p.shard,
+                    tenant: p.tenant,
+                });
+            }
+        }
+        while q.pop_earliest().is_some() {
+            for &t in &targets {
+                assert_eq!(q.depth_on(t), q.depth_on_scan(t), "after pop on {t}");
+            }
+        }
+        for &t in &targets {
+            assert_eq!(q.depth_on(t), 0);
+        }
     }
 
     #[test]

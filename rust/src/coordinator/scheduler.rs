@@ -14,6 +14,10 @@ use crate::platform::TargetId;
 #[derive(Debug, Clone, Default)]
 pub struct TargetScheduler {
     busy_until_ns: HashMap<TargetId, u64>,
+    /// Cumulative occupied time per target, ns — every `occupy` adds
+    /// its duration here, so `occupied / elapsed` is the target's
+    /// utilization (the serving benchmark reports it).
+    occupied_ns: HashMap<TargetId, u64>,
     bounced: u64,
 }
 
@@ -33,6 +37,13 @@ impl TargetScheduler {
         let until = start_ns.saturating_add(dur_ns);
         let e = self.busy_until_ns.entry(t).or_insert(0);
         *e = (*e).max(until);
+        *self.occupied_ns.entry(t).or_insert(0) += dur_ns;
+    }
+
+    /// Cumulative time `t` has been occupied, ns (utilization numerator;
+    /// dispatches on one target never overlap, so the sum is exact).
+    pub fn occupied_ns(&self, t: TargetId) -> u64 {
+        self.occupied_ns.get(&t).copied().unwrap_or(0)
     }
 
     /// Record a dispatch bounced back to the host because the remote was
@@ -94,6 +105,17 @@ mod tests {
         assert_eq!(s.busy_until(dm3730::DSP), 100);
         s.occupy(dm3730::DSP, 50, 100);
         assert_eq!(s.busy_until(dm3730::DSP), 150);
+    }
+
+    #[test]
+    fn occupied_time_accumulates_per_target() {
+        let mut s = TargetScheduler::new();
+        assert_eq!(s.occupied_ns(dm3730::DSP), 0);
+        s.occupy(dm3730::DSP, 0, 100);
+        s.occupy(dm3730::DSP, 100, 50);
+        s.occupy(dm3730::ARM, 0, 7);
+        assert_eq!(s.occupied_ns(dm3730::DSP), 150);
+        assert_eq!(s.occupied_ns(dm3730::ARM), 7);
     }
 
     #[test]

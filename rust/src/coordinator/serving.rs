@@ -1,0 +1,741 @@
+//! Concurrent serving front-end: multi-tenant ingest over the ticket
+//! machinery.
+//!
+//! The paper's prototype serves one caller; this layer turns the
+//! single-driver [`Vpe`] into an ingest coordinator that survives
+//! sustained multi-tenant traffic with bounded tail latency:
+//!
+//! - **Completion handles** — [`Server::try_submit`] (and the lower
+//!   level [`Vpe::submit_awaitable`]) hand back a [`Completion`] the
+//!   caller can poll or block on; it resolves exactly once, at
+//!   retirement, with the call's [`CallRecord`].
+//! - **Per-tenant queues + deficit round robin** — accepted requests
+//!   wait in their tenant's FIFO; each scheduling round grants every
+//!   backlogged tenant a quantum of predicted-cost credit and releases
+//!   requests the credit covers, so one tenant's flood cannot starve
+//!   the rest (fair share is proportional, not first-come).
+//! - **Admission control** — instead of queueing without bound, the
+//!   server rejects new work once the accepted-but-not-completed
+//!   population hits [`VpeConfig::max_inflight_total`] (or the tenant's
+//!   own [`VpeConfig::tenant_quota`]), returning a retry hint sized
+//!   from the smoothed service time.  Backpressure replaces the
+//!   unbounded host bounce.
+//! - **Deadline preemption** — a released call whose predicted cost
+//!   exceeds [`VpeConfig::deadline_ns`] is submitted through the shard
+//!   planner instead ([`Vpe::submit_sharded`]), so it yields the
+//!   planner between cooperative shards rather than holding one unit
+//!   for its whole length (wasmtime's epoch-deadline idea, applied to
+//!   dispatch).
+//!
+//! The server releases work *into* the existing dispatch queue: target
+//! saturation ([`Vpe::queue_depth_on`] at the
+//! [`VpeConfig::max_queue_per_target`] bound) holds a release back in
+//! its tenant queue rather than letting it bounce to the host, so the
+//! synchronous `call`/`submit` semantics and their bounce rule are
+//! untouched.  `examples/serving_load.rs` drives this layer with ~10⁵
+//! mixed-size calls across eight tenants and emits
+//! `BENCH_serving.json`.
+//!
+//! [`VpeConfig::max_inflight_total`]: super::vpe::VpeConfig::max_inflight_total
+//! [`VpeConfig::tenant_quota`]: super::vpe::VpeConfig::tenant_quota
+//! [`VpeConfig::deadline_ns`]: super::vpe::VpeConfig::deadline_ns
+//! [`VpeConfig::max_queue_per_target`]: super::vpe::VpeConfig::max_queue_per_target
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::error::Result;
+use crate::jit::module::FunctionId;
+use crate::platform::TargetId;
+use crate::workloads;
+
+use super::events::{RejectReason, VpeEvent};
+use super::vpe::{CallRecord, Vpe};
+
+pub use super::queue::TenantId;
+
+/// How many queued requests past a blocked head the scheduler will
+/// inspect for release (head-of-line bypass).  Small on purpose:
+/// per-tenant order stays almost-FIFO, but a head waiting on a
+/// saturated unit cannot idle the whole tenant.
+const HOL_BYPASS: usize = 4;
+
+/// Floor on the rejection retry hint, ns (1 ms) — before the first
+/// completion there is no smoothed service time to size it from.
+const MIN_RETRY_HINT_NS: u64 = 1_000_000;
+
+#[derive(Debug)]
+struct CompletionCell {
+    ingest_ns: u64,
+    state: Mutex<Option<CallRecord>>,
+    ready: Condvar,
+}
+
+/// Awaitable handle for one submitted call, resolved exactly once at
+/// retirement.  Clones share the same slot; the handle is `Send +
+/// Sync`, so worker threads can poll or block on it while another
+/// thread drives the coordinator.
+///
+/// Retirement happens on the owning [`Vpe`] — some thread must run
+/// [`Vpe::drain`], [`Vpe::retire_next`], or [`Server::pump`] for the
+/// handle to resolve; [`Completion::wait`] on an otherwise idle
+/// coordinator blocks forever.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    cell: Arc<CompletionCell>,
+}
+
+impl Completion {
+    /// A fresh unresolved handle, stamped with its ingest sim time.
+    pub(crate) fn new_at(ingest_ns: u64) -> Self {
+        Completion {
+            cell: Arc::new(CompletionCell {
+                ingest_ns,
+                state: Mutex::new(None),
+                ready: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Sim time the request entered the system (admission for serving,
+    /// submit for [`Vpe::submit_awaitable`]) — the completion-latency
+    /// epoch.
+    pub(crate) fn ingest_ns(&self) -> u64 {
+        self.cell.ingest_ns
+    }
+
+    /// Resolve the handle with the retired call's record and wake every
+    /// waiter.  Called exactly once, by the coordinator, at retirement.
+    pub(crate) fn resolve(&self, record: CallRecord) {
+        let mut slot = self.cell.state.lock().expect("completion lock poisoned");
+        debug_assert!(slot.is_none(), "completion resolved twice");
+        *slot = Some(record);
+        self.cell.ready.notify_all();
+    }
+
+    /// The call's record if it has retired, `None` while in flight.
+    pub fn poll(&self) -> Option<CallRecord> {
+        *self.cell.state.lock().expect("completion lock poisoned")
+    }
+
+    /// Has the call retired yet?
+    pub fn is_done(&self) -> bool {
+        self.poll().is_some()
+    }
+
+    /// Block until the call retires and return its record.  Only
+    /// sensible from a thread that is *not* driving the coordinator.
+    pub fn wait(&self) -> CallRecord {
+        let mut slot = self.cell.state.lock().expect("completion lock poisoned");
+        loop {
+            if let Some(r) = *slot {
+                return r;
+            }
+            slot = self.cell.ready.wait(slot).expect("completion lock poisoned");
+        }
+    }
+}
+
+/// What [`Server::try_submit`] decided about one ingest request.
+#[derive(Debug, Clone)]
+pub enum AdmitOutcome {
+    /// Accepted into the tenant's submission queue; the handle resolves
+    /// when the call retires.
+    Admitted(Completion),
+    /// Rejected by admission control.  `retry_after_ns` is the server's
+    /// hint for when a retry is likely to be admitted (roughly one
+    /// smoothed service time — when the next slot should free).
+    Rejected {
+        /// Which bound the request hit.
+        reason: RejectReason,
+        /// Suggested client backoff before retrying, ns.
+        retry_after_ns: u64,
+    },
+}
+
+/// One accepted request waiting in its tenant's queue.
+#[derive(Debug)]
+struct QueuedReq {
+    function: FunctionId,
+    completion: Completion,
+    /// Admission-time predicted cost on the function's current target,
+    /// ns — the DRR currency and the deadline-preemption trigger.
+    cost_ns: u64,
+}
+
+/// Per-tenant scheduling state.
+#[derive(Debug, Default)]
+struct TenantQueue {
+    q: VecDeque<QueuedReq>,
+    /// Unspent DRR credit, ns of predicted cost.
+    deficit_ns: u64,
+    /// Accepted but not yet completed (queued here + in flight below) —
+    /// the population `tenant_quota` bounds.
+    pending: usize,
+    /// Cumulative predicted cost released into the dispatch queue, ns —
+    /// the fair-share measure (release is what DRR controls; shard
+    /// makespans would undercount a preempted call's consumed
+    /// resource).
+    served_ns: u64,
+}
+
+/// Multi-tenant serving front-end over one [`Vpe`].
+///
+/// The server owns the coordinator.  Ingest threads (or a load
+/// generator) call [`Server::try_submit`]; some driver calls
+/// [`Server::pump`] (or [`Server::run_until_idle`]) to schedule
+/// releases and retire completions.  The whole server is `Send`, so an
+/// `Arc<Mutex<Server>>` shared between ingest threads and a driver
+/// thread works — see the threaded test in this module.
+///
+/// ```
+/// use vpe::coordinator::serving::{AdmitOutcome, Server, TenantId};
+/// use vpe::coordinator::{Vpe, VpeConfig};
+/// use vpe::workloads::WorkloadKind;
+///
+/// let mut vpe = Vpe::new(VpeConfig::sim_only())?;
+/// let f = vpe.register_workload(WorkloadKind::Dotprod)?;
+/// let mut server = Server::new(vpe);
+/// let done = match server.try_submit(TenantId(0), f)? {
+///     AdmitOutcome::Admitted(done) => done,
+///     AdmitOutcome::Rejected { .. } => unreachable!("fresh server admits"),
+/// };
+/// server.run_until_idle()?;
+/// assert_eq!(done.wait().iteration, 1);
+/// # Ok::<(), vpe::Error>(())
+/// ```
+#[derive(Debug)]
+pub struct Server {
+    vpe: Vpe,
+    tenants: BTreeMap<TenantId, TenantQueue>,
+    /// DRR visit rotation, in first-seen order; `next_visit` rotates the
+    /// starting tenant so round boundaries do not favour early tenants.
+    order: Vec<TenantId>,
+    next_visit: usize,
+    /// Accepted but not completed, across all tenants — the population
+    /// `max_inflight_total` bounds.
+    accepted_inflight: usize,
+    rejected: u64,
+    preempted: u64,
+    dispatched: u64,
+    /// EWMA of observed service time (start → complete), ns; sizes the
+    /// rejection retry hint.
+    service_ewma_ns: f64,
+}
+
+impl Server {
+    /// Wrap a coordinator in a serving front-end.  Admission and
+    /// scheduling knobs come from the coordinator's [`VpeConfig`]
+    /// (`max_inflight_total`, `tenant_quota`, `deadline_ns`,
+    /// `drr_quantum_ns`).
+    ///
+    /// [`VpeConfig`]: super::vpe::VpeConfig
+    pub fn new(vpe: Vpe) -> Self {
+        Server {
+            vpe,
+            tenants: BTreeMap::new(),
+            order: Vec::new(),
+            next_visit: 0,
+            accepted_inflight: 0,
+            rejected: 0,
+            preempted: 0,
+            dispatched: 0,
+            service_ewma_ns: 0.0,
+        }
+    }
+
+    /// Offer one call of `f` on behalf of `tenant`.  Either accepts it
+    /// into the tenant's submission queue (returning the awaitable
+    /// [`Completion`]) or rejects it with a retry hint — never blocks,
+    /// never queues without bound.  Errors only on a broken request
+    /// (unknown function).
+    pub fn try_submit(&mut self, tenant: TenantId, f: FunctionId) -> Result<AdmitOutcome> {
+        let cost_ns = self.vpe.predicted_call_ns(f)?.max(1);
+        let (max_total, quota) = {
+            let cfg = self.vpe.config();
+            (cfg.max_inflight_total, cfg.tenant_quota)
+        };
+        if self.accepted_inflight >= max_total {
+            return Ok(self.reject(tenant, f, RejectReason::ServerSaturated));
+        }
+        if self.tenants.get(&tenant).map(|t| t.pending).unwrap_or(0) >= quota {
+            return Ok(self.reject(tenant, f, RejectReason::TenantQuota));
+        }
+        if !self.tenants.contains_key(&tenant) {
+            self.tenants.insert(tenant, TenantQueue::default());
+            self.order.push(tenant);
+        }
+        let completion = Completion::new_at(self.vpe.clock().now_ns());
+        let tq = self.tenants.get_mut(&tenant).expect("inserted above");
+        tq.pending += 1;
+        tq.q.push_back(QueuedReq { function: f, completion: completion.clone(), cost_ns });
+        self.accepted_inflight += 1;
+        self.vpe.note_admitted(tenant, f);
+        Ok(AdmitOutcome::Admitted(completion))
+    }
+
+    fn reject(&mut self, tenant: TenantId, f: FunctionId, reason: RejectReason) -> AdmitOutcome {
+        let retry_after_ns = self.retry_hint_ns();
+        self.rejected += 1;
+        self.vpe.note_rejected(tenant, f, reason, retry_after_ns);
+        AdmitOutcome::Rejected { reason, retry_after_ns }
+    }
+
+    /// One smoothed service time (floor 1 ms): when the next retirement
+    /// should free a slot.
+    fn retry_hint_ns(&self) -> u64 {
+        (self.service_ewma_ns as u64).max(MIN_RETRY_HINT_NS)
+    }
+
+    /// Advance the server one step: schedule releases, retire the
+    /// earliest completion (if any), credit its tenant, and top the
+    /// dispatch queue back up.  Returns the retired record, or `None`
+    /// when the server is idle — by then every tenant queue is empty
+    /// (the scheduler keeps granting credit while work is queued and
+    /// nothing is in flight, so an idle return cannot strand requests).
+    pub fn pump(&mut self) -> Result<Option<CallRecord>> {
+        self.schedule()?;
+        let Some(rec) = self.vpe.retire_next()? else {
+            return Ok(None);
+        };
+        if let Some(t) = rec.tenant {
+            if let Some(tq) = self.tenants.get_mut(&t) {
+                tq.pending = tq.pending.saturating_sub(1);
+            }
+            self.accepted_inflight = self.accepted_inflight.saturating_sub(1);
+            let service = rec.complete_ns.saturating_sub(rec.start_ns) as f64;
+            self.service_ewma_ns = if self.service_ewma_ns > 0.0 {
+                0.9 * self.service_ewma_ns + 0.1 * service
+            } else {
+                service
+            };
+        }
+        self.schedule()?;
+        Ok(Some(rec))
+    }
+
+    /// Pump until every queued and in-flight request has retired;
+    /// returns the records in retirement order.
+    pub fn run_until_idle(&mut self) -> Result<Vec<CallRecord>> {
+        let mut out = Vec::new();
+        while let Some(rec) = self.pump()? {
+            out.push(rec);
+        }
+        debug_assert_eq!(self.queued_total(), 0, "pump drained every tenant queue");
+        Ok(out)
+    }
+
+    /// Deficit-round-robin release loop.  Each round grants every
+    /// backlogged tenant one quantum of predicted-cost credit (capped
+    /// at its head's cost plus one quantum, so a blocked tenant cannot
+    /// bank unbounded credit) and releases the requests the credit
+    /// covers, until the dispatch queue is at capacity or nothing more
+    /// can move.  With work queued and nothing in flight the loop keeps
+    /// granting — no retirement will ever unblock us, so credit must.
+    fn schedule(&mut self) -> Result<()> {
+        let quantum = self.vpe.config().drr_quantum_ns.max(1);
+        let cap = self.dispatch_capacity();
+        loop {
+            let mut released = false;
+            for tenant in self.visit_order() {
+                if self.vpe.in_flight() >= cap {
+                    return Ok(());
+                }
+                self.grant_quantum(tenant, quantum);
+                while let Some(req) = self.take_releasable(tenant) {
+                    self.dispatch_req(tenant, req)?;
+                    released = true;
+                    if self.vpe.in_flight() >= cap {
+                        break;
+                    }
+                }
+            }
+            if released {
+                continue;
+            }
+            if self.vpe.in_flight() == 0 && self.queued_total() > 0 {
+                continue;
+            }
+            return Ok(());
+        }
+    }
+
+    /// Room in the dispatch queue: every target may hold up to the
+    /// per-target bound (the host's FIFO is unbounded, but capping
+    /// total release keeps admission meaningful).
+    fn dispatch_capacity(&self) -> usize {
+        (self.vpe.soc().registry.len() * self.vpe.config().max_queue_per_target).max(1)
+    }
+
+    /// This round's tenant visit order: the rotation advances one slot
+    /// per round so every tenant is first equally often.
+    fn visit_order(&mut self) -> Vec<TenantId> {
+        let n = self.order.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let s = self.next_visit % n;
+        self.next_visit = (self.next_visit + 1) % n;
+        let mut v = Vec::with_capacity(n);
+        v.extend_from_slice(&self.order[s..]);
+        v.extend_from_slice(&self.order[..s]);
+        v
+    }
+
+    fn grant_quantum(&mut self, tenant: TenantId, quantum: u64) {
+        if let Some(tq) = self.tenants.get_mut(&tenant) {
+            match tq.q.front() {
+                Some(head) => {
+                    let cap = head.cost_ns.saturating_add(quantum);
+                    tq.deficit_ns = tq.deficit_ns.saturating_add(quantum).min(cap);
+                }
+                // Idle tenants bank nothing (the classic DRR rule):
+                // fairness is over backlogged tenants only.
+                None => tq.deficit_ns = 0,
+            }
+        }
+    }
+
+    /// Pop the first releasable request within the tenant's bypass
+    /// window: affordable under the deficit, and either its target has
+    /// queue room or the deadline will preempt it into shards (the
+    /// shard planner routes around saturated units itself).  Stops at
+    /// the first unaffordable entry — bypass never skips on *cost*, or
+    /// an expensive head behind cheap tail traffic would starve.
+    fn take_releasable(&mut self, tenant: TenantId) -> Option<QueuedReq> {
+        let bound = self.vpe.config().max_queue_per_target;
+        let mut pick = None;
+        {
+            let tq = self.tenants.get(&tenant)?;
+            for (i, req) in tq.q.iter().take(HOL_BYPASS).enumerate() {
+                if req.cost_ns > tq.deficit_ns {
+                    break;
+                }
+                if self.wants_preempt(req.cost_ns, req.function)
+                    || !self.target_saturated(req.function, bound)
+                {
+                    pick = Some(i);
+                    break;
+                }
+            }
+        }
+        let i = pick?;
+        let tq = self.tenants.get_mut(&tenant).expect("present above");
+        let req = tq.q.remove(i).expect("pick is in range");
+        tq.deficit_ns = tq.deficit_ns.saturating_sub(req.cost_ns);
+        tq.served_ns = tq.served_ns.saturating_add(req.cost_ns);
+        Some(req)
+    }
+
+    /// Will this release go through the deadline-preemption path?
+    fn wants_preempt(&self, cost_ns: u64, f: FunctionId) -> bool {
+        let deadline = self.vpe.config().deadline_ns;
+        deadline > 0
+            && cost_ns > deadline
+            && self.vpe.kind_of(f).map(workloads::shard::shardable).unwrap_or(false)
+    }
+
+    /// Is the function's current target at the per-target bound?  The
+    /// host never saturates (its FIFO is unbounded and never bounces);
+    /// before finalize the dispatch slot points at the host.
+    fn target_saturated(&self, f: FunctionId, bound: usize) -> bool {
+        let target = self.vpe.current_target(f).unwrap_or(TargetId::HOST);
+        !target.is_host() && self.vpe.queue_depth_on(target) >= bound
+    }
+
+    /// Release one request into the dispatch queue, through the shard
+    /// planner when the deadline demands preemption.
+    fn dispatch_req(&mut self, tenant: TenantId, req: QueuedReq) -> Result<()> {
+        if self.wants_preempt(req.cost_ns, req.function) {
+            let deadline_ns = self.vpe.config().deadline_ns;
+            let tickets = self.vpe.submit_sharded_bound(tenant, req.function, &req.completion)?;
+            if tickets.len() > 1 {
+                self.preempted += 1;
+                self.vpe.note_event(VpeEvent::Preempted {
+                    tenant,
+                    function: req.function,
+                    shards: tickets.len(),
+                    predicted_ns: req.cost_ns,
+                    deadline_ns,
+                });
+            }
+        } else {
+            self.vpe.submit_bound(tenant, req.function, &req.completion)?;
+        }
+        self.dispatched += 1;
+        Ok(())
+    }
+
+    // -- observation --------------------------------------------------------
+
+    /// The wrapped coordinator (read-only).
+    pub fn vpe(&self) -> &Vpe {
+        &self.vpe
+    }
+
+    /// The wrapped coordinator, mutably — for registration and
+    /// configuration between serving phases, not for bypassing
+    /// admission mid-run.
+    pub fn vpe_mut(&mut self) -> &mut Vpe {
+        &mut self.vpe
+    }
+
+    /// Unwrap the coordinator (e.g. to render [`Vpe::report`] after a
+    /// load run).
+    pub fn into_vpe(self) -> Vpe {
+        self.vpe
+    }
+
+    /// Accepted-but-not-completed requests across all tenants — always
+    /// `<=` [`VpeConfig::max_inflight_total`].
+    ///
+    /// [`VpeConfig::max_inflight_total`]: super::vpe::VpeConfig::max_inflight_total
+    pub fn accepted_inflight(&self) -> usize {
+        self.accepted_inflight
+    }
+
+    /// Requests waiting in tenant queues (accepted, not yet released).
+    pub fn queued_total(&self) -> usize {
+        self.tenants.values().map(|t| t.q.len()).sum()
+    }
+
+    /// Requests waiting in one tenant's queue.
+    pub fn queued_for(&self, tenant: TenantId) -> usize {
+        self.tenants.get(&tenant).map(|t| t.q.len()).unwrap_or(0)
+    }
+
+    /// Cumulative predicted cost released for `tenant`, ns — the
+    /// fair-share measure the load proof asserts on.
+    pub fn served_ns(&self, tenant: TenantId) -> u64 {
+        self.tenants.get(&tenant).map(|t| t.served_ns).unwrap_or(0)
+    }
+
+    /// Every tenant ever admitted, ascending.
+    pub fn tenants(&self) -> Vec<TenantId> {
+        self.tenants.keys().copied().collect()
+    }
+
+    /// Requests rejected by admission control.
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    /// Released calls preempted into shards by the deadline.
+    pub fn preempted(&self) -> u64 {
+        self.preempted
+    }
+
+    /// Requests released into the dispatch queue.
+    pub fn dispatched(&self) -> u64 {
+        self.dispatched
+    }
+
+    /// Nothing queued and nothing in flight.
+    pub fn is_idle(&self) -> bool {
+        self.queued_total() == 0 && self.vpe.in_flight() == 0
+    }
+
+    /// Advance the sim clock to `at_ns` (see [`Vpe::idle_until`]) —
+    /// load generators idle between bursty arrivals with this.
+    pub fn idle_until(&mut self, at_ns: u64) {
+        self.vpe.idle_until(at_ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::vpe::VpeConfig;
+    use crate::workloads::{PaperScale, WorkloadKind};
+
+    fn assert_send<T: Send>() {}
+    fn assert_sync<T: Sync>() {}
+
+    #[test]
+    fn handles_and_server_cross_threads() {
+        assert_send::<Completion>();
+        assert_sync::<Completion>();
+        assert_send::<Server>();
+    }
+
+    fn serving_vpe(cfg: VpeConfig) -> (Vpe, FunctionId) {
+        let mut vpe = Vpe::new(cfg).unwrap();
+        let f = vpe.register_workload(WorkloadKind::Dotprod).unwrap();
+        (vpe, f)
+    }
+
+    #[test]
+    fn completion_resolves_exactly_once_and_wakes_waiters() {
+        let done = Completion::new_at(42);
+        assert_eq!(done.ingest_ns(), 42);
+        assert!(!done.is_done());
+        assert!(done.poll().is_none());
+        let clone = done.clone();
+        let waiter = std::thread::spawn(move || clone.wait().iteration);
+        // Resolve through a second clone: all clones share the slot.
+        let mut rec_vpe = Vpe::new(VpeConfig::sim_only()).unwrap();
+        let f = rec_vpe.register_workload(WorkloadKind::Dotprod).unwrap();
+        let rec = rec_vpe.call(f).unwrap();
+        done.clone().resolve(rec);
+        assert_eq!(waiter.join().unwrap(), 1);
+        assert_eq!(done.poll().unwrap().iteration, 1);
+    }
+
+    #[test]
+    fn admitted_requests_complete_and_resolve() {
+        let (vpe, f) = serving_vpe(VpeConfig::sim_only());
+        let mut server = Server::new(vpe);
+        let mut handles = Vec::new();
+        for i in 0..10u32 {
+            match server.try_submit(TenantId(i % 2), f).unwrap() {
+                AdmitOutcome::Admitted(done) => handles.push(done),
+                AdmitOutcome::Rejected { .. } => panic!("under every bound"),
+            }
+        }
+        assert_eq!(server.accepted_inflight(), 10);
+        let records = server.run_until_idle().unwrap();
+        assert_eq!(records.len(), 10);
+        assert!(server.is_idle());
+        assert_eq!(server.accepted_inflight(), 0);
+        for done in &handles {
+            assert!(done.is_done());
+        }
+        // Per-tenant stats flowed through to the coordinator.
+        let stats = server.vpe().serving_stats();
+        assert_eq!(stats.len(), 2);
+        for s in stats {
+            assert_eq!(s.submitted, 5);
+            assert_eq!(s.completed, 5);
+            assert_eq!(s.rejected, 0);
+        }
+    }
+
+    #[test]
+    fn saturation_rejects_with_retry_hint() {
+        let mut cfg = VpeConfig::sim_only();
+        cfg.max_inflight_total = 4;
+        let (vpe, f) = serving_vpe(cfg);
+        let mut server = Server::new(vpe);
+        for _ in 0..4 {
+            assert!(matches!(
+                server.try_submit(TenantId(0), f).unwrap(),
+                AdmitOutcome::Admitted(_)
+            ));
+        }
+        match server.try_submit(TenantId(1), f).unwrap() {
+            AdmitOutcome::Rejected { reason, retry_after_ns } => {
+                assert_eq!(reason, RejectReason::ServerSaturated);
+                assert!(retry_after_ns >= MIN_RETRY_HINT_NS);
+            }
+            AdmitOutcome::Admitted(_) => panic!("server is saturated"),
+        }
+        assert_eq!(server.rejected(), 1);
+        assert_eq!(server.vpe().events().rejections().len(), 1);
+        // Completions free slots: after draining, admission reopens.
+        server.run_until_idle().unwrap();
+        assert!(matches!(server.try_submit(TenantId(1), f).unwrap(), AdmitOutcome::Admitted(_)));
+    }
+
+    #[test]
+    fn tenant_quota_rejects_only_the_greedy_tenant() {
+        let mut cfg = VpeConfig::sim_only();
+        cfg.tenant_quota = 2;
+        let (vpe, f) = serving_vpe(cfg);
+        let mut server = Server::new(vpe);
+        for _ in 0..2 {
+            assert!(matches!(
+                server.try_submit(TenantId(7), f).unwrap(),
+                AdmitOutcome::Admitted(_)
+            ));
+        }
+        assert!(matches!(
+            server.try_submit(TenantId(7), f).unwrap(),
+            AdmitOutcome::Rejected { reason: RejectReason::TenantQuota, .. }
+        ));
+        // Another tenant is unaffected by tenant 7's quota.
+        assert!(matches!(server.try_submit(TenantId(8), f).unwrap(), AdmitOutcome::Admitted(_)));
+    }
+
+    #[test]
+    fn drr_interleaves_backlogged_tenants() {
+        let (vpe, f) = serving_vpe(VpeConfig::sim_only());
+        let mut server = Server::new(vpe);
+        // Tenant 0 floods first; tenant 1 arrives second.  Fair
+        // scheduling must still interleave releases instead of serving
+        // tenant 0's whole backlog first.
+        for _ in 0..12 {
+            server.try_submit(TenantId(0), f).unwrap();
+        }
+        for _ in 0..12 {
+            server.try_submit(TenantId(1), f).unwrap();
+        }
+        let records = server.run_until_idle().unwrap();
+        assert_eq!(records.len(), 24);
+        let first_half: Vec<_> = records[..12].iter().filter_map(|r| r.tenant).collect();
+        assert!(
+            first_half.contains(&TenantId(0)) && first_half.contains(&TenantId(1)),
+            "both tenants retire in the first half, got {first_half:?}"
+        );
+        assert_eq!(server.served_ns(TenantId(0)), server.served_ns(TenantId(1)));
+    }
+
+    #[test]
+    fn deadline_preempts_oversized_calls_into_shards() {
+        let mut cfg = VpeConfig::sim_only();
+        cfg.deadline_ns = 1_000_000; // 1 ms: far below the big matmul
+        let mut vpe = Vpe::new(cfg).unwrap();
+        let f = vpe.register_workload(WorkloadKind::Matmul).unwrap();
+        // Price the call far above the deadline so release must shard.
+        vpe.set_scale(f, PaperScale {
+            items: 2_000_000.0,
+            param_bytes: 48,
+            payload_bytes: 1 << 20,
+        })
+        .unwrap();
+        let mut server = Server::new(vpe);
+        let done = match server.try_submit(TenantId(3), f).unwrap() {
+            AdmitOutcome::Admitted(done) => done,
+            AdmitOutcome::Rejected { .. } => panic!("fresh server admits"),
+        };
+        let records = server.run_until_idle().unwrap();
+        assert_eq!(records.len(), 1, "the group retires as one aggregate record");
+        assert!(done.is_done());
+        assert_eq!(server.preempted(), 1);
+        let preemptions = server.vpe().events().preemptions();
+        assert_eq!(preemptions.len(), 1);
+        let (_, tenant, function, shards) = preemptions[0];
+        assert_eq!(tenant, TenantId(3));
+        assert_eq!(function, f);
+        assert!(shards >= 2, "preemption split the call, got {shards} shard(s)");
+    }
+
+    #[test]
+    fn threaded_ingest_through_a_shared_server() {
+        let (vpe, f) = serving_vpe(VpeConfig::sim_only());
+        let server = Arc::new(Mutex::new(Server::new(vpe)));
+        let mut workers = Vec::new();
+        for t in 0..4u32 {
+            let server = Arc::clone(&server);
+            workers.push(std::thread::spawn(move || {
+                let mut handles = Vec::new();
+                for _ in 0..5 {
+                    let outcome =
+                        server.lock().unwrap().try_submit(TenantId(t), f).unwrap();
+                    match outcome {
+                        AdmitOutcome::Admitted(done) => handles.push(done),
+                        AdmitOutcome::Rejected { .. } => panic!("under every bound"),
+                    }
+                }
+                handles
+            }));
+        }
+        let handles: Vec<Completion> =
+            workers.into_iter().flat_map(|w| w.join().unwrap()).collect();
+        assert_eq!(handles.len(), 20);
+        let records = server.lock().unwrap().run_until_idle().unwrap();
+        assert_eq!(records.len(), 20);
+        for done in &handles {
+            assert_eq!(done.poll().unwrap().function, f);
+        }
+    }
+}

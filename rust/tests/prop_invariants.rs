@@ -869,3 +869,212 @@ fn v2_documents_load_with_the_degraded_flag_not_a_parse_error() {
     );
     assert!(out.degraded_fidelity, "replay must surface the degraded fidelity");
 }
+
+// ---------------------------------------------------------------------------
+// Serving front-end (admission, completion handles, DRR fairness)
+// ---------------------------------------------------------------------------
+
+/// A server over one strictly-fastest unit: every function pins to it,
+/// so all tenants contend for the same bottleneck and the fairness
+/// property is about the scheduler, not about load placement.
+fn serving_server(
+    seed: u64,
+    max_inflight_total: usize,
+    tenant_quota: usize,
+) -> (vpe::coordinator::Server, Vec<FunctionId>) {
+    use vpe::coordinator::policy::AlwaysOffloadPolicy;
+    use vpe::coordinator::{Server, VpeConfig};
+    use vpe::platform::{TargetSpec, TransferModel, Transport};
+    use vpe::workloads::PaperScale;
+
+    let mut cfg = VpeConfig::sim_only();
+    cfg.seed = seed;
+    cfg.max_inflight_total = max_inflight_total;
+    cfg.tenant_quota = tenant_quota;
+    let mut v = vpe::coordinator::Vpe::with_policy(cfg, Box::new(AlwaysOffloadPolicy))
+        .expect("vpe");
+    let fast = v.soc_mut().add_target(
+        TargetSpec::new("fast", 1_000_000_000).with_transport(Transport::SharedMemory(
+            TransferModel { dispatch_fixed_ns: 500_000, per_param_byte_ns: 1.0 },
+        )),
+    );
+    let pool = [
+        (WorkloadKind::Dotprod, 5e5),
+        (WorkloadKind::Pattern, 1e6),
+        (WorkloadKind::Conv2d, 2e6),
+    ];
+    for (kind, _) in pool {
+        v.soc_mut().cost.set_rate(kind, fast, 1.0);
+    }
+    let mut fns = Vec::new();
+    for (kind, items) in pool {
+        let f = v.register_workload(kind).expect("register");
+        v.set_scale(f, PaperScale { items, param_bytes: 48, payload_bytes: 4096 })
+            .expect("scale");
+        // Warm-up: the first call profiles on the host and commits the
+        // offload, so serving-path predictions are steady-state.
+        v.call(f).expect("warm-up");
+        assert_eq!(v.current_target(f).expect("target"), fast, "must pin to the fast unit");
+        fns.push(f);
+    }
+    (Server::new(v), fns)
+}
+
+#[test]
+fn prop_serving_admitted_calls_complete_exactly_once() {
+    use vpe::coordinator::serving::{AdmitOutcome, Completion, TenantId};
+
+    prop::check("serving exactly-once completion", 25, |g| {
+        let tenants = g.usize_in(2, 7) as u32;
+        let (mut server, fns) = serving_server(g.u64_in(0, u64::MAX - 1), 10_000, 10_000);
+        let mut handles: Vec<(u32, Completion)> = Vec::new();
+        let mut admitted = vec![0u64; tenants as usize];
+        for _ in 0..g.usize_in(10, 60) {
+            let t = g.u64_in(0, tenants as u64) as u32;
+            let f = *g.choose(&fns);
+            match server.try_submit(TenantId(t), f).map_err(|e| e.to_string())? {
+                AdmitOutcome::Admitted(c) => {
+                    handles.push((t, c));
+                    admitted[t as usize] += 1;
+                }
+                AdmitOutcome::Rejected { .. } => {
+                    return Err("bounds are far above the storm; nothing may reject".into())
+                }
+            }
+            // Occasionally drive the server mid-storm: completions may
+            // resolve before the final drain.
+            if g.bool() {
+                server.pump().map_err(|e| e.to_string())?;
+            }
+        }
+        server.run_until_idle().map_err(|e| e.to_string())?;
+
+        for (t, c) in &handles {
+            let rec = c.poll();
+            assert_prop(c.is_done() && rec.is_some(), "handle left unresolved")?;
+            assert_prop(
+                rec.expect("checked").tenant == Some(TenantId(*t)),
+                "record resolved under the wrong tenant",
+            )?;
+        }
+        for s in server.vpe().serving_stats() {
+            let t = s.tenant.0 as usize;
+            assert_prop(
+                s.submitted == admitted[t] && s.completed == admitted[t] && s.rejected == 0,
+                format!("stats drifted for tenant {t}: {s:?}"),
+            )?;
+        }
+        assert_prop(server.accepted_inflight() == 0, "accepted population must drain to 0")?;
+        assert_prop(server.vpe().in_flight() == 0, "dispatch queue must drain")?;
+        assert_prop(server.vpe().soc().shared.used_bytes() == 0, "staged params leaked")
+    });
+}
+
+#[test]
+fn prop_admission_never_exceeds_the_inflight_bound() {
+    use vpe::coordinator::serving::{AdmitOutcome, TenantId};
+    use vpe::coordinator::RejectReason;
+
+    prop::check("admission bound", 25, |g| {
+        let bound = g.usize_in(2, 13);
+        // Quotas sit far above the server-wide bound: every rejection
+        // in this property must be ServerSaturated.
+        let (mut server, fns) = serving_server(g.u64_in(0, u64::MAX - 1), bound, bound * 8);
+        let mut rejected = 0u64;
+        for i in 0..g.usize_in(2, 5) * bound + bound + 1 {
+            let t = g.u64_in(0, 3) as u32;
+            let f = *g.choose(&fns);
+            match server.try_submit(TenantId(t), f).map_err(|e| e.to_string())? {
+                AdmitOutcome::Admitted(_) => {}
+                AdmitOutcome::Rejected { reason, retry_after_ns } => {
+                    assert_prop(
+                        reason == RejectReason::ServerSaturated,
+                        format!("unexpected reason {reason:?}"),
+                    )?;
+                    assert_prop(retry_after_ns > 0, "retry hint must be positive")?;
+                    rejected += 1;
+                }
+            }
+            assert_prop(
+                server.accepted_inflight() <= bound,
+                format!("{} accepted > bound {bound}", server.accepted_inflight()),
+            )?;
+            // Drain only after the storm has provably overrun the
+            // bound once; then keep the interleaving random.
+            if i > bound && g.bool() {
+                server.pump().map_err(|e| e.to_string())?;
+                assert_prop(server.accepted_inflight() <= bound, "bound broken by pump")?;
+            }
+        }
+        assert_prop(rejected > 0, "storm exceeded the bound yet nothing was rejected")?;
+        server.run_until_idle().map_err(|e| e.to_string())?;
+        assert_prop(server.accepted_inflight() == 0, "must drain")?;
+        // The drained server admits again.
+        let f = *g.choose(&fns);
+        assert_prop(
+            matches!(
+                server.try_submit(TenantId(0), f).map_err(|e| e.to_string())?,
+                AdmitOutcome::Admitted(_)
+            ),
+            "drained server must re-admit",
+        )?;
+        server.run_until_idle().map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_drr_fair_share_lower_bound() {
+    use vpe::coordinator::serving::{AdmitOutcome, TenantId};
+
+    prop::check("DRR fair-share lower bound", 10, |g| {
+        let tenants = g.usize_in(3, 7);
+        let quota = 16usize;
+        let (mut server, fns) = serving_server(g.u64_in(0, u64::MAX - 1), 10_000, quota);
+        let mut admitted = vec![0usize; tenants];
+        let mut completed = vec![0usize; tenants];
+        for _ in 0..g.usize_in(25, 40) {
+            // Keep every tenant topped up to its quota: all of them
+            // stay continuously backlogged.
+            for t in 0..tenants {
+                while admitted[t] - completed[t] < quota {
+                    let f = *g.choose(&fns);
+                    match server.try_submit(TenantId(t as u32), f).map_err(|e| e.to_string())? {
+                        AdmitOutcome::Admitted(_) => admitted[t] += 1,
+                        AdmitOutcome::Rejected { .. } => {
+                            return Err("refill to quota must not reject".into())
+                        }
+                    }
+                }
+            }
+            for _ in 0..8 {
+                match server.pump().map_err(|e| e.to_string())? {
+                    Some(rec) => {
+                        if let Some(TenantId(t)) = rec.tenant {
+                            completed[t as usize] += 1;
+                        }
+                    }
+                    None => break,
+                }
+            }
+        }
+        // Every tenant is still backlogged, so DRR owes each an equal
+        // share of released cost — within one call of granularity.
+        for t in 0..tenants {
+            assert_prop(
+                server.queued_for(TenantId(t as u32)) > 0,
+                format!("tenant {t} ran dry; the share bound would be vacuous"),
+            )?;
+        }
+        let served: Vec<u64> =
+            (0..tenants).map(|t| server.served_ns(TenantId(t as u32))).collect();
+        let mean = served.iter().sum::<u64>() as f64 / tenants as f64;
+        let min = *served.iter().min().expect("nonempty") as f64;
+        assert_prop(
+            min >= 0.5 * mean,
+            format!("fair share violated: min {min} < half of mean {mean} ({served:?})"),
+        )?;
+        server.run_until_idle().map_err(|e| e.to_string())?;
+        assert_prop(server.vpe().in_flight() == 0, "must drain")
+    });
+}
