@@ -1,0 +1,190 @@
+//! big.LITTLE divergence proof — the energy axis's acceptance example.
+//!
+//! A heterogeneous platform where *no single placement is best*: a
+//! hungry out-of-order "big" core (6x the host's speed at 5 W), a
+//! frugal in-order "little" core (2x at 1 W), the calibrated DSP
+//! (fast but 3 W), and the 2 W ARM host.  The same hot matmul is run
+//! three times under three objectives, and the runs must disagree:
+//!
+//! - **latency** ([`BlindOffloadPolicy`]) races to the big core;
+//! - **energy** ([`EnergyPolicy`]) settles on the little core — it is
+//!   3x slower than big, but per call it burns 1 W x 138 ms = 138 mJ
+//!   against big's 5 W x 46 ms = 230 mJ;
+//! - **EDP** ([`EdpPolicy`]) lands back on the big core: the delay
+//!   factor punishes little's slowness more than its frugality helps.
+//!
+//! Each run records a v4 trace; replaying it under the *same* policy
+//! must reproduce the recorded decision sequence, total nanoseconds
+//! and total nanojoules exactly (the trace carries the power-model
+//! header, per-entry joules and the priced host baseline).  A what-if
+//! table then re-prices the latency-optimal recording under every
+//! objective, side by side in ms and mJ.
+//!
+//! Emits `BENCH_energy.json` — placements, totals and replay-exactness
+//! per objective, diffable across PRs (CI uploads it per run).
+//!
+//! `cargo run --release --example big_little`
+
+use vpe::coordinator::policies_ext::{EdpPolicy, EnergyPolicy, EnergyPolicyConfig};
+use vpe::coordinator::policy::{BlindOffloadPolicy, OffloadPolicy};
+use vpe::coordinator::trace::{replay, Trace};
+use vpe::coordinator::{Vpe, VpeConfig};
+use vpe::platform::{dm3730, PowerModel, TargetId, TargetSpec, TransferModel, Transport};
+use vpe::workloads::WorkloadKind;
+
+/// Hot-loop iterations per objective run (enough to profile, decide
+/// and settle into steady state).
+const ITERS: usize = 40;
+
+/// The asymmetric cores: (name, host-rate divisor, active W, idle W).
+/// Rates divide the host's per-item cost, so big finishes a call ~6x
+/// sooner than the host while drawing 5x the little core's power.
+const CORES: [(&str, f64, u64, u64); 2] =
+    [("big-core", 6.0, 5, 0), ("little-core", 2.0, 1, 0)];
+
+/// One big.LITTLE coordinator: host + DSP powered, big/little added
+/// with their own rates, transports and power models.
+fn build_platform(policy: Box<dyn OffloadPolicy>) -> vpe::Result<(Vpe, [TargetId; 2])> {
+    let mut vpe = Vpe::with_policy(VpeConfig::sim_only(), policy)?;
+    vpe.soc_mut().registry.get_mut(dm3730::ARM)?.power = PowerModel::new(2, 0);
+    vpe.soc_mut().registry.get_mut(dm3730::DSP)?.power = PowerModel::new(3, 0);
+    let host_rate = vpe
+        .soc()
+        .cost
+        .rate_ns(WorkloadKind::Matmul, dm3730::ARM)
+        .expect("the host prices every paper workload");
+    let mut ids = [dm3730::ARM; 2];
+    for (i, (name, divisor, active, idle)) in CORES.into_iter().enumerate() {
+        let id = vpe.soc_mut().add_target(
+            TargetSpec::new(name, 1_500_000_000).with_transport(Transport::SharedMemory(
+                TransferModel { dispatch_fixed_ns: 1_500_000, per_param_byte_ns: 1.0 },
+            )),
+        );
+        vpe.soc_mut().registry.get_mut(id)?.power = PowerModel::new(active, idle);
+        vpe.soc_mut().cost.set_rate(WorkloadKind::Matmul, id, host_rate / divisor);
+        ids[i] = id;
+    }
+    Ok((vpe, ids))
+}
+
+/// Run the hot matmul under one objective's policy with tracing on;
+/// return the settled placement, the recorded trace and the live
+/// joules charged across the platform.
+fn run_objective(policy: Box<dyn OffloadPolicy>) -> vpe::Result<(TargetId, Trace, u64)> {
+    let (mut vpe, _) = build_platform(policy)?;
+    vpe.enable_tracing();
+    let f = vpe.register_workload(WorkloadKind::Matmul)?;
+    vpe.run(f, ITERS)?;
+    let placed = vpe.current_target(f)?;
+    let trace = vpe.trace().expect("tracing enabled").clone();
+    Ok((placed, trace, vpe.total_energy_nj()))
+}
+
+/// Same-policy replay: must reproduce the recorded decision sequence,
+/// nanoseconds and nanojoules bit-for-bit.
+fn assert_exact_replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> (f64, f64) {
+    let out = replay(trace, policy);
+    assert_eq!(out.diverged(), 0, "{}", out.divergence_report());
+    assert_eq!(out.total_ns, trace.total_ns(), "replayed ns must match the recording");
+    assert_eq!(
+        out.total_energy_nj,
+        trace.total_energy_nj(),
+        "replayed joules must match the recording"
+    );
+    (out.total_ms, out.total_energy_nj as f64 / 1e6)
+}
+
+fn main() -> vpe::Result<()> {
+    println!("== big.LITTLE: one workload, three objectives, three answers ==");
+    println!("   (big 6x @ 5 W / little 2x @ 1 W / DSP @ 3 W / host @ 2 W)\n");
+
+    let cfg = EnergyPolicyConfig::default();
+    let runs: [(&str, Box<dyn OffloadPolicy>); 3] = [
+        ("latency", Box::<BlindOffloadPolicy>::default()),
+        ("energy", Box::new(EnergyPolicy::new(cfg))),
+        ("edp", Box::new(EdpPolicy::new(cfg))),
+    ];
+    let mut placements: Vec<(String, TargetId, Trace, u64)> = Vec::new();
+    for (objective, policy) in runs {
+        let (placed, trace, live_nj) = run_objective(policy)?;
+        placements.push((objective.to_string(), placed, trace, live_nj));
+    }
+
+    // Names for printing, from any one of the (identical) platforms.
+    let (probe, [big, little]) = build_platform(Box::<BlindOffloadPolicy>::default())?;
+    let name = |id: TargetId| probe.soc().registry.get(id).map(|s| s.name.clone());
+
+    println!("objective   settled on      recorded ms  recorded mJ  replay");
+    let mut rows: Vec<String> = Vec::new();
+    for (objective, placed, trace, live_nj) in &placements {
+        let mut fresh: Box<dyn OffloadPolicy> = match objective.as_str() {
+            "latency" => Box::<BlindOffloadPolicy>::default(),
+            "energy" => Box::new(EnergyPolicy::new(cfg)),
+            _ => Box::new(EdpPolicy::new(cfg)),
+        };
+        let (ms, mj) = assert_exact_replay(trace, fresh.as_mut());
+        println!(
+            "{objective:<11} {:<15} {ms:>11.1} {mj:>12.3}  exact",
+            name(*placed)?
+        );
+        rows.push(format!(
+            "    {{\"objective\": \"{objective}\", \"placement\": \"{}\", \
+             \"total_ms\": {ms:.3}, \"total_mj\": {mj:.3}, \
+             \"live_total_mj\": {:.3}, \"replay_exact\": true}}",
+            name(*placed)?,
+            *live_nj as f64 / 1e6,
+        ));
+    }
+
+    // The headline divergence: minimizing time and minimizing joules
+    // pick different silicon for the same call stream.
+    let by = |o: &str| placements.iter().find(|(n, ..)| n == o).unwrap().1;
+    assert_eq!(by("latency"), big, "latency must race to the big core");
+    assert_eq!(by("energy"), little, "energy must settle on the little core");
+    assert_ne!(
+        by("latency"),
+        by("energy"),
+        "the two objectives must disagree on placement"
+    );
+    assert_eq!(by("edp"), big, "EDP weighs little's slowness over its frugality");
+
+    // What-if: the latency-optimal recording re-priced under every
+    // objective (counterfactual rows use the trace's power header).
+    println!("\nwhat-if over the latency-optimal recording:");
+    println!("{:<18} {:>12} {:>12} {:>9}", "policy", "total ms", "total mJ", "diverged");
+    let latency_trace = &placements[0].2;
+    let mut whatif: Vec<Box<dyn OffloadPolicy>> = vec![
+        Box::<BlindOffloadPolicy>::default(),
+        Box::new(EnergyPolicy::new(cfg)),
+        Box::new(EdpPolicy::new(cfg)),
+    ];
+    for p in whatif.iter_mut() {
+        let o = replay(latency_trace, p.as_mut());
+        println!(
+            "{:<18} {:>12.1} {:>12.3} {:>9}",
+            o.policy,
+            o.total_ms,
+            o.total_energy_nj as f64 / 1e6,
+            o.diverged()
+        );
+    }
+
+    let bench = format!(
+        "{{\n  \"example\": \"big_little\",\n  \"iters\": {ITERS},\n  \"runs\": [\n{}\n  ],\n  \
+         \"divergence\": \"latency={} energy={} edp={}\"\n}}\n",
+        rows.join(",\n"),
+        name(by("latency"))?,
+        name(by("energy"))?,
+        name(by("edp"))?,
+    );
+    std::fs::write("BENCH_energy.json", &bench)?;
+    println!("\nwrote BENCH_energy.json");
+    println!(
+        "\nsame calls, three answers: latency -> {}, energy -> {}, EDP -> {}; every \
+         recording replayed to its exact nanoseconds and nanojoules.",
+        name(by("latency"))?,
+        name(by("energy"))?,
+        name(by("edp"))?
+    );
+    Ok(())
+}

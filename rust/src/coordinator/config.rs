@@ -8,9 +8,11 @@
 use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
+use crate::platform::{FreqState, PowerModel};
 use crate::util::json::{self, Json};
 
 use super::policy::BlindOffloadConfig;
+use super::shard::Objective;
 use super::vpe::VpeConfig;
 
 fn f64_of(j: &Json, key: &str) -> Result<Option<f64>> {
@@ -99,6 +101,29 @@ pub fn apply(base: VpeConfig, doc: &Json) -> Result<VpeConfig> {
         }
         cfg.drr_quantum_ns = v;
     }
+    if let Some(v) = u64_of(doc, "drr_quantum_nj")? {
+        if v == 0 {
+            return Err(Error::Config("'drr_quantum_nj' must be >= 1".into()));
+        }
+        cfg.drr_quantum_nj = Some(v);
+    }
+    if let Some(v) = u64_of(doc, "tenant_energy_budget_nj")? {
+        if v == 0 {
+            return Err(Error::Config("'tenant_energy_budget_nj' must be >= 1".into()));
+        }
+        cfg.tenant_energy_budget_nj = Some(v);
+    }
+    if let Some(v) = doc.get("objective") {
+        let name = v
+            .as_str()
+            .ok_or_else(|| Error::Config("'objective' must be a string".into()))?;
+        cfg.objective = Objective::parse(name).ok_or_else(|| {
+            Error::Config("'objective' must be \"latency\", \"energy\" or \"edp\"".into())
+        })?;
+    }
+    if let Some(p) = doc.get("power") {
+        cfg.power = Some(power_of(p)?);
+    }
     if let Some(s) = doc.get("sampler") {
         if let Some(v) = bool_of(s, "enabled")? {
             cfg.sampler.enabled = v;
@@ -146,6 +171,51 @@ pub fn apply(base: VpeConfig, doc: &Json) -> Result<VpeConfig> {
     Ok(cfg)
 }
 
+/// Parse a `"power"` object: `active_watts` (required, >= 1 after
+/// rounding), optional `idle_watts` (>= 0), optional `freq_states`
+/// (array of `{"freq_scale", "power_scale"}`, both positive) and
+/// `freq_state` (index of the operating point to select).
+fn power_of(p: &Json) -> Result<PowerModel> {
+    let active = f64_of(p, "active_watts")?
+        .ok_or_else(|| Error::Config("'power' requires 'active_watts'".into()))?;
+    // Validate the f64 before the cast: a negative number cast to u64
+    // would silently become 0.
+    if active < 1.0 {
+        return Err(Error::Config("'active_watts' must be >= 1".into()));
+    }
+    let idle = f64_of(p, "idle_watts")?.unwrap_or(0.0);
+    if idle < 0.0 {
+        return Err(Error::Config("'idle_watts' must be >= 0".into()));
+    }
+    let mut model = PowerModel::new(active as u64, idle as u64);
+    if let Some(states) = p.get("freq_states") {
+        let arr = states
+            .as_arr()
+            .ok_or_else(|| Error::Config("'freq_states' must be an array".into()))?;
+        let parsed = arr
+            .iter()
+            .map(|s| -> Result<FreqState> {
+                let freq = f64_of(s, "freq_scale")?
+                    .ok_or_else(|| Error::Config("freq state requires 'freq_scale'".into()))?;
+                let power = f64_of(s, "power_scale")?
+                    .ok_or_else(|| Error::Config("freq state requires 'power_scale'".into()))?;
+                if freq <= 0.0 || power <= 0.0 {
+                    return Err(Error::Config(
+                        "'freq_scale' and 'power_scale' must be > 0".into(),
+                    ));
+                }
+                Ok(FreqState { freq_scale: freq, power_scale: power })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let current = u64_of(p, "freq_state")?.unwrap_or(0) as usize;
+        if !parsed.is_empty() && current >= parsed.len() {
+            return Err(Error::Config("'freq_state' is out of range".into()));
+        }
+        model = model.with_freq_states(parsed, current);
+    }
+    Ok(model)
+}
+
 /// Load a config file on top of the defaults.
 pub fn load(path: &Path) -> Result<VpeConfig> {
     let doc = json::parse(&std::fs::read_to_string(path)?)?;
@@ -173,6 +243,13 @@ mod tests {
             "tenant_quota": 16,
             "deadline_ns": 250000000,
             "drr_quantum_ns": 5000000,
+            "drr_quantum_nj": 20000000,
+            "tenant_energy_budget_nj": 4000000000,
+            "objective": "edp",
+            "power": {"active_watts": 4, "idle_watts": 1,
+                      "freq_states": [{"freq_scale": 1.0, "power_scale": 1.0},
+                                      {"freq_scale": 0.5, "power_scale": 0.3}],
+                      "freq_state": 1},
             "sampler": {"enabled": true, "overhead_frac": 0.10,
                         "analysis_period": 4, "burst_mean_ms": 50, "burst_std_ms": 10},
             "detector": {"min_samples": 3, "share_threshold": 0.25},
@@ -194,6 +271,14 @@ mod tests {
         assert_eq!(cfg.tenant_quota, 16);
         assert_eq!(cfg.deadline_ns, 250_000_000);
         assert_eq!(cfg.drr_quantum_ns, 5_000_000);
+        assert_eq!(cfg.drr_quantum_nj, Some(20_000_000));
+        assert_eq!(cfg.tenant_energy_budget_nj, Some(4_000_000_000));
+        assert_eq!(cfg.objective, Objective::Edp);
+        let power = cfg.power.as_ref().unwrap();
+        assert_eq!(power.active_watts, 4);
+        assert_eq!(power.idle_watts, 1);
+        assert_eq!(power.current, 1);
+        assert_eq!(power.state().freq_scale, 0.5);
         assert_eq!(cfg.sampler.overhead_frac, 0.10);
         assert_eq!(cfg.sampler.analysis_period, 4);
         assert_eq!(cfg.sampler.burst_mean_ns, 50e6);
@@ -237,6 +322,35 @@ mod tests {
         // A zero deadline is legal: it disables preemption.
         let doc = json::parse(r#"{"deadline_ns": 0}"#).unwrap();
         assert_eq!(apply(VpeConfig::default(), &doc).unwrap().deadline_ns, 0);
+    }
+
+    #[test]
+    fn power_and_objective_bounds_enforced() {
+        for bad in [
+            // Non-positive watts must be rejected on the f64, before
+            // the cast can silently turn a negative into 0.
+            r#"{"power": {"active_watts": 0}}"#,
+            r#"{"power": {"active_watts": -3}}"#,
+            r#"{"power": {"active_watts": 2, "idle_watts": -1}}"#,
+            r#"{"power": {}}"#,
+            r#"{"power": {"active_watts": 2,
+                "freq_states": [{"freq_scale": 0, "power_scale": 1}]}}"#,
+            r#"{"power": {"active_watts": 2,
+                "freq_states": [{"freq_scale": 1, "power_scale": 1}], "freq_state": 5}}"#,
+            r#"{"objective": "speed"}"#,
+            r#"{"objective": 3}"#,
+            r#"{"drr_quantum_nj": 0}"#,
+            r#"{"tenant_energy_budget_nj": 0}"#,
+        ] {
+            let doc = json::parse(bad).unwrap();
+            assert!(apply(VpeConfig::default(), &doc).is_err(), "{bad} must be rejected");
+        }
+        // Minimal valid power object: idle and DVFS default.
+        let doc = json::parse(r#"{"power": {"active_watts": 2}}"#).unwrap();
+        let cfg = apply(VpeConfig::default(), &doc).unwrap();
+        let power = cfg.power.unwrap();
+        assert_eq!((power.active_watts, power.idle_watts), (2, 0));
+        assert_eq!(power.state(), FreqState::nominal());
     }
 
     #[test]

@@ -18,6 +18,11 @@ pub enum RejectReason {
     ServerSaturated,
     /// The tenant's own pending population reached `tenant_quota`.
     TenantQuota,
+    /// The tenant's cumulative charged energy reached
+    /// `tenant_energy_budget_nj` — admission stays closed until the
+    /// operator raises the budget (energy is spent, not in flight, so
+    /// completions cannot reopen it).
+    TenantEnergyBudget,
 }
 
 /// Why a function was sent back to the host.

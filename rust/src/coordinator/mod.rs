@@ -14,8 +14,9 @@ pub mod trace;
 pub mod vpe;
 
 pub use events::{EventLog, RejectReason, VpeEvent};
+pub use policies_ext::{EdpPolicy, EnergyPolicy, EnergyPolicyConfig};
 pub use policy::{BlindOffloadPolicy, Candidate, OffloadPolicy, PolicyAction};
 pub use queue::{DispatchQueue, TenantId, TicketId};
 pub use serving::{AdmitOutcome, Completion, Server};
-pub use shard::{PlanTarget, PlannedShard, ShardPlan};
+pub use shard::{Objective, PlanTarget, PlannedShard, ShardPlan};
 pub use vpe::{CallRecord, TenantServingStats, Vpe, VpeConfig};

@@ -16,6 +16,12 @@
 //! - [`EpsilonGreedyPolicy`] — a bandit baseline: explores all arms
 //!   (host + every candidate) forever with probability epsilon,
 //!   exploits the best measured mean otherwise.
+//! - [`EnergyPolicy`] / [`EdpPolicy`] — the second cost axis (HPA,
+//!   arXiv 1511.08635, re-targets the same profile-and-dispatch loop at
+//!   joules): place the hottest function where it burns the fewest
+//!   nanojoules, or where the energy-delay product is smallest.  On a
+//!   big.LITTLE-style platform these genuinely disagree with the
+//!   latency policies — see `examples/big_little.rs`.
 
 use std::collections::HashMap;
 
@@ -318,6 +324,137 @@ impl OffloadPolicy for FanOutPolicy {
 }
 
 // ---------------------------------------------------------------------------
+// Energy / EDP (the second cost axis)
+// ---------------------------------------------------------------------------
+
+/// Configuration shared by [`EnergyPolicy`] and [`EdpPolicy`].
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyPolicyConfig {
+    /// Host samples to observe before acting.
+    pub observe_window: u64,
+    /// A remote unit wins the slot when its score is strictly below
+    /// `host_score * margin` (1.0 = any strict win; below 1.0 demands
+    /// a real gap before paying the migration).
+    pub margin: f64,
+}
+
+impl Default for EnergyPolicyConfig {
+    fn default() -> Self {
+        EnergyPolicyConfig { observe_window: 5, margin: 1.0 }
+    }
+}
+
+/// Race-to-frugal: place the hottest function on the unit that burns
+/// the fewest nanojoules per call (amortized batching included),
+/// keeping it home when the host is the cheapest in joules.  Decides
+/// once per function; a forced revert (unit failure) reopens the
+/// decision.  Needs [`PolicyCtx::host`] priced — without a host row
+/// there is no energy baseline to beat, so it holds off.
+#[derive(Debug, Default)]
+pub struct EnergyPolicy {
+    cfg: EnergyPolicyConfig,
+    decided: HashMap<FunctionId, bool>,
+}
+
+impl EnergyPolicy {
+    /// A policy with the given window/margin configuration.
+    pub fn new(cfg: EnergyPolicyConfig) -> Self {
+        EnergyPolicy { cfg, decided: HashMap::new() }
+    }
+}
+
+impl OffloadPolicy for EnergyPolicy {
+    fn name(&self) -> &'static str {
+        "energy"
+    }
+
+    fn decide(&mut self, ctx: &PolicyCtx<'_>) -> Option<PolicyAction> {
+        if self.decided.contains_key(&ctx.function) {
+            return None;
+        }
+        if ctx.is_hotspot.is_none()
+            || ctx.profile.count_on(TargetId::HOST) < self.cfg.observe_window
+        {
+            return None;
+        }
+        let host = ctx.host?;
+        let best = ctx
+            .candidates
+            .iter()
+            .min_by_key(|c| (c.amortized_energy_nj, c.target))?;
+        self.decided.insert(ctx.function, true);
+        if (best.amortized_energy_nj as f64)
+            < host.predicted_energy_nj as f64 * self.cfg.margin
+        {
+            Some(PolicyAction::Offload { to: best.target })
+        } else {
+            None
+        }
+    }
+
+    fn on_forced_revert(&mut self, f: FunctionId) {
+        self.decided.remove(&f);
+    }
+}
+
+/// Energy-delay product of one placement: ns × nJ, widened so the
+/// product of two u64 prices cannot overflow.
+fn edp(ns: u64, nj: u64) -> u128 {
+    ns as u128 * nj as u128
+}
+
+/// Minimize the energy-delay product (EDP): the classic compromise
+/// metric — a unit that is 3× slower but 4× more frugal wins on energy
+/// yet loses on EDP, so this policy lands between [`EnergyPolicy`] and
+/// the latency-only rankers.  Same lifecycle as [`EnergyPolicy`].
+#[derive(Debug, Default)]
+pub struct EdpPolicy {
+    cfg: EnergyPolicyConfig,
+    decided: HashMap<FunctionId, bool>,
+}
+
+impl EdpPolicy {
+    /// A policy with the given window/margin configuration.
+    pub fn new(cfg: EnergyPolicyConfig) -> Self {
+        EdpPolicy { cfg, decided: HashMap::new() }
+    }
+}
+
+impl OffloadPolicy for EdpPolicy {
+    fn name(&self) -> &'static str {
+        "edp"
+    }
+
+    fn decide(&mut self, ctx: &PolicyCtx<'_>) -> Option<PolicyAction> {
+        if self.decided.contains_key(&ctx.function) {
+            return None;
+        }
+        if ctx.is_hotspot.is_none()
+            || ctx.profile.count_on(TargetId::HOST) < self.cfg.observe_window
+        {
+            return None;
+        }
+        let host = ctx.host?;
+        let best = ctx
+            .candidates
+            .iter()
+            .min_by_key(|c| (edp(c.amortized_ns, c.amortized_energy_nj), c.target))?;
+        self.decided.insert(ctx.function, true);
+        let host_edp = edp(host.predicted_ns, host.predicted_energy_nj);
+        let best_edp = edp(best.amortized_ns, best.amortized_energy_nj);
+        if (best_edp as f64) < host_edp as f64 * self.cfg.margin {
+            Some(PolicyAction::Offload { to: best.target })
+        } else {
+            None
+        }
+    }
+
+    fn on_forced_revert(&mut self, f: FunctionId) {
+        self.decided.remove(&f);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Epsilon-greedy bandit
 // ---------------------------------------------------------------------------
 
@@ -434,6 +571,7 @@ mod tests {
             current,
             is_hotspot: hotspot,
             candidates,
+            host: None,
             op_mix,
             loop_depth,
         }
@@ -582,15 +720,86 @@ mod tests {
         let hot = Some(Hotspot { function: f, cycle_share: 0.9 });
         let cands = vec![
             Candidate::uniform(dm3730::DSP, 1000),
-            Candidate {
-                target: TargetId(2),
-                predicted_ns: 101_000, // ~all fixed setup when dispatched alone
-                amortized_ns: 1500,    // comparable once the setup coalesces
-            },
+            // ~all fixed setup when dispatched alone, comparable once
+            // the setup coalesces (1 W: joules track the ns prices).
+            Candidate::priced(TargetId(2), 101_000, 1500, 1),
         ];
         let p = profile_with(&[100.0; 6], &[]);
         let c = ctx(f, &p, TargetId::HOST, hot, &cands, OpMix::integer_loop(), 1);
         assert_eq!(pol.decide(&c), Some(PolicyAction::FanOut { width: 2 }));
+    }
+
+    /// A big.LITTLE-style choice: a fast hungry unit against a slower
+    /// frugal one, with a mid-power host baseline that both beat.
+    /// big: 1 ms at 4 W (4 mJ, EDP 4e12); LITTLE: 3 ms at 1 W (3 mJ,
+    /// EDP 9e12); host: 10 ms at 2 W (20 mJ, EDP 2e14).
+    fn big_little_cands() -> (Vec<Candidate>, Candidate) {
+        let big = Candidate::priced(dm3730::DSP, 1_000_000, 1_000_000, 4);
+        let little = Candidate::priced(TargetId(2), 3_000_000, 3_000_000, 1);
+        let host = Candidate::priced(TargetId::HOST, 10_000_000, 10_000_000, 2);
+        (vec![big, little], host)
+    }
+
+    #[test]
+    fn energy_and_edp_policies_pick_different_clusters() {
+        let f = FunctionId(0);
+        let hot = Some(Hotspot { function: f, cycle_share: 0.9 });
+        let (cands, host) = big_little_cands();
+        let p = profile_with(&[10_000_000.0; 6], &[]);
+        let mut c = ctx(f, &p, TargetId::HOST, hot, &cands, OpMix::integer_loop(), 1);
+        c.host = Some(host);
+        // Fewest joules: the LITTLE cluster (3 mJ < 4 mJ).
+        let mut energy = EnergyPolicy::default();
+        assert_eq!(energy.decide(&c), Some(PolicyAction::Offload { to: TargetId(2) }));
+        assert_eq!(energy.decide(&c), None, "one decision per function");
+        // Smallest energy-delay product: the big cluster (4e12 < 9e12).
+        let mut edp_pol = EdpPolicy::default();
+        assert_eq!(edp_pol.decide(&c), Some(PolicyAction::Offload { to: dm3730::DSP }));
+    }
+
+    #[test]
+    fn energy_policy_stays_home_when_the_host_is_frugal() {
+        let f = FunctionId(0);
+        let hot = Some(Hotspot { function: f, cycle_share: 0.9 });
+        // Remote is faster but burns more: 1 ms × 4 W = 4 mJ vs the
+        // host's 2 ms × 1 W = 2 mJ.
+        let cands = vec![Candidate::priced(dm3730::DSP, 1_000_000, 1_000_000, 4)];
+        let p = profile_with(&[2_000_000.0; 6], &[]);
+        let mut c = ctx(f, &p, TargetId::HOST, hot, &cands, OpMix::integer_loop(), 1);
+        c.host = Some(Candidate::priced(TargetId::HOST, 2_000_000, 2_000_000, 1));
+        let mut pol = EnergyPolicy::default();
+        assert_eq!(pol.decide(&c), None);
+    }
+
+    #[test]
+    fn energy_policies_hold_off_without_a_priced_host() {
+        // No host row -> no baseline -> no decision burned.
+        let f = FunctionId(0);
+        let hot = Some(Hotspot { function: f, cycle_share: 0.9 });
+        let (cands, host) = big_little_cands();
+        let p = profile_with(&[10_000_000.0; 6], &[]);
+        let c = ctx(f, &p, TargetId::HOST, hot, &cands, OpMix::integer_loop(), 1);
+        let mut pol = EnergyPolicy::default();
+        assert_eq!(pol.decide(&c), None);
+        // Once the host is priced, the decision still fires.
+        let mut c = c;
+        c.host = Some(host);
+        assert!(pol.decide(&c).is_some());
+    }
+
+    #[test]
+    fn forced_revert_reopens_energy_decisions() {
+        let f = FunctionId(0);
+        let hot = Some(Hotspot { function: f, cycle_share: 0.9 });
+        let (cands, host) = big_little_cands();
+        let p = profile_with(&[10_000_000.0; 6], &[]);
+        let mut c = ctx(f, &p, TargetId::HOST, hot, &cands, OpMix::integer_loop(), 1);
+        c.host = Some(host);
+        let mut pol = EnergyPolicy::default();
+        assert!(pol.decide(&c).is_some());
+        assert_eq!(pol.decide(&c), None);
+        pol.on_forced_revert(f);
+        assert!(pol.decide(&c).is_some(), "failure must reopen the decision");
     }
 
     #[test]

@@ -36,16 +36,43 @@ pub struct Candidate {
     /// viable when its queue traffic coalesces.  Equals `predicted_ns`
     /// for the host-adjacent case of no batching (width 1).
     pub amortized_ns: u64,
+    /// Energy of one lone call: `predicted_ns` times the unit's
+    /// effective active draw, nanojoules (1 W = 1 nJ/ns).  The second
+    /// cost axis — [`super::policies_ext::EnergyPolicy`] and
+    /// [`super::policies_ext::EdpPolicy`] rank on it.
+    pub predicted_energy_nj: u64,
+    /// Energy of one call at steady-state batching (`amortized_ns`
+    /// times effective active draw), nanojoules.
+    pub amortized_energy_nj: u64,
 }
 
 impl Candidate {
-    /// A candidate with no batching upside (amortized == predicted) —
-    /// used by tests that predate batching and by replay of *degraded*
-    /// (pre-v3) traces; v3 traces record the live candidate slice with
-    /// its true amortized prices, so replay ranks exactly what the
-    /// recording policy saw.
+    /// A candidate with no batching upside (amortized == predicted) and
+    /// the default 1 W power model (joules numerically equal ns) — used
+    /// by tests that predate batching and by replay of *degraded*
+    /// (pre-v3/pre-v4) traces; v3+ traces record the live candidate
+    /// slice with its true amortized prices, so replay ranks exactly
+    /// what the recording policy saw.
     pub fn uniform(target: TargetId, predicted_ns: u64) -> Self {
-        Candidate { target, predicted_ns, amortized_ns: predicted_ns }
+        Candidate {
+            target,
+            predicted_ns,
+            amortized_ns: predicted_ns,
+            predicted_energy_nj: predicted_ns,
+            amortized_energy_nj: predicted_ns,
+        }
+    }
+
+    /// A candidate priced on both axes from an effective active draw:
+    /// energy is the exact product of each ns price and `watts`.
+    pub fn priced(target: TargetId, predicted_ns: u64, amortized_ns: u64, watts: u64) -> Self {
+        Candidate {
+            target,
+            predicted_ns,
+            amortized_ns,
+            predicted_energy_nj: predicted_ns.saturating_mul(watts),
+            amortized_energy_nj: amortized_ns.saturating_mul(watts),
+        }
     }
 }
 
@@ -64,6 +91,12 @@ pub struct PolicyCtx<'a> {
     /// build exists, the cost model has a row), ranked best-first by
     /// predicted cost.  Empty means there is nowhere to offload.
     pub candidates: &'a [Candidate],
+    /// The host priced as a candidate row (slot 0, no transport
+    /// overhead, its own power model), when the cost model can price
+    /// it.  Energy-aware policies compare remote joules against this
+    /// instead of the measured host mean, so both sides of the
+    /// comparison carry the same two cost axes.
+    pub host: Option<Candidate>,
     /// Compile-time metadata from the JIT module (static policies —
     /// the BAAR-like [`super::policies_ext::PredictivePolicy`] — decide
     /// on this alone).
@@ -336,6 +369,7 @@ mod tests {
             current,
             is_hotspot: hotspot,
             candidates,
+            host: None,
             op_mix: OpMix::integer_loop(),
             loop_depth: 1,
         }

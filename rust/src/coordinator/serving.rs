@@ -13,13 +13,19 @@
 //!   wait in their tenant's FIFO; each scheduling round grants every
 //!   backlogged tenant a quantum of predicted-cost credit and releases
 //!   requests the credit covers, so one tenant's flood cannot starve
-//!   the rest (fair share is proportional, not first-come).
+//!   the rest (fair share is proportional, not first-come).  With
+//!   [`VpeConfig::drr_quantum_nj`] set the credit currency switches
+//!   from predicted nanoseconds to predicted nano*joules*, so fairness
+//!   divides the platform's energy instead of its time.
 //! - **Admission control** — instead of queueing without bound, the
 //!   server rejects new work once the accepted-but-not-completed
 //!   population hits [`VpeConfig::max_inflight_total`] (or the tenant's
 //!   own [`VpeConfig::tenant_quota`]), returning a retry hint sized
 //!   from the smoothed service time.  Backpressure replaces the
-//!   unbounded host bounce.
+//!   unbounded host bounce.  A per-tenant joule budget
+//!   ([`VpeConfig::tenant_energy_budget_nj`]) closes admission for a
+//!   tenant whose completed dispatches have already spent their energy
+//!   allowance.
 //! - **Deadline preemption** — a released call whose predicted cost
 //!   exceeds [`VpeConfig::deadline_ns`] is submitted through the shard
 //!   planner instead ([`Vpe::submit_sharded`]), so it yields the
@@ -40,6 +46,8 @@
 //! [`VpeConfig::tenant_quota`]: super::vpe::VpeConfig::tenant_quota
 //! [`VpeConfig::deadline_ns`]: super::vpe::VpeConfig::deadline_ns
 //! [`VpeConfig::max_queue_per_target`]: super::vpe::VpeConfig::max_queue_per_target
+//! [`VpeConfig::drr_quantum_nj`]: super::vpe::VpeConfig::drr_quantum_nj
+//! [`VpeConfig::tenant_energy_budget_nj`]: super::vpe::VpeConfig::tenant_energy_budget_nj
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
@@ -159,16 +167,23 @@ struct QueuedReq {
     function: FunctionId,
     completion: Completion,
     /// Admission-time predicted cost on the function's current target,
-    /// ns — the DRR currency and the deadline-preemption trigger.
+    /// ns — the deadline-preemption trigger.
     cost_ns: u64,
+    /// Admission-time DRR price of the request: `cost_ns` under
+    /// time-denominated DRR, the predicted energy in nanojoules under
+    /// energy-denominated DRR ([`VpeConfig::drr_quantum_nj`]).
+    ///
+    /// [`VpeConfig::drr_quantum_nj`]: super::vpe::VpeConfig::drr_quantum_nj
+    credit: u64,
 }
 
 /// Per-tenant scheduling state.
 #[derive(Debug, Default)]
 struct TenantQueue {
     q: VecDeque<QueuedReq>,
-    /// Unspent DRR credit, ns of predicted cost.
-    deficit_ns: u64,
+    /// Unspent DRR credit, in the configured currency (ns of predicted
+    /// cost, or nJ of predicted energy under energy-denominated DRR).
+    deficit: u64,
     /// Accepted but not yet completed (queued here + in flight below) —
     /// the population `tenant_quota` bounds.
     pending: usize,
@@ -227,7 +242,8 @@ impl Server {
     /// Wrap a coordinator in a serving front-end.  Admission and
     /// scheduling knobs come from the coordinator's [`VpeConfig`]
     /// (`max_inflight_total`, `tenant_quota`, `deadline_ns`,
-    /// `drr_quantum_ns`).
+    /// `drr_quantum_ns`, and the energy axis: `drr_quantum_nj`,
+    /// `tenant_energy_budget_nj`).
     ///
     /// [`VpeConfig`]: super::vpe::VpeConfig
     pub fn new(vpe: Vpe) -> Self {
@@ -251,9 +267,14 @@ impl Server {
     /// (unknown function).
     pub fn try_submit(&mut self, tenant: TenantId, f: FunctionId) -> Result<AdmitOutcome> {
         let cost_ns = self.vpe.predicted_call_ns(f)?.max(1);
-        let (max_total, quota) = {
+        let (max_total, quota, energy_budget, energy_drr) = {
             let cfg = self.vpe.config();
-            (cfg.max_inflight_total, cfg.tenant_quota)
+            (
+                cfg.max_inflight_total,
+                cfg.tenant_quota,
+                cfg.tenant_energy_budget_nj,
+                cfg.drr_quantum_nj.is_some(),
+            )
         };
         if self.accepted_inflight >= max_total {
             return Ok(self.reject(tenant, f, RejectReason::ServerSaturated));
@@ -261,6 +282,13 @@ impl Server {
         if self.tenants.get(&tenant).map(|t| t.pending).unwrap_or(0) >= quota {
             return Ok(self.reject(tenant, f, RejectReason::TenantQuota));
         }
+        if let Some(budget) = energy_budget {
+            if self.vpe.tenant_energy_nj(tenant) >= budget {
+                return Ok(self.reject(tenant, f, RejectReason::TenantEnergyBudget));
+            }
+        }
+        let credit =
+            if energy_drr { self.vpe.predicted_call_energy_nj(f)?.max(1) } else { cost_ns };
         if !self.tenants.contains_key(&tenant) {
             self.tenants.insert(tenant, TenantQueue::default());
             self.order.push(tenant);
@@ -268,7 +296,7 @@ impl Server {
         let completion = Completion::new_at(self.vpe.clock().now_ns());
         let tq = self.tenants.get_mut(&tenant).expect("inserted above");
         tq.pending += 1;
-        tq.q.push_back(QueuedReq { function: f, completion: completion.clone(), cost_ns });
+        tq.q.push_back(QueuedReq { function: f, completion: completion.clone(), cost_ns, credit });
         self.accepted_inflight += 1;
         self.vpe.note_admitted(tenant, f);
         Ok(AdmitOutcome::Admitted(completion))
@@ -333,7 +361,10 @@ impl Server {
     /// can move.  With work queued and nothing in flight the loop keeps
     /// granting — no retirement will ever unblock us, so credit must.
     fn schedule(&mut self) -> Result<()> {
-        let quantum = self.vpe.config().drr_quantum_ns.max(1);
+        let quantum = {
+            let cfg = self.vpe.config();
+            cfg.drr_quantum_nj.unwrap_or(cfg.drr_quantum_ns).max(1)
+        };
         let cap = self.dispatch_capacity();
         loop {
             let mut released = false;
@@ -386,12 +417,12 @@ impl Server {
         if let Some(tq) = self.tenants.get_mut(&tenant) {
             match tq.q.front() {
                 Some(head) => {
-                    let cap = head.cost_ns.saturating_add(quantum);
-                    tq.deficit_ns = tq.deficit_ns.saturating_add(quantum).min(cap);
+                    let cap = head.credit.saturating_add(quantum);
+                    tq.deficit = tq.deficit.saturating_add(quantum).min(cap);
                 }
                 // Idle tenants bank nothing (the classic DRR rule):
                 // fairness is over backlogged tenants only.
-                None => tq.deficit_ns = 0,
+                None => tq.deficit = 0,
             }
         }
     }
@@ -408,7 +439,7 @@ impl Server {
         {
             let tq = self.tenants.get(&tenant)?;
             for (i, req) in tq.q.iter().take(HOL_BYPASS).enumerate() {
-                if req.cost_ns > tq.deficit_ns {
+                if req.credit > tq.deficit {
                     break;
                 }
                 if self.wants_preempt(req.cost_ns, req.function)
@@ -422,7 +453,7 @@ impl Server {
         let i = pick?;
         let tq = self.tenants.get_mut(&tenant).expect("present above");
         let req = tq.q.remove(i).expect("pick is in range");
-        tq.deficit_ns = tq.deficit_ns.saturating_sub(req.cost_ns);
+        tq.deficit = tq.deficit.saturating_sub(req.credit);
         tq.served_ns = tq.served_ns.saturating_add(req.cost_ns);
         Some(req)
     }
@@ -675,6 +706,46 @@ mod tests {
         assert!(
             first_half.contains(&TenantId(0)) && first_half.contains(&TenantId(1)),
             "both tenants retire in the first half, got {first_half:?}"
+        );
+        assert_eq!(server.served_ns(TenantId(0)), server.served_ns(TenantId(1)));
+    }
+
+    #[test]
+    fn tenant_energy_budget_closes_admission_once_spent() {
+        let mut cfg = VpeConfig::sim_only();
+        cfg.tenant_energy_budget_nj = Some(1); // any completed call spends it
+        let (vpe, f) = serving_vpe(cfg);
+        let mut server = Server::new(vpe);
+        assert!(matches!(server.try_submit(TenantId(0), f).unwrap(), AdmitOutcome::Admitted(_)));
+        server.run_until_idle().unwrap();
+        assert!(server.vpe().tenant_energy_nj(TenantId(0)) >= 1);
+        // The budget is spent energy, not population: draining does not
+        // reopen admission for tenant 0, but tenant 1 is untouched.
+        assert!(matches!(
+            server.try_submit(TenantId(0), f).unwrap(),
+            AdmitOutcome::Rejected { reason: RejectReason::TenantEnergyBudget, .. }
+        ));
+        assert!(matches!(server.try_submit(TenantId(1), f).unwrap(), AdmitOutcome::Admitted(_)));
+    }
+
+    #[test]
+    fn energy_denominated_drr_still_interleaves_and_completes() {
+        let mut cfg = VpeConfig::sim_only();
+        cfg.drr_quantum_nj = Some(500_000); // credit in nJ, not ns
+        let (vpe, f) = serving_vpe(cfg);
+        let mut server = Server::new(vpe);
+        for _ in 0..12 {
+            server.try_submit(TenantId(0), f).unwrap();
+        }
+        for _ in 0..12 {
+            server.try_submit(TenantId(1), f).unwrap();
+        }
+        let records = server.run_until_idle().unwrap();
+        assert_eq!(records.len(), 24);
+        let first_half: Vec<_> = records[..12].iter().filter_map(|r| r.tenant).collect();
+        assert!(
+            first_half.contains(&TenantId(0)) && first_half.contains(&TenantId(1)),
+            "energy credit interleaves like time credit, got {first_half:?}"
         );
         assert_eq!(server.served_ns(TenantId(0)), server.served_ns(TenantId(1)));
     }

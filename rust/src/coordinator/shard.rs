@@ -32,6 +32,66 @@
 
 use crate::platform::TargetId;
 
+/// What the fan-out planner optimizes when choosing the participant
+/// set.  Work *sizing* within a chosen set always time-equalizes
+/// (water-filling is the minimum-makespan split for a linear cost
+/// model); the objective decides *which* units participate — which is
+/// where race-to-idle (one frugal unit) and spread-wide (every
+/// comparable unit) genuinely diverge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Objective {
+    /// Minimize the equalized makespan (wall time) — the historical
+    /// behavior and the default.
+    #[default]
+    Latency,
+    /// Minimize total joules burned by the participant set.
+    Energy,
+    /// Minimize the energy-delay product (makespan × total joules).
+    Edp,
+}
+
+impl Objective {
+    /// Objective name, for reports/configs.
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::Energy => "energy",
+            Objective::Edp => "edp",
+        }
+    }
+
+    /// Parse a config string ("latency" / "energy" / "edp").
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "latency" => Some(Objective::Latency),
+            "energy" => Some(Objective::Energy),
+            "edp" => Some(Objective::Edp),
+            _ => None,
+        }
+    }
+
+    /// Score a candidate participant set that finishes at the
+    /// equalized makespan `t_ns` (smaller is better).  Each
+    /// participant is busy with this call from the moment its backlog
+    /// drains until the common finish, so its energy share is
+    /// `(t_ns − backlog) × active_watts`.
+    fn score(self, t_ns: f64, ts: &[PlanTarget]) -> f64 {
+        match self {
+            Objective::Latency => t_ns,
+            Objective::Energy => set_energy_nj(t_ns, ts),
+            Objective::Edp => t_ns * set_energy_nj(t_ns, ts),
+        }
+    }
+}
+
+/// Total joules (as nJ, f64 during planning) burned by a set finishing
+/// together at `t_ns`.
+fn set_energy_nj(t_ns: f64, ts: &[PlanTarget]) -> f64 {
+    ts.iter()
+        .map(|t| (t_ns - t.backlog_ns as f64).max(0.0) * t.active_watts as f64)
+        .sum()
+}
+
 /// One dispatchable unit, as the coordinator prices it for this call.
 #[derive(Debug, Clone, Copy)]
 pub struct PlanTarget {
@@ -50,6 +110,9 @@ pub struct PlanTarget {
     /// How long the unit stays busy with already-queued dispatches, ns
     /// (`TargetScheduler::busy_until − now`).
     pub backlog_ns: u64,
+    /// Effective active draw of the unit, watts (1 W when the platform
+    /// never mentions power) — what the energy/EDP objectives score.
+    pub active_watts: u64,
 }
 
 impl PlanTarget {
@@ -84,6 +147,10 @@ pub struct ShardPlan {
     pub shards: Vec<PlannedShard>,
     /// Predicted completion of the slowest shard, ns from issue.
     pub makespan_ns: u64,
+    /// Predicted joules burned by the participant set (each shard's
+    /// busy time — dispatch overhead plus compute, backlog excluded —
+    /// times its unit's active draw), nanojoules.
+    pub energy_nj: u64,
 }
 
 impl ShardPlan {
@@ -146,6 +213,22 @@ pub fn plan(
     targets: &[PlanTarget],
     max_width: usize,
 ) -> ShardPlan {
+    plan_objective(units, items_per_unit, targets, max_width, Objective::Latency)
+}
+
+/// [`plan`] with a pluggable participant-set objective: work within the
+/// chosen set still time-equalizes, but the greedy set selection scores
+/// candidate sets by `objective` — so [`Objective::Energy`] collapses
+/// to the single most frugal unit when spreading would burn more total
+/// joules, while [`Objective::Latency`] keeps spreading as long as the
+/// makespan drops.
+pub fn plan_objective(
+    units: usize,
+    items_per_unit: f64,
+    targets: &[PlanTarget],
+    max_width: usize,
+    objective: Objective,
+) -> ShardPlan {
     if units == 0 || targets.is_empty() || max_width == 0 || items_per_unit <= 0.0 {
         return ShardPlan::empty();
     }
@@ -160,17 +243,20 @@ pub fn plan(
     let width = max_width.min(units);
     let total_items = items_per_unit * units as f64;
 
-    // Greedy marginal-makespan selection: start from the best single
-    // unit (fixed costs and backlog included) and keep adding whichever
-    // excluded unit most reduces the equalized makespan, re-solving
-    // with the eviction rule each time — so a congested fast unit never
-    // crowds an idle slower one out of a width-capped plan; joining a
-    // better set can also evict it.  Stops at `width` shards or when no
-    // addition improves the makespan.
+    // Greedy marginal selection: start from the best single unit
+    // (fixed costs and backlog included) and keep adding whichever
+    // excluded unit most improves the objective score of the
+    // time-equalized set, re-solving with the eviction rule each time
+    // — so a congested fast unit never crowds an idle slower one out
+    // of a width-capped plan; joining a better set can also evict it.
+    // Stops at `width` shards or when no addition improves the score
+    // (under Latency the score *is* the makespan — the historical
+    // behavior, unchanged).
     let mut ts: Vec<PlanTarget> = Vec::new();
     let mut t_ns = f64::INFINITY;
+    let mut best_score = f64::INFINITY;
     while ts.len() < width {
-        let mut best: Option<(f64, Vec<PlanTarget>)> = None;
+        let mut best: Option<(f64, f64, Vec<PlanTarget>)> = None;
         for c in &pool {
             if ts.iter().any(|t| t.target == c.target) {
                 continue;
@@ -178,12 +264,14 @@ pub fn plan(
             let mut cand = ts.clone();
             cand.push(*c);
             let (t, set) = solve_set(total_items, cand);
-            if best.as_ref().map_or(true, |(bt, _)| t < *bt) {
-                best = Some((t, set));
+            let s = objective.score(t, &set);
+            if best.as_ref().map_or(true, |(bs, _, _)| s < *bs) {
+                best = Some((s, t, set));
             }
         }
         match best {
-            Some((t, set)) if t < t_ns => {
+            Some((s, t, set)) if s < best_score => {
+                best_score = s;
                 t_ns = t;
                 ts = set;
             }
@@ -230,6 +318,7 @@ pub fn plan(
     let mut shards = Vec::new();
     let mut cursor = 0usize;
     let mut makespan = 0u64;
+    let mut energy = 0u64;
     for (t, &n_units) in ts.iter().zip(&assigned) {
         if n_units == 0 {
             continue;
@@ -237,6 +326,11 @@ pub fn plan(
         let predicted =
             (t.fixed_ns() + n_units as f64 * items_per_unit * t.rate_ns_per_item) as u64;
         makespan = makespan.max(predicted);
+        // Busy time on this unit = overhead + compute (the backlog
+        // belongs to earlier dispatches).
+        energy = energy.saturating_add(
+            predicted.saturating_sub(t.backlog_ns).saturating_mul(t.active_watts),
+        );
         shards.push(PlannedShard {
             target: t.target,
             start: cursor,
@@ -247,7 +341,7 @@ pub fn plan(
         cursor += n_units;
     }
     debug_assert_eq!(cursor, units, "shards must tile the output exactly");
-    ShardPlan { units, shards, makespan_ns: makespan }
+    ShardPlan { units, shards, makespan_ns: makespan, energy_nj: energy }
 }
 
 #[cfg(test)]
@@ -261,7 +355,12 @@ mod tests {
             rate_ns_per_item: rate,
             overhead_ns: overhead,
             backlog_ns: backlog,
+            active_watts: 1,
         }
+    }
+
+    fn tw(slot: u16, rate: f64, watts: u64) -> PlanTarget {
+        PlanTarget { active_watts: watts, ..t(slot, rate, 0, 0) }
     }
 
     fn covered(plan: &ShardPlan) -> usize {
@@ -381,6 +480,65 @@ mod tests {
         let p = plan(2, 5.0, &ts, usize::MAX);
         assert!(p.shards.len() <= 2);
         assert_eq!(covered(&p), 2);
+    }
+
+    #[test]
+    fn objective_names_round_trip() {
+        for o in [Objective::Latency, Objective::Energy, Objective::Edp] {
+            assert_eq!(Objective::parse(o.name()), Some(o));
+        }
+        assert_eq!(Objective::parse("joules"), None);
+        assert_eq!(Objective::default(), Objective::Latency);
+    }
+
+    #[test]
+    fn energy_objective_races_to_the_frugal_unit() {
+        // big: 1 ns/item at 4 W; LITTLE: 3 ns/item at 1 W.  Spreading
+        // wins on time (T=750 vs 3000) but burns 3750 nJ; the LITTLE
+        // cluster alone burns 3000 nJ.  Energy must collapse to one
+        // frugal shard where Latency fans out — race-to-idle vs
+        // spread-wide.
+        let ts = [tw(1, 1.0, 4), tw(2, 3.0, 1)];
+        let lat = plan_objective(100, 10.0, &ts, usize::MAX, Objective::Latency);
+        assert!(lat.is_fan_out(), "{lat:?}");
+        let en = plan_objective(100, 10.0, &ts, usize::MAX, Objective::Energy);
+        assert_eq!(en.shards.len(), 1, "{en:?}");
+        assert_eq!(en.shards[0].target, TargetId(2));
+        assert_eq!(en.energy_nj, 3000);
+        assert!(en.energy_nj < lat.energy_nj, "{} vs {}", en.energy_nj, lat.energy_nj);
+        assert!(lat.makespan_ns < en.makespan_ns);
+    }
+
+    #[test]
+    fn edp_objective_lands_between_latency_and_energy() {
+        // Same platform: EDP of big alone = 1000×4000, LITTLE alone =
+        // 3000×3000, the pair = 750×3750 — the pair wins, so EDP fans
+        // out here even though Energy would not.
+        let ts = [tw(1, 1.0, 4), tw(2, 3.0, 1)];
+        let edp = plan_objective(100, 10.0, &ts, usize::MAX, Objective::Edp);
+        assert!(edp.is_fan_out(), "{edp:?}");
+        let en = plan_objective(100, 10.0, &ts, usize::MAX, Objective::Energy);
+        assert!(edp.makespan_ns < en.makespan_ns);
+        assert!(edp.energy_nj > en.energy_nj);
+    }
+
+    #[test]
+    fn default_objective_is_the_historical_planner() {
+        let ts = [t(1, 2.0, 1000, 0), t(2, 3.0, 1000, 500), t(3, 4.0, 1000, 0)];
+        let a = plan(1000, 100.0, &ts, 2);
+        let b = plan_objective(1000, 100.0, &ts, 2, Objective::Latency);
+        assert_eq!(a.shards, b.shards);
+        assert_eq!(a.makespan_ns, b.makespan_ns);
+    }
+
+    #[test]
+    fn plan_energy_excludes_backlog_time() {
+        // One unit, 1 W, 100 ns overhead, 1000 ns backlog: the charge
+        // is overhead + compute only.
+        let ts = [t(1, 1.0, 100, 1000)];
+        let p = plan(10, 10.0, &ts, 1);
+        assert_eq!(p.shards.len(), 1);
+        assert_eq!(p.energy_nj, 100 + 100);
     }
 
     #[test]

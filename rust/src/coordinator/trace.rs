@@ -16,14 +16,24 @@
 //!
 //! ## Formats
 //!
-//! - **`vpe-trace-v3`** (written): everything v2 recorded, plus a
+//! - **`vpe-trace-v4`** (written): everything v3 recorded, plus the
+//!   energy axis — a header `power` table (per-unit effective active
+//!   and idle watts) and per entry the charged `energy_nj`, candidate
+//!   rows widened to `[slot, predicted_ns, amortized_ns,
+//!   predicted_nj, amortized_nj]`, and the host's own priced row.
+//!   Same-policy replay reproduces the recorded total joules exactly;
+//!   counterfactual placements are priced at `charged_ns` times the
+//!   header watts.
+//! - **`vpe-trace-v3`** (read-compat): everything v2 recorded, plus a
 //!   header (`max_batch_width`, the hotspot detector's `min_samples` /
 //!   `share_threshold`, per-unit transport `setups`) and per entry the
 //!   recorded candidate slice (`[slot, predicted_ns, amortized_ns]`),
 //!   the issue/retire queue epochs, the coalesced-follower flag, the
 //!   shard count, the sampled cycle count, and the shard planner's
 //!   counterfactual plan (per-shard sizes, fixed costs, predicted ns,
-//!   group makespan).
+//!   group makespan).  Loads with [`Trace::degraded_energy`] set:
+//!   every energy figure degrades to the 1 W time-equivalence
+//!   (`energy_nj == exec_ns`).
 //! - **`vpe-trace-v2`** (read-compat): numeric registry slots plus
 //!   `[slot, ns]` lone-dispatch prices only.  Loads with
 //!   [`Trace::degraded`] set: replay rebuilds candidates with
@@ -103,6 +113,12 @@ pub struct RecordedCandidate {
     /// The same call priced at steady-state batching (transport setup
     /// amortized over the achievable batch width), ns.
     pub amortized_ns: u64,
+    /// The lone-dispatch price in nanojoules (`predicted_ns` times the
+    /// unit's effective active watts; equals `predicted_ns` in pre-v4
+    /// traces, the 1 W degradation).
+    pub predicted_energy_nj: u64,
+    /// The batch-amortized price in nanojoules.
+    pub amortized_energy_nj: u64,
 }
 
 /// One shard of a recorded counterfactual fan-out plan.
@@ -150,6 +166,10 @@ pub struct TraceEntry {
     /// Simulated execution time of the recorded call, ns (the group
     /// makespan for a fanned-out call).
     pub exec_ns: u64,
+    /// Energy the recorded call charged, nanojoules (each shard of a
+    /// fanned-out call priced on its own unit's watts).  Pre-v4 traces
+    /// degrade to `exec_ns` (the 1 W equivalence).
+    pub energy_nj: u64,
     /// Profiling cost charged on top of the recorded call, ns.
     pub profiling_ns: u64,
     /// Sampled cycle count the hotspot detector ranked this call with
@@ -181,6 +201,11 @@ pub struct TraceEntry {
     /// retirement (empty in pre-v3 traces: replay degrades to uniform
     /// candidates built from `prices`).
     pub candidates: Vec<RecordedCandidate>,
+    /// The host priced as a candidate row of its own (no transport,
+    /// its own power model) — the stay-home baseline energy-aware
+    /// policies compare against.  Absent in pre-v4 traces; replay then
+    /// rebuilds it from the host's lone price at the header watts.
+    pub host: Option<RecordedCandidate>,
     /// The shard planner's counterfactual full-width plan for this
     /// call, when the workload shards and fanning out would help.
     pub plan: Option<RecordedPlan>,
@@ -202,8 +227,8 @@ impl TraceEntry {
 /// with the recording coordinator so decisions cannot drift.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceMeta {
-    /// Format version the document was read from (3 for fresh traces;
-    /// 1 or 2 after loading an old document).
+    /// Format version the document was read from (4 for fresh traces;
+    /// 1, 2 or 3 after loading an old document).
     pub version: u8,
     /// The effective batch width the recording queue could reach
     /// (`VpeConfig::max_batch_width` capped by the bounded queue depth);
@@ -216,17 +241,23 @@ pub struct TraceMeta {
     /// Per-unit fixed transport setup, ns (0 for the host) — what a
     /// coalesced follower saves over a lone dispatch.
     pub setups: Vec<(TargetId, u64)>,
+    /// Per-unit power model snapshot: `(slot, effective active watts,
+    /// effective idle watts)` — what counterfactual replayed
+    /// placements are priced with (`charged_ns * watts`).  Empty in
+    /// pre-v4 traces; replay then defaults every unit to 1 W active.
+    pub power: Vec<(TargetId, u64, u64)>,
 }
 
 impl Default for TraceMeta {
     fn default() -> Self {
         let d = HotspotDetector::default();
         TraceMeta {
-            version: 3,
+            version: 4,
             max_batch_width: 1,
             min_samples: d.min_samples,
             share_threshold: d.share_threshold,
             setups: Vec::new(),
+            power: Vec::new(),
         }
     }
 }
@@ -279,9 +310,23 @@ impl Trace {
         self.meta.version < 3
     }
 
+    /// Was this trace loaded from a pre-v4 document (no power table,
+    /// no recorded joules)?  Every energy figure then degrades to the
+    /// 1 W time-equivalence (`energy_nj == exec_ns`) instead of
+    /// erroring.
+    pub fn degraded_energy(&self) -> bool {
+        self.meta.version < 4
+    }
+
     /// Total recorded cost, ns (execution + profiling).
     pub fn total_ns(&self) -> u64 {
         self.entries.iter().map(|e| e.exec_ns + e.profiling_ns).sum()
+    }
+
+    /// Total recorded energy, nanojoules (execution only — profiling
+    /// is an analysis cost, not a dispatch).
+    pub fn total_energy_nj(&self) -> u64 {
+        self.entries.iter().map(|e| e.energy_nj).sum()
     }
 
     /// Total recorded cost, ms.
@@ -291,9 +336,9 @@ impl Trace {
 
     // -- persistence --------------------------------------------------------
 
-    /// Serialize as JSON (`vpe-trace-v3`).
+    /// Serialize as JSON (`vpe-trace-v4`).
     pub fn to_json(&self) -> String {
-        let mut out = String::from("{\"format\":\"vpe-trace-v3\",");
+        let mut out = String::from("{\"format\":\"vpe-trace-v4\",");
         let _ = write!(
             out,
             "\"max_batch_width\":{},\"min_samples\":{},\"share_threshold\":{},",
@@ -306,7 +351,14 @@ impl Trace {
             .map(|(t, ns)| format!("[{},{}]", t.0, ns))
             .collect::<Vec<_>>()
             .join(",");
-        let _ = write!(out, "\"setups\":[{setups}],\"entries\":[\n");
+        let power = self
+            .meta
+            .power
+            .iter()
+            .map(|(t, active, idle)| format!("[{},{},{}]", t.0, active, idle))
+            .collect::<Vec<_>>()
+            .join(",");
+        let _ = write!(out, "\"setups\":[{setups}],\"power\":[{power}],\"entries\":[\n");
         for (i, e) in self.entries.iter().enumerate() {
             let prices = e
                 .prices
@@ -314,21 +366,28 @@ impl Trace {
                 .map(|(t, ns)| format!("[{},{}]", t.0, ns))
                 .collect::<Vec<_>>()
                 .join(",");
-            let cand = e
-                .candidates
-                .iter()
-                .map(|c| format!("[{},{},{}]", c.target.0, c.predicted_ns, c.amortized_ns))
-                .collect::<Vec<_>>()
-                .join(",");
+            let cand5 = |c: &RecordedCandidate| {
+                format!(
+                    "[{},{},{},{},{}]",
+                    c.target.0,
+                    c.predicted_ns,
+                    c.amortized_ns,
+                    c.predicted_energy_nj,
+                    c.amortized_energy_nj
+                )
+            };
+            let cand = e.candidates.iter().map(cand5).collect::<Vec<_>>().join(",");
             let _ = write!(
                 out,
-                "{{\"f\":{},\"kind\":\"{}\",\"on\":{},\"exec_ns\":{},\"prof_ns\":{},\
+                "{{\"f\":{},\"kind\":\"{}\",\"on\":{},\"exec_ns\":{},\"energy_nj\":{},\
+                 \"prof_ns\":{},\
                  \"cycles\":{},\"epoch\":{},\"retire_epoch\":{},\"coalesced\":{},\
                  \"fanned\":{},\"shards\":{},\"prices\":[{}],\"cand\":[{}]",
                 e.function,
                 kind_name(e.kind),
                 e.executed_on.0,
                 e.exec_ns,
+                e.energy_nj,
                 e.profiling_ns,
                 e.cycles,
                 e.issue_epoch,
@@ -339,6 +398,9 @@ impl Trace {
                 prices,
                 cand,
             );
+            if let Some(h) = &e.host {
+                let _ = write!(out, ",\"host\":{}", cand5(h));
+            }
             if let Some(p) = &e.plan {
                 let shards = p
                     .shards
@@ -360,17 +422,18 @@ impl Trace {
         out
     }
 
-    /// Parse from JSON — v3, with v2/v1 read-compatibility.
+    /// Parse from JSON — v4, with v3/v2/v1 read-compatibility.
     pub fn from_json(text: &str) -> Result<Self> {
         let j = json::parse(text)?;
         let version: u8 = match j.req("format")?.as_str() {
+            Some("vpe-trace-v4") => 4,
             Some("vpe-trace-v3") => 3,
             Some("vpe-trace-v2") => 2,
             Some("vpe-trace-v1") => 1,
-            _ => return Err(Error::Parse("not a vpe-trace-v1/v2/v3 document".into())),
+            _ => return Err(Error::Parse("not a vpe-trace-v1..v4 document".into())),
         };
         let mut meta = TraceMeta { version, ..TraceMeta::default() };
-        if version == 3 {
+        if version >= 3 {
             meta.max_batch_width = j
                 .req("max_batch_width")?
                 .as_usize()
@@ -395,6 +458,15 @@ impl Trace {
                 .map(slot_ns_pair)
                 .collect::<Result<Vec<_>>>()?;
         }
+        if version >= 4 {
+            meta.power = j
+                .req("power")?
+                .as_arr()
+                .ok_or_else(|| Error::Parse("'power' must be an array".into()))?
+                .iter()
+                .map(power_triple)
+                .collect::<Result<Vec<_>>>()?;
+        }
         let entries = j
             .req("entries")?
             .as_arr()
@@ -406,12 +478,12 @@ impl Trace {
         Ok(Trace { meta, entries })
     }
 
-    /// Write the trace to `path` as v3 JSON.
+    /// Write the trace to `path` as v4 JSON.
     pub fn save(&self, path: &Path) -> Result<()> {
         Ok(std::fs::write(path, self.to_json())?)
     }
 
-    /// Load a trace from `path` (v3, or v2/v1 read-compat).
+    /// Load a trace from `path` (v4, or v3/v2/v1 read-compat).
     pub fn load(path: &Path) -> Result<Self> {
         Self::from_json(&std::fs::read_to_string(path)?)
     }
@@ -433,6 +505,25 @@ fn slot_ns_pair(p: &Json) -> Result<(TargetId, u64)> {
         .map(|v| v as u64)
         .ok_or_else(|| Error::Parse("bad ns".into()))?;
     Ok((TargetId(slot as u16), ns))
+}
+
+/// Parse a `[slot, active_watts, idle_watts]` power triple.
+fn power_triple(p: &Json) -> Result<(TargetId, u64, u64)> {
+    let t = p
+        .as_arr()
+        .filter(|a| a.len() == 3)
+        .ok_or_else(|| Error::Parse("expected a [slot, active, idle] triple".into()))?;
+    let slot = t[0]
+        .as_usize()
+        .filter(|v| *v <= u16::MAX as usize)
+        .ok_or_else(|| Error::Parse("bad slot".into()))?;
+    let watt = |j: &Json| -> Result<u64> {
+        j.as_f64()
+            .filter(|v| *v >= 0.0)
+            .map(|v| v as u64)
+            .ok_or_else(|| Error::Parse("bad watts".into()))
+    };
+    Ok((TargetId(slot as u16), watt(&t[1])?, watt(&t[2])?))
 }
 
 fn parse_entry(e: &Json, version: u8, index: usize) -> Result<TraceEntry> {
@@ -473,11 +564,15 @@ fn parse_entry(e: &Json, version: u8, index: usize) -> Result<TraceEntry> {
             .collect::<Result<Vec<_>>>()?;
         (on, prices)
     };
+    let exec_ns = num("exec_ns")?;
     let mut entry = TraceEntry {
         function: num("f")? as u32,
         kind: kind_from(e.req("kind")?.as_str().ok_or_else(|| Error::Parse("bad kind".into()))?)?,
         executed_on,
-        exec_ns: num("exec_ns")?,
+        exec_ns,
+        // Pre-v4 traces carry no joules; degrade to the implicit 1 W
+        // model (energy numerically equal to busy nanoseconds).
+        energy_nj: if version >= 4 { num("energy_nj")? } else { exec_ns },
         profiling_ns: num("prof_ns")?,
         // Pre-v3 defaults: entry-index epochs give every call its own
         // formation window (no counterfactual coalescing) and make
@@ -491,6 +586,7 @@ fn parse_entry(e: &Json, version: u8, index: usize) -> Result<TraceEntry> {
         shards: 1,
         prices,
         candidates: Vec::new(),
+        host: None,
         plan: None,
     };
     if version < 3 {
@@ -512,35 +608,44 @@ fn parse_entry(e: &Json, version: u8, index: usize) -> Result<TraceEntry> {
         .as_usize()
         .filter(|s| *s >= 1)
         .ok_or_else(|| Error::Parse("bad 'shards'".into()))?;
+    let candidate = |c: &Json| -> Result<RecordedCandidate> {
+        // v3 candidates are [slot, pred, amort]; v4 appends the two
+        // energy prices. Pre-v4 energies degrade to the 1 W model.
+        let want = if version >= 4 { 5 } else { 3 };
+        let t = c
+            .as_arr()
+            .filter(|a| a.len() == want)
+            .ok_or_else(|| Error::Parse("candidate has the wrong arity".into()))?;
+        let slot = t[0]
+            .as_usize()
+            .filter(|v| *v <= u16::MAX as usize)
+            .ok_or_else(|| Error::Parse("bad candidate slot".into()))?;
+        let price = |j: &Json| -> Result<u64> {
+            j.as_f64()
+                .filter(|v| *v >= 0.0)
+                .map(|v| v as u64)
+                .ok_or_else(|| Error::Parse("bad candidate price".into()))
+        };
+        let pred = price(&t[1])?;
+        let amort = price(&t[2])?;
+        Ok(RecordedCandidate {
+            target: TargetId(slot as u16),
+            predicted_ns: pred,
+            amortized_ns: amort,
+            predicted_energy_nj: if version >= 4 { price(&t[3])? } else { pred },
+            amortized_energy_nj: if version >= 4 { price(&t[4])? } else { amort },
+        })
+    };
     entry.candidates = e
         .req("cand")?
         .as_arr()
         .ok_or_else(|| Error::Parse("'cand' must be an array".into()))?
         .iter()
-        .map(|c| -> Result<RecordedCandidate> {
-            let t = c
-                .as_arr()
-                .filter(|a| a.len() == 3)
-                .ok_or_else(|| Error::Parse("candidate must be [slot, pred, amort]".into()))?;
-            let slot = t[0]
-                .as_usize()
-                .filter(|v| *v <= u16::MAX as usize)
-                .ok_or_else(|| Error::Parse("bad candidate slot".into()))?;
-            let pred = t[1]
-                .as_f64()
-                .filter(|v| *v >= 0.0)
-                .ok_or_else(|| Error::Parse("bad candidate price".into()))?;
-            let amort = t[2]
-                .as_f64()
-                .filter(|v| *v >= 0.0)
-                .ok_or_else(|| Error::Parse("bad candidate price".into()))?;
-            Ok(RecordedCandidate {
-                target: TargetId(slot as u16),
-                predicted_ns: pred as u64,
-                amortized_ns: amort as u64,
-            })
-        })
+        .map(candidate)
         .collect::<Result<Vec<_>>>()?;
+    if let Some(h) = e.get("host").filter(|_| version >= 4) {
+        entry.host = Some(candidate(h)?);
+    }
     if let Some(p) = e.get("plan") {
         let units = p
             .req("units")?
@@ -611,6 +716,9 @@ pub struct ReplayedCall {
     pub replayed_shards: usize,
     /// What replay charged for the call, ns.
     pub charged_ns: u64,
+    /// What replay charged for the call, nJ (recorded joules on a
+    /// matched placement, re-priced from the power header otherwise).
+    pub charged_nj: u64,
     /// Did the replayed placement match the recorded one?
     pub matched: bool,
 }
@@ -624,6 +732,11 @@ pub struct ReplayOutcome {
     pub total_ns: u64,
     /// Total re-priced time of the run, ms.
     pub total_ms: f64,
+    /// Total re-priced dispatch energy of the run, nJ.  Same-policy
+    /// replay of a v4 trace reproduces [`Trace::total_energy_nj`]
+    /// exactly; counterfactual placements are priced from the trace's
+    /// power header (1 W per target when absent).
+    pub total_energy_nj: u64,
     /// Calls the replayed decision sequence priced on the host.
     pub host_calls: usize,
     /// Calls priced on any non-host unit (a replayed fan-out counts as
@@ -714,11 +827,16 @@ const HOST_PLACEMENT: Placement = Placement { slot: TargetId::HOST, fanned: None
 
 /// Re-run [`super::shard::plan`] at `width` from a recorded
 /// counterfactual plan: reconstruct each participant's rate row from
-/// its shard size and predicted time, then plan for real.  Returns the
-/// makespan, the primary (widest) shard's unit, and the shard count —
-/// or `None` when the plan does not fan out (callers fall back to a
-/// plain dispatch, as the live coordinator does).
-fn replan(plan: &RecordedPlan, width: usize) -> Option<(u64, TargetId, usize)> {
+/// its shard size and predicted time (watts from the trace's power
+/// header), then plan for real.  Returns the makespan, the primary
+/// (widest) shard's unit, the shard count and the planned dispatch
+/// energy — or `None` when the plan does not fan out (callers fall
+/// back to a plain dispatch, as the live coordinator does).
+fn replan(
+    plan: &RecordedPlan,
+    width: usize,
+    watts: &HashMap<TargetId, u64>,
+) -> Option<(u64, TargetId, usize, u64)> {
     if plan.units == 0 || plan.items_per_unit <= 0.0 || plan.shards.len() < 2 {
         return None;
     }
@@ -732,6 +850,7 @@ fn replan(plan: &RecordedPlan, width: usize) -> Option<(u64, TargetId, usize)> {
                 .max(1e-9),
             overhead_ns: s.fixed_ns,
             backlog_ns: 0,
+            active_watts: watts.get(&s.target).copied().unwrap_or(1),
         })
         .collect();
     let p = shard_plan::plan(plan.units, plan.items_per_unit, &rows, width.max(2));
@@ -747,7 +866,7 @@ fn replan(plan: &RecordedPlan, width: usize) -> Option<(u64, TargetId, usize)> {
             primary = (s.target, w);
         }
     }
-    Some((p.makespan_ns.max(1), primary.0, p.shards.len()))
+    Some((p.makespan_ns.max(1), primary.0, p.shards.len(), p.energy_nj))
 }
 
 /// Re-price the recorded calls under `policy`'s decision sequence.
@@ -771,6 +890,11 @@ pub fn replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> ReplayOutcome {
     let degraded = trace.degraded();
     let cap = trace.meta.max_batch_width.max(1);
     let setup_of: HashMap<TargetId, u64> = trace.meta.setups.iter().copied().collect();
+    // Active watts per target from the v4 power header; absent slots
+    // (and every pre-v4 trace) price counterfactual energy at 1 W.
+    let watts_of: HashMap<TargetId, u64> =
+        trace.meta.power.iter().map(|(t, active, _)| (*t, *active)).collect();
+    let watt = |t: TargetId| watts_of.get(&t).copied().unwrap_or(1);
 
     let mut module = IrModule::new("replay");
     let mut id_map: HashMap<u32, FunctionId> = HashMap::new();
@@ -793,6 +917,7 @@ pub fn replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> ReplayOutcome {
         policy: policy.name().to_string(),
         total_ns: 0,
         total_ms: 0.0,
+        total_energy_nj: 0,
         host_calls: 0,
         remote_calls: 0,
         offloads: 0,
@@ -828,7 +953,7 @@ pub fn replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> ReplayOutcome {
             // replayed cap is charged the recorded makespan too — a
             // documented approximation.
             Some(w) if e.shards > 1 && w >= e.shards => {
-                Some((e.exec_ns, e.executed_on, e.shards, true))
+                Some((e.exec_ns, e.executed_on, e.shards, true, e.energy_nj))
             }
             // The live run was fanned too but fell back to a plain
             // dispatch (the submit-time plan did not fan out): mirror
@@ -836,15 +961,16 @@ pub fn replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> ReplayOutcome {
             // re-pricing it from the retire-time counterfactual plan.
             Some(_) if e.shards <= 1 && e.fanned => None,
             // Counterfactual fan-out (or a genuinely narrower width):
-            // re-plan from the recorded rows and price the makespan.
+            // re-plan from the recorded rows and price the makespan
+            // (and the planned per-shard dispatch energy).
             Some(w) => e
                 .plan
                 .as_ref()
-                .and_then(|p| replan(p, w))
-                .map(|(makespan, primary, width)| (makespan, primary, width, false)),
+                .and_then(|p| replan(p, w, &watts_of))
+                .map(|(makespan, primary, width, nj)| (makespan, primary, width, false, nj)),
             None => None,
         };
-        let (charged, on, rep_shards, matched) = if let Some(fanned) = fan {
+        let (charged, on, rep_shards, matched, charged_nj) = if let Some(fanned) = fan {
             fanned
         } else {
             // Plain dispatch on the slot the issue epoch saw (a fanned
@@ -894,10 +1020,14 @@ pub fn replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> ReplayOutcome {
             if coalesced {
                 outcome.batched_calls += 1;
             }
-            (ns, t, 1, placed)
+            // A matched placement already paid the recorded joules;
+            // counterfactuals re-price from the power header.
+            let nj = if placed { e.energy_nj } else { ns.saturating_mul(watt(t)) };
+            (ns, t, 1, placed, nj)
         };
 
         outcome.total_ns += charged + e.profiling_ns;
+        outcome.total_energy_nj = outcome.total_energy_nj.saturating_add(charged_nj);
         if on.is_host() {
             outcome.host_calls += 1;
         } else {
@@ -910,6 +1040,7 @@ pub fn replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> ReplayOutcome {
             replayed_on: on,
             replayed_shards: rep_shards,
             charged_ns: charged,
+            charged_nj,
             matched,
         });
 
@@ -964,6 +1095,8 @@ pub fn replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> ReplayOutcome {
                     target: c.target,
                     predicted_ns: c.predicted_ns,
                     amortized_ns: c.amortized_ns,
+                    predicted_energy_nj: c.predicted_energy_nj,
+                    amortized_energy_nj: c.amortized_energy_nj,
                 })
                 .collect()
         } else {
@@ -977,12 +1110,29 @@ pub fn replay(trace: &Trace, policy: &mut dyn OffloadPolicy) -> ReplayOutcome {
 
         let irf = module.function(fid).expect("registered");
         let profile = profiles.get(&e.function).expect("just updated");
+        // Host baseline: the recorded v4 row when present, otherwise
+        // priced from the entry's host price at header watts.
+        let host = e
+            .host
+            .as_ref()
+            .map(|h| Candidate {
+                target: h.target,
+                predicted_ns: h.predicted_ns,
+                amortized_ns: h.amortized_ns,
+                predicted_energy_nj: h.predicted_energy_nj,
+                amortized_energy_nj: h.amortized_energy_nj,
+            })
+            .or_else(|| {
+                e.host_ns()
+                    .map(|ns| Candidate::priced(TargetId::HOST, ns, ns, watt(TargetId::HOST)))
+            });
         let ctx = PolicyCtx {
             function: fid,
             profile,
             current: current.slot,
             is_hotspot,
             candidates: &candidates,
+            host,
             op_mix: irf.op_mix,
             loop_depth: irf.loop_depth,
         };
@@ -1048,6 +1198,8 @@ mod tests {
                 target: *t,
                 predicted_ns: *ns,
                 amortized_ns: *ns,
+                predicted_energy_nj: *ns,
+                amortized_energy_nj: *ns,
             })
             .collect();
         TraceEntry {
@@ -1055,6 +1207,7 @@ mod tests {
             kind,
             executed_on: on,
             exec_ns,
+            energy_nj: exec_ns,
             profiling_ns,
             cycles: 0,
             issue_epoch: index as u64,
@@ -1064,6 +1217,7 @@ mod tests {
             shards: 1,
             prices,
             candidates,
+            host: None,
             plan: None,
         }
     }
@@ -1096,12 +1250,13 @@ mod tests {
     }
 
     #[test]
-    fn v3_roundtrip_preserves_meta_candidates_and_plan() {
+    fn v4_roundtrip_preserves_meta_candidates_and_plan() {
         let mut t = Trace::default();
         t.meta.max_batch_width = 6;
         t.meta.min_samples = 7;
         t.meta.share_threshold = 0.25;
         t.meta.setups = vec![(TargetId(0), 0), (TargetId(1), 100_000_000)];
+        t.meta.power = vec![(TargetId(0), 2, 1), (TargetId(1), 4, 0)];
         let mut e = entry(
             3,
             WorkloadKind::Matmul,
@@ -1117,11 +1272,21 @@ mod tests {
         e.coalesced = true;
         e.fanned = true;
         e.shards = 3;
+        e.energy_nj = 160_000_000;
         e.candidates = vec![RecordedCandidate {
             target: TargetId(1),
             predicted_ns: 41_000_000,
             amortized_ns: 29_500_000,
+            predicted_energy_nj: 164_000_000,
+            amortized_energy_nj: 118_000_000,
         }];
+        e.host = Some(RecordedCandidate {
+            target: TargetId::HOST,
+            predicted_ns: 400_000_000,
+            amortized_ns: 400_000_000,
+            predicted_energy_nj: 800_000_000,
+            amortized_energy_nj: 800_000_000,
+        });
         e.plan = Some(RecordedPlan {
             units: 500,
             items_per_unit: 250_000.0,
@@ -1146,6 +1311,11 @@ mod tests {
         assert_eq!(t, back);
         assert_eq!(back.entries[0].plan.as_ref().unwrap().shards.len(), 2);
         assert!(back.entries[0].coalesced);
+        assert!(!back.degraded_energy());
+        assert_eq!(back.meta.power, vec![(TargetId(0), 2, 1), (TargetId(1), 4, 0)]);
+        assert_eq!(back.entries[0].energy_nj, 160_000_000);
+        assert_eq!(back.entries[0].host.as_ref().unwrap().predicted_energy_nj, 800_000_000);
+        assert_eq!(back.total_energy_nj(), 160_000_000);
     }
 
     #[test]
@@ -1342,6 +1512,8 @@ mod tests {
                 target: TargetId(9),
                 predicted_ns: 1,
                 amortized_ns: 1,
+                predicted_energy_nj: 1,
+                amortized_energy_nj: 1,
             }];
             t.entries.push(e);
         }
@@ -1384,8 +1556,45 @@ mod tests {
         assert_eq!(out.diverged(), 0, "{}", out.divergence_report());
         assert_eq!(out.total_ns, trace.total_ns());
         assert_eq!(out.total_ms, trace.total_ms());
+        assert_eq!(out.total_energy_nj, trace.total_energy_nj());
         assert_eq!(out.offloads, vpe.events().offloads().len());
         assert_eq!(out.reverts, vpe.events().reverts().len());
+    }
+
+    #[test]
+    fn v3_documents_load_with_energy_degraded_not_as_errors() {
+        // Satellite regression: pre-v4 traces carry no joules — they
+        // must load with `degraded_energy()` and the 1 W fallback
+        // (energy numerically equal to busy time), not error.
+        let doc = r#"{"format":"vpe-trace-v3","max_batch_width":2,"min_samples":5,
+"share_threshold":0.1,"setups":[[1,100]],"entries":[
+{"f":0,"kind":"matmul","on":1,"exec_ns":700,"prof_ns":0,"cycles":0,"epoch":0,
+"retire_epoch":1,"coalesced":false,"fanned":false,"shards":1,
+"prices":[[0,1000],[1,700]],"cand":[[1,700,700]]}]}"#;
+        let t = Trace::from_json(doc).unwrap();
+        assert!(t.degraded_energy());
+        assert!(!t.degraded(), "v3 keeps full decision fidelity");
+        assert_eq!(t.entries[0].energy_nj, 700);
+        assert_eq!(t.entries[0].candidates[0].predicted_energy_nj, 700);
+        assert!(t.entries[0].host.is_none());
+        assert_eq!(t.total_energy_nj(), 700);
+        // And v1/v2 documents degrade the same way.
+        let v2 = Trace::from_json(
+            r#"{"format":"vpe-trace-v2","entries":[
+{"f":0,"kind":"matmul","on":1,"exec_ns":100,"prof_ns":5,"prices":[[0,100],[1,50]]}]}"#,
+        )
+        .unwrap();
+        assert!(v2.degraded_energy());
+        assert_eq!(v2.entries[0].energy_nj, 100);
+    }
+
+    #[test]
+    fn v4_documents_require_the_power_header() {
+        assert!(Trace::from_json(
+            r#"{"format":"vpe-trace-v4","max_batch_width":2,"min_samples":5,
+"share_threshold":0.1,"setups":[],"entries":[]}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -35,7 +35,7 @@ use crate::jit::module::{FunctionId, IrFunction, IrModule};
 use crate::jit::symbols::DspToolchain;
 use crate::jit::wrapper::DispatchTable;
 use crate::platform::memory::Allocation;
-use crate::platform::registry::{BackendKind, BuildKind};
+use crate::platform::registry::{energy_nj, BackendKind, BuildKind, PowerModel};
 use crate::platform::{Soc, TargetId};
 use crate::profiler::counters::CounterSample;
 use crate::profiler::hotspot::HotspotDetector;
@@ -51,7 +51,7 @@ use super::policy::{
 use super::queue::{DispatchQueue, InFlight, PendingDispatch, ShardSlice, TenantId, TicketId};
 use super::scheduler::TargetScheduler;
 use super::serving::Completion;
-use super::shard::{self as shard_plan, PlanTarget, ShardPlan};
+use super::shard::{self as shard_plan, Objective, PlanTarget, ShardPlan};
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -141,6 +141,29 @@ pub struct VpeConfig {
     /// coarser fairness granularity).  Default: `10_000_000`
     /// (10 ms).
     pub drr_quantum_ns: u64,
+    /// The objective the fan-out planner's participant-set selection
+    /// optimizes: minimum makespan (`Latency`, the historical
+    /// behaviour), minimum joules (`Energy`, race-to-idle), or minimum
+    /// energy-delay product (`Edp`).  Default: [`Objective::Latency`].
+    pub objective: Objective,
+    /// Platform-wide power model applied to *every* unit registered at
+    /// construction (targets added later via `soc_mut().add_target`
+    /// keep whatever their spec carries).  `None` leaves each spec's
+    /// own model — the 1 W-active / 0 W-idle default, under which every
+    /// energy figure equals busy nanoseconds.  Default: `None`.
+    pub power: Option<PowerModel>,
+    /// Energy-denominated DRR: when set, the serving scheduler's
+    /// per-round credit is this many nanojoules of *predicted energy*
+    /// instead of `drr_quantum_ns` of predicted time, so frugal tenants
+    /// drain faster than power-hungry ones at equal latency.  Default:
+    /// `None` (time-denominated fairness).
+    pub drr_quantum_nj: Option<u64>,
+    /// Per-tenant cumulative energy budget, nanojoules: once a tenant's
+    /// completed dispatches have charged this much, admission rejects
+    /// its further submits with
+    /// [`RejectReason::TenantEnergyBudget`].  Default: `None`
+    /// (unmetered).
+    pub tenant_energy_budget_nj: Option<u64>,
 }
 
 impl Default for VpeConfig {
@@ -162,6 +185,10 @@ impl Default for VpeConfig {
             tenant_quota: 128,
             deadline_ns: 0,
             drr_quantum_ns: 10_000_000,
+            objective: Objective::Latency,
+            power: None,
+            drr_quantum_nj: None,
+            tenant_energy_budget_nj: None,
         }
     }
 }
@@ -184,6 +211,11 @@ pub struct CallRecord {
     pub target: TargetId,
     /// Simulated execution time (compute + dispatch setup + noise), ns.
     pub exec_ns: u64,
+    /// Energy charged for the execution, nanojoules: `exec_ns` times
+    /// the executing unit's effective active watts (a sharded call sums
+    /// its shards, each priced on its own unit).  Under the default
+    /// 1 W power model this equals `exec_ns`.
+    pub energy_nj: u64,
     /// Profiling cost charged on top (measurement + analysis burst), ns.
     pub profiling_ns: u64,
     /// Wrapper indirection cost, ns.
@@ -259,6 +291,10 @@ pub struct TenantServingStats {
     /// 99th-percentile completion latency, ns; 0 before the first
     /// completion.
     pub p99_latency_ns: u64,
+    /// Cumulative energy charged by this tenant's completed dispatches,
+    /// nanojoules (the number
+    /// [`VpeConfig::tenant_energy_budget_nj`] meters against).
+    pub energy_nj: u64,
 }
 
 /// Internal per-tenant accumulator behind [`TenantServingStats`].
@@ -268,6 +304,7 @@ struct TenantAccum {
     completed: u64,
     rejected: u64,
     latencies: Vec<u64>,
+    energy_nj: u64,
 }
 
 /// Accumulator for one sharded call: folds per-shard retirements until
@@ -285,6 +322,9 @@ struct ShardGroup {
     done: usize,
     min_start_ns: u64,
     max_complete_ns: u64,
+    /// Energy charged by the shards retired so far, nanojoules (each
+    /// priced on its own unit's watts).
+    energy_nj: u64,
     wall: Option<Duration>,
     /// Target of the widest shard seen so far (the aggregate record's
     /// "primary" target) and its width in output units.
@@ -349,6 +389,12 @@ pub struct Vpe {
     completions: HashMap<TicketId, Completion>,
     /// Per-tenant serving counters (see [`Vpe::serving_stats`]).
     tenant_stats: BTreeMap<TenantId, TenantAccum>,
+    /// Energy charged by retired dispatches, per executing unit,
+    /// nanojoules (see [`Vpe::charged_energy_nj`]).  By construction
+    /// each unit's total equals its effective active watts times the
+    /// scheduler's occupied time — the conservation invariant the
+    /// property tests pin down.
+    charged_energy_nj: HashMap<TargetId, u64>,
 }
 
 impl std::fmt::Debug for Vpe {
@@ -404,6 +450,16 @@ impl Vpe {
         policy: Box<dyn OffloadPolicy>,
     ) -> Result<Self> {
         let sampler = PerfSampler::new(cfg.sampler.clone())?;
+        let mut soc = Soc::dm3730();
+        // A config-wide power model overrides every spec registered at
+        // construction; units added later carry their own.
+        if let Some(p) = &cfg.power {
+            for i in 0..soc.registry.len() {
+                if let Ok(spec) = soc.registry.get_mut(TargetId(i as u16)) {
+                    spec.power = p.clone();
+                }
+            }
+        }
         Ok(Vpe {
             detector: cfg.detector,
             rng: SimRng::seeded(cfg.seed),
@@ -411,7 +467,7 @@ impl Vpe {
             table: None,
             sampler,
             policy,
-            soc: Soc::dm3730(),
+            soc,
             clock: SimClock::new(),
             backend,
             target_backends: HashMap::new(),
@@ -430,6 +486,7 @@ impl Vpe {
             pending_tenant: None,
             completions: HashMap::new(),
             tenant_stats: BTreeMap::new(),
+            charged_energy_nj: HashMap::new(),
             cfg,
         })
     }
@@ -555,7 +612,12 @@ impl Vpe {
             if let Ok(ns) = self.price_call_ns(kind, &scale, id) {
                 let setup = spec.transport.batch_setup_ns();
                 let amortized_ns = ns.saturating_sub(setup) + setup / width;
-                out.push(Candidate { target: id, predicted_ns: ns, amortized_ns });
+                out.push(Candidate::priced(
+                    id,
+                    ns,
+                    amortized_ns,
+                    spec.power.eff_active_watts(),
+                ));
             }
         }
         out.sort_by_key(|c| (c.predicted_ns, c.target));
@@ -860,6 +922,7 @@ impl Vpe {
             done: 0,
             min_start_ns: u64::MAX,
             max_complete_ns: 0,
+            energy_nj: 0,
             wall: None,
             primary: (TargetId::HOST, 0),
             parts: Vec::new(),
@@ -950,9 +1013,16 @@ impl Vpe {
                 rate_ns_per_item: rate,
                 overhead_ns,
                 backlog_ns,
+                active_watts: spec.power.eff_active_watts(),
             });
         }
-        Ok(shard_plan::plan(units, scale.items / units as f64, &targets, max_width))
+        Ok(shard_plan::plan_objective(
+            units,
+            scale.items / units as f64,
+            &targets,
+            max_width,
+            self.cfg.objective,
+        ))
     }
 
     /// Retire every in-flight dispatch (completion-ordered, advancing
@@ -1129,6 +1199,19 @@ impl Vpe {
         self.price_call_ns(binding.instance.kind, &binding.instance.scale, target)
     }
 
+    /// Price one call of `f` in nanojoules on its current target:
+    /// [`Vpe::predicted_call_ns`] times that unit's effective active
+    /// watts — the serving layer's estimate for energy-denominated DRR
+    /// credit and tenant energy budgets.
+    pub fn predicted_call_energy_nj(&self, f: FunctionId) -> Result<u64> {
+        let target = self
+            .table
+            .as_ref()
+            .and_then(|t| t.current_target(f).ok())
+            .unwrap_or(TargetId::HOST);
+        Ok(energy_nj(self.predicted_call_ns(f)?, self.soc.active_watts(target)))
+    }
+
     /// The coordinator's configuration (read-only).
     pub fn config(&self) -> &VpeConfig {
         &self.cfg
@@ -1163,6 +1246,7 @@ impl Vpe {
                     rejected: a.rejected,
                     p50_latency_ns: p50,
                     p99_latency_ns: p99,
+                    energy_nj: a.energy_nj,
                 }
             })
             .collect()
@@ -1484,6 +1568,7 @@ impl Vpe {
         if let Some(t) = retired.record.tenant {
             let acc = self.tenant_stats.entry(t).or_default();
             acc.completed += 1;
+            acc.energy_nj = acc.energy_nj.saturating_add(retired.record.energy_nj);
             let since = handle
                 .as_ref()
                 .map(|c| c.ingest_ns())
@@ -1598,11 +1683,18 @@ impl Vpe {
         let (action, ranked) = self.policy_tick(f, target)?;
 
         let wrapper_ns = self.table()?.wrapper_overhead_ns;
+        // Charge the energy axis: the exact exec_ns the scheduler
+        // occupied, times the unit's effective draw — so per-target
+        // charged energy stays identically watts * occupied time.
+        let energy = energy_nj(call.exec_ns, self.soc.active_watts(target));
+        let slot = self.charged_energy_nj.entry(target).or_insert(0);
+        *slot = slot.saturating_add(energy);
         let record = CallRecord {
             function: f,
             iteration: call.iteration,
             target,
             exec_ns: call.exec_ns,
+            energy_nj: energy,
             profiling_ns: cost.total_ns(),
             wrapper_ns,
             issue_ns: call.issue_ns,
@@ -1704,10 +1796,16 @@ impl Vpe {
             complete_ns: call.complete_ns,
         });
 
+        // Each shard charges its own unit's watts over its own exec_ns
+        // — the group's energy is the sum, not makespan * anything.
+        let shard_energy = energy_nj(call.exec_ns, self.soc.active_watts(target));
+        let slot = self.charged_energy_nj.entry(target).or_insert(0);
+        *slot = slot.saturating_add(shard_energy);
         let g = self.groups.get_mut(&info.group).ok_or_else(|| {
             Error::Coordinator(format!("shard retired for unknown group {}", info.group))
         })?;
         g.done += 1;
+        g.energy_nj = g.energy_nj.saturating_add(shard_energy);
         g.min_start_ns = g.min_start_ns.min(call.start_ns);
         g.max_complete_ns = g.max_complete_ns.max(call.complete_ns);
         if let Some(w) = wall {
@@ -1782,6 +1880,7 @@ impl Vpe {
             iteration: g.iteration,
             target: g.primary.0,
             exec_ns: makespan_ns,
+            energy_nj: g.energy_nj,
             profiling_ns: cost.total_ns(),
             wrapper_ns,
             issue_ns: g.issue_ns,
@@ -1842,8 +1941,22 @@ impl Vpe {
                 target: c.target,
                 predicted_ns: c.predicted_ns,
                 amortized_ns: c.amortized_ns,
+                predicted_energy_nj: c.predicted_energy_nj,
+                amortized_energy_nj: c.amortized_energy_nj,
             })
             .collect();
+        // The host's own priced row — the stay-home baseline replayed
+        // energy-aware policies compare against.
+        let host = self.price_call_ns(kind, scale, TargetId::HOST).ok().map(|ns| {
+            let watts = self.soc.active_watts(TargetId::HOST);
+            super::trace::RecordedCandidate {
+                target: TargetId::HOST,
+                predicted_ns: ns,
+                amortized_ns: ns,
+                predicted_energy_nj: energy_nj(ns, watts),
+                amortized_energy_nj: energy_nj(ns, watts),
+            }
+        });
         // The counterfactual fan-out plan for this exact call: full
         // width, priced from the queue state at this retirement (a
         // replayed FanOut { width } re-plans from these rows).
@@ -1886,16 +1999,34 @@ impl Vpe {
                     })
                     .collect()
             });
+        // The power header rides the same registry-growth trigger: a
+        // spec's power model is fixed at registration too.
+        let power: Option<Vec<(TargetId, u64, u64)>> = self
+            .trace
+            .as_ref()
+            .filter(|t| t.meta.power.len() != n_targets)
+            .map(|_| {
+                self.soc
+                    .targets()
+                    .map(|(id, spec)| {
+                        (id, spec.power.eff_active_watts(), spec.power.eff_idle_watts())
+                    })
+                    .collect()
+            });
         let retire_epoch = self.queue.current_epoch();
         let trace = self.trace.as_mut().expect("checked");
         if let Some(setups) = setups {
             trace.meta.setups = setups;
+        }
+        if let Some(power) = power {
+            trace.meta.power = power;
         }
         trace.push(super::trace::TraceEntry {
             function: record.function.0,
             kind,
             executed_on: record.target,
             exec_ns: record.exec_ns,
+            energy_nj: record.energy_nj,
             profiling_ns: record.profiling_ns,
             cycles,
             issue_epoch,
@@ -1905,6 +2036,7 @@ impl Vpe {
             shards: record.shards,
             prices,
             candidates,
+            host,
             plan,
         });
     }
@@ -2040,6 +2172,22 @@ impl Vpe {
             }
         }
         let candidates = self.candidates_for(f)?;
+        // The host priced as a candidate row of its own — slot 0, no
+        // transport overhead, its own power model — so energy-aware
+        // policies have a stay-home baseline to beat.
+        let host = {
+            let binding = self.binding(f)?;
+            self.price_call_ns(binding.instance.kind, &binding.instance.scale, TargetId::HOST)
+                .ok()
+                .map(|ns| {
+                    Candidate::priced(
+                        TargetId::HOST,
+                        ns,
+                        ns,
+                        self.soc.active_watts(TargetId::HOST),
+                    )
+                })
+        };
         let irf = self
             .module
             .function(f)
@@ -2051,6 +2199,7 @@ impl Vpe {
             current: current_slot,
             is_hotspot: hotspot,
             candidates: &candidates,
+            host,
             op_mix: irf.op_mix,
             loop_depth: irf.loop_depth,
         };
@@ -2122,6 +2271,45 @@ impl Vpe {
     /// The per-target occupancy scheduler (busy-until marks, bounces).
     pub fn scheduler(&self) -> &TargetScheduler {
         &self.scheduler
+    }
+
+    /// Active energy charged by retired dispatches on `target`,
+    /// nanojoules.  Identically equal to the unit's effective active
+    /// watts times [`TargetScheduler::occupied_ns`] once everything in
+    /// flight has retired — the conservation invariant.
+    pub fn charged_energy_nj(&self, target: TargetId) -> u64 {
+        self.charged_energy_nj.get(&target).copied().unwrap_or(0)
+    }
+
+    /// Idle energy burned by `target` so far, nanojoules: its effective
+    /// idle watts integrated over the sim time it was *not* occupied
+    /// (now minus total occupied time, saturating while dispatches
+    /// still hold future timeline).  Zero under the default 0 W-idle
+    /// model.
+    pub fn idle_energy_nj(&self, target: TargetId) -> u64 {
+        let idle_ns = self
+            .clock
+            .now_ns()
+            .saturating_sub(self.scheduler.occupied_ns(target));
+        energy_nj(idle_ns, self.soc.idle_watts(target))
+    }
+
+    /// Total platform energy, nanojoules: every unit's charged active
+    /// energy plus its integrated idle energy.
+    pub fn total_energy_nj(&self) -> u64 {
+        self.soc
+            .targets()
+            .map(|(id, _)| {
+                self.charged_energy_nj(id).saturating_add(self.idle_energy_nj(id))
+            })
+            .fold(0u64, u64::saturating_add)
+    }
+
+    /// Cumulative energy charged by `tenant`'s completed serving
+    /// requests, nanojoules (0 for an unseen tenant) — what
+    /// [`VpeConfig::tenant_energy_budget_nj`] meters against.
+    pub fn tenant_energy_nj(&self, tenant: TenantId) -> u64 {
+        self.tenant_stats.get(&tenant).map(|a| a.energy_nj).unwrap_or(0)
     }
 
     /// Name of the active off-load policy.
@@ -2246,21 +2434,38 @@ impl Vpe {
                 self.learned_rows.len()
             ));
         }
+        // The second cost axis: active energy charged by retired
+        // dispatches plus idle draw integrated over the gaps.
+        let active: u64 = self
+            .soc
+            .targets()
+            .map(|(id, _)| self.charged_energy_nj(id))
+            .fold(0u64, u64::saturating_add);
+        if active > 0 {
+            let idle = self.total_energy_nj().saturating_sub(active);
+            out.push_str(&format!(
+                "energy: {:.3} mJ active + {:.3} mJ idle = {:.3} mJ total\n",
+                active as f64 / 1e6,
+                idle as f64 / 1e6,
+                (active.saturating_add(idle)) as f64 / 1e6
+            ));
+        }
         // Serving traffic, per tenant (only present when the serving
         // front-end was used).
         if !self.tenant_stats.is_empty() {
             out.push_str(
-                "serving (per tenant): submitted / completed / rejected, p50 / p99 latency\n",
+                "serving (per tenant): submitted / completed / rejected, p50 / p99 latency, energy\n",
             );
             for s in self.serving_stats() {
                 out.push_str(&format!(
-                    "  {}: {} / {} / {}, {:.1} ms / {:.1} ms\n",
+                    "  {}: {} / {} / {}, {:.1} ms / {:.1} ms, {:.3} mJ\n",
                     s.tenant,
                     s.submitted,
                     s.completed,
                     s.rejected,
                     s.p50_latency_ns as f64 / 1e6,
-                    s.p99_latency_ns as f64 / 1e6
+                    s.p99_latency_ns as f64 / 1e6,
+                    s.energy_nj as f64 / 1e6
                 ));
             }
         }
@@ -3001,5 +3206,46 @@ mod tests {
         assert_eq!(percentile_sorted(&xs, 0.50), 50);
         assert_eq!(percentile_sorted(&xs, 0.99), 99);
         assert_eq!(percentile_sorted(&xs, 1.0), 100);
+    }
+
+    #[test]
+    fn default_power_prices_energy_at_the_time_equivalence() {
+        // The degraded baseline: 1 W active / 0 W idle means every
+        // dispatch's joules numerically equal its busy nanoseconds, and
+        // the platform total is exactly the charged active energy.
+        let mut vpe = sim_vpe();
+        let f = vpe.register_workload(WorkloadKind::Dotprod).unwrap();
+        let recs = vpe.run(f, 12).unwrap();
+        for r in &recs {
+            assert_eq!(r.energy_nj, r.exec_ns, "1 W default breaks on {:?}", r.target);
+        }
+        for (id, _) in vpe.soc.targets() {
+            assert_eq!(
+                vpe.charged_energy_nj(id),
+                vpe.scheduler.occupied_ns(id),
+                "conservation at 1 W: joules == busy ns on {id}"
+            );
+        }
+        let active: u64 = recs.iter().map(|r| r.energy_nj).sum();
+        assert_eq!(vpe.total_energy_nj(), active, "0 W idle adds nothing");
+        assert!(vpe.report().contains("mJ total"), "report gains the energy line");
+    }
+
+    #[test]
+    fn config_power_model_applies_platform_wide() {
+        let mut cfg = VpeConfig::sim_only();
+        cfg.power = Some(PowerModel::new(3, 1));
+        let mut vpe = Vpe::new(cfg).unwrap();
+        assert_eq!(vpe.soc.active_watts(TargetId::HOST), 3);
+        assert_eq!(vpe.soc.active_watts(dm3730::DSP), 3);
+        assert_eq!(vpe.soc.idle_watts(dm3730::DSP), 1);
+        let f = vpe.register_workload(WorkloadKind::Dotprod).unwrap();
+        let recs = vpe.run(f, 8).unwrap();
+        for r in &recs {
+            assert_eq!(r.energy_nj, r.exec_ns * 3, "3 W scales every charge");
+        }
+        // Idle draw integrates over the un-occupied remainder of the run.
+        let active: u64 = recs.iter().map(|r| r.energy_nj).sum();
+        assert!(vpe.total_energy_nj() > active, "1 W idle must show up in the total");
     }
 }

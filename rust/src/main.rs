@@ -189,15 +189,21 @@ fn run() -> vpe::Result<()> {
             args.finish()?;
             let trace = vpe::coordinator::trace::Trace::load(std::path::Path::new(path))?;
             println!(
-                "trace: {} calls, {:.1} ms as recorded (format v{})",
+                "trace: {} calls, {:.1} ms / {:.3} mJ as recorded (format v{})",
                 trace.entries.len(),
                 trace.total_ms(),
+                trace.total_energy_nj() as f64 / 1e6,
                 trace.meta.version
             );
             if trace.degraded() {
                 println!(
                     "note: pre-v3 trace — no amortized prices, batch epochs or shard\n\
                      counterfactuals; replay degrades to lone-dispatch fidelity"
+                );
+            } else if trace.degraded_energy() {
+                println!(
+                    "note: pre-v4 trace — no recorded joules; energy degrades to the\n\
+                     1 W time-equivalence (mJ column numerically equals busy ms)"
                 );
             }
             println!();
@@ -211,18 +217,24 @@ fn run() -> vpe::Result<()> {
                 Box::<PredictivePolicy>::default(),
                 Box::<FanOutPolicy>::default(),
                 Box::new(EpsilonGreedyPolicy::new(0.1, 0xE95)),
+                // The what-if rows the energy axis exists for: how the
+                // same recorded run re-prices under joule-minimizing
+                // and EDP-minimizing placement.
+                Box::new(EnergyPolicy::new(EnergyPolicyConfig::default())),
+                Box::new(EdpPolicy::new(EnergyPolicyConfig::default())),
             ];
             println!(
-                "{:<18} {:>12} {:>7} {:>7} {:>9} {:>8} {:>8} {:>8} {:>9}",
-                "policy", "total ms", "host", "remote", "offloads", "reverts", "fanouts",
-                "batched", "diverged"
+                "{:<18} {:>12} {:>12} {:>7} {:>7} {:>9} {:>8} {:>8} {:>8} {:>9}",
+                "policy", "total ms", "total mJ", "host", "remote", "offloads", "reverts",
+                "fanouts", "batched", "diverged"
             );
             for p in policies.iter_mut() {
                 let o = vpe::coordinator::trace::replay(&trace, p.as_mut());
                 println!(
-                    "{:<18} {:>12.1} {:>7} {:>7} {:>9} {:>8} {:>8} {:>8} {:>9}",
+                    "{:<18} {:>12.1} {:>12.3} {:>7} {:>7} {:>9} {:>8} {:>8} {:>8} {:>9}",
                     o.policy,
                     o.total_ms,
+                    o.total_energy_nj as f64 / 1e6,
                     o.host_calls,
                     o.remote_calls,
                     o.offloads,

@@ -114,6 +114,20 @@ impl CostModel {
         per * items
     }
 
+    /// Pure-compute energy for `items` items on `target` at an
+    /// effective active draw of `watts`, nanojoules — the energy twin
+    /// of [`CostModel::exec_ns`] (1 W = 1 nJ/ns).  Same panic contract:
+    /// the rate row must exist.
+    pub fn exec_energy_nj(
+        &self,
+        kind: WorkloadKind,
+        items: f64,
+        target: TargetId,
+        watts: u64,
+    ) -> u64 {
+        super::registry::energy_nj(self.exec_ns(kind, items, target) as u64, watts)
+    }
+
     /// Compute-only speedup of `target` over the host for a workload
     /// (ignores dispatch setup); `None` if either row is missing.
     pub fn speedup(&self, kind: WorkloadKind, target: TargetId) -> Option<f64> {

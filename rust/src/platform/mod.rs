@@ -35,7 +35,9 @@ pub mod transport;
 
 pub use costmodel::CostModel;
 pub use memory::SharedRegion;
-pub use registry::{BackendKind, BuildKind, TargetRegistry, TargetSpec};
+pub use registry::{
+    energy_nj, BackendKind, BuildKind, FreqState, PowerModel, TargetRegistry, TargetSpec,
+};
 pub use soc::Soc;
 pub use target::{dm3730, TargetHealth, TargetId};
 pub use transfer::TransferModel;

@@ -70,6 +70,116 @@ impl BackendKind {
     }
 }
 
+/// One DVFS-style operating point: a clock multiplier applied to the
+/// unit's compute rate and a power multiplier applied to its active
+/// draw.  Lower clocks run slower but draw less — the classic
+/// voltage/frequency trade the energy policies reason about.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FreqState {
+    /// Clock multiplier relative to nominal (0.5 = half clock, compute
+    /// time doubles).  Must be positive.
+    pub freq_scale: f64,
+    /// Active-power multiplier relative to nominal at this point
+    /// (DVFS scales power superlinearly with clock, so a half-clock
+    /// state typically has `power_scale` well below 0.5).
+    pub power_scale: f64,
+}
+
+impl FreqState {
+    /// The nominal operating point: full clock, full power.
+    pub fn nominal() -> Self {
+        FreqState { freq_scale: 1.0, power_scale: 1.0 }
+    }
+}
+
+/// Per-target power model: active/idle draw plus DVFS operating points.
+///
+/// Watts are integers because 1 W = 1 nJ/ns on the sim clock: every
+/// energy charge is then an exact `u64` product of nanoseconds and
+/// watts, which is what lets the conservation invariant (sum of
+/// per-dispatch `energy_nj` == active watts × occupied ns) and the
+/// trace-replay joule reproduction hold bit-for-bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerModel {
+    /// Draw while executing a dispatch, watts (= nJ per ns) at the
+    /// nominal operating point.
+    pub active_watts: u64,
+    /// Draw while idle, watts.  Not scaled by DVFS states (leakage and
+    /// uncore dominate idle draw).
+    pub idle_watts: u64,
+    /// Available operating points; never empty (the default is a single
+    /// nominal state).
+    pub freq_states: Vec<FreqState>,
+    /// Index of the current operating point in `freq_states`.
+    pub current: usize,
+}
+
+impl Default for PowerModel {
+    /// 1 W active / 0 W idle at one nominal state: energy charges equal
+    /// busy nanoseconds, so platforms that never mention power get a
+    /// well-defined (time-proportional) energy axis for free.
+    fn default() -> Self {
+        PowerModel {
+            active_watts: 1,
+            idle_watts: 0,
+            freq_states: vec![FreqState::nominal()],
+            current: 0,
+        }
+    }
+}
+
+impl PowerModel {
+    /// A model with the given active/idle draw at a single nominal
+    /// operating point.
+    pub fn new(active_watts: u64, idle_watts: u64) -> Self {
+        PowerModel { active_watts, idle_watts, ..Default::default() }
+    }
+
+    /// Replace the operating points and select `current` (clamped into
+    /// range; an empty list falls back to the nominal state).
+    pub fn with_freq_states(mut self, states: Vec<FreqState>, current: usize) -> Self {
+        self.freq_states =
+            if states.is_empty() { vec![FreqState::nominal()] } else { states };
+        self.current = current.min(self.freq_states.len() - 1);
+        self
+    }
+
+    /// The current operating point.
+    pub fn state(&self) -> FreqState {
+        self.freq_states.get(self.current).copied().unwrap_or_else(FreqState::nominal)
+    }
+
+    /// Effective active draw at the current operating point, watts.
+    /// Rounded to an integer exactly once, here, so every layer that
+    /// charges energy multiplies by the same value and the accounting
+    /// stays exact.  Never below 1 W: a dispatching unit draws power.
+    pub fn eff_active_watts(&self) -> u64 {
+        ((self.active_watts as f64 * self.state().power_scale).round() as u64).max(1)
+    }
+
+    /// Effective idle draw, watts (operating points leave idle alone).
+    pub fn eff_idle_watts(&self) -> u64 {
+        self.idle_watts
+    }
+
+    /// Compute-time multiplier at the current operating point
+    /// (1 / freq_scale; a non-positive scale is treated as nominal).
+    pub fn time_factor(&self) -> f64 {
+        let fs = self.state().freq_scale;
+        if fs > 0.0 {
+            1.0 / fs
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Energy of `ns` busy nanoseconds at `watts`: the exact u64 product
+/// behind every `energy_nj` charge in the system (1 W = 1 nJ/ns).
+pub fn energy_nj(ns: u64, watts: u64) -> u64 {
+    ns.saturating_mul(watts)
+}
+
 /// Static description + dynamic health of one compute unit.
 #[derive(Debug, Clone)]
 pub struct TargetSpec {
@@ -90,6 +200,9 @@ pub struct TargetSpec {
     /// Which execution engine computes this unit's dispatched calls
     /// ([`BackendKind::Default`] follows the coordinator's config).
     pub backend: BackendKind,
+    /// Active/idle draw and DVFS operating points — the second cost
+    /// axis.  Defaults to 1 W active / 0 W idle at nominal clock.
+    pub power: PowerModel,
     /// Current health (dispatchability + slowdown factor).
     pub health: TargetHealth,
 }
@@ -106,6 +219,7 @@ impl TargetSpec {
             transport: Transport::default(),
             build: BuildKind::Tuned,
             backend: BackendKind::Default,
+            power: PowerModel::default(),
             health: TargetHealth::Healthy,
         }
     }
@@ -138,6 +252,12 @@ impl TargetSpec {
     /// [`BackendKind`]); the default follows the coordinator's config.
     pub fn with_backend(mut self, b: BackendKind) -> Self {
         self.backend = b;
+        self
+    }
+
+    /// Set the unit's power model (active/idle watts, DVFS states).
+    pub fn with_power(mut self, p: PowerModel) -> Self {
+        self.power = p;
         self
     }
 
@@ -257,6 +377,54 @@ mod tests {
         );
         assert_eq!(r.get(mc).unwrap().backend, BackendKind::Rayon);
         assert_eq!(BackendKind::Rayon.name(), "rayon");
+    }
+
+    #[test]
+    fn default_power_model_is_one_watt_time_equivalent() {
+        // Platforms that never mention power must keep energy == busy ns.
+        let spec = TargetSpec::new("plain", 1_000_000_000);
+        assert_eq!(spec.power.eff_active_watts(), 1);
+        assert_eq!(spec.power.eff_idle_watts(), 0);
+        assert_eq!(spec.power.time_factor(), 1.0);
+        assert_eq!(energy_nj(12_345, spec.power.eff_active_watts()), 12_345);
+    }
+
+    #[test]
+    fn freq_states_scale_rate_and_power() {
+        let p = PowerModel::new(4, 1).with_freq_states(
+            vec![
+                FreqState { freq_scale: 0.5, power_scale: 0.25 },
+                FreqState::nominal(),
+            ],
+            0,
+        );
+        // Half clock: compute time doubles, active draw quarters.
+        assert_eq!(p.time_factor(), 2.0);
+        assert_eq!(p.eff_active_watts(), 1);
+        assert_eq!(p.eff_idle_watts(), 1, "idle draw is not DVFS-scaled");
+        let nominal = PowerModel { current: 1, ..p.clone() };
+        assert_eq!(nominal.time_factor(), 1.0);
+        assert_eq!(nominal.eff_active_watts(), 4);
+    }
+
+    #[test]
+    fn freq_state_selection_is_clamped() {
+        let p = PowerModel::new(2, 0)
+            .with_freq_states(vec![FreqState::nominal()], 99);
+        assert_eq!(p.current, 0);
+        let empty = PowerModel::new(2, 0).with_freq_states(vec![], 0);
+        assert_eq!(empty.state(), FreqState::nominal());
+    }
+
+    #[test]
+    fn effective_watts_never_round_to_zero() {
+        // A dispatching unit draws power; the exactness contract needs
+        // a nonzero integer multiplier.
+        let p = PowerModel::new(1, 0).with_freq_states(
+            vec![FreqState { freq_scale: 0.25, power_scale: 0.1 }],
+            0,
+        );
+        assert_eq!(p.eff_active_watts(), 1);
     }
 
     #[test]

@@ -178,9 +178,38 @@ impl Soc {
         let rate = cost.rate_ns(kind, target).ok_or_else(|| {
             Error::Platform(format!("no cost-model row for {kind:?} on {target}"))
         })?;
-        let compute = rate * scale.items * if derate { slow } else { 1.0 };
+        // The DVFS operating point stretches compute only: transport
+        // overhead is interconnect time, not core cycles.
+        let compute =
+            rate * scale.items * if derate { slow } else { 1.0 } * t.power.time_factor();
         let overhead = if target.is_host() { 0 } else { t.transport.dispatch_ns(scale) };
         Ok(compute as u64 + overhead)
+    }
+
+    /// Effective active draw of `target` at its current operating
+    /// point, watts (1 W for unknown targets, matching the default
+    /// power model — callers on the pricing path have already
+    /// validated the slot).
+    pub fn active_watts(&self, target: TargetId) -> u64 {
+        self.target(target).map(|t| t.power.eff_active_watts()).unwrap_or(1)
+    }
+
+    /// Effective idle draw of `target`, watts (0 for unknown targets).
+    pub fn idle_watts(&self, target: TargetId) -> u64 {
+        self.target(target).map(|t| t.power.eff_idle_watts()).unwrap_or(0)
+    }
+
+    /// Energy of one call of `kind` at `scale` on `target`, nanojoules:
+    /// the priced wall time times the target's effective active draw
+    /// (1 W = 1 nJ/ns, so this is an exact integer product).
+    pub fn call_scaled_energy_nj(
+        &self,
+        kind: WorkloadKind,
+        scale: &PaperScale,
+        target: TargetId,
+    ) -> Result<u64> {
+        let ns = self.call_scaled_ns(kind, scale, target)?;
+        Ok(super::registry::energy_nj(ns, self.active_watts(target)))
     }
 
     /// [`Self::call_scaled_ns`] from bare items/param-bytes (no bulk
@@ -252,6 +281,39 @@ mod tests {
         let after = soc.call_ns(Matmul, 1e6, 0, dm3730::DSP).unwrap();
         let setup = soc.transfer.dispatch_ns(0);
         assert_eq!(after - setup, 2 * (before - setup));
+    }
+
+    #[test]
+    fn dvfs_states_stretch_compute_not_transport() {
+        use crate::platform::registry::{FreqState, PowerModel};
+        let mut soc = Soc::dm3730();
+        let before = soc.call_ns(Matmul, 1e6, 0, dm3730::DSP).unwrap();
+        let setup = soc.transfer.dispatch_ns(0);
+        soc.registry.get_mut(dm3730::DSP).unwrap().power = PowerModel::new(2, 0)
+            .with_freq_states(
+                vec![FreqState { freq_scale: 0.5, power_scale: 0.25 }],
+                0,
+            );
+        let after = soc.call_ns(Matmul, 1e6, 0, dm3730::DSP).unwrap();
+        assert_eq!(after - setup, 2 * (before - setup));
+    }
+
+    #[test]
+    fn energy_pricing_is_watts_times_wall_time() {
+        use crate::platform::registry::PowerModel;
+        let mut soc = Soc::dm3730();
+        // Default model: 1 W, so joules equal nanoseconds.
+        let scale = PaperScale { items: 1e6, param_bytes: 0, payload_bytes: 0 };
+        let ns = soc.call_scaled_ns(Matmul, &scale, dm3730::DSP).unwrap();
+        assert_eq!(soc.call_scaled_energy_nj(Matmul, &scale, dm3730::DSP).unwrap(), ns);
+        // An explicit 3 W model triples the charge exactly.
+        soc.registry.get_mut(dm3730::DSP).unwrap().power = PowerModel::new(3, 1);
+        assert_eq!(
+            soc.call_scaled_energy_nj(Matmul, &scale, dm3730::DSP).unwrap(),
+            3 * ns
+        );
+        assert_eq!(soc.active_watts(dm3730::DSP), 3);
+        assert_eq!(soc.idle_watts(dm3730::DSP), 1);
     }
 
     #[test]

@@ -172,6 +172,13 @@ impl Transport {
             + scales.iter().map(|s| self.dispatch_variable_ns(s)).sum::<u64>()
     }
 
+    /// Energy burned moving one dispatch of `scale` at an effective
+    /// draw of `watts` during the transfer, nanojoules — the energy
+    /// twin of [`Transport::dispatch_ns`] (1 W = 1 nJ/ns).
+    pub fn dispatch_energy_nj(&self, scale: &PaperScale, watts: u64) -> u64 {
+        super::registry::energy_nj(self.dispatch_ns(scale), watts)
+    }
+
     /// Transport name, for reports.
     pub fn name(&self) -> &'static str {
         match self {

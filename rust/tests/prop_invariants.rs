@@ -782,7 +782,7 @@ fn prop_fft_parseval_and_linearity() {
 /// A randomized v3 trace exercising every optional field: meta header,
 /// per-entry candidate slices, epochs, coalesced flags, shard counts
 /// and counterfactual plans.
-fn random_v3_trace(g: &mut vpe::util::prop::Gen) -> vpe::coordinator::trace::Trace {
+fn random_v4_trace(g: &mut vpe::util::prop::Gen) -> vpe::coordinator::trace::Trace {
     use vpe::coordinator::trace::{
         RecordedCandidate, RecordedPlan, RecordedShard, Trace, TraceEntry,
     };
@@ -796,6 +796,9 @@ fn random_v3_trace(g: &mut vpe::util::prop::Gen) -> vpe::coordinator::trace::Tra
     t.meta.setups = (0..units)
         .map(|s| (TargetId(s as u16), if s == 0 { 0 } else { g.u64_in(0, 1 << 40) }))
         .collect();
+    t.meta.power = (0..units)
+        .map(|s| (TargetId(s as u16), g.u64_in(1, 64), g.u64_in(0, 8)))
+        .collect();
     for i in 0..g.usize_in(1, 25) {
         let prices: Vec<(TargetId, u64)> =
             (0..units).map(|s| (TargetId(s as u16), g.u64_in(1, 1 << 50))).collect();
@@ -804,8 +807,17 @@ fn random_v3_trace(g: &mut vpe::util::prop::Gen) -> vpe::coordinator::trace::Tra
                 target: TargetId(s as u16),
                 predicted_ns: g.u64_in(1, 1 << 50),
                 amortized_ns: g.u64_in(1, 1 << 50),
+                predicted_energy_nj: g.u64_in(1, 1 << 55),
+                amortized_energy_nj: g.u64_in(1, 1 << 55),
             })
             .collect();
+        let host = g.bool().then(|| RecordedCandidate {
+            target: TargetId(0),
+            predicted_ns: g.u64_in(1, 1 << 50),
+            amortized_ns: g.u64_in(1, 1 << 50),
+            predicted_energy_nj: g.u64_in(1, 1 << 55),
+            amortized_energy_nj: g.u64_in(1, 1 << 55),
+        });
         let plan = g.bool().then(|| RecordedPlan {
             units: g.usize_in(2, 2000),
             items_per_unit: g.u64_in(1, 1 << 40) as f64 / 16.0,
@@ -824,6 +836,7 @@ fn random_v3_trace(g: &mut vpe::util::prop::Gen) -> vpe::coordinator::trace::Tra
             kind: *g.choose(&WorkloadKind::ALL),
             executed_on: TargetId(g.usize_in(0, units) as u16),
             exec_ns: g.u64_in(1, 1 << 50),
+            energy_nj: g.u64_in(1, 1 << 55),
             profiling_ns: g.u64_in(0, 1 << 30),
             cycles: g.u64_in(0, 1 << 50),
             issue_epoch: g.u64_in(0, i as u64 + 1),
@@ -833,6 +846,7 @@ fn random_v3_trace(g: &mut vpe::util::prop::Gen) -> vpe::coordinator::trace::Tra
             shards: g.usize_in(1, 5),
             prices,
             candidates,
+            host,
             plan,
         });
     }
@@ -840,14 +854,15 @@ fn random_v3_trace(g: &mut vpe::util::prop::Gen) -> vpe::coordinator::trace::Tra
 }
 
 #[test]
-fn prop_trace_v3_roundtrips_bit_exact() {
-    prop::check("trace v3 json roundtrip", 120, |g| {
-        let t = random_v3_trace(g);
+fn prop_trace_v4_roundtrips_bit_exact() {
+    prop::check("trace v4 json roundtrip", 120, |g| {
+        let t = random_v4_trace(g);
         let json = t.to_json();
         let back =
             vpe::coordinator::trace::Trace::from_json(&json).map_err(|e| e.to_string())?;
-        assert_prop(!back.degraded(), "a v3 document must not load degraded")?;
-        assert_prop(t == back, "amortized/shard fields must round-trip bit-exact")?;
+        assert_prop(!back.degraded(), "a v4 document must not load degraded")?;
+        assert_prop(!back.degraded_energy(), "a v4 document carries real joules")?;
+        assert_prop(t == back, "amortized/shard/energy fields must round-trip bit-exact")?;
         // And re-serializing is a fixed point.
         assert_prop(back.to_json() == json, "serialization must be stable")
     });
@@ -868,6 +883,107 @@ fn v2_documents_load_with_the_degraded_flag_not_a_parse_error() {
         &mut vpe::coordinator::policy::NeverOffloadPolicy,
     );
     assert!(out.degraded_fidelity, "replay must surface the degraded fidelity");
+}
+
+#[test]
+fn prop_energy_is_conserved_per_target() {
+    use vpe::platform::PowerModel;
+
+    prop::check("energy conservation", 40, |g| {
+        let (mut v, targets) = multi_target_vpe_with(g.u64_in(0, u64::MAX - 1), 2, 8);
+        // Distinct integer power models per unit, so a bookkeeping slip
+        // on any one target breaks the sums.
+        for (i, &t) in targets.iter().enumerate() {
+            let active = g.u64_in(1, 16) + i as u64;
+            let idle = g.u64_in(0, 3);
+            v.soc_mut().registry.get_mut(t).expect("registered").power =
+                PowerModel::new(active, idle);
+        }
+        let kinds = [WorkloadKind::Matmul, WorkloadKind::Dotprod, WorkloadKind::Conv2d];
+        let mut fns = Vec::new();
+        for kind in kinds {
+            fns.push(v.register_workload(kind).expect("register"));
+        }
+        let mut records = Vec::new();
+        for _ in 0..g.usize_in(5, 40) {
+            if g.bool() {
+                let f = *g.choose(&fns);
+                v.submit(f).expect("submit");
+            } else {
+                records.extend(v.drain().expect("drain"));
+            }
+        }
+        records.extend(v.drain().expect("drain"));
+
+        // (1) Conservation: per target, the charged joules are exactly
+        // its effective active watts times its cumulative busy time.
+        let mut total_charged = 0u64;
+        for &t in &targets {
+            let busy = v.scheduler().occupied_ns(t);
+            let watts = v.soc().active_watts(t);
+            let charged = v.charged_energy_nj(t);
+            assert_prop(
+                charged == busy * watts,
+                format!("{t}: charged {charged} nJ != {watts} W x {busy} ns"),
+            )?;
+            total_charged += charged;
+        }
+        // (2) Ledger: per-record charges sum to the per-target ledger.
+        let from_records: u64 = records.iter().map(|r| r.energy_nj).sum();
+        assert_prop(
+            from_records == total_charged,
+            format!("records sum {from_records} != target ledger {total_charged}"),
+        )?;
+        // (3) Idle integration: the platform total is the charged
+        // active energy plus every unit's idle-watts gap integral.
+        let idle: u64 = targets.iter().map(|&t| v.idle_energy_nj(t)).sum();
+        assert_prop(
+            v.total_energy_nj() == total_charged + idle,
+            format!(
+                "total {} != active {total_charged} + idle {idle}",
+                v.total_energy_nj()
+            ),
+        )
+    });
+}
+
+#[test]
+fn prop_same_policy_replay_reproduces_recorded_joules_exactly() {
+    use vpe::coordinator::policy::BlindOffloadPolicy;
+    use vpe::coordinator::VpeConfig;
+    use vpe::platform::PowerModel;
+
+    prop::check("v4 replay joule reproduction", 25, |g| {
+        let mut cfg = VpeConfig::sim_only();
+        cfg.seed = g.u64_in(0, u64::MAX - 1);
+        let mut v = vpe::coordinator::Vpe::new(cfg).expect("vpe");
+        // Asymmetric powers: the host frugal, the DSP hungry — recorded
+        // joules are far from the 1 W time-equivalence.
+        v.soc_mut().registry.get_mut(dm3730::ARM).expect("arm").power =
+            PowerModel::new(g.u64_in(1, 4), 0);
+        v.soc_mut().registry.get_mut(dm3730::DSP).expect("dsp").power =
+            PowerModel::new(g.u64_in(2, 9), 1);
+        v.enable_tracing();
+        let f = v.register_workload(*g.choose(&WorkloadKind::ALL)).expect("register");
+        v.run(f, g.usize_in(8, 25)).expect("run");
+        let trace = v.trace().expect("tracing enabled").clone();
+        assert_prop(!trace.degraded_energy(), "fresh traces carry joules")?;
+        let out =
+            vpe::coordinator::trace::replay(&trace, &mut BlindOffloadPolicy::default());
+        assert_prop(out.diverged() == 0, out.divergence_report())?;
+        assert_prop(
+            out.total_ns == trace.total_ns(),
+            format!("replayed ns {} != recorded {}", out.total_ns, trace.total_ns()),
+        )?;
+        assert_prop(
+            out.total_energy_nj == trace.total_energy_nj(),
+            format!(
+                "replayed nJ {} != recorded {}",
+                out.total_energy_nj,
+                trace.total_energy_nj()
+            ),
+        )
+    });
 }
 
 // ---------------------------------------------------------------------------
