@@ -6,12 +6,18 @@
 //!   phase 1: matmul runs hot, VPE offloads it to the DSP;
 //!   phase 2: the DSP dies mid-run — the very next call transparently
 //!            fails over to the ARM core (no error reaches the app);
-//!   phase 3: the DSP comes back — VPE re-profiles and re-offloads.
+//!   phase 3: the DSP comes back — VPE re-profiles and re-offloads;
+//!   phase 4: the failure hits the *async* path — queued submits are
+//!            mid-flight when a scripted fault kills the DSP; the
+//!            salvage machinery retries them on the host and the event
+//!            log shows the recovery in order:
+//!            TargetFailed -> DispatchRetried -> TargetRecovered.
 //!
 //! `cargo run --release --example failure_recovery`
 
-use vpe::coordinator::{Vpe, VpeConfig};
+use vpe::coordinator::{CallOutcome, Vpe, VpeConfig, VpeEvent};
 use vpe::platform::{dm3730, TargetId};
+use vpe::sim::FaultInjector;
 use vpe::workloads::WorkloadKind;
 
 fn main() -> vpe::Result<()> {
@@ -24,7 +30,7 @@ fn main() -> vpe::Result<()> {
     println!("  matmul is on the DSP after {} calls", 15);
 
     println!("phase 2: DSP hardware failure injected");
-    vpe.soc_mut().fail_target(dm3730::DSP);
+    vpe.fail_target(dm3730::DSP)?;
     let recs = vpe.run(f, 10)?;
     // Every call still succeeded — on the host.
     assert!(recs.iter().all(|r| r.target == TargetId::HOST));
@@ -32,10 +38,55 @@ fn main() -> vpe::Result<()> {
     println!("  10/10 calls served locally, zero failures surfaced to the app");
 
     println!("phase 3: DSP restored");
-    vpe.soc_mut().heal_target(dm3730::DSP);
+    vpe.heal_target(dm3730::DSP);
     vpe.run(f, 15)?;
     assert_eq!(vpe.current_target(f)?, dm3730::DSP);
     println!("  VPE re-profiled and re-offloaded");
+
+    println!("phase 4: mid-flight failure on the async submit/drain path");
+    let mark = vpe.events().iter().count();
+    // Script the fault in virtual time: the DSP dies 1 ms into the
+    // queued work's run and heals 50 ms later — while retried work is
+    // still draining on the host.
+    let now = vpe.clock().now_ns();
+    vpe.set_fault_injector(
+        FaultInjector::new(9)
+            .fail_at(now + 1_000_000, dm3730::DSP)
+            .heal_at(now + 50_000_000, dm3730::DSP),
+    );
+    for _ in 0..4 {
+        vpe.submit(f)?;
+    }
+    let recs = vpe.drain()?;
+    assert_eq!(recs.len(), 4);
+    assert!(
+        recs.iter().all(|r| r.outcome == CallOutcome::Ok),
+        "no error reaches the app: every queued call still resolves Ok"
+    );
+    assert!(
+        recs.iter().any(|r| r.target == TargetId::HOST),
+        "salvaged work must have landed on the survivor"
+    );
+    let (retries, rerouted, _, failed) = vpe.recovery_counters();
+    assert!(retries + rerouted >= 1, "salvage must actually engage");
+    assert_eq!(failed, 0);
+    // The recovery events appear, in order.
+    let order: Vec<&str> = vpe
+        .events()
+        .iter()
+        .skip(mark)
+        .filter_map(|(_, e)| match e {
+            VpeEvent::TargetFailed { .. } => Some("failed"),
+            VpeEvent::DispatchRetried { .. } => Some("retried"),
+            VpeEvent::TargetRecovered { .. } => Some("recovered"),
+            _ => None,
+        })
+        .collect();
+    let fi = order.iter().position(|s| *s == "failed").expect("TargetFailed logged");
+    let ri = order.iter().position(|s| *s == "retried").expect("DispatchRetried logged");
+    let hi = order.iter().rposition(|s| *s == "recovered").expect("TargetRecovered logged");
+    assert!(fi < ri && ri < hi, "recovery events out of order: {order:?}");
+    println!("  4/4 queued calls salvaged; event order: {}", order.join(" -> "));
 
     println!("\nevent trace:\n{}", vpe.events().to_text());
     Ok(())

@@ -113,6 +113,24 @@ pub fn apply(base: VpeConfig, doc: &Json) -> Result<VpeConfig> {
         }
         cfg.tenant_energy_budget_nj = Some(v);
     }
+    if let Some(v) = u64_of(doc, "max_retries")? {
+        cfg.max_retries = v as u32;
+    }
+    if let Some(v) = u64_of(doc, "retry_backoff_ns")? {
+        if v == 0 {
+            return Err(Error::Config("'retry_backoff_ns' must be >= 1".into()));
+        }
+        cfg.retry_backoff_ns = v;
+    }
+    if let Some(v) = u64_of(doc, "quarantine_threshold")? {
+        cfg.quarantine_threshold = v as u32;
+    }
+    if let Some(v) = u64_of(doc, "probe_interval_ns")? {
+        if v == 0 {
+            return Err(Error::Config("'probe_interval_ns' must be >= 1".into()));
+        }
+        cfg.probe_interval_ns = v;
+    }
     if let Some(v) = doc.get("objective") {
         let name = v
             .as_str()
@@ -245,6 +263,10 @@ mod tests {
             "drr_quantum_ns": 5000000,
             "drr_quantum_nj": 20000000,
             "tenant_energy_budget_nj": 4000000000,
+            "max_retries": 5,
+            "retry_backoff_ns": 750000,
+            "quarantine_threshold": 2,
+            "probe_interval_ns": 80000000,
             "objective": "edp",
             "power": {"active_watts": 4, "idle_watts": 1,
                       "freq_states": [{"freq_scale": 1.0, "power_scale": 1.0},
@@ -273,6 +295,10 @@ mod tests {
         assert_eq!(cfg.drr_quantum_ns, 5_000_000);
         assert_eq!(cfg.drr_quantum_nj, Some(20_000_000));
         assert_eq!(cfg.tenant_energy_budget_nj, Some(4_000_000_000));
+        assert_eq!(cfg.max_retries, 5);
+        assert_eq!(cfg.retry_backoff_ns, 750_000);
+        assert_eq!(cfg.quarantine_threshold, 2);
+        assert_eq!(cfg.probe_interval_ns, 80_000_000);
         assert_eq!(cfg.objective, Objective::Edp);
         let power = cfg.power.as_ref().unwrap();
         assert_eq!(power.active_watts, 4);
@@ -322,6 +348,23 @@ mod tests {
         // A zero deadline is legal: it disables preemption.
         let doc = json::parse(r#"{"deadline_ns": 0}"#).unwrap();
         assert_eq!(apply(VpeConfig::default(), &doc).unwrap().deadline_ns, 0);
+    }
+
+    #[test]
+    fn recovery_bounds_enforced() {
+        for bad in [
+            r#"{"retry_backoff_ns": 0}"#,
+            r#"{"probe_interval_ns": 0}"#,
+        ] {
+            let doc = json::parse(bad).unwrap();
+            assert!(apply(VpeConfig::default(), &doc).is_err(), "{bad} must be rejected");
+        }
+        // Zero retries (fail immediately) and a zero quarantine
+        // threshold (breaker disabled) are both legal knob settings.
+        let doc = json::parse(r#"{"max_retries": 0, "quarantine_threshold": 0}"#).unwrap();
+        let cfg = apply(VpeConfig::default(), &doc).unwrap();
+        assert_eq!(cfg.max_retries, 0);
+        assert_eq!(cfg.quarantine_threshold, 0);
     }
 
     #[test]

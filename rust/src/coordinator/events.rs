@@ -107,6 +107,33 @@ pub enum VpeEvent {
         predicted_ns: u64,
         deadline_ns: u64,
     },
+    /// A target hard-failed mid-run (scripted fault, flaky dispatch, or
+    /// operator `fail_target`), with the staged + in-flight work that
+    /// had to be salvaged off it.
+    TargetFailed { target: TargetId, staged: usize, inflight: usize },
+    /// A previously failed or quarantined target completed a successful
+    /// dispatch again and rejoined the candidate set.
+    TargetRecovered { target: TargetId },
+    /// A single dispatch was re-dispatched after its target failed
+    /// (`attempt` counts retries of this ticket, starting at 1), priced
+    /// with `backoff_ns` of exponential backoff in virtual time.
+    DispatchRetried {
+        function: FunctionId,
+        from: TargetId,
+        to: TargetId,
+        attempt: u32,
+        backoff_ns: u64,
+    },
+    /// A lost fan-out shard was re-planned onto a surviving unit via
+    /// the shard planner (same group/index, new target).
+    ShardReplanned { function: FunctionId, group: u64, index: usize, from: TargetId, to: TargetId },
+    /// The circuit breaker opened: `failures` consecutive failures
+    /// quarantined the target until a half-open probe at `probe_at_ns`.
+    TargetQuarantined { target: TargetId, failures: u32, probe_at_ns: u64 },
+    /// The circuit breaker moved to half-open: the target is eligible
+    /// for one probe dispatch (success closes the breaker, failure
+    /// re-opens it).
+    TargetProbed { target: TargetId },
 }
 
 /// Append-only log of (sim-time ns, event), optionally bounded: a
@@ -246,6 +273,72 @@ impl EventLog {
             .collect()
     }
 
+    /// All mid-run target failures: `(time, target, staged, inflight)`,
+    /// in order.
+    pub fn target_failures(&self) -> Vec<(u64, TargetId, usize, usize)> {
+        self.entries
+            .iter()
+            .filter_map(|(t, e)| match e {
+                VpeEvent::TargetFailed { target, staged, inflight } => {
+                    Some((*t, *target, *staged, *inflight))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// All target recoveries: `(time, target)`, in order.
+    pub fn target_recoveries(&self) -> Vec<(u64, TargetId)> {
+        self.entries
+            .iter()
+            .filter_map(|(t, e)| match e {
+                VpeEvent::TargetRecovered { target } => Some((*t, *target)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// All dispatch retries: `(time, function, from, to, attempt)`, in
+    /// order.
+    pub fn retries(&self) -> Vec<(u64, FunctionId, TargetId, TargetId, u32)> {
+        self.entries
+            .iter()
+            .filter_map(|(t, e)| match e {
+                VpeEvent::DispatchRetried { function, from, to, attempt, .. } => {
+                    Some((*t, *function, *from, *to, *attempt))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// All shard re-plans: `(time, group, index, from, to)`, in order.
+    pub fn shard_replans(&self) -> Vec<(u64, u64, usize, TargetId, TargetId)> {
+        self.entries
+            .iter()
+            .filter_map(|(t, e)| match e {
+                VpeEvent::ShardReplanned { group, index, from, to, .. } => {
+                    Some((*t, *group, *index, *from, *to))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// All circuit-breaker quarantines: `(time, target, failures)`, in
+    /// order.
+    pub fn quarantines(&self) -> Vec<(u64, TargetId, u32)> {
+        self.entries
+            .iter()
+            .filter_map(|(t, e)| match e {
+                VpeEvent::TargetQuarantined { target, failures, .. } => {
+                    Some((*t, *target, *failures))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
     /// All revert events, in order.
     pub fn reverts(&self) -> Vec<(u64, FunctionId, RevertReason)> {
         self.entries
@@ -327,5 +420,29 @@ mod tests {
         });
         assert_eq!(log.rejections(), vec![(9, t, RejectReason::TenantQuota)]);
         assert_eq!(log.preemptions(), vec![(12, t, f, 4)]);
+    }
+
+    #[test]
+    fn recovery_filters_pick_out_the_failure_story() {
+        let mut log = EventLog::new();
+        let f = FunctionId(2);
+        let (a, b) = (TargetId(1), TargetId(2));
+        log.push(10, VpeEvent::TargetFailed { target: a, staged: 3, inflight: 1 });
+        log.push(11, VpeEvent::DispatchRetried {
+            function: f,
+            from: a,
+            to: b,
+            attempt: 1,
+            backoff_ns: 500,
+        });
+        log.push(12, VpeEvent::ShardReplanned { function: f, group: 7, index: 2, from: a, to: b });
+        log.push(13, VpeEvent::TargetQuarantined { target: a, failures: 3, probe_at_ns: 99 });
+        log.push(14, VpeEvent::TargetProbed { target: a });
+        log.push(15, VpeEvent::TargetRecovered { target: a });
+        assert_eq!(log.target_failures(), vec![(10, a, 3, 1)]);
+        assert_eq!(log.retries(), vec![(11, f, a, b, 1)]);
+        assert_eq!(log.shard_replans(), vec![(12, 7, 2, a, b)]);
+        assert_eq!(log.quarantines(), vec![(13, a, 3)]);
+        assert_eq!(log.target_recoveries(), vec![(15, a)]);
     }
 }

@@ -19,4 +19,4 @@ pub use policy::{BlindOffloadPolicy, Candidate, OffloadPolicy, PolicyAction};
 pub use queue::{DispatchQueue, TenantId, TicketId};
 pub use serving::{AdmitOutcome, Completion, Server};
 pub use shard::{Objective, PlanTarget, PlannedShard, ShardPlan};
-pub use vpe::{CallRecord, TenantServingStats, Vpe, VpeConfig};
+pub use vpe::{CallOutcome, CallRecord, FailReason, TenantServingStats, Vpe, VpeConfig};

@@ -280,6 +280,50 @@ impl DispatchQueue {
         Some(call)
     }
 
+    /// Completion time of the earliest-completing in-flight call,
+    /// without removing it.  The coordinator compares this against the
+    /// fault injector's next scripted event to decide which fires
+    /// first.
+    pub fn peek_earliest_complete_ns(&self) -> Option<u64> {
+        self.inflight.peek().map(|e| e.0.complete_ns)
+    }
+
+    /// Pull every in-flight call on `target` out of the heap (issue
+    /// order), leaving other targets' calls untouched — the salvage
+    /// path when a target dies mid-flight.  The extracted calls are
+    /// *not* counted as retired: the caller either re-dispatches each
+    /// one (`push_flushed`, keeping its ticket) or abandons it with
+    /// [`DispatchQueue::retire_external`], so `submitted == retired +
+    /// len` holds once salvage completes.  O(n) — failures are rare.
+    pub fn extract_on(&mut self, target: TargetId) -> Vec<InFlight> {
+        if self.inflight_on.get(&target).copied().unwrap_or(0) == 0 {
+            return Vec::new();
+        }
+        let mut kept = Vec::new();
+        let mut taken = Vec::new();
+        while let Some(QueueEntry(c)) = self.inflight.pop() {
+            if c.target == target {
+                taken.push(c);
+            } else {
+                kept.push(c);
+            }
+        }
+        for c in kept {
+            self.inflight.push(QueueEntry(c));
+        }
+        self.inflight_on.remove(&target);
+        taken.sort_by_key(|c| c.ticket);
+        taken
+    }
+
+    /// Account one dispatch that left the queue through salvage
+    /// (extracted or taken from a forming batch) and will never
+    /// re-enter it — it resolves externally as a failed call.  Restores
+    /// `submitted == retired + len`.
+    pub fn retire_external(&mut self) {
+        self.retired += 1;
+    }
+
     /// Stage a dispatch into its target's forming batch; returns the
     /// batch width after joining.  Staging is acceptance: the dispatch
     /// counts as submitted now (its ticket is out), not at flush.  The
@@ -297,6 +341,16 @@ impl DispatchQueue {
     /// Take (and clear) the forming batch for `target`, in issue order.
     pub fn take_forming(&mut self, target: TargetId) -> Vec<PendingDispatch> {
         self.forming.remove(&target).unwrap_or_default()
+    }
+
+    /// Re-stage a dispatch that was already accepted (counted at its
+    /// original `stage`/`push`) into its target's forming batch —
+    /// salvage of batch followers onto a surviving unit.  Returns the
+    /// batch width after joining.  Does *not* count toward `submitted`.
+    pub fn restage(&mut self, pending: PendingDispatch) -> usize {
+        let batch = self.forming.entry(pending.target).or_default();
+        batch.push(pending);
+        batch.len()
     }
 
     /// Targets that currently have a forming batch, ascending by slot.
@@ -597,6 +651,76 @@ mod tests {
         for &t in &targets {
             assert_eq!(q.depth_on(t), 0);
         }
+    }
+
+    #[test]
+    fn peek_matches_next_pop_without_consuming() {
+        let mut q = DispatchQueue::new();
+        assert_eq!(q.peek_earliest_complete_ns(), None);
+        call(&mut q, dm3730::DSP, 0, 0, 1000);
+        call(&mut q, TargetId(2), 1, 1, 10);
+        assert_eq!(q.peek_earliest_complete_ns(), Some(11));
+        assert_eq!(q.peek_earliest_complete_ns(), Some(11), "peek is non-consuming");
+        assert_eq!(q.pop_earliest().unwrap().complete_ns, 11);
+        assert_eq!(q.peek_earliest_complete_ns(), Some(1000));
+    }
+
+    #[test]
+    fn extract_on_pulls_one_targets_calls_in_issue_order() {
+        let mut q = DispatchQueue::new();
+        let a = call(&mut q, dm3730::DSP, 0, 0, 900); // completes last
+        let b = call(&mut q, TargetId(2), 1, 1, 10);
+        let c = call(&mut q, dm3730::DSP, 2, 900, 50); // completes before `a`? no: 950
+        assert_eq!(q.submitted(), 3);
+
+        let taken = q.extract_on(dm3730::DSP);
+        assert_eq!(
+            taken.iter().map(|x| x.ticket).collect::<Vec<_>>(),
+            vec![a, c],
+            "issue order, not completion order"
+        );
+        assert_eq!(q.depth_on(dm3730::DSP), 0);
+        assert_eq!(q.depth_on(TargetId(2)), 1);
+        assert_eq!(q.len(), 1);
+        // Survivors are untouched and still retire normally.
+        assert_eq!(q.pop_earliest().unwrap().ticket, b);
+        // Re-dispatch one extracted call, abandon the other: the
+        // accounting invariant is restored.
+        let mut kept = taken.into_iter();
+        let redispatch = kept.next().unwrap();
+        q.push_flushed(InFlight { start_ns: 10, complete_ns: 910, ..redispatch });
+        q.retire_external(); // the abandoned one
+        assert_eq!(q.submitted(), q.retired() + q.len() as u64);
+        assert_eq!(q.pop_earliest().unwrap().ticket, a);
+        assert_eq!(q.submitted(), q.retired());
+    }
+
+    #[test]
+    fn extract_on_is_a_noop_for_idle_targets() {
+        let mut q = DispatchQueue::new();
+        call(&mut q, dm3730::DSP, 0, 0, 100);
+        assert!(q.extract_on(TargetId(7)).is_empty());
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.depth_on(dm3730::DSP), 1);
+    }
+
+    #[test]
+    fn restage_moves_followers_without_recounting() {
+        let mut q = DispatchQueue::new();
+        pending(&mut q, dm3730::DSP, 0, 100);
+        pending(&mut q, dm3730::DSP, 1, 200);
+        assert_eq!(q.submitted(), 2);
+        // The target dies: its forming batch re-enters formation on a
+        // survivor, keeping tickets and the submitted count.
+        for mut p in q.take_forming(dm3730::DSP) {
+            p.target = TargetId(2);
+            q.restage(p);
+        }
+        assert_eq!(q.submitted(), 2, "restage is not a new submission");
+        assert_eq!(q.forming_on(TargetId(2)), 2);
+        assert_eq!(q.submitted(), q.retired() + q.len() as u64);
+        let batch = q.take_forming(TargetId(2));
+        assert!(batch[0].ticket < batch[1].ticket, "FIFO preserved across restage");
     }
 
     #[test]

@@ -46,6 +46,28 @@ impl TargetScheduler {
         self.occupied_ns.get(&t).copied().unwrap_or(0)
     }
 
+    /// Give back `dur_ns` of previously charged occupancy on `t` — the
+    /// salvage path when a target dies mid-dispatch: the un-run tail of
+    /// the interrupted call is refunded so `occupied_ns` keeps counting
+    /// only time the unit actually worked (the energy-conservation
+    /// invariant multiplies it by watts).
+    pub fn release(&mut self, t: TargetId, dur_ns: u64) {
+        if let Some(o) = self.occupied_ns.get_mut(&t) {
+            *o = o.saturating_sub(dur_ns);
+        }
+    }
+
+    /// Clamp `t`'s busy-until mark down to `now_ns` — its in-flight
+    /// work was cancelled, so the timeline beyond `now_ns` is free
+    /// again (for whenever the target heals).  `occupy` only ever
+    /// extends; this is the one operation that shrinks, and only the
+    /// failure path calls it.
+    pub fn interrupt(&mut self, t: TargetId, now_ns: u64) {
+        if let Some(u) = self.busy_until_ns.get_mut(&t) {
+            *u = (*u).min(now_ns);
+        }
+    }
+
     /// Record a dispatch bounced back to the host because the remote was
     /// busy.
     pub fn record_bounce(&mut self) {
@@ -116,6 +138,31 @@ mod tests {
         s.occupy(dm3730::ARM, 0, 7);
         assert_eq!(s.occupied_ns(dm3730::DSP), 150);
         assert_eq!(s.occupied_ns(dm3730::ARM), 7);
+    }
+
+    #[test]
+    fn release_refunds_unrun_occupancy() {
+        let mut s = TargetScheduler::new();
+        s.occupy(dm3730::DSP, 0, 1000);
+        s.release(dm3730::DSP, 400); // call killed 600 ns in
+        assert_eq!(s.occupied_ns(dm3730::DSP), 600);
+        s.release(dm3730::DSP, 10_000); // over-release saturates at 0
+        assert_eq!(s.occupied_ns(dm3730::DSP), 0);
+        s.release(dm3730::ARM, 50); // never-occupied target: no-op
+        assert_eq!(s.occupied_ns(dm3730::ARM), 0);
+    }
+
+    #[test]
+    fn interrupt_clamps_busy_until_down_only() {
+        let mut s = TargetScheduler::new();
+        s.occupy(dm3730::DSP, 0, 1000);
+        s.interrupt(dm3730::DSP, 600);
+        assert_eq!(s.busy_until(dm3730::DSP), 600);
+        assert!(!s.is_busy(dm3730::DSP, 600));
+        s.interrupt(dm3730::DSP, 900); // never extends
+        assert_eq!(s.busy_until(dm3730::DSP), 600);
+        s.interrupt(dm3730::ARM, 50); // untracked target stays free
+        assert_eq!(s.busy_until(dm3730::ARM), 0);
     }
 
     #[test]

@@ -41,7 +41,7 @@ use crate::profiler::counters::CounterSample;
 use crate::profiler::hotspot::HotspotDetector;
 use crate::profiler::sampler::{PerfSampler, SamplerConfig};
 use crate::runtime::backend::{ExecRequest, ExecutionBackend, SimBackend};
-use crate::sim::{SimClock, SimRng};
+use crate::sim::{FaultAction, FaultInjector, SimClock, SimRng};
 use crate::workloads::{self, PaperScale, Tensor, WorkloadInstance, WorkloadKind};
 
 use super::events::{EventLog, RejectReason, VpeEvent};
@@ -164,6 +164,25 @@ pub struct VpeConfig {
     /// [`RejectReason::TenantEnergyBudget`].  Default: `None`
     /// (unmetered).
     pub tenant_energy_budget_nj: Option<u64>,
+    /// Failure recovery: how many times one dispatch may be re-issued
+    /// after losing its target (hard failure mid-flight) or failing
+    /// transiently (flaky injection) before it resolves with
+    /// [`FailReason::RetriesExhausted`].  Default: `3`.
+    pub max_retries: u32,
+    /// Failure recovery: base re-dispatch delay, ns of virtual time.
+    /// Attempt `n` waits `retry_backoff_ns << (n - 1)` before its
+    /// earliest start — bounded exponential backoff priced on the sim
+    /// clock.  Default: `500_000` (0.5 ms).
+    pub retry_backoff_ns: u64,
+    /// Circuit breaker: consecutive dispatch failures on one target
+    /// before it is quarantined (excluded from candidate slices, batch
+    /// formation, and fan-out plans) until a half-open probe succeeds.
+    /// `0` disables the breaker.  Default: `3`.
+    pub quarantine_threshold: u32,
+    /// Circuit breaker: how long a quarantined target stays open before
+    /// a half-open probe dispatch is allowed, ns of virtual time.
+    /// Default: `50_000_000` (50 ms).
+    pub probe_interval_ns: u64,
 }
 
 impl Default for VpeConfig {
@@ -189,6 +208,10 @@ impl Default for VpeConfig {
             power: None,
             drr_quantum_nj: None,
             tenant_energy_budget_nj: None,
+            max_retries: 3,
+            retry_backoff_ns: 500_000,
+            quarantine_threshold: 3,
+            probe_interval_ns: 50_000_000,
         }
     }
 }
@@ -197,6 +220,41 @@ impl VpeConfig {
     /// Simulation-only config (no backend numerics).
     pub fn sim_only() -> Self {
         VpeConfig { artifacts_dir: None, verify_outputs: false, ..Default::default() }
+    }
+}
+
+/// Why a call resolved with a failure instead of a result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailReason {
+    /// The dispatch was re-issued [`VpeConfig::max_retries`] times and
+    /// every attempt failed.
+    RetriesExhausted,
+    /// The target was lost and no surviving unit (host included) could
+    /// price the work.
+    TargetLost,
+    /// Fail-fast: even the cheapest surviving route could not finish
+    /// inside [`VpeConfig::deadline_ns`], so the call resolved
+    /// immediately instead of burning a doomed retry.
+    DeadlineImpossible,
+}
+
+/// How a call resolved: with a result, or with a typed error.  Every
+/// admitted call resolves exactly once either way — failure is a
+/// *resolution*, not a stranded handle (see ARCHITECTURE.md "Failure
+/// recovery").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CallOutcome {
+    /// The call completed and its record's timings/energy are real.
+    Ok,
+    /// The call was abandoned by the failure machinery; the record
+    /// carries zero exec/energy and the reason.
+    Failed(FailReason),
+}
+
+impl CallOutcome {
+    /// Did the call complete successfully?
+    pub fn is_ok(&self) -> bool {
+        matches!(self, CallOutcome::Ok)
     }
 }
 
@@ -241,6 +299,10 @@ pub struct CallRecord {
     /// The serving tenant the call was submitted for, if it came
     /// through the serving front-end (see [`super::serving`]).
     pub tenant: Option<TenantId>,
+    /// How the call resolved: [`CallOutcome::Ok`] with real timings, or
+    /// a typed failure once retries were exhausted or success became
+    /// impossible.
+    pub outcome: CallOutcome,
 }
 
 impl CallRecord {
@@ -285,6 +347,10 @@ pub struct TenantServingStats {
     pub completed: u64,
     /// Requests rejected by admission control.
     pub rejected: u64,
+    /// Admitted requests that resolved with a typed failure
+    /// ([`CallOutcome::Failed`]) — retries exhausted or success
+    /// impossible.  Not counted in `completed`.
+    pub failed: u64,
     /// Median completion latency (ingest → retirement), ns; 0 before
     /// the first completion.
     pub p50_latency_ns: u64,
@@ -303,6 +369,7 @@ struct TenantAccum {
     submitted: u64,
     completed: u64,
     rejected: u64,
+    failed: u64,
     latencies: Vec<u64>,
     energy_nj: u64,
 }
@@ -338,6 +405,24 @@ struct ShardGroup {
     custom: Option<Vec<Tensor>>,
     /// The serving tenant the group was submitted for, if any.
     tenant: Option<TenantId>,
+}
+
+/// Circuit-breaker state for one target (see ARCHITECTURE.md "Failure
+/// recovery"): `Closed` admits traffic, `Open` quarantines the target
+/// until its probe time, `HalfOpen` admits probe traffic whose first
+/// success closes the breaker and whose failure re-opens it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum BreakerState {
+    Closed,
+    Open { probe_at_ns: u64 },
+    HalfOpen,
+}
+
+/// Per-target consecutive-failure tracker behind the quarantine logic.
+#[derive(Debug, Clone, Copy)]
+struct Breaker {
+    consecutive_failures: u32,
+    state: BreakerState,
 }
 
 /// The VPE coordinator.
@@ -395,6 +480,27 @@ pub struct Vpe {
     /// scheduler's occupied time — the conservation invariant the
     /// property tests pin down.
     charged_energy_nj: HashMap<TargetId, u64>,
+    /// Scripted fault source polled as virtual time advances; `None`
+    /// (the default) keeps the coordinator bit-identical to builds
+    /// without the recovery machinery.
+    injector: Option<FaultInjector>,
+    /// Per-target circuit breakers (created lazily at a target's first
+    /// dispatch failure).
+    breakers: HashMap<TargetId, Breaker>,
+    /// Re-issue attempts per still-unresolved ticket (cleared on
+    /// retirement).
+    retries: HashMap<TicketId, u32>,
+    /// Calls the failure machinery resolved out-of-band (retries
+    /// exhausted, abandoned shard groups); `retire_earliest` surfaces
+    /// them before consulting the heap, so every admitted ticket still
+    /// flows through the one resolution point.
+    salvaged: VecDeque<Retired>,
+    /// Recovery counters surfaced by [`Vpe::report`].
+    retries_attempted: u64,
+    dispatches_rerouted: u64,
+    shards_replanned: u64,
+    resolved_ok: u64,
+    resolved_failed: u64,
 }
 
 impl std::fmt::Debug for Vpe {
@@ -487,6 +593,15 @@ impl Vpe {
             completions: HashMap::new(),
             tenant_stats: BTreeMap::new(),
             charged_energy_nj: HashMap::new(),
+            injector: None,
+            breakers: HashMap::new(),
+            retries: HashMap::new(),
+            salvaged: VecDeque::new(),
+            retries_attempted: 0,
+            dispatches_rerouted: 0,
+            shards_replanned: 0,
+            resolved_ok: 0,
+            resolved_failed: 0,
             cfg,
         })
     }
@@ -605,6 +720,7 @@ impl Vpe {
         for (id, spec) in self.soc.targets() {
             if id.is_host()
                 || !self.soc.is_usable(id)
+                || self.quarantined(id)
                 || !Self::build_available(binding.has_tuned_build, spec.build)
             {
                 continue;
@@ -960,6 +1076,7 @@ impl Vpe {
         let mut targets = Vec::new();
         for (id, spec) in self.soc.targets() {
             if !self.soc.is_usable(id)
+                || self.quarantined(id)
                 || !Self::build_available(binding.has_tuned_build, spec.build)
                 || !self.soc.cost.has_rate(kind, id)
             {
@@ -1244,6 +1361,7 @@ impl Vpe {
                     submitted: a.submitted,
                     completed: a.completed,
                     rejected: a.rejected,
+                    failed: a.failed,
                     p50_latency_ns: p50,
                     p99_latency_ns: p99,
                     energy_nj: a.energy_nj,
@@ -1286,6 +1404,10 @@ impl Vpe {
 
     fn submit_impl(&mut self, f: FunctionId) -> Result<TicketId> {
         self.finalize()?;
+        // Quarantined targets may have served their open interval: a
+        // submit is also a chance to promote a due breaker to half-open
+        // so probe traffic can reach the unit again.
+        self.tick_breakers();
         let table = self.table.as_ref().expect("finalized above");
         let wrapper_ns = table.wrapper_overhead_ns;
         let mut target = table.dispatch(f)?;
@@ -1307,15 +1429,17 @@ impl Vpe {
 
         if !target.is_host() {
             // Fail over if the remote target died (paper §1: react to
-            // hardware failure), lost its build, or can no longer be
-            // priced.
+            // hardware failure), was quarantined by its circuit
+            // breaker, lost its build, or can no longer be priced.
             let build_ok = self
                 .soc
                 .target(target)
                 .map(|s| Self::build_available(has_tuned_build, s.build))
                 .unwrap_or(false);
-            let usable =
-                self.soc.is_usable(target) && build_ok && self.soc.cost.has_rate(kind, target);
+            let usable = self.soc.is_usable(target)
+                && !self.quarantined(target)
+                && build_ok
+                && self.soc.cost.has_rate(kind, target);
             if !usable {
                 table.reset(f)?;
                 self.policy.on_forced_revert(f);
@@ -1543,14 +1667,61 @@ impl Vpe {
     ) -> Result<Option<Retired>> {
         self.flush_all();
         loop {
-            let Some(call) = self.queue.pop_earliest() else { return Ok(None) };
+            // Calls the failure machinery resolved out-of-band (retries
+            // exhausted, abandoned shard groups) surface first — they
+            // still flow through the single resolution point below.
+            if let Some(r) = self.salvaged.pop_front() {
+                self.resolve_completion(&r);
+                return Ok(Some(r));
+            }
+            // Scripted faults due at or before the next completion fire
+            // first: the clock advances to the fault, the dead target's
+            // staged and in-flight work is salvaged onto survivors, and
+            // the (possibly re-planned) queue is re-examined.
+            self.apply_due_faults()?;
+            self.tick_breakers();
+            if let Some(r) = self.salvaged.pop_front() {
+                self.resolve_completion(&r);
+                return Ok(Some(r));
+            }
+            let Some(call) = self.queue.pop_earliest() else {
+                // Salvage may have re-staged work into forming batches;
+                // an empty heap with a non-empty queue means exactly
+                // that — flush and keep retiring, never strand it.
+                if !self.queue.is_empty() {
+                    self.flush_all();
+                    continue;
+                }
+                return Ok(None);
+            };
+            // Flaky injection: the dispatch ran to completion on its
+            // (healthy) target and failed anyway — charge the energy it
+            // burned, score the breaker, and retry or abandon it.
+            if !call.target.is_host()
+                && self.injector.as_mut().map(|i| i.flaky()).unwrap_or(false)
+            {
+                self.clock.advance_to(call.complete_ns);
+                let now = self.clock.now_ns();
+                let target = call.target;
+                let burned = energy_nj(call.exec_ns, self.soc.active_watts(target));
+                let slot = self.charged_energy_nj.entry(target).or_insert(0);
+                *slot = slot.saturating_add(burned);
+                self.breaker_failure(target, now);
+                self.retry_or_abandon(call, now, true)?;
+                continue;
+            }
+            let target = call.target;
             let retired = if call.shard.is_some() {
-                match self.retire_shard(call)? {
+                let folded = self.retire_shard(call)?;
+                self.breaker_success(target);
+                match folded {
                     Some(r) => r,
                     None => continue,
                 }
             } else {
-                self.retire_single(call, custom_ticket, custom_inputs)?
+                let r = self.retire_single(call, custom_ticket, custom_inputs)?;
+                self.breaker_success(target);
+                r
             };
             self.resolve_completion(&retired);
             return Ok(Some(retired));
@@ -1564,16 +1735,28 @@ impl Vpe {
     /// retirement.
     fn resolve_completion(&mut self, retired: &Retired) {
         let now = self.clock.now_ns();
+        if retired.record.outcome.is_ok() {
+            self.resolved_ok += 1;
+        } else {
+            self.resolved_failed += 1;
+        }
         let handle = self.completions.remove(&retired.ticket);
         if let Some(t) = retired.record.tenant {
             let acc = self.tenant_stats.entry(t).or_default();
-            acc.completed += 1;
-            acc.energy_nj = acc.energy_nj.saturating_add(retired.record.energy_nj);
-            let since = handle
-                .as_ref()
-                .map(|c| c.ingest_ns())
-                .unwrap_or(retired.record.issue_ns);
-            acc.latencies.push(now.saturating_sub(since));
+            if retired.record.outcome.is_ok() {
+                acc.completed += 1;
+                acc.energy_nj = acc.energy_nj.saturating_add(retired.record.energy_nj);
+                let since = handle
+                    .as_ref()
+                    .map(|c| c.ingest_ns())
+                    .unwrap_or(retired.record.issue_ns);
+                acc.latencies.push(now.saturating_sub(since));
+            } else {
+                // Typed failures resolve the handle but are not
+                // completions: they count (and price) separately, so
+                // latency percentiles stay honest.
+                acc.failed += 1;
+            }
         }
         if let Some(c) = handle {
             c.resolve(retired.record);
@@ -1705,7 +1888,9 @@ impl Vpe {
             action,
             shards: 1,
             tenant: call.tenant,
+            outcome: CallOutcome::Ok,
         };
+        self.retries.remove(&call.ticket);
 
         self.record_trace(
             &record,
@@ -1801,9 +1986,15 @@ impl Vpe {
         let shard_energy = energy_nj(call.exec_ns, self.soc.active_watts(target));
         let slot = self.charged_energy_nj.entry(target).or_insert(0);
         *slot = slot.saturating_add(shard_energy);
-        let g = self.groups.get_mut(&info.group).ok_or_else(|| {
-            Error::Coordinator(format!("shard retired for unknown group {}", info.group))
-        })?;
+        let Some(g) = self.groups.get_mut(&info.group) else {
+            // The group was abandoned by the failure machinery after
+            // this shard went in flight: its work still ran (energy and
+            // occupancy charged above), but there is no accumulator
+            // left to fold into — the group already resolved with a
+            // typed failure.
+            self.retries.remove(&call.ticket);
+            return Ok(None);
+        };
         g.done += 1;
         g.energy_nj = g.energy_nj.saturating_add(shard_energy);
         g.min_start_ns = g.min_start_ns.min(call.start_ns);
@@ -1818,6 +2009,7 @@ impl Vpe {
         if let Some(out) = part {
             g.parts.push((info.start, info.end, out));
         }
+        self.retries.remove(&call.ticket);
         if g.done < g.of {
             return Ok(None);
         }
@@ -1891,6 +2083,7 @@ impl Vpe {
             action,
             shards: g.of,
             tenant: g.tenant,
+            outcome: CallOutcome::Ok,
         };
         self.record_trace(
             &record,
@@ -1903,6 +2096,617 @@ impl Vpe {
             cycles,
         );
         Ok(Retired { ticket: g.first_ticket, record, output })
+    }
+
+    // -- failure recovery ---------------------------------------------------
+
+    /// Install a scripted fault source (see [`crate::sim::FaultInjector`]).
+    /// The coordinator polls it as virtual time advances: a scripted
+    /// event due before the next completion fires first, through the
+    /// same `fail_target`/`degrade_target`/`heal_target` machinery an
+    /// operator would use.  An injector with an empty script and zero
+    /// flaky probability leaves every run bit-identical to no injector.
+    pub fn set_fault_injector(&mut self, injector: FaultInjector) {
+        self.injector = Some(injector);
+    }
+
+    /// Fire every scripted fault due at or before the next completion
+    /// (or the current time, when nothing is in flight), advancing the
+    /// clock to each event as it applies.
+    fn apply_due_faults(&mut self) -> Result<()> {
+        let Some(inj) = self.injector.as_mut() else { return Ok(()) };
+        let horizon = self
+            .queue
+            .peek_earliest_complete_ns()
+            .unwrap_or(0)
+            .max(self.clock.now_ns());
+        let events = inj.due(horizon);
+        for ev in events {
+            self.clock.advance_to(ev.at_ns);
+            match ev.action {
+                FaultAction::Fail => self.fail_target(ev.target)?,
+                FaultAction::Degrade(factor) => self.degrade_target(ev.target, factor)?,
+                FaultAction::Heal => self.heal_target(ev.target),
+            }
+        }
+        Ok(())
+    }
+
+    /// Kill `target` mid-run and salvage its work: in-flight dispatches
+    /// are charged for exactly the time they ran (the un-run tail is
+    /// refunded, so the energy-conservation invariant holds to the
+    /// nanojoule), then retried on survivors with backoff; staged batch
+    /// members re-enter formation on the best surviving unit; lost
+    /// fan-out shards are re-planned slice-preserving via the shard
+    /// planner.  Tickets never change, so exactly-once retirement and
+    /// every bound [`Completion`] survive the failure.
+    pub fn fail_target(&mut self, target: TargetId) -> Result<()> {
+        if target.is_host() {
+            return Err(Error::Coordinator("the host cannot fail".into()));
+        }
+        let now = self.clock.now_ns();
+        self.soc.fail_target(target);
+        let staged = self.queue.take_forming(target);
+        let inflight = self.queue.extract_on(target);
+        self.events.push(now, VpeEvent::TargetFailed {
+            target,
+            staged: staged.len(),
+            inflight: inflight.len(),
+        });
+        let watts = self.soc.active_watts(target);
+        for call in inflight {
+            if call.complete_ns <= now {
+                // Finished before the failure — retires normally.
+                self.queue.push_flushed(call);
+                continue;
+            }
+            // Charge the partial run, refund the un-run tail: occupancy
+            // and charged energy both end up counting only the time the
+            // unit actually worked.
+            let run_ns = now.saturating_sub(call.start_ns).min(call.exec_ns);
+            if run_ns > 0 {
+                let burned = energy_nj(run_ns, watts);
+                let slot = self.charged_energy_nj.entry(target).or_insert(0);
+                *slot = slot.saturating_add(burned);
+            }
+            self.scheduler.release(target, call.exec_ns - run_ns);
+            self.retry_or_abandon(call, now, false)?;
+        }
+        self.scheduler.interrupt(target, now);
+        for p in staged {
+            self.resalvage_pending(p, now)?;
+        }
+        Ok(())
+    }
+
+    /// Slow `target` down by `factor` (thermal-throttle style) and
+    /// reprice its still-forming batch members — they have not touched
+    /// the timeline yet, so repricing them is honest; in-flight
+    /// dispatches keep the price they started under (the hardware they
+    /// ran on was the pre-degradation hardware for most of their run,
+    /// and retroactively rewriting an occupied timeline would corrupt
+    /// the energy books).
+    pub fn degrade_target(&mut self, target: TargetId, factor: f64) -> Result<()> {
+        if target.is_host() {
+            return Err(Error::Coordinator("the host cannot degrade".into()));
+        }
+        let old_slow = self
+            .soc
+            .target(target)?
+            .health
+            .slowdown()
+            .unwrap_or(1.0);
+        self.soc.degrade_target(target, factor);
+        let members = self.queue.take_forming(target);
+        for mut p in members {
+            // Only the compute part scales — transport is wire physics,
+            // not silicon (see `Soc::priced_call_ns`).  The noise draw
+            // baked into the old price is preserved by scaling.
+            let compute = p.core_exec_ns.saturating_sub(p.variable_ns);
+            let repriced = ((compute as f64 * (factor / old_slow)) as u64).max(1);
+            p.core_exec_ns = repriced.saturating_add(p.variable_ns);
+            self.queue.restage(p);
+        }
+        Ok(())
+    }
+
+    /// Restore `target` to full health and reset its circuit breaker.
+    pub fn heal_target(&mut self, target: TargetId) {
+        self.soc.heal_target(target);
+        self.breakers.remove(&target);
+        self.events
+            .push(self.clock.now_ns(), VpeEvent::TargetRecovered { target });
+    }
+
+    /// Re-route one staged (never-started) dispatch off a dead target:
+    /// shards re-plan slice-preserving; plain dispatches re-enter
+    /// formation on the best surviving candidate, or go straight in
+    /// flight on the host.
+    fn resalvage_pending(&mut self, p: PendingDispatch, now_ns: u64) -> Result<()> {
+        // Normalize to the in-flight shape the retry machinery speaks;
+        // a staged dispatch never started, so its timings are vacuous.
+        let stub = InFlight {
+            ticket: p.ticket,
+            function: p.function,
+            target: p.target,
+            iteration: p.iteration,
+            issue_ns: p.issue_ns,
+            start_ns: p.issue_ns,
+            complete_ns: p.issue_ns,
+            exec_ns: 1,
+            overhead_ns: 0,
+            epoch: p.epoch,
+            coalesced: false,
+            staged: p.staged,
+            shard: p.shard,
+            tenant: p.tenant,
+        };
+        let f = stub.function;
+        let (kind, scale) = match self.bindings.get(&f) {
+            Some(b) => (b.instance.kind, b.instance.scale),
+            None => return self.abandon(stub, FailReason::TargetLost, false),
+        };
+        self.dispatches_rerouted += 1;
+        if let Some(slice) = stub.shard {
+            // Nothing ran and nothing failed transiently: re-plan with
+            // no backoff and no retry charged against the ticket.
+            return self.replan_shard(stub, slice, kind, scale, now_ns, 0, false);
+        }
+        let to = self
+            .candidates_for(f)?
+            .first()
+            .map(|c| c.target)
+            .unwrap_or(TargetId::HOST);
+        let Ok(full_ns) = self.true_call_ns(kind, &scale, to) else {
+            return self.abandon(stub, FailReason::TargetLost, false);
+        };
+        if to.is_host() {
+            // No transport to coalesce: price and push directly, program
+            // order preserved by the occupancy serialization.  The
+            // staged allocation rides along and frees at retirement.
+            let noise = 1.0 + self.cfg.exec_noise_frac * self.rng.standard_normal();
+            let exec_ns = ((full_ns as f64 * noise.max(0.1)) as u64).max(1);
+            let start_ns = now_ns.max(self.scheduler.busy_until(TargetId::HOST));
+            self.scheduler.occupy(TargetId::HOST, start_ns, exec_ns);
+            self.queue.push_flushed(InFlight {
+                ticket: stub.ticket,
+                function: f,
+                target: TargetId::HOST,
+                iteration: stub.iteration,
+                issue_ns: stub.issue_ns,
+                start_ns,
+                complete_ns: start_ns + exec_ns,
+                exec_ns,
+                overhead_ns: 0,
+                epoch: self.queue.current_epoch(),
+                coalesced: false,
+                staged: stub.staged,
+                shard: None,
+                tenant: stub.tenant,
+            });
+            return Ok(());
+        }
+        // Re-enter formation on the survivor: reprice the core for its
+        // transport and rates, keep the ticket, and let the ordinary
+        // flush rules batch it with whatever else is bound there.
+        let t = self.soc.target(to)?.transport;
+        let (setup_ns, variable_ns) = (t.batch_setup_ns(), t.dispatch_variable_ns(&scale));
+        let noise = 1.0 + self.cfg.exec_noise_frac * self.rng.standard_normal();
+        let core_base = full_ns.saturating_sub(setup_ns);
+        let core_exec_ns = ((core_base as f64 * noise.max(0.1)) as u64).max(1);
+        let width = self.queue.restage(PendingDispatch {
+            ticket: stub.ticket,
+            function: f,
+            target: to,
+            iteration: stub.iteration,
+            issue_ns: stub.issue_ns,
+            core_exec_ns,
+            variable_ns,
+            setup_ns,
+            epoch: self.queue.current_epoch(),
+            staged: stub.staged,
+            shard: None,
+            tenant: stub.tenant,
+        });
+        if width >= self.cfg.max_batch_width.max(1) {
+            self.flush_target(to);
+        }
+        Ok(())
+    }
+
+    /// One dispatch lost its target (hard failure mid-flight) or failed
+    /// transiently (flaky injection): re-issue it — bounded exponential
+    /// backoff priced in virtual time, repriced on the best surviving
+    /// candidate — or resolve it with a typed error once retries are
+    /// exhausted or the deadline makes success impossible.  `counted`
+    /// says whether the call was popped from the heap (pop counted it
+    /// retired, so the re-issue counts as a fresh submission) or
+    /// extracted by salvage (neither counted — balanced by
+    /// `push_flushed` / `retire_external`).
+    fn retry_or_abandon(&mut self, call: InFlight, now_ns: u64, counted: bool) -> Result<()> {
+        let attempt = {
+            let n = self.retries.entry(call.ticket).or_insert(0);
+            *n += 1;
+            *n
+        };
+        if attempt > self.cfg.max_retries {
+            return self.abandon(call, FailReason::RetriesExhausted, counted);
+        }
+        let backoff_ns = self
+            .cfg
+            .retry_backoff_ns
+            .saturating_mul(1u64 << u64::from((attempt - 1).min(20)));
+        let f = call.function;
+        let (kind, scale) = match self.bindings.get(&f) {
+            Some(b) => (b.instance.kind, b.instance.scale),
+            None => return self.abandon(call, FailReason::TargetLost, counted),
+        };
+        if let Some(slice) = call.shard {
+            return self.replan_shard(call, slice, kind, scale, now_ns, backoff_ns, counted);
+        }
+        let from = call.target;
+        let to = self
+            .candidates_for(f)?
+            .first()
+            .map(|c| c.target)
+            .unwrap_or(TargetId::HOST);
+        let Ok(base_ns) = self.true_call_ns(kind, &scale, to) else {
+            return self.abandon(call, FailReason::TargetLost, counted);
+        };
+        // Fail fast: when a serving deadline is configured and even the
+        // cheapest surviving route cannot land inside it, resolve now
+        // instead of burning a doomed retry.
+        if self.cfg.deadline_ns > 0 && call.tenant.is_some() {
+            let done_by = now_ns.saturating_add(backoff_ns).saturating_add(base_ns);
+            if done_by > call.issue_ns.saturating_add(self.cfg.deadline_ns) {
+                return self.abandon(call, FailReason::DeadlineImpossible, counted);
+            }
+        }
+        let overhead_ns = if to.is_host() {
+            0
+        } else {
+            self.soc.target(to)?.transport.dispatch_ns(&scale)
+        };
+        let noise = 1.0 + self.cfg.exec_noise_frac * self.rng.standard_normal();
+        let exec_ns = ((base_ns as f64 * noise.max(0.1)) as u64).max(1);
+        let start_ns = now_ns.saturating_add(backoff_ns).max(self.scheduler.busy_until(to));
+        self.scheduler.occupy(to, start_ns, exec_ns);
+        let redispatch = InFlight {
+            ticket: call.ticket,
+            function: f,
+            target: to,
+            iteration: call.iteration,
+            issue_ns: call.issue_ns,
+            start_ns,
+            complete_ns: start_ns + exec_ns,
+            exec_ns,
+            overhead_ns,
+            epoch: self.queue.current_epoch(),
+            coalesced: false,
+            staged: call.staged,
+            shard: None,
+            tenant: call.tenant,
+        };
+        if counted {
+            self.queue.push(redispatch);
+        } else {
+            self.queue.push_flushed(redispatch);
+        }
+        self.retries_attempted += 1;
+        self.events.push(now_ns, VpeEvent::DispatchRetried {
+            function: f,
+            from,
+            to,
+            attempt,
+            backoff_ns,
+        });
+        Ok(())
+    }
+
+    /// Re-plan one lost fan-out shard slice-preserving: same
+    /// `[start, end)` and group membership, new unit chosen by the
+    /// shard planner scored over the surviving participant set.
+    #[allow(clippy::too_many_arguments)]
+    fn replan_shard(
+        &mut self,
+        call: InFlight,
+        slice: ShardSlice,
+        kind: WorkloadKind,
+        scale: PaperScale,
+        now_ns: u64,
+        backoff_ns: u64,
+        counted: bool,
+    ) -> Result<()> {
+        if !self.groups.contains_key(&slice.group) {
+            // Orphan of an already-abandoned group: the group resolved
+            // with its typed failure, so this slice just leaves the
+            // books balanced and disappears.
+            if !counted {
+                self.queue.retire_external();
+            }
+            if let Some(a) = call.staged {
+                self.soc.shared.free(a)?;
+            }
+            self.retries.remove(&call.ticket);
+            return Ok(());
+        }
+        let f = call.function;
+        let from = call.target;
+        let units = {
+            let binding = self.binding(f)?;
+            let inputs = match self.groups.get(&slice.group).and_then(|g| g.custom.as_ref()) {
+                Some(c) => c.as_slice(),
+                None => binding.instance.inputs.as_slice(),
+            };
+            workloads::shard::shard_units(kind, inputs)?
+        };
+        let shard_scale = workloads::shard::shard_scale(&scale, slice.start, slice.end, units);
+        let Some(to) = self.pick_shard_target(f, kind, &shard_scale) else {
+            return self.abandon(call, FailReason::TargetLost, counted);
+        };
+        let Ok(base_ns) = self.true_call_ns(kind, &shard_scale, to) else {
+            return self.abandon(call, FailReason::TargetLost, counted);
+        };
+        let overhead_ns = if to.is_host() {
+            0
+        } else {
+            self.soc.target(to)?.transport.dispatch_ns(&shard_scale)
+        };
+        let noise = 1.0 + self.cfg.exec_noise_frac * self.rng.standard_normal();
+        let exec_ns = ((base_ns as f64 * noise.max(0.1)) as u64).max(1);
+        let start_ns = now_ns.saturating_add(backoff_ns).max(self.scheduler.busy_until(to));
+        self.scheduler.occupy(to, start_ns, exec_ns);
+        let redispatch = InFlight {
+            ticket: call.ticket,
+            function: f,
+            target: to,
+            iteration: call.iteration,
+            issue_ns: call.issue_ns,
+            start_ns,
+            complete_ns: start_ns + exec_ns,
+            exec_ns,
+            overhead_ns,
+            epoch: self.queue.current_epoch(),
+            coalesced: false,
+            staged: call.staged,
+            shard: Some(slice),
+            tenant: call.tenant,
+        };
+        if counted {
+            self.queue.push(redispatch);
+        } else {
+            self.queue.push_flushed(redispatch);
+        }
+        self.shards_replanned += 1;
+        self.events.push(now_ns, VpeEvent::ShardReplanned {
+            function: f,
+            group: slice.group,
+            index: slice.index,
+            from,
+            to,
+        });
+        Ok(())
+    }
+
+    /// The best surviving unit for one displaced shard slice, chosen by
+    /// [`shard_plan::plan_objective`] over the surviving participant
+    /// set (rates, overheads and backlogs priced exactly as
+    /// `plan_fanout` prices them) with width 1 — the planner's own
+    /// scoring picks the destination.
+    fn pick_shard_target(
+        &self,
+        f: FunctionId,
+        kind: WorkloadKind,
+        scale: &PaperScale,
+    ) -> Option<TargetId> {
+        let binding = self.bindings.get(&f)?;
+        let now = self.clock.now_ns();
+        let mut targets = Vec::new();
+        for (id, spec) in self.soc.targets() {
+            if !self.soc.is_usable(id)
+                || self.quarantined(id)
+                || !Self::build_available(binding.has_tuned_build, spec.build)
+                || !self.soc.cost.has_rate(kind, id)
+            {
+                continue;
+            }
+            let slow = if self.learned_rows.contains(&(kind, id)) {
+                1.0
+            } else {
+                spec.health.slowdown().unwrap_or(1.0)
+            };
+            let rate = self.soc.cost.rate_ns(kind, id).expect("has_rate checked") * slow;
+            let overhead_ns = if id.is_host() { 0 } else { spec.transport.dispatch_ns(scale) };
+            let backlog_ns = self
+                .scheduler
+                .busy_until(id)
+                .saturating_sub(now)
+                .saturating_add(self.queue.forming_exec_ns_on(id));
+            targets.push(PlanTarget {
+                target: id,
+                rate_ns_per_item: rate,
+                overhead_ns,
+                backlog_ns,
+                active_watts: spec.power.eff_active_watts(),
+            });
+        }
+        let plan =
+            shard_plan::plan_objective(1, scale.items.max(1.0), &targets, 1, self.cfg.objective);
+        plan.shards.first().map(|s| s.target)
+    }
+
+    /// Resolve one dispatch with a typed failure: balance the queue
+    /// books, free its staging, and queue the failed record for the
+    /// retirement loop (a shard abandons its whole group — the group is
+    /// the logical call).
+    fn abandon(&mut self, call: InFlight, reason: FailReason, counted: bool) -> Result<()> {
+        if !counted {
+            self.queue.retire_external();
+        }
+        if let Some(a) = call.staged {
+            self.soc.shared.free(a)?;
+        }
+        self.retries.remove(&call.ticket);
+        if let Some(slice) = call.shard {
+            self.abandon_group(slice.group, reason);
+            return Ok(());
+        }
+        let record =
+            self.failed_record(call.function, call.iteration, call.target, call.issue_ns, 1, call.tenant, reason);
+        self.salvaged.push_back(Retired { ticket: call.ticket, record, output: None });
+        Ok(())
+    }
+
+    /// Abandon a whole sharded group: remove its accumulator (surviving
+    /// shards retire as orphans — their work ran and stays charged) and
+    /// resolve the logical call with one typed failure under the
+    /// group's representative ticket.
+    fn abandon_group(&mut self, group: u64, reason: FailReason) {
+        let Some(g) = self.groups.remove(&group) else { return };
+        let target = if g.primary.1 > 0 { g.primary.0 } else { TargetId::HOST };
+        let record =
+            self.failed_record(g.function, g.iteration, target, g.issue_ns, g.of, g.tenant, reason);
+        self.salvaged.push_back(Retired { ticket: g.first_ticket, record, output: None });
+    }
+
+    /// A zero-cost [`CallRecord`] carrying a typed failure: no exec, no
+    /// energy (whatever partially ran was already charged to its unit),
+    /// resolved at the current instant.
+    #[allow(clippy::too_many_arguments)]
+    fn failed_record(
+        &self,
+        function: FunctionId,
+        iteration: u64,
+        target: TargetId,
+        issue_ns: u64,
+        shards: usize,
+        tenant: Option<TenantId>,
+        reason: FailReason,
+    ) -> CallRecord {
+        let now = self.clock.now_ns();
+        CallRecord {
+            function,
+            iteration,
+            target,
+            exec_ns: 0,
+            energy_nj: 0,
+            profiling_ns: 0,
+            wrapper_ns: 0,
+            issue_ns,
+            start_ns: now,
+            complete_ns: now,
+            wall: None,
+            output_ok: None,
+            action: None,
+            shards,
+            tenant,
+            outcome: CallOutcome::Failed(reason),
+        }
+    }
+
+    // -- circuit breaker ----------------------------------------------------
+
+    /// Is `target` currently quarantined by its circuit breaker (open
+    /// state, pre-probe)?  Quarantined targets are excluded from
+    /// candidate slices, open-batch formation and fan-out plans; a
+    /// half-open target is *not* quarantined — probe traffic must reach
+    /// it.
+    fn quarantined(&self, target: TargetId) -> bool {
+        matches!(
+            self.breakers.get(&target).map(|b| b.state),
+            Some(BreakerState::Open { .. })
+        )
+    }
+
+    /// Public view of [`Vpe::quarantined`] for tests and tooling.
+    pub fn is_quarantined(&self, target: TargetId) -> bool {
+        self.quarantined(target)
+    }
+
+    /// Score one dispatch failure on `target`'s breaker: consecutive
+    /// failures reaching [`VpeConfig::quarantine_threshold`] open it
+    /// (quarantine until a timed probe); a failed half-open probe
+    /// re-opens it immediately.
+    fn breaker_failure(&mut self, target: TargetId, now_ns: u64) {
+        if target.is_host() || self.cfg.quarantine_threshold == 0 {
+            return;
+        }
+        let probe_at_ns = now_ns.saturating_add(self.cfg.probe_interval_ns);
+        let b = self
+            .breakers
+            .entry(target)
+            .or_insert(Breaker { consecutive_failures: 0, state: BreakerState::Closed });
+        b.consecutive_failures += 1;
+        let reopen = b.state == BreakerState::HalfOpen;
+        let trip = matches!(b.state, BreakerState::Closed)
+            && b.consecutive_failures >= self.cfg.quarantine_threshold;
+        if reopen || trip {
+            b.state = BreakerState::Open { probe_at_ns };
+            let failures = b.consecutive_failures;
+            self.events.push(now_ns, VpeEvent::TargetQuarantined {
+                target,
+                failures,
+                probe_at_ns,
+            });
+        }
+    }
+
+    /// Score one successful retirement on `target`'s breaker: a
+    /// half-open probe that succeeds closes the breaker (the target is
+    /// back) and any consecutive-failure streak resets.
+    fn breaker_success(&mut self, target: TargetId) {
+        if target.is_host() {
+            return;
+        }
+        if let Some(b) = self.breakers.get_mut(&target) {
+            let was_half_open = b.state == BreakerState::HalfOpen;
+            b.state = BreakerState::Closed;
+            b.consecutive_failures = 0;
+            if was_half_open {
+                self.events
+                    .push(self.clock.now_ns(), VpeEvent::TargetRecovered { target });
+            }
+        }
+    }
+
+    /// Promote every open breaker whose probe time has arrived to
+    /// half-open, so the next dispatch bound for the target probes it.
+    fn tick_breakers(&mut self) {
+        let now = self.clock.now_ns();
+        let mut probed = Vec::new();
+        for (t, b) in self.breakers.iter_mut() {
+            if let BreakerState::Open { probe_at_ns } = b.state {
+                if now >= probe_at_ns {
+                    b.state = BreakerState::HalfOpen;
+                    probed.push(*t);
+                }
+            }
+        }
+        for t in probed {
+            self.events.push(now, VpeEvent::TargetProbed { target: t });
+        }
+    }
+
+    /// Fraction of resolved calls that resolved successfully, or `None`
+    /// before the first resolution.  The serving availability floor the
+    /// fault-storm benchmark asserts.
+    pub fn availability(&self) -> Option<f64> {
+        let total = self.resolved_ok + self.resolved_failed;
+        if total == 0 {
+            return None;
+        }
+        Some(self.resolved_ok as f64 / total as f64)
+    }
+
+    /// Recovery counters: `(retries attempted, dispatches rerouted,
+    /// shards re-planned, calls failed)`.
+    pub fn recovery_counters(&self) -> (u64, u64, u64, u64) {
+        (
+            self.retries_attempted,
+            self.dispatches_rerouted,
+            self.shards_replanned,
+            self.resolved_failed,
+        )
     }
 
     /// Record one retired call into the trace (v3): every registered
@@ -2450,19 +3254,35 @@ impl Vpe {
                 (active.saturating_add(idle)) as f64 / 1e6
             ));
         }
+        // Failure recovery, only once the machinery has done something.
+        let (retries, rerouted, replanned, failed) = self.recovery_counters();
+        if retries + rerouted + replanned + failed > 0 || !self.breakers.is_empty() {
+            out.push_str(&format!(
+                "recovery: {retries} retries, {rerouted} rerouted, {replanned} shards re-planned, {failed} calls failed\n"
+            ));
+            if let Some(a) = self.availability() {
+                out.push_str(&format!(
+                    "availability: {:.4}% ({} ok / {} resolved)\n",
+                    a * 100.0,
+                    self.resolved_ok,
+                    self.resolved_ok + self.resolved_failed
+                ));
+            }
+        }
         // Serving traffic, per tenant (only present when the serving
         // front-end was used).
         if !self.tenant_stats.is_empty() {
             out.push_str(
-                "serving (per tenant): submitted / completed / rejected, p50 / p99 latency, energy\n",
+                "serving (per tenant): submitted / completed / rejected / failed, p50 / p99 latency, energy\n",
             );
             for s in self.serving_stats() {
                 out.push_str(&format!(
-                    "  {}: {} / {} / {}, {:.1} ms / {:.1} ms, {:.3} mJ\n",
+                    "  {}: {} / {} / {} / {}, {:.1} ms / {:.1} ms, {:.3} mJ\n",
                     s.tenant,
                     s.submitted,
                     s.completed,
                     s.rejected,
+                    s.failed,
                     s.p50_latency_ns as f64 / 1e6,
                     s.p99_latency_ns as f64 / 1e6,
                     s.energy_nj as f64 / 1e6
@@ -3247,5 +4067,267 @@ mod tests {
         // Idle draw integrates over the un-occupied remainder of the run.
         let active: u64 = recs.iter().map(|r| r.energy_nj).sum();
         assert!(vpe.total_energy_nj() > active, "1 W idle must show up in the total");
+    }
+
+    // -- failure recovery ---------------------------------------------------
+
+    fn offload_vpe(cfg: VpeConfig) -> Vpe {
+        Vpe::with_policy(cfg, Box::new(super::super::policy::AlwaysOffloadPolicy)).unwrap()
+    }
+
+    #[test]
+    fn failed_target_reroutes_staged_work_to_survivors() {
+        let mut vpe = offload_vpe(VpeConfig::sim_only());
+        let f = vpe.register_workload(WorkloadKind::Conv2d).unwrap();
+        vpe.call(f).unwrap(); // offloads to the DSP
+        assert_eq!(vpe.current_target(f).unwrap(), dm3730::DSP);
+        let _a = vpe.submit(f).unwrap(); // both enter formation on the DSP
+        let _b = vpe.submit(f).unwrap();
+        vpe.fail_target(dm3730::DSP).unwrap();
+        let recs = vpe.drain().unwrap();
+        assert_eq!(recs.len(), 2);
+        for r in &recs {
+            assert_eq!(r.target, TargetId::HOST, "salvaged on the survivor: {r:?}");
+            assert_eq!(r.outcome, CallOutcome::Ok);
+        }
+        let fails = vpe.events().target_failures();
+        assert_eq!(fails.len(), 1);
+        assert_eq!(fails[0].2, 2, "both staged members salvaged: {fails:?}");
+        let (_, rerouted, _, failed) = vpe.recovery_counters();
+        assert_eq!(rerouted, 2);
+        assert_eq!(failed, 0);
+        assert_eq!(vpe.availability(), Some(1.0));
+        // Books balanced, nothing stranded, staging freed.
+        assert_eq!(vpe.in_flight(), 0);
+        assert_eq!(vpe.dispatches_submitted(), vpe.dispatches_retired());
+        assert_eq!(vpe.soc().shared.used_bytes(), 0);
+    }
+
+    #[test]
+    fn scripted_mid_flight_failure_salvages_and_conserves_energy() {
+        let mut vpe = offload_vpe(VpeConfig::sim_only());
+        let f = vpe.register_workload(WorkloadKind::Conv2d).unwrap();
+        vpe.call(f).unwrap();
+        assert_eq!(vpe.current_target(f).unwrap(), dm3730::DSP);
+        // Kill the DSP 1 ms into the next dispatch's run.
+        let kill_at = vpe.clock().now_ns() + 1_000_000;
+        vpe.set_fault_injector(FaultInjector::new(7).fail_at(kill_at, dm3730::DSP));
+        let _t = vpe.submit(f).unwrap();
+        let recs = vpe.drain().unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].target, TargetId::HOST, "retried on the survivor");
+        assert_eq!(recs[0].outcome, CallOutcome::Ok);
+        assert!(!vpe.events().target_failures().is_empty());
+        assert!(!vpe.events().retries().is_empty());
+        let (retries, _, _, failed) = vpe.recovery_counters();
+        assert_eq!((retries, failed), (1, 0));
+        // The partial run was charged and the un-run tail refunded: at
+        // the 1 W default, joules still equal busy nanoseconds exactly
+        // on every unit, including the dead one.
+        for (id, _) in vpe.soc.targets() {
+            assert_eq!(
+                vpe.charged_energy_nj(id),
+                vpe.scheduler.occupied_ns(id),
+                "energy conservation through the failure on {id}"
+            );
+        }
+        assert_eq!(vpe.in_flight(), 0);
+        assert_eq!(vpe.dispatches_submitted(), vpe.dispatches_retired());
+        assert_eq!(vpe.soc().shared.used_bytes(), 0);
+    }
+
+    #[test]
+    fn exhausted_retries_resolve_with_a_typed_failure() {
+        let mut cfg = VpeConfig::sim_only();
+        cfg.max_retries = 0; // the first failure is final
+        let mut vpe = offload_vpe(cfg);
+        let f = vpe.register_workload(WorkloadKind::Conv2d).unwrap();
+        vpe.call(f).unwrap();
+        let kill_at = vpe.clock().now_ns() + 1_000_000;
+        vpe.set_fault_injector(FaultInjector::new(7).fail_at(kill_at, dm3730::DSP));
+        let _t = vpe.submit(f).unwrap();
+        let recs = vpe.drain().unwrap();
+        assert_eq!(recs.len(), 1, "the call must still resolve, exactly once");
+        assert_eq!(recs[0].outcome, CallOutcome::Failed(FailReason::RetriesExhausted));
+        assert_eq!(recs[0].exec_ns, 0, "typed failures are zero-cost records");
+        assert_eq!(recs[0].energy_nj, 0);
+        let (_, _, _, failed) = vpe.recovery_counters();
+        assert_eq!(failed, 1);
+        assert!(vpe.availability().unwrap() < 1.0);
+        assert_eq!(vpe.in_flight(), 0);
+        assert_eq!(vpe.dispatches_submitted(), vpe.dispatches_retired());
+        assert_eq!(vpe.soc().shared.used_bytes(), 0);
+        assert!(vpe.report().contains("recovery:"), "{}", vpe.report());
+        assert!(vpe.report().contains("availability:"), "{}", vpe.report());
+    }
+
+    #[test]
+    fn flaky_failures_trip_the_breaker_and_heal_resets_it() {
+        let mut cfg = VpeConfig::sim_only();
+        cfg.quarantine_threshold = 1;
+        cfg.probe_interval_ns = u64::MAX / 4; // no probe inside this test
+        let mut vpe = offload_vpe(cfg);
+        let f = vpe.register_workload(WorkloadKind::Conv2d).unwrap();
+        vpe.call(f).unwrap(); // offloads to the DSP
+        vpe.set_fault_injector(FaultInjector::new(3).with_flaky(1.0));
+        let _t = vpe.submit(f).unwrap();
+        let recs = vpe.drain().unwrap();
+        // The DSP dispatch failed transiently, the breaker opened, and
+        // the retry landed on the flake-exempt host.
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].outcome, CallOutcome::Ok);
+        assert_eq!(recs[0].target, TargetId::HOST);
+        assert!(vpe.is_quarantined(dm3730::DSP));
+        assert_eq!(vpe.events().quarantines().len(), 1);
+        // Quarantine steers new work away without failing it...
+        let rec = vpe.call(f).unwrap();
+        assert_eq!(rec.target, TargetId::HOST);
+        assert_eq!(rec.outcome, CallOutcome::Ok);
+        // ...and an operator heal clears the breaker.
+        vpe.heal_target(dm3730::DSP);
+        assert!(!vpe.is_quarantined(dm3730::DSP));
+        assert!(!vpe.events().target_recoveries().is_empty());
+    }
+
+    #[test]
+    fn open_breaker_probes_half_open_and_closes_on_success() {
+        let mut cfg = VpeConfig::sim_only();
+        cfg.quarantine_threshold = 1;
+        cfg.probe_interval_ns = 1; // probe on the very next tick
+        let mut vpe = offload_vpe(cfg);
+        let f = vpe.register_workload(WorkloadKind::Conv2d).unwrap();
+        vpe.call(f).unwrap();
+        vpe.set_fault_injector(FaultInjector::new(3).with_flaky(1.0));
+        let _t = vpe.submit(f).unwrap();
+        vpe.drain().unwrap(); // flaky failure: breaker opens
+        assert!(!vpe.events().quarantines().is_empty());
+        // Flake gone; the overdue probe admits the next dispatch, which
+        // succeeds and closes the breaker.
+        vpe.set_fault_injector(FaultInjector::new(3));
+        let _t = vpe.submit(f).unwrap();
+        let recs = vpe.drain().unwrap();
+        assert_eq!(recs[0].target, dm3730::DSP, "the probe must reach the DSP");
+        assert_eq!(recs[0].outcome, CallOutcome::Ok);
+        assert!(!vpe.is_quarantined(dm3730::DSP));
+        assert!(vpe
+            .events()
+            .iter()
+            .any(|(_, e)| matches!(e, VpeEvent::TargetProbed { .. })));
+        assert!(!vpe.events().target_recoveries().is_empty());
+    }
+
+    #[test]
+    fn degrade_reprices_forming_batch_members() {
+        // Two identical runs, one degrading the DSP while the member is
+        // still forming: the degraded dispatch must cost more — but
+        // less than the full factor, because only compute derates
+        // (transport is wire physics).
+        let run = |factor: Option<f64>| -> u64 {
+            let mut cfg = VpeConfig::sim_only();
+            cfg.exec_noise_frac = 0.0;
+            let mut vpe = offload_vpe(cfg);
+            let f = vpe.register_workload(WorkloadKind::Conv2d).unwrap();
+            vpe.call(f).unwrap();
+            let _t = vpe.submit(f).unwrap(); // forming on the DSP
+            if let Some(x) = factor {
+                vpe.degrade_target(dm3730::DSP, x).unwrap();
+            }
+            let recs = vpe.drain().unwrap();
+            assert_eq!(recs.len(), 1);
+            assert_eq!(recs[0].target, dm3730::DSP);
+            recs[0].exec_ns
+        };
+        let base = run(None);
+        let slow = run(Some(3.0));
+        assert!(slow > base, "degrade must reprice the staged member: {base} vs {slow}");
+        assert!(slow < base * 3, "transport must not be derated: {base} vs {slow}");
+    }
+
+    #[test]
+    fn lost_shards_replan_onto_survivors_slice_preserving() {
+        let mut cfg = VpeConfig::default();
+        cfg.exec_noise_frac = 0.0;
+        let mut vpe = Vpe::new(cfg).unwrap();
+        let mut units = Vec::new();
+        for (name, rate) in [("unit-a", 3.0), ("unit-b", 3.5)] {
+            let id = vpe.soc_mut().add_target(
+                TargetSpec::new(name, 1_000_000_000).with_transport(
+                    Transport::SharedMemory(TransferModel {
+                        dispatch_fixed_ns: 1_000_000,
+                        per_param_byte_ns: 1.0,
+                    }),
+                ),
+            );
+            vpe.soc_mut().cost.set_rate(WorkloadKind::Matmul, id, rate);
+            units.push(id);
+        }
+        let f = vpe.register_workload(WorkloadKind::Matmul).unwrap(); // 128x128
+        // Kill the faster fan-out participant mid-shard.
+        let kill_at = vpe.clock().now_ns() + 2_000_000;
+        vpe.set_fault_injector(FaultInjector::new(11).fail_at(kill_at, units[0]));
+        let rec = vpe.call_sharded(f).unwrap();
+        assert!(rec.shards >= 2, "must fan out: {rec:?}");
+        assert_eq!(rec.outcome, CallOutcome::Ok);
+        assert_eq!(rec.output_ok, Some(true), "re-planned reassembly must verify");
+        let replans = vpe.events().shard_replans();
+        assert!(!replans.is_empty(), "{}", vpe.events().to_text());
+        assert_eq!(replans[0].3, units[0], "the lost slice left the dead unit");
+        assert_ne!(replans[0].4, units[0]);
+        let (_, _, replanned, failed) = vpe.recovery_counters();
+        assert!(replanned >= 1);
+        assert_eq!(failed, 0);
+        for (id, _) in vpe.soc.targets() {
+            assert_eq!(
+                vpe.charged_energy_nj(id),
+                vpe.scheduler.occupied_ns(id),
+                "energy conservation through the shard re-plan on {id}"
+            );
+        }
+        assert_eq!(vpe.in_flight(), 0);
+        assert_eq!(vpe.dispatches_submitted(), vpe.dispatches_retired());
+        assert_eq!(vpe.soc().shared.used_bytes(), 0);
+    }
+
+    #[test]
+    fn bound_completions_resolve_exactly_once_through_a_failure() {
+        let mut cfg = VpeConfig::sim_only();
+        cfg.max_retries = 0;
+        let mut vpe = offload_vpe(cfg);
+        let f = vpe.register_workload(WorkloadKind::Conv2d).unwrap();
+        vpe.call(f).unwrap();
+        let t = TenantId(2);
+        vpe.note_admitted(t, f);
+        let d = Completion::new_at(vpe.clock().now_ns());
+        let kill_at = vpe.clock().now_ns() + 1_000_000;
+        vpe.set_fault_injector(FaultInjector::new(5).fail_at(kill_at, dm3730::DSP));
+        vpe.submit_bound(t, f, &d).unwrap();
+        vpe.drain().unwrap();
+        let rec = d.poll().expect("the handle must resolve despite the failure");
+        assert_eq!(rec.outcome, CallOutcome::Failed(FailReason::RetriesExhausted));
+        let stats = vpe.serving_stats();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].failed, 1);
+        assert_eq!(stats[0].completed, 0);
+        assert!(
+            vpe.report().contains("/ failed"),
+            "serving report must gain the failed column:\n{}",
+            vpe.report()
+        );
+    }
+
+    #[test]
+    fn idle_injector_leaves_runs_bit_identical() {
+        let run = |inject: bool| {
+            let mut vpe = sim_vpe();
+            let f = vpe.register_workload(WorkloadKind::Matmul).unwrap();
+            if inject {
+                // Empty script, zero flaky probability: pure overhead-
+                // free presence must not perturb a single draw or tick.
+                vpe.set_fault_injector(FaultInjector::new(99));
+            }
+            let recs = vpe.run(f, 12).unwrap();
+            recs.iter().map(|r| (r.target, r.exec_ns, r.complete_ns)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(false), run(true));
     }
 }

@@ -1,0 +1,206 @@
+//! Deterministic fault injection for the simulated platform.
+//!
+//! A [`FaultInjector`] scripts hard failures, degradations, and heals
+//! at virtual timestamps, plus an optional per-dispatch flaky-failure
+//! probability — everything is seeded, so a "fault storm" replays
+//! identically run after run.  The coordinator polls the injector as
+//! simulated time advances (see `Vpe::set_fault_injector`) and applies
+//! each due event through its own recovery machinery, so salvage and
+//! repricing happen exactly as they would for an operator-initiated
+//! `fail_target` / `degrade_target` / `heal_target`.
+
+use crate::platform::TargetId;
+
+use super::SimRng;
+
+/// What happens to a target when a scripted fault event fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    /// Hard failure: the target drops off the platform until healed.
+    Fail,
+    /// Thermal-throttle-style slowdown by the given factor (>= 1.0).
+    Degrade(f64),
+    /// Full recovery to healthy.
+    Heal,
+}
+
+/// One scripted fault event at a virtual timestamp.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Simulated time at which the event fires.
+    pub at_ns: u64,
+    /// The target the event applies to.
+    pub target: TargetId,
+    /// What happens to it.
+    pub action: FaultAction,
+}
+
+/// A deterministic, seedable source of platform faults: a sorted script
+/// of [`FaultEvent`]s plus an optional per-dispatch flaky-failure coin.
+///
+/// The script is consumed in timestamp order via [`FaultInjector::due`];
+/// the flaky coin ([`FaultInjector::flaky`]) draws from a dedicated
+/// xoshiro256++ stream so scripted events and flaky draws never perturb
+/// each other's sequences.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    script: Vec<FaultEvent>,
+    cursor: usize,
+    flaky_prob: f64,
+    rng: SimRng,
+}
+
+impl FaultInjector {
+    /// An injector with an empty script and no flakiness.
+    pub fn new(seed: u64) -> Self {
+        Self { script: Vec::new(), cursor: 0, flaky_prob: 0.0, rng: SimRng::seeded(seed) }
+    }
+
+    /// Script a hard failure of `target` at `at_ns`.
+    pub fn fail_at(mut self, at_ns: u64, target: TargetId) -> Self {
+        self.push(FaultEvent { at_ns, target, action: FaultAction::Fail });
+        self
+    }
+
+    /// Script a degradation of `target` by `factor` (>= 1.0) at `at_ns`.
+    pub fn degrade_at(mut self, at_ns: u64, target: TargetId, factor: f64) -> Self {
+        assert!(factor >= 1.0, "degrade factor must be >= 1.0, got {factor}");
+        self.push(FaultEvent { at_ns, target, action: FaultAction::Degrade(factor) });
+        self
+    }
+
+    /// Script a heal of `target` at `at_ns`.
+    pub fn heal_at(mut self, at_ns: u64, target: TargetId) -> Self {
+        self.push(FaultEvent { at_ns, target, action: FaultAction::Heal });
+        self
+    }
+
+    /// Set the per-dispatch flaky-failure probability (clamped to
+    /// `[0, 1]`): each remote dispatch completion independently fails
+    /// with this probability, on top of the scripted events.
+    pub fn with_flaky(mut self, prob: f64) -> Self {
+        self.flaky_prob = prob.clamp(0.0, 1.0);
+        self
+    }
+
+    fn push(&mut self, ev: FaultEvent) {
+        assert_eq!(self.cursor, 0, "script must be built before consumption starts");
+        self.script.push(ev);
+        // Stable sort keeps same-timestamp events in build order, so a
+        // fail-then-heal at one instant stays a fail-then-heal.
+        self.script.sort_by_key(|e| e.at_ns);
+    }
+
+    /// Timestamp of the next unconsumed scripted event, if any — the
+    /// coordinator compares this against its next completion time to
+    /// decide whether a fault fires first.
+    pub fn next_due_at(&self) -> Option<u64> {
+        self.script.get(self.cursor).map(|e| e.at_ns)
+    }
+
+    /// Consume and return every scripted event with `at_ns <= now_ns`,
+    /// in timestamp order.
+    pub fn due(&mut self, now_ns: u64) -> Vec<FaultEvent> {
+        let start = self.cursor;
+        while self.cursor < self.script.len() && self.script[self.cursor].at_ns <= now_ns {
+            self.cursor += 1;
+        }
+        self.script[start..self.cursor].to_vec()
+    }
+
+    /// True when the script has been fully consumed (flakiness may
+    /// still be active).
+    pub fn exhausted(&self) -> bool {
+        self.cursor >= self.script.len()
+    }
+
+    /// Flip the flaky coin for one dispatch: true = this dispatch's
+    /// target transiently fails it.  Always false at probability 0, so
+    /// injectors without flakiness stay bit-identical to no injector.
+    pub fn flaky(&mut self) -> bool {
+        self.flaky_prob > 0.0 && self.rng.uniform() < self.flaky_prob
+    }
+
+    /// The configured flaky probability.
+    pub fn flaky_prob(&self) -> f64 {
+        self.flaky_prob
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T1: TargetId = TargetId(1);
+    const T2: TargetId = TargetId(2);
+
+    #[test]
+    fn script_fires_in_timestamp_order_regardless_of_build_order() {
+        let mut inj = FaultInjector::new(1)
+            .heal_at(300, T1)
+            .fail_at(100, T1)
+            .degrade_at(200, T2, 2.0);
+        assert_eq!(inj.next_due_at(), Some(100));
+        let due = inj.due(250);
+        assert_eq!(due.len(), 2);
+        assert_eq!(due[0], FaultEvent { at_ns: 100, target: T1, action: FaultAction::Fail });
+        assert_eq!(
+            due[1],
+            FaultEvent { at_ns: 200, target: T2, action: FaultAction::Degrade(2.0) }
+        );
+        assert!(!inj.exhausted());
+        assert_eq!(inj.next_due_at(), Some(300));
+        let rest = inj.due(u64::MAX);
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].action, FaultAction::Heal);
+        assert!(inj.exhausted());
+        assert!(inj.due(u64::MAX).is_empty());
+    }
+
+    #[test]
+    fn same_timestamp_events_keep_build_order() {
+        let mut inj = FaultInjector::new(1).fail_at(50, T1).heal_at(50, T1);
+        let due = inj.due(50);
+        assert_eq!(due[0].action, FaultAction::Fail);
+        assert_eq!(due[1].action, FaultAction::Heal);
+    }
+
+    #[test]
+    fn due_is_exclusive_of_future_events() {
+        let mut inj = FaultInjector::new(1).fail_at(100, T1);
+        assert!(inj.due(99).is_empty());
+        assert_eq!(inj.due(100).len(), 1);
+    }
+
+    #[test]
+    fn flaky_is_deterministic_under_seed() {
+        let draws = |seed: u64| -> Vec<bool> {
+            let mut inj = FaultInjector::new(seed).with_flaky(0.3);
+            (0..64).map(|_| inj.flaky()).collect()
+        };
+        assert_eq!(draws(7), draws(7));
+        assert_ne!(draws(7), draws(8));
+    }
+
+    #[test]
+    fn zero_probability_never_fires_and_draws_nothing() {
+        let mut inj = FaultInjector::new(9);
+        for _ in 0..1000 {
+            assert!(!inj.flaky());
+        }
+    }
+
+    #[test]
+    fn flaky_rate_tracks_probability() {
+        let mut inj = FaultInjector::new(3).with_flaky(0.25);
+        let hits = (0..10_000).filter(|_| inj.flaky()).count();
+        let rate = hits as f64 / 10_000.0;
+        assert!((rate - 0.25).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn probability_is_clamped() {
+        assert_eq!(FaultInjector::new(0).with_flaky(1.7).flaky_prob(), 1.0);
+        assert_eq!(FaultInjector::new(0).with_flaky(-0.5).flaky_prob(), 0.0);
+    }
+}

@@ -11,6 +11,10 @@
 //! is not available; xoshiro256++ is small, fast, and plenty for
 //! simulation noise.
 
+pub mod fault;
+
+pub use fault::{FaultAction, FaultEvent, FaultInjector};
+
 /// Simulated monotonic clock, nanosecond resolution.
 #[derive(Debug, Clone, Default)]
 pub struct SimClock {

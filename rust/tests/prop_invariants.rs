@@ -1139,6 +1139,202 @@ fn prop_admission_never_exceeds_the_inflight_bound() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Fault injection & mid-flight recovery
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_fault_storms_retire_every_call_exactly_once() {
+    use vpe::coordinator::CallOutcome;
+    use vpe::sim::FaultInjector;
+
+    prop::check("random fault storm invariants", 30, |g| {
+        // Queue bound 4 / batch cap 3 so batches really form — a fault
+        // mid-storm salvages forming members, not just in-flight work.
+        let (mut v, targets) = multi_target_vpe_with(g.u64_in(0, u64::MAX - 1), 4, 3);
+        v.set_fault_injector(
+            FaultInjector::new(g.u64_in(0, u64::MAX - 1)).with_flaky(0.05),
+        );
+        let kinds = [WorkloadKind::Matmul, WorkloadKind::Dotprod, WorkloadKind::Conv2d];
+        let mut fns = Vec::new();
+        for kind in kinds {
+            fns.push(v.register_workload(kind).expect("register"));
+        }
+        // Only remote units fail or throttle — the host cannot.
+        let remotes: Vec<TargetId> =
+            targets.iter().copied().filter(|t| !t.is_host()).collect();
+        let mut down: Vec<TargetId> = Vec::new();
+        let mut logical = 0u64;
+        let mut records = Vec::new();
+        for _ in 0..g.usize_in(10, 50) {
+            match g.usize_in(0, 8) {
+                0 => {
+                    // Kill a live unit mid-flight: staged and in-flight
+                    // work on it must be salvaged onto survivors.
+                    let up: Vec<TargetId> =
+                        remotes.iter().copied().filter(|t| !down.contains(t)).collect();
+                    if !up.is_empty() {
+                        let t = *g.choose(&up);
+                        v.fail_target(t).map_err(|e| e.to_string())?;
+                        down.push(t);
+                    }
+                }
+                1 => {
+                    // Heal: the unit rejoins the candidate set.
+                    if !down.is_empty() {
+                        let t = down.swap_remove(g.usize_in(0, down.len()));
+                        v.heal_target(t);
+                    }
+                }
+                2 => {
+                    // Thermal throttle: forming work on it is repriced.
+                    let up: Vec<TargetId> =
+                        remotes.iter().copied().filter(|t| !down.contains(t)).collect();
+                    if !up.is_empty() {
+                        let t = *g.choose(&up);
+                        let factor = 1.5 + g.f64_unit() * 2.0;
+                        v.degrade_target(t, factor).map_err(|e| e.to_string())?;
+                    }
+                }
+                3 | 4 => {
+                    let tickets = v.submit_sharded(*g.choose(&fns)).expect("submit_sharded");
+                    assert_prop(!tickets.is_empty(), "sharded submit returned no tickets")?;
+                    logical += 1;
+                }
+                5 => records.extend(v.drain().expect("drain")),
+                _ => {
+                    v.submit(*g.choose(&fns)).expect("submit");
+                    logical += 1;
+                }
+            }
+        }
+        records.extend(v.drain().expect("drain"));
+
+        // Exactly-once resolution: one record per admitted call — Ok or
+        // a typed failure, never silence and never a duplicate.
+        assert_prop(
+            records.len() as u64 == logical,
+            format!("resolved {} != submitted {logical}", records.len()),
+        )?;
+        assert_prop(v.in_flight() == 0, "queue must be empty after a full drain")?;
+        assert_prop(
+            v.dispatches_submitted() == v.dispatches_retired(),
+            format!(
+                "dispatch counters diverge: {} vs {}",
+                v.dispatches_submitted(),
+                v.dispatches_retired()
+            ),
+        )?;
+        assert_prop(v.soc().shared.used_bytes() == 0, "staged params leaked")?;
+
+        // Typed failures are zero-cost: a call that never ran anywhere
+        // must not carry an execution window or an energy charge.
+        for r in &records {
+            if matches!(r.outcome, CallOutcome::Failed(_)) {
+                assert_prop(
+                    r.exec_ns == 0 && r.energy_nj == 0,
+                    format!("failed record carries cost: {r:?}"),
+                )?;
+            }
+        }
+
+        // Energy conservation for the time each unit was actually
+        // alive: salvage refunds the un-run tail and `interrupt` clamps
+        // the busy horizon, so the charged-joule ledger still equals
+        // watts x occupied time on every target — through any storm.
+        for &t in &targets {
+            let busy = v.scheduler().occupied_ns(t);
+            let watts = v.soc().active_watts(t);
+            let charged = v.charged_energy_nj(t);
+            assert_prop(
+                charged == busy * watts,
+                format!("{t}: charged {charged} nJ != {watts} W x {busy} ns"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_multi_tenant_fault_storms_resolve_every_admitted_call() {
+    use vpe::coordinator::serving::{AdmitOutcome, Completion, TenantId};
+    use vpe::sim::FaultInjector;
+
+    prop::check("serving exactly-once under faults", 15, |g| {
+        let tenants = g.usize_in(2, 6) as u32;
+        let (mut server, fns) = serving_server(g.u64_in(0, u64::MAX - 1), 10_000, 10_000);
+        server.vpe_mut().set_fault_injector(
+            FaultInjector::new(g.u64_in(0, u64::MAX - 1)).with_flaky(0.05),
+        );
+        // The bottleneck unit every function pins to (see the helper).
+        let fast = server.vpe().current_target(fns[0]).expect("pinned");
+        let mut alive = true;
+        let mut handles: Vec<(u32, Completion)> = Vec::new();
+        for _ in 0..g.usize_in(15, 50) {
+            match g.usize_in(0, 8) {
+                0 if alive => {
+                    server.vpe_mut().fail_target(fast).map_err(|e| e.to_string())?;
+                    alive = false;
+                }
+                1 if !alive => {
+                    server.vpe_mut().heal_target(fast);
+                    alive = true;
+                }
+                _ => {
+                    let t = g.u64_in(0, tenants as u64) as u32;
+                    let f = *g.choose(&fns);
+                    match server.try_submit(TenantId(t), f).map_err(|e| e.to_string())? {
+                        AdmitOutcome::Admitted(c) => handles.push((t, c)),
+                        AdmitOutcome::Rejected { .. } => {
+                            return Err(
+                                "bounds are far above the storm; nothing may reject".into()
+                            )
+                        }
+                    }
+                }
+            }
+            if g.bool() {
+                server.pump().map_err(|e| e.to_string())?;
+            }
+        }
+        server.run_until_idle().map_err(|e| e.to_string())?;
+
+        // Every admitted handle resolved exactly once, under its tenant.
+        for (t, c) in &handles {
+            let rec = c.poll();
+            assert_prop(c.is_done() && rec.is_some(), "handle left unresolved")?;
+            assert_prop(
+                rec.expect("checked").tenant == Some(TenantId(*t)),
+                "record resolved under the wrong tenant",
+            )?;
+        }
+        // The books close: submitted splits exactly into completed-Ok
+        // plus typed failures; nothing rejected, nothing stranded.
+        for s in server.vpe().serving_stats() {
+            assert_prop(
+                s.submitted == s.completed + s.failed && s.rejected == 0,
+                format!("stats drifted: {s:?}"),
+            )?;
+        }
+        assert_prop(server.accepted_inflight() == 0, "accepted population must drain to 0")?;
+        assert_prop(server.vpe().in_flight() == 0, "dispatch queue must drain")?;
+        assert_prop(server.vpe().soc().shared.used_bytes() == 0, "staged params leaked")?;
+
+        // Conservation holds through the storm on every unit.
+        let v = server.vpe();
+        for t in [dm3730::ARM, dm3730::DSP, fast] {
+            let busy = v.scheduler().occupied_ns(t);
+            let watts = v.soc().active_watts(t);
+            assert_prop(
+                v.charged_energy_nj(t) == busy * watts,
+                format!("{t}: charged {} nJ != {watts} W x {busy} ns",
+                    v.charged_energy_nj(t)),
+            )?;
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_drr_fair_share_lower_bound() {
     use vpe::coordinator::serving::{AdmitOutcome, TenantId};
