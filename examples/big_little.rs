@@ -20,11 +20,14 @@
 //! table then re-prices the latency-optimal recording under every
 //! objective, side by side in ms and mJ.
 //!
-//! Emits `BENCH_energy.json` — placements, totals and replay-exactness
-//! per objective, diffable across PRs (CI uploads it per run).
+//! Emits `BENCH_energy.json` through the shared
+//! [`vpe::bench_harness::report`] writer — one row per objective with
+//! placement, totals and replay-exactness, diffable across PRs (CI
+//! uploads it per run).
 //!
 //! `cargo run --release --example big_little`
 
+use vpe::bench_harness::{BenchReport, BenchRow, Metric};
 use vpe::coordinator::policies_ext::{EdpPolicy, EnergyPolicy, EnergyPolicyConfig};
 use vpe::coordinator::policy::{BlindOffloadPolicy, OffloadPolicy};
 use vpe::coordinator::trace::{replay, Trace};
@@ -68,16 +71,16 @@ fn build_platform(policy: Box<dyn OffloadPolicy>) -> vpe::Result<(Vpe, [TargetId
 }
 
 /// Run the hot matmul under one objective's policy with tracing on;
-/// return the settled placement, the recorded trace and the live
-/// joules charged across the platform.
-fn run_objective(policy: Box<dyn OffloadPolicy>) -> vpe::Result<(TargetId, Trace, u64)> {
+/// return the settled placement, the recorded trace, the live joules
+/// charged across the platform and the setup saved by batching.
+fn run_objective(policy: Box<dyn OffloadPolicy>) -> vpe::Result<(TargetId, Trace, u64, u64)> {
     let (mut vpe, _) = build_platform(policy)?;
     vpe.enable_tracing();
     let f = vpe.register_workload(WorkloadKind::Matmul)?;
     vpe.run(f, ITERS)?;
     let placed = vpe.current_target(f)?;
     let trace = vpe.trace().expect("tracing enabled").clone();
-    Ok((placed, trace, vpe.total_energy_nj()))
+    Ok((placed, trace, vpe.total_energy_nj(), vpe.saved_setup_ns()))
 }
 
 /// Same-policy replay: must reproduce the recorded decision sequence,
@@ -104,10 +107,10 @@ fn main() -> vpe::Result<()> {
         ("energy", Box::new(EnergyPolicy::new(cfg))),
         ("edp", Box::new(EdpPolicy::new(cfg))),
     ];
-    let mut placements: Vec<(String, TargetId, Trace, u64)> = Vec::new();
+    let mut placements: Vec<(String, TargetId, Trace, u64, u64)> = Vec::new();
     for (objective, policy) in runs {
-        let (placed, trace, live_nj) = run_objective(policy)?;
-        placements.push((objective.to_string(), placed, trace, live_nj));
+        let (placed, trace, live_nj, saved_ns) = run_objective(policy)?;
+        placements.push((objective.to_string(), placed, trace, live_nj, saved_ns));
     }
 
     // Names for printing, from any one of the (identical) platforms.
@@ -115,8 +118,8 @@ fn main() -> vpe::Result<()> {
     let name = |id: TargetId| probe.soc().registry.get(id).map(|s| s.name.clone());
 
     println!("objective   settled on      recorded ms  recorded mJ  replay");
-    let mut rows: Vec<String> = Vec::new();
-    for (objective, placed, trace, live_nj) in &placements {
+    let mut report = BenchReport::new("big_little", "full");
+    for (objective, placed, trace, live_nj, saved_ns) in &placements {
         let mut fresh: Box<dyn OffloadPolicy> = match objective.as_str() {
             "latency" => Box::<BlindOffloadPolicy>::default(),
             "energy" => Box::new(EnergyPolicy::new(cfg)),
@@ -127,13 +130,25 @@ fn main() -> vpe::Result<()> {
             "{objective:<11} {:<15} {ms:>11.1} {mj:>12.3}  exact",
             name(*placed)?
         );
-        rows.push(format!(
-            "    {{\"objective\": \"{objective}\", \"placement\": \"{}\", \
-             \"total_ms\": {ms:.3}, \"total_mj\": {mj:.3}, \
-             \"live_total_mj\": {:.3}, \"replay_exact\": true}}",
-            name(*placed)?,
-            *live_nj as f64 / 1e6,
-        ));
+        // A sequential hot loop has no latency distribution to speak
+        // of: after settling every call costs the same, so the mean
+        // call time stands in for both percentile columns.
+        let call_ms = ms / ITERS as f64;
+        report.push(
+            BenchRow::new(objective)
+                .metric("calls", Metric::Int(ITERS as u64))
+                .metric("throughput_calls_per_s", Metric::Fixed(ITERS as f64 * 1e3 / ms, 1))
+                .metric("p50_ms", Metric::Fixed(call_ms, 3))
+                .metric("p99_ms", Metric::Fixed(call_ms, 3))
+                .metric("saved_setup_ns", Metric::Int(*saved_ns))
+                .metric("energy_nj", Metric::Int(*live_nj))
+                .metric("availability", Metric::Fixed(1.0, 6))
+                .metric("placement", Metric::Str(name(*placed)?))
+                .metric("total_ms", Metric::Fixed(ms, 3))
+                .metric("total_mj", Metric::Fixed(mj, 3))
+                .metric("live_total_mj", Metric::Fixed(*live_nj as f64 / 1e6, 3))
+                .metric("replay_exact", Metric::Bool(true)),
+        );
     }
 
     // The headline divergence: minimizing time and minimizing joules
@@ -169,15 +184,7 @@ fn main() -> vpe::Result<()> {
         );
     }
 
-    let bench = format!(
-        "{{\n  \"example\": \"big_little\",\n  \"iters\": {ITERS},\n  \"runs\": [\n{}\n  ],\n  \
-         \"divergence\": \"latency={} energy={} edp={}\"\n}}\n",
-        rows.join(",\n"),
-        name(by("latency"))?,
-        name(by("energy"))?,
-        name(by("edp"))?,
-    );
-    std::fs::write("BENCH_energy.json", &bench)?;
+    report.write(std::path::Path::new("BENCH_energy.json"))?;
     println!("\nwrote BENCH_energy.json");
     println!(
         "\nsame calls, three answers: latency -> {}, energy -> {}, EDP -> {}; every \

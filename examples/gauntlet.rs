@@ -1,0 +1,68 @@
+//! Scenario gauntlet smoke entry — the determinism-contract proof CI
+//! runs on every push.
+//!
+//! Runs the full matrix at smoke scale three times:
+//!
+//! 1. under the default master seed — the artifact run, written to
+//!    `BENCH_gauntlet.json`;
+//! 2. under the same seed again — the serialized artifact must be
+//!    **bit-identical** (the contract PR-over-PR diffing relies on);
+//! 3. under a different master seed — the artifact must *differ*
+//!    (bursty arrival schedules, and therefore timings, move).
+//!
+//! The artifact is then parsed back through the schema-validating
+//! reader, closing the loop CI's trajectory table depends on.  Every
+//! cell already asserted queue invariants, exactly-once resolution and
+//! per-target energy conservation internally — a cell that cannot
+//! prove its books simply errors the run.
+//!
+//! `cargo run --release --example gauntlet [-- --smoke]`
+
+use vpe::bench_harness::{gauntlet, GauntletConfig, ParsedBench};
+
+fn main() -> vpe::Result<()> {
+    let args = vpe::util::cli::Args::parse(std::env::args().skip(1))?;
+    // The example is CI's smoke entry: smoke scale is the default, and
+    // the flag is accepted for symmetry with the other examples.
+    let _ = args.flag("smoke");
+    let calls: usize = args.opt("calls", 64)?;
+    args.finish()?;
+
+    let mut cfg = GauntletConfig::smoke();
+    cfg.calls_per_cell = calls;
+    let cells = cfg.cells().len();
+    println!("== scenario gauntlet: {cells} cells x {calls} calls, seed {:#x} ==\n", cfg.seed);
+
+    let first = gauntlet::run_with(&cfg, |row| {
+        println!(
+            "  {:<44} {:>8.1} calls/s  p99 {:>8.3} ms",
+            row.cell(),
+            row.f64("throughput_calls_per_s").unwrap_or(0.0),
+            row.f64("p99_ms").unwrap_or(0.0)
+        );
+    })?;
+    let text = first.write(std::path::Path::new("BENCH_gauntlet.json"))?;
+
+    // Determinism contract, leg 1: same seed, bit-identical artifact.
+    let rerun = gauntlet::run(&cfg)?.to_json_string()?;
+    assert_eq!(text, rerun, "same-seed rerun must serialize bit-identically");
+
+    // Leg 2: a different master seed must move the artifact.
+    let mut other = cfg.clone();
+    other.seed ^= 0x5EED;
+    let moved = gauntlet::run(&other)?.to_json_string()?;
+    assert_ne!(text, moved, "a different master seed must produce a different artifact");
+
+    // Leg 3: the artifact roundtrips through the schema validator.
+    let parsed = ParsedBench::parse(&text)?;
+    assert_eq!(parsed.example, "gauntlet");
+    assert_eq!(parsed.cells.len(), cells);
+    assert!(parsed.cells.len() >= 24, "the matrix must sweep at least 24 cells");
+
+    println!("\nwrote BENCH_gauntlet.json ({cells} rows)");
+    println!(
+        "determinism: same-seed rerun bit-identical; seed {:#x} diverges; schema validated.",
+        other.seed
+    );
+    Ok(())
+}

@@ -24,11 +24,13 @@
 //! - every admitted call completes exactly once and resolves its
 //!   [`Completion`] handle; oversized calls are preempted into shards.
 //!
-//! Emits `BENCH_serving.json` — the repo's first perf-trajectory
-//! artifact, diffable across PRs (CI uploads it per run).
+//! Emits `BENCH_serving.json` through the shared
+//! [`vpe::bench_harness::report`] writer — one schema across every
+//! trajectory artifact, diffable across PRs (CI uploads it per run).
 //!
 //! `cargo run --release --example serving_load [-- --smoke]`
 
+use vpe::bench_harness::{BenchReport, BenchRow, Metric};
 use vpe::coordinator::policy::AlwaysOffloadPolicy;
 use vpe::coordinator::serving::{AdmitOutcome, Completion, Server, TenantId};
 use vpe::coordinator::{Vpe, VpeConfig};
@@ -145,7 +147,6 @@ fn main() -> vpe::Result<()> {
     let (vpe, pool) = build_platform()?;
     let quota = vpe.config().tenant_quota;
     let max_total = vpe.config().max_inflight_total;
-    let max_per_target = vpe.config().max_queue_per_target;
     let mut server = Server::new(vpe);
     server.vpe_mut().limit_events(50_000);
     let t0 = server.vpe().clock().now_ns();
@@ -210,22 +211,10 @@ fn main() -> vpe::Result<()> {
             }
         }
 
-        // Invariant sweep, every iteration.
-        if server.accepted_inflight() > max_total {
-            violations += 1;
-        }
-        {
-            let v = server.vpe();
-            if v.dispatches_submitted() - v.dispatches_retired() != v.in_flight() as u64 {
-                violations += 1;
-            }
-            let over: usize = v
-                .soc()
-                .targets()
-                .filter(|(id, _)| !id.is_host() && v.queue_depth_on(*id) > max_per_target)
-                .count();
-            violations += over;
-        }
+        // Invariant sweep, every iteration (population bound, dispatch
+        // accounting, per-target depth — the same sweep the gauntlet
+        // runs on its clean cells).
+        violations += server.invariant_violations();
         max_accepted = max_accepted.max(server.accepted_inflight());
 
         let done_total: usize = completed.iter().sum();
@@ -317,33 +306,29 @@ fn main() -> vpe::Result<()> {
     );
     assert!(tail_ratio <= 50.0, "p99/p50 must stay bounded (got {tail_ratio:.1})");
 
-    let bench = format!(
-        "{{\n  \"example\": \"serving_load\",\n  \"mode\": \"{}\",\n  \"calls\": {},\n  \
-         \"tenants\": {},\n  \"sim_seconds\": {:.3},\n  \"throughput_calls_per_s\": {:.1},\n  \
-         \"p50_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \"p99_over_p50\": {:.2},\n  \
-         \"rejected\": {},\n  \"preempted\": {},\n  \"bounced\": {},\n  \
-         \"batches_formed\": {},\n  \"saved_setup_ms\": {:.1},\n  \
-         \"max_accepted_inflight\": {},\n  \"accel_utilization\": {:.3},\n  \
-         \"min_share_frac\": {:.3},\n  \"violations\": {}\n}}\n",
-        if smoke { "smoke" } else { "full" },
-        total,
-        TENANTS,
-        elapsed_s,
-        throughput,
-        p50_ns as f64 / 1e6,
-        p99_ns as f64 / 1e6,
-        tail_ratio,
-        server.rejected(),
-        server.preempted(),
-        server.vpe().scheduler().bounce_count(),
-        server.vpe().batches_formed(),
-        server.vpe().saved_setup_ns() as f64 / 1e6,
-        max_accepted,
-        utilization,
-        min_share_frac,
-        violations,
+    let mut report = BenchReport::new("serving_load", if smoke { "smoke" } else { "full" });
+    report.push(
+        BenchRow::new("all")
+            .metric("calls", Metric::Int(total as u64))
+            .metric("throughput_calls_per_s", Metric::Fixed(throughput, 1))
+            .metric("p50_ms", Metric::Fixed(p50_ns as f64 / 1e6, 3))
+            .metric("p99_ms", Metric::Fixed(p99_ns as f64 / 1e6, 3))
+            .metric("saved_setup_ns", Metric::Int(server.vpe().saved_setup_ns()))
+            .metric("energy_nj", Metric::Int(server.vpe().total_energy_nj()))
+            .metric("availability", Metric::Fixed(server.vpe().availability().unwrap_or(1.0), 6))
+            .metric("tenants", Metric::Int(TENANTS as u64))
+            .metric("sim_seconds", Metric::Fixed(elapsed_s, 3))
+            .metric("p99_over_p50", Metric::Fixed(tail_ratio, 2))
+            .metric("rejected", Metric::Int(server.rejected()))
+            .metric("preempted", Metric::Int(server.preempted()))
+            .metric("bounced", Metric::Int(server.vpe().scheduler().bounce_count()))
+            .metric("batches_formed", Metric::Int(server.vpe().batches_formed()))
+            .metric("max_accepted_inflight", Metric::Int(max_accepted as u64))
+            .metric("accel_utilization", Metric::Fixed(utilization, 3))
+            .metric("min_share_frac", Metric::Fixed(min_share_frac, 3))
+            .metric("violations", Metric::Int(violations as u64)),
     );
-    std::fs::write("BENCH_serving.json", &bench)?;
+    report.write(std::path::Path::new("BENCH_serving.json"))?;
     println!("\nwrote BENCH_serving.json");
     println!(
         "\n{} calls from {TENANTS} tenants: fair to within {:.0}% of an equal split, \

@@ -1,0 +1,672 @@
+//! Scenario gauntlet: a seeded, deterministic benchmark matrix over
+//! the full serving path.
+//!
+//! The paper's claim is a *curve*, not a number — transparent dispatch
+//! must pay off across workload shapes.  The gauntlet grades every PR
+//! against that curve: each [`Cell`] of the matrix (arrival pattern x
+//! function mix x transport setup cost x target count x policy x fault
+//! injection) drives admission, DRR fair scheduling, batching, fan-out
+//! and recovery end to end, sweeps the queue invariants every pump
+//! batch, asserts exactly-once resolution and per-target energy
+//! conservation at drain, and emits one row of `BENCH_gauntlet.json`
+//! through the shared [`super::report`] writer.
+//!
+//! **Determinism contract.**  Every cell derives its own seed from the
+//! master seed and the cell id; arrivals, mix picks and the platform
+//! RNG all run off that seed, and every metric is rendered at fixed
+//! precision — so the same seed produces a bit-identical artifact, a
+//! different seed produces different bursty schedules, and a
+//! regression in any cell across PRs is attributable, not noise.
+
+use crate::coordinator::policies_ext::{EdpPolicy, EnergyPolicy, EnergyPolicyConfig, FanOutPolicy};
+use crate::coordinator::policy::{BlindOffloadPolicy, OffloadPolicy};
+use crate::coordinator::serving::{AdmitOutcome, Completion, Server, TenantId};
+use crate::coordinator::shard::Objective;
+use crate::coordinator::vpe::{CallOutcome, Vpe, VpeConfig};
+use crate::coordinator::GauntletKnobs;
+use crate::error::{Error, Result};
+use crate::jit::module::FunctionId;
+use crate::platform::{energy_nj, PowerModel, TargetId, TargetSpec, TransferModel, Transport};
+use crate::sim::{ArrivalPattern, FaultInjector, SimRng};
+use crate::workloads::{PaperScale, WorkloadKind};
+
+use super::report::{BenchReport, BenchRow, Metric};
+
+/// Tenants sharing every cell's server (the skewed mix table is sized
+/// to this).
+pub const TENANTS: usize = 4;
+
+/// Retirements pumped per driver iteration, between invariant sweeps.
+const PUMP_BATCH: usize = 32;
+
+/// Default master seed (any change is a deliberate artifact break).
+const DEFAULT_SEED: u64 = 0x6A07;
+
+/// Per-tenant weights over `[tiny, med, big, monster]` under the
+/// skewed mix: every tenant leans on different silicon appetites.
+const SKEWED_MIXES: [[u32; 4]; TENANTS] =
+    [[6, 3, 1, 0], [1, 6, 2, 1], [1, 2, 6, 1], [2, 2, 2, 4]];
+
+/// Arrival-pattern axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrival {
+    /// Trickle traffic: every tenant keeps a small window topped up.
+    Steady,
+    /// Refill-to-quota bursts separated by seeded think-time gaps.
+    Bursty,
+}
+
+impl Arrival {
+    /// Axis label used in cell ids.
+    pub fn name(self) -> &'static str {
+        match self {
+            Arrival::Steady => "steady",
+            Arrival::Bursty => "bursty",
+        }
+    }
+}
+
+/// Function-mix axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mix {
+    /// Every tenant draws uniformly over the workload pool.
+    Uniform,
+    /// Tenants draw from [`SKEWED_MIXES`].
+    Skewed,
+}
+
+impl Mix {
+    /// Axis label used in cell ids.
+    pub fn name(self) -> &'static str {
+        match self {
+            Mix::Uniform => "uniform",
+            Mix::Skewed => "skewed",
+        }
+    }
+}
+
+/// Transport-setup axis: how expensive one dispatch's fixed setup is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Setup {
+    /// 1.5 ms fixed setup (shared-memory mailbox).
+    Fast,
+    /// 12 ms fixed setup (slow link: batching pays for itself or else).
+    Slow,
+}
+
+impl Setup {
+    /// Axis label used in cell ids.
+    pub fn name(self) -> &'static str {
+        match self {
+            Setup::Fast => "fast",
+            Setup::Slow => "slow",
+        }
+    }
+
+    fn dispatch_fixed_ns(self) -> u64 {
+        match self {
+            Setup::Fast => 1_500_000,
+            Setup::Slow => 12_000_000,
+        }
+    }
+}
+
+/// Offload-policy axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Latency-greedy ([`BlindOffloadPolicy`]).
+    Latency,
+    /// Joule-greedy ([`EnergyPolicy`]).
+    Energy,
+    /// Energy-delay product ([`EdpPolicy`]).
+    Edp,
+    /// Width-spreading ([`FanOutPolicy`]).
+    FanOut,
+}
+
+impl Policy {
+    /// Axis label used in cell ids.
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Latency => "latency",
+            Policy::Energy => "energy",
+            Policy::Edp => "edp",
+            Policy::FanOut => "fanout",
+        }
+    }
+
+    fn objective(self) -> Objective {
+        match self {
+            Policy::Latency | Policy::FanOut => Objective::Latency,
+            Policy::Energy => Objective::Energy,
+            Policy::Edp => Objective::Edp,
+        }
+    }
+
+    fn boxed(self) -> Box<dyn OffloadPolicy> {
+        match self {
+            Policy::Latency => Box::<BlindOffloadPolicy>::default(),
+            Policy::Energy => Box::new(EnergyPolicy::new(EnergyPolicyConfig::default())),
+            Policy::Edp => Box::new(EdpPolicy::new(EnergyPolicyConfig::default())),
+            Policy::FanOut => Box::<FanOutPolicy>::default(),
+        }
+    }
+}
+
+/// One scenario cell of the gauntlet matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Cell {
+    /// Arrival pattern driving every tenant.
+    pub arrival: Arrival,
+    /// Function mix tenants draw from.
+    pub mix: Mix,
+    /// Transport setup cost on every added unit.
+    pub setup: Setup,
+    /// Number of added accelerator units (2..=16).
+    pub targets: usize,
+    /// Offload policy (and matching shard objective).
+    pub policy: Policy,
+    /// Run the scripted kill/degrade/flaky storm?
+    pub faults: bool,
+}
+
+impl Cell {
+    /// Stable cell id — the `cell` column of the artifact and the
+    /// string `--cell` filters match against.
+    pub fn id(&self) -> String {
+        format!(
+            "{}-{}-{}-t{:02}-{}-{}",
+            self.arrival.name(),
+            self.mix.name(),
+            self.setup.name(),
+            self.targets,
+            self.policy.name(),
+            if self.faults { "faults" } else { "clean" }
+        )
+    }
+}
+
+/// The default matrix: the full axis cross at 4 fast-setup targets
+/// (2 arrivals x 2 mixes x 4 policies x faults on/off = 32 cells),
+/// plus a scale spur sweeping target count 2 -> 16 against both
+/// transports (6 cells).
+pub fn default_matrix() -> Vec<Cell> {
+    let mut cells = Vec::with_capacity(38);
+    for arrival in [Arrival::Steady, Arrival::Bursty] {
+        for mix in [Mix::Uniform, Mix::Skewed] {
+            for policy in [Policy::Latency, Policy::Energy, Policy::Edp, Policy::FanOut] {
+                for faults in [false, true] {
+                    cells.push(Cell {
+                        arrival,
+                        mix,
+                        setup: Setup::Fast,
+                        targets: 4,
+                        policy,
+                        faults,
+                    });
+                }
+            }
+        }
+    }
+    for targets in [2usize, 8, 16] {
+        for setup in [Setup::Fast, Setup::Slow] {
+            cells.push(Cell {
+                arrival: Arrival::Steady,
+                mix: Mix::Uniform,
+                setup,
+                targets,
+                policy: Policy::Latency,
+                faults: false,
+            });
+        }
+    }
+    cells
+}
+
+/// Gauntlet run parameters.
+#[derive(Debug, Clone)]
+pub struct GauntletConfig {
+    /// Master seed every cell seed derives from.
+    pub seed: u64,
+    /// Serving calls per cell (split evenly over [`TENANTS`]).
+    pub calls_per_cell: usize,
+    /// Substring filter over cell ids (`None` runs the whole matrix).
+    pub filter: Option<String>,
+    /// Smoke scale — stamps the artifact's `mode` column.
+    pub smoke: bool,
+}
+
+impl Default for GauntletConfig {
+    fn default() -> Self {
+        GauntletConfig { seed: DEFAULT_SEED, calls_per_cell: 240, filter: None, smoke: false }
+    }
+}
+
+impl GauntletConfig {
+    /// CI-scale configuration: the full matrix at 64 calls per cell.
+    pub fn smoke() -> Self {
+        GauntletConfig { calls_per_cell: 64, smoke: true, ..Self::default() }
+    }
+
+    /// Overlay knobs parsed from a config document
+    /// ([`crate::coordinator::config::gauntlet_knobs`]).
+    pub fn apply_knobs(&mut self, knobs: &GauntletKnobs) {
+        if let Some(seed) = knobs.seed {
+            self.seed = seed;
+        }
+        if knobs.cell_filter.is_some() {
+            self.filter = knobs.cell_filter.clone();
+        }
+        let calls = if self.smoke { knobs.smoke_calls_per_cell } else { knobs.calls_per_cell };
+        if let Some(calls) = calls {
+            self.calls_per_cell = calls;
+        }
+    }
+
+    /// The cells this configuration selects, in matrix order.
+    pub fn cells(&self) -> Vec<Cell> {
+        default_matrix()
+            .into_iter()
+            .filter(|c| self.filter.as_deref().is_none_or(|f| c.id().contains(f)))
+            .collect()
+    }
+}
+
+/// FNV-1a over the cell id, folded with the master seed: every cell
+/// gets its own stable RNG stream, and changing the master seed moves
+/// all of them.
+fn cell_seed(master: u64, id: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in id.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h ^ master
+}
+
+/// Build one cell's platform: `targets` added units with spread rates
+/// and asymmetric power, a four-size workload pool, one warm-up call
+/// per function so every dispatch slot is committed.
+fn build_cell(cell: &Cell, seed: u64) -> Result<(Vpe, [FunctionId; 4], Vec<TargetId>)> {
+    let mut cfg = VpeConfig::sim_only();
+    cfg.seed = seed;
+    cfg.tenant_quota = 16;
+    cfg.max_inflight_total = 48;
+    cfg.deadline_ns = 20_000_000; // the monster matmul must preempt
+    cfg.quarantine_threshold = 2;
+    cfg.probe_interval_ns = 10_000_000;
+    cfg.objective = cell.policy.objective();
+    let mut vpe = Vpe::with_policy(cfg, cell.policy.boxed())?;
+
+    let kinds = [WorkloadKind::Dotprod, WorkloadKind::Conv2d, WorkloadKind::Matmul];
+    let base = [1.0, 2.2, 1.5];
+    let mut units = Vec::with_capacity(cell.targets);
+    for i in 0..cell.targets {
+        let id = vpe.soc_mut().add_target(
+            TargetSpec::new(&format!("g{i:02}"), 1_200_000_000).with_transport(
+                Transport::SharedMemory(TransferModel {
+                    dispatch_fixed_ns: cell.setup.dispatch_fixed_ns(),
+                    per_param_byte_ns: 1.0,
+                }),
+            ),
+        );
+        vpe.soc_mut().registry.get_mut(id)?.power = PowerModel::new(1 + (i as u64 % 4), 0);
+        let spread = 1.0 + 0.4 * i as f64;
+        for (kind, rate) in kinds.iter().zip(base) {
+            vpe.soc_mut().cost.set_rate(*kind, id, rate * spread);
+        }
+        units.push(id);
+    }
+
+    let tiny = vpe.register_workload(WorkloadKind::Dotprod)?;
+    vpe.set_scale(tiny, PaperScale { items: 1e5, param_bytes: 48, payload_bytes: 4096 })?;
+    let med = vpe.register_workload(WorkloadKind::Conv2d)?;
+    vpe.set_scale(med, PaperScale { items: 1e6, param_bytes: 48, payload_bytes: 4096 })?;
+    let big = vpe.register_matmul(128)?;
+    let monster = vpe.register_matmul(256)?;
+    let pool = [tiny, med, big, monster];
+    for f in pool {
+        vpe.call(f)?; // host warm-up; the policy commits each slot
+    }
+    Ok((vpe, pool, units))
+}
+
+/// The cell's scripted storm, relative to `t0`: kill the first unit
+/// mid-traffic and heal it, thermally degrade the second, with a
+/// 0.5% flaky transient rate throughout (breaker traffic).
+fn storm(seed: u64, t0: u64, units: &[TargetId]) -> FaultInjector {
+    let ms = |x: u64| t0 + x * 1_000_000;
+    let mut inj = FaultInjector::new(seed ^ 0xFA17)
+        .fail_at(ms(6), units[0])
+        .heal_at(ms(46), units[0])
+        .with_flaky(0.005);
+    if units.len() > 1 {
+        inj = inj.degrade_at(ms(12), units[1], 2.0).heal_at(ms(52), units[1]);
+    }
+    inj
+}
+
+fn pick(rng: &mut SimRng, weights: &[u32; 4], pool: &[FunctionId; 4]) -> FunctionId {
+    let total: u32 = weights.iter().sum();
+    let mut r = (rng.next_u64() % u64::from(total)) as u32;
+    for (w, f) in weights.iter().zip(pool) {
+        if r < *w {
+            return *f;
+        }
+        r -= w;
+    }
+    pool[3]
+}
+
+/// Run one cell end to end and return its artifact row.  Errors (never
+/// silently reports) if any invariant breaks: a stranded handle, a
+/// double resolution, unbalanced queue books, a depth violation on a
+/// fault-free path, a staging leak, or an energy-conservation miss.
+pub fn run_cell(cell: &Cell, cfg: &GauntletConfig) -> Result<BenchRow> {
+    let id = cell.id();
+    let seed = cell_seed(cfg.seed, &id);
+    let per_tenant = (cfg.calls_per_cell / TENANTS).max(1);
+    let total = per_tenant * TENANTS;
+
+    let (mut vpe, pool, units) = build_cell(cell, seed)?;
+    let t0 = vpe.clock().now_ns();
+    if cell.faults {
+        vpe.set_fault_injector(storm(seed, t0, &units));
+    }
+    let quota = vpe.config().tenant_quota;
+    let mut server = Server::new(vpe);
+
+    let uniform = [1u32; 4];
+    let weights: [&[u32; 4]; TENANTS] = match cell.mix {
+        Mix::Uniform => [&uniform; TENANTS],
+        Mix::Skewed => [&SKEWED_MIXES[0], &SKEWED_MIXES[1], &SKEWED_MIXES[2], &SKEWED_MIXES[3]],
+    };
+    let mut arrivals: Vec<ArrivalPattern> = (0..TENANTS)
+        .map(|t| match cell.arrival {
+            Arrival::Steady => ArrivalPattern::steady(),
+            Arrival::Bursty => {
+                ArrivalPattern::bursty(seed ^ (0xB0 + t as u64), 2_000_000, 10_000_000)
+            }
+        })
+        .collect();
+    let mut pick_rng = SimRng::seeded(seed ^ 0x9C);
+
+    let mut next_burst_at = [0u64; TENANTS];
+    let mut remaining = [per_tenant; TENANTS];
+    let mut admitted = [0usize; TENANTS];
+    let mut resolved = [0usize; TENANTS];
+    let mut failed_calls = 0u64;
+    let mut handles: Vec<Completion> = Vec::with_capacity(total);
+    let mut violations = 0usize;
+    let mut guard = 0usize;
+
+    loop {
+        guard += 1;
+        if guard > total * 60 + 10_000 {
+            return Err(Error::Coordinator(format!("gauntlet cell '{id}' stalled")));
+        }
+
+        let now = server.vpe().clock().now_ns();
+        for t in 0..TENANTS {
+            if remaining[t] == 0 || now < next_burst_at[t] {
+                continue;
+            }
+            let pending = admitted[t] - resolved[t];
+            let (low_water, fill) = match cell.arrival {
+                Arrival::Steady => (4usize.min(quota), 4usize.min(quota)),
+                Arrival::Bursty => (quota / 2, quota),
+            };
+            if pending >= low_water {
+                continue;
+            }
+            let mut burst = fill.saturating_sub(pending).min(remaining[t]);
+            let mut admitted_any = false;
+            while burst > 0 {
+                let f = pick(&mut pick_rng, weights[t], &pool);
+                match server.try_submit(TenantId(t as u32), f)? {
+                    AdmitOutcome::Admitted(done) => {
+                        handles.push(done);
+                        admitted[t] += 1;
+                        remaining[t] -= 1;
+                        burst -= 1;
+                        admitted_any = true;
+                    }
+                    AdmitOutcome::Rejected { retry_after_ns, .. } => {
+                        next_burst_at[t] = now.saturating_add(retry_after_ns);
+                        break;
+                    }
+                }
+            }
+            if admitted_any && burst == 0 {
+                next_burst_at[t] = now.saturating_add(arrivals[t].next_gap_ns());
+            }
+        }
+
+        let mut progressed = false;
+        for _ in 0..PUMP_BATCH {
+            match server.pump()? {
+                Some(rec) => {
+                    progressed = true;
+                    if let Some(TenantId(t)) = rec.tenant {
+                        resolved[t as usize] += 1;
+                        if rec.outcome != CallOutcome::Ok {
+                            failed_calls += 1;
+                        }
+                    }
+                }
+                None => break,
+            }
+        }
+
+        // Invariant sweep, every pump batch.  Mid-fault salvage may
+        // transiently overfill a survivor's queue by design, so fault
+        // cells sweep the core set (population + books) and fault-free
+        // cells sweep the depth bound too.
+        violations += if cell.faults {
+            server.core_invariant_violations()
+        } else {
+            server.invariant_violations()
+        };
+
+        if remaining.iter().all(|&r| r == 0) && server.is_idle() {
+            break;
+        }
+        if !progressed {
+            let next = (0..TENANTS)
+                .filter(|&t| remaining[t] > 0)
+                .map(|t| next_burst_at[t])
+                .filter(|&at| at > now)
+                .min();
+            if let Some(at) = next {
+                server.idle_until(at);
+            }
+        }
+    }
+
+    // -- end-of-cell acceptance ------------------------------------------
+    let stranded = handles.iter().filter(|h| !h.is_done()).count();
+    if stranded != 0 {
+        return Err(Error::Coordinator(format!("cell '{id}': {stranded} stranded handle(s)")));
+    }
+    let resolved_total: usize = resolved.iter().sum();
+    if resolved_total != total {
+        return Err(Error::Coordinator(format!(
+            "cell '{id}': exactly-once broken — {resolved_total} resolutions for {total} calls"
+        )));
+    }
+    if violations != 0 {
+        return Err(Error::Coordinator(format!(
+            "cell '{id}': {violations} queue-invariant violation(s)"
+        )));
+    }
+    if !cell.faults && failed_calls != 0 {
+        return Err(Error::Coordinator(format!(
+            "cell '{id}': {failed_calls} typed failure(s) without fault injection"
+        )));
+    }
+    let v = server.vpe();
+    if v.in_flight() != 0 || v.dispatches_submitted() != v.dispatches_retired() {
+        return Err(Error::Coordinator(format!("cell '{id}': dispatch books unbalanced at drain")));
+    }
+    if v.soc().shared.used_bytes() != 0 {
+        return Err(Error::Coordinator(format!("cell '{id}': staging region leaked")));
+    }
+    for (tid, _) in v.soc().targets() {
+        let expect = energy_nj(v.scheduler().occupied_ns(tid), v.soc().active_watts(tid));
+        if v.charged_energy_nj(tid) != expect {
+            return Err(Error::Coordinator(format!(
+                "cell '{id}': energy books off on {tid}: charged {} != {} (busy x watts)",
+                v.charged_energy_nj(tid),
+                expect
+            )));
+        }
+    }
+
+    // -- the artifact row -------------------------------------------------
+    let elapsed_s = (v.clock().now_ns() - t0) as f64 / 1e9;
+    let (p50_ns, p99_ns) = v.serving_latency_percentiles().unwrap_or((0, 0));
+    let (retries, _, _, _) = v.recovery_counters();
+    Ok(BenchRow::new(id)
+        .metric("calls", Metric::Int(total as u64))
+        .metric("throughput_calls_per_s", Metric::Fixed(total as f64 / elapsed_s, 1))
+        .metric("p50_ms", Metric::Fixed(p50_ns as f64 / 1e6, 3))
+        .metric("p99_ms", Metric::Fixed(p99_ns as f64 / 1e6, 3))
+        .metric("saved_setup_ns", Metric::Int(v.saved_setup_ns()))
+        .metric("energy_nj", Metric::Int(v.total_energy_nj()))
+        .metric("availability", Metric::Fixed(v.availability().unwrap_or(1.0), 6))
+        .metric("sim_seconds", Metric::Fixed(elapsed_s, 3))
+        .metric("rejected", Metric::Int(server.rejected()))
+        .metric("preempted", Metric::Int(server.preempted()))
+        .metric("batches_formed", Metric::Int(server.vpe().batches_formed()))
+        .metric("retries", Metric::Int(retries))
+        .metric("failed", Metric::Int(failed_calls)))
+}
+
+/// Run the configured sweep and return the artifact.
+pub fn run(cfg: &GauntletConfig) -> Result<BenchReport> {
+    run_with(cfg, |_| {})
+}
+
+/// [`run`], with a per-row callback for progress display.
+pub fn run_with(cfg: &GauntletConfig, mut on_row: impl FnMut(&BenchRow)) -> Result<BenchReport> {
+    let mut report = BenchReport::new("gauntlet", if cfg.smoke { "smoke" } else { "full" });
+    for cell in cfg.cells() {
+        let row = run_cell(&cell, cfg)?;
+        on_row(&row);
+        report.push(row);
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeSet;
+
+    use super::*;
+
+    #[test]
+    fn matrix_has_at_least_24_unique_cells() {
+        let cells = default_matrix();
+        assert!(cells.len() >= 24, "only {} cells", cells.len());
+        let ids: BTreeSet<String> = cells.iter().map(Cell::id).collect();
+        assert_eq!(ids.len(), cells.len(), "cell ids must be unique");
+        // Every axis value appears somewhere.
+        let joined = ids.iter().cloned().collect::<Vec<_>>().join("\n");
+        for needle in ["steady", "bursty", "uniform", "skewed", "latency", "energy"] {
+            assert!(joined.contains(needle), "axis '{needle}' missing");
+        }
+        for needle in ["edp", "fanout", "faults", "clean", "-fast-", "-slow-", "t02", "t16"] {
+            assert!(joined.contains(needle), "axis '{needle}' missing");
+        }
+    }
+
+    #[test]
+    fn cell_seeds_are_stable_and_distinct() {
+        let a = cell_seed(1, "steady-uniform-fast-t04-latency-clean");
+        assert_eq!(a, cell_seed(1, "steady-uniform-fast-t04-latency-clean"));
+        assert_ne!(a, cell_seed(2, "steady-uniform-fast-t04-latency-clean"));
+        assert_ne!(a, cell_seed(1, "steady-uniform-fast-t04-latency-faults"));
+    }
+
+    #[test]
+    fn filter_and_knobs_select_cells() {
+        let mut cfg = GauntletConfig::smoke();
+        assert_eq!(cfg.cells().len(), default_matrix().len());
+        cfg.filter = Some("t16".into());
+        assert_eq!(cfg.cells().len(), 2);
+        let knobs = GauntletKnobs {
+            seed: Some(7),
+            cell_filter: Some("faults".into()),
+            calls_per_cell: Some(500),
+            smoke_calls_per_cell: Some(32),
+        };
+        cfg.apply_knobs(&knobs);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.calls_per_cell, 32, "smoke runs take the smoke knob");
+        assert_eq!(cfg.cells().len(), 16);
+        let mut full = GauntletConfig::default();
+        full.apply_knobs(&knobs);
+        assert_eq!(full.calls_per_cell, 500, "full runs take the full knob");
+    }
+
+    fn tiny_cfg(seed: u64) -> GauntletConfig {
+        GauntletConfig { seed, calls_per_cell: 24, smoke: true, ..GauntletConfig::default() }
+    }
+
+    #[test]
+    fn same_seed_cells_are_bit_identical() {
+        let cell = Cell {
+            arrival: Arrival::Bursty,
+            mix: Mix::Skewed,
+            setup: Setup::Fast,
+            targets: 4,
+            policy: Policy::Latency,
+            faults: true,
+        };
+        let cfg = tiny_cfg(11);
+        let render = |row: BenchRow| {
+            let mut r = BenchReport::new("gauntlet", "smoke");
+            r.push(row);
+            r.to_json_string().unwrap()
+        };
+        let a = render(run_cell(&cell, &cfg).unwrap());
+        let b = render(run_cell(&cell, &cfg).unwrap());
+        assert_eq!(a, b, "same seed must reproduce the identical metrics row");
+    }
+
+    #[test]
+    fn distinct_master_seeds_diverge_on_a_bursty_cell() {
+        let cell = Cell {
+            arrival: Arrival::Bursty,
+            mix: Mix::Uniform,
+            setup: Setup::Fast,
+            targets: 4,
+            policy: Policy::Latency,
+            faults: false,
+        };
+        let a = run_cell(&cell, &tiny_cfg(1)).unwrap();
+        let b = run_cell(&cell, &tiny_cfg(2)).unwrap();
+        // The arrival schedules differ, so simulated time must differ.
+        assert_ne!(
+            a.get("sim_seconds"),
+            b.get("sim_seconds"),
+            "distinct seeds must produce distinct bursty schedules"
+        );
+    }
+
+    #[test]
+    fn a_fault_cell_passes_every_end_to_end_assertion() {
+        let cell = Cell {
+            arrival: Arrival::Steady,
+            mix: Mix::Uniform,
+            setup: Setup::Fast,
+            targets: 4,
+            policy: Policy::Edp,
+            faults: true,
+        };
+        let row = run_cell(&cell, &tiny_cfg(3)).unwrap();
+        assert_eq!(row.f64("calls"), Some(24.0));
+        assert!(row.f64("throughput_calls_per_s").unwrap() > 0.0);
+        assert!(row.f64("availability").unwrap() > 0.0);
+    }
+}

@@ -1,10 +1,16 @@
 //! Regeneration harness for every table and figure in the paper's
-//! evaluation (§5): Table 1, Fig 2(a), Fig 2(b), Fig 3.
+//! evaluation (§5) — Table 1, Fig 2(a), Fig 2(b), Fig 3 — plus the
+//! scenario gauntlet ([`gauntlet`]) and the shared benchmark-artifact
+//! writer ([`report`]) every `BENCH_*.json` emitter goes through.
 
 pub mod fig2;
 pub mod fig3;
+pub mod gauntlet;
+pub mod report;
 pub mod table1;
 
 pub use fig2::{fig2a, fig2b, Fig2bPoint};
 pub use fig3::{fig3, Fig3Summary};
+pub use gauntlet::{default_matrix, Cell, GauntletConfig};
+pub use report::{trajectory_table, BenchReport, BenchRow, Metric, ParsedBench};
 pub use table1::{table1, Table1Row};

@@ -1,0 +1,465 @@
+//! Shared `BENCH_*.json` writer — one schema for every perf-trajectory
+//! artifact.
+//!
+//! PRs 6–8 each grew an ad-hoc `format!`-based emitter
+//! (`BENCH_serving.json`, `BENCH_energy.json`, `BENCH_recovery.json`);
+//! this module generalizes them into one writer so every trajectory
+//! artifact is diffable with the same tooling.  An artifact is:
+//!
+//! ```json
+//! {
+//!   "schema": "vpe-bench-v1",
+//!   "example": "gauntlet",
+//!   "mode": "smoke",
+//!   "rows": [
+//!     {"cell": "steady-uniform-fast-t04-latency-clean", "calls": 64, ...}
+//!   ]
+//! }
+//! ```
+//!
+//! Every row carries the cell label plus the [`REQUIRED_COLUMNS`]
+//! (throughput, tail latencies, batching savings, energy,
+//! availability); emitters may append extra columns after them.
+//! Serialization is fully deterministic — integers render as integers,
+//! floats render at a fixed per-metric precision, keys keep insertion
+//! order — so two runs under the same seed produce bit-identical
+//! artifacts.  [`ParsedBench`] reads an artifact back through
+//! [`crate::util::json`] and rejects schema drift (wrong tag, missing
+//! column, non-numeric metric), which is what keeps CI's trajectory
+//! diffing honest; [`trajectory_table`] renders the per-cell
+//! comparison between two artifacts.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+/// Schema tag stamped into (and demanded of) every benchmark artifact.
+pub const SCHEMA: &str = "vpe-bench-v1";
+
+/// Metric columns every row must carry, in canonical order.  Counts
+/// and exact sums are integers; rates and latencies are fixed-point.
+pub const REQUIRED_COLUMNS: [&str; 7] = [
+    "calls",
+    "throughput_calls_per_s",
+    "p50_ms",
+    "p99_ms",
+    "saved_setup_ns",
+    "energy_nj",
+    "availability",
+];
+
+/// One metric value with its deterministic JSON rendering.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Metric {
+    /// Unsigned integer (counts, exact ns / nJ sums).
+    Int(u64),
+    /// Decimal rendered with a fixed number of fraction digits — the
+    /// precision is part of the value so reruns render identically.
+    Fixed(f64, u8),
+    /// String (names, placements).
+    Str(String),
+    /// Boolean.
+    Bool(bool),
+}
+
+impl Metric {
+    /// The metric as a number, when it is one (`Int` widens to f64).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Metric::Int(v) => Some(*v as f64),
+            Metric::Fixed(v, _) => Some(*v),
+            _ => None,
+        }
+    }
+
+    fn render(&self) -> String {
+        match self {
+            Metric::Int(v) => v.to_string(),
+            Metric::Fixed(v, p) => format!("{:.*}", *p as usize, v),
+            Metric::Str(s) => format!("\"{}\"", json::escape(s)),
+            Metric::Bool(b) => b.to_string(),
+        }
+    }
+}
+
+/// One row of a benchmark artifact — a scenario cell (or a whole run,
+/// for single-row emitters) and its ordered metric columns.
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    cell: String,
+    metrics: Vec<(String, Metric)>,
+}
+
+impl BenchRow {
+    /// A row labelled `cell`, with no metrics yet.
+    pub fn new(cell: impl Into<String>) -> Self {
+        BenchRow { cell: cell.into(), metrics: Vec::new() }
+    }
+
+    /// Append one metric column (builder style).  Panics on a duplicate
+    /// key — duplicates would emit invalid JSON.
+    pub fn metric(mut self, key: &str, value: Metric) -> Self {
+        assert!(
+            key != "cell" && !self.metrics.iter().any(|(k, _)| k == key),
+            "duplicate metric column '{key}'"
+        );
+        self.metrics.push((key.to_string(), value));
+        self
+    }
+
+    /// The row's cell label.
+    pub fn cell(&self) -> &str {
+        &self.cell
+    }
+
+    /// Look one metric up by column name.
+    pub fn get(&self, key: &str) -> Option<&Metric> {
+        self.metrics.iter().find(|(k, _)| k == key).map(|(_, m)| m)
+    }
+
+    /// Numeric metric by column name (`None` when absent or
+    /// non-numeric).
+    pub fn f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Metric::as_f64)
+    }
+
+    fn missing_required(&self) -> Vec<&'static str> {
+        REQUIRED_COLUMNS
+            .iter()
+            .filter(|c| !self.metrics.iter().any(|(k, _)| k == *c))
+            .copied()
+            .collect()
+    }
+}
+
+/// A benchmark artifact under construction: schema tag, provenance
+/// (which example / verb, smoke or full) and rows.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    example: String,
+    mode: String,
+    rows: Vec<BenchRow>,
+}
+
+impl BenchReport {
+    /// An empty artifact for `example` (e.g. `"gauntlet"`) in `mode`
+    /// (`"smoke"` / `"full"`).
+    pub fn new(example: &str, mode: &str) -> Self {
+        BenchReport { example: example.to_string(), mode: mode.to_string(), rows: Vec::new() }
+    }
+
+    /// Append one row.
+    pub fn push(&mut self, row: BenchRow) {
+        self.rows.push(row);
+    }
+
+    /// The rows appended so far.
+    pub fn rows(&self) -> &[BenchRow] {
+        &self.rows
+    }
+
+    /// Serialize to the canonical artifact text.  Errors when a row is
+    /// missing a required column, duplicates another row's cell label,
+    /// or holds a non-finite number — a malformed artifact must never
+    /// reach CI's trajectory diffing.
+    pub fn to_json_string(&self) -> Result<String> {
+        let mut cells = BTreeSet::new();
+        for row in &self.rows {
+            let missing = row.missing_required();
+            if !missing.is_empty() {
+                return Err(Error::Config(format!(
+                    "bench row '{}' is missing required column(s): {}",
+                    row.cell,
+                    missing.join(", ")
+                )));
+            }
+            if !cells.insert(row.cell.as_str()) {
+                return Err(Error::Config(format!("duplicate bench cell '{}'", row.cell)));
+            }
+            for (k, m) in &row.metrics {
+                if let Metric::Fixed(v, _) = m {
+                    if !v.is_finite() {
+                        return Err(Error::Config(format!(
+                            "bench cell '{}' column '{k}' is not finite ({v})",
+                            row.cell
+                        )));
+                    }
+                }
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "{{");
+        let _ = writeln!(out, "  \"schema\": \"{SCHEMA}\",");
+        let _ = writeln!(out, "  \"example\": \"{}\",", json::escape(&self.example));
+        let _ = writeln!(out, "  \"mode\": \"{}\",", json::escape(&self.mode));
+        let _ = writeln!(out, "  \"rows\": [");
+        for (i, row) in self.rows.iter().enumerate() {
+            let _ = write!(out, "    {{\"cell\": \"{}\"", json::escape(&row.cell));
+            for (k, m) in &row.metrics {
+                let _ = write!(out, ", \"{}\": {}", json::escape(k), m.render());
+            }
+            let _ = writeln!(out, "}}{}", if i + 1 < self.rows.len() { "," } else { "" });
+        }
+        let _ = writeln!(out, "  ]");
+        let _ = writeln!(out, "}}");
+        Ok(out)
+    }
+
+    /// Serialize and write the artifact to `path`; returns the written
+    /// text (callers reuse it for determinism asserts and trajectory
+    /// comparison without re-reading the file).
+    pub fn write(&self, path: &Path) -> Result<String> {
+        let text = self.to_json_string()?;
+        std::fs::write(path, &text)?;
+        Ok(text)
+    }
+}
+
+/// A benchmark artifact parsed back from JSON, schema-validated: the
+/// golden-schema gate protecting CI diffing from silent drift.
+#[derive(Debug, Clone)]
+pub struct ParsedBench {
+    /// Emitting example / verb.
+    pub example: String,
+    /// `"smoke"` or `"full"`.
+    pub mode: String,
+    /// `(cell label, metric map)` per row, in artifact order.
+    pub cells: Vec<(String, BTreeMap<String, Json>)>,
+}
+
+impl ParsedBench {
+    /// Parse and validate one artifact: the schema tag must match
+    /// [`SCHEMA`], every row must be an object with a string `cell`
+    /// label, and every [`REQUIRED_COLUMNS`] entry must be present and
+    /// numeric.
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = json::parse(text)?;
+        let schema = doc
+            .req("schema")?
+            .as_str()
+            .ok_or_else(|| Error::Parse("'schema' must be a string".into()))?;
+        if schema != SCHEMA {
+            return Err(Error::Parse(format!(
+                "unsupported bench schema '{schema}' (expected '{SCHEMA}')"
+            )));
+        }
+        let example = doc
+            .req("example")?
+            .as_str()
+            .ok_or_else(|| Error::Parse("'example' must be a string".into()))?
+            .to_string();
+        let mode = doc
+            .req("mode")?
+            .as_str()
+            .ok_or_else(|| Error::Parse("'mode' must be a string".into()))?
+            .to_string();
+        let rows = doc
+            .req("rows")?
+            .as_arr()
+            .ok_or_else(|| Error::Parse("'rows' must be an array".into()))?;
+        let mut cells = Vec::with_capacity(rows.len());
+        for row in rows {
+            let Json::Obj(m) = row else {
+                return Err(Error::Parse("every bench row must be an object".into()));
+            };
+            let cell = m
+                .get("cell")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Parse("bench row missing string 'cell' label".into()))?
+                .to_string();
+            for col in REQUIRED_COLUMNS {
+                let v = m.get(col).ok_or_else(|| {
+                    Error::Parse(format!("bench cell '{cell}' missing required column '{col}'"))
+                })?;
+                if v.as_f64().is_none() {
+                    return Err(Error::Parse(format!(
+                        "bench cell '{cell}' column '{col}' must be numeric"
+                    )));
+                }
+            }
+            cells.push((cell, m.clone()));
+        }
+        Ok(ParsedBench { example, mode, cells })
+    }
+
+    /// Metric map for one cell, if present.
+    pub fn cell(&self, name: &str) -> Option<&BTreeMap<String, Json>> {
+        self.cells.iter().find(|(c, _)| c == name).map(|(_, m)| m)
+    }
+
+    /// Numeric metric for one cell, if present.
+    pub fn metric(&self, cell: &str, key: &str) -> Option<f64> {
+        self.cell(cell).and_then(|m| m.get(key)).and_then(Json::as_f64)
+    }
+}
+
+/// Signed percent change from `prev` to `cur`, rendered (`"+3.1%"`),
+/// or `"-"` when the baseline is unusable.
+fn delta_pct(prev: f64, cur: f64) -> String {
+    if prev == 0.0 {
+        return "-".to_string();
+    }
+    format!("{:+.1}%", (cur - prev) / prev * 100.0)
+}
+
+/// Per-cell comparison table between two artifacts — the trajectory
+/// step CI prints when the previous run's artifact is available.
+/// Cells only in `cur` are marked `(new)`; cells only in `prev` are
+/// listed as `(dropped)`.
+pub fn trajectory_table(prev: &ParsedBench, cur: &ParsedBench) -> String {
+    let mut out = String::new();
+    let header = format!(
+        "{:<44} {:>10} {:>10} {:>8} {:>9} {:>9} {:>8}",
+        "cell", "thr/s old", "thr/s new", "delta", "p99 old", "p99 new", "delta"
+    );
+    let _ = writeln!(out, "{header}");
+    for (cell, _) in &cur.cells {
+        let thr = cur.metric(cell, "throughput_calls_per_s").unwrap_or(0.0);
+        let p99 = cur.metric(cell, "p99_ms").unwrap_or(0.0);
+        match prev.cell(cell) {
+            None => {
+                let _ = writeln!(
+                    out,
+                    "{cell:<44} {dash:>10} {thr:>10.1} {new:>8} {dash:>9} {p99:>9.3} {dash:>8}",
+                    dash = "-",
+                    new = "(new)"
+                );
+            }
+            Some(_) => {
+                let pthr = prev.metric(cell, "throughput_calls_per_s").unwrap_or(0.0);
+                let pp99 = prev.metric(cell, "p99_ms").unwrap_or(0.0);
+                let _ = writeln!(
+                    out,
+                    "{cell:<44} {pthr:>10.1} {thr:>10.1} {:>8} {pp99:>9.3} {p99:>9.3} {:>8}",
+                    delta_pct(pthr, thr),
+                    delta_pct(pp99, p99)
+                );
+            }
+        }
+    }
+    for (cell, _) in &prev.cells {
+        if cur.cell(cell).is_none() {
+            let _ = writeln!(out, "{cell:<44} (dropped)");
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full_row(cell: &str) -> BenchRow {
+        BenchRow::new(cell)
+            .metric("calls", Metric::Int(64))
+            .metric("throughput_calls_per_s", Metric::Fixed(123.456, 1))
+            .metric("p50_ms", Metric::Fixed(3.25, 3))
+            .metric("p99_ms", Metric::Fixed(9.5, 3))
+            .metric("saved_setup_ns", Metric::Int(4_500_000))
+            .metric("energy_nj", Metric::Int(77_000_001))
+            .metric("availability", Metric::Fixed(1.0, 6))
+    }
+
+    #[test]
+    fn artifact_roundtrips_through_util_json() {
+        let mut report = BenchReport::new("gauntlet", "smoke");
+        report.push(full_row("a").metric("extra", Metric::Str("x\"y".into())));
+        report.push(full_row("b").metric("flag", Metric::Bool(true)));
+        let text = report.to_json_string().unwrap();
+        let parsed = ParsedBench::parse(&text).unwrap();
+        assert_eq!(parsed.example, "gauntlet");
+        assert_eq!(parsed.mode, "smoke");
+        assert_eq!(parsed.cells.len(), 2);
+        assert_eq!(parsed.metric("a", "calls"), Some(64.0));
+        assert_eq!(parsed.metric("a", "throughput_calls_per_s"), Some(123.5));
+        assert_eq!(parsed.metric("b", "energy_nj"), Some(77_000_001.0));
+        assert_eq!(parsed.cell("a").unwrap().get("extra").unwrap().as_str(), Some("x\"y"));
+        assert_eq!(parsed.cell("b").unwrap().get("flag").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn emission_is_deterministic() {
+        let mut a = BenchReport::new("gauntlet", "smoke");
+        a.push(full_row("cell-1"));
+        let mut b = BenchReport::new("gauntlet", "smoke");
+        b.push(full_row("cell-1"));
+        assert_eq!(a.to_json_string().unwrap(), b.to_json_string().unwrap());
+        // Fixed-point rendering is part of the value: 1/3 at 3 digits
+        // renders the same string every time.
+        assert_eq!(Metric::Fixed(1.0 / 3.0, 3).render(), "0.333");
+        assert_eq!(Metric::Int(u64::MAX).render(), u64::MAX.to_string());
+    }
+
+    #[test]
+    fn missing_required_column_is_rejected_at_emit() {
+        let mut report = BenchReport::new("gauntlet", "smoke");
+        report.push(BenchRow::new("bad").metric("calls", Metric::Int(1)));
+        let err = report.to_json_string().unwrap_err().to_string();
+        assert!(err.contains("missing required column"), "{err}");
+        assert!(err.contains("throughput_calls_per_s"), "{err}");
+    }
+
+    #[test]
+    fn missing_required_column_is_rejected_at_parse() {
+        let mut report = BenchReport::new("gauntlet", "smoke");
+        report.push(full_row("ok"));
+        let text = report.to_json_string().unwrap();
+        let text = text.replace("\"availability\": 1.000000", "\"x\": 1");
+        let err = ParsedBench::parse(&text).unwrap_err().to_string();
+        assert!(err.contains("availability"), "{err}");
+    }
+
+    #[test]
+    fn schema_drift_is_rejected() {
+        assert!(ParsedBench::parse("{}").is_err());
+        let wrong = r#"{"schema": "vpe-bench-v0", "example": "x", "mode": "smoke", "rows": []}"#;
+        let err = ParsedBench::parse(wrong).unwrap_err().to_string();
+        assert!(err.contains("vpe-bench-v0"), "{err}");
+        let non_numeric = format!(
+            "{{\"schema\": \"{SCHEMA}\", \"example\": \"x\", \"mode\": \"smoke\", \"rows\": \
+             [{{\"cell\": \"c\", \"calls\": \"ten\", \"throughput_calls_per_s\": 1, \
+             \"p50_ms\": 1, \"p99_ms\": 1, \"saved_setup_ns\": 0, \"energy_nj\": 0, \
+             \"availability\": 1}}]}}"
+        );
+        let err = ParsedBench::parse(&non_numeric).unwrap_err().to_string();
+        assert!(err.contains("must be numeric"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_cells_and_non_finite_metrics_are_rejected() {
+        let mut report = BenchReport::new("gauntlet", "smoke");
+        report.push(full_row("same"));
+        report.push(full_row("same"));
+        assert!(report.to_json_string().unwrap_err().to_string().contains("duplicate"));
+        let mut report = BenchReport::new("gauntlet", "smoke");
+        report.push(full_row("nan").metric("bad", Metric::Fixed(f64::NAN, 3)));
+        assert!(report.to_json_string().unwrap_err().to_string().contains("not finite"));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate metric column")]
+    fn duplicate_metric_key_panics() {
+        let _ = BenchRow::new("x").metric("calls", Metric::Int(1)).metric("calls", Metric::Int(2));
+    }
+
+    #[test]
+    fn trajectory_table_marks_new_and_dropped_cells() {
+        let mut old = BenchReport::new("gauntlet", "smoke");
+        old.push(full_row("stays"));
+        old.push(full_row("goes"));
+        let mut new = BenchReport::new("gauntlet", "smoke");
+        new.push(full_row("stays").metric("ignored", Metric::Int(1)));
+        new.push(full_row("arrives"));
+        let prev = ParsedBench::parse(&old.to_json_string().unwrap()).unwrap();
+        let cur = ParsedBench::parse(&new.to_json_string().unwrap()).unwrap();
+        let table = trajectory_table(&prev, &cur);
+        assert!(table.contains("stays"));
+        assert!(table.contains("+0.0%"), "{table}");
+        assert!(table.contains("(new)"), "{table}");
+        assert!(table.contains("goes"));
+        assert!(table.contains("(dropped)"), "{table}");
+    }
+}

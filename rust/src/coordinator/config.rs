@@ -240,6 +240,51 @@ pub fn load(path: &Path) -> Result<VpeConfig> {
     apply(VpeConfig::default(), &doc)
 }
 
+/// Scenario-gauntlet knobs parsed from a config document's optional
+/// `"gauntlet"` section.  Every field is optional; `None` keeps the
+/// harness default (see `bench_harness::gauntlet::GauntletConfig`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct GauntletKnobs {
+    /// Master seed override — changes every cell's derived stream.
+    pub seed: Option<u64>,
+    /// Substring filter over cell ids.
+    pub cell_filter: Option<String>,
+    /// Serving calls per cell on full runs.
+    pub calls_per_cell: Option<usize>,
+    /// Serving calls per cell on `--smoke` runs.
+    pub smoke_calls_per_cell: Option<usize>,
+}
+
+/// Parse the optional `"gauntlet"` section of a config document.  An
+/// absent section yields all-default knobs; present keys are
+/// validated (call counts >= 1, the filter a string).
+pub fn gauntlet_knobs(doc: &Json) -> Result<GauntletKnobs> {
+    let Some(g) = doc.get("gauntlet") else {
+        return Ok(GauntletKnobs::default());
+    };
+    let mut knobs = GauntletKnobs { seed: u64_of(g, "seed")?, ..Default::default() };
+    knobs.cell_filter = match g.get("cell_filter") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(
+            v.as_str()
+                .ok_or_else(|| Error::Config("'cell_filter' must be a string".into()))?
+                .to_string(),
+        ),
+    };
+    for (key, slot) in [
+        ("calls_per_cell", &mut knobs.calls_per_cell),
+        ("smoke_calls_per_cell", &mut knobs.smoke_calls_per_cell),
+    ] {
+        if let Some(v) = u64_of(g, key)? {
+            if v == 0 {
+                return Err(Error::Config(format!("'{key}' must be >= 1")));
+            }
+            *slot = Some(v as usize);
+        }
+    }
+    Ok(knobs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -402,5 +447,40 @@ mod tests {
         assert!(apply(VpeConfig::default(), &doc).is_err());
         let doc = json::parse(r#"{"verify_outputs": 1}"#).unwrap();
         assert!(apply(VpeConfig::default(), &doc).is_err());
+    }
+
+    #[test]
+    fn gauntlet_section_parses_and_validates() {
+        // Absent section: all defaults, and the rest of the document
+        // still applies (unknown keys never clash).
+        let doc = json::parse(r#"{"seed": 9}"#).unwrap();
+        assert_eq!(gauntlet_knobs(&doc).unwrap(), GauntletKnobs::default());
+
+        let doc = json::parse(
+            r#"{"gauntlet": {"seed": 42, "cell_filter": "bursty",
+                "calls_per_cell": 480, "smoke_calls_per_cell": 32}}"#,
+        )
+        .unwrap();
+        let knobs = gauntlet_knobs(&doc).unwrap();
+        assert_eq!(knobs.seed, Some(42));
+        assert_eq!(knobs.cell_filter.as_deref(), Some("bursty"));
+        assert_eq!(knobs.calls_per_cell, Some(480));
+        assert_eq!(knobs.smoke_calls_per_cell, Some(32));
+        // A gauntlet section coexists with coordinator keys.
+        assert!(apply(VpeConfig::default(), &doc).is_ok());
+
+        // An explicit null filter means "no filter" (the documented
+        // form in examples/vpe.config.json).
+        let doc = json::parse(r#"{"gauntlet": {"cell_filter": null}}"#).unwrap();
+        assert_eq!(gauntlet_knobs(&doc).unwrap().cell_filter, None);
+
+        for bad in [
+            r#"{"gauntlet": {"calls_per_cell": 0}}"#,
+            r#"{"gauntlet": {"smoke_calls_per_cell": 0}}"#,
+            r#"{"gauntlet": {"cell_filter": 7}}"#,
+        ] {
+            let doc = json::parse(bad).unwrap();
+            assert!(gauntlet_knobs(&doc).is_err(), "{bad} must be rejected");
+        }
     }
 }

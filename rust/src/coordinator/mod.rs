@@ -13,6 +13,7 @@ pub mod shard;
 pub mod trace;
 pub mod vpe;
 
+pub use config::GauntletKnobs;
 pub use events::{EventLog, RejectReason, VpeEvent};
 pub use policies_ext::{EdpPolicy, EnergyPolicy, EnergyPolicyConfig};
 pub use policy::{BlindOffloadPolicy, Candidate, OffloadPolicy, PolicyAction};

@@ -571,6 +571,41 @@ impl Server {
     pub fn idle_until(&mut self, at_ns: u64) {
         self.vpe.idle_until(at_ns);
     }
+
+    /// Number of *core* queue invariants currently violated: the
+    /// admitted population must respect `max_inflight_total`, and the
+    /// dispatch books must balance (`submitted - retired == in_flight`).
+    /// These hold on every path, including mid-fault salvage — load
+    /// drivers sweep this every pump batch and assert the sum stays 0.
+    pub fn core_invariant_violations(&self) -> usize {
+        let mut violations = 0;
+        if self.accepted_inflight > self.vpe.config().max_inflight_total {
+            violations += 1;
+        }
+        let outstanding =
+            self.vpe.dispatches_submitted().saturating_sub(self.vpe.dispatches_retired());
+        if outstanding != self.vpe.in_flight() as u64 {
+            violations += 1;
+        }
+        violations
+    }
+
+    /// [`Server::core_invariant_violations`] plus the per-target depth
+    /// bound: no accelerator queue deeper than `max_queue_per_target`.
+    /// Use this on fault-free paths only — mid-fault salvage restages a
+    /// dead unit's backlog onto survivors and may transiently overfill
+    /// a survivor's queue, which is deliberate (drain beats drop), so
+    /// fault-injected drivers sweep the core set instead.
+    pub fn invariant_violations(&self) -> usize {
+        let bound = self.vpe.config().max_queue_per_target;
+        let deep = self
+            .vpe
+            .soc()
+            .targets()
+            .filter(|(id, _)| !id.is_host() && self.vpe.queue_depth_on(*id) > bound)
+            .count();
+        self.core_invariant_violations() + deep
+    }
 }
 
 #[cfg(test)]

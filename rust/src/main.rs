@@ -34,6 +34,15 @@ COMMANDS:
       --iters N              iterations (default 40)
       --out FILE             trace path (default trace.json)
   replay <trace.json>        re-price a recorded trace under every policy
+  gauntlet                   run the scenario gauntlet, emit BENCH_gauntlet.json
+      --smoke                CI scale (64 calls/cell instead of 240)
+      --seed N               master seed (default 0x6A07)
+      --calls N              serving calls per cell
+      --cell SUBSTR          only cells whose id contains SUBSTR
+      --out FILE             artifact path (default BENCH_gauntlet.json)
+      --baseline FILE        previous artifact: print per-cell trajectory table
+      --config FILE          JSON config ('gauntlet' section: seed,
+                             cell_filter, calls_per_cell, smoke_calls_per_cell)
 
 workloads: complement | conv2d | dotprod | matmul | pattern | fft
 ";
@@ -243,6 +252,55 @@ fn run() -> vpe::Result<()> {
                     o.batched_calls,
                     o.diverged()
                 );
+            }
+        }
+        "gauntlet" => {
+            use vpe::bench_harness::{gauntlet, trajectory_table, GauntletConfig, ParsedBench};
+            let smoke = args.flag("smoke");
+            let mut gcfg = if smoke { GauntletConfig::smoke() } else { GauntletConfig::default() };
+            let config_path = args.opt_str("config", "");
+            if !config_path.is_empty() {
+                let doc = vpe::util::json::parse(&std::fs::read_to_string(&config_path)?)?;
+                gcfg.apply_knobs(&vpe::coordinator::config::gauntlet_knobs(&doc)?);
+            }
+            gcfg.seed = args.opt("seed", gcfg.seed)?;
+            gcfg.calls_per_cell = args.opt("calls", gcfg.calls_per_cell)?;
+            let cell = args.opt_str("cell", "");
+            if !cell.is_empty() {
+                gcfg.filter = Some(cell);
+            }
+            let out = args.opt_str("out", "BENCH_gauntlet.json");
+            let baseline = args.opt_str("baseline", "");
+            args.finish()?;
+
+            let n = gcfg.cells().len();
+            if n == 0 {
+                return Err(vpe::Error::Config(format!(
+                    "--cell '{}' matches no gauntlet cell",
+                    gcfg.filter.as_deref().unwrap_or("")
+                )));
+            }
+            println!(
+                "gauntlet: {n} cells x {} calls, seed {:#x} ({})",
+                gcfg.calls_per_cell,
+                gcfg.seed,
+                if smoke { "smoke" } else { "full" }
+            );
+            let report = gauntlet::run_with(&gcfg, |row| {
+                println!(
+                    "  {:<44} {:>8.1} calls/s  p99 {:>8.3} ms",
+                    row.cell(),
+                    row.f64("throughput_calls_per_s").unwrap_or(0.0),
+                    row.f64("p99_ms").unwrap_or(0.0)
+                );
+            })?;
+            let text = report.write(std::path::Path::new(&out))?;
+            println!("wrote {out} ({n} rows, every invariant held)");
+            if !baseline.is_empty() {
+                let prev = ParsedBench::parse(&std::fs::read_to_string(&baseline)?)?;
+                let cur = ParsedBench::parse(&text)?;
+                println!("\ntrajectory vs {baseline}:");
+                print!("{}", trajectory_table(&prev, &cur));
             }
         }
         other => {

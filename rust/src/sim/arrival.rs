@@ -1,0 +1,105 @@
+//! Seeded arrival-pattern generation for load drivers.
+//!
+//! Every load generator in the repo (serving load, fault storm, the
+//! scenario gauntlet) paces its tenants the same two ways: *steady*
+//! trickle traffic that keeps a small window topped up, or *bursty*
+//! refill-to-quota traffic separated by think-time gaps.  This module
+//! makes the gap source an explicit, seeded object so two runs under
+//! the same seed produce the identical arrival schedule — the
+//! determinism contract `BENCH_gauntlet.json` is diffed under — while
+//! distinct seeds provably diverge (see the tests).
+
+use super::SimRng;
+
+/// A deterministic per-tenant arrival pacer: either steady (no think
+/// time — the driver tops the tenant's window up every iteration) or
+/// bursty (each burst is followed by a seeded uniform think-time gap).
+#[derive(Debug, Clone)]
+pub struct ArrivalPattern {
+    gap_lo_ns: u64,
+    gap_hi_ns: u64,
+    /// `None` means steady; `Some` holds the dedicated gap stream so
+    /// arrival randomness never perturbs any other seeded sequence.
+    rng: Option<SimRng>,
+}
+
+impl ArrivalPattern {
+    /// Steady arrivals: no think time, every gap is zero.
+    pub fn steady() -> Self {
+        ArrivalPattern { gap_lo_ns: 0, gap_hi_ns: 0, rng: None }
+    }
+
+    /// Bursty arrivals: after each burst the tenant goes quiet for a
+    /// uniform gap in `[gap_lo_ns, gap_hi_ns)` drawn from a stream
+    /// seeded with `seed`.
+    pub fn bursty(seed: u64, gap_lo_ns: u64, gap_hi_ns: u64) -> Self {
+        assert!(gap_lo_ns < gap_hi_ns, "empty gap range [{gap_lo_ns}, {gap_hi_ns})");
+        ArrivalPattern { gap_lo_ns, gap_hi_ns, rng: Some(SimRng::seeded(seed)) }
+    }
+
+    /// Does this pattern insert think time between bursts?
+    pub fn is_bursty(&self) -> bool {
+        self.rng.is_some()
+    }
+
+    /// Think time before the tenant's next burst, ns (always 0 under
+    /// steady arrivals).  Consumes one draw from the gap stream.
+    pub fn next_gap_ns(&mut self) -> u64 {
+        match self.rng.as_mut() {
+            None => 0,
+            Some(rng) => rng.uniform_u64(self.gap_lo_ns, self.gap_hi_ns),
+        }
+    }
+
+    /// The first `n` gaps this pattern would produce — the arrival
+    /// schedule, for determinism tests and tooling.  Consumes the
+    /// pattern (drivers should draw via [`ArrivalPattern::next_gap_ns`]
+    /// instead so the schedule and the traffic stay in lockstep).
+    pub fn schedule(mut self, n: usize) -> Vec<u64> {
+        (0..n).map(|_| self.next_gap_ns()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steady_gaps_are_all_zero() {
+        let mut p = ArrivalPattern::steady();
+        assert!(!p.is_bursty());
+        for _ in 0..10 {
+            assert_eq!(p.next_gap_ns(), 0);
+        }
+    }
+
+    #[test]
+    fn bursty_gaps_stay_in_range() {
+        let mut p = ArrivalPattern::bursty(7, 2_000_000, 8_000_000);
+        assert!(p.is_bursty());
+        for _ in 0..1000 {
+            let g = p.next_gap_ns();
+            assert!((2_000_000..8_000_000).contains(&g), "gap {g} out of range");
+        }
+    }
+
+    #[test]
+    fn same_seed_reproduces_the_schedule() {
+        let a = ArrivalPattern::bursty(0xA11, 1_000, 9_000).schedule(64);
+        let b = ArrivalPattern::bursty(0xA11, 1_000, 9_000).schedule(64);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn distinct_seeds_produce_distinct_schedules() {
+        let a = ArrivalPattern::bursty(1, 1_000, 1_000_000).schedule(64);
+        let b = ArrivalPattern::bursty(2, 1_000, 1_000_000).schedule(64);
+        assert_ne!(a, b, "two seeds must not share an arrival schedule");
+    }
+
+    #[test]
+    #[should_panic(expected = "empty gap range")]
+    fn empty_gap_range_is_rejected() {
+        ArrivalPattern::bursty(0, 5, 5);
+    }
+}

@@ -11,8 +11,10 @@
 //! is not available; xoshiro256++ is small, fast, and plenty for
 //! simulation noise.
 
+pub mod arrival;
 pub mod fault;
 
+pub use arrival::ArrivalPattern;
 pub use fault::{FaultAction, FaultEvent, FaultInjector};
 
 /// Simulated monotonic clock, nanosecond resolution.

@@ -54,3 +54,42 @@ fn fig3_grant_frame_controls_the_transition() {
         assert!(off >= grant && off < grant + 15, "grant {grant}: offload at {off}");
     }
 }
+
+#[test]
+fn gauntlet_runs_a_filtered_cell_through_the_public_api_deterministically() {
+    use vpe::bench_harness::{gauntlet, GauntletConfig};
+
+    // One cell, twice, through exactly the surface the CLI verb uses:
+    // filter -> run -> serialize.  The texts must match byte for byte.
+    let mut cfg = GauntletConfig::smoke();
+    cfg.calls_per_cell = 24;
+    cfg.filter = Some("bursty-skewed-fast-t04-edp-faults".into());
+    assert_eq!(cfg.cells().len(), 1, "the filter must select exactly one cell");
+    let a = gauntlet::run(&cfg).unwrap().to_json_string().unwrap();
+    let b = gauntlet::run(&cfg).unwrap().to_json_string().unwrap();
+    assert_eq!(a, b, "same-seed filtered run must serialize bit-identically");
+}
+
+#[test]
+fn gauntlet_artifact_roundtrips_and_feeds_the_trajectory_table() {
+    use vpe::bench_harness::{gauntlet, trajectory_table, GauntletConfig, ParsedBench};
+
+    let mut cfg = GauntletConfig::smoke();
+    cfg.calls_per_cell = 24;
+    cfg.filter = Some("t04-latency".into());
+    let cells = cfg.cells().len();
+    assert!(cells >= 2, "the filter must keep a clean and a faulted cell");
+    let text = gauntlet::run(&cfg).unwrap().to_json_string().unwrap();
+
+    // The artifact parses back under the shared schema, every required
+    // column numeric on every row.
+    let parsed = ParsedBench::parse(&text).unwrap();
+    assert_eq!(parsed.example, "gauntlet");
+    assert_eq!(parsed.cells.len(), cells);
+
+    // And the same parsed form drives the CI trajectory comparison:
+    // identical artifacts diff to all-zero deltas, never "(new)".
+    let table = trajectory_table(&ParsedBench::parse(&text).unwrap(), &parsed);
+    assert!(!table.contains("(new)"), "identical artifacts must not report new cells");
+    assert!(!table.contains("(dropped)"), "identical artifacts must not drop cells");
+}

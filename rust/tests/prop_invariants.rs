@@ -1390,3 +1390,44 @@ fn prop_drr_fair_share_lower_bound() {
         assert_prop(server.vpe().in_flight() == 0, "must drain")
     });
 }
+
+// ---------------------------------------------------------------------------
+// Scenario gauntlet (the full serving path, end to end, per random cell)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_random_gauntlet_cell_preserves_invariants_end_to_end() {
+    use vpe::bench_harness::gauntlet;
+    use vpe::bench_harness::report::REQUIRED_COLUMNS;
+
+    // A cell is itself a bundle of assertions: `run_cell` errors unless
+    // queue invariants held on every sweep, every admitted call resolved
+    // exactly once, and per-target charged joules equal watts x busy
+    // time.  The property samples random (cell, seed, load) points and
+    // demands the bundle holds — and that the row it yields carries the
+    // full shared schema.
+    prop::check("gauntlet cell end-to-end", 6, |g| {
+        let matrix = gauntlet::default_matrix();
+        let cell = g.choose(&matrix).clone();
+        let mut cfg = gauntlet::GauntletConfig::smoke();
+        cfg.seed = g.u64_in(0, u64::MAX - 1);
+        cfg.calls_per_cell = g.usize_in(16, 48);
+        let row = gauntlet::run_cell(&cell, &cfg).map_err(|e| e.to_string())?;
+        assert_prop(row.cell() == cell.id(), "row must be keyed by its cell id")?;
+        for col in REQUIRED_COLUMNS {
+            assert_prop(
+                row.f64(col).is_some(),
+                format!("cell {}: required column '{col}' missing", cell.id()),
+            )?;
+        }
+        let avail = row.f64("availability").expect("checked");
+        assert_prop(
+            avail > 0.0 && avail <= 1.0,
+            format!("availability {avail} outside (0, 1]"),
+        )?;
+        assert_prop(
+            row.f64("throughput_calls_per_s").expect("checked") > 0.0,
+            "throughput must be positive",
+        )
+    });
+}
