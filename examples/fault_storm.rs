@@ -1,7 +1,7 @@
 //! Serving through a fault storm — the failure-recovery acceptance
 //! proof.
 //!
-//! Four tenants hammer a [`Server`] whose platform has three added
+//! Four tenants hammer a [`SchedulerCore`] whose platform has three added
 //! units (`serve-a` fastest — every dispatch slot pins to it) plus the
 //! calibrated DSP, while a scripted, seeded [`FaultInjector`] runs a
 //! storm in virtual time:
@@ -34,7 +34,7 @@
 
 use vpe::bench_harness::{BenchReport, BenchRow, Metric};
 use vpe::coordinator::policy::AlwaysOffloadPolicy;
-use vpe::coordinator::serving::{AdmitOutcome, Completion, Server, TenantId};
+use vpe::coordinator::serving::{AdmitOutcome, Completion, SchedulerCore, TenantId};
 use vpe::coordinator::trace::replay;
 use vpe::coordinator::{CallOutcome, Vpe, VpeConfig};
 use vpe::jit::module::FunctionId;
@@ -42,7 +42,7 @@ use vpe::platform::{TargetId, TargetSpec, TransferModel, Transport};
 use vpe::sim::FaultInjector;
 use vpe::workloads::{PaperScale, WorkloadKind};
 
-/// Tenants sharing the server.
+/// Tenants sharing the serving core.
 const TENANTS: usize = 4;
 /// Retirements pumped per driver iteration.
 const PUMP_BATCH: usize = 32;
@@ -184,7 +184,7 @@ fn main() -> vpe::Result<()> {
     let quota = vpe.config().tenant_quota;
     // No event cap: the storm assertions read the full log (a capped
     // log drops the oldest entries — exactly the storm window).
-    let mut server = Server::new(vpe);
+    let mut server = SchedulerCore::new(vpe);
 
     let mut rng = Lcg(0xF0_57);
     let mut remaining = [per_tenant; TENANTS];

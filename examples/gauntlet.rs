@@ -14,7 +14,10 @@
 //! reader, closing the loop CI's trajectory table depends on.  Every
 //! cell already asserted queue invariants, exactly-once resolution and
 //! per-target energy conservation internally — a cell that cannot
-//! prove its books simply errors the run.
+//! prove its books simply errors the run.  Each run also sweeps the
+//! threaded-ingest spur (real OS ingest threads against a pump
+//! thread); those cells assert invariants only and contribute no
+//! artifact rows, so the bit-identical contract is untouched.
 //!
 //! `cargo run --release --example gauntlet [-- --smoke]`
 

@@ -1,16 +1,16 @@
 //! Multi-tenant serving under load — the serving layer's acceptance
-//! proof.
+//! proof, in three legs.
 //!
-//! Eight tenants with skewed, bursty call mixes (five functions from
-//! ~0.1 ms dot products to a ~27 ms monster matmul) hammer one
-//! [`Server`] wrapped around a coordinator with a single fast
-//! accelerator, two slower helpers, and the calibrated DSP.  Every
-//! function's dispatch slot pins to the fast unit, so all eight
-//! tenants contend for one genuinely shared bottleneck — which makes
-//! the fairness assertion a *scheduling* property (deficit round robin
-//! must equalize released cost), not an accident of load placement.
-//!
-//! The run sustains ~10⁵ calls (~10³ with `--smoke`) and asserts:
+//! **Leg A (inline, deterministic).**  Eight tenants with skewed,
+//! bursty call mixes (five functions from ~0.1 ms dot products to a
+//! ~27 ms monster matmul) hammer one [`SchedulerCore`] driven inline,
+//! wrapped around a coordinator with a single fast accelerator, two
+//! slower helpers, and the calibrated DSP.  Every function's dispatch
+//! slot pins to the fast unit, so all eight tenants contend for one
+//! genuinely shared bottleneck — which makes the fairness assertion a
+//! *scheduling* property (deficit round robin must equalize released
+//! cost), not an accident of load placement.  The run sustains ~10⁵
+//! calls (~10³ with `--smoke`) and asserts:
 //!
 //! - **zero queue-invariant violations**, swept every iteration:
 //!   accepted population <= `max_inflight_total`, `submitted ==
@@ -24,23 +24,47 @@
 //! - every admitted call completes exactly once and resolves its
 //!   [`Completion`] handle; oversized calls are preempted into shards.
 //!
+//! **Leg B (submit-path contention).**  Eight real OS threads submit
+//! the same call storm two ways: serialized through one
+//! `Arc<Mutex<SchedulerCore>>` (the pre-split architecture, every
+//! submitter contending for the whole core) and through per-tenant
+//! lock-free [`Ingress`] clones (atomic CAS admission + a private MPSC
+//! push).  Wall-clock submission throughput is measured for both and
+//! the lock-free path must sustain **>= 2x** the locked baseline
+//! (asserted when the machine has >= 4 hardware threads; always
+//! recorded in the artifact).
+//!
+//! **Leg C (threaded end-to-end).**  Over multiple seeds: a dedicated
+//! pump thread ([`SchedulerCore::spawn_pump`]) drains while eight
+//! ingest threads submit with retry-on-reject backoff.  Asserted per
+//! seed: every admitted handle resolves (zero stranded), books balance
+//! to empty, zero invariant violations from the pump's per-iteration
+//! sweeps, no staging leaks.
+//!
 //! Emits `BENCH_serving.json` through the shared
 //! [`vpe::bench_harness::report`] writer — one schema across every
 //! trajectory artifact, diffable across PRs (CI uploads it per run).
+//! Leg A's columns are deterministic; leg B contributes the wall-clock
+//! `submit_throughput_calls_per_s` / `locked_submit_calls_per_s` /
+//! `submit_speedup` columns.
 //!
 //! `cargo run --release --example serving_load [-- --smoke]`
 
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
 use vpe::bench_harness::{BenchReport, BenchRow, Metric};
 use vpe::coordinator::policy::AlwaysOffloadPolicy;
-use vpe::coordinator::serving::{AdmitOutcome, Completion, Server, TenantId};
+use vpe::coordinator::serving::{AdmitOutcome, Completion, Ingress, SchedulerCore, TenantId};
 use vpe::coordinator::{Vpe, VpeConfig};
 use vpe::jit::module::FunctionId;
 use vpe::platform::{TargetSpec, TransferModel, Transport};
 use vpe::workloads::{PaperScale, WorkloadKind};
 
-/// Tenants sharing the server.
+/// Tenants sharing the serving core (and ingest threads in legs B/C).
 const TENANTS: usize = 8;
-/// Retirements pumped per driver iteration.
+/// Retirements pumped per driver iteration in the inline leg.
 const PUMP_BATCH: usize = 32;
 /// Per-tenant mix weights over the function pool `[tiny, small, med,
 /// big, monster]` — skewed on purpose: tenant 0 is interactive
@@ -78,11 +102,12 @@ impl Lcg {
     }
 }
 
-fn build_platform() -> vpe::Result<(Vpe, [FunctionId; 5])> {
+fn build_platform(tune: impl FnOnce(&mut VpeConfig)) -> vpe::Result<(Vpe, [FunctionId; 5])> {
     let mut cfg = VpeConfig::sim_only();
     cfg.tenant_quota = 32; // bound per-tenant backlog (and latency)
     cfg.max_inflight_total = 200; // < 8 * 32: saturation rejections occur
     cfg.deadline_ns = 20_000_000; // 20 ms: the monster must preempt
+    tune(&mut cfg);
     let mut vpe = Vpe::with_policy(cfg, Box::new(AlwaysOffloadPolicy))?;
 
     // serve-a is strictly fastest at every workload — the shared
@@ -133,6 +158,188 @@ fn build_platform() -> vpe::Result<(Vpe, [FunctionId; 5])> {
     Ok((vpe, pool))
 }
 
+/// Leg B result: submissions/second through each front-end.
+struct SubmitBench {
+    locked_rate: f64,
+    lockfree_rate: f64,
+    speedup: f64,
+    parallelism: usize,
+}
+
+/// Leg B: measure pure submit-path throughput under 8-thread
+/// contention — the same storm serialized through one
+/// `Arc<Mutex<SchedulerCore>>` versus fanned through lock-free
+/// [`Ingress`] clones.  Admission bounds are widened so every
+/// submission is *admitted*: the measure is the cost of a successful
+/// submit (reserve, stamp, enqueue), not of bouncing off a full
+/// server, and both paths run the identical workload.
+fn submit_throughput_leg(smoke: bool) -> vpe::Result<SubmitBench> {
+    let per_thread: usize = if smoke { 1_000 } else { 5_000 };
+    let tune = move |c: &mut VpeConfig| {
+        c.tenant_quota = per_thread + 8;
+        c.max_inflight_total = TENANTS * per_thread + 8;
+        c.ingest_queue_depth = per_thread + 8;
+        c.deadline_ns = 0; // pure submit-path measurement: no preemption
+    };
+    let drain_and_check = |core: &mut SchedulerCore, handles: &[Completion]| -> vpe::Result<()> {
+        core.drive_inline()?;
+        assert!(core.is_idle(), "drain left the books non-empty");
+        assert_eq!(core.accepted_inflight(), 0);
+        assert_eq!(core.invariant_violations(), 0);
+        assert!(handles.iter().all(Completion::is_done), "stranded completion after drain");
+        assert_eq!(
+            handles.len() as u64 + core.rejected(),
+            (TENANTS * per_thread) as u64,
+            "every submission either admitted or rejected"
+        );
+        Ok(())
+    };
+
+    // Locked baseline: the pre-split architecture — every submitter
+    // serializes on one mutex around the whole core.
+    let (vpe, pool) = build_platform(tune)?;
+    let mut core = SchedulerCore::new(vpe);
+    core.vpe_mut().limit_events(50_000);
+    let f = pool[0];
+    let locked = Arc::new(Mutex::new(core));
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..TENANTS)
+        .map(|t| {
+            let locked = Arc::clone(&locked);
+            thread::spawn(move || {
+                let mut handles = Vec::new();
+                for _ in 0..per_thread {
+                    let outcome = locked
+                        .lock()
+                        .expect("core mutex poisoned")
+                        .try_submit(TenantId(t as u32), f)
+                        .expect("submit never errors on a bound function");
+                    if let AdmitOutcome::Admitted(done) = outcome {
+                        handles.push(done);
+                    }
+                }
+                handles
+            })
+        })
+        .collect();
+    let mut admitted = Vec::new();
+    for w in workers {
+        admitted.extend(w.join().expect("locked submitter panicked"));
+    }
+    let locked_elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    let mut core = match Arc::try_unwrap(locked) {
+        Ok(m) => m.into_inner().expect("core mutex poisoned"),
+        Err(_) => unreachable!("all submitters joined"),
+    };
+    drain_and_check(&mut core, &admitted)?;
+
+    // Lock-free ingress: same platform, same storm, no lock anywhere
+    // on the submit path.
+    let (vpe, pool) = build_platform(tune)?;
+    let mut core = SchedulerCore::new(vpe);
+    core.vpe_mut().limit_events(50_000);
+    let f = pool[0];
+    let ingresses: Vec<Ingress> = (0..TENANTS).map(|t| core.ingress(TenantId(t as u32))).collect();
+    let t0 = Instant::now();
+    let workers: Vec<_> = ingresses
+        .into_iter()
+        .map(|ing| {
+            thread::spawn(move || {
+                let mut handles = Vec::new();
+                for _ in 0..per_thread {
+                    let outcome =
+                        ing.try_submit(f).expect("submit never errors on a bound function");
+                    if let AdmitOutcome::Admitted(done) = outcome {
+                        handles.push(done);
+                    }
+                }
+                handles
+            })
+        })
+        .collect();
+    let mut admitted = Vec::new();
+    for w in workers {
+        admitted.extend(w.join().expect("ingress submitter panicked"));
+    }
+    let lockfree_elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    drain_and_check(&mut core, &admitted)?;
+
+    let total = (TENANTS * per_thread) as f64;
+    let locked_rate = total / locked_elapsed;
+    let lockfree_rate = total / lockfree_elapsed;
+    Ok(SubmitBench {
+        locked_rate,
+        lockfree_rate,
+        speedup: lockfree_rate / locked_rate.max(1e-9),
+        parallelism: thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    })
+}
+
+/// Leg C: full threaded serving — a pump thread drains while eight
+/// ingest threads submit with retry-on-reject backoff — repeated over
+/// several seeds.  The threaded path promises exactly-once completion
+/// and balanced books (not a fixed interleaving), and that is exactly
+/// what gets asserted.
+fn threaded_serving_leg(smoke: bool) -> vpe::Result<(usize, usize)> {
+    let seeds: &[u64] =
+        if smoke { &[0xA11CE, 0x0B0B5] } else { &[0xA11CE, 0x0B0B5, 0xC0FFEE] };
+    let per_tenant: usize = if smoke { 48 } else { 256 };
+    for &seed in seeds {
+        let (vpe, pool) = build_platform(|_| {})?;
+        let mut core = SchedulerCore::new(vpe);
+        core.vpe_mut().limit_events(50_000);
+        let ingresses: Vec<Ingress> =
+            (0..TENANTS).map(|t| core.ingress(TenantId(t as u32))).collect();
+        let pump = core.spawn_pump();
+        let workers: Vec<_> = ingresses
+            .into_iter()
+            .enumerate()
+            .map(|(t, ing)| {
+                thread::spawn(move || {
+                    let mut rng = Lcg(seed ^ (0x9e37 + t as u64));
+                    let mut handles = Vec::with_capacity(per_tenant);
+                    let mut rejections = 0u64;
+                    while handles.len() < per_tenant {
+                        let f = rng.pick(&MIXES[t], &pool);
+                        match ing.try_submit(f).expect("submit never errors on a bound function")
+                        {
+                            AdmitOutcome::Admitted(done) => handles.push(done),
+                            AdmitOutcome::Rejected { .. } => {
+                                rejections += 1;
+                                assert!(rejections < 50_000_000, "tenant {t} starved");
+                                thread::yield_now();
+                            }
+                        }
+                    }
+                    handles
+                })
+            })
+            .collect();
+        let mut handles = Vec::new();
+        for w in workers {
+            handles.extend(w.join().expect("ingest worker panicked"));
+        }
+        // Read the pump's running sweep before shutdown consumes it.
+        let swept = pump.invariant_violations();
+        let core = pump.shutdown()?;
+        let total = TENANTS * per_tenant;
+        assert_eq!(handles.len(), total);
+        assert!(handles.iter().all(Completion::is_done), "stranded completion after shutdown");
+        assert_eq!(swept, 0, "pump sweeps saw an invariant violation");
+        assert_eq!(core.invariant_violations(), 0);
+        assert!(core.is_idle(), "shutdown left the books non-empty");
+        assert_eq!(core.accepted_inflight(), 0);
+        assert_eq!(core.vpe().in_flight(), 0);
+        assert_eq!(core.vpe().soc().shared.used_bytes(), 0, "no staging leaks");
+        for s in core.vpe().serving_stats() {
+            assert_eq!(s.submitted, per_tenant as u64, "tenant {} admitted exactly", s.tenant.0);
+            assert_eq!(s.completed, s.submitted, "tenant {} completed exactly", s.tenant.0);
+            assert_eq!(s.failed, 0);
+        }
+    }
+    Ok((seeds.len(), seeds.len() * TENANTS * per_tenant))
+}
+
 fn main() -> vpe::Result<()> {
     let args = vpe::util::cli::Args::parse(std::env::args().skip(1))?;
     let smoke = args.flag("smoke");
@@ -144,12 +351,12 @@ fn main() -> vpe::Result<()> {
     println!("== multi-tenant serving: {total} calls, {TENANTS} tenants, skewed bursty mixes ==");
     println!("   (one shared accelerator; DRR fairness, admission control, 20 ms deadline)\n");
 
-    let (vpe, pool) = build_platform()?;
+    let (vpe, pool) = build_platform(|_| {})?;
     let quota = vpe.config().tenant_quota;
     let max_total = vpe.config().max_inflight_total;
-    let mut server = Server::new(vpe);
-    server.vpe_mut().limit_events(50_000);
-    let t0 = server.vpe().clock().now_ns();
+    let mut core = SchedulerCore::new(vpe);
+    core.vpe_mut().limit_events(50_000);
+    let t0 = core.vpe().clock().now_ns();
 
     let mut rng = Lcg(0x5e41);
     let mut remaining = [per_tenant; TENANTS];
@@ -169,7 +376,7 @@ fn main() -> vpe::Result<()> {
         // Bursty arrivals: a tenant whose pending population fell below
         // half its quota refills to quota in one burst, backing off
         // when admission control says so.
-        let now = server.vpe().clock().now_ns();
+        let now = core.vpe().clock().now_ns();
         for t in 0..TENANTS {
             if remaining[t] == 0 || now < backoff_until[t] {
                 continue;
@@ -181,7 +388,7 @@ fn main() -> vpe::Result<()> {
             let mut burst = (quota - pending).min(remaining[t]);
             while burst > 0 {
                 let f = rng.pick(&MIXES[t], &pool);
-                match server.try_submit(TenantId(t as u32), f)? {
+                match core.try_submit(TenantId(t as u32), f)? {
                     AdmitOutcome::Admitted(done) => {
                         handles.push(done);
                         admitted[t] += 1;
@@ -190,7 +397,7 @@ fn main() -> vpe::Result<()> {
                     }
                     AdmitOutcome::Rejected { retry_after_ns, .. } => {
                         backoff_until[t] =
-                            server.vpe().clock().now_ns().saturating_add(retry_after_ns);
+                            core.vpe().clock().now_ns().saturating_add(retry_after_ns);
                         break;
                     }
                 }
@@ -200,7 +407,7 @@ fn main() -> vpe::Result<()> {
         // Drive a batch of retirements.
         let mut progressed = false;
         for _ in 0..PUMP_BATCH {
-            match server.pump()? {
+            match core.pump()? {
                 Some(rec) => {
                     progressed = true;
                     if let Some(TenantId(t)) = rec.tenant {
@@ -214,15 +421,14 @@ fn main() -> vpe::Result<()> {
         // Invariant sweep, every iteration (population bound, dispatch
         // accounting, per-target depth — the same sweep the gauntlet
         // runs on its clean cells).
-        violations += server.invariant_violations();
-        max_accepted = max_accepted.max(server.accepted_inflight());
+        violations += core.invariant_violations();
+        max_accepted = max_accepted.max(core.accepted_inflight());
 
         let done_total: usize = completed.iter().sum();
         if snapshot.is_none() && done_total >= total / 4 {
-            snapshot =
-                Some((0..TENANTS).map(|t| server.served_ns(TenantId(t as u32))).collect());
+            snapshot = Some((0..TENANTS).map(|t| core.served_ns(TenantId(t as u32))).collect());
         }
-        if remaining.iter().all(|&r| r == 0) && server.is_idle() {
+        if remaining.iter().all(|&r| r == 0) && core.is_idle() {
             break;
         }
         if !progressed {
@@ -233,23 +439,23 @@ fn main() -> vpe::Result<()> {
                 .map(|t| backoff_until[t])
                 .min();
             if let Some(at) = next {
-                server.idle_until(at);
+                core.idle_until(at);
             }
         }
     }
 
-    let elapsed_ns = server.vpe().clock().now_ns() - t0;
+    let elapsed_ns = core.vpe().clock().now_ns() - t0;
     let elapsed_s = elapsed_ns as f64 / 1e9;
     let throughput = total as f64 / elapsed_s;
     let (p50_ns, p99_ns) =
-        server.vpe().serving_latency_percentiles().expect("completions recorded");
+        core.vpe().serving_latency_percentiles().expect("completions recorded");
     let tail_ratio = p99_ns as f64 / p50_ns.max(1) as f64;
     let snap = snapshot.expect("the run crossed the 25% mark");
     let mean_served = snap.iter().sum::<u64>() as f64 / TENANTS as f64;
     let min_share_frac = *snap.iter().min().unwrap() as f64 / mean_served;
 
     println!("tenant  submitted  completed  rejected   p50 ms   p99 ms  released ms");
-    for s in server.vpe().serving_stats() {
+    for s in core.vpe().serving_stats() {
         println!(
             "{:>6}  {:>9}  {:>9}  {:>8}  {:>7.1}  {:>7.1}  {:>11.1}",
             format!("t{}", s.tenant.0),
@@ -258,7 +464,7 @@ fn main() -> vpe::Result<()> {
             s.rejected,
             s.p50_latency_ns as f64 / 1e6,
             s.p99_latency_ns as f64 / 1e6,
-            server.served_ns(s.tenant) as f64 / 1e6,
+            core.served_ns(s.tenant) as f64 / 1e6,
         );
     }
     println!();
@@ -270,22 +476,21 @@ fn main() -> vpe::Result<()> {
     );
     println!(
         "admission: {} rejected, max accepted in flight {max_accepted}/{max_total}",
-        server.rejected()
+        core.rejected()
     );
     println!(
         "preemption: {} monster calls sharded; batching saved {:.1} ms of setup",
-        server.preempted(),
-        server.vpe().saved_setup_ns() as f64 / 1e6
+        core.preempted(),
+        core.vpe().saved_setup_ns() as f64 / 1e6
     );
     println!("fairness at 25% complete: min released share = {min_share_frac:.2}x mean");
 
     // The accelerator's utilization over the run (occupied / elapsed).
-    let accel =
-        server.vpe().soc().registry.iter().find(|(_, s)| s.name == "serve-a").unwrap().0;
-    let utilization = server.vpe().scheduler().occupied_ns(accel) as f64 / elapsed_ns as f64;
+    let accel = core.vpe().soc().registry.iter().find(|(_, s)| s.name == "serve-a").unwrap().0;
+    let utilization = core.vpe().scheduler().occupied_ns(accel) as f64 / elapsed_ns as f64;
     println!("accelerator utilization: {:.0}%", utilization * 100.0);
 
-    // -- acceptance ---------------------------------------------------------
+    // -- acceptance (leg A) --------------------------------------------------
     let completed_total: usize = completed.iter().sum();
     assert_eq!(completed_total, total, "every admitted call completes");
     assert_eq!(handles.len(), total);
@@ -294,17 +499,52 @@ fn main() -> vpe::Result<()> {
         assert_eq!(*done, per_tenant, "tenant {t} finished its budget");
     }
     assert_eq!(violations, 0, "queue invariants held throughout");
-    assert_eq!(server.vpe().scheduler().bounce_count(), 0, "holdback replaces the host bounce");
-    assert_eq!(server.accepted_inflight(), 0);
-    assert_eq!(server.vpe().in_flight(), 0);
-    assert_eq!(server.vpe().soc().shared.used_bytes(), 0, "no staging leaks");
-    assert!(server.rejected() > 0, "admission control must engage at this load");
-    assert!(server.preempted() > 0, "the monster must preempt into shards");
+    assert_eq!(core.vpe().scheduler().bounce_count(), 0, "holdback replaces the host bounce");
+    assert_eq!(core.accepted_inflight(), 0);
+    assert_eq!(core.vpe().in_flight(), 0);
+    assert_eq!(core.vpe().soc().shared.used_bytes(), 0, "no staging leaks");
+    assert!(core.rejected() > 0, "admission control must engage at this load");
+    assert!(core.preempted() > 0, "the monster must preempt into shards");
     assert!(
         min_share_frac >= 0.5,
         "no tenant below half its fair share (got {min_share_frac:.2})"
     );
     assert!(tail_ratio <= 50.0, "p99/p50 must stay bounded (got {tail_ratio:.1})");
+
+    // -- leg B: submit-path contention ---------------------------------------
+    println!("\n== submit path: {TENANTS} threads, locked core vs lock-free ingress ==");
+    let bench = submit_throughput_leg(smoke)?;
+    println!(
+        "locked   {:>12.0} submits/s   (one mutex around the whole core)",
+        bench.locked_rate
+    );
+    println!(
+        "ingress  {:>12.0} submits/s   (CAS admission + per-tenant MPSC)",
+        bench.lockfree_rate
+    );
+    println!(
+        "speedup  {:>11.2}x            ({} hardware threads)",
+        bench.speedup, bench.parallelism
+    );
+    if bench.parallelism >= 4 {
+        assert!(
+            bench.speedup >= 2.0,
+            "lock-free ingress must sustain >= 2x the locked submit throughput \
+             (got {:.2}x on {} hardware threads)",
+            bench.speedup,
+            bench.parallelism
+        );
+    } else {
+        println!("         (speedup assertion skipped: < 4 hardware threads)");
+    }
+
+    // -- leg C: threaded end-to-end ------------------------------------------
+    println!("\n== threaded serving: pump thread + {TENANTS} ingest threads ==");
+    let (seeds, threaded_calls) = threaded_serving_leg(smoke)?;
+    println!(
+        "{threaded_calls} calls over {seeds} seeds: zero stranded handles, \
+         balanced books, zero invariant violations"
+    );
 
     let mut report = BenchReport::new("serving_load", if smoke { "smoke" } else { "full" });
     report.push(
@@ -313,31 +553,37 @@ fn main() -> vpe::Result<()> {
             .metric("throughput_calls_per_s", Metric::Fixed(throughput, 1))
             .metric("p50_ms", Metric::Fixed(p50_ns as f64 / 1e6, 3))
             .metric("p99_ms", Metric::Fixed(p99_ns as f64 / 1e6, 3))
-            .metric("saved_setup_ns", Metric::Int(server.vpe().saved_setup_ns()))
-            .metric("energy_nj", Metric::Int(server.vpe().total_energy_nj()))
-            .metric("availability", Metric::Fixed(server.vpe().availability().unwrap_or(1.0), 6))
+            .metric("saved_setup_ns", Metric::Int(core.vpe().saved_setup_ns()))
+            .metric("energy_nj", Metric::Int(core.vpe().total_energy_nj()))
+            .metric("availability", Metric::Fixed(core.vpe().availability().unwrap_or(1.0), 6))
             .metric("tenants", Metric::Int(TENANTS as u64))
             .metric("sim_seconds", Metric::Fixed(elapsed_s, 3))
             .metric("p99_over_p50", Metric::Fixed(tail_ratio, 2))
-            .metric("rejected", Metric::Int(server.rejected()))
-            .metric("preempted", Metric::Int(server.preempted()))
-            .metric("bounced", Metric::Int(server.vpe().scheduler().bounce_count()))
-            .metric("batches_formed", Metric::Int(server.vpe().batches_formed()))
+            .metric("rejected", Metric::Int(core.rejected()))
+            .metric("preempted", Metric::Int(core.preempted()))
+            .metric("bounced", Metric::Int(core.vpe().scheduler().bounce_count()))
+            .metric("batches_formed", Metric::Int(core.vpe().batches_formed()))
             .metric("max_accepted_inflight", Metric::Int(max_accepted as u64))
             .metric("accel_utilization", Metric::Fixed(utilization, 3))
             .metric("min_share_frac", Metric::Fixed(min_share_frac, 3))
-            .metric("violations", Metric::Int(violations as u64)),
+            .metric("violations", Metric::Int(violations as u64))
+            .metric("submit_throughput_calls_per_s", Metric::Fixed(bench.lockfree_rate, 1))
+            .metric("locked_submit_calls_per_s", Metric::Fixed(bench.locked_rate, 1))
+            .metric("submit_speedup", Metric::Fixed(bench.speedup, 2))
+            .metric("threaded_calls", Metric::Int(threaded_calls as u64)),
     );
     report.write(std::path::Path::new("BENCH_serving.json"))?;
     println!("\nwrote BENCH_serving.json");
     println!(
-        "\n{} calls from {TENANTS} tenants: fair to within {:.0}% of an equal split, \
+        "\n{} inline calls from {TENANTS} tenants: fair to within {:.0}% of an equal split, \
          {} oversized calls preempted, {} rejected with retry hints, zero bounces, \
-         zero invariant violations.",
+         zero invariant violations; lock-free ingress sustained {:.2}x the locked \
+         submit throughput across {TENANTS} threads.",
         total,
         (1.0 - min_share_frac) * 100.0,
-        server.preempted(),
-        server.rejected()
+        core.preempted(),
+        core.rejected(),
+        bench.speedup
     );
     Ok(())
 }

@@ -20,7 +20,7 @@
 
 use crate::coordinator::policies_ext::{EdpPolicy, EnergyPolicy, EnergyPolicyConfig, FanOutPolicy};
 use crate::coordinator::policy::{BlindOffloadPolicy, OffloadPolicy};
-use crate::coordinator::serving::{AdmitOutcome, Completion, Server, TenantId};
+use crate::coordinator::serving::{AdmitOutcome, Completion, Ingress, SchedulerCore, TenantId};
 use crate::coordinator::shard::Objective;
 use crate::coordinator::vpe::{CallOutcome, Vpe, VpeConfig};
 use crate::coordinator::GauntletKnobs;
@@ -168,20 +168,30 @@ pub struct Cell {
     pub policy: Policy,
     /// Run the scripted kill/degrade/flaky storm?
     pub faults: bool,
+    /// Drive ingest from real OS threads through [`Ingress`] clones
+    /// against a dedicated pump thread, instead of the inline
+    /// deterministic driver.  Threaded cells assert invariants only
+    /// (exactly-once, balanced books, conservation) — wall-clock
+    /// interleaving is not reproducible, so they contribute no artifact
+    /// row and the byte-determinism contract covers inline cells only.
+    pub threaded_ingest: bool,
 }
 
 impl Cell {
     /// Stable cell id — the `cell` column of the artifact and the
-    /// string `--cell` filters match against.
+    /// string `--cell` filters match against.  Threaded-ingest variants
+    /// carry a `-thr` suffix so inline ids (and the trajectory diff
+    /// keyed on them) are untouched by the axis.
     pub fn id(&self) -> String {
         format!(
-            "{}-{}-{}-t{:02}-{}-{}",
+            "{}-{}-{}-t{:02}-{}-{}{}",
             self.arrival.name(),
             self.mix.name(),
             self.setup.name(),
             self.targets,
             self.policy.name(),
-            if self.faults { "faults" } else { "clean" }
+            if self.faults { "faults" } else { "clean" },
+            if self.threaded_ingest { "-thr" } else { "" }
         )
     }
 }
@@ -203,6 +213,7 @@ pub fn default_matrix() -> Vec<Cell> {
                         targets: 4,
                         policy,
                         faults,
+                        threaded_ingest: false,
                     });
                 }
             }
@@ -217,10 +228,33 @@ pub fn default_matrix() -> Vec<Cell> {
                 targets,
                 policy: Policy::Latency,
                 faults: false,
+                threaded_ingest: false,
             });
         }
     }
     cells
+}
+
+/// The threaded-ingest spur: a small subset of representative cells
+/// re-run with real OS ingest threads against a pump thread
+/// ([`run_cell_threaded`]).  Invariants-only — none of these produce
+/// artifact rows.
+pub fn threaded_matrix() -> Vec<Cell> {
+    let base = |mix, targets, policy, faults| Cell {
+        arrival: Arrival::Steady,
+        mix,
+        setup: Setup::Fast,
+        targets,
+        policy,
+        faults,
+        threaded_ingest: true,
+    };
+    vec![
+        base(Mix::Uniform, 4, Policy::Latency, false),
+        base(Mix::Skewed, 4, Policy::Energy, false),
+        base(Mix::Uniform, 4, Policy::Latency, true),
+        base(Mix::Uniform, 8, Policy::FanOut, false),
+    ]
 }
 
 /// Gauntlet run parameters.
@@ -263,9 +297,20 @@ impl GauntletConfig {
         }
     }
 
-    /// The cells this configuration selects, in matrix order.
+    /// The cells this configuration selects, in matrix order — inline
+    /// deterministic cells only; these are the artifact rows.
     pub fn cells(&self) -> Vec<Cell> {
         default_matrix()
+            .into_iter()
+            .filter(|c| self.filter.as_deref().is_none_or(|f| c.id().contains(f)))
+            .collect()
+    }
+
+    /// The threaded-ingest cells this configuration selects
+    /// (invariants-only; excluded from the artifact).  The same
+    /// substring filter applies — their ids end in `-thr`.
+    pub fn threaded_cells(&self) -> Vec<Cell> {
+        threaded_matrix()
             .into_iter()
             .filter(|c| self.filter.as_deref().is_none_or(|f| c.id().contains(f)))
             .collect()
@@ -358,12 +403,19 @@ fn pick(rng: &mut SimRng, weights: &[u32; 4], pool: &[FunctionId; 4]) -> Functio
     pool[3]
 }
 
-/// Run one cell end to end and return its artifact row.  Errors (never
-/// silently reports) if any invariant breaks: a stranded handle, a
-/// double resolution, unbalanced queue books, a depth violation on a
+/// Run one inline cell end to end and return its artifact row.  Errors
+/// (never silently reports) if any invariant breaks: a stranded handle,
+/// a double resolution, unbalanced queue books, a depth violation on a
 /// fault-free path, a staging leak, or an energy-conservation miss.
+/// Threaded cells go through [`run_cell_threaded`] instead (they have
+/// no deterministic row to emit).
 pub fn run_cell(cell: &Cell, cfg: &GauntletConfig) -> Result<BenchRow> {
     let id = cell.id();
+    if cell.threaded_ingest {
+        return Err(Error::Coordinator(format!(
+            "cell '{id}' is threaded-ingest: it asserts invariants only (run_cell_threaded)"
+        )));
+    }
     let seed = cell_seed(cfg.seed, &id);
     let per_tenant = (cfg.calls_per_cell / TENANTS).max(1);
     let total = per_tenant * TENANTS;
@@ -374,7 +426,7 @@ pub fn run_cell(cell: &Cell, cfg: &GauntletConfig) -> Result<BenchRow> {
         vpe.set_fault_injector(storm(seed, t0, &units));
     }
     let quota = vpe.config().tenant_quota;
-    let mut server = Server::new(vpe);
+    let mut server = SchedulerCore::new(vpe);
 
     let uniform = [1u32; 4];
     let weights: [&[u32; 4]; TENANTS] = match cell.mix {
@@ -542,18 +594,151 @@ pub fn run_cell(cell: &Cell, cfg: &GauntletConfig) -> Result<BenchRow> {
         .metric("failed", Metric::Int(failed_calls)))
 }
 
+/// Run one threaded-ingest cell: [`TENANTS`] real OS threads each
+/// submit their share through a lock-free [`Ingress`] clone (spinning
+/// on admission rejections) while a dedicated pump thread drains the
+/// scheduler — under the same scripted fault storm as the inline cell
+/// when `faults` is set.  Wall-clock interleaving is not reproducible,
+/// so there is no artifact row; instead this errors unless every
+/// concurrency invariant holds at shutdown: exactly-once resolution,
+/// zero stranded handles, the admission bound never exceeded (swept by
+/// the pump every iteration), balanced dispatch books, no staging
+/// leak, and per-target energy conservation.
+pub fn run_cell_threaded(cell: &Cell, cfg: &GauntletConfig) -> Result<()> {
+    let id = cell.id();
+    let seed = cell_seed(cfg.seed, &id);
+    let per_tenant = (cfg.calls_per_cell / TENANTS).max(1);
+    let total = per_tenant * TENANTS;
+
+    let (mut vpe, pool, units) = build_cell(cell, seed)?;
+    let t0 = vpe.clock().now_ns();
+    if cell.faults {
+        vpe.set_fault_injector(storm(seed, t0, &units));
+    }
+    let mut core = SchedulerCore::new(vpe);
+    let ingresses: Vec<Ingress> =
+        (0..TENANTS).map(|t| core.ingress(TenantId(t as u32))).collect();
+    let pump = core.spawn_pump();
+
+    let uniform = [1u32; 4];
+    let mut workers = Vec::with_capacity(TENANTS);
+    for (t, ing) in ingresses.into_iter().enumerate() {
+        let weights: [u32; 4] =
+            if cell.mix == Mix::Skewed { SKEWED_MIXES[t] } else { uniform };
+        let id = id.clone();
+        workers.push(std::thread::spawn(move || -> Result<Vec<Completion>> {
+            let mut rng = SimRng::seeded(seed ^ (0x7188 + t as u64));
+            let mut handles = Vec::with_capacity(per_tenant);
+            for _ in 0..per_tenant {
+                let f = pick(&mut rng, &weights, &pool);
+                let mut attempts = 0u64;
+                loop {
+                    match ing.try_submit(f)? {
+                        AdmitOutcome::Admitted(done) => {
+                            handles.push(done);
+                            break;
+                        }
+                        AdmitOutcome::Rejected { .. } => {
+                            // Quota/saturation/backlog all clear as the
+                            // pump retires work — spin, with a generous
+                            // stall guard so a wedged pump errors
+                            // instead of hanging the suite.
+                            attempts += 1;
+                            if attempts > 50_000_000 {
+                                return Err(Error::Coordinator(format!(
+                                    "cell '{id}': tenant {t} starved by admission"
+                                )));
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+            }
+            Ok(handles)
+        }));
+    }
+    let mut handles: Vec<Completion> = Vec::with_capacity(total);
+    for w in workers {
+        let tenant_handles = w
+            .join()
+            .map_err(|_| Error::Coordinator(format!("cell '{id}': ingest thread panicked")))??;
+        handles.extend(tenant_handles);
+    }
+    let swept_violations = pump.invariant_violations();
+    let core = pump.shutdown()?;
+
+    // -- end-of-cell acceptance: invariants only, no artifact row ---------
+    let stranded = handles.iter().filter(|h| !h.is_done()).count();
+    if stranded != 0 {
+        return Err(Error::Coordinator(format!("cell '{id}': {stranded} stranded handle(s)")));
+    }
+    if swept_violations != 0 || core.core_invariant_violations() != 0 {
+        return Err(Error::Coordinator(format!(
+            "cell '{id}': queue-invariant violation(s) under threaded ingest"
+        )));
+    }
+    if !core.is_idle() || core.accepted_inflight() != 0 {
+        return Err(Error::Coordinator(format!("cell '{id}': books not empty after shutdown")));
+    }
+    let v = core.vpe();
+    let mut resolved_total = 0u64;
+    let mut failed_calls = 0u64;
+    for s in v.serving_stats() {
+        if s.submitted != per_tenant as u64 {
+            return Err(Error::Coordinator(format!(
+                "cell '{id}': tenant {} admitted {} of {per_tenant}",
+                s.tenant.0, s.submitted
+            )));
+        }
+        resolved_total += s.completed + s.failed;
+        failed_calls += s.failed;
+    }
+    if resolved_total != total as u64 {
+        return Err(Error::Coordinator(format!(
+            "cell '{id}': exactly-once broken — {resolved_total} resolutions for {total} calls"
+        )));
+    }
+    if !cell.faults && failed_calls != 0 {
+        return Err(Error::Coordinator(format!(
+            "cell '{id}': {failed_calls} typed failure(s) without fault injection"
+        )));
+    }
+    if v.in_flight() != 0 || v.dispatches_submitted() != v.dispatches_retired() {
+        return Err(Error::Coordinator(format!("cell '{id}': dispatch books unbalanced at drain")));
+    }
+    if v.soc().shared.used_bytes() != 0 {
+        return Err(Error::Coordinator(format!("cell '{id}': staging region leaked")));
+    }
+    for (tid, _) in v.soc().targets() {
+        let expect = energy_nj(v.scheduler().occupied_ns(tid), v.soc().active_watts(tid));
+        if v.charged_energy_nj(tid) != expect {
+            return Err(Error::Coordinator(format!(
+                "cell '{id}': energy books off on {tid}: charged {} != {} (busy x watts)",
+                v.charged_energy_nj(tid),
+                expect
+            )));
+        }
+    }
+    Ok(())
+}
+
 /// Run the configured sweep and return the artifact.
 pub fn run(cfg: &GauntletConfig) -> Result<BenchReport> {
     run_with(cfg, |_| {})
 }
 
-/// [`run`], with a per-row callback for progress display.
+/// [`run`], with a per-row callback for progress display.  Inline cells
+/// emit artifact rows; the threaded-ingest spur then runs
+/// invariants-only (no rows, so the artifact stays bit-deterministic).
 pub fn run_with(cfg: &GauntletConfig, mut on_row: impl FnMut(&BenchRow)) -> Result<BenchReport> {
     let mut report = BenchReport::new("gauntlet", if cfg.smoke { "smoke" } else { "full" });
     for cell in cfg.cells() {
         let row = run_cell(&cell, cfg)?;
         on_row(&row);
         report.push(row);
+    }
+    for cell in cfg.threaded_cells() {
+        run_cell_threaded(&cell, cfg)?;
     }
     Ok(report)
 }
@@ -622,6 +807,7 @@ mod tests {
             targets: 4,
             policy: Policy::Latency,
             faults: true,
+            threaded_ingest: false,
         };
         let cfg = tiny_cfg(11);
         let render = |row: BenchRow| {
@@ -643,6 +829,7 @@ mod tests {
             targets: 4,
             policy: Policy::Latency,
             faults: false,
+            threaded_ingest: false,
         };
         let a = run_cell(&cell, &tiny_cfg(1)).unwrap();
         let b = run_cell(&cell, &tiny_cfg(2)).unwrap();
@@ -655,6 +842,36 @@ mod tests {
     }
 
     #[test]
+    fn threaded_cells_are_suffixed_and_excluded_from_artifact_rows() {
+        let threaded = threaded_matrix();
+        assert!(!threaded.is_empty());
+        for cell in &threaded {
+            assert!(cell.threaded_ingest);
+            assert!(cell.id().ends_with("-thr"), "{} must carry the -thr suffix", cell.id());
+        }
+        // The artifact matrix stays inline-only, so the byte-identical
+        // determinism contract is untouched by the axis.
+        assert!(default_matrix().iter().all(|c| !c.threaded_ingest));
+        // run_cell refuses a threaded cell instead of emitting a
+        // nondeterministic row.
+        assert!(run_cell(&threaded[0], &tiny_cfg(5)).is_err());
+    }
+
+    #[test]
+    fn a_threaded_cell_passes_the_invariant_sweep() {
+        let cell = Cell {
+            arrival: Arrival::Steady,
+            mix: Mix::Uniform,
+            setup: Setup::Fast,
+            targets: 4,
+            policy: Policy::Latency,
+            faults: false,
+            threaded_ingest: true,
+        };
+        run_cell_threaded(&cell, &tiny_cfg(7)).unwrap();
+    }
+
+    #[test]
     fn a_fault_cell_passes_every_end_to_end_assertion() {
         let cell = Cell {
             arrival: Arrival::Steady,
@@ -663,6 +880,7 @@ mod tests {
             targets: 4,
             policy: Policy::Edp,
             faults: true,
+            threaded_ingest: false,
         };
         let row = run_cell(&cell, &tiny_cfg(3)).unwrap();
         assert_eq!(row.f64("calls"), Some(24.0));

@@ -113,6 +113,24 @@ pub fn apply(base: VpeConfig, doc: &Json) -> Result<VpeConfig> {
         }
         cfg.tenant_energy_budget_nj = Some(v);
     }
+    if let Some(v) = u64_of(doc, "ingest_queue_depth")? {
+        if v == 0 {
+            return Err(Error::Config("'ingest_queue_depth' must be >= 1".into()));
+        }
+        cfg.ingest_queue_depth = v as usize;
+    }
+    if let Some(v) = u64_of(doc, "pump_batch")? {
+        if v == 0 {
+            return Err(Error::Config("'pump_batch' must be >= 1".into()));
+        }
+        cfg.pump_batch = v as usize;
+    }
+    if let Some(v) = u64_of(doc, "pump_park_ns")? {
+        if v == 0 {
+            return Err(Error::Config("'pump_park_ns' must be >= 1".into()));
+        }
+        cfg.pump_park_ns = v;
+    }
     if let Some(v) = u64_of(doc, "max_retries")? {
         cfg.max_retries = v as u32;
     }
@@ -308,6 +326,9 @@ mod tests {
             "drr_quantum_ns": 5000000,
             "drr_quantum_nj": 20000000,
             "tenant_energy_budget_nj": 4000000000,
+            "ingest_queue_depth": 256,
+            "pump_batch": 32,
+            "pump_park_ns": 50000,
             "max_retries": 5,
             "retry_backoff_ns": 750000,
             "quarantine_threshold": 2,
@@ -340,6 +361,9 @@ mod tests {
         assert_eq!(cfg.drr_quantum_ns, 5_000_000);
         assert_eq!(cfg.drr_quantum_nj, Some(20_000_000));
         assert_eq!(cfg.tenant_energy_budget_nj, Some(4_000_000_000));
+        assert_eq!(cfg.ingest_queue_depth, 256);
+        assert_eq!(cfg.pump_batch, 32);
+        assert_eq!(cfg.pump_park_ns, 50_000);
         assert_eq!(cfg.max_retries, 5);
         assert_eq!(cfg.retry_backoff_ns, 750_000);
         assert_eq!(cfg.quarantine_threshold, 2);
@@ -386,6 +410,9 @@ mod tests {
             r#"{"max_inflight_total": 0}"#,
             r#"{"tenant_quota": 0}"#,
             r#"{"drr_quantum_ns": 0}"#,
+            r#"{"ingest_queue_depth": 0}"#,
+            r#"{"pump_batch": 0}"#,
+            r#"{"pump_park_ns": 0}"#,
         ] {
             let doc = json::parse(bad).unwrap();
             assert!(apply(VpeConfig::default(), &doc).is_err(), "{bad} must be rejected");

@@ -10,7 +10,8 @@ use crate::platform::TargetId;
 use super::queue::TenantId;
 
 /// Why the serving front-end rejected an ingest request (see
-/// [`super::serving::Server::try_submit`]).
+/// [`super::serving::Ingress::try_submit`] and
+/// [`super::serving::SchedulerCore::try_submit`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RejectReason {
     /// The server-wide accepted-but-not-completed population reached
@@ -23,6 +24,12 @@ pub enum RejectReason {
     /// operator raises the budget (energy is spent, not in flight, so
     /// completions cannot reopen it).
     TenantEnergyBudget,
+    /// The tenant's lock-free ingest ring held `ingest_queue_depth`
+    /// undrained submissions — the scheduler pump is behind this
+    /// tenant's submit rate, so back off rather than queue ahead of it
+    /// without bound (only the [`super::serving::Ingress`] path hits
+    /// this; inline submits drain synchronously).
+    IngressBacklog,
 }
 
 /// Why a function was sent back to the host.

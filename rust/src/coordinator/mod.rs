@@ -18,6 +18,6 @@ pub use events::{EventLog, RejectReason, VpeEvent};
 pub use policies_ext::{EdpPolicy, EnergyPolicy, EnergyPolicyConfig};
 pub use policy::{BlindOffloadPolicy, Candidate, OffloadPolicy, PolicyAction};
 pub use queue::{DispatchQueue, TenantId, TicketId};
-pub use serving::{AdmitOutcome, Completion, Server};
+pub use serving::{AdmitOutcome, Completion, Ingress, PumpThread, SchedulerCore};
 pub use shard::{Objective, PlanTarget, PlannedShard, ShardPlan};
 pub use vpe::{CallOutcome, CallRecord, FailReason, TenantServingStats, Vpe, VpeConfig};

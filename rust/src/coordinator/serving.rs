@@ -1,46 +1,83 @@
-//! Concurrent serving front-end: multi-tenant ingest over the ticket
-//! machinery.
+//! Concurrent serving front-end: lock-free multi-tenant ingest over a
+//! dedicated scheduler pump.
 //!
 //! The paper's prototype serves one caller; this layer turns the
-//! single-driver [`Vpe`] into an ingest coordinator that survives
-//! sustained multi-tenant traffic with bounded tail latency:
+//! single-driver [`Vpe`] into a serving system that survives sustained
+//! multi-tenant traffic with bounded tail latency.  Since PR 10 the
+//! front-end is split into two halves so application threads never
+//! block on dispatch decisions (the Tornado-style ingest/scheduler
+//! decoupling):
 //!
-//! - **Completion handles** — [`Server::try_submit`] (and the lower
-//!   level [`Vpe::submit_awaitable`]) hand back a [`Completion`] the
-//!   caller can poll or block on; it resolves exactly once, at
-//!   retirement, with the call's [`CallRecord`].
+//! - **[`Ingress`]** — a cheaply-cloneable per-tenant submit handle.
+//!   [`Ingress::try_submit`] runs admission control against *atomic*
+//!   inflight/quota counters (compare-and-swap reservations, so two
+//!   racing threads can never both take the last slot), then pushes the
+//!   request onto the tenant's own MPSC submission queue and returns
+//!   the condvar-waitable [`Completion`].  There is **no global lock on
+//!   the submit path**: a tenant thread touches only its own channel,
+//!   its tenant's shared counters, and the server-wide atomics.
+//!   Ingest-side events (admissions, rejections) are staged on the same
+//!   per-tenant channel and merged into the [`Vpe`] event log — in
+//!   global submission order, by an atomic ingest sequence number — the
+//!   next time the core drains.
+//! - **[`SchedulerCore`]** — owns the [`Vpe`] and all scheduling state.
+//!   [`SchedulerCore::pump`] drains newly-arrived submissions
+//!   (batched, up to [`VpeConfig::pump_batch`] per tenant per pump)
+//!   into the deficit-round-robin scheduler, releases work into the
+//!   dispatch queue, and retires completions.  The core can be driven
+//!   two ways:
+//!   - **inline** ([`SchedulerCore::drive_inline`] /
+//!     [`SchedulerCore::try_submit`]): single-threaded and fully
+//!     deterministic — the gauntlet and trace replay use this mode, so
+//!     same-seed reruns stay byte-identical;
+//!   - **threaded** ([`SchedulerCore::spawn_pump`]): a dedicated pump
+//!     thread loops `pump`, parking for
+//!     [`VpeConfig::pump_park_ns`] when idle and woken by submits.
+//!     The threaded path guarantees exactly-once completion and
+//!     balanced books, not a fixed interleaving.
+//!
+//! All PR 6–9 semantics are preserved across the split:
+//!
+//! - **Completion handles** — [`Ingress::try_submit`] and
+//!   [`SchedulerCore::try_submit`] (and the lower level
+//!   [`Vpe::submit_awaitable`]) hand back a [`Completion`] the caller
+//!   can poll or block on; it resolves exactly once, at retirement,
+//!   with the call's [`CallRecord`].
 //! - **Per-tenant queues + deficit round robin** — accepted requests
 //!   wait in their tenant's FIFO; each scheduling round grants every
 //!   backlogged tenant a quantum of predicted-cost credit and releases
 //!   requests the credit covers, so one tenant's flood cannot starve
-//!   the rest (fair share is proportional, not first-come).  With
-//!   [`VpeConfig::drr_quantum_nj`] set the credit currency switches
-//!   from predicted nanoseconds to predicted nano*joules*, so fairness
-//!   divides the platform's energy instead of its time.
-//! - **Admission control** — instead of queueing without bound, the
-//!   server rejects new work once the accepted-but-not-completed
+//!   the rest.  With [`VpeConfig::drr_quantum_nj`] set the credit
+//!   currency switches from predicted nanoseconds to predicted
+//!   nano*joules*, so fairness divides the platform's energy instead of
+//!   its time.
+//! - **Admission control** — instead of queueing without bound,
+//!   admission rejects new work once the accepted-but-not-completed
 //!   population hits [`VpeConfig::max_inflight_total`] (or the tenant's
 //!   own [`VpeConfig::tenant_quota`]), returning a retry hint sized
-//!   from the smoothed service time.  Backpressure replaces the
-//!   unbounded host bounce.  A per-tenant joule budget
+//!   from the smoothed service time.  A per-tenant joule budget
 //!   ([`VpeConfig::tenant_energy_budget_nj`]) closes admission for a
 //!   tenant whose completed dispatches have already spent their energy
-//!   allowance.
+//!   allowance.  The lock-free path adds one more bound: a full
+//!   per-tenant ingest ring ([`VpeConfig::ingest_queue_depth`]) rejects
+//!   with [`RejectReason::IngressBacklog`] rather than queueing
+//!   unboundedly ahead of a slow pump.
 //! - **Deadline preemption** — a released call whose predicted cost
 //!   exceeds [`VpeConfig::deadline_ns`] is submitted through the shard
 //!   planner instead ([`Vpe::submit_sharded`]), so it yields the
 //!   planner between cooperative shards rather than holding one unit
-//!   for its whole length (wasmtime's epoch-deadline idea, applied to
-//!   dispatch).
+//!   for its whole length.
+//! - **Saturation holdback** — the core releases work *into* the
+//!   existing dispatch queue: target saturation ([`Vpe::queue_depth_on`]
+//!   at the [`VpeConfig::max_queue_per_target`] bound) holds a release
+//!   back in its tenant queue rather than letting it bounce to the
+//!   host, so the synchronous `call`/`submit` semantics and their
+//!   bounce rule are untouched.
 //!
-//! The server releases work *into* the existing dispatch queue: target
-//! saturation ([`Vpe::queue_depth_on`] at the
-//! [`VpeConfig::max_queue_per_target`] bound) holds a release back in
-//! its tenant queue rather than letting it bounce to the host, so the
-//! synchronous `call`/`submit` semantics and their bounce rule are
-//! untouched.  `examples/serving_load.rs` drives this layer with ~10⁵
-//! mixed-size calls across eight tenants and emits
-//! `BENCH_serving.json`.
+//! `examples/serving_load.rs` drives this layer with ~10⁵ mixed-size
+//! calls across eight tenants — inline for the deterministic fairness
+//! proof, then with eight real OS threads through `Ingress` clones for
+//! the lock-contention proof — and emits `BENCH_serving.json`.
 //!
 //! [`VpeConfig::max_inflight_total`]: super::vpe::VpeConfig::max_inflight_total
 //! [`VpeConfig::tenant_quota`]: super::vpe::VpeConfig::tenant_quota
@@ -48,11 +85,18 @@
 //! [`VpeConfig::max_queue_per_target`]: super::vpe::VpeConfig::max_queue_per_target
 //! [`VpeConfig::drr_quantum_nj`]: super::vpe::VpeConfig::drr_quantum_nj
 //! [`VpeConfig::tenant_energy_budget_nj`]: super::vpe::VpeConfig::tenant_energy_budget_nj
+//! [`VpeConfig::ingest_queue_depth`]: super::vpe::VpeConfig::ingest_queue_depth
+//! [`VpeConfig::pump_batch`]: super::vpe::VpeConfig::pump_batch
+//! [`VpeConfig::pump_park_ns`]: super::vpe::VpeConfig::pump_park_ns
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::{JoinHandle, Thread};
+use std::time::Duration;
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::jit::module::FunctionId;
 use crate::platform::TargetId;
 use crate::workloads;
@@ -85,7 +129,8 @@ struct CompletionCell {
 /// thread drives the coordinator.
 ///
 /// Retirement happens on the owning [`Vpe`] — some thread must run
-/// [`Vpe::drain`], [`Vpe::retire_next`], or [`Server::pump`] for the
+/// [`Vpe::drain`], [`Vpe::retire_next`], [`SchedulerCore::pump`], or
+/// the pump thread spawned by [`SchedulerCore::spawn_pump`] for the
 /// handle to resolve; [`Completion::wait`] on an otherwise idle
 /// coordinator blocks forever.
 #[derive(Debug, Clone)]
@@ -144,7 +189,8 @@ impl Completion {
     }
 }
 
-/// What [`Server::try_submit`] decided about one ingest request.
+/// What admission control decided about one ingest request (returned
+/// by [`Ingress::try_submit`] and [`SchedulerCore::try_submit`]).
 #[derive(Debug, Clone)]
 pub enum AdmitOutcome {
     /// Accepted into the tenant's submission queue; the handle resolves
@@ -161,32 +207,295 @@ pub enum AdmitOutcome {
     },
 }
 
-/// One accepted request waiting in its tenant's queue.
+/// Counters shared lock-free between every [`Ingress`] handle and the
+/// [`SchedulerCore`].  Admission bounds are snapshotted from the
+/// [`VpeConfig`] at core construction (registration and reconfiguration
+/// require `&mut Vpe`, which only the core holds, so the snapshot
+/// cannot go stale while handles are live).
+///
+/// [`VpeConfig`]: super::vpe::VpeConfig
+#[derive(Debug)]
+struct ServingShared {
+    max_inflight_total: usize,
+    tenant_quota: usize,
+    tenant_energy_budget_nj: Option<u64>,
+    ingest_queue_depth: usize,
+    /// Registered functions at snapshot time — the ingress-side
+    /// unknown-function check ([`FunctionId`]s are dense indices).
+    function_count: AtomicUsize,
+    /// Accepted but not completed, across all tenants — the population
+    /// `max_inflight_total` bounds.  Reserved by CAS at admission,
+    /// released at completion booking.
+    accepted_inflight: AtomicUsize,
+    /// Core-published mirror of the sim clock, ns — stamps ingest
+    /// times on the lock-free path.
+    clock_ns: AtomicU64,
+    /// Core-published smoothed service time, ns — sizes retry hints on
+    /// the lock-free path.
+    service_ewma_ns: AtomicU64,
+    /// Requests rejected by admission control (either path).
+    rejected: AtomicU64,
+    /// Global ingest sequence: total order over submissions from every
+    /// tenant thread, used to merge staged events deterministically at
+    /// drain.
+    ingest_seq: AtomicU64,
+    /// Messages staged on the ingest rings but not yet drained —
+    /// admissions *and* rejection events.  Incremented before the
+    /// channel send (decremented again if the send fails), so the count
+    /// never under-reports; drivers pump until it reaches zero so no
+    /// staged event is dropped on shutdown.
+    staged: AtomicUsize,
+    /// The pump thread's handle, set once at spawn — `get()` is a
+    /// lock-free read, so waking the pump does not serialize tenants.
+    pump_thread: OnceLock<Thread>,
+    /// Set by [`PumpThread::shutdown`]; the pump drains to empty books
+    /// before exiting.
+    shutdown: AtomicBool,
+}
+
+impl ServingShared {
+    /// One smoothed service time (floor 1 ms): when the next retirement
+    /// should free a slot.
+    fn retry_hint_ns(&self) -> u64 {
+        self.service_ewma_ns.load(Ordering::Relaxed).max(MIN_RETRY_HINT_NS)
+    }
+
+    /// Atomically reserve one admission slot: server-wide population,
+    /// then tenant quota, then the tenant energy budget — the same
+    /// check order as the single-driver server, but each bound is a
+    /// compare-and-swap, so two threads racing the last slot cannot
+    /// both win.  On rejection every partial reservation is rolled
+    /// back and the failing bound is returned.
+    fn try_reserve(&self, ts: &TenantShared) -> std::result::Result<(), RejectReason> {
+        if self
+            .accepted_inflight
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                (n < self.max_inflight_total).then_some(n + 1)
+            })
+            .is_err()
+        {
+            return Err(RejectReason::ServerSaturated);
+        }
+        if ts
+            .pending
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                (n < self.tenant_quota).then_some(n + 1)
+            })
+            .is_err()
+        {
+            self.accepted_inflight.fetch_sub(1, Ordering::AcqRel);
+            return Err(RejectReason::TenantQuota);
+        }
+        if let Some(budget) = self.tenant_energy_budget_nj {
+            if ts.energy_spent_nj.load(Ordering::Acquire) >= budget {
+                ts.pending.fetch_sub(1, Ordering::AcqRel);
+                self.accepted_inflight.fetch_sub(1, Ordering::AcqRel);
+                return Err(RejectReason::TenantEnergyBudget);
+            }
+        }
+        Ok(())
+    }
+
+    /// Release a reservation taken by [`ServingShared::try_reserve`]
+    /// (completion booking, or rollback of a failed ring push).
+    fn unreserve(&self, ts: &TenantShared) {
+        ts.pending.fetch_sub(1, Ordering::AcqRel);
+        self.accepted_inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Wake the pump thread, if one is attached (lock-free; a no-op in
+    /// inline mode).
+    fn wake_pump(&self) {
+        if let Some(t) = self.pump_thread.get() {
+            t.unpark();
+        }
+    }
+}
+
+/// Per-tenant state shared between that tenant's [`Ingress`] handles
+/// and the core — atomics only; no locks on the submit path.
+#[derive(Debug, Default)]
+struct TenantShared {
+    /// Accepted but not yet completed (in the ingest ring, queued in
+    /// the lane, or in flight) — the population `tenant_quota` bounds.
+    pending: AtomicUsize,
+    /// Submitted but not yet drained by the core — the population
+    /// `ingest_queue_depth` bounds.
+    queued: AtomicUsize,
+    /// Core-published mirror of the tenant's cumulative charged energy
+    /// ([`Vpe::tenant_energy_nj`]) — the lock-free budget check.
+    energy_spent_nj: AtomicU64,
+}
+
+/// What one ingest message carries besides its identity.
+#[derive(Debug)]
+enum IngestPayload {
+    /// An admitted request: the completion the core must bind at
+    /// release.
+    Admitted(Completion),
+    /// A rejection that happened on the ingest side — staged so the
+    /// event lands in the [`Vpe`] log (with its original timestamp and
+    /// retry hint) at the next drain.
+    Rejected {
+        reason: RejectReason,
+        retry_after_ns: u64,
+    },
+}
+
+/// One entry in a tenant's MPSC submission queue.  The queue doubles as
+/// the tenant's event staging buffer: admissions and rejections ride
+/// the same channel and are merged into the core's event log in global
+/// `seq` order at drain, so ingest-side events are recorded without
+/// ever taking the core lock.
+#[derive(Debug)]
+struct IngestMsg {
+    /// Global submission order (see [`ServingShared::ingest_seq`]).
+    seq: u64,
+    /// Ingest-side sim timestamp (the clock mirror at submit).
+    at_ns: u64,
+    function: FunctionId,
+    payload: IngestPayload,
+}
+
+/// Cheaply-cloneable, lock-free submit handle for one tenant.
+///
+/// Created by [`SchedulerCore::ingress`]; clones share the tenant's
+/// submission queue and counters, so a tenant may submit from as many
+/// threads as it likes.  The handle is `Send`; a submit touches only
+/// atomics and the tenant's own MPSC channel — never a lock shared
+/// with other tenants or with the scheduler.
+///
+/// Work submitted through an `Ingress` is only *scheduled* when the
+/// core drains: either some thread drives
+/// [`SchedulerCore::pump`]/[`SchedulerCore::drive_inline`], or a pump
+/// thread is attached via [`SchedulerCore::spawn_pump`].
+#[derive(Debug, Clone)]
+pub struct Ingress {
+    tenant: TenantId,
+    shared: Arc<ServingShared>,
+    ts: Arc<TenantShared>,
+    tx: Sender<IngestMsg>,
+}
+
+impl Ingress {
+    /// The tenant this handle submits on behalf of.
+    pub fn tenant(&self) -> TenantId {
+        self.tenant
+    }
+
+    /// Offer one call of `f`.  Either accepts it into the tenant's
+    /// submission queue (returning the awaitable [`Completion`]) or
+    /// rejects it with a retry hint — never blocks, never queues
+    /// without bound.  Errors only on a broken request (unknown
+    /// function) or a dropped core.
+    ///
+    /// Admission is a chain of compare-and-swap reservations against
+    /// the shared atomic counters: server population → tenant quota →
+    /// tenant energy budget → ingest ring depth, rolled back on any
+    /// failure, so concurrent submitters can never over-admit.
+    pub fn try_submit(&self, f: FunctionId) -> Result<AdmitOutcome> {
+        if (f.0 as usize) >= self.shared.function_count.load(Ordering::Acquire) {
+            return Err(Error::Coordinator(format!("{f} has no workload binding")));
+        }
+        let at_ns = self.shared.clock_ns.load(Ordering::Acquire);
+        match self.reserve() {
+            Err(reason) => {
+                let retry_after_ns = self.shared.retry_hint_ns();
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                let seq = self.shared.ingest_seq.fetch_add(1, Ordering::AcqRel);
+                self.shared.staged.fetch_add(1, Ordering::AcqRel);
+                // A dropped core cannot log the event; the rejection
+                // outcome itself is still valid.
+                let sent = self.tx.send(IngestMsg {
+                    seq,
+                    at_ns,
+                    function: f,
+                    payload: IngestPayload::Rejected { reason, retry_after_ns },
+                });
+                if sent.is_err() {
+                    self.shared.staged.fetch_sub(1, Ordering::AcqRel);
+                }
+                self.shared.wake_pump();
+                Ok(AdmitOutcome::Rejected { reason, retry_after_ns })
+            }
+            Ok(()) => {
+                let completion = Completion::new_at(at_ns);
+                let seq = self.shared.ingest_seq.fetch_add(1, Ordering::AcqRel);
+                self.shared.staged.fetch_add(1, Ordering::AcqRel);
+                let sent = self.tx.send(IngestMsg {
+                    seq,
+                    at_ns,
+                    function: f,
+                    payload: IngestPayload::Admitted(completion.clone()),
+                });
+                if sent.is_err() {
+                    // The core (receiver) is gone: roll the reservation
+                    // back so the books stay balanced, and surface the
+                    // breakage instead of handing out a handle that can
+                    // never resolve.
+                    self.shared.staged.fetch_sub(1, Ordering::AcqRel);
+                    self.ts.queued.fetch_sub(1, Ordering::AcqRel);
+                    self.shared.unreserve(&self.ts);
+                    return Err(Error::Coordinator(
+                        "serving core dropped with ingress handles live".into(),
+                    ));
+                }
+                self.shared.wake_pump();
+                Ok(AdmitOutcome::Admitted(completion))
+            }
+        }
+    }
+
+    /// Reserve admission + one ingest-ring slot, rolling back on any
+    /// bound hit.
+    fn reserve(&self) -> std::result::Result<(), RejectReason> {
+        self.shared.try_reserve(&self.ts)?;
+        if self
+            .ts
+            .queued
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                (n < self.shared.ingest_queue_depth).then_some(n + 1)
+            })
+            .is_err()
+        {
+            self.shared.unreserve(&self.ts);
+            return Err(RejectReason::IngressBacklog);
+        }
+        Ok(())
+    }
+}
+
+/// One accepted request waiting in its tenant's lane.
 #[derive(Debug)]
 struct QueuedReq {
     function: FunctionId,
     completion: Completion,
-    /// Admission-time predicted cost on the function's current target,
-    /// ns — the deadline-preemption trigger.
+    /// Predicted cost on the function's current target, ns — the
+    /// deadline-preemption trigger.  Priced at admission on the inline
+    /// path, at drain on the lock-free path (the first point the core
+    /// sees the request; no retirement can intervene in between on the
+    /// deterministic driver).
     cost_ns: u64,
-    /// Admission-time DRR price of the request: `cost_ns` under
-    /// time-denominated DRR, the predicted energy in nanojoules under
-    /// energy-denominated DRR ([`VpeConfig::drr_quantum_nj`]).
+    /// DRR price of the request: `cost_ns` under time-denominated DRR,
+    /// the predicted energy in nanojoules under energy-denominated DRR
+    /// ([`VpeConfig::drr_quantum_nj`]).
     ///
     /// [`VpeConfig::drr_quantum_nj`]: super::vpe::VpeConfig::drr_quantum_nj
     credit: u64,
 }
 
-/// Per-tenant scheduling state.
-#[derive(Debug, Default)]
-struct TenantQueue {
+/// Per-tenant scheduling state owned by the core: the drained FIFO the
+/// DRR scheduler releases from, plus the ingest channel endpoints.
+#[derive(Debug)]
+struct TenantLane {
+    ts: Arc<TenantShared>,
+    /// Prototype sender, cloned into each new [`Ingress`] handle.
+    tx: Sender<IngestMsg>,
+    rx: Receiver<IngestMsg>,
     q: VecDeque<QueuedReq>,
     /// Unspent DRR credit, in the configured currency (ns of predicted
     /// cost, or nJ of predicted energy under energy-denominated DRR).
     deficit: u64,
-    /// Accepted but not yet completed (queued here + in flight below) —
-    /// the population `tenant_quota` bounds.
-    pending: usize,
     /// Cumulative predicted cost released into the dispatch queue, ns —
     /// the fair-share measure (release is what DRR controls; shard
     /// makespans would undercount a preempted call's consumed
@@ -194,163 +503,330 @@ struct TenantQueue {
     served_ns: u64,
 }
 
-/// Multi-tenant serving front-end over one [`Vpe`].
+impl TenantLane {
+    fn new() -> Self {
+        let (tx, rx) = mpsc::channel();
+        TenantLane {
+            ts: Arc::new(TenantShared::default()),
+            tx,
+            rx,
+            q: VecDeque::new(),
+            deficit: 0,
+            served_ns: 0,
+        }
+    }
+}
+
+/// The scheduling half of the serving front-end: owns the [`Vpe`],
+/// the per-tenant lanes, and the DRR release loop.
 ///
-/// The server owns the coordinator.  Ingest threads (or a load
-/// generator) call [`Server::try_submit`]; some driver calls
-/// [`Server::pump`] (or [`Server::run_until_idle`]) to schedule
-/// releases and retire completions.  The whole server is `Send`, so an
-/// `Arc<Mutex<Server>>` shared between ingest threads and a driver
-/// thread works — see the threaded test in this module.
+/// Two driving modes share all scheduling code:
+///
+/// - **Inline** (deterministic): call [`SchedulerCore::try_submit`]
+///   and [`SchedulerCore::drive_inline`] from one thread.  This is the
+///   single-driver mode the gauntlet and trace replay rely on —
+///   same-seed runs are byte-identical.
+/// - **Threaded**: create [`Ingress`] handles with
+///   [`SchedulerCore::ingress`], then hand the core to a pump thread
+///   with [`SchedulerCore::spawn_pump`].  Tenant threads submit
+///   lock-free; the pump batches arrivals into the scheduler.  Join
+///   ingest threads, then [`PumpThread::shutdown`] drains to empty
+///   books and returns the core.
 ///
 /// ```
-/// use vpe::coordinator::serving::{AdmitOutcome, Server, TenantId};
+/// use vpe::coordinator::serving::{AdmitOutcome, SchedulerCore, TenantId};
 /// use vpe::coordinator::{Vpe, VpeConfig};
 /// use vpe::workloads::WorkloadKind;
 ///
 /// let mut vpe = Vpe::new(VpeConfig::sim_only())?;
 /// let f = vpe.register_workload(WorkloadKind::Dotprod)?;
-/// let mut server = Server::new(vpe);
-/// let done = match server.try_submit(TenantId(0), f)? {
+/// let mut core = SchedulerCore::new(vpe);
+/// let done = match core.try_submit(TenantId(0), f)? {
 ///     AdmitOutcome::Admitted(done) => done,
-///     AdmitOutcome::Rejected { .. } => unreachable!("fresh server admits"),
+///     AdmitOutcome::Rejected { .. } => unreachable!("fresh core admits"),
 /// };
-/// server.run_until_idle()?;
+/// core.drive_inline()?;
 /// assert_eq!(done.wait().iteration, 1);
 /// # Ok::<(), vpe::Error>(())
 /// ```
 #[derive(Debug)]
-pub struct Server {
+pub struct SchedulerCore {
     vpe: Vpe,
-    tenants: BTreeMap<TenantId, TenantQueue>,
+    shared: Arc<ServingShared>,
+    tenants: BTreeMap<TenantId, TenantLane>,
     /// DRR visit rotation, in first-seen order; `next_visit` rotates the
     /// starting tenant so round boundaries do not favour early tenants.
     order: Vec<TenantId>,
     next_visit: usize,
-    /// Accepted but not completed, across all tenants — the population
-    /// `max_inflight_total` bounds.
-    accepted_inflight: usize,
-    rejected: u64,
     preempted: u64,
     dispatched: u64,
-    /// EWMA of observed service time (start → complete), ns; sizes the
-    /// rejection retry hint.
+    /// EWMA of observed service time (start → complete), ns; the master
+    /// copy of the mirror published to [`ServingShared`].
     service_ewma_ns: f64,
 }
 
-impl Server {
-    /// Wrap a coordinator in a serving front-end.  Admission and
-    /// scheduling knobs come from the coordinator's [`VpeConfig`]
+impl SchedulerCore {
+    /// Wrap a coordinator in a serving core.  Admission and scheduling
+    /// knobs come from the coordinator's [`VpeConfig`]
     /// (`max_inflight_total`, `tenant_quota`, `deadline_ns`,
-    /// `drr_quantum_ns`, and the energy axis: `drr_quantum_nj`,
-    /// `tenant_energy_budget_nj`).
+    /// `drr_quantum_ns`, the energy axis `drr_quantum_nj` /
+    /// `tenant_energy_budget_nj`, and the ingest axis
+    /// `ingest_queue_depth` / `pump_batch` / `pump_park_ns`), bound at
+    /// construction.
     ///
     /// [`VpeConfig`]: super::vpe::VpeConfig
     pub fn new(vpe: Vpe) -> Self {
-        Server {
+        let cfg = vpe.config();
+        let shared = Arc::new(ServingShared {
+            max_inflight_total: cfg.max_inflight_total,
+            tenant_quota: cfg.tenant_quota,
+            tenant_energy_budget_nj: cfg.tenant_energy_budget_nj,
+            ingest_queue_depth: cfg.ingest_queue_depth,
+            function_count: AtomicUsize::new(vpe.function_count()),
+            accepted_inflight: AtomicUsize::new(0),
+            clock_ns: AtomicU64::new(vpe.clock().now_ns()),
+            service_ewma_ns: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            ingest_seq: AtomicU64::new(0),
+            staged: AtomicUsize::new(0),
+            pump_thread: OnceLock::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        SchedulerCore {
             vpe,
+            shared,
             tenants: BTreeMap::new(),
             order: Vec::new(),
             next_visit: 0,
-            accepted_inflight: 0,
-            rejected: 0,
             preempted: 0,
             dispatched: 0,
             service_ewma_ns: 0.0,
         }
     }
 
-    /// Offer one call of `f` on behalf of `tenant`.  Either accepts it
-    /// into the tenant's submission queue (returning the awaitable
-    /// [`Completion`]) or rejects it with a retry hint — never blocks,
-    /// never queues without bound.  Errors only on a broken request
-    /// (unknown function).
-    pub fn try_submit(&mut self, tenant: TenantId, f: FunctionId) -> Result<AdmitOutcome> {
-        let cost_ns = self.vpe.predicted_call_ns(f)?.max(1);
-        let (max_total, quota, energy_budget, energy_drr) = {
-            let cfg = self.vpe.config();
-            (
-                cfg.max_inflight_total,
-                cfg.tenant_quota,
-                cfg.tenant_energy_budget_nj,
-                cfg.drr_quantum_nj.is_some(),
-            )
-        };
-        if self.accepted_inflight >= max_total {
-            return Ok(self.reject(tenant, f, RejectReason::ServerSaturated));
-        }
-        if self.tenants.get(&tenant).map(|t| t.pending).unwrap_or(0) >= quota {
-            return Ok(self.reject(tenant, f, RejectReason::TenantQuota));
-        }
-        if let Some(budget) = energy_budget {
-            if self.vpe.tenant_energy_nj(tenant) >= budget {
-                return Ok(self.reject(tenant, f, RejectReason::TenantEnergyBudget));
-            }
-        }
-        let credit =
-            if energy_drr { self.vpe.predicted_call_energy_nj(f)?.max(1) } else { cost_ns };
+    fn ensure_lane(&mut self, tenant: TenantId) -> &mut TenantLane {
         if !self.tenants.contains_key(&tenant) {
-            self.tenants.insert(tenant, TenantQueue::default());
+            self.tenants.insert(tenant, TenantLane::new());
             self.order.push(tenant);
         }
-        let completion = Completion::new_at(self.vpe.clock().now_ns());
-        let tq = self.tenants.get_mut(&tenant).expect("inserted above");
-        tq.pending += 1;
-        tq.q.push_back(QueuedReq { function: f, completion: completion.clone(), cost_ns, credit });
-        self.accepted_inflight += 1;
-        self.vpe.note_admitted(tenant, f);
-        Ok(AdmitOutcome::Admitted(completion))
+        self.tenants.get_mut(&tenant).expect("inserted above")
     }
 
-    fn reject(&mut self, tenant: TenantId, f: FunctionId, reason: RejectReason) -> AdmitOutcome {
-        let retry_after_ns = self.retry_hint_ns();
-        self.rejected += 1;
-        self.vpe.note_rejected(tenant, f, reason, retry_after_ns);
-        AdmitOutcome::Rejected { reason, retry_after_ns }
+    /// A lock-free submit handle for `tenant`.  Create every handle
+    /// *before* [`SchedulerCore::spawn_pump`] (handles need `&mut
+    /// self`); clones are cheap and share the tenant's queue.
+    pub fn ingress(&mut self, tenant: TenantId) -> Ingress {
+        // Registrations since construction are visible to new handles
+        // (registration needs `&mut Vpe`, so none can race this).
+        self.shared.function_count.store(self.vpe.function_count(), Ordering::Release);
+        let shared = Arc::clone(&self.shared);
+        let lane = self.ensure_lane(tenant);
+        Ingress { tenant, shared, ts: Arc::clone(&lane.ts), tx: lane.tx.clone() }
     }
 
-    /// One smoothed service time (floor 1 ms): when the next retirement
-    /// should free a slot.
-    fn retry_hint_ns(&self) -> u64 {
-        (self.service_ewma_ns as u64).max(MIN_RETRY_HINT_NS)
+    /// Offer one call of `f` on behalf of `tenant` — the inline,
+    /// deterministic flavour of [`Ingress::try_submit`]: same atomic
+    /// admission chain, but the request is priced and queued
+    /// immediately (no channel hop), and events are logged at the
+    /// exact sim time.  Errors only on a broken request (unknown
+    /// function).
+    pub fn try_submit(&mut self, tenant: TenantId, f: FunctionId) -> Result<AdmitOutcome> {
+        let cost_ns = self.vpe.predicted_call_ns(f)?.max(1);
+        let energy_drr = self.vpe.config().drr_quantum_nj.is_some();
+        self.ensure_lane(tenant);
+        let ts = Arc::clone(&self.tenants.get(&tenant).expect("lane ensured above").ts);
+        match self.shared.try_reserve(&ts) {
+            Err(reason) => {
+                let retry_after_ns = self.shared.retry_hint_ns();
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                self.vpe.note_rejected(tenant, f, reason, retry_after_ns);
+                Ok(AdmitOutcome::Rejected { reason, retry_after_ns })
+            }
+            Ok(()) => {
+                let credit =
+                    if energy_drr { self.vpe.predicted_call_energy_nj(f)?.max(1) } else { cost_ns };
+                let completion = Completion::new_at(self.vpe.clock().now_ns());
+                self.vpe.note_admitted(tenant, f);
+                let lane = self.tenants.get_mut(&tenant).expect("lane ensured above");
+                lane.q.push_back(QueuedReq {
+                    function: f,
+                    completion: completion.clone(),
+                    cost_ns,
+                    credit,
+                });
+                Ok(AdmitOutcome::Admitted(completion))
+            }
+        }
     }
 
-    /// Advance the server one step: schedule releases, retire the
-    /// earliest completion (if any), credit its tenant, and top the
-    /// dispatch queue back up.  Returns the retired record, or `None`
-    /// when the server is idle — by then every tenant queue is empty
-    /// (the scheduler keeps granting credit while work is queued and
-    /// nothing is in flight, so an idle return cannot strand requests).
+    /// Pull newly-arrived submissions out of every tenant's ingest
+    /// channel (up to [`VpeConfig::pump_batch`] per tenant), merge them
+    /// into global submission order by ingest sequence, log their
+    /// staged events, and price + queue the admitted ones into their
+    /// lanes.  Returns how many messages were absorbed.
+    ///
+    /// [`VpeConfig::pump_batch`]: super::vpe::VpeConfig::pump_batch
+    fn drain_ingress(&mut self) -> Result<usize> {
+        let batch = self.vpe.config().pump_batch.max(1);
+        let energy_drr = self.vpe.config().drr_quantum_nj.is_some();
+        let mut msgs: Vec<(TenantId, IngestMsg)> = Vec::new();
+        for (tenant, lane) in self.tenants.iter() {
+            for _ in 0..batch {
+                match lane.rx.try_recv() {
+                    Ok(m) => msgs.push((*tenant, m)),
+                    Err(_) => break,
+                }
+            }
+        }
+        // The atomic ingest sequence gives one total order across all
+        // tenant threads; merging on it keeps the event log and queue
+        // contents independent of drain interleaving.
+        msgs.sort_by_key(|(_, m)| m.seq);
+        let n = msgs.len();
+        if n > 0 {
+            self.shared.staged.fetch_sub(n, Ordering::AcqRel);
+        }
+        for (tenant, m) in msgs {
+            match m.payload {
+                IngestPayload::Rejected { reason, retry_after_ns } => {
+                    self.vpe.note_rejected_at(m.at_ns, tenant, m.function, reason, retry_after_ns);
+                }
+                IngestPayload::Admitted(completion) => {
+                    let cost_ns = self.vpe.predicted_call_ns(m.function)?.max(1);
+                    let credit = if energy_drr {
+                        self.vpe.predicted_call_energy_nj(m.function)?.max(1)
+                    } else {
+                        cost_ns
+                    };
+                    self.vpe.note_admitted_at(m.at_ns, tenant, m.function);
+                    let lane = self.tenants.get_mut(&tenant).expect("lane owns the channel");
+                    lane.ts.queued.fetch_sub(1, Ordering::AcqRel);
+                    lane.q.push_back(QueuedReq {
+                        function: m.function,
+                        completion,
+                        cost_ns,
+                        credit,
+                    });
+                }
+            }
+        }
+        Ok(n)
+    }
+
+    /// Publish the sim clock to the lock-free mirror (ingest-side
+    /// timestamps and `Completion` epochs read it).
+    fn publish_clock(&self) {
+        self.shared.clock_ns.store(self.vpe.clock().now_ns(), Ordering::Release);
+    }
+
+    /// Advance the core one step: absorb new ingest, schedule releases,
+    /// retire the earliest completion (if any), book its tenant, and
+    /// top the dispatch queue back up.  Returns the retired record, or
+    /// `None` when nothing retired this step — which is only *idle* if
+    /// [`SchedulerCore::is_idle`] also holds (a retirement-free pump
+    /// may still have absorbed staged ingest).  An idle return cannot
+    /// strand requests: the scheduler keeps granting credit while work
+    /// is queued and nothing is in flight.
     pub fn pump(&mut self) -> Result<Option<CallRecord>> {
+        self.drain_ingress()?;
         self.schedule()?;
         let Some(rec) = self.vpe.retire_next()? else {
+            self.publish_clock();
             return Ok(None);
         };
         if let Some(t) = rec.tenant {
-            if let Some(tq) = self.tenants.get_mut(&t) {
-                tq.pending = tq.pending.saturating_sub(1);
+            if let Some(lane) = self.tenants.get(&t) {
+                let _ = lane.ts.pending.fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                    Some(n.saturating_sub(1))
+                });
+                lane.ts.energy_spent_nj.store(self.vpe.tenant_energy_nj(t), Ordering::Release);
             }
-            self.accepted_inflight = self.accepted_inflight.saturating_sub(1);
+            let _ = self.shared.accepted_inflight.fetch_update(
+                Ordering::AcqRel,
+                Ordering::Acquire,
+                |n| Some(n.saturating_sub(1)),
+            );
             let service = rec.complete_ns.saturating_sub(rec.start_ns) as f64;
             self.service_ewma_ns = if self.service_ewma_ns > 0.0 {
                 0.9 * self.service_ewma_ns + 0.1 * service
             } else {
                 service
             };
+            self.shared.service_ewma_ns.store(self.service_ewma_ns as u64, Ordering::Relaxed);
         }
         self.schedule()?;
+        self.publish_clock();
         Ok(Some(rec))
     }
 
-    /// Pump until every queued and in-flight request has retired;
-    /// returns the records in retirement order.
-    pub fn run_until_idle(&mut self) -> Result<Vec<CallRecord>> {
+    /// Drive the core to idle on the calling thread — the
+    /// single-threaded deterministic mode: submissions are absorbed,
+    /// scheduled, and retired in one total order (ingest sequence for
+    /// arrivals, sim time for retirements), so same-seed runs produce
+    /// byte-identical artifacts.  Returns the records in retirement
+    /// order.
+    pub fn drive_inline(&mut self) -> Result<Vec<CallRecord>> {
         let mut out = Vec::new();
-        while let Some(rec) = self.pump()? {
-            out.push(rec);
+        loop {
+            match self.pump()? {
+                Some(rec) => out.push(rec),
+                // A retirement-free pump can still have absorbed staged
+                // ingest (e.g. rejection events queued behind a slow
+                // drain) — keep pumping until the books are truly empty.
+                None if self.is_idle() => break,
+                None => {}
+            }
         }
         debug_assert_eq!(self.queued_total(), 0, "pump drained every tenant queue");
         Ok(out)
+    }
+
+    /// Pump until every queued and in-flight request has retired;
+    /// returns the records in retirement order.  Alias of
+    /// [`SchedulerCore::drive_inline`], kept for driver compatibility.
+    pub fn run_until_idle(&mut self) -> Result<Vec<CallRecord>> {
+        self.drive_inline()
+    }
+
+    /// Hand the core to a dedicated pump thread.  The pump loops
+    /// [`SchedulerCore::pump`], parking for
+    /// [`VpeConfig::pump_park_ns`] when idle (submits unpark it), and
+    /// sweeps the core invariants every iteration.  On
+    /// [`PumpThread::shutdown`] it drains until the books are empty —
+    /// zero stranded handles — and returns the core.
+    ///
+    /// [`VpeConfig::pump_park_ns`]: super::vpe::VpeConfig::pump_park_ns
+    pub fn spawn_pump(mut self) -> PumpThread {
+        let shared = Arc::clone(&self.shared);
+        let violations = Arc::new(AtomicUsize::new(0));
+        let sweep = Arc::clone(&violations);
+        let park_ns = self.vpe.config().pump_park_ns.max(1);
+        let handle = std::thread::Builder::new()
+            .name("vpe-pump".into())
+            .spawn(move || -> Result<SchedulerCore> {
+                let _ = self.shared.pump_thread.set(std::thread::current());
+                loop {
+                    let progressed = self.pump()?.is_some();
+                    let v = self.core_invariant_violations();
+                    if v > 0 {
+                        sweep.fetch_add(v, Ordering::Relaxed);
+                    }
+                    if self.shared.shutdown.load(Ordering::Acquire)
+                        && self.accepted_inflight() == 0
+                        && self.is_idle()
+                    {
+                        break;
+                    }
+                    // Don't park while staged ingest remains — loop
+                    // straight back into the drain.
+                    if !progressed && self.ingest_backlog() == 0 {
+                        std::thread::park_timeout(Duration::from_nanos(park_ns));
+                    }
+                }
+                Ok(self)
+            })
+            .expect("spawn vpe-pump thread");
+        PumpThread { shared, violations, handle }
     }
 
     /// Deficit-round-robin release loop.  Each round grants every
@@ -414,15 +890,15 @@ impl Server {
     }
 
     fn grant_quantum(&mut self, tenant: TenantId, quantum: u64) {
-        if let Some(tq) = self.tenants.get_mut(&tenant) {
-            match tq.q.front() {
+        if let Some(lane) = self.tenants.get_mut(&tenant) {
+            match lane.q.front() {
                 Some(head) => {
                     let cap = head.credit.saturating_add(quantum);
-                    tq.deficit = tq.deficit.saturating_add(quantum).min(cap);
+                    lane.deficit = lane.deficit.saturating_add(quantum).min(cap);
                 }
                 // Idle tenants bank nothing (the classic DRR rule):
                 // fairness is over backlogged tenants only.
-                None => tq.deficit = 0,
+                None => lane.deficit = 0,
             }
         }
     }
@@ -437,9 +913,9 @@ impl Server {
         let bound = self.vpe.config().max_queue_per_target;
         let mut pick = None;
         {
-            let tq = self.tenants.get(&tenant)?;
-            for (i, req) in tq.q.iter().take(HOL_BYPASS).enumerate() {
-                if req.credit > tq.deficit {
+            let lane = self.tenants.get(&tenant)?;
+            for (i, req) in lane.q.iter().take(HOL_BYPASS).enumerate() {
+                if req.credit > lane.deficit {
                     break;
                 }
                 if self.wants_preempt(req.cost_ns, req.function)
@@ -451,10 +927,10 @@ impl Server {
             }
         }
         let i = pick?;
-        let tq = self.tenants.get_mut(&tenant).expect("present above");
-        let req = tq.q.remove(i).expect("pick is in range");
-        tq.deficit = tq.deficit.saturating_sub(req.credit);
-        tq.served_ns = tq.served_ns.saturating_add(req.cost_ns);
+        let lane = self.tenants.get_mut(&tenant).expect("present above");
+        let req = lane.q.remove(i).expect("pick is in range");
+        lane.deficit = lane.deficit.saturating_sub(req.credit);
+        lane.served_ns = lane.served_ns.saturating_add(req.cost_ns);
         Some(req)
     }
 
@@ -522,15 +998,23 @@ impl Server {
     ///
     /// [`VpeConfig::max_inflight_total`]: super::vpe::VpeConfig::max_inflight_total
     pub fn accepted_inflight(&self) -> usize {
-        self.accepted_inflight
+        self.shared.accepted_inflight.load(Ordering::Acquire)
     }
 
-    /// Requests waiting in tenant queues (accepted, not yet released).
+    /// Requests waiting in drained tenant lanes (accepted, absorbed by
+    /// the core, not yet released).
     pub fn queued_total(&self) -> usize {
         self.tenants.values().map(|t| t.q.len()).sum()
     }
 
-    /// Requests waiting in one tenant's queue.
+    /// Messages staged through [`Ingress`] handles the core has not
+    /// drained yet — admitted requests still in their tenants' ingest
+    /// rings plus rejection events awaiting their log merge.
+    pub fn ingest_backlog(&self) -> usize {
+        self.shared.staged.load(Ordering::Acquire)
+    }
+
+    /// Requests waiting in one tenant's drained lane.
     pub fn queued_for(&self, tenant: TenantId) -> usize {
         self.tenants.get(&tenant).map(|t| t.q.len()).unwrap_or(0)
     }
@@ -546,9 +1030,9 @@ impl Server {
         self.tenants.keys().copied().collect()
     }
 
-    /// Requests rejected by admission control.
+    /// Requests rejected by admission control (either path).
     pub fn rejected(&self) -> u64 {
-        self.rejected
+        self.shared.rejected.load(Ordering::Relaxed)
     }
 
     /// Released calls preempted into shards by the deadline.
@@ -561,25 +1045,27 @@ impl Server {
         self.dispatched
     }
 
-    /// Nothing queued and nothing in flight.
+    /// Nothing queued (lanes or ingest rings) and nothing in flight.
     pub fn is_idle(&self) -> bool {
-        self.queued_total() == 0 && self.vpe.in_flight() == 0
+        self.queued_total() == 0 && self.ingest_backlog() == 0 && self.vpe.in_flight() == 0
     }
 
     /// Advance the sim clock to `at_ns` (see [`Vpe::idle_until`]) —
     /// load generators idle between bursty arrivals with this.
     pub fn idle_until(&mut self, at_ns: u64) {
         self.vpe.idle_until(at_ns);
+        self.publish_clock();
     }
 
     /// Number of *core* queue invariants currently violated: the
     /// admitted population must respect `max_inflight_total`, and the
     /// dispatch books must balance (`submitted - retired == in_flight`).
     /// These hold on every path, including mid-fault salvage — load
-    /// drivers sweep this every pump batch and assert the sum stays 0.
+    /// drivers sweep this every pump batch and assert the sum stays 0,
+    /// and the pump thread sweeps it every iteration.
     pub fn core_invariant_violations(&self) -> usize {
         let mut violations = 0;
-        if self.accepted_inflight > self.vpe.config().max_inflight_total {
+        if self.accepted_inflight() > self.shared.max_inflight_total {
             violations += 1;
         }
         let outstanding =
@@ -590,12 +1076,13 @@ impl Server {
         violations
     }
 
-    /// [`Server::core_invariant_violations`] plus the per-target depth
-    /// bound: no accelerator queue deeper than `max_queue_per_target`.
-    /// Use this on fault-free paths only — mid-fault salvage restages a
-    /// dead unit's backlog onto survivors and may transiently overfill
-    /// a survivor's queue, which is deliberate (drain beats drop), so
-    /// fault-injected drivers sweep the core set instead.
+    /// [`SchedulerCore::core_invariant_violations`] plus the per-target
+    /// depth bound: no accelerator queue deeper than
+    /// `max_queue_per_target`.  Use this on fault-free paths only —
+    /// mid-fault salvage restages a dead unit's backlog onto survivors
+    /// and may transiently overfill a survivor's queue, which is
+    /// deliberate (drain beats drop), so fault-injected drivers sweep
+    /// the core set instead.
     pub fn invariant_violations(&self) -> usize {
         let bound = self.vpe.config().max_queue_per_target;
         let deep = self
@@ -605,6 +1092,54 @@ impl Server {
             .filter(|(id, _)| !id.is_host() && self.vpe.queue_depth_on(*id) > bound)
             .count();
         self.core_invariant_violations() + deep
+    }
+}
+
+/// Handle on a running pump thread (see [`SchedulerCore::spawn_pump`]).
+///
+/// The pump owns the [`SchedulerCore`] while it runs; this handle
+/// exposes the lock-free counters for monitoring and the shutdown/join
+/// protocol.  Join your ingest threads first, then call
+/// [`PumpThread::shutdown`]: the pump drains every accepted request to
+/// retirement (zero stranded [`Completion`]s) before handing the core
+/// back.
+#[derive(Debug)]
+pub struct PumpThread {
+    shared: Arc<ServingShared>,
+    violations: Arc<AtomicUsize>,
+    handle: JoinHandle<Result<SchedulerCore>>,
+}
+
+impl PumpThread {
+    /// Accepted-but-not-completed requests, live.
+    pub fn accepted_inflight(&self) -> usize {
+        self.shared.accepted_inflight.load(Ordering::Acquire)
+    }
+
+    /// Requests rejected by admission control so far, live.
+    pub fn rejected(&self) -> u64 {
+        self.shared.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Core-invariant violations the pump has observed across its
+    /// sweeps (0 on a healthy run).
+    pub fn invariant_violations(&self) -> usize {
+        self.violations.load(Ordering::Relaxed)
+    }
+
+    /// Ask the pump to drain and stop, then join it and return the
+    /// core.  Every request admitted before this call retires first —
+    /// the pump only exits with empty books — so no handle is left
+    /// unresolved.  Submits racing shutdown are still honoured: an
+    /// [`Ingress`] admission either lands before the final drain check
+    /// (and retires) or is rejected by its own bounds.
+    pub fn shutdown(self) -> Result<SchedulerCore> {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.wake_pump();
+        match self.handle.join() {
+            Ok(core) => core,
+            Err(_) => Err(Error::Coordinator("pump thread panicked".into())),
+        }
     }
 }
 
@@ -618,10 +1153,12 @@ mod tests {
     fn assert_sync<T: Sync>() {}
 
     #[test]
-    fn handles_and_server_cross_threads() {
+    fn handles_and_core_cross_threads() {
         assert_send::<Completion>();
         assert_sync::<Completion>();
-        assert_send::<Server>();
+        assert_send::<SchedulerCore>();
+        assert_send::<Ingress>();
+        assert_send::<PumpThread>();
     }
 
     fn serving_vpe(cfg: VpeConfig) -> (Vpe, FunctionId) {
@@ -650,24 +1187,24 @@ mod tests {
     #[test]
     fn admitted_requests_complete_and_resolve() {
         let (vpe, f) = serving_vpe(VpeConfig::sim_only());
-        let mut server = Server::new(vpe);
+        let mut core = SchedulerCore::new(vpe);
         let mut handles = Vec::new();
         for i in 0..10u32 {
-            match server.try_submit(TenantId(i % 2), f).unwrap() {
+            match core.try_submit(TenantId(i % 2), f).unwrap() {
                 AdmitOutcome::Admitted(done) => handles.push(done),
                 AdmitOutcome::Rejected { .. } => panic!("under every bound"),
             }
         }
-        assert_eq!(server.accepted_inflight(), 10);
-        let records = server.run_until_idle().unwrap();
+        assert_eq!(core.accepted_inflight(), 10);
+        let records = core.drive_inline().unwrap();
         assert_eq!(records.len(), 10);
-        assert!(server.is_idle());
-        assert_eq!(server.accepted_inflight(), 0);
+        assert!(core.is_idle());
+        assert_eq!(core.accepted_inflight(), 0);
         for done in &handles {
             assert!(done.is_done());
         }
         // Per-tenant stats flowed through to the coordinator.
-        let stats = server.vpe().serving_stats();
+        let stats = core.vpe().serving_stats();
         assert_eq!(stats.len(), 2);
         for s in stats {
             assert_eq!(s.submitted, 5);
@@ -681,25 +1218,22 @@ mod tests {
         let mut cfg = VpeConfig::sim_only();
         cfg.max_inflight_total = 4;
         let (vpe, f) = serving_vpe(cfg);
-        let mut server = Server::new(vpe);
+        let mut core = SchedulerCore::new(vpe);
         for _ in 0..4 {
-            assert!(matches!(
-                server.try_submit(TenantId(0), f).unwrap(),
-                AdmitOutcome::Admitted(_)
-            ));
+            assert!(matches!(core.try_submit(TenantId(0), f).unwrap(), AdmitOutcome::Admitted(_)));
         }
-        match server.try_submit(TenantId(1), f).unwrap() {
+        match core.try_submit(TenantId(1), f).unwrap() {
             AdmitOutcome::Rejected { reason, retry_after_ns } => {
                 assert_eq!(reason, RejectReason::ServerSaturated);
                 assert!(retry_after_ns >= MIN_RETRY_HINT_NS);
             }
             AdmitOutcome::Admitted(_) => panic!("server is saturated"),
         }
-        assert_eq!(server.rejected(), 1);
-        assert_eq!(server.vpe().events().rejections().len(), 1);
+        assert_eq!(core.rejected(), 1);
+        assert_eq!(core.vpe().events().rejections().len(), 1);
         // Completions free slots: after draining, admission reopens.
-        server.run_until_idle().unwrap();
-        assert!(matches!(server.try_submit(TenantId(1), f).unwrap(), AdmitOutcome::Admitted(_)));
+        core.drive_inline().unwrap();
+        assert!(matches!(core.try_submit(TenantId(1), f).unwrap(), AdmitOutcome::Admitted(_)));
     }
 
     #[test]
@@ -707,42 +1241,39 @@ mod tests {
         let mut cfg = VpeConfig::sim_only();
         cfg.tenant_quota = 2;
         let (vpe, f) = serving_vpe(cfg);
-        let mut server = Server::new(vpe);
+        let mut core = SchedulerCore::new(vpe);
         for _ in 0..2 {
-            assert!(matches!(
-                server.try_submit(TenantId(7), f).unwrap(),
-                AdmitOutcome::Admitted(_)
-            ));
+            assert!(matches!(core.try_submit(TenantId(7), f).unwrap(), AdmitOutcome::Admitted(_)));
         }
         assert!(matches!(
-            server.try_submit(TenantId(7), f).unwrap(),
+            core.try_submit(TenantId(7), f).unwrap(),
             AdmitOutcome::Rejected { reason: RejectReason::TenantQuota, .. }
         ));
         // Another tenant is unaffected by tenant 7's quota.
-        assert!(matches!(server.try_submit(TenantId(8), f).unwrap(), AdmitOutcome::Admitted(_)));
+        assert!(matches!(core.try_submit(TenantId(8), f).unwrap(), AdmitOutcome::Admitted(_)));
     }
 
     #[test]
     fn drr_interleaves_backlogged_tenants() {
         let (vpe, f) = serving_vpe(VpeConfig::sim_only());
-        let mut server = Server::new(vpe);
+        let mut core = SchedulerCore::new(vpe);
         // Tenant 0 floods first; tenant 1 arrives second.  Fair
         // scheduling must still interleave releases instead of serving
         // tenant 0's whole backlog first.
         for _ in 0..12 {
-            server.try_submit(TenantId(0), f).unwrap();
+            core.try_submit(TenantId(0), f).unwrap();
         }
         for _ in 0..12 {
-            server.try_submit(TenantId(1), f).unwrap();
+            core.try_submit(TenantId(1), f).unwrap();
         }
-        let records = server.run_until_idle().unwrap();
+        let records = core.drive_inline().unwrap();
         assert_eq!(records.len(), 24);
         let first_half: Vec<_> = records[..12].iter().filter_map(|r| r.tenant).collect();
         assert!(
             first_half.contains(&TenantId(0)) && first_half.contains(&TenantId(1)),
             "both tenants retire in the first half, got {first_half:?}"
         );
-        assert_eq!(server.served_ns(TenantId(0)), server.served_ns(TenantId(1)));
+        assert_eq!(core.served_ns(TenantId(0)), core.served_ns(TenantId(1)));
     }
 
     #[test]
@@ -750,17 +1281,17 @@ mod tests {
         let mut cfg = VpeConfig::sim_only();
         cfg.tenant_energy_budget_nj = Some(1); // any completed call spends it
         let (vpe, f) = serving_vpe(cfg);
-        let mut server = Server::new(vpe);
-        assert!(matches!(server.try_submit(TenantId(0), f).unwrap(), AdmitOutcome::Admitted(_)));
-        server.run_until_idle().unwrap();
-        assert!(server.vpe().tenant_energy_nj(TenantId(0)) >= 1);
+        let mut core = SchedulerCore::new(vpe);
+        assert!(matches!(core.try_submit(TenantId(0), f).unwrap(), AdmitOutcome::Admitted(_)));
+        core.drive_inline().unwrap();
+        assert!(core.vpe().tenant_energy_nj(TenantId(0)) >= 1);
         // The budget is spent energy, not population: draining does not
         // reopen admission for tenant 0, but tenant 1 is untouched.
         assert!(matches!(
-            server.try_submit(TenantId(0), f).unwrap(),
+            core.try_submit(TenantId(0), f).unwrap(),
             AdmitOutcome::Rejected { reason: RejectReason::TenantEnergyBudget, .. }
         ));
-        assert!(matches!(server.try_submit(TenantId(1), f).unwrap(), AdmitOutcome::Admitted(_)));
+        assert!(matches!(core.try_submit(TenantId(1), f).unwrap(), AdmitOutcome::Admitted(_)));
     }
 
     #[test]
@@ -768,21 +1299,21 @@ mod tests {
         let mut cfg = VpeConfig::sim_only();
         cfg.drr_quantum_nj = Some(500_000); // credit in nJ, not ns
         let (vpe, f) = serving_vpe(cfg);
-        let mut server = Server::new(vpe);
+        let mut core = SchedulerCore::new(vpe);
         for _ in 0..12 {
-            server.try_submit(TenantId(0), f).unwrap();
+            core.try_submit(TenantId(0), f).unwrap();
         }
         for _ in 0..12 {
-            server.try_submit(TenantId(1), f).unwrap();
+            core.try_submit(TenantId(1), f).unwrap();
         }
-        let records = server.run_until_idle().unwrap();
+        let records = core.drive_inline().unwrap();
         assert_eq!(records.len(), 24);
         let first_half: Vec<_> = records[..12].iter().filter_map(|r| r.tenant).collect();
         assert!(
             first_half.contains(&TenantId(0)) && first_half.contains(&TenantId(1)),
             "energy credit interleaves like time credit, got {first_half:?}"
         );
-        assert_eq!(server.served_ns(TenantId(0)), server.served_ns(TenantId(1)));
+        assert_eq!(core.served_ns(TenantId(0)), core.served_ns(TenantId(1)));
     }
 
     #[test]
@@ -798,16 +1329,16 @@ mod tests {
             payload_bytes: 1 << 20,
         })
         .unwrap();
-        let mut server = Server::new(vpe);
-        let done = match server.try_submit(TenantId(3), f).unwrap() {
+        let mut core = SchedulerCore::new(vpe);
+        let done = match core.try_submit(TenantId(3), f).unwrap() {
             AdmitOutcome::Admitted(done) => done,
-            AdmitOutcome::Rejected { .. } => panic!("fresh server admits"),
+            AdmitOutcome::Rejected { .. } => panic!("fresh core admits"),
         };
-        let records = server.run_until_idle().unwrap();
+        let records = core.drive_inline().unwrap();
         assert_eq!(records.len(), 1, "the group retires as one aggregate record");
         assert!(done.is_done());
-        assert_eq!(server.preempted(), 1);
-        let preemptions = server.vpe().events().preemptions();
+        assert_eq!(core.preempted(), 1);
+        let preemptions = core.vpe().events().preemptions();
         assert_eq!(preemptions.len(), 1);
         let (_, tenant, function, shards) = preemptions[0];
         assert_eq!(tenant, TenantId(3));
@@ -816,17 +1347,189 @@ mod tests {
     }
 
     #[test]
-    fn threaded_ingest_through_a_shared_server() {
+    fn ingress_submits_flow_through_the_inline_drain() {
         let (vpe, f) = serving_vpe(VpeConfig::sim_only());
-        let server = Arc::new(Mutex::new(Server::new(vpe)));
+        let mut core = SchedulerCore::new(vpe);
+        let a = core.ingress(TenantId(0));
+        let b = core.ingress(TenantId(1));
+        let mut handles = Vec::new();
+        for _ in 0..5 {
+            for ing in [&a, &b] {
+                match ing.try_submit(f).unwrap() {
+                    AdmitOutcome::Admitted(done) => handles.push(done),
+                    AdmitOutcome::Rejected { .. } => panic!("under every bound"),
+                }
+            }
+        }
+        assert_eq!(core.accepted_inflight(), 10);
+        assert_eq!(core.ingest_backlog(), 10);
+        assert!(!core.is_idle(), "undrained ingest is not idle");
+        let records = core.drive_inline().unwrap();
+        assert_eq!(records.len(), 10);
+        assert!(core.is_idle());
+        assert_eq!(core.ingest_backlog(), 0);
+        for done in &handles {
+            assert!(done.is_done());
+        }
+        // Staged admission events merged into the log in ingest order.
+        let stats = core.vpe().serving_stats();
+        assert_eq!(stats.len(), 2);
+        for s in stats {
+            assert_eq!(s.submitted, 5);
+            assert_eq!(s.completed, 5);
+        }
+    }
+
+    #[test]
+    fn ingress_rejects_unknown_functions() {
+        let (vpe, f) = serving_vpe(VpeConfig::sim_only());
+        let mut core = SchedulerCore::new(vpe);
+        let ing = core.ingress(TenantId(0));
+        assert!(ing.try_submit(FunctionId(f.0 + 100)).is_err());
+        assert_eq!(core.accepted_inflight(), 0, "failed submit reserves nothing");
+    }
+
+    #[test]
+    fn full_ingest_ring_rejects_with_backlog_reason() {
+        let mut cfg = VpeConfig::sim_only();
+        cfg.ingest_queue_depth = 2;
+        let (vpe, f) = serving_vpe(cfg);
+        let mut core = SchedulerCore::new(vpe);
+        let ing = core.ingress(TenantId(0));
+        for _ in 0..2 {
+            assert!(matches!(ing.try_submit(f).unwrap(), AdmitOutcome::Admitted(_)));
+        }
+        match ing.try_submit(f).unwrap() {
+            AdmitOutcome::Rejected { reason, .. } => {
+                assert_eq!(reason, RejectReason::IngressBacklog);
+            }
+            AdmitOutcome::Admitted(_) => panic!("ring is full"),
+        }
+        // The failed reservation rolled back: draining the ring reopens
+        // the slot and balances the books.
+        assert_eq!(core.accepted_inflight(), 2);
+        core.drive_inline().unwrap();
+        assert_eq!(core.accepted_inflight(), 0);
+        assert!(matches!(ing.try_submit(f).unwrap(), AdmitOutcome::Admitted(_)));
+        core.drive_inline().unwrap();
+        // The staged rejection reached the event log with its reason.
+        let rejections = core.vpe().events().rejections();
+        assert_eq!(rejections.len(), 1);
+        assert_eq!(rejections[0].2, RejectReason::IngressBacklog);
+    }
+
+    /// Satellite regression: two threads race the last admission slot
+    /// through lock-free ingress handles — the CAS reservation must let
+    /// exactly one win, for both the server-wide bound and the
+    /// per-tenant quota.
+    #[test]
+    fn racing_threads_cannot_both_take_the_last_slot() {
+        // Server-wide bound: capacity 1, two tenants, one slot.
+        let mut cfg = VpeConfig::sim_only();
+        cfg.max_inflight_total = 1;
+        let (vpe, f) = serving_vpe(cfg);
+        let mut core = SchedulerCore::new(vpe);
+        let a = core.ingress(TenantId(0));
+        let b = core.ingress(TenantId(1));
+        let gate = Arc::new(std::sync::Barrier::new(2));
+        let race = |ing: Ingress, gate: Arc<std::sync::Barrier>| {
+            std::thread::spawn(move || {
+                gate.wait();
+                ing.try_submit(f).unwrap()
+            })
+        };
+        let outcomes =
+            [race(a, Arc::clone(&gate)), race(b, gate)].map(|t| t.join().unwrap());
+        let admitted =
+            outcomes.iter().filter(|o| matches!(o, AdmitOutcome::Admitted(_))).count();
+        assert_eq!(admitted, 1, "exactly one racer wins the last slot");
+        for o in &outcomes {
+            if let AdmitOutcome::Rejected { reason, .. } = o {
+                assert_eq!(*reason, RejectReason::ServerSaturated);
+            }
+        }
+        assert_eq!(core.accepted_inflight(), 1, "loser's reservation rolled back");
+        core.drive_inline().unwrap();
+        assert_eq!(core.accepted_inflight(), 0);
+
+        // Per-tenant quota: two handles for the same tenant, quota 1.
+        let mut cfg = VpeConfig::sim_only();
+        cfg.tenant_quota = 1;
+        let (vpe, f) = serving_vpe(cfg);
+        let mut core = SchedulerCore::new(vpe);
+        let ing = core.ingress(TenantId(9));
+        let gate = Arc::new(std::sync::Barrier::new(2));
+        let race2 = |ing: Ingress, gate: Arc<std::sync::Barrier>| {
+            std::thread::spawn(move || {
+                gate.wait();
+                ing.try_submit(f).unwrap()
+            })
+        };
+        let outcomes =
+            [race2(ing.clone(), Arc::clone(&gate)), race2(ing, gate)].map(|t| t.join().unwrap());
+        let admitted =
+            outcomes.iter().filter(|o| matches!(o, AdmitOutcome::Admitted(_))).count();
+        assert_eq!(admitted, 1, "exactly one racer wins the quota slot");
+        for o in &outcomes {
+            if let AdmitOutcome::Rejected { reason, .. } = o {
+                assert_eq!(*reason, RejectReason::TenantQuota);
+            }
+        }
+        assert_eq!(core.accepted_inflight(), 1);
+        core.drive_inline().unwrap();
+    }
+
+    #[test]
+    fn pump_thread_drains_threaded_ingest_to_empty_books() {
+        let (vpe, f) = serving_vpe(VpeConfig::sim_only());
+        let mut core = SchedulerCore::new(vpe);
+        let mut workers = Vec::new();
+        let ingresses: Vec<Ingress> = (0..4u32).map(|t| core.ingress(TenantId(t))).collect();
+        let pump = core.spawn_pump();
+        for ing in ingresses {
+            workers.push(std::thread::spawn(move || {
+                let mut handles = Vec::new();
+                for _ in 0..8 {
+                    match ing.try_submit(f).unwrap() {
+                        AdmitOutcome::Admitted(done) => handles.push(done),
+                        AdmitOutcome::Rejected { .. } => panic!("under every bound"),
+                    }
+                }
+                handles
+            }));
+        }
+        let handles: Vec<Completion> =
+            workers.into_iter().flat_map(|w| w.join().unwrap()).collect();
+        assert_eq!(handles.len(), 32);
+        let core = pump.shutdown().unwrap();
+        assert!(core.is_idle(), "shutdown drains to idle");
+        assert_eq!(core.accepted_inflight(), 0);
+        assert_eq!(core.core_invariant_violations(), 0);
+        for done in &handles {
+            assert_eq!(done.poll().expect("no stranded handles").function, f);
+        }
+        let stats = core.vpe().serving_stats();
+        assert_eq!(stats.len(), 4);
+        for s in stats {
+            assert_eq!(s.submitted, 8);
+            assert_eq!(s.completed, 8);
+        }
+    }
+
+    #[test]
+    fn threaded_ingest_through_a_shared_core_still_works() {
+        // The pre-split usage pattern — Arc<Mutex<SchedulerCore>> with
+        // locked submits — must keep working (it is also the
+        // lock-contention baseline in examples/serving_load.rs).
+        let (vpe, f) = serving_vpe(VpeConfig::sim_only());
+        let core = Arc::new(Mutex::new(SchedulerCore::new(vpe)));
         let mut workers = Vec::new();
         for t in 0..4u32 {
-            let server = Arc::clone(&server);
+            let core = Arc::clone(&core);
             workers.push(std::thread::spawn(move || {
                 let mut handles = Vec::new();
                 for _ in 0..5 {
-                    let outcome =
-                        server.lock().unwrap().try_submit(TenantId(t), f).unwrap();
+                    let outcome = core.lock().unwrap().try_submit(TenantId(t), f).unwrap();
                     match outcome {
                         AdmitOutcome::Admitted(done) => handles.push(done),
                         AdmitOutcome::Rejected { .. } => panic!("under every bound"),
@@ -838,7 +1541,7 @@ mod tests {
         let handles: Vec<Completion> =
             workers.into_iter().flat_map(|w| w.join().unwrap()).collect();
         assert_eq!(handles.len(), 20);
-        let records = server.lock().unwrap().run_until_idle().unwrap();
+        let records = core.lock().unwrap().drive_inline().unwrap();
         assert_eq!(records.len(), 20);
         for done in &handles {
             assert_eq!(done.poll().unwrap().function, f);

@@ -121,9 +121,10 @@ pub struct VpeConfig {
     /// dispatch.  Default: `0` (auto).
     pub rayon_threads: usize,
     /// Serving admission bound: maximum requests accepted but not yet
-    /// completed across all tenants before
-    /// [`super::serving::Server::try_submit`] rejects with a retry
-    /// hint.  Default: `512` requests.
+    /// completed across all tenants before the serving front-end
+    /// ([`super::serving::Ingress::try_submit`] /
+    /// [`super::serving::SchedulerCore::try_submit`]) rejects with a
+    /// retry hint.  Default: `512` requests.
     pub max_inflight_total: usize,
     /// Serving per-tenant bound: maximum accepted-but-not-completed
     /// requests one tenant may hold before its further submits are
@@ -164,6 +165,22 @@ pub struct VpeConfig {
     /// [`RejectReason::TenantEnergyBudget`].  Default: `None`
     /// (unmetered).
     pub tenant_energy_budget_nj: Option<u64>,
+    /// Lock-free serving ingest: how many submissions one tenant's MPSC
+    /// ring may hold undrained before [`super::serving::Ingress`]
+    /// rejects with [`RejectReason::IngressBacklog`] — bounds how far
+    /// submit threads can run ahead of a slow pump.  Default: `1024`
+    /// requests.
+    pub ingest_queue_depth: usize,
+    /// Lock-free serving ingest: maximum newly-arrived submissions the
+    /// scheduler pump absorbs *per tenant* per
+    /// [`super::serving::SchedulerCore::pump`], so one tenant's burst
+    /// cannot monopolize a drain.  Default: `64` requests.
+    pub pump_batch: usize,
+    /// Lock-free serving ingest: how long the dedicated pump thread
+    /// ([`super::serving::SchedulerCore::spawn_pump`]) parks when idle
+    /// before re-polling, wall-clock ns (submits wake it early).
+    /// Default: `100_000` (100 µs).
+    pub pump_park_ns: u64,
     /// Failure recovery: how many times one dispatch may be re-issued
     /// after losing its target (hard failure mid-flight) or failing
     /// transiently (flaky injection) before it resolves with
@@ -208,6 +225,9 @@ impl Default for VpeConfig {
             power: None,
             drr_quantum_nj: None,
             tenant_energy_budget_nj: None,
+            ingest_queue_depth: 1024,
+            pump_batch: 64,
+            pump_park_ns: 100_000,
             max_retries: 3,
             retry_backoff_ns: 500_000,
             quarantine_threshold: 3,
@@ -1264,10 +1284,19 @@ impl Vpe {
     }
 
     /// Count one admission for `tenant` and log the event (called by
-    /// the serving front-end when `try_submit` accepts).
+    /// the serving front-end when an inline `try_submit` accepts).
     pub(crate) fn note_admitted(&mut self, tenant: TenantId, f: FunctionId) {
+        let at_ns = self.clock.now_ns();
+        self.note_admitted_at(at_ns, tenant, f);
+    }
+
+    /// [`Vpe::note_admitted`] with an explicit timestamp — the serving
+    /// core merges lock-free ingest-side events (staged on the tenants'
+    /// submission queues, stamped with the published clock mirror) at
+    /// drain time with their original ingest times.
+    pub(crate) fn note_admitted_at(&mut self, at_ns: u64, tenant: TenantId, f: FunctionId) {
         self.tenant_stats.entry(tenant).or_default().submitted += 1;
-        self.events.push(self.clock.now_ns(), VpeEvent::Admitted { tenant, function: f });
+        self.events.push(at_ns, VpeEvent::Admitted { tenant, function: f });
     }
 
     /// Count one rejection for `tenant` and log the event with its
@@ -1279,8 +1308,22 @@ impl Vpe {
         reason: RejectReason,
         retry_after_ns: u64,
     ) {
+        let at_ns = self.clock.now_ns();
+        self.note_rejected_at(at_ns, tenant, f, reason, retry_after_ns);
+    }
+
+    /// [`Vpe::note_rejected`] with an explicit timestamp (see
+    /// [`Vpe::note_admitted_at`]).
+    pub(crate) fn note_rejected_at(
+        &mut self,
+        at_ns: u64,
+        tenant: TenantId,
+        f: FunctionId,
+        reason: RejectReason,
+        retry_after_ns: u64,
+    ) {
         self.tenant_stats.entry(tenant).or_default().rejected += 1;
-        self.events.push(self.clock.now_ns(), VpeEvent::Rejected {
+        self.events.push(at_ns, VpeEvent::Rejected {
             tenant,
             function: f,
             reason,
@@ -3146,6 +3189,13 @@ impl Vpe {
     /// The workload kind bound to `f`, if `f` is a registered workload.
     pub fn kind_of(&self, f: FunctionId) -> Option<WorkloadKind> {
         self.bindings.get(&f).map(|b| b.instance.kind)
+    }
+
+    /// Registered functions in the module — [`FunctionId`]s are dense,
+    /// so any `FunctionId(i)` with `i < function_count()` is valid (the
+    /// serving ingress validates lock-free against a snapshot of this).
+    pub fn function_count(&self) -> usize {
+        self.module.len()
     }
 
     /// How many of `f`'s verified executions mismatched the reference.

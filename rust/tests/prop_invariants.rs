@@ -990,16 +990,16 @@ fn prop_same_policy_replay_reproduces_recorded_joules_exactly() {
 // Serving front-end (admission, completion handles, DRR fairness)
 // ---------------------------------------------------------------------------
 
-/// A server over one strictly-fastest unit: every function pins to it,
-/// so all tenants contend for the same bottleneck and the fairness
-/// property is about the scheduler, not about load placement.
+/// A serving core over one strictly-fastest unit: every function pins
+/// to it, so all tenants contend for the same bottleneck and the
+/// fairness property is about the scheduler, not about load placement.
 fn serving_server(
     seed: u64,
     max_inflight_total: usize,
     tenant_quota: usize,
-) -> (vpe::coordinator::Server, Vec<FunctionId>) {
+) -> (vpe::coordinator::SchedulerCore, Vec<FunctionId>) {
     use vpe::coordinator::policy::AlwaysOffloadPolicy;
-    use vpe::coordinator::{Server, VpeConfig};
+    use vpe::coordinator::{SchedulerCore, VpeConfig};
     use vpe::platform::{TargetSpec, TransferModel, Transport};
     use vpe::workloads::PaperScale;
 
@@ -1033,7 +1033,7 @@ fn serving_server(
         assert_eq!(v.current_target(f).expect("target"), fast, "must pin to the fast unit");
         fns.push(f);
     }
-    (Server::new(v), fns)
+    (SchedulerCore::new(v), fns)
 }
 
 #[test]
@@ -1329,6 +1329,118 @@ fn prop_multi_tenant_fault_storms_resolve_every_admitted_call() {
                 v.charged_energy_nj(t) == busy * watts,
                 format!("{t}: charged {} nJ != {watts} W x {busy} ns",
                     v.charged_energy_nj(t)),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_threaded_ingest_storm_preserves_every_serving_invariant() {
+    use vpe::coordinator::serving::{AdmitOutcome, Completion, Ingress, TenantId};
+    use vpe::sim::FaultInjector;
+
+    // Eight real OS threads submit through lock-free `Ingress` clones
+    // while a dedicated pump thread drains, under a flaky-dispatch
+    // fault storm.  The threaded path promises no fixed interleaving —
+    // only exactly-once resolution, a never-exceeded admission bound,
+    // balanced books, and joule conservation.  That is what's checked.
+    prop::check("threaded ingest under fault storm", 8, |g| {
+        const THREADS: usize = 8;
+        let per_thread = g.usize_in(24, 64);
+        let quota = g.usize_in(4, 12);
+        let max_total = quota * THREADS;
+        let (mut server, fns) = serving_server(g.u64_in(0, u64::MAX - 1), max_total, quota);
+        server.vpe_mut().set_fault_injector(
+            FaultInjector::new(g.u64_in(0, u64::MAX - 1)).with_flaky(0.05),
+        );
+        let seeds: Vec<u64> = (0..THREADS).map(|_| g.u64_in(0, u64::MAX - 1)).collect();
+        let ingresses: Vec<Ingress> =
+            (0..THREADS).map(|t| server.ingress(TenantId(t as u32))).collect();
+        let pump = server.spawn_pump();
+
+        let workers: Vec<_> = ingresses
+            .into_iter()
+            .zip(seeds)
+            .map(|(ing, seed)| {
+                let fns = fns.clone();
+                std::thread::spawn(move || {
+                    let mut rng = seed;
+                    let mut handles = Vec::with_capacity(per_thread);
+                    let mut spins = 0u64;
+                    while handles.len() < per_thread {
+                        rng = rng
+                            .wrapping_mul(6364136223846793005)
+                            .wrapping_add(1442695040888963407);
+                        let f = fns[((rng >> 33) as usize) % fns.len()];
+                        match ing.try_submit(f).expect("bound function never errors") {
+                            AdmitOutcome::Admitted(c) => handles.push(c),
+                            AdmitOutcome::Rejected { retry_after_ns, .. } => {
+                                assert!(retry_after_ns > 0, "retry hint must be positive");
+                                spins += 1;
+                                assert!(spins < 50_000_000, "ingest thread starved");
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                    handles
+                })
+            })
+            .collect();
+
+        // Sample the admission bound from outside while the storm runs:
+        // CAS reservations must make over-admission impossible at every
+        // instant, not just at the end.
+        let mut handles: Vec<Completion> = Vec::new();
+        let mut bound_breaches = 0usize;
+        let mut live = workers;
+        while !live.is_empty() {
+            if pump.accepted_inflight() > max_total {
+                bound_breaches += 1;
+            }
+            let (done, rest): (Vec<_>, Vec<_>) =
+                live.into_iter().partition(|w| w.is_finished());
+            for w in done {
+                handles.extend(w.join().expect("ingest worker panicked"));
+            }
+            live = rest;
+            std::thread::yield_now();
+        }
+        let swept = pump.invariant_violations();
+        let server = pump.shutdown().map_err(|e| e.to_string())?;
+
+        assert_prop(bound_breaches == 0, "accepted population exceeded max_inflight_total")?;
+        assert_prop(swept == 0, "pump sweeps saw a core-invariant violation")?;
+        assert_prop(
+            handles.len() == THREADS * per_thread,
+            format!("admitted {} != {}", handles.len(), THREADS * per_thread),
+        )?;
+        for c in &handles {
+            assert_prop(c.is_done(), "handle left unresolved after shutdown")?;
+        }
+        assert_prop(server.is_idle(), "shutdown left the books non-empty")?;
+        assert_prop(server.accepted_inflight() == 0, "accepted population must drain to 0")?;
+        assert_prop(server.vpe().in_flight() == 0, "dispatch queue must drain")?;
+        assert_prop(server.vpe().soc().shared.used_bytes() == 0, "staged params leaked")?;
+        for s in server.vpe().serving_stats() {
+            assert_prop(
+                s.submitted == per_thread as u64,
+                format!("tenant {} submitted {} != {per_thread}", s.tenant.0, s.submitted),
+            )?;
+            assert_prop(
+                s.submitted == s.completed + s.failed,
+                format!("books unbalanced for tenant {}: {s:?}", s.tenant.0),
+            )?;
+        }
+        // Joule conservation on every unit, through the whole storm.
+        let v = server.vpe();
+        let fast = v.current_target(fns[0]).expect("pinned");
+        for t in [dm3730::ARM, dm3730::DSP, fast] {
+            let busy = v.scheduler().occupied_ns(t);
+            let watts = v.soc().active_watts(t);
+            assert_prop(
+                v.charged_energy_nj(t) == busy * watts,
+                format!("{t}: charged {} nJ != {watts} W x {busy} ns", v.charged_energy_nj(t)),
             )?;
         }
         Ok(())
